@@ -1,0 +1,95 @@
+//! Power-intermittency study (paper §II-B.3 / Fig. 7b): run a frame
+//! workload under harvested-power traces and compare forward progress
+//! of the paper's NV-FA datapath against a CMOS-only (volatile)
+//! implementation, across checkpoint periods and failure rates.
+//!
+//! ```bash
+//! cargo run --release --example intermittent_inference
+//! ```
+
+use pims::intermittency::{
+    forward_progress, run_intermittent, FrameWorkload, PowerTrace,
+};
+use pims::nvfa::NvPolicy;
+
+fn main() {
+    let workload = FrameWorkload {
+        frames: 500,
+        cycles_per_frame: 10,
+        value_per_frame: 1,
+    };
+
+    println!("workload: {} frames x {} cycles", workload.frames, workload.cycles_per_frame);
+    println!("\n== sweep: mean on-time (Poisson failures, 50-cycle outages) ==");
+    println!("| mean-on | failures | NV-FA progress | volatile progress | NV finished | vol finished |");
+    println!("|---|---|---|---|---|---|");
+    for mean_on in [100.0, 200.0, 400.0, 800.0, 3200.0] {
+        let trace = PowerTrace::poisson(
+            mean_on,
+            50,
+            workload.frames * workload.cycles_per_frame * 30,
+            42,
+        );
+        let nv = run_intermittent(
+            workload, &trace, NvPolicy::DualFf, 20, false,
+        );
+        let vol = run_intermittent(
+            workload, &trace, NvPolicy::DualFf, 20, true,
+        );
+        println!(
+            "| {mean_on:.0} | {} | {:.3} | {:.3} | {} | {} |",
+            nv.failures,
+            forward_progress(&nv, &workload),
+            forward_progress(&vol, &workload),
+            nv.finished,
+            vol.finished,
+        );
+    }
+
+    println!("\n== sweep: checkpoint period (mean-on 300) ==");
+    println!("| ckpt period | re-executed frames | NV writes | progress |");
+    println!("|---|---|---|---|");
+    for period in [1u64, 5, 10, 20, 50, 100] {
+        let trace = PowerTrace::poisson(
+            300.0,
+            50,
+            workload.frames * workload.cycles_per_frame * 30,
+            42,
+        );
+        let r = run_intermittent(
+            workload, &trace, NvPolicy::DualFf, period, false,
+        );
+        println!(
+            "| {period} | {} | {} | {:.3} |",
+            r.frames_reexecuted,
+            r.checkpoints * 64, // 2 NV-FF x 32-bit accumulator
+            forward_progress(&r, &workload),
+        );
+    }
+
+    println!("\n== Fig. 7b-style event trace (periodic failures) ==");
+    let trace = PowerTrace::periodic(260, 40, 30);
+    let r = run_intermittent(workload, &trace, NvPolicy::DualFf, 20, false);
+    for e in r.events.iter().take(16) {
+        println!("  {e:?}");
+    }
+    println!(
+        "  => finished={} value={} failures={} reexecuted={}",
+        r.finished, r.final_value, r.failures, r.frames_reexecuted
+    );
+
+    println!("\n== single- vs dual-NV-FF (§IV PDP trade) ==");
+    let trace = PowerTrace::periodic(260, 40, 60);
+    for (name, policy) in
+        [("dual", NvPolicy::DualFf), ("single", NvPolicy::SingleFf)]
+    {
+        let r = run_intermittent(workload, &trace, policy, 20, false);
+        println!(
+            "  {name}-FF: final value {} (exact {}), ckpt writes {}",
+            r.final_value,
+            workload.frames * workload.value_per_frame,
+            r.checkpoints
+                * if policy == NvPolicy::DualFf { 64 } else { 32 },
+        );
+    }
+}

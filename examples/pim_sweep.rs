@@ -1,0 +1,62 @@
+//! PIM design-space sweep: all four accelerator models x the paper's
+//! W:I configurations x batch sizes, over the three evaluation models
+//! — the data behind Figs. 9/10 and Table II in one run.
+//!
+//! ```bash
+//! cargo run --release --example pim_sweep
+//! ```
+
+use pims::accel::{Accelerator, Proposed};
+use pims::baselines::{Asic, Imce, Reram};
+use pims::cnn;
+
+fn main() {
+    let designs: Vec<Box<dyn Accelerator>> = vec![
+        Box::new(Proposed::default()),
+        Box::new(Imce::default()),
+        Box::new(Reram::default()),
+        Box::new(Asic::default()),
+    ];
+
+    for model in [cnn::svhn_net(), cnn::lenet(), cnn::alexnet()] {
+        println!(
+            "\n### model {} ({:.1} MMACs/img)",
+            model.name,
+            model.total_macs() as f64 / 1e6
+        );
+        for batch in [1usize, 8] {
+            println!("\nbatch {batch}:");
+            println!(
+                "| design | W:I | µJ/frame | fps | mm² | fps/mm² | frames/µJ/mm² |"
+            );
+            println!("|---|---|---|---|---|---|---|");
+            for d in &designs {
+                for (w, a) in cnn::SWEEP_CONFIGS {
+                    let e = d.estimate(&model, w, a, batch);
+                    println!(
+                        "| {} | {w}:{a} | {:.2} | {:.0} | {:.3} | {:.0} | {:.2} |",
+                        e.design,
+                        e.uj_per_frame(),
+                        e.fps(),
+                        e.area.total_mm2,
+                        e.fps_per_mm2(),
+                        e.eff_per_mm2(),
+                    );
+                }
+            }
+        }
+        // Ratio summary vs the proposed design at W1:I4, batch 8
+        // (the abstract's headline factors).
+        let p = designs[0].estimate(&model, 1, 4, 8);
+        println!("\nheadline ratios at W1:I4 batch 8 (proposed = 1.0):");
+        for d in &designs[1..] {
+            let e = d.estimate(&model, 1, 4, 8);
+            println!(
+                "  vs {:<8}: {:.1}x energy-eff/mm², {:.1}x fps/mm²",
+                e.design,
+                p.eff_per_mm2() / e.eff_per_mm2(),
+                p.fps_per_mm2() / e.fps_per_mm2(),
+            );
+        }
+    }
+}

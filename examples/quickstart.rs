@@ -1,0 +1,54 @@
+//! Quickstart: load the AOT artifact, classify one synthetic digit,
+//! and show the PIM simulator's per-image cost estimate.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use pims::accel::{Accelerator, Proposed};
+use pims::cnn;
+use pims::dataset::Dataset;
+use pims::runtime::{artifacts_dir, Engine, Manifest};
+
+fn main() -> Result<()> {
+    // --- 1. Load the artifacts produced by `make artifacts`.
+    let dir = artifacts_dir();
+    let manifest = Manifest::load(&dir)?;
+    println!(
+        "model: W{}:I{} bitwise CNN, input {:?}",
+        manifest.w_bits, manifest.a_bits, manifest.input_shape
+    );
+
+    // --- 2. Compile the batch-1 HLO on the PJRT CPU client.
+    let engine = Engine::cpu()?;
+    println!("PJRT platform: {}", engine.platform());
+    let exe = engine.load_hlo(
+        &manifest.model_path(&dir, 1),
+        1,
+        manifest.input_elems(),
+        manifest.num_classes,
+    )?;
+
+    // --- 3. Classify the first test image.
+    let ds = Dataset::load_bin(dir.join("svhn_test.bin").to_str().unwrap())?;
+    let (h, w, c) = manifest.input_shape;
+    let logits = exe.infer(ds.image(0), &[1, h, w, c])?;
+    let pred = exe.predictions(&logits)[0];
+    println!(
+        "image 0: predicted {pred}, label {} — logits {:?}",
+        ds.labels[0],
+        logits.iter().map(|x| (x * 100.0).round() / 100.0).collect::<Vec<_>>()
+    );
+
+    // --- 4. What would this inference cost on the SOT-MRAM chip?
+    let est = Proposed::default().estimate(&cnn::svhn_net(), 1, 4, 1);
+    println!(
+        "\nPIM estimate (proposed accelerator, W1:I4, batch 1):\n\
+         {:.2} µJ/frame, {:.0} frames/s, {:.4} mm²",
+        est.uj_per_frame(),
+        est.fps(),
+        est.area.total_mm2
+    );
+    Ok(())
+}

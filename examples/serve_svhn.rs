@@ -1,0 +1,107 @@
+//! End-to-end serving driver (the EXPERIMENTS.md E2E validation run):
+//! load the AOT-compiled bitwise CNN, start the coordinator, serve
+//! batched classification requests over the artifact test split, and
+//! report accuracy / latency percentiles / throughput.
+//!
+//! All three layers compose here: L1 (Pallas Eq.-1 kernel, inside the
+//! HLO), L2 (jax bitwise CNN, baked into the artifact), L3 (this rust
+//! coordinator + PJRT runtime). Python is not involved at runtime.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_svhn -- [requests] [batch]
+//! ```
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use pims::coordinator::{BatchPolicy, Coordinator, PjrtBackend};
+use pims::dataset::Dataset;
+use pims::runtime::{artifacts_dir, Engine, Manifest};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let requests: usize =
+        args.first().map(|s| s.parse()).transpose()?.unwrap_or(512);
+    let batch: usize =
+        args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(8);
+
+    let dir = artifacts_dir();
+    let manifest = Manifest::load(&dir)?;
+    let ds =
+        Dataset::load_bin(dir.join("svhn_test.bin").to_str().unwrap())?;
+    println!(
+        "serve_svhn: {} requests, batch {batch}, W{}:I{} model, {} test images",
+        requests, manifest.w_bits, manifest.a_bits, ds.n
+    );
+
+    let model_path = manifest.model_path(&dir, batch);
+    let (h, w, c) = manifest.input_shape;
+    let (elems, classes) = (manifest.input_elems(), manifest.num_classes);
+    let coordinator = Coordinator::start(
+        move || {
+            let engine = Engine::cpu()?;
+            let exe = engine.load_hlo(&model_path, batch, elems, classes)?;
+            Ok(PjrtBackend { exe, shape: [batch, h, w, c] })
+        },
+        BatchPolicy { max_wait: Duration::from_millis(2) },
+        256,
+    )?;
+
+    // Closed-loop load generator with a modest in-flight window so the
+    // batcher sees real concurrency.
+    let t0 = Instant::now();
+    let mut correct = 0usize;
+    let mut confusion = [[0u32; 10]; 10];
+    let mut inflight = Vec::new();
+    for i in 0..requests {
+        let idx = i % ds.n;
+        inflight.push((idx, coordinator.submit_blocking(ds.image(idx).to_vec())?));
+        if inflight.len() >= 2 * batch {
+            let (idx, p) = inflight.remove(0);
+            let r = p.wait()?;
+            confusion[ds.labels[idx] as usize][r.prediction] += 1;
+            if r.prediction == ds.labels[idx] as usize {
+                correct += 1;
+            }
+        }
+    }
+    for (idx, p) in inflight {
+        let r = p.wait()?;
+        confusion[ds.labels[idx] as usize][r.prediction] += 1;
+        if r.prediction == ds.labels[idx] as usize {
+            correct += 1;
+        }
+    }
+    let wall = t0.elapsed();
+    let m = coordinator.shutdown();
+
+    println!("\n== E2E results ==");
+    println!("served          : {} requests", m.counters.served);
+    println!(
+        "accuracy        : {:.2}% ({correct}/{requests})",
+        100.0 * correct as f64 / requests as f64
+    );
+    println!(
+        "throughput      : {:.1} img/s over {:.2?}",
+        requests as f64 / wall.as_secs_f64(),
+        wall
+    );
+    println!("request latency : {}", m.latency.summary());
+    println!("batch exec      : {}", m.exec_latency.summary());
+    println!(
+        "batches         : {} (mean fill {:.0}%)",
+        m.counters.batches,
+        100.0 * m.counters.mean_batch_fill(batch)
+    );
+    println!("\nper-class accuracy:");
+    for d in 0..10 {
+        let total: u32 = confusion[d].iter().sum();
+        if total > 0 {
+            println!(
+                "  digit {d}: {:>5.1}%  (n={total})",
+                100.0 * confusion[d][d] as f64 / total as f64
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,177 @@
+"""AOT export: lower the deployment model to HLO text for the rust runtime.
+
+Python runs ONCE here (``make artifacts``) and never on the request path.
+
+Interchange format is HLO **text**, not ``lowered.compile()`` /
+``.serialize()``: jax >= 0.5 emits HloModuleProto with 64-bit instruction
+ids which the xla crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (artifacts/):
+    model_w1a4_b1.hlo.txt    deployment CNN, batch 1 (weights baked)
+    model_w1a4_b8.hlo.txt    deployment CNN, batch 8
+    bitconv_unit.hlo.txt     small standalone Eq.-1 kernel (runtime tests)
+    svhn_test.bin            synthetic test split (shared with rust)
+    golden_infer.json        logits for the first test images (rust checks)
+    quant_golden.json        quantizer vectors (rust/src/quant tests)
+    ckpt_w1a4.pkl            trained params (cache; python-only)
+    manifest.json            what was built, with what settings
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import dataset as ds
+from . import model as M
+from . import train as T
+from .kernels import bitwise_conv as bc
+from . import quantize as q
+
+DEPLOY_W, DEPLOY_A = 1, 4  # the paper's best accuracy/efficiency point
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True).
+
+    `print_large_constants=True` is ESSENTIAL: the default printer
+    elides big literals as `constant({...})`, which the runtime's text
+    parser silently zero-fills — baked weights would vanish.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def export_model(params, bn_state, batch, path):
+    """Bake params into forward_bitwise and lower for a fixed batch."""
+
+    def infer(x):
+        # fused=True: plane-fused Pallas kernel (§Perf: 3.6x over the
+        # per-plane-pair grid at identical numerics).
+        return (
+            M.forward_bitwise(
+                params, bn_state, x, DEPLOY_W, DEPLOY_A, fused=True
+            ),
+        )
+
+    spec = jax.ShapeDtypeStruct((batch, 40, 40, 3), jnp.float32)
+    t0 = time.time()
+    lowered = jax.jit(infer).lower(spec)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text)/1e6:.1f} MB, {time.time()-t0:.1f}s)")
+
+
+def export_bitconv_unit(path):
+    """Standalone Eq.-1 kernel: ip [4,128,64] x wp [1,64,128] -> [128,128].
+
+    Used by rust/src/runtime tests to validate load+execute without the
+    full model, and by the runtime microbenches.
+    """
+
+    def unit(ip, wp):
+        return (bc.bitwise_matmul(ip, wp, tile_p=128, tile_f=128),)
+
+    ip_spec = jax.ShapeDtypeStruct((4, 128, 64), jnp.float32)
+    wp_spec = jax.ShapeDtypeStruct((1, 64, 128), jnp.float32)
+    text = to_hlo_text(jax.jit(unit).lower(ip_spec, wp_spec))
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text)/1e3:.0f} KB)")
+
+
+def export_quant_golden(path):
+    rng = jax.random.PRNGKey(7)
+    a = jax.random.uniform(rng, (32,), minval=-0.25, maxval=1.25)
+    w = jax.random.normal(jax.random.PRNGKey(8), (32,))
+    out = {"a_in": np.asarray(a).tolist(), "w_in": np.asarray(w).tolist()}
+    for m in (1, 2, 4, 8):
+        out[f"a_codes_{m}"] = np.asarray(q.act_to_codes(a, m)).tolist()
+    for n in (1, 2, 4):
+        codes, scale = q.weight_to_codes(w, n)
+        out[f"w_codes_{n}"] = np.asarray(codes).tolist()
+        out[f"w_scale_{n}"] = float(scale)
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"  wrote {path}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--epochs", type=int, default=20)
+    ap.add_argument("--retrain", action="store_true",
+                    help="ignore the checkpoint cache")
+    args = ap.parse_args()
+    out = args.out
+    os.makedirs(out, exist_ok=True)
+
+    ckpt = os.path.join(out, "ckpt_w1a4.pkl")
+    if os.path.exists(ckpt) and not args.retrain:
+        print(f"[aot] loading cached checkpoint {ckpt}")
+        params, bn_state = T.load_checkpoint(ckpt)
+    else:
+        print(f"[aot] training deployment model W{DEPLOY_W}:I{DEPLOY_A} "
+              f"({args.epochs} epochs on synthetic SVHN)")
+        params, bn_state, hist = T.train_config(
+            DEPLOY_W, DEPLOY_A, epochs=args.epochs
+        )
+        T.save_checkpoint(ckpt, params, bn_state)
+        print(f"[aot] final test error {hist[-1]['test_error']*100:.2f}%")
+
+    # Test split shared with the rust serving path (identical bytes).
+    _, (xte, yte) = ds.svhn_like()
+    ds.write_bin(os.path.join(out, "svhn_test.bin"), xte, yte)
+    print(f"  wrote {out}/svhn_test.bin ({xte.shape[0]} images)")
+
+    # Golden logits for rust integration tests: bitwise path, batch 8.
+    xg = jnp.asarray(xte[:8])
+    logits = M.forward_bitwise(params, bn_state, xg, DEPLOY_W, DEPLOY_A)
+    with open(os.path.join(out, "golden_infer.json"), "w") as f:
+        json.dump(
+            {
+                "batch": 8,
+                "logits": np.asarray(logits).tolist(),
+                "labels": yte[:8].tolist(),
+            },
+            f,
+        )
+    print(f"  wrote {out}/golden_infer.json")
+
+    export_quant_golden(os.path.join(out, "quant_golden.json"))
+    export_bitconv_unit(os.path.join(out, "bitconv_unit.hlo.txt"))
+    for batch in (1, 8):
+        export_model(
+            params, bn_state, batch,
+            os.path.join(out, f"model_w1a4_b{batch}.hlo.txt"),
+        )
+
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(
+            {
+                "deploy_w_bits": DEPLOY_W,
+                "deploy_a_bits": DEPLOY_A,
+                "batches": [1, 8],
+                "input_shape": [40, 40, 3],
+                "num_classes": 10,
+                "jax": jax.__version__,
+            },
+            f,
+            indent=1,
+        )
+    print("[aot] done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""Synthetic SVHN-like / MNIST-like procedural digit datasets.
+
+The paper trains on SVHN (40x40 crops) and evaluates storage/energy on
+MNIST and ImageNet. Real datasets are unavailable in this offline image
+(repro band: data gate), so we substitute procedurally rendered digits:
+a 5x7 glyph per digit class, randomly scaled/translated/colored over a
+noisy background, matching SVHN's 40x40x3 input geometry (and 28x28x1
+for MNIST-like). Accuracy *trends across bit-widths* (Table I) are a
+property of the quantized training algorithm, which this preserves;
+absolute error percentages are not expected to match the paper.
+
+The generator is seeded and deterministic. The test split consumed by
+the rust serving path is exported verbatim to `artifacts/svhn_test.bin`
+(see aot.py), so python-measured and rust-measured accuracies agree on
+the identical set of images.
+"""
+
+import numpy as np
+
+# 5x7 digit glyphs (hand-drawn, row-major, 1 = ink). Deliberately simple:
+# classification difficulty comes from the augmentations below.
+_GLYPHS_ROWS = {
+    0: ["01110", "10001", "10011", "10101", "11001", "10001", "01110"],
+    1: ["00100", "01100", "00100", "00100", "00100", "00100", "01110"],
+    2: ["01110", "10001", "00001", "00110", "01000", "10000", "11111"],
+    3: ["11110", "00001", "00001", "01110", "00001", "00001", "11110"],
+    4: ["00010", "00110", "01010", "10010", "11111", "00010", "00010"],
+    5: ["11111", "10000", "11110", "00001", "00001", "10001", "01110"],
+    6: ["00110", "01000", "10000", "11110", "10001", "10001", "01110"],
+    7: ["11111", "00001", "00010", "00100", "01000", "01000", "01000"],
+    8: ["01110", "10001", "10001", "01110", "10001", "10001", "01110"],
+    9: ["01110", "10001", "10001", "01111", "00001", "00010", "01100"],
+}
+
+GLYPHS = {
+    d: np.array([[int(c) for c in row] for row in rows], dtype=np.float32)
+    for d, rows in _GLYPHS_ROWS.items()
+}
+
+
+def _render_digit(rng, digit, size, channels):
+    """Render one digit image in [0, 1]^(size x size x channels)."""
+    glyph = GLYPHS[digit]
+    # Random integer upscale + placement (glyph is 5 wide x 7 tall; the
+    # scale is chosen so the rendered glyph always fits in the image).
+    max_scale = max(1, (size - 2) // 7)
+    min_scale = max(1, max_scale - 2)
+    scale = int(rng.integers(min_scale, max_scale + 1))
+    g = np.kron(glyph, np.ones((scale, scale), dtype=np.float32))
+    gh, gw = g.shape
+    y0 = int(rng.integers(0, size - gh + 1))
+    x0 = int(rng.integers(0, size - gw + 1))
+
+    bg = rng.uniform(0.0, 0.45)
+    fg = rng.uniform(0.55, 1.0)
+    img = np.full((size, size), bg, dtype=np.float32)
+    img[y0 : y0 + gh, x0 : x0 + gw] = np.where(g > 0, fg, bg)
+    # SVHN-style nuisance: background clutter bars + sensor noise.
+    for _ in range(int(rng.integers(0, 3))):
+        cy = int(rng.integers(0, size))
+        img[cy, :] = np.clip(img[cy, :] + rng.uniform(-0.25, 0.25), 0, 1)
+    img = img + rng.normal(0.0, 0.06, img.shape).astype(np.float32)
+    img = np.clip(img, 0.0, 1.0)
+
+    if channels == 1:
+        return img[:, :, None]
+    # Random per-channel tint to mimic natural-image color variation.
+    tint = rng.uniform(0.6, 1.0, size=3).astype(np.float32)
+    return np.clip(img[:, :, None] * tint[None, None, :], 0.0, 1.0)
+
+
+def make_split(n, seed, size=40, channels=3):
+    """Generate n labelled images. Returns (images [n,s,s,c] f32, labels [n] i32)."""
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 10, size=n).astype(np.int32)
+    imgs = np.stack(
+        [_render_digit(rng, int(d), size, channels) for d in labels]
+    )
+    return imgs, labels
+
+
+def svhn_like(n_train=4096, n_test=512, seed=1234):
+    """The SVHN-like dataset used for Table I and the E2E serving driver."""
+    xtr, ytr = make_split(n_train, seed, size=40, channels=3)
+    xte, yte = make_split(n_test, seed + 1, size=40, channels=3)
+    return (xtr, ytr), (xte, yte)
+
+
+def mnist_like(n_train=4096, n_test=512, seed=99):
+    xtr, ytr = make_split(n_train, seed, size=28, channels=1)
+    xte, yte = make_split(n_test, seed + 1, size=28, channels=1)
+    return (xtr, ytr), (xte, yte)
+
+
+def write_bin(path, images, labels):
+    """Serialize a split for the rust side (see rust/src/dataset/artifact.rs).
+
+    Layout (little-endian): magic b"PIMSDS01", u32 n, u32 h, u32 w, u32 c,
+    then n*h*w*c f32 images, then n u8 labels.
+    """
+    n, h, w, c = images.shape
+    with open(path, "wb") as f:
+        f.write(b"PIMSDS01")
+        np.array([n, h, w, c], dtype="<u4").tofile(f)
+        images.astype("<f4").tofile(f)
+        labels.astype(np.uint8).tofile(f)

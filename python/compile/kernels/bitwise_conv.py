@@ -1,0 +1,166 @@
+"""L1 Pallas kernel: bit-plane AND-Accumulation matmul (paper Eq. 1).
+
+Hardware adaptation (see DESIGN.md §3). The paper executes
+
+    I*W = sum_{m,n} 2^(m+n) CMP(AND(C_n(W), C_m(I)))
+
+as massively parallel in-memory bulk ANDs over SOT-MRAM sub-array rows,
+followed by a 4:2-compressor popcount and an adaptive-shift accumulation.
+On TPU the same insight maps onto the MXU: for {0,1} planes,
+`CMP(AND(a, b)) == dot(a, b)`, so each (m, n) bit-plane pair is one
+systolic-array matmul and the 2^(m+n) "parallel bit-shift" folds into the
+accumulation scale. The HBM<->VMEM schedule the paper expresses with
+sub-array row mapping becomes the BlockSpec grid below:
+
+    grid = (P/TP, F/TF, M, N)       (M, N innermost: the accumulator
+                                     block stays resident in VMEM while
+                                     all bit-plane pairs stream through)
+
+    ip [M, P, K]  activation bit-planes of im2col patches ({0.,1.})
+    wp [N, K, F]  weight bit-planes                       ({0.,1.})
+    out [P, F]    sum_{m,n} 2^(m+n) ip[m] @ wp[n]
+
+VMEM budget per grid step (f32): TP*K + K*TF + TP*TF floats; with the
+default TP=TF=128 and the SVHN model's largest K=1152 this is ~1.3 MB,
+within the ~16 MB/core VMEM of contemporary TPUs with room for
+double-buffering. `interpret=True` is mandatory in this image (CPU PJRT
+cannot execute Mosaic custom-calls); correctness is asserted against
+ref.py and the structural/perf analysis lives in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default MXU-shaped tile sizes. 128 matches the MXU systolic array edge;
+# benchmarked alternatives are recorded in EXPERIMENTS.md §Perf.
+TILE_P = 128
+TILE_F = 128
+
+
+def _kernel(ip_ref, wp_ref, out_ref, *, m_bits, n_bits):
+    """One grid step: accumulate 2^(m+n) * ip[m] @ wp[n] into out."""
+    m = pl.program_id(2)
+    n = pl.program_id(3)
+
+    @pl.when((m == 0) & (n == 0))
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    # {0,1} planes: AND == elementwise product, CMP == the dot reduction.
+    # jnp.dot of the plane blocks drives the MXU; preferred accumulation
+    # in f32 regardless of plane dtype.
+    acc = jnp.dot(
+        ip_ref[0], wp_ref[0], preferred_element_type=jnp.float32
+    )
+    # ASR-equivalent: the adaptive shift by (m + n) is a power-of-two
+    # scale folded into the accumulation (exp2 keeps it exact in f32 for
+    # the m+n <= 14 range any practical bit-width uses).
+    shift = jnp.exp2((m + n).astype(jnp.float32))
+    out_ref[...] += shift * acc
+
+
+@functools.partial(jax.jit, static_argnames=("tile_p", "tile_f"))
+def bitwise_matmul(ip, wp, tile_p=TILE_P, tile_f=TILE_F):
+    """AND-Accumulation matmul over bit-planes.
+
+    ip: [M, P, K] activation bit-planes ({0.,1.} float32)
+    wp: [N, K, F] weight bit-planes     ({0.,1.} float32)
+    returns [P, F] f32, == sum_{m,n} 2^(m+n) ip[m] @ wp[n]
+
+    P and F must be multiples of the tile sizes (the L2 model pads);
+    K is kept whole per block (see VMEM budget note in module docstring).
+    """
+    m_bits, p, k = ip.shape
+    n_bits, k2, f = wp.shape
+    assert k == k2, f"K mismatch {k} vs {k2}"
+    assert p % tile_p == 0, f"P={p} not a multiple of tile_p={tile_p}"
+    assert f % tile_f == 0, f"F={f} not a multiple of tile_f={tile_f}"
+
+    grid = (p // tile_p, f // tile_f, m_bits, n_bits)
+    return pl.pallas_call(
+        functools.partial(_kernel, m_bits=m_bits, n_bits=n_bits),
+        grid=grid,
+        in_specs=[
+            # One activation plane block per step: [1, TP, K].
+            pl.BlockSpec((1, tile_p, k), lambda i, j, m, n: (m, i, 0)),
+            # One weight plane block per step: [1, K, TF].
+            pl.BlockSpec((1, k, tile_f), lambda i, j, m, n: (n, 0, j)),
+        ],
+        # Accumulator block is revisited across all (m, n) steps.
+        out_specs=pl.BlockSpec((tile_p, tile_f), lambda i, j, m, n: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((p, f), jnp.float32),
+        interpret=True,  # CPU image: Mosaic custom-calls cannot execute.
+    )(ip, wp)
+
+
+def _kernel_fused(ip_ref, wp_ref, out_ref, *, m_bits, n_bits):
+    """Perf variant: all (m, n) plane pairs processed in ONE grid step.
+
+    The accumulator tile lives in registers/VMEM for the whole plane
+    sweep instead of being revisited across M*N grid steps — this cuts
+    the grid (and, in the exported interpret-mode HLO, the while-loop
+    trip count and per-step dynamic slices) by a factor of M*N, at the
+    cost of holding all M input planes + N weight planes of the tile
+    in VMEM at once. See EXPERIMENTS.md §Perf for the measured effect
+    and DESIGN.md §Perf for the VMEM budget.
+    """
+    acc = jnp.zeros(out_ref.shape, jnp.float32)
+    for m in range(m_bits):
+        for n in range(n_bits):
+            acc += float(1 << (m + n)) * jnp.dot(
+                ip_ref[m], wp_ref[n],
+                preferred_element_type=jnp.float32,
+            )
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("tile_p", "tile_f"))
+def bitwise_matmul_fused(ip, wp, tile_p=TILE_P, tile_f=TILE_F):
+    """AND-Accumulation matmul, plane loops fused into each grid step.
+
+    Same contract as `bitwise_matmul`; preferred for AOT export.
+    """
+    m_bits, p, k = ip.shape
+    n_bits, k2, f = wp.shape
+    assert k == k2, f"K mismatch {k} vs {k2}"
+    assert p % tile_p == 0 and f % tile_f == 0
+    grid = (p // tile_p, f // tile_f)
+    return pl.pallas_call(
+        functools.partial(_kernel_fused, m_bits=m_bits, n_bits=n_bits),
+        grid=grid,
+        in_specs=[
+            # ALL activation planes of the row tile: [M, TP, K].
+            pl.BlockSpec((m_bits, tile_p, k), lambda i, j: (0, i, 0)),
+            # ALL weight planes of the column tile: [N, K, TF].
+            pl.BlockSpec((n_bits, k, tile_f), lambda i, j: (0, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((tile_p, tile_f), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((p, f), jnp.float32),
+        interpret=True,  # CPU image: Mosaic custom-calls cannot execute.
+    )(ip, wp)
+
+
+def _pad_to(x, axis, multiple):
+    size = x.shape[axis]
+    rem = (-size) % multiple
+    if rem == 0:
+        return x, size
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads), size
+
+
+def bitwise_matmul_padded(ip, wp, tile_p=TILE_P, tile_f=TILE_F,
+                          fused=False):
+    """`bitwise_matmul` for arbitrary P/F: pads, computes, slices back.
+
+    `fused=True` selects the plane-fused perf variant (§Perf).
+    """
+    ip_p, p = _pad_to(ip, 1, tile_p)
+    wp_p, f = _pad_to(wp, 2, tile_f)
+    fn = bitwise_matmul_fused if fused else bitwise_matmul
+    out = fn(ip_p, wp_p, tile_p=tile_p, tile_f=tile_f)
+    return out[:p, :f]

@@ -1,0 +1,87 @@
+"""Pure-jnp correctness oracles for the bitwise AND-Accumulation kernel.
+
+Two independent formulations of the same quantity:
+
+  * `int_dot_ref`       — the "what it means" oracle: plain integer matmul
+                          of the activation/weight codes.
+  * `eq1_ref`           — a literal transcription of the paper's Eq. (1):
+                          bit-plane decomposition, AND (= elementwise
+                          product of {0,1} planes), CMP (= popcount, i.e.
+                          sum along the reduction axis), and the
+                          2^(m+n) parallel bit-shift.
+
+The Pallas kernel (`bitwise_conv.py`) must agree with BOTH to machine
+precision; `eq1_ref == int_dot_ref` is itself a property test of the
+paper's identity.
+"""
+
+import jax.numpy as jnp
+
+from ..quantize import bitplanes
+
+
+def int_dot_ref(ia, iw):
+    """Reference integer dot: ia [P, K] codes x iw [K, F] codes -> [P, F].
+
+    Codes are float tensors holding small non-negative integers.
+    """
+    return ia @ iw
+
+
+def eq1_ref(ia, iw, m_bits, n_bits):
+    """Paper Eq. (1), literally.
+
+    ia: [P, K] activation codes in {0..2^m-1}
+    iw: [K, F] weight codes in {0..2^n-1}
+    returns [P, F] == int_dot_ref(ia, iw)
+    """
+    ip = bitplanes(ia, m_bits, axis=0)  # [M, P, K] of {0,1}
+    wp = bitplanes(iw, n_bits, axis=0)  # [N, K, F] of {0,1}
+    out = jnp.zeros((ia.shape[0], iw.shape[1]), ia.dtype)
+    for m in range(m_bits):
+        for n in range(n_bits):
+            # AND of {0,1} planes is the elementwise product; CMP (count
+            # of ones in the resultant vector) is the sum over K. Together
+            # they are exactly a {0,1} dot product, which is the insight
+            # that maps the paper's sub-array parallelism onto the MXU.
+            anded = ip[m][:, :, None] * wp[n][None, :, :]  # [P, K, F]
+            cmp_ = jnp.sum(anded, axis=1)  # [P, F]
+            out = out + (2.0 ** (m + n)) * cmp_
+    return out
+
+
+def im2col(x, kh, kw, stride=1, pad=0):
+    """Extract convolution patches: x [B, H, W, C] -> [B, OH, OW, kh*kw*C].
+
+    Patch layout is row-major over (kh, kw, C), matching both the Pallas
+    kernel's expectation and rust/src/bitops/ patch extraction.
+    """
+    b, h, w, c = x.shape
+    if pad:
+        x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+        h, w = h + 2 * pad, w + 2 * pad
+    oh = (h - kh) // stride + 1
+    ow = (w - kw) // stride + 1
+    rows = []
+    for i in range(kh):
+        for j in range(kw):
+            rows.append(
+                x[:, i : i + stride * oh : stride, j : j + stride * ow : stride, :]
+            )
+    # [B, OH, OW, kh*kw, C] -> [B, OH, OW, kh*kw*C]
+    patches = jnp.stack(rows, axis=3)
+    return patches.reshape(b, oh, ow, kh * kw * c)
+
+
+def conv2d_int_ref(ia_img, iw_filt, stride=1, pad=0):
+    """Integer-code convolution oracle.
+
+    ia_img:  [B, H, W, C] activation codes
+    iw_filt: [KH, KW, C, F] weight codes
+    returns  [B, OH, OW, F] integer dot of patches x filters
+    """
+    kh, kw, c, f = iw_filt.shape
+    patches = im2col(ia_img, kh, kw, stride, pad)  # [B, OH, OW, K]
+    b, oh, ow, k = patches.shape
+    out = patches.reshape(-1, k) @ iw_filt.reshape(k, f)
+    return out.reshape(b, oh, ow, f)

@@ -1,0 +1,307 @@
+"""L2: the paper's bitwise CNN (6 conv + 2 avg-pool + 2 FC) in JAX.
+
+Three forward paths over the SAME parameters:
+
+  * `forward_train`       — fake-quantized floats through `lax.conv`
+    (fast on the build machine, differentiable via STE, batch-stat BN).
+  * `forward_bitwise`     — the deployment path that is AOT-exported for
+    the rust runtime: activations/weights become integer codes, are
+    decomposed into bit-planes, and every quantized layer's convolution
+    runs through the L1 Pallas AND-Accumulation kernel (Eq. 1). FC
+    layers are "equivalently implemented by convolutional layers"
+    (paper §III-A): a 1x1-patch bitwise matmul over the flattened map.
+  * `forward_infer_float` — float reference of the deployment path
+    (fake-quant + running-stat BN); must agree with `forward_bitwise`
+    to float tolerance (python/tests/test_model.py).
+
+Per the paper (and DoReFa/XNOR practice) the first and last layers are
+not quantized. Quantization happens at the INPUT of each quantized
+layer: activations are clipped to [0,1] and coded to m bits (the EPU
+"Quantizer" unit), identically in all three paths.
+
+Dequantization algebra for a quantized layer with activation codes
+ia in {0..2^m-1} (a = ia/(2^m-1)) and weight codes iw in {0..2^n-1}
+(w = s*(2*iw/(2^n-1) - 1)):
+
+    dot(a, w) = s / ((2^m-1)(2^n-1)) * (2*dot(ia, iw)
+                                        - (2^n-1) * sum(ia))
+
+`dot(ia, iw)` is the Eq.-1 kernel output; `sum(ia)` is a per-patch
+bitcount (one extra CMP column on the PIM substrate; here a jnp sum —
+it is O(P*K) against the kernel's O(P*K*F)).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import quantize as q
+from .kernels import bitwise_conv as bc
+from .kernels.ref import im2col
+
+# ---------------------------------------------------------------------------
+# Architecture definition
+# ---------------------------------------------------------------------------
+
+# (name, kind, cfg) — kind in {conv, pool, fc}; convs are 3x3 pad-1
+# stride-1, pools are 2x2 avg.  Channel widths are scaled down from
+# typical SVHN nets so the build-time training loop is tractable on the
+# single-core build machine (substitution documented in DESIGN.md §2);
+# the 6conv+2pool+2fc structure and the quantization placement match
+# the paper exactly.
+SVHN_LAYERS = (
+    ("conv1", "conv", dict(cin=3, cout=16, quant=False)),
+    ("conv2", "conv", dict(cin=16, cout=16, quant=True)),
+    ("pool1", "pool", dict()),
+    ("conv3", "conv", dict(cin=16, cout=32, quant=True)),
+    ("conv4", "conv", dict(cin=32, cout=32, quant=True)),
+    ("pool2", "pool", dict()),
+    ("conv5", "conv", dict(cin=32, cout=64, quant=True)),
+    ("conv6", "conv", dict(cin=64, cout=64, quant=True)),
+    ("fc1", "fc", dict(cin=10 * 10 * 64, cout=128, quant=True)),
+    ("fc2", "fc", dict(cin=128, cout=10, quant=False)),
+)
+
+BN_EPS = 1e-5
+
+
+def init_params(rng, layers=SVHN_LAYERS):
+    """He-init conv/fc weights + BN scale/shift."""
+    params = {}
+    for name, kind, cfg in layers:
+        if kind == "pool":
+            continue
+        rng, k1 = jax.random.split(rng)
+        if kind == "conv":
+            shape = (3, 3, cfg["cin"], cfg["cout"])
+            fan_in = 9 * cfg["cin"]
+        else:
+            shape = (cfg["cin"], cfg["cout"])
+            fan_in = cfg["cin"]
+        w = jax.random.normal(k1, shape) * jnp.sqrt(2.0 / fan_in)
+        params[name] = {
+            "w": w,
+            "gamma": jnp.ones((cfg["cout"],)),
+            "beta": jnp.zeros((cfg["cout"],)),
+        }
+    return params
+
+
+def init_bn_state(layers=SVHN_LAYERS):
+    return {
+        name: {"mean": jnp.zeros((cfg["cout"],)),
+               "var": jnp.ones((cfg["cout"],))}
+        for name, kind, cfg in layers
+        if kind != "pool"
+    }
+
+
+# ---------------------------------------------------------------------------
+# Shared pieces
+# ---------------------------------------------------------------------------
+
+
+def avg_pool2(x):
+    """2x2 average pooling, stride 2, NHWC."""
+    return lax.reduce_window(
+        x, 0.0, lax.add, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    ) * 0.25
+
+
+def _bn_train(x, p, axes):
+    mean = jnp.mean(x, axis=axes)
+    var = jnp.var(x, axis=axes)
+    xn = (x - mean) / jnp.sqrt(var + BN_EPS)
+    return xn * p["gamma"] + p["beta"], (mean, var)
+
+
+def _bn_infer(x, p, stats):
+    xn = (x - stats["mean"]) / jnp.sqrt(stats["var"] + BN_EPS)
+    return xn * p["gamma"] + p["beta"]
+
+
+def _is_last(layers, name):
+    return name == layers[-1][0]
+
+
+# ---------------------------------------------------------------------------
+# Training path (fake-quant, lax.conv, batch-stat BN)
+# ---------------------------------------------------------------------------
+
+
+def forward_train(params, x, w_bits, a_bits, layers=SVHN_LAYERS):
+    """Training forward. Returns (logits, batch_bn_stats).
+
+    w_bits/a_bits == 32 means full precision (the paper's 32:32
+    baseline).
+    """
+    quant_on = w_bits < 32
+    batch_stats = {}
+    for name, kind, cfg in layers:
+        if kind == "pool":
+            x = avg_pool2(x)
+            continue
+        p = params[name]
+        w = p["w"]
+        if cfg["quant"] and quant_on:
+            x = q.act_quant(x, a_bits)  # EPU Quantizer at layer input
+            w = q.weight_quant(w, w_bits)
+        if kind == "conv":
+            x = lax.conv_general_dilated(
+                x, w, (1, 1), "SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            )
+        else:
+            x = x.reshape(x.shape[0], -1) @ w
+        x, (mean, var) = _bn_train(x, p, tuple(range(x.ndim - 1)))
+        batch_stats[name] = {"mean": mean, "var": var}
+        if not _is_last(layers, name):
+            x = jax.nn.relu(x)
+    return x, batch_stats
+
+
+# ---------------------------------------------------------------------------
+# Deployment path (integer codes -> Pallas Eq.-1 kernel)
+# ---------------------------------------------------------------------------
+
+
+def _tile_for(size, pref=128):
+    """Largest power-of-two tile edge <= pref that divides `size`."""
+    t = pref
+    while t > 1 and size % t != 0:
+        t //= 2
+    return t
+
+
+def bitwise_layer(ia_codes, w, w_bits, a_bits, fused=False):
+    """One quantized layer via the L1 kernel.
+
+    ia_codes: [P, K] integer activation codes (float tensor)
+    w:        [K, F] real-valued weights (quantized inside)
+    fused:    plane-fused kernel variant (§Perf; same numerics)
+    returns [P, F] real-valued pre-BN outputs.
+    """
+    iw_codes, scale = q.weight_to_codes(w, w_bits)
+    ip = q.bitplanes(ia_codes, a_bits, axis=0)  # [M, P, K]
+    wp = q.bitplanes(iw_codes, w_bits, axis=0)  # [N, K, F]
+    p_, _ = ia_codes.shape
+    f_ = w.shape[1]
+    # Patch-tile preference 512 (not the MXU-edge 128): measured 2.2x
+    # faster in the exported interpret-mode HLO with the VMEM budget
+    # still comfortably inside a TPU core (EXPERIMENTS.md §Perf,
+    # DESIGN.md §Perf).
+    raw = bc.bitwise_matmul_padded(
+        ip, wp, tile_p=_tile_for(p_, 512), tile_f=_tile_for(f_),
+        fused=fused,
+    )  # [P, F] == dot(ia, iw)
+    na = (1 << a_bits) - 1
+    nw = (1 << w_bits) - 1
+    patch_sum = jnp.sum(ia_codes, axis=1, keepdims=True)  # CMP column
+    return scale / (na * nw) * (2.0 * raw - nw * patch_sum)
+
+
+def forward_bitwise(params, bn_state, x, w_bits, a_bits,
+                    layers=SVHN_LAYERS, fused=False):
+    """Deployment forward: every quantized conv/fc via the Pallas kernel.
+
+    This is the function AOT-lowered to HLO and served by the rust
+    coordinator (python never on the request path). `fused` selects
+    the plane-fused kernel variant (identical numerics, fewer grid
+    steps — see EXPERIMENTS.md §Perf).
+    """
+    quant_on = w_bits < 32
+    b = x.shape[0]
+    for name, kind, cfg in layers:
+        if kind == "pool":
+            x = avg_pool2(x)
+            continue
+        p = params[name]
+        if cfg["quant"] and quant_on:
+            ia = q.act_to_codes(x, a_bits)
+            if kind == "conv":
+                patches = im2col(ia, 3, 3, stride=1, pad=1)
+                _, oh, ow, k = patches.shape
+                flat = patches.reshape(b * oh * ow, k)
+                y = bitwise_layer(
+                    flat, p["w"].reshape(-1, cfg["cout"]), w_bits,
+                    a_bits, fused=fused,
+                )
+                x = y.reshape(b, oh, ow, cfg["cout"])
+            else:
+                x = bitwise_layer(
+                    ia.reshape(b, -1), p["w"], w_bits, a_bits,
+                    fused=fused,
+                )
+        else:
+            if kind == "conv":
+                # NOT lax.conv: the runtime's xla_extension 0.5.1
+                # executes text-parsed convolution ops incorrectly
+                # (silently returns zeros) — express the unquantized
+                # convs as im2col + matmul like the bitwise layers.
+                patches = im2col(x, 3, 3, stride=1, pad=1)
+                _, oh, ow, k = patches.shape
+                y = patches.reshape(b * oh * ow, k) @ p["w"].reshape(
+                    -1, cfg["cout"]
+                )
+                x = y.reshape(b, oh, ow, cfg["cout"])
+            else:
+                x = x.reshape(b, -1) @ p["w"]
+        x = _bn_infer(x, p, bn_state[name])
+        if not _is_last(layers, name):
+            x = jax.nn.relu(x)
+    return x
+
+
+def forward_infer_float(params, bn_state, x, w_bits, a_bits,
+                        layers=SVHN_LAYERS):
+    """Float reference of the deployment path (fake-quant, running BN)."""
+    quant_on = w_bits < 32
+    b = x.shape[0]
+    for name, kind, cfg in layers:
+        if kind == "pool":
+            x = avg_pool2(x)
+            continue
+        p = params[name]
+        w = p["w"]
+        if cfg["quant"] and quant_on:
+            x = q.act_quant(x, a_bits)
+            w = q.weight_quant(w, w_bits)
+        if kind == "conv":
+            x = lax.conv_general_dilated(
+                x, w, (1, 1), "SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            )
+        else:
+            x = x.reshape(b, -1) @ w
+        x = _bn_infer(x, p, bn_state[name])
+        if not _is_last(layers, name):
+            x = jax.nn.relu(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Analytics (computation-complexity column of Table I): bitwise ops per
+# MAC = W_bits * I_bits for inference, + W_bits * G_bits for training
+# (paper §III-A, 8-bit gradients).
+# ---------------------------------------------------------------------------
+
+
+def computation_complexity(w_bits, a_bits, g_bits=8):
+    inference = w_bits * a_bits
+    training = w_bits * a_bits + w_bits * g_bits
+    return inference, training
+
+
+def model_macs(layers=SVHN_LAYERS, hw=40):
+    """Per-image MAC count of each layer (and the total)."""
+    per = {}
+    size = hw
+    for name, kind, cfg in layers:
+        if kind == "pool":
+            size //= 2
+            continue
+        if kind == "conv":
+            per[name] = size * size * 9 * cfg["cin"] * cfg["cout"]
+        else:
+            per[name] = cfg["cin"] * cfg["cout"]
+    return per, sum(per.values())

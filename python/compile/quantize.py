@@ -1,0 +1,165 @@
+"""DoReFa-style quantizers (build-time, L2).
+
+The paper quantizes activations to m-bit and weights to n-bit unsigned
+integers so that the convolution decomposes into the AND-Accumulation form
+of Eq. (1):
+
+    I*W = sum_{m,n} 2^(m+n) CMP(AND(C_n(W), C_m(I)))
+
+All quantizers here are the DoReFa-Net [Zhou et al. 2016] forms the paper
+says it modified:
+
+  activation: a in R        -> ia in {0..2^m-1},  a_q = ia / (2^m - 1)
+  weight:     w in R        -> iw in {0..2^n-1},  w_q = 2*iw/(2^n-1) - 1
+              (n == 1 specializes to sign(w) with mean(|w|) scale)
+
+Straight-through estimators (identity gradient through `round`) make the
+quantized model trainable; the integer codes `ia`/`iw` are what the rust
+PIM simulator and the Pallas kernel consume as bit-planes.
+
+This module must match `rust/src/quant/` bit-for-bit: the rust test-suite
+checks golden vectors produced by `python -m compile.quantize --golden`.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.custom_vjp
+def ste_round(x):
+    """round(x) with a straight-through (identity) gradient."""
+    return jnp.round(x)
+
+
+def _ste_round_fwd(x):
+    return jnp.round(x), None
+
+
+def _ste_round_bwd(_, g):
+    return (g,)
+
+
+ste_round.defvjp(_ste_round_fwd, _ste_round_bwd)
+
+
+@jax.custom_vjp
+def ste_sign01(x):
+    """(sign(x)+1)/2 in {0,1} with a straight-through gradient.
+
+    The plain `jnp.sign` has zero gradient almost everywhere, which
+    starves binary weights of any training signal; the STE passes the
+    upstream gradient through unchanged inside |x| <= 1 (XNOR-net /
+    DoReFa practice).
+    """
+    return (jnp.sign(x) + 1.0) * 0.5
+
+
+def _ste_sign01_fwd(x):
+    return (jnp.sign(x) + 1.0) * 0.5, x
+
+
+def _ste_sign01_bwd(x, g):
+    return (g * (jnp.abs(x) <= 1.0).astype(g.dtype),)
+
+
+ste_sign01.defvjp(_ste_sign01_fwd, _ste_sign01_bwd)
+
+
+def quantize_k(x, k):
+    """DoReFa uniform quantizer over [0, 1] to k bits (float output)."""
+    n = (1 << k) - 1
+    return ste_round(x * n) / n
+
+
+def act_to_codes(a, m_bits):
+    """Quantize activations in [0, 1] to integer codes {0..2^m-1}.
+
+    Input is clipped to [0, 1] first (the paper's Quantizer unit in the
+    EPU does this before loading the sub-arrays).
+    """
+    n = (1 << m_bits) - 1
+    return ste_round(jnp.clip(a, 0.0, 1.0) * n)
+
+
+def act_quant(a, m_bits):
+    """Fake-quantized activation value in [0, 1] (training path)."""
+    return act_to_codes(a, m_bits) / ((1 << m_bits) - 1)
+
+
+def weight_to_codes(w, n_bits):
+    """Quantize weights to integer codes {0..2^n-1} plus an affine map.
+
+    Returns (codes, scale) such that w_q = scale * (2*codes/(2^n-1) - 1).
+    For n == 1 this is binary-weight (XNOR-net style) with the layer-mean
+    |w| scale; for n > 1 it is DoReFa's tanh-squash map.
+    """
+    if n_bits == 1:
+        scale = jnp.mean(jnp.abs(w))
+        codes = ste_sign01(w)  # {-1,+1} -> {0,1}, STE gradient
+        return codes, scale
+    t = jnp.tanh(w)
+    t = t / (2.0 * jnp.max(jnp.abs(t))) + 0.5  # [0, 1]
+    n = (1 << n_bits) - 1
+    codes = ste_round(t * n)
+    return codes, jnp.asarray(1.0, w.dtype)
+
+
+def weight_quant(w, n_bits):
+    """Fake-quantized weight value (training path)."""
+    codes, scale = weight_to_codes(w, n_bits)
+    n = (1 << n_bits) - 1
+    return scale * (2.0 * codes / n - 1.0)
+
+
+def bitplanes(codes, k_bits, axis=0):
+    """Decompose integer codes (float tensor holding {0..2^k-1}) into
+    k bit-plane tensors of {0.,1.}, stacked along `axis`.
+
+    Plane p holds C_p(X) in the paper's notation (LSB = plane 0).
+    """
+    icodes = codes.astype(jnp.int32)
+    planes = [
+        ((icodes >> p) & 1).astype(codes.dtype) for p in range(k_bits)
+    ]
+    return jnp.stack(planes, axis=axis)
+
+
+def from_bitplanes(planes, axis=0):
+    """Inverse of `bitplanes`: sum_p 2^p * plane_p."""
+    k = planes.shape[axis]
+    weights = (2.0 ** jnp.arange(k)).astype(planes.dtype)
+    shape = [1] * planes.ndim
+    shape[axis] = k
+    return jnp.sum(planes * weights.reshape(shape), axis=axis)
+
+
+@partial(jax.jit, static_argnums=(1,))
+def _golden_act(a, m):
+    return act_to_codes(a, m)
+
+
+def _main():
+    """Emit golden vectors consumed by rust/src/quant/ tests."""
+    import json
+    import sys
+
+    rng = jax.random.PRNGKey(7)
+    a = jax.random.uniform(rng, (32,), minval=-0.25, maxval=1.25)
+    w = jax.random.normal(jax.random.PRNGKey(8), (32,))
+    out = {"a_in": a.tolist(), "w_in": w.tolist()}
+    for m in (1, 2, 4, 8):
+        out[f"a_codes_{m}"] = _golden_act(a, m).tolist()
+    for n in (1, 2, 4):
+        codes, scale = weight_to_codes(w, n)
+        out[f"w_codes_{n}"] = codes.tolist()
+        out[f"w_scale_{n}"] = float(scale)
+    path = sys.argv[sys.argv.index("--golden") + 1]
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote golden quantizer vectors to {path}")
+
+
+if __name__ == "__main__":
+    _main()

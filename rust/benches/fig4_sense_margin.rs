@@ -1,0 +1,76 @@
+//! Fig. 4b reproduction: Monte Carlo simulation of V_sense for the
+//! dual-row AND read under MTJ process variation.
+//!
+//! The paper's plot shows the three combined-resistance states'
+//! sense-voltage clouds and the AND reference between them. We print
+//! the cloud statistics, a text histogram, and the margin/error rate
+//! across variation levels, plus the MC throughput of the device
+//! model itself.
+
+use pims::benchlib::{black_box, Bench};
+use pims::device::{monte_carlo_sense, SotCell};
+
+fn histogram(vs: &[f64], lo: f64, hi: f64, bins: usize) -> Vec<usize> {
+    let mut h = vec![0usize; bins];
+    for &v in vs {
+        let idx = ((v - lo) / (hi - lo) * bins as f64)
+            .clamp(0.0, bins as f64 - 1.0) as usize;
+        h[idx] += 1;
+    }
+    h
+}
+
+fn main() {
+    let mut b = Bench::new("fig4_sense_margin");
+    let cell = SotCell::default();
+    b.note("R_P", format!("{:.0} Ω", cell.mtj.r_parallel()));
+    b.note("R_AP", format!("{:.0} Ω", cell.mtj.r_antiparallel()));
+
+    // The Fig.-4b style run: 10k samples at a few % sigma.
+    let mc = monte_carlo_sense(&cell, 0.2, 0.05, 10_000, 42);
+    let all: Vec<f64> = mc
+        .v00
+        .iter()
+        .chain(&mc.v01)
+        .chain(&mc.v11)
+        .copied()
+        .collect();
+    let lo = all.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = all.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    println!("V_sense distribution (sigma=5%, 10k samples/state), mV:");
+    for (name, v) in [("00", &mc.v00), ("01/10", &mc.v01), ("11", &mc.v11)]
+    {
+        let hist = histogram(v, lo, hi, 40);
+        let peak = *hist.iter().max().unwrap() as f64;
+        let bars: String = hist
+            .iter()
+            .map(|&c| match (8.0 * c as f64 / peak) as u32 {
+                0 => ' ',
+                1..=2 => '.',
+                3..=5 => 'o',
+                _ => '#',
+            })
+            .collect();
+        println!("  state {name:>5}: [{bars}]");
+    }
+    println!(
+        "  ref AND at {:.2} mV marked between the 01 and 11 clouds",
+        mc.v_ref_and * 1e3
+    );
+
+    for sigma in [0.02, 0.05, 0.10, 0.15] {
+        let mc = monte_carlo_sense(&cell, 0.2, sigma, 10_000, 42);
+        b.note(
+            &format!("sigma={sigma:.2}"),
+            format!(
+                "margin {:+.3} mV, error rate {:.2e}",
+                mc.and_margin_mv, mc.and_error_rate
+            ),
+        );
+    }
+
+    b.iter("mc_10k_samples", || {
+        black_box(monte_carlo_sense(&cell, 0.2, 0.05, 10_000, 1));
+    });
+    b.report();
+}

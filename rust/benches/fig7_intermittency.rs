@@ -1,0 +1,107 @@
+//! Fig. 7b reproduction: NV-FA behaviour under power failure.
+//!
+//! The paper's timing diagram shows checkpoints, a power failure, and
+//! the restore to the last checkpointed state. We regenerate the event
+//! sequence, sweep failure rates to quantify the resilience win over
+//! a CMOS-only datapath, and time the intermittent-execution engine.
+
+use pims::benchlib::{black_box, Bench};
+use pims::intermittency::{
+    forward_progress, run_intermittent, Event, FrameWorkload, PowerTrace,
+};
+use pims::nvfa::NvPolicy;
+
+fn main() {
+    let mut b = Bench::new("fig7_intermittency");
+    let w = FrameWorkload {
+        frames: 400,
+        cycles_per_frame: 10,
+        value_per_frame: 1,
+    };
+
+    // --- The Fig.-7b event trace.
+    let trace = PowerTrace::periodic(260, 40, 40);
+    let r = run_intermittent(w, &trace, NvPolicy::DualFf, 20, false);
+    println!("Fig. 7b event sequence (periodic failures, ckpt every 20 frames):");
+    for e in r.events.iter().take(10) {
+        match e {
+            Event::Checkpoint { frame, value } => {
+                println!("  t=frame {frame:>4}: CHECKPOINT value={value}")
+            }
+            Event::PowerFail { frame, volatile_lost } => println!(
+                "  t=frame {frame:>4}: POWER FAIL (volatile {volatile_lost} lost)"
+            ),
+            Event::Restore { frame_resumed, value } => println!(
+                "  t=frame {frame_resumed:>4}: RESTORE from NV value={value}"
+            ),
+            Event::Done { frames, value } => {
+                println!("  done: frames={frames} value={value}")
+            }
+        }
+    }
+    b.note(
+        "exactness",
+        format!(
+            "final value {} == oracle {} : {}",
+            r.final_value,
+            w.frames * w.value_per_frame,
+            r.final_value == w.frames * w.value_per_frame
+        ),
+    );
+
+    // --- Resilience sweep: NV-FA vs volatile across failure rates.
+    println!("\n| mean-on cycles | failures | NV progress | volatile progress |");
+    println!("|---|---|---|---|");
+    for mean_on in [120.0, 240.0, 480.0, 960.0] {
+        let trace = PowerTrace::poisson(
+            mean_on,
+            40,
+            w.frames * w.cycles_per_frame * 40,
+            11,
+        );
+        let nv = run_intermittent(w, &trace, NvPolicy::DualFf, 20, false);
+        let vol = run_intermittent(w, &trace, NvPolicy::DualFf, 20, true);
+        println!(
+            "| {mean_on:.0} | {} | {:.3} | {:.3} |",
+            nv.failures,
+            forward_progress(&nv, &w),
+            forward_progress(&vol, &w)
+        );
+    }
+
+    // --- §IV single-NV-FF PDP variant.
+    let trace = PowerTrace::periodic(260, 40, 60);
+    let dual = run_intermittent(w, &trace, NvPolicy::DualFf, 20, false);
+    let single =
+        run_intermittent(w, &trace, NvPolicy::SingleFf, 20, false);
+    b.note(
+        "dual-FF ckpt bits",
+        format!("{}", dual.checkpoints * 64),
+    );
+    b.note(
+        "single-FF ckpt bits (§IV, -50%)",
+        format!("{}", single.checkpoints * 32),
+    );
+    b.note(
+        "single-FF value error",
+        format!(
+            "{}",
+            (single.final_value as i64
+                - (w.frames * w.value_per_frame) as i64)
+                .abs()
+        ),
+    );
+
+    // --- Engine throughput.
+    let trace = PowerTrace::poisson(300.0, 40, 200_000, 3);
+    b.iter("engine_run_400_frames", || {
+        black_box(run_intermittent(
+            w,
+            &trace,
+            NvPolicy::DualFf,
+            20,
+            false,
+        ));
+    });
+    b.report();
+}

@@ -1,0 +1,68 @@
+//! Fig. 8 reproduction: memory-storage requirements by bit-width.
+//!
+//! (a) the SVHN CNN model across W:I in {32:32, 1:1, 1:4, 1:8, 2:2};
+//! (b) AlexNet on ImageNet across {64:64, 32:32, 1:1}.
+//!
+//! The paper's headline points: 1:4 gives ~11.7x reduction over 32:32
+//! on the SVHN model, and 1:1 AlexNet needs ~40 MB — ~6x / ~12x below
+//! single / double precision.
+
+use pims::benchlib::Bench;
+use pims::cnn::{self, storage};
+
+fn bar(mb: f64, scale: f64) -> String {
+    let n = ((mb / scale) as usize).clamp(1, 60);
+    "#".repeat(n)
+}
+
+fn main() {
+    let mut b = Bench::new("fig8_storage");
+
+    // --- (a) SVHN model.
+    let svhn = cnn::svhn_net();
+    println!("Fig. 8a — SVHN model storage by W:I");
+    println!("| W:I | weights (KB) | activations (KB) | total (KB) | vs 32:32 |");
+    println!("|---|---|---|---|---|");
+    let base = storage(&svhn, 32, 32).total_bytes() as f64;
+    for (w, a) in [(32u32, 32u32), (1, 1), (1, 4), (1, 8), (2, 2)] {
+        let s = storage(&svhn, w, a);
+        println!(
+            "| {w}:{a} | {:.1} | {:.1} | {:.1} | {:.1}x |",
+            s.weight_bits as f64 / 8.0 / 1024.0,
+            s.activation_bits as f64 / 8.0 / 1024.0,
+            s.total_bytes() as f64 / 1024.0,
+            base / s.total_bytes() as f64
+        );
+    }
+    let r14 = base / storage(&svhn, 1, 4).total_bytes() as f64;
+    b.note("svhn 1:4 reduction", format!("{r14:.1}x (paper: ~11.7x)"));
+
+    // --- (b) AlexNet / ImageNet.
+    println!("\nFig. 8b — AlexNet storage (64:64 modeled as 2x 32-bit)");
+    println!("| config | total (MB) | chart |");
+    println!("|---|---|---|");
+    let alex = cnn::alexnet();
+    let s32 = storage(&alex, 32, 32);
+    let s1 = storage(&alex, 1, 1);
+    let mb64 = 2.0 * s32.total_mb(); // double precision = 2x the bits
+    for (name, mb) in [
+        ("64:64", mb64),
+        ("32:32", s32.total_mb()),
+        ("1:1", s1.total_mb()),
+    ] {
+        println!("| {name} | {mb:.1} | {} |", bar(mb, mb64 / 50.0));
+    }
+    b.note(
+        "alexnet 1:1 footprint",
+        format!("{:.1} MB (paper: ~40 MB)", s1.total_mb()),
+    );
+    b.note(
+        "1:1 vs fp32 / fp64",
+        format!(
+            "{:.1}x / {:.1}x (paper: ~6x / ~12x)",
+            s32.total_mb() / s1.total_mb(),
+            mb64 / s1.total_mb()
+        ),
+    );
+    b.report();
+}

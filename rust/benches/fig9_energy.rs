@@ -1,0 +1,59 @@
+//! Fig. 9 reproduction: area-normalized energy-efficiency of the four
+//! accelerator designs, batch sizes 1 and 8, across W:I configs
+//! (log-scale Y in the paper; we print the values and the ratios).
+
+use pims::accel::{Accelerator, Proposed};
+use pims::baselines::{Asic, Imce, Reram};
+use pims::benchlib::{black_box, Bench};
+use pims::cnn;
+
+fn main() {
+    let mut b = Bench::new("fig9_energy");
+    let model = cnn::svhn_net();
+    let designs: Vec<Box<dyn Accelerator>> = vec![
+        Box::new(Proposed::default()),
+        Box::new(Imce::default()),
+        Box::new(Reram::default()),
+        Box::new(Asic::default()),
+    ];
+
+    for batch in [1usize, 8] {
+        println!("\nFig. 9 — energy-efficiency, batch {batch} (frames/µJ/mm², log scale in paper)");
+        println!("| design | 1:1 | 1:4 | 1:8 | 2:2 |");
+        println!("|---|---|---|---|---|");
+        for d in &designs {
+            let row: Vec<String> = cnn::SWEEP_CONFIGS
+                .iter()
+                .map(|&(w, a)| {
+                    format!("{:.2}", d.estimate(&model, w, a, batch).eff_per_mm2())
+                })
+                .collect();
+            println!("| {} | {} |", d.name(), row.join(" | "));
+        }
+    }
+
+    // Headline ratios (abstract: ~2.1x IMCE, 5.4x ReRAM, 9.7x ASIC).
+    let p = designs[0].estimate(&model, 1, 4, 8);
+    for (idx, paper) in [(1usize, 2.1), (2, 5.4), (3, 9.7)] {
+        let e = designs[idx].estimate(&model, 1, 4, 8);
+        b.note(
+            &format!("eff ratio vs {}", e.design),
+            format!(
+                "{:.1}x (paper: ~{paper}x)",
+                p.eff_per_mm2() / e.eff_per_mm2()
+            ),
+        );
+    }
+
+    // Energy breakdown of the proposed design (what the win is made of).
+    println!("\nproposed design energy breakdown (W1:I4, batch 8):");
+    print!("{}", p.cost.table());
+
+    // Model-evaluation throughput of the estimator itself.
+    b.iter("estimate_all_designs_w1a4_b8", || {
+        for d in &designs {
+            black_box(d.estimate(&model, 1, 4, 8));
+        }
+    });
+    b.report();
+}

@@ -1,0 +1,82 @@
+//! §Perf microbenches: the L3 hot paths that sit on the serving
+//! request path or inside the co-simulator's inner loops.
+//!
+//! Used by the performance pass (EXPERIMENTS.md §Perf) to find and
+//! verify optimizations: bit-plane packing, Eq.-1 AND-accumulation,
+//! compressor-tree popcount, sub-array bulk ops, coordinator
+//! queue/batcher overhead (mock backend isolates coordination cost
+//! from XLA execution).
+
+use std::time::Duration;
+
+use pims::benchlib::{black_box, Bench};
+use pims::bitops::{self, BitPlanes};
+use pims::compressor;
+use pims::coordinator::{BatchPolicy, Coordinator, MockBackend};
+use pims::prng::Pcg32;
+use pims::subarray::{SubArray, SubArrayGeom};
+
+fn main() {
+    let mut b = Bench::new("hotpath_micro").with_budget(50, 250);
+    let mut rng = Pcg32::seeded(1);
+
+    // --- bitops: pack + AND-accumulate (conv2-shaped: K=144, m=4, n=1)
+    let k = 144;
+    let ia: Vec<u32> = (0..k).map(|_| rng.below(16)).collect();
+    let iw: Vec<u32> = (0..k).map(|_| rng.below(2)).collect();
+    b.iter("bitplanes_pack_144x4", || {
+        black_box(BitPlanes::from_codes(&ia, 1, k, 4));
+    });
+    let ip = BitPlanes::from_codes(&ia, 1, k, 4);
+    let wp = BitPlanes::from_codes(&iw, 1, k, 1);
+    b.iter("and_accumulate_144_m4n1", || {
+        black_box(bitops::and_accumulate(&ip, 0, &wp, 0));
+    });
+
+    // --- bitwise matmul, one conv2 output tile (64 patches x 16 filters)
+    let p = 64;
+    let f = 16;
+    let ia2: Vec<u32> = (0..p * k).map(|_| rng.below(16)).collect();
+    let iw2: Vec<u32> = (0..k * f).map(|_| rng.below(2)).collect();
+    b.iter("bitwise_matmul_64x144x16", || {
+        black_box(bitops::bitwise_matmul(&ia2, p, k, 4, &iw2, f, 1));
+    });
+
+    // --- compressor tree popcount of one 512-bit row
+    let bits: Vec<bool> = (0..512).map(|_| rng.chance(0.5)).collect();
+    b.iter("tree_popcount_512", || {
+        black_box(compressor::tree_popcount(&bits));
+    });
+
+    // --- sub-array bulk ops
+    let mut sa = SubArray::new(SubArrayGeom::default());
+    let row: Vec<u64> = (0..8).map(|_| rng.next_u64()).collect();
+    sa.write_row(0, &row);
+    sa.write_row(1, &row);
+    b.iter("subarray_bulk_and_512", || {
+        black_box(sa.bulk_and(0, 1));
+    });
+    b.iter("subarray_xor_to_512", || {
+        sa.xor_to(0, 1, 2);
+    });
+
+    // --- coordinator round-trip overhead (mock backend, batch 8)
+    let c = Coordinator::start(
+        || Ok(MockBackend::new(8, 64, 10)),
+        BatchPolicy { max_wait: Duration::from_micros(200) },
+        256,
+    )
+    .unwrap();
+    let img = vec![0.5f32; 64];
+    b.iter("coordinator_roundtrip_b8", || {
+        let pendings: Vec<_> = (0..8)
+            .map(|_| c.submit_blocking(img.clone()).unwrap())
+            .collect();
+        for p in pendings {
+            black_box(p.wait().unwrap());
+        }
+    });
+    drop(c);
+
+    b.report();
+}

@@ -1,0 +1,68 @@
+//! Table I reproduction: computation complexity per W:I bit-width and
+//! the measured test errors from the build-time training sweep.
+//!
+//! The complexity columns are analytic (W*I bitwise ops per MAC for
+//! inference, + W*G with 8-bit gradients for training — §III-A); the
+//! error column is read from `artifacts/table1.json`, produced by
+//! `make table1` (python/compile/train.py). If the training sweep has
+//! not been run, the bench prints the analytic columns and says so.
+
+use pims::benchlib::Bench;
+use pims::cnn;
+use pims::jsonlite::Json;
+
+fn complexity(w: u32, a: u32) -> (u32, u32) {
+    (w * a, w * a + w * 8)
+}
+
+fn main() {
+    let mut b = Bench::new("table1_complexity");
+    let table1 = Json::load("artifacts/table1.json").ok();
+
+    println!("Table I — test error of the CNN model on synthetic SVHN");
+    println!("| W | I | inference complexity | training complexity | error (%) | paper error (%) |");
+    println!("|---|---|---|---|---|---|");
+    let paper = [(32, 32, 2.4), (1, 1, 3.1), (1, 4, 2.3), (1, 8, 2.1), (2, 2, 1.8)];
+    for (w, a, paper_err) in paper {
+        let (ci, ct) = if w >= 32 {
+            (0, 0)
+        } else {
+            complexity(w, a)
+        };
+        let measured = table1.as_ref().and_then(|t| {
+            t.as_arr()?.iter().find(|row| {
+                row.get("w_bits").and_then(Json::as_f64) == Some(w as f64)
+                    && row.get("a_bits").and_then(Json::as_f64)
+                        == Some(a as f64)
+            })
+        });
+        let err = measured
+            .and_then(|r| r.get("best_test_error_pct"))
+            .and_then(Json::as_f64)
+            .map(|e| format!("{e:.2}"))
+            .unwrap_or_else(|| "run `make table1`".into());
+        let (ci_s, ct_s) = if w >= 32 {
+            ("-".to_string(), "-".to_string())
+        } else {
+            (ci.to_string(), ct.to_string())
+        };
+        println!("| {w} | {a} | {ci_s} | {ct_s} | {err} | {paper_err} |");
+    }
+
+    // The model cost quoted in §III-A ("about 80 FLOPs per 40x40
+    // image" — MFLOPs in context); ours is scaled down for build-time
+    // training (DESIGN.md §2).
+    let m = cnn::svhn_net();
+    b.note(
+        "model MACs/img",
+        format!("{:.1}M (paper's full-width model: ~40M)", m.total_macs() as f64 / 1e6),
+    );
+    b.note(
+        "complexity identity",
+        "inference = W*I, training = W*I + W*8 (8-bit gradients)",
+    );
+    if table1.is_none() {
+        b.note("errors", "analytic only — run `make table1` for measured errors");
+    }
+    b.report();
+}

@@ -1,0 +1,88 @@
+//! Table II reproduction: energy (µJ/img) and area (mm²) of the
+//! NVM-based BCNN accelerators — ReRAM [8], IMCE [12], and the
+//! proposed design — for single-image binary-CNN inference on the
+//! ImageNet (AlexNet), SVHN, and MNIST (LeNet) models.
+
+use pims::accel::{Accelerator, Proposed};
+use pims::baselines::{Imce, Reram};
+use pims::benchlib::Bench;
+use pims::cnn;
+
+struct PaperRow {
+    design: &'static str,
+    energy: [f64; 3], // imagenet, svhn, mnist
+    area: [f64; 3],
+}
+
+const PAPER: [PaperRow; 3] = [
+    PaperRow {
+        design: "reram",
+        energy: [2275.34, 425.21, 13.55],
+        area: [9.19, 0.085, 0.060],
+    },
+    PaperRow {
+        design: "imce",
+        energy: [785.25, 135.26, 0.92],
+        area: [2.12, 0.01, 0.009],
+    },
+    PaperRow {
+        design: "proposed",
+        energy: [471.8, 84.31, 0.68],
+        area: [2.60, 0.039, 0.012],
+    },
+];
+
+fn main() {
+    let mut b = Bench::new("table2_energy_area");
+    let models = [cnn::alexnet(), cnn::svhn_net(), cnn::lenet()];
+    let designs: Vec<Box<dyn Accelerator>> = vec![
+        Box::new(Reram::default()),
+        Box::new(Imce::default()),
+        Box::new(Proposed::default()),
+    ];
+
+    println!("Table II — BCNN (W1:I1) energy/area, single image");
+    println!("| design | dataset | energy µJ/img (ours) | (paper) | area mm² (ours) | (paper) |");
+    println!("|---|---|---|---|---|---|");
+    let mut ours = vec![[0.0f64; 3]; 3];
+    for (di, d) in designs.iter().enumerate() {
+        for (mi, m) in models.iter().enumerate() {
+            let e = d.estimate(m, 1, 1, 1);
+            ours[di][mi] = e.uj_per_frame();
+            let dataset = ["imagenet", "svhn", "mnist"][mi];
+            println!(
+                "| {} | {dataset} | {:.2} | {:.2} | {:.3} | {:.3} |",
+                d.name(),
+                e.uj_per_frame(),
+                PAPER[di].energy[mi],
+                e.area.total_mm2,
+                PAPER[di].area[mi],
+            );
+        }
+    }
+
+    // Shape checks the paper calls out in §III-E.
+    let (reram, imce, prop) = (&ours[0], &ours[1], &ours[2]);
+    b.note(
+        "imagenet: proposed vs ReRAM energy",
+        format!("{:.1}x (paper: ~4.8x)", reram[0] / prop[0]),
+    );
+    b.note(
+        "imagenet: proposed vs IMCE energy",
+        format!("{:.1}x (paper: ~1.6x)", imce[0] / prop[0]),
+    );
+    let p_alex = designs[2].estimate(&models[0], 1, 1, 1);
+    let r_alex = designs[0].estimate(&models[0], 1, 1, 1);
+    b.note(
+        "imagenet: ReRAM/proposed area",
+        format!(
+            "{:.1}x (paper: ~3.5x)",
+            r_alex.area.total_mm2 / p_alex.area.total_mm2
+        ),
+    );
+    b.note(
+        "proposed AlexNet energy",
+        format!("{:.0} µJ/img (paper: 471.8)", prop[0]),
+    );
+    b.report();
+}

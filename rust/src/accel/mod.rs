@@ -1,0 +1,454 @@
+//! The proposed SOT-MRAM AND-Accumulation accelerator model (§II).
+//!
+//! Maps each (quantized) CNN layer onto the computational sub-arrays
+//! and produces per-image energy / latency / area estimates — the
+//! device-to-architecture co-simulation that regenerates Figs. 9/10
+//! and Table II. The functional correctness of every primitive used
+//! here is established by the bit-accurate modules ([`crate::bitops`],
+//! [`crate::subarray`], [`crate::compressor`], [`crate::asr`],
+//! [`crate::nvfa`]); this module does the counting.
+//!
+//! Mapping (Fig. 3 "data organization and mapping"):
+//! a quantized layer is a GEMM (P patches) x (K reduction) x (F
+//! filters) at m activation bits and n weight bits. K-length bit-plane
+//! vectors are chunked across 512-column rows; each sub-array stream
+//! owns one (filter, weight-plane, chunk) triple and serves all P
+//! patches and m input planes:
+//!
+//!   per (p, f, m, n, chunk):  bulk-AND row pair    (1 array cycle)
+//!                             write-back           (1 cycle)
+//!                             CMP compressor count (1 cycle, §II-B.1)
+//!   per (p, f):               ASR shift-load + NV-FA accumulate
+//!                             (pipelined behind the array cycles)
+//!
+//! First/last layers are not quantized by the training recipe; all
+//! designs execute them as 8:8-bit bitwise layers (fixed-point first/
+//! last layer, standard BCNN-accelerator practice; DESIGN.md §2).
+
+use crate::arch::{ChipOrg, HTree};
+use crate::cnn::{Layer, Model};
+use crate::compressor;
+use crate::device::SotCosts;
+use crate::energy::{fom, tech45, AreaModel, CostBreakdown};
+
+/// Effective bit-widths for a quantized layer (capped at 8 for the
+/// bit-plane mapping).
+pub fn layer_bits(layer: &Layer, w_bits: u32, a_bits: u32) -> (u32, u32) {
+    let _ = layer;
+    (w_bits.min(8), a_bits.min(8))
+}
+
+/// First/last layers stay unquantized (training recipe, §III-A); on
+/// every PIM design they execute on the EPU's fixed-point SIMD path
+/// (8-bit MAC at 45 nm ≈ 0.2 pJ), identically across designs so the
+/// compared ratios isolate the bit-wise convolution engines. The ASIC
+/// baseline runs them natively on its own datapath.
+pub const EPU_FP_MAC_PJ: f64 = 0.2;
+pub const EPU_FP_LANES: f64 = 128.0; // MACs/cycle at 1 GHz
+pub const EPU_FP_NS_PER_CYCLE: f64 = 1.0;
+
+/// Cost of one unquantized layer on the EPU path (shared by the
+/// proposed design and the PIM baselines).
+pub fn epu_fp_layer_cost(
+    layer: &Layer,
+    batch: usize,
+    cost: &mut CostBreakdown,
+) {
+    let macs = layer.macs() as f64 * batch as f64;
+    cost.add(
+        "epu_fp_layers",
+        macs * EPU_FP_MAC_PJ,
+        macs / EPU_FP_LANES * EPU_FP_NS_PER_CYCLE,
+    );
+}
+
+/// Full estimate of one model execution.
+#[derive(Debug, Clone)]
+pub struct RunEstimate {
+    pub design: &'static str,
+    pub cost: CostBreakdown,
+    pub area: AreaModel,
+    pub batch: usize,
+}
+
+impl RunEstimate {
+    /// Per-frame energy [µJ].
+    pub fn uj_per_frame(&self) -> f64 {
+        self.cost.energy_uj() / self.batch as f64
+    }
+
+    /// Per-frame latency [ns] (throughput-oriented: batch pipelining).
+    pub fn latency_ns_per_frame(&self) -> f64 {
+        self.cost.latency_ns / self.batch as f64
+    }
+
+    pub fn fps(&self) -> f64 {
+        fom::fps(self.latency_ns_per_frame())
+    }
+
+    /// Fig. 10 metric: frames/s/mm².
+    pub fn fps_per_mm2(&self) -> f64 {
+        fom::fps_per_mm2(self.latency_ns_per_frame(), self.area.total_mm2)
+    }
+
+    /// Fig. 9 metric: frames/µJ/mm² (area-normalized energy eff.).
+    pub fn eff_per_mm2(&self) -> f64 {
+        fom::frames_per_uj_mm2(
+            self.cost.energy_pj / self.batch as f64,
+            self.area.total_mm2,
+        )
+    }
+}
+
+/// Common interface for the proposed design and all baselines.
+pub trait Accelerator {
+    fn name(&self) -> &'static str;
+
+    /// Estimate a batch execution of `model` at W:I = w_bits:a_bits.
+    fn estimate(
+        &self,
+        model: &Model,
+        w_bits: u32,
+        a_bits: u32,
+        batch: usize,
+    ) -> RunEstimate;
+}
+
+/// Configuration of the proposed accelerator.
+#[derive(Debug, Clone)]
+pub struct Proposed {
+    pub org: ChipOrg,
+    pub costs: SotCosts,
+    pub htree: HTree,
+    /// Array cycle [ns] (one row op; SOT write-limited).
+    pub cycle_ns: f64,
+    /// NV-FA checkpoint period in frames (§II-B.3; default 20).
+    pub checkpoint_period: u64,
+    /// NV-FA accumulator width.
+    pub acc_width: usize,
+    /// EPU per-element energies [pJ]: quantizer, BN+activation.
+    pub epu_quant_pj: f64,
+    pub epu_bn_act_pj: f64,
+}
+
+impl Default for Proposed {
+    fn default() -> Self {
+        Proposed {
+            org: ChipOrg::default(),
+            costs: SotCosts::default(),
+            htree: HTree::default(),
+            cycle_ns: 1.1,
+            checkpoint_period: 20,
+            acc_width: 32,
+            epu_quant_pj: 0.02,
+            epu_bn_act_pj: 0.05,
+        }
+    }
+}
+
+/// Per-layer operation counts (shared by the proposed design and the
+/// IMCE baseline, which differ only in the accumulation datapath).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LayerOps {
+    /// Bulk AND + write-back row operations.
+    pub and_rows: u64,
+    /// CMP popcounts (one per AND row).
+    pub cmp_ops: u64,
+    /// Input bit-plane row writes.
+    pub input_writes: u64,
+    /// Weight bit-plane row writes (amortized once per batch).
+    pub weight_writes: u64,
+    /// ASR loads == NV-FA adds (one per (p, f) partial).
+    pub partials: u64,
+    /// Parallel sub-array streams available to this layer.
+    pub streams: u64,
+    /// K chunks per reduction.
+    pub chunks: u64,
+}
+
+/// Count the row-level work of one quantized GEMM layer.
+pub fn layer_ops(
+    org: &ChipOrg,
+    p: usize,
+    k: usize,
+    f: usize,
+    m_bits: u32,
+    n_bits: u32,
+    batch: usize,
+) -> LayerOps {
+    let cols = org.subarray.cols as u64;
+    let chunks = (k as u64).div_ceil(cols);
+    let (p, f, b) = (p as u64, f as u64, batch as u64);
+    let (m, n) = (m_bits as u64, n_bits as u64);
+    let and_rows = b * p * f * m * n * chunks;
+    let streams = (f * m * n * chunks).min(org.subarrays_total() as u64);
+    LayerOps {
+        and_rows,
+        cmp_ops: and_rows,
+        input_writes: b * p * m * chunks,
+        weight_writes: f * n * chunks,
+        partials: b * p * f * m * n,
+        streams: streams.max(1),
+        chunks,
+    }
+}
+
+impl Proposed {
+    /// Cost of one quantized layer.
+    fn layer_cost(
+        &self,
+        ops: &LayerOps,
+        p: usize,
+        k: usize,
+        f: usize,
+        batch: usize,
+        cost: &mut CostBreakdown,
+    ) {
+        let cols = self.org.subarray.cols as f64;
+        let c = &self.costs;
+
+        // --- Parallel AND phase (§II-A): AND sense + write-back.
+        let and_e = ops.and_rows as f64
+            * cols
+            * (c.logic_energy_pj_per_bit + c.write_energy_pj_per_bit);
+        // Streams run in parallel; each row op is one array cycle and
+        // the write-back another.
+        let and_cycles = (ops.and_rows as f64 / ops.streams as f64) * 2.0;
+        cost.add("and_phase", and_e, and_cycles * self.cycle_ns);
+
+        // --- CMP: one compressor-tree pass per AND row, one cycle
+        // (§II-B.1 "in one clock cycle instead of several").
+        let tree = compressor::tree_popcount(&vec![true; cols as usize]);
+        let cmp_e_per = tree.slices as f64
+            * (tech45::XOR_PJ + 3.0 * tech45::MUX_PJ);
+        let cmp_cycles = ops.cmp_ops as f64 / ops.streams as f64;
+        cost.add(
+            "cmp_compressor",
+            ops.cmp_ops as f64 * cmp_e_per,
+            cmp_cycles * self.cycle_ns,
+        );
+
+        // --- ASR loads: one per partial, pipelined behind the array
+        // (energy only).
+        let asr = crate::asr::Asr::new(16, 14);
+        let asr_e = asr.ff_count() as f64 * tech45::FF_CLOCK_PJ
+            + asr.mux_count() as f64 * tech45::MUX_PJ;
+        cost.add_energy_only("asr", ops.partials as f64 * asr_e);
+
+        // --- NV-FA accumulate + periodic checkpoint.
+        let fa_e = self.acc_width as f64 * tech45::FA_PJ;
+        let ckpt_e = 2.0 * self.acc_width as f64 * tech45::NV_WRITE_PJ
+            / self.checkpoint_period as f64;
+        cost.add_energy_only(
+            "nvfa",
+            ops.partials as f64 * (fa_e + ckpt_e),
+        );
+
+        // --- Operand loading: input planes in, weights once.
+        let wr_e = (ops.input_writes + ops.weight_writes) as f64
+            * cols
+            * c.write_energy_pj_per_bit;
+        let wr_cycles = (ops.input_writes + ops.weight_writes) as f64
+            / ops.streams as f64;
+        cost.add("operand_write", wr_e, wr_cycles * self.cycle_ns);
+
+        // --- H-tree: partial counts (16-bit) funneled to the EPU, and
+        // the input feature map entering from the chip port.
+        let (cnt_e, _) = self.htree.io_transfer(ops.partials * 16);
+        let (in_e, in_l) =
+            self.htree.io_transfer((batch * p * k) as u64);
+        cost.add("htree", cnt_e + in_e, in_l);
+
+        // --- EPU: quantizer on inputs, BN + activation on outputs.
+        let epu_e = (batch * p * k) as f64 * self.epu_quant_pj / f.max(1) as f64
+            + (batch * p * f) as f64 * self.epu_bn_act_pj;
+        cost.add_energy_only("epu", epu_e);
+    }
+
+    /// Sub-arrays needed for the model's resident working set, for the
+    /// area model. Layers execute in sequence, so the chip is sized to
+    /// the LARGEST layer's working set (weights + an input-patch tile +
+    /// result rows), not the sum — matching the Table II convention
+    /// where the SVHN chip is ~0.04 mm², far below whole-model storage.
+    pub fn subarrays_used(&self, model: &Model, w_bits: u32, a_bits: u32) -> u64 {
+        let sub_bits = self.org.subarray.bits() as u64;
+        let mut worst = 0u64;
+        for l in &model.layers {
+            if !l.is_quant() {
+                continue; // EPU path
+            }
+            if let Some((_, k, f)) = l.gemm_shape() {
+                let (n, m) = layer_bits(l, w_bits, a_bits);
+                // weights (n planes) + a resident input tile (m planes
+                // over K for 64 patches) + result rows per stream.
+                let bits = (k * f) as u64 * n as u64
+                    + k as u64 * m as u64 * 64
+                    + 2 * self.org.subarray.cols as u64;
+                worst = worst.max(bits);
+            }
+        }
+        worst.div_ceil(sub_bits).max(1)
+    }
+
+    /// Chip area sized to the model (Table II convention).
+    pub fn area(&self, model: &Model, w_bits: u32, a_bits: u32) -> AreaModel {
+        let mut a = AreaModel::default();
+        let subs = self.subarrays_used(model, w_bits, a_bits) as f64;
+        let cell_mm2 = tech45::cell_mm2(tech45::SOT_CELL_F2);
+        let array = subs * cell_mm2 * self.org.subarray.bits() as f64;
+        a.add("sot_arrays", array);
+        a.add("periphery", array * 0.35); // decoders + SAs + refs
+        // Digital under-array per sub-array: compressor tree + ASR +
+        // NV-FA (the "larger overhead to the memory chip", §III-E).
+        let tree_slices = 170.0; // 512-input 4:2 tree
+        let digital_um2 = tree_slices
+            * (tech45::XOR_GATE_UM2 + 3.0 * tech45::MUX_GATE_UM2)
+            + 20.0 * (tech45::FF_UM2 + tech45::MUX_GATE_UM2) // ASR
+            + self.acc_width as f64 * (tech45::FA_UM2 + 2.0 * tech45::NV_FF_UM2);
+        a.add("cmp_asr_nvfa", subs * digital_um2 * 1e-6);
+        a.add("epu", 0.002); // quantizer + BN + act SIMD block
+        a
+    }
+}
+
+impl Accelerator for Proposed {
+    fn name(&self) -> &'static str {
+        "proposed"
+    }
+
+    fn estimate(
+        &self,
+        model: &Model,
+        w_bits: u32,
+        a_bits: u32,
+        batch: usize,
+    ) -> RunEstimate {
+        let mut cost = CostBreakdown::new();
+        for l in &model.layers {
+            if let Some((p, k, f)) = l.gemm_shape() {
+                if !l.is_quant() {
+                    epu_fp_layer_cost(l, batch, &mut cost);
+                    continue;
+                }
+                let (n, m) = layer_bits(l, w_bits, a_bits);
+                let ops = layer_ops(&self.org, p, k, f, m, n, batch);
+                self.layer_cost(&ops, p, k, f, batch, &mut cost);
+            }
+            // Pool layers ride on the EPU (negligible adds).
+        }
+        RunEstimate {
+            design: self.name(),
+            cost,
+            area: self.area(model, w_bits, a_bits),
+            batch,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn;
+
+    #[test]
+    fn layer_ops_counting() {
+        let org = ChipOrg::default();
+        // conv2 of the SVHN net: P=1600, K=144, F=16, m=4, n=1.
+        let ops = layer_ops(&org, 1600, 144, 16, 4, 1, 1);
+        assert_eq!(ops.chunks, 1);
+        assert_eq!(ops.and_rows, 1600 * 16 * 4);
+        assert_eq!(ops.partials, 1600 * 16 * 4);
+        assert_eq!(ops.input_writes, 1600 * 4);
+        assert_eq!(ops.weight_writes, 16);
+        assert_eq!(ops.streams, 64);
+    }
+
+    #[test]
+    fn chunking_beyond_512() {
+        let org = ChipOrg::default();
+        let ops = layer_ops(&org, 10, 1152, 8, 1, 1, 1);
+        assert_eq!(ops.chunks, 3);
+        assert_eq!(ops.and_rows, 10 * 8 * 3);
+    }
+
+    #[test]
+    fn estimate_produces_positive_costs() {
+        let acc = Proposed::default();
+        let m = cnn::svhn_net();
+        let e = acc.estimate(&m, 1, 4, 1);
+        assert!(e.cost.energy_pj > 0.0);
+        assert!(e.cost.latency_ns > 0.0);
+        assert!(e.area.total_mm2 > 0.0);
+        assert!(e.cost.component("and_phase").is_some());
+        assert!(e.cost.component("nvfa").is_some());
+    }
+
+    #[test]
+    fn batch8_amortizes_weights() {
+        let acc = Proposed::default();
+        let m = cnn::svhn_net();
+        let b1 = acc.estimate(&m, 1, 4, 1);
+        let b8 = acc.estimate(&m, 1, 4, 8);
+        // per-frame energy strictly improves with batch (Fig. 9)
+        assert!(b8.uj_per_frame() < b1.uj_per_frame());
+    }
+
+    #[test]
+    fn higher_bits_cost_more() {
+        let acc = Proposed::default();
+        let m = cnn::svhn_net();
+        let e11 = acc.estimate(&m, 1, 1, 1);
+        let e18 = acc.estimate(&m, 1, 8, 1);
+        let e22 = acc.estimate(&m, 2, 2, 1);
+        assert!(e18.cost.energy_pj > e11.cost.energy_pj);
+        assert!(e22.cost.energy_pj > e11.cost.energy_pj);
+        assert!(e18.cost.latency_ns > e11.cost.latency_ns);
+    }
+
+    #[test]
+    fn area_scales_with_model() {
+        let acc = Proposed::default();
+        let svhn = acc.area(&cnn::svhn_net(), 1, 1).total_mm2;
+        let alex = acc.area(&cnn::alexnet(), 1, 1).total_mm2;
+        assert!(alex > 10.0 * svhn, "svhn={svhn} alex={alex}");
+        // Table II bands: SVHN O(0.01..0.1) mm², AlexNet O(1..10) mm².
+        assert!((0.005..0.3).contains(&svhn), "svhn={svhn}");
+        assert!((0.5..12.0).contains(&alex), "alex={alex}");
+    }
+
+    #[test]
+    fn unquantized_layers_take_the_epu_path() {
+        let m = cnn::svhn_net();
+        assert_eq!(layer_bits(&m.layers[1], 1, 4), (1, 4));
+        // The estimate must carry an EPU fixed-point component for
+        // conv1/fc2 and it must be identical across PIM designs
+        // (ratio isolation).
+        let p = Proposed::default().estimate(&m, 1, 4, 1);
+        let i = crate::baselines::Imce::default().estimate(&m, 1, 4, 1);
+        let (pe, pl) = p.cost.component("epu_fp_layers").unwrap();
+        let (ie, il) = i.cost.component("epu_fp_layers").unwrap();
+        assert_eq!(pe, ie);
+        assert_eq!(pl, il);
+        let fp_macs: u64 = m
+            .layers
+            .iter()
+            .filter(|l| !l.is_quant())
+            .map(|l| l.macs())
+            .sum();
+        assert!((pe - fp_macs as f64 * EPU_FP_MAC_PJ).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fom_helpers() {
+        let acc = Proposed::default();
+        let m = cnn::svhn_net();
+        let e = acc.estimate(&m, 1, 4, 8);
+        assert!(e.fps() > 0.0);
+        assert!(e.fps_per_mm2() > 0.0);
+        assert!(e.eff_per_mm2() > 0.0);
+        assert!(
+            (e.latency_ns_per_frame() - e.cost.latency_ns / 8.0).abs()
+                < 1e-9
+        );
+    }
+}

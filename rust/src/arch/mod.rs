@@ -1,0 +1,206 @@
+//! Chip-level organization (paper §III-C): sub-arrays -> mats -> banks
+//! -> groups, H-tree routed.
+//!
+//! The paper's configuration: 256x512 sub-arrays, "2x2 mats per bank,
+//! 8x8 banks per group; in total 16 groups and 512 Mb total capacity",
+//! H-tree routing within a mat/bank. This module provides the
+//! hierarchy math (capacity, address decomposition, parallelism) and
+//! the H-tree wire-energy/latency model used by [`crate::energy`].
+
+use crate::subarray::SubArrayGeom;
+
+/// Chip hierarchy parameters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChipOrg {
+    pub subarray: SubArrayGeom,
+    /// Sub-arrays per mat (the mat is the H-tree leaf cluster).
+    pub subarrays_per_mat: usize,
+    /// Mats per bank, e.g. 2x2 = 4.
+    pub mats_per_bank: usize,
+    /// Banks per group, e.g. 8x8 = 64.
+    pub banks_per_group: usize,
+    pub groups: usize,
+}
+
+impl Default for ChipOrg {
+    fn default() -> Self {
+        // Paper §III-C: 256 rows x 512 cols per mat, 2x2 mats/bank,
+        // 8x8 banks/group, 16 groups => 512 Mb.
+        ChipOrg {
+            subarray: SubArrayGeom::default(),
+            subarrays_per_mat: 1,
+            mats_per_bank: 4,
+            banks_per_group: 64,
+            groups: 16,
+        }
+    }
+}
+
+impl ChipOrg {
+    pub fn subarrays_total(&self) -> usize {
+        self.subarrays_per_mat
+            * self.mats_per_bank
+            * self.banks_per_group
+            * self.groups
+    }
+
+    /// Total capacity in bits.
+    pub fn capacity_bits(&self) -> u64 {
+        self.subarrays_total() as u64 * self.subarray.bits() as u64
+    }
+
+    pub fn capacity_mb(&self) -> f64 {
+        self.capacity_bits() as f64 / 8.0 / 1024.0 / 1024.0
+    }
+
+    /// How many sub-arrays can compute concurrently. All of them — the
+    /// paper's key parallelism claim; the baseline models restrict
+    /// this differently.
+    pub fn parallel_subarrays(&self) -> usize {
+        self.subarrays_total()
+    }
+
+    /// Decompose a flat sub-array index into (group, bank, mat, sub).
+    pub fn locate(&self, idx: usize) -> SubArrayAddr {
+        assert!(idx < self.subarrays_total());
+        let per_bank = self.subarrays_per_mat * self.mats_per_bank;
+        let per_group = per_bank * self.banks_per_group;
+        SubArrayAddr {
+            group: idx / per_group,
+            bank: (idx % per_group) / per_bank,
+            mat: (idx % per_bank) / self.subarrays_per_mat,
+            sub: idx % self.subarrays_per_mat,
+        }
+    }
+
+    pub fn flatten(&self, a: SubArrayAddr) -> usize {
+        let per_bank = self.subarrays_per_mat * self.mats_per_bank;
+        let per_group = per_bank * self.banks_per_group;
+        a.group * per_group
+            + a.bank * per_bank
+            + a.mat * self.subarrays_per_mat
+            + a.sub
+    }
+}
+
+/// Hierarchical address of one sub-array.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SubArrayAddr {
+    pub group: usize,
+    pub bank: usize,
+    pub mat: usize,
+    pub sub: usize,
+}
+
+/// H-tree interconnect model: data moving between levels pays wire
+/// energy/latency proportional to the tree depth traversed. Constants
+/// are CACTI-class 45 nm global-wire numbers.
+#[derive(Debug, Clone)]
+pub struct HTree {
+    /// Energy to move one bit across one tree level [pJ].
+    pub energy_pj_per_bit_level: f64,
+    /// Latency per level [ns] (pipelined; per-transfer, not per-bit).
+    pub latency_ns_per_level: f64,
+}
+
+impl Default for HTree {
+    fn default() -> Self {
+        HTree { energy_pj_per_bit_level: 0.02, latency_ns_per_level: 0.3 }
+    }
+}
+
+/// Levels of H-tree between two sub-arrays (0 if same mat): mat link,
+/// bank spine, group spine, chip spine — matched pairs collapse.
+pub fn tree_levels(a: SubArrayAddr, b: SubArrayAddr) -> u32 {
+    if a.group != b.group {
+        3
+    } else if a.bank != b.bank {
+        2
+    } else if a.mat != b.mat {
+        1
+    } else {
+        0
+    }
+}
+
+impl HTree {
+    /// Cost of moving `bits` between two sub-arrays.
+    pub fn transfer(&self, a: SubArrayAddr, b: SubArrayAddr, bits: u64) -> (f64, f64) {
+        let lv = tree_levels(a, b) as f64;
+        (
+            bits as f64 * lv * self.energy_pj_per_bit_level,
+            lv * self.latency_ns_per_level,
+        )
+    }
+
+    /// Cost of moving `bits` from the chip port to a sub-array (full
+    /// depth: group + bank + mat = 3 levels).
+    pub fn io_transfer(&self, bits: u64) -> (f64, f64) {
+        (
+            bits as f64 * 3.0 * self.energy_pj_per_bit_level,
+            3.0 * self.latency_ns_per_level,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest_lite::Runner;
+
+    #[test]
+    fn paper_capacity_is_512_mb() {
+        let org = ChipOrg::default();
+        // 131072 bits * 4 * 64 * 16 = 512 Mib
+        assert_eq!(org.capacity_bits(), 512 * 1024 * 1024);
+        assert_eq!(org.capacity_mb(), 64.0); // 512 Mb == 64 MB
+        assert_eq!(org.subarrays_total(), 4096);
+    }
+
+    #[test]
+    fn locate_flatten_roundtrip_property() {
+        let org = ChipOrg::default();
+        let mut r = Runner::new(0xAC1);
+        r.run("locate/flatten roundtrip", |g| {
+            let idx = g.usize(0, org.subarrays_total() - 1);
+            let addr = org.locate(idx);
+            assert_eq!(org.flatten(addr), idx);
+            assert!(addr.group < org.groups);
+            assert!(addr.bank < org.banks_per_group);
+            assert!(addr.mat < org.mats_per_bank);
+        });
+    }
+
+    #[test]
+    fn tree_levels_hierarchy() {
+        let a = SubArrayAddr { group: 0, bank: 0, mat: 0, sub: 0 };
+        assert_eq!(tree_levels(a, a), 0);
+        let m = SubArrayAddr { mat: 1, ..a };
+        assert_eq!(tree_levels(a, m), 1);
+        let b = SubArrayAddr { bank: 1, ..a };
+        assert_eq!(tree_levels(a, b), 2);
+        let g = SubArrayAddr { group: 1, ..a };
+        assert_eq!(tree_levels(a, g), 3);
+    }
+
+    #[test]
+    fn transfer_costs_scale() {
+        let h = HTree::default();
+        let a = SubArrayAddr { group: 0, bank: 0, mat: 0, sub: 0 };
+        let g = SubArrayAddr { group: 1, ..a };
+        let (e1, l1) = h.transfer(a, g, 512);
+        let (e2, _) = h.transfer(a, g, 1024);
+        assert!((e2 / e1 - 2.0).abs() < 1e-9);
+        assert!(l1 > 0.0);
+        let (e0, l0) = h.transfer(a, a, 512);
+        assert_eq!((e0, l0), (0.0, 0.0));
+    }
+
+    #[test]
+    fn io_is_full_depth() {
+        let h = HTree::default();
+        let (e, l) = h.io_transfer(100);
+        assert!((e - 100.0 * 3.0 * h.energy_pj_per_bit_level).abs() < 1e-12);
+        assert!((l - 0.9).abs() < 1e-12);
+    }
+}

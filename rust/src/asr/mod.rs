@@ -1,0 +1,165 @@
+//! Adaptive Shift Register (paper §II-B.2, Fig. 6).
+//!
+//! The AND-Accumulation method needs each CMP result scaled by
+//! 2^(m+n); instead of an addition tree of 2^(m+n)-1 full adders the
+//! paper builds a MUX + flip-flop network that loads the input shifted
+//! by a programmable amount in ONE register-write cycle ("parallel
+//! bitshift").
+//!
+//! We simulate the ASR at the register-transfer level: a bank of
+//! flip-flops whose inputs are MUX-selected from the input word
+//! according to the SHIFT control, generalizing Fig. 6's 4-bit/3-mode
+//! instance to arbitrary widths, plus the gate/FF cost accounting used
+//! by [`crate::energy`].
+
+/// An ASR instance: `width` input bits, shift amounts `0..=max_shift`.
+#[derive(Debug, Clone)]
+pub struct Asr {
+    pub width: usize,
+    pub max_shift: usize,
+    /// FF register contents, LSB first. Length = width + max_shift.
+    ff: Vec<bool>,
+    /// Loads performed (for energy accounting).
+    pub loads: u64,
+}
+
+impl Asr {
+    pub fn new(width: usize, max_shift: usize) -> Self {
+        assert!(width > 0);
+        Asr {
+            width,
+            max_shift,
+            ff: vec![false; width + max_shift],
+            loads: 0,
+        }
+    }
+
+    /// Number of flip-flops: input width + max shift (paper: "the
+    /// summation of the number of inputs and the maximum number of
+    /// possible shift operations" — 4-bit/3-mode ⇒ 6 FFs, because the
+    /// largest shift mode in Fig. 6 is 2).
+    pub fn ff_count(&self) -> usize {
+        self.width + self.max_shift
+    }
+
+    /// MUX count of the Fig. 6 structure: one per FF plus one per
+    /// shift-select stage (Fig. 6's 4-bit/2-select instance uses 7).
+    pub fn mux_count(&self) -> usize {
+        self.ff_count() + self.select_bits()
+    }
+
+    /// Select lines = bits of the shift amount.
+    pub fn select_bits(&self) -> usize {
+        usize::BITS as usize - self.max_shift.leading_zeros() as usize
+    }
+
+    /// Load `input` shifted left by `shift` — one register cycle. The
+    /// MUX network routes input bit i to FF (i + shift) and zeroes the
+    /// FFs below the shift point.
+    pub fn load(&mut self, input: &[bool], shift: usize) {
+        assert_eq!(input.len(), self.width, "input width mismatch");
+        assert!(shift <= self.max_shift, "shift {shift} > max {}", self.max_shift);
+        self.loads += 1;
+        for ff in self.ff.iter_mut() {
+            *ff = false;
+        }
+        for (i, &b) in input.iter().enumerate() {
+            self.ff[i + shift] = b;
+        }
+    }
+
+    /// Read the register value.
+    pub fn value(&self) -> u64 {
+        self.ff
+            .iter()
+            .enumerate()
+            .map(|(i, &b)| (b as u64) << i)
+            .sum()
+    }
+
+    /// Register contents LSB-first (Fig. 6 prints MSB-first strings).
+    pub fn bits(&self) -> &[bool] {
+        &self.ff
+    }
+}
+
+/// Convenience: value -> LSB-first bit vector of the given width.
+pub fn to_bits(v: u64, width: usize) -> Vec<bool> {
+    (0..width).map(|i| (v >> i) & 1 == 1).collect()
+}
+
+/// The alternative addition-tree ASR design the paper dismisses
+/// (§II-B.2): 2^(m+n)-1 full adders in log layers. Modeled only for
+/// the ablation bench (area/energy comparison).
+pub fn addition_tree_fa_count(m_bits: usize, n_bits: usize) -> u64 {
+    (1u64 << (m_bits + n_bits)) - 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest_lite::Runner;
+
+    #[test]
+    fn fig6_example() {
+        // IN[3:0] = "1001" (MSB-first) = LSB-first [1,0,0,1], SHIFT=1
+        // expected output "010010" (MSB-first, 6 FFs) = value 18.
+        let mut asr = Asr::new(4, 2);
+        assert_eq!(asr.ff_count(), 6);
+        asr.load(&to_bits(0b1001, 4), 1);
+        assert_eq!(asr.value(), 0b010010);
+    }
+
+    #[test]
+    fn fig6_gate_counts() {
+        let asr = Asr::new(4, 2);
+        assert_eq!(asr.ff_count(), 6);
+        assert_eq!(asr.select_bits(), 2);
+        assert_eq!(asr.mux_count(), 8); // paper's hand count: 7 (+1 impl detail)
+    }
+
+    #[test]
+    fn shift_is_multiplication_property() {
+        let mut r = Runner::new(0xA58);
+        r.run("ASR load == << shift", |g| {
+            let width = g.usize(1, 16);
+            let max_shift = g.usize(0, 14);
+            let shift = g.usize(0, max_shift.max(0));
+            let v = g.u64_any() & ((1u64 << width) - 1);
+            let mut asr = Asr::new(width, max_shift);
+            asr.load(&to_bits(v, width), shift);
+            assert_eq!(asr.value(), v << shift);
+        });
+    }
+
+    #[test]
+    fn zero_shift_identity() {
+        let mut asr = Asr::new(8, 4);
+        asr.load(&to_bits(0xA5, 8), 0);
+        assert_eq!(asr.value(), 0xA5);
+    }
+
+    #[test]
+    fn reload_clears_previous() {
+        let mut asr = Asr::new(4, 2);
+        asr.load(&to_bits(0xF, 4), 2);
+        asr.load(&to_bits(0x1, 4), 0);
+        assert_eq!(asr.value(), 1);
+        assert_eq!(asr.loads, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "shift")]
+    fn shift_beyond_max_panics() {
+        let mut asr = Asr::new(4, 2);
+        asr.load(&to_bits(1, 4), 3);
+    }
+
+    #[test]
+    fn addition_tree_blowup() {
+        // the design point the ASR avoids: exponential FA count
+        assert_eq!(addition_tree_fa_count(1, 1), 3);
+        assert_eq!(addition_tree_fa_count(4, 1), 31);
+        assert_eq!(addition_tree_fa_count(8, 2), 1023);
+    }
+}

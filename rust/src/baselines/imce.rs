@@ -1,0 +1,223 @@
+//! IMCE baseline [12]: bit-wise in-memory convolution on the same
+//! SOT-MRAM sub-array substrate, with AND-bitcount accumulation.
+//!
+//! §II's critique, which this model quantifies: "bitcount and bitshift
+//! are directly implemented using serial counter and shifter units.
+//! ... such module-by-module mapping not only degrades the bit-wise
+//! convolution performance in hardware, but also imposes a large
+//! in-memory data-transfer due to its intrinsic serial operations."
+//!
+//! The AND phase is identical to the proposed design (same sub-array
+//! substrate); only the accumulation datapath differs:
+//! * bitcount: a serial counter consuming the 512-bit AND row in
+//!   `cols / counter_lanes` cycles (vs the compressor's 1);
+//! * bitshift: a serial shifter taking (m + n - 2) cycles per partial
+//!   (vs the ASR's single-cycle parallel load);
+//! * each serial pass re-reads the result row from the array — the
+//!   "large in-memory data-transfer".
+
+use crate::accel::{
+    epu_fp_layer_cost, layer_bits, layer_ops, Accelerator, RunEstimate,
+};
+use crate::arch::{ChipOrg, HTree};
+use crate::cnn::Model;
+use crate::device::SotCosts;
+use crate::energy::{tech45, AreaModel, CostBreakdown};
+
+/// IMCE-like configuration.
+#[derive(Debug, Clone)]
+pub struct Imce {
+    pub org: ChipOrg,
+    pub costs: SotCosts,
+    pub htree: HTree,
+    pub cycle_ns: f64,
+    /// Bits the serial counter consumes per cycle.
+    pub counter_lanes: u64,
+    pub epu_quant_pj: f64,
+    pub epu_bn_act_pj: f64,
+}
+
+impl Default for Imce {
+    fn default() -> Self {
+        Imce {
+            org: ChipOrg::default(),
+            costs: SotCosts::default(),
+            htree: HTree::default(),
+            cycle_ns: 1.1,
+            counter_lanes: 64,
+            epu_quant_pj: 0.02,
+            epu_bn_act_pj: 0.05,
+        }
+    }
+}
+
+impl Imce {
+    /// Area: same sub-array sizing rule as the proposed design but the
+    /// digital under-array is just the counter + shifter (much smaller
+    /// than compressor + ASR + NV-FA — Table II shows IMCE's area
+    /// advantage).
+    pub fn area(&self, model: &Model, w_bits: u32, a_bits: u32) -> AreaModel {
+        let helper = crate::accel::Proposed {
+            org: self.org.clone(),
+            ..Default::default()
+        };
+        let subs = helper.subarrays_used(model, w_bits, a_bits) as f64;
+        let mut a = AreaModel::default();
+        let cell = tech45::cell_mm2(tech45::SOT_CELL_F2);
+        let array = subs * cell * self.org.subarray.bits() as f64;
+        a.add("sot_arrays", array);
+        a.add("periphery", array * 0.35);
+        // counter (10-bit) + shifter (16-bit) per sub-array
+        let digital_um2 =
+            10.0 * (tech45::FF_UM2 + tech45::FA_UM2) + 16.0 * tech45::FF_UM2;
+        a.add("counter_shifter", subs * digital_um2 * 1e-6);
+        a.add("epu", 0.002);
+        a
+    }
+}
+
+impl Accelerator for Imce {
+    fn name(&self) -> &'static str {
+        "imce"
+    }
+
+    fn estimate(
+        &self,
+        model: &Model,
+        w_bits: u32,
+        a_bits: u32,
+        batch: usize,
+    ) -> RunEstimate {
+        let mut cost = CostBreakdown::new();
+        let cols = self.org.subarray.cols as f64;
+        let c = &self.costs;
+        for l in &model.layers {
+            let Some((p, k, f)) = l.gemm_shape() else { continue };
+            if !l.is_quant() {
+                epu_fp_layer_cost(l, batch, &mut cost);
+                continue;
+            }
+            let (n, m) = layer_bits(l, w_bits, a_bits);
+            let ops = layer_ops(&self.org, p, k, f, m, n, batch);
+
+            // AND phase identical to the proposed design.
+            let and_e = ops.and_rows as f64
+                * cols
+                * (c.logic_energy_pj_per_bit + c.write_energy_pj_per_bit);
+            let and_cycles =
+                (ops.and_rows as f64 / ops.streams as f64) * 2.0;
+            cost.add("and_phase", and_e, and_cycles * self.cycle_ns);
+
+            // Serial bitcount: the in-memory counter walks the AND
+            // result with sequential read-modify-write micro-ops (the
+            // "large in-memory data-transfer due to its intrinsic
+            // serial operations", §II) — every counted bit pays a
+            // sense AND a write like any other array op, where the
+            // proposed compressor pays one logic-gate pass.
+            let count_cycles_per = cols / self.counter_lanes as f64;
+            let count_cycles = ops.cmp_ops as f64 * count_cycles_per
+                / ops.streams as f64;
+            let count_e = ops.cmp_ops as f64
+                * (cols
+                    * (c.read_energy_pj_per_bit
+                        + c.write_energy_pj_per_bit)
+                    + count_cycles_per * 10.0 * tech45::FF_CLOCK_PJ);
+            cost.add(
+                "serial_counter",
+                count_e,
+                count_cycles * self.cycle_ns,
+            );
+
+            // Serial shifter: (m + n - 2) cycles per partial.
+            let shifts = (m + n).saturating_sub(2).max(1) as f64;
+            let shift_cycles =
+                ops.partials as f64 * shifts / ops.streams as f64;
+            let shift_e = ops.partials as f64
+                * shifts
+                * 16.0
+                * tech45::FF_CLOCK_PJ;
+            cost.add(
+                "serial_shifter",
+                shift_e,
+                shift_cycles * self.cycle_ns,
+            );
+
+            // Volatile accumulate (no NV-FA => no resilience, but also
+            // no checkpoint energy).
+            cost.add_energy_only(
+                "adder",
+                ops.partials as f64 * 32.0 * tech45::FA_PJ,
+            );
+
+            // Operand loading + H-tree + EPU: identical structure.
+            let wr_e = (ops.input_writes + ops.weight_writes) as f64
+                * cols
+                * c.write_energy_pj_per_bit;
+            let wr_cycles = (ops.input_writes + ops.weight_writes)
+                as f64
+                / ops.streams as f64;
+            cost.add("operand_write", wr_e, wr_cycles * self.cycle_ns);
+            let (cnt_e, _) = self.htree.io_transfer(ops.partials * 16);
+            let (in_e, in_l) =
+                self.htree.io_transfer((batch * p * k) as u64);
+            cost.add("htree", cnt_e + in_e, in_l);
+            cost.add_energy_only(
+                "epu",
+                (batch * p * k) as f64 * self.epu_quant_pj
+                    / f.max(1) as f64
+                    + (batch * p * f) as f64 * self.epu_bn_act_pj,
+            );
+        }
+        RunEstimate {
+            design: self.name(),
+            cost,
+            area: self.area(model, w_bits, a_bits),
+            batch,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::Proposed;
+    use crate::cnn;
+
+    #[test]
+    fn imce_slower_than_proposed_same_substrate() {
+        let m = cnn::svhn_net();
+        let i = Imce::default().estimate(&m, 1, 4, 1);
+        let p = Proposed::default().estimate(&m, 1, 4, 1);
+        // AND phases are identical...
+        let (ia, _) = i.cost.component("and_phase").unwrap();
+        let (pa, _) = p.cost.component("and_phase").unwrap();
+        assert!((ia - pa).abs() < 1e-6 * pa);
+        // ...the serial accumulation is the gap (Fig. 10: ~3x).
+        assert!(i.cost.latency_ns > 1.5 * p.cost.latency_ns);
+    }
+
+    #[test]
+    fn serial_counter_dominates_latency() {
+        let m = cnn::svhn_net();
+        let i = Imce::default().estimate(&m, 1, 8, 1);
+        let (_, count_l) = i.cost.component("serial_counter").unwrap();
+        let (_, and_l) = i.cost.component("and_phase").unwrap();
+        assert!(count_l > and_l);
+    }
+
+    #[test]
+    fn no_nv_checkpoint_energy() {
+        let m = cnn::svhn_net();
+        let i = Imce::default().estimate(&m, 1, 1, 1);
+        assert!(i.cost.component("nvfa").is_none());
+        assert!(i.cost.component("adder").is_some());
+    }
+
+    #[test]
+    fn area_below_proposed() {
+        let m = cnn::svhn_net();
+        let i = Imce::default().area(&m, 1, 1);
+        let p = Proposed::default().area(&m, 1, 1);
+        assert!(i.total_mm2 < p.total_mm2);
+    }
+}

@@ -1,0 +1,132 @@
+//! Baseline accelerator models the paper compares against (§III-C/D/E):
+//!
+//! * [`imce::Imce`]   — IMCE [12]: same SOT-MRAM sub-array substrate,
+//!   but accumulation via serial counter + serial shifter (the
+//!   "module-by-module mapping" §II criticizes).
+//! * [`reram::Reram`] — PRIME-like ReRAM analog crossbar [6]: limited
+//!   bit levels per cell force matrix splitting; ADC-dominated.
+//! * [`asic::Asic`]   — YodaNN-like CMOS ASIC [21]: 8x8 binary-weight
+//!   tiles fed from eDRAM; pays the compute/data-movement mismatch.
+//!
+//! Every model implements [`crate::accel::Accelerator`], so the bench
+//! harnesses sweep all four designs uniformly.
+
+pub mod asic;
+pub mod imce;
+pub mod reram;
+
+pub use asic::Asic;
+pub use imce::Imce;
+pub use reram::Reram;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::{Accelerator, Proposed};
+    use crate::cnn;
+
+    /// The paper's headline ordering must hold for the SVHN model on
+    /// area-normalized energy-efficiency AND area-normalized
+    /// throughput (Figs. 9/10): proposed > IMCE > ReRAM > ASIC.
+    #[test]
+    fn headline_ordering_fig9_fig10() {
+        let model = cnn::svhn_net();
+        let proposed = Proposed::default();
+        let imce = Imce::default();
+        let reram = Reram::default();
+        let asic = Asic::default();
+        for (w, a) in cnn::SWEEP_CONFIGS {
+            let p = proposed.estimate(&model, w, a, 8);
+            let i = imce.estimate(&model, w, a, 8);
+            let r = reram.estimate(&model, w, a, 8);
+            let c = asic.estimate(&model, w, a, 8);
+            assert!(
+                p.eff_per_mm2() > i.eff_per_mm2(),
+                "W{w}:I{a} proposed eff {} <= imce {}",
+                p.eff_per_mm2(),
+                i.eff_per_mm2()
+            );
+            assert!(i.eff_per_mm2() > r.eff_per_mm2(), "W{w}:I{a}");
+            assert!(p.fps_per_mm2() > i.fps_per_mm2(), "W{w}:I{a}");
+            assert!(i.fps_per_mm2() > r.fps_per_mm2(), "W{w}:I{a}");
+            assert!(r.fps_per_mm2() > c.fps_per_mm2(), "W{w}:I{a}");
+        }
+        // ReRAM vs ASIC: the paper's 5.4x-vs-9.7x gap is an AVERAGE
+        // over configs (individual W:I points may cross as ReRAM's
+        // input-bit serialization bites at high I); assert the
+        // geometric-mean ordering.
+        let geo = |d: &dyn Accelerator| {
+            cnn::SWEEP_CONFIGS
+                .iter()
+                .map(|&(w, a)| d.estimate(&model, w, a, 8).eff_per_mm2().ln())
+                .sum::<f64>()
+                .exp()
+        };
+        assert!(geo(&reram) > geo(&asic), "ReRAM below ASIC on average");
+    }
+
+    /// Factor bands from the abstract: ~2.1x/5.4x/9.7x energy and
+    /// ~3x/9x/13.5x speed. The substrate is a simulator, not the
+    /// authors' testbed, so we assert generous bands around the
+    /// paper's factors (shape fidelity, not absolute agreement).
+    #[test]
+    fn headline_factor_bands() {
+        let model = cnn::svhn_net();
+        let p = Proposed::default().estimate(&model, 1, 4, 8);
+        let i = Imce::default().estimate(&model, 1, 4, 8);
+        let r = Reram::default().estimate(&model, 1, 4, 8);
+        let c = Asic::default().estimate(&model, 1, 4, 8);
+
+        let e_imce = p.eff_per_mm2() / i.eff_per_mm2();
+        let e_reram = p.eff_per_mm2() / r.eff_per_mm2();
+        let e_asic = p.eff_per_mm2() / c.eff_per_mm2();
+        assert!((1.3..4.0).contains(&e_imce), "vs IMCE {e_imce}");
+        assert!((2.5..13.0).contains(&e_reram), "vs ReRAM {e_reram}");
+        assert!((4.5..20.0).contains(&e_asic), "vs ASIC {e_asic}");
+
+        let s_imce = p.fps_per_mm2() / i.fps_per_mm2();
+        let s_reram = p.fps_per_mm2() / r.fps_per_mm2();
+        let s_asic = p.fps_per_mm2() / c.fps_per_mm2();
+        assert!((1.5..6.0).contains(&s_imce), "vs IMCE {s_imce}");
+        assert!((4.0..18.0).contains(&s_reram), "vs ReRAM {s_reram}");
+        assert!((6.0..27.0).contains(&s_asic), "vs ASIC {s_asic}");
+    }
+
+    /// Table II shape: BCNN (1:1) per-image energy ordering
+    /// ReRAM > IMCE > proposed on all three datasets' models.
+    #[test]
+    fn table2_energy_ordering() {
+        for model in [cnn::alexnet(), cnn::svhn_net(), cnn::lenet()] {
+            let p = Proposed::default().estimate(&model, 1, 1, 1);
+            let i = Imce::default().estimate(&model, 1, 1, 1);
+            let r = Reram::default().estimate(&model, 1, 1, 1);
+            assert!(
+                r.uj_per_frame() > i.uj_per_frame(),
+                "{}: reram {} <= imce {}",
+                model.name,
+                r.uj_per_frame(),
+                i.uj_per_frame()
+            );
+            assert!(
+                i.uj_per_frame() > p.uj_per_frame(),
+                "{}: imce {} <= proposed {}",
+                model.name,
+                i.uj_per_frame(),
+                p.uj_per_frame()
+            );
+        }
+    }
+
+    /// Table II area shape: ReRAM biggest; proposed carries more
+    /// digital overhead than IMCE ("larger overhead to the memory
+    /// chip") but stays well under ReRAM.
+    #[test]
+    fn table2_area_ordering() {
+        let model = cnn::alexnet();
+        let p = Proposed::default().estimate(&model, 1, 1, 1);
+        let i = Imce::default().estimate(&model, 1, 1, 1);
+        let r = Reram::default().estimate(&model, 1, 1, 1);
+        assert!(r.area.total_mm2 > p.area.total_mm2);
+        assert!(p.area.total_mm2 > i.area.total_mm2);
+    }
+}

@@ -1,0 +1,221 @@
+//! ReRAM baseline [6, 8]: PRIME-like analog crossbar accelerator.
+//!
+//! 256x256 1T1R crossbars compute analog dot products: a weight matrix
+//! column is programmed as conductances, input bits drive word lines,
+//! and shared reconfigurable sense amplifiers (8 per mat, 8-bit)
+//! digitize the bit-line currents. The paper's two critique points,
+//! both modeled here:
+//!
+//! * **matrix splitting** — ReRAM cells hold `bits_per_cell` levels
+//!   (default 2), so an n-bit weight matrix occupies ceil(n/2)
+//!   crossbar copies, and signed weights need a positive and a
+//!   negative array ("excessive sub-arrays are occupied. This can
+//!   further limit parallelism");
+//! * **ADC serialization** — 256 columns share 8 SAs, so one crossbar
+//!   pass takes 32 conversion slots per input bit, and input bits
+//!   stream serially (m cycles).
+
+use crate::accel::{
+    epu_fp_layer_cost, layer_bits, Accelerator, RunEstimate,
+};
+use crate::cnn::Model;
+use crate::device::ReramCell;
+use crate::energy::{tech45, AreaModel, CostBreakdown};
+
+/// PRIME-like configuration.
+#[derive(Debug, Clone)]
+pub struct Reram {
+    pub cell: ReramCell,
+    /// Crossbar dimension (rows == cols).
+    pub xbar: usize,
+    /// Fully-functional crossbars available (paper: 64).
+    pub xbars_available: usize,
+    /// Shared SAs (ADCs) per crossbar.
+    pub adcs_per_xbar: usize,
+    /// One ADC conversion [ns] / [pJ] (8-bit SAR-class at 45 nm).
+    pub adc_ns: f64,
+    pub adc_pj: f64,
+    /// DAC/word-line drive energy per row per pass [pJ].
+    pub drive_pj: f64,
+    /// Analog dot-product energy per cell per pass [pJ].
+    pub cell_compute_pj: f64,
+}
+
+impl Default for Reram {
+    fn default() -> Self {
+        Reram {
+            cell: ReramCell::default(),
+            xbar: 256,
+            xbars_available: 64,
+            adcs_per_xbar: 8,
+            adc_ns: 5.0,
+            // PRIME's "8-bit reconfigurable SA" is a counting-style
+            // multi-level sense: one 8-bit conversion sweeps up to 2^8
+            // reference levels, so the effective energy is two orders
+            // above a single binary sense (~0.5 pJ x ~128 levels avg).
+            adc_pj: 40.0,
+            drive_pj: 0.05,
+            cell_compute_pj: 0.001,
+        }
+    }
+}
+
+impl Reram {
+    /// Crossbar copies one layer's weights occupy after splitting.
+    fn xbar_copies(&self, k: usize, f: usize, n_bits: u32) -> u64 {
+        let tiles_k = k.div_ceil(self.xbar) as u64;
+        let tiles_f = f.div_ceil(self.xbar) as u64;
+        let split = (n_bits as u64).div_ceil(self.cell.bits_per_cell as u64);
+        // x2: differential pair for signed weights.
+        tiles_k * tiles_f * split * 2
+    }
+
+    pub fn area(&self, model: &Model, w_bits: u32, a_bits: u32) -> AreaModel {
+        let mut total_xbars = 0u64;
+        for l in &model.layers {
+            if !l.is_quant() {
+                continue;
+            }
+            if let Some((_, k, f)) = l.gemm_shape() {
+                let (n, _) = layer_bits(l, w_bits, a_bits);
+                total_xbars += self.xbar_copies(k, f, n);
+            }
+        }
+        let mut a = AreaModel::default();
+        let cell = tech45::cell_mm2(tech45::RERAM_CELL_F2);
+        let arrays =
+            total_xbars as f64 * cell * (self.xbar * self.xbar) as f64;
+        a.add("reram_arrays", arrays);
+        // ADCs are the area hog in analog PIM: ~1000 µm² per shared
+        // 8-bit reconfigurable SA at 45 nm.
+        a.add(
+            "adc",
+            total_xbars as f64 * self.adcs_per_xbar as f64 * 1000.0 * 1e-6,
+        );
+        a.add("periphery", arrays * 0.5); // DACs, drivers, mux trees
+        a
+    }
+}
+
+impl Accelerator for Reram {
+    fn name(&self) -> &'static str {
+        "reram"
+    }
+
+    fn estimate(
+        &self,
+        model: &Model,
+        w_bits: u32,
+        a_bits: u32,
+        batch: usize,
+    ) -> RunEstimate {
+        let mut cost = CostBreakdown::new();
+        for l in &model.layers {
+            let Some((p, k, f)) = l.gemm_shape() else { continue };
+            if !l.is_quant() {
+                epu_fp_layer_cost(l, batch, &mut cost);
+                continue;
+            }
+            let (n, m) = layer_bits(l, w_bits, a_bits);
+            let copies = self.xbar_copies(k, f, n);
+            let passes = (batch * p) as u64 * m as u64; // input bits serial
+
+            // Analog compute: every pass drives up to `xbar` rows and
+            // integrates k*f cells (per tile copy).
+            let cells = (k.min(self.xbar) * f.min(self.xbar)) as f64;
+            let compute_e = passes as f64
+                * copies as f64
+                * (self.xbar.min(k) as f64 * self.drive_pj
+                    + cells * self.cell_compute_pj);
+            // ADC: the counting SAs digitize the full crossbar width
+            // every pass (the mat senses all bit lines regardless of
+            // how many filters the layer actually maps); the
+            // `adcs_per_xbar` shared SAs serialize conversions in time
+            // but each conversion pays full energy.
+            let active_cols = self.xbar as f64;
+            let adc_e =
+                passes as f64 * copies as f64 * active_cols * self.adc_pj;
+
+            // Parallelism: different passes run on different crossbar
+            // sets, but the split copies of the SAME weights consume
+            // arrays without adding throughput — with `copies` arrays
+            // per logical matrix only available/copies independent
+            // pass groups fit (the paper's "excessive sub-arrays are
+            // occupied. This can further limit parallelism").
+            let parallel = (self.xbars_available as u64)
+                .min(passes.max(1) * copies.max(1))
+                .max(1);
+            let slots = (active_cols / self.adcs_per_xbar as f64).ceil();
+            let pass_ns = slots * self.adc_ns;
+            let lat =
+                passes as f64 * copies as f64 / parallel as f64 * pass_ns;
+            cost.add("xbar_compute", compute_e, 0.0);
+            cost.add("adc", adc_e, lat);
+
+            // Weight programming (amortized once per batch): every
+            // crossbar COPY is programmed wholesale — the matrix-
+            // splitting waste (signed pairs, MLC splits, tile padding)
+            // pays real SET energy, not just the logical weight count.
+            let prog_e = copies as f64
+                * (self.xbar * self.xbar) as f64
+                * self.cell.set_energy_pj;
+            cost.add_energy_only("programming", prog_e / batch as f64);
+
+            // Digital aggregation of split tiles + shift-add of input
+            // bits.
+            cost.add_energy_only(
+                "shift_add",
+                passes as f64 * f as f64 * 0.01,
+            );
+        }
+        RunEstimate {
+            design: self.name(),
+            cost,
+            area: self.area(model, w_bits, a_bits),
+            batch,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn;
+
+    #[test]
+    fn matrix_splitting_counts() {
+        let r = Reram::default();
+        // K=144, F=16, 1-bit weights -> 1 tile * 1 split * 2 signed
+        assert_eq!(r.xbar_copies(144, 16, 1), 2);
+        // 8-bit weights with 2-bit cells -> 4 splits
+        assert_eq!(r.xbar_copies(144, 16, 8), 8);
+        // K=6400 -> 25 row tiles
+        assert_eq!(r.xbar_copies(6400, 128, 1), 50);
+    }
+
+    #[test]
+    fn adc_dominates_energy() {
+        let m = cnn::svhn_net();
+        let e = Reram::default().estimate(&m, 1, 4, 1);
+        let (adc, _) = e.cost.component("adc").unwrap();
+        let (xbar, _) = e.cost.component("xbar_compute").unwrap();
+        assert!(adc > xbar, "adc={adc} xbar={xbar}");
+    }
+
+    #[test]
+    fn input_bits_serialize_latency() {
+        let m = cnn::svhn_net();
+        let a4 = Reram::default().estimate(&m, 1, 4, 1);
+        let a8 = Reram::default().estimate(&m, 1, 8, 1);
+        let ratio = a8.cost.latency_ns / a4.cost.latency_ns;
+        assert!((1.5..2.5).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn area_includes_split_copies() {
+        let m = cnn::alexnet();
+        let a1 = Reram::default().area(&m, 1, 1).total_mm2;
+        let a8 = Reram::default().area(&m, 8, 8).total_mm2;
+        assert!(a8 > 3.0 * a1);
+    }
+}

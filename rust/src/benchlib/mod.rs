@@ -1,0 +1,203 @@
+//! Benchmark harness (the image vendors no `criterion`).
+//!
+//! Provides warmed-up, repeated timing with percentile statistics and
+//! markdown table reporting. Every paper table/figure bench under
+//! `rust/benches/` is built on this module; the harness also powers the
+//! §Perf microbenches.
+//!
+//! ```no_run
+//! use pims::benchlib::Bench;
+//! let mut b = Bench::new("fig9_energy");
+//! b.iter("proposed_b1", || { /* workload */ });
+//! b.report();
+//! ```
+
+use std::time::{Duration, Instant};
+
+/// One measured series.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl Measurement {
+    fn from_samples(name: &str, mut ns: Vec<f64>) -> Self {
+        ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = ns.len();
+        let pct = |p: f64| ns[((n as f64 - 1.0) * p) as usize];
+        Measurement {
+            name: name.to_string(),
+            iters: n,
+            mean_ns: ns.iter().sum::<f64>() / n as f64,
+            p50_ns: pct(0.50),
+            p95_ns: pct(0.95),
+            p99_ns: pct(0.99),
+            min_ns: ns[0],
+            max_ns: ns[n - 1],
+        }
+    }
+
+    pub fn mean(&self) -> Duration {
+        Duration::from_nanos(self.mean_ns as u64)
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Bench group: times closures and prints a markdown report.
+pub struct Bench {
+    pub group: String,
+    warmup: Duration,
+    target_time: Duration,
+    max_iters: usize,
+    results: Vec<Measurement>,
+    /// Extra non-timing rows (energy/area model outputs etc.) printed
+    /// alongside the timings — paper tables mix both.
+    notes: Vec<(String, String)>,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Self {
+        // Keep default budgets small: the full bench suite covers every
+        // paper table/figure and must finish in minutes on one core.
+        Bench {
+            group: group.to_string(),
+            warmup: Duration::from_millis(50),
+            target_time: Duration::from_millis(300),
+            max_iters: 1000,
+            results: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn with_budget(mut self, warmup_ms: u64, target_ms: u64) -> Self {
+        self.warmup = Duration::from_millis(warmup_ms);
+        self.target_time = Duration::from_millis(target_ms);
+        self
+    }
+
+    /// Time `f` until the target budget is reached (at least 3 iters).
+    pub fn iter(&mut self, name: &str, mut f: impl FnMut()) -> &Measurement {
+        // Warmup.
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            f();
+        }
+        // Measure.
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while (start.elapsed() < self.target_time || samples.len() < 3)
+            && samples.len() < self.max_iters
+        {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_nanos() as f64);
+        }
+        self.results.push(Measurement::from_samples(name, samples));
+        self.results.last().unwrap()
+    }
+
+    /// Attach a non-timing result row (model outputs, ratios...).
+    pub fn note(&mut self, key: &str, value: impl std::fmt::Display) {
+        self.notes.push((key.to_string(), value.to_string()));
+    }
+
+    /// Print the markdown report to stdout.
+    pub fn report(&self) {
+        println!("\n## bench group: {}", self.group);
+        if !self.results.is_empty() {
+            println!(
+                "| case | iters | mean | p50 | p95 | p99 |\n\
+                 |---|---|---|---|---|---|"
+            );
+            for m in &self.results {
+                println!(
+                    "| {} | {} | {} | {} | {} | {} |",
+                    m.name,
+                    m.iters,
+                    fmt_ns(m.mean_ns),
+                    fmt_ns(m.p50_ns),
+                    fmt_ns(m.p95_ns),
+                    fmt_ns(m.p99_ns),
+                );
+            }
+        }
+        if !self.notes.is_empty() {
+            println!("\n| metric | value |\n|---|---|");
+            for (k, v) in &self.notes {
+                println!("| {k} | {v} |");
+            }
+        }
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value
+/// (criterion-style black_box; stable-rust friendly).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66.
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bench::new("t").with_budget(1, 5);
+        let m = b.iter("noop-ish", || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(m.iters >= 3);
+        assert!(m.mean_ns > 0.0);
+        assert!(m.p50_ns <= m.p99_ns);
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let m = Measurement::from_samples(
+            "x",
+            (1..=100).map(|i| i as f64).collect(),
+        );
+        assert_eq!(m.min_ns, 1.0);
+        assert_eq!(m.max_ns, 100.0);
+        assert!(m.p50_ns <= m.p95_ns && m.p95_ns <= m.p99_ns);
+    }
+
+    #[test]
+    fn notes_recorded() {
+        let mut b = Bench::new("t");
+        b.note("energy_uj", 471.8);
+        assert_eq!(b.notes.len(), 1);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5_000.0).contains("µs"));
+        assert!(fmt_ns(5_000_000.0).contains("ms"));
+        assert!(fmt_ns(5e9).contains(" s"));
+    }
+}

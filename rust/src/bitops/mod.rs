@@ -1,0 +1,295 @@
+//! Bit-plane arithmetic: the software ground truth for the paper's
+//! AND-Accumulation method (Eq. 1).
+//!
+//! Everything the PIM simulator computes bit-serially is cross-checked
+//! against these functions, and they are also the reference for the
+//! packed-u64 fast path used on the serving side.
+//!
+//! ```text
+//! I*W = sum_{m,n} 2^(m+n) CMP(AND(C_n(W), C_m(I)))
+//! ```
+//!
+//! where `C_k(X)` is the k-th bit-plane of the element vector X and
+//! `CMP` counts ones (the 4:2-compressor tree in hardware, `popcount`
+//! here).
+
+/// A bit-plane matrix: `planes[p]` holds plane p (LSB first) of a
+/// logical `rows x cols` matrix of k-bit unsigned codes, packed 64
+/// elements per u64 word, row-major.
+#[derive(Debug, Clone)]
+pub struct BitPlanes {
+    pub bits: usize,
+    pub rows: usize,
+    pub cols: usize,
+    words_per_row: usize,
+    /// `planes[p][r * words_per_row + w]`
+    planes: Vec<Vec<u64>>,
+}
+
+impl BitPlanes {
+    /// Decompose a row-major matrix of codes (`rows x cols`, each
+    /// `< 2^bits`) into packed bit-planes.
+    pub fn from_codes(codes: &[u32], rows: usize, cols: usize, bits: usize) -> Self {
+        assert_eq!(codes.len(), rows * cols, "codes length mismatch");
+        assert!(bits >= 1 && bits <= 32);
+        debug_assert!(
+            codes.iter().all(|&c| (c as u64) < (1u64 << bits)),
+            "code out of range for {bits}-bit planes"
+        );
+        let wpr = cols.div_ceil(64);
+        let mut planes = vec![vec![0u64; rows * wpr]; bits];
+        for r in 0..rows {
+            for c in 0..cols {
+                let code = codes[r * cols + c];
+                for (p, plane) in planes.iter_mut().enumerate() {
+                    if (code >> p) & 1 == 1 {
+                        plane[r * wpr + c / 64] |= 1u64 << (c % 64);
+                    }
+                }
+            }
+        }
+        BitPlanes { bits, rows, cols, words_per_row: wpr, planes }
+    }
+
+    /// Reconstruct the code at (row, col).
+    pub fn code_at(&self, row: usize, col: usize) -> u32 {
+        let mut v = 0u32;
+        for p in 0..self.bits {
+            let w = self.planes[p][row * self.words_per_row + col / 64];
+            v |= (((w >> (col % 64)) & 1) as u32) << p;
+        }
+        v
+    }
+
+    /// Reconstruct all codes (inverse of `from_codes`).
+    pub fn to_codes(&self) -> Vec<u32> {
+        let mut out = Vec::with_capacity(self.rows * self.cols);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.push(self.code_at(r, c));
+            }
+        }
+        out
+    }
+
+    /// One packed plane row.
+    pub fn plane_row(&self, plane: usize, row: usize) -> &[u64] {
+        let s = row * self.words_per_row;
+        &self.planes[plane][s..s + self.words_per_row]
+    }
+}
+
+/// CMP(AND(a, b)): popcount of the AND of two packed bit rows — the
+/// paper's compressor output for one plane pair.
+pub fn cmp_and(a: &[u64], b: &[u64]) -> u64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x & y).count_ones() as u64).sum()
+}
+
+/// Eq. (1) for one (input-row, weight-row) pair given pre-decomposed
+/// planes: `sum_{m,n} 2^(m+n) * CMP(AND(ip[m], wp[n]))`.
+pub fn and_accumulate(ip: &BitPlanes, i_row: usize, wp: &BitPlanes, w_row: usize) -> u64 {
+    debug_assert_eq!(ip.cols, wp.cols, "reduction length mismatch");
+    let mut acc = 0u64;
+    for m in 0..ip.bits {
+        let a = ip.plane_row(m, i_row);
+        for n in 0..wp.bits {
+            let b = wp.plane_row(n, w_row);
+            acc += cmp_and(a, b) << (m + n);
+        }
+    }
+    acc
+}
+
+/// Dense integer dot product — the independent "what it means" oracle.
+pub fn int_dot(a: &[u32], b: &[u32]) -> u64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(&x, &y)| x as u64 * y as u64).sum()
+}
+
+/// Bit-plane matmul: activations `[p x k]` (codes, m bits) times
+/// weights `[k x f]` (codes, n bits) -> `[p x f]` u64, entirely through
+/// the AND-Accumulation identity. Weight planes are decomposed from the
+/// TRANSPOSED weight matrix so each output needs only row-row ANDs —
+/// mirroring the paper's data organization step (Fig. 3) where C_n(W)
+/// rows are written beneath the C_m(I) rows of the same sub-array.
+pub fn bitwise_matmul(
+    ia: &[u32],
+    p: usize,
+    k: usize,
+    m_bits: usize,
+    iw: &[u32],
+    f: usize,
+    n_bits: usize,
+) -> Vec<u64> {
+    assert_eq!(ia.len(), p * k);
+    assert_eq!(iw.len(), k * f);
+    let ip = BitPlanes::from_codes(ia, p, k, m_bits);
+    // transpose weights to [f x k]
+    let mut wt = vec![0u32; f * k];
+    for r in 0..k {
+        for c in 0..f {
+            wt[c * k + r] = iw[r * f + c];
+        }
+    }
+    let wp = BitPlanes::from_codes(&wt, f, k, n_bits);
+    let mut out = vec![0u64; p * f];
+    for i in 0..p {
+        for j in 0..f {
+            out[i * f + j] = and_accumulate(&ip, i, &wp, j);
+        }
+    }
+    out
+}
+
+/// im2col patch extraction over integer codes, NHWC, matching
+/// `python/compile/kernels/ref.py::im2col` (row-major over kh, kw, C).
+#[allow(clippy::too_many_arguments)]
+pub fn im2col(
+    img: &[u32],
+    h: usize,
+    w: usize,
+    c: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+) -> (Vec<u32>, usize, usize) {
+    assert_eq!(img.len(), h * w * c);
+    let oh = (h + 2 * pad - kh) / stride + 1;
+    let ow = (w + 2 * pad - kw) / stride + 1;
+    let k = kh * kw * c;
+    let mut out = vec![0u32; oh * ow * k];
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let base = (oy * ow + ox) * k;
+            let mut idx = 0;
+            for ky in 0..kh {
+                for kx in 0..kw {
+                    let iy = oy * stride + ky;
+                    let ix = ox * stride + kx;
+                    for ch in 0..c {
+                        let v = if iy < pad || ix < pad {
+                            0
+                        } else {
+                            let (iy, ix) = (iy - pad, ix - pad);
+                            if iy >= h || ix >= w {
+                                0
+                            } else {
+                                img[(iy * w + ix) * c + ch]
+                            }
+                        };
+                        out[base + idx] = v;
+                        idx += 1;
+                    }
+                }
+            }
+        }
+    }
+    (out, oh, ow)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest_lite::Runner;
+
+    #[test]
+    fn roundtrip_codes() {
+        let codes: Vec<u32> = (0..6 * 70).map(|i| (i % 16) as u32).collect();
+        let bp = BitPlanes::from_codes(&codes, 6, 70, 4);
+        assert_eq!(bp.to_codes(), codes);
+    }
+
+    #[test]
+    fn cmp_and_counts_ones() {
+        assert_eq!(cmp_and(&[0b1011], &[0b0011]), 2);
+        assert_eq!(cmp_and(&[u64::MAX, 1], &[u64::MAX, 1]), 65);
+        assert_eq!(cmp_and(&[0], &[u64::MAX]), 0);
+    }
+
+    #[test]
+    fn and_accumulate_small_example() {
+        // I = [3, 1] (2-bit), W = [1, 1] (1-bit): dot = 4.
+        let ip = BitPlanes::from_codes(&[3, 1], 1, 2, 2);
+        let wp = BitPlanes::from_codes(&[1, 1], 1, 2, 1);
+        assert_eq!(and_accumulate(&ip, 0, &wp, 0), 4);
+    }
+
+    #[test]
+    fn eq1_equals_int_dot_property() {
+        let mut r = Runner::new(0xB17);
+        r.run("Eq.1 == integer dot", |g| {
+            let m_bits = g.usize(1, 8);
+            let n_bits = g.usize(1, 4);
+            let k = g.usize(1, 200);
+            let ia = g.codes(k, m_bits as u32);
+            let iw = g.codes(k, n_bits as u32);
+            let ip = BitPlanes::from_codes(&ia, 1, k, m_bits);
+            let wp = BitPlanes::from_codes(&iw, 1, k, n_bits);
+            assert_eq!(
+                and_accumulate(&ip, 0, &wp, 0),
+                int_dot(&ia, &iw),
+            );
+        });
+    }
+
+    #[test]
+    fn bitwise_matmul_equals_dense_property() {
+        let mut r = Runner::new(0xB18);
+        r.run("bitwise matmul == dense matmul", |g| {
+            let (p, k, f) = (g.usize(1, 6), g.usize(1, 40), g.usize(1, 5));
+            let m_bits = g.usize(1, 4);
+            let n_bits = g.usize(1, 2);
+            let ia = g.codes(p * k, m_bits as u32);
+            let iw = g.codes(k * f, n_bits as u32);
+            let got = bitwise_matmul(&ia, p, k, m_bits, &iw, f, n_bits);
+            for i in 0..p {
+                for j in 0..f {
+                    let col: Vec<u32> =
+                        (0..k).map(|r_| iw[r_ * f + j]).collect();
+                    assert_eq!(
+                        got[i * f + j],
+                        int_dot(&ia[i * k..(i + 1) * k], &col)
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn im2col_identity_kernel() {
+        // 1x1 kernel, no pad: patches == pixels.
+        let img: Vec<u32> = (0..9).collect();
+        let (patches, oh, ow) = im2col(&img, 3, 3, 1, 1, 1, 1, 0);
+        assert_eq!((oh, ow), (3, 3));
+        assert_eq!(patches, img);
+    }
+
+    #[test]
+    fn im2col_padding_zeroes_border() {
+        let img = vec![5u32; 4]; // 2x2x1
+        let (patches, oh, ow) = im2col(&img, 2, 2, 1, 3, 3, 1, 1);
+        assert_eq!((oh, ow), (2, 2));
+        // top-left patch: corners outside are 0
+        assert_eq!(patches[0], 0); // (-1,-1)
+        assert_eq!(patches[4], 5); // centre (0,0)
+    }
+
+    #[test]
+    fn im2col_stride() {
+        let img: Vec<u32> = (0..16).collect(); // 4x4x1
+        let (patches, oh, ow) = im2col(&img, 4, 4, 1, 2, 2, 2, 0);
+        assert_eq!((oh, ow), (2, 2));
+        // first patch = rows 0..2 x cols 0..2
+        assert_eq!(&patches[0..4], &[0, 1, 4, 5]);
+    }
+
+    #[test]
+    fn plane_rows_are_padded_to_word() {
+        let codes = vec![1u32; 65];
+        let bp = BitPlanes::from_codes(&codes, 1, 65, 1);
+        assert_eq!(bp.plane_row(0, 0).len(), 2);
+        assert_eq!(cmp_and(bp.plane_row(0, 0), bp.plane_row(0, 0)), 65);
+    }
+}

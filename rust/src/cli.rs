@@ -1,0 +1,286 @@
+//! Command-line parsing (no `clap` in the offline image).
+//!
+//! Grammar: `pims <subcommand> [--flag] [--key value] [--set a.b=c ...]
+//! [positional ...]`. Subcommands declare their options; unknown options
+//! are errors (not silently ignored), and `--help` output is generated
+//! from the declarations.
+
+use std::collections::BTreeMap;
+
+/// One declared option.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+}
+
+/// A declared subcommand.
+#[derive(Debug, Clone)]
+pub struct CommandSpec {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+/// Parsed invocation.
+#[derive(Debug, Clone)]
+pub struct Parsed {
+    pub command: String,
+    pub flags: BTreeMap<String, String>,
+    pub set_overrides: Vec<(String, String)>,
+    pub positional: Vec<String>,
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str) -> anyhow::Result<Option<usize>> {
+        match self.flags.get(name) {
+            None => Ok(None),
+            Some(v) => Ok(Some(v.parse().map_err(|_| {
+                anyhow::anyhow!("--{name}: expected integer, got '{v}'")
+            })?)),
+        }
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+}
+
+/// CLI definition + parser.
+pub struct Cli {
+    pub bin: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<CommandSpec>,
+}
+
+impl Cli {
+    pub fn new(bin: &'static str, about: &'static str) -> Self {
+        Cli { bin, about, commands: Vec::new() }
+    }
+
+    pub fn command(
+        mut self,
+        name: &'static str,
+        about: &'static str,
+        opts: Vec<OptSpec>,
+    ) -> Self {
+        self.commands.push(CommandSpec { name, about, opts });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} <command> [options]\n\nCOMMANDS:\n", self.bin, self.about, self.bin);
+        for c in &self.commands {
+            s.push_str(&format!("  {:<14} {}\n", c.name, c.about));
+        }
+        s.push_str("\nRun '<command> --help' for command options.\n");
+        s
+    }
+
+    fn command_usage(&self, spec: &CommandSpec) -> String {
+        let mut s = format!(
+            "{} {} — {}\n\nOPTIONS:\n",
+            self.bin, spec.name, spec.about
+        );
+        for o in &spec.opts {
+            let arg = if o.takes_value {
+                format!("--{} <v>", o.name)
+            } else {
+                format!("--{}", o.name)
+            };
+            let dflt = o
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("  {:<20} {}{}\n", arg, o.help, dflt));
+        }
+        s.push_str("  --set a.b=c          override a config key (repeatable)\n");
+        s.push_str("  --help               show this help\n");
+        s
+    }
+
+    /// Parse argv (without the binary name). `Err(msg)` carries a
+    /// user-facing message (help text or error).
+    pub fn parse(&self, args: &[String]) -> Result<Parsed, String> {
+        let mut it = args.iter().peekable();
+        let command = match it.next() {
+            None => return Err(self.usage()),
+            Some(c) if c == "--help" || c == "-h" || c == "help" => {
+                return Err(self.usage())
+            }
+            Some(c) => c.clone(),
+        };
+        let spec = self
+            .commands
+            .iter()
+            .find(|s| s.name == command)
+            .ok_or_else(|| {
+                format!("unknown command '{command}'\n\n{}", self.usage())
+            })?;
+
+        let mut parsed = Parsed {
+            command: command.clone(),
+            flags: BTreeMap::new(),
+            set_overrides: Vec::new(),
+            positional: Vec::new(),
+        };
+        // Seed defaults.
+        for o in &spec.opts {
+            if let Some(d) = o.default {
+                parsed.flags.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        while let Some(arg) = it.next() {
+            if arg == "--help" || arg == "-h" {
+                return Err(self.command_usage(spec));
+            }
+            if arg == "--set" {
+                let kv = it.next().ok_or("--set needs a key=value")?;
+                let eq =
+                    kv.find('=').ok_or("--set expects key=value")?;
+                parsed
+                    .set_overrides
+                    .push((kv[..eq].to_string(), kv[eq + 1..].to_string()));
+                continue;
+            }
+            if let Some(name) = arg.strip_prefix("--") {
+                // --key=value form
+                let (name, inline) = match name.find('=') {
+                    Some(p) => (&name[..p], Some(name[p + 1..].to_string())),
+                    None => (name, None),
+                };
+                let o = spec
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| {
+                        format!(
+                            "unknown option '--{name}' for '{command}'\n\n{}",
+                            self.command_usage(spec)
+                        )
+                    })?;
+                let value = if o.takes_value {
+                    match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| {
+                                format!("--{name} needs a value")
+                            })?
+                            .clone(),
+                    }
+                } else {
+                    if inline.is_some() {
+                        return Err(format!("--{name} takes no value"));
+                    }
+                    "true".to_string()
+                };
+                parsed.flags.insert(name.to_string(), value);
+            } else {
+                parsed.positional.push(arg.clone());
+            }
+        }
+        Ok(parsed)
+    }
+}
+
+/// Shorthand option constructors.
+pub fn opt(name: &'static str, help: &'static str) -> OptSpec {
+    OptSpec { name, takes_value: true, help, default: None }
+}
+
+pub fn opt_default(
+    name: &'static str,
+    help: &'static str,
+    default: &'static str,
+) -> OptSpec {
+    OptSpec { name, takes_value: true, help, default: Some(default) }
+}
+
+pub fn flag(name: &'static str, help: &'static str) -> OptSpec {
+    OptSpec { name, takes_value: false, help, default: None }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("pims", "test")
+            .command(
+                "serve",
+                "run server",
+                vec![
+                    opt_default("batch", "batch size", "8"),
+                    opt("artifacts", "artifact dir"),
+                    flag("verbose", "log more"),
+                ],
+            )
+            .command("sim", "simulate", vec![])
+    }
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_defaults_and_values() {
+        let p = cli().parse(&argv(&["serve", "--artifacts", "a/"])).unwrap();
+        assert_eq!(p.get("batch"), Some("8"));
+        assert_eq!(p.get("artifacts"), Some("a/"));
+        assert!(!p.has("verbose"));
+    }
+
+    #[test]
+    fn parses_flags_and_inline_eq() {
+        let p = cli()
+            .parse(&argv(&["serve", "--verbose", "--batch=16"]))
+            .unwrap();
+        assert!(p.has("verbose"));
+        assert_eq!(p.get("batch"), Some("16"));
+        assert_eq!(p.get_usize("batch").unwrap(), Some(16));
+    }
+
+    #[test]
+    fn set_overrides_collected() {
+        let p = cli()
+            .parse(&argv(&["serve", "--set", "a.b=3", "--set", "c=x"]))
+            .unwrap();
+        assert_eq!(
+            p.set_overrides,
+            vec![("a.b".into(), "3".into()), ("c".into(), "x".into())]
+        );
+    }
+
+    #[test]
+    fn unknown_command_and_option_rejected() {
+        assert!(cli().parse(&argv(&["bogus"])).is_err());
+        assert!(cli().parse(&argv(&["serve", "--bogus"])).is_err());
+    }
+
+    #[test]
+    fn help_paths() {
+        let top = cli().parse(&argv(&[])).unwrap_err();
+        assert!(top.contains("COMMANDS"));
+        let sub = cli().parse(&argv(&["serve", "--help"])).unwrap_err();
+        assert!(sub.contains("--batch"));
+    }
+
+    #[test]
+    fn positional_args() {
+        let p = cli().parse(&argv(&["sim", "trace.bin"])).unwrap();
+        assert_eq!(p.positional, vec!["trace.bin"]);
+    }
+
+    #[test]
+    fn bad_usize_is_error() {
+        let p = cli().parse(&argv(&["serve", "--batch", "x"])).unwrap();
+        assert!(p.get_usize("batch").is_err());
+    }
+}

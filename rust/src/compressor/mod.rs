@@ -1,0 +1,257 @@
+//! 4:2 compressor and compressor trees (paper §II-B.1, Fig. 5).
+//!
+//! The accumulation phase replaces IMCE's serial bitcount with a
+//! single-pass compressor tree: the parallel-AND result vector is
+//! popcounted by layers of 4:2 compressors (implemented in-array as
+//! one row of XOR/XNOR plus MUX stages — Fig. 5b), producing the CMP
+//! value of Eq. (1) in one array cycle instead of O(n) shift cycles.
+//!
+//! This module simulates the compressor at gate level (so the Fig. 5b
+//! MUX reformulation can be verified against the textbook two-FA
+//! implementation) and provides the tree-level popcount used by the
+//! accelerator model, with gate/cost accounting consumed by
+//! [`crate::energy`].
+
+/// Outputs of a single 4:2 compressor slice.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Comp42Out {
+    pub sum: bool,
+    pub carry: bool,
+    pub cout: bool,
+}
+
+impl Comp42Out {
+    /// Numeric value contributed: sum + 2*(carry + cout).
+    pub fn value(&self) -> u32 {
+        self.sum as u32 + 2 * (self.carry as u32 + self.cout as u32)
+    }
+}
+
+/// Textbook 4:2 compressor: two serially connected full adders
+/// (Fig. 5a). `x1+x2+x3+x4+cin = sum + 2*(carry+cout)`.
+pub fn comp42_two_fa(x: [bool; 4], cin: bool) -> Comp42Out {
+    // FA1: x1+x2+x3
+    let s1 = x[0] ^ x[1] ^ x[2];
+    let cout = (x[0] & x[1]) | (x[1] & x[2]) | (x[0] & x[2]);
+    // FA2: s1+x4+cin
+    let sum = s1 ^ x[3] ^ cin;
+    let carry = (s1 & x[3]) | (x[3] & cin) | (s1 & cin);
+    Comp42Out { sum, carry, cout }
+}
+
+/// Paper Eq. (2) / Fig. 5b: the XOR/XNOR-first-row + MUX reformulation
+/// that the SOT-MRAM sub-array implements with one in-memory XOR update
+/// plus MUX selects.
+pub fn comp42_mux(x: [bool; 4], cin: bool) -> Comp42Out {
+    let x12 = x[0] ^ x[1]; // first-row XOR
+    let x34 = x[2] ^ x[3];
+    let w = x12 ^ x34; // MUX-select chain
+    let sum = w ^ cin;
+    // carry = w ? cin : x4 (Eq. 2, MUX form)
+    let carry = if w { cin } else { x[3] };
+    // cout = x12 ? x3 : x1
+    let cout = if x12 { x[2] } else { x[0] };
+    Comp42Out { sum, carry, cout }
+}
+
+/// Gate-count / cost profile of one 4:2 compressor slice.
+///
+/// Fig. 5b form: 2 XOR/XNOR pairs in the first row (realized by one
+/// in-memory XOR update in the sub-array) + 3 MUXes.
+#[derive(Debug, Clone, Copy)]
+pub struct CompressorCosts {
+    pub xor_gates: usize,
+    pub mux_gates: usize,
+    /// Array cycles for one tree level (the paper's point: one cycle,
+    /// not bit-serial).
+    pub cycles_per_level: u64,
+}
+
+impl Default for CompressorCosts {
+    fn default() -> Self {
+        CompressorCosts { xor_gates: 3, mux_gates: 3, cycles_per_level: 1 }
+    }
+}
+
+/// Result of a tree popcount with accounting.
+#[derive(Debug, Clone)]
+pub struct TreeCount {
+    pub count: u64,
+    /// Tree depth in compressor levels.
+    pub levels: u64,
+    /// Total 4:2 slices evaluated.
+    pub slices: u64,
+}
+
+/// Popcount `bits.len()` inputs through a carry-save 4:2 compressor
+/// tree, tracking the level/slice counts the energy model charges.
+///
+/// Implementation note: we simulate the tree column-wise in carry-save
+/// form; functional output is validated against a plain popcount by
+/// property test (the hardware's answer must equal CMP of Eq. 1).
+pub fn tree_popcount(bits: &[bool]) -> TreeCount {
+    // Column 0 initially holds all the input bits; higher columns fill
+    // with carries as the tree reduces. Each level compresses every
+    // column's rank list 4->2 with 4:2 slices.
+    let mut columns: Vec<Vec<bool>> = vec![bits.to_vec()];
+    let mut levels = 0u64;
+    let mut slices = 0u64;
+    while columns.iter().any(|c| c.len() > 2) {
+        levels += 1;
+        let mut next: Vec<Vec<bool>> = vec![Vec::new(); columns.len() + 1];
+        for (ci, col) in columns.iter().enumerate() {
+            let mut it = col.chunks(4);
+            for chunk in &mut it {
+                match chunk.len() {
+                    4 => {
+                        slices += 1;
+                        let o = comp42_mux(
+                            [chunk[0], chunk[1], chunk[2], chunk[3]],
+                            false,
+                        );
+                        next[ci].push(o.sum);
+                        next[ci + 1].push(o.carry);
+                        next[ci + 1].push(o.cout);
+                    }
+                    3 => {
+                        // Remainder of 3 reduces through a full adder
+                        // (a 4:2 slice with x4 = cin = 0 degenerates to
+                        // one; without this a 3-deep column would pass
+                        // through unreduced forever).
+                        slices += 1;
+                        let s = chunk[0] ^ chunk[1] ^ chunk[2];
+                        let c = (chunk[0] & chunk[1])
+                            | (chunk[1] & chunk[2])
+                            | (chunk[0] & chunk[2]);
+                        next[ci].push(s);
+                        next[ci + 1].push(c);
+                    }
+                    _ => {
+                        // <= 2 bits: pass through to the final adder.
+                        for &b in chunk {
+                            next[ci].push(b);
+                        }
+                    }
+                }
+            }
+        }
+        while next.last().map(|c| c.is_empty()).unwrap_or(false) {
+            next.pop();
+        }
+        columns = next;
+    }
+    // Final carry-propagate add of the <=2 remaining rows per column.
+    let mut count = 0u64;
+    for (ci, col) in columns.iter().enumerate() {
+        for &b in col {
+            count += (b as u64) << ci;
+        }
+    }
+    TreeCount { count, levels, slices }
+}
+
+/// Cycles the accumulation phase spends popcounting an `n`-bit vector:
+/// one array cycle per tree level (log4-ish depth) — contrast with the
+/// IMCE baseline's O(n) serial counter modeled in
+/// [`crate::baselines::imce`].
+pub fn popcount_cycles(n: usize) -> u64 {
+    if n <= 2 {
+        return 1;
+    }
+    // levels of 4->2 reduction until <=2 rows remain
+    let mut rows = n as u64;
+    let mut levels = 0;
+    while rows > 2 {
+        rows = rows.div_ceil(2); // 4->2 halves the rank population
+        levels += 1;
+    }
+    levels + 1 // + final add
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest_lite::Runner;
+
+    fn all_inputs() -> impl Iterator<Item = ([bool; 4], bool)> {
+        (0u32..32).map(|v| {
+            (
+                [v & 1 != 0, v & 2 != 0, v & 4 != 0, v & 8 != 0],
+                v & 16 != 0,
+            )
+        })
+    }
+
+    #[test]
+    fn two_fa_is_a_compressor() {
+        for (x, cin) in all_inputs() {
+            let want =
+                x.iter().map(|&b| b as u32).sum::<u32>() + cin as u32;
+            assert_eq!(comp42_two_fa(x, cin).value(), want);
+        }
+    }
+
+    #[test]
+    fn mux_form_matches_arithmetic() {
+        // Fig. 5b claim: the MUX reformulation computes the same
+        // 5-input compression for all 32 input combinations.
+        for (x, cin) in all_inputs() {
+            let want =
+                x.iter().map(|&b| b as u32).sum::<u32>() + cin as u32;
+            assert_eq!(
+                comp42_mux(x, cin).value(),
+                want,
+                "x={x:?} cin={cin}"
+            );
+        }
+    }
+
+    #[test]
+    fn mux_and_two_fa_sum_bits_agree() {
+        for (x, cin) in all_inputs() {
+            assert_eq!(
+                comp42_mux(x, cin).sum,
+                comp42_two_fa(x, cin).sum
+            );
+        }
+    }
+
+    #[test]
+    fn tree_popcount_small_cases() {
+        assert_eq!(tree_popcount(&[]).count, 0);
+        assert_eq!(tree_popcount(&[true]).count, 1);
+        assert_eq!(tree_popcount(&[true; 4]).count, 4);
+        assert_eq!(tree_popcount(&[true; 17]).count, 17);
+    }
+
+    #[test]
+    fn tree_popcount_property() {
+        let mut r = Runner::new(0xC42);
+        r.run("tree popcount == plain popcount", |g| {
+            let bits: Vec<bool> = g.vec(0, 600, |g| g.bool());
+            let want = bits.iter().filter(|&&b| b).count() as u64;
+            let got = tree_popcount(&bits);
+            assert_eq!(got.count, want);
+        });
+    }
+
+    #[test]
+    fn tree_depth_is_logarithmic() {
+        // Carry-save columns converge in O(log n) levels — the
+        // contrast is with the serial counter's O(n) cycles.
+        let t64 = tree_popcount(&vec![true; 64]);
+        let t512 = tree_popcount(&vec![true; 512]);
+        assert!(t64.levels <= 12, "levels={}", t64.levels);
+        assert!(t512.levels <= 18, "levels={}", t512.levels);
+        assert!(t512.levels < 64, "not sub-linear");
+        assert!(t512.slices > t64.slices);
+    }
+
+    #[test]
+    fn popcount_cycles_log_vs_linear() {
+        // the whole point of the compressor: sub-linear cycles
+        assert!(popcount_cycles(256) <= 9);
+        assert!(popcount_cycles(512) <= 10);
+        assert!(popcount_cycles(2) == 1);
+    }
+}

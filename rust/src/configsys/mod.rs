@@ -1,0 +1,445 @@
+//! Config system: a TOML-subset parser with typed accessors (no `serde`
+//! in the offline image).
+//!
+//! Supported syntax — everything the launcher and benches need:
+//!
+//! ```toml
+//! # comment
+//! [section]
+//! key = "string"
+//! count = 42
+//! ratio = 0.5
+//! flag = true
+//! sizes = [1, 8, 64]
+//! ```
+//!
+//! Sections nest with dotted headers (`[accel.subarray]`). Values keep
+//! their source ordering for deterministic dumps. Unknown keys are
+//! detected by `Config::check_known`, which launchers use to reject
+//! typos instead of silently ignoring them.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    List(Vec<Value>),
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Str(s) => write!(f, "\"{s}\""),
+            Value::Int(i) => write!(f, "{i}"),
+            Value::Float(x) => write!(f, "{x}"),
+            Value::Bool(b) => write!(f, "{b}"),
+            Value::List(xs) => {
+                write!(f, "[")?;
+                for (i, x) in xs.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{x}")?;
+                }
+                write!(f, "]")
+            }
+        }
+    }
+}
+
+/// Parse / lookup errors.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ConfigError {
+    Parse { line: usize, msg: String },
+    Missing(String),
+    Type { key: String, want: &'static str, got: String },
+    Unknown(Vec<String>),
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ConfigError::Parse { line, msg } => {
+                write!(f, "config parse error at line {line}: {msg}")
+            }
+            ConfigError::Missing(k) => write!(f, "missing config key '{k}'"),
+            ConfigError::Type { key, want, got } => {
+                write!(f, "config key '{key}': expected {want}, got {got}")
+            }
+            ConfigError::Unknown(ks) => {
+                write!(f, "unknown config keys: {}", ks.join(", "))
+            }
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+/// Flat `section.key -> Value` map.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    values: BTreeMap<String, Value>,
+}
+
+fn parse_scalar(tok: &str, line: usize) -> Result<Value, ConfigError> {
+    let t = tok.trim();
+    if t.starts_with('"') && t.ends_with('"') && t.len() >= 2 {
+        return Ok(Value::Str(t[1..t.len() - 1].to_string()));
+    }
+    match t {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = t.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(x) = t.parse::<f64>() {
+        return Ok(Value::Float(x));
+    }
+    Err(ConfigError::Parse { line, msg: format!("bad value '{t}'") })
+}
+
+/// Split a bracketed list body on top-level commas (no nested lists).
+fn parse_list(body: &str, line: usize) -> Result<Value, ConfigError> {
+    let inner = body.trim();
+    if inner.is_empty() {
+        return Ok(Value::List(Vec::new()));
+    }
+    inner
+        .split(',')
+        .map(|t| parse_scalar(t, line))
+        .collect::<Result<Vec<_>, _>>()
+        .map(Value::List)
+}
+
+impl Config {
+    /// Parse config text.
+    pub fn parse(text: &str) -> Result<Self, ConfigError> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (i, raw) in text.lines().enumerate() {
+            let line_no = i + 1;
+            // Strip comments (naive: '#' inside strings unsupported —
+            // rejected below if it splits a quoted value).
+            let line = match raw.find('#') {
+                Some(p) if !raw[..p].contains('"') || raw[..p].matches('"').count() % 2 == 0 => &raw[..p],
+                _ => raw,
+            };
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    return Err(ConfigError::Parse {
+                        line: line_no,
+                        msg: "unterminated section header".into(),
+                    });
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                continue;
+            }
+            let eq = line.find('=').ok_or_else(|| ConfigError::Parse {
+                line: line_no,
+                msg: format!("expected 'key = value', got '{line}'"),
+            })?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(ConfigError::Parse {
+                    line: line_no,
+                    msg: "empty key".into(),
+                });
+            }
+            let vtext = line[eq + 1..].trim();
+            let value = if vtext.starts_with('[') {
+                if !vtext.ends_with(']') {
+                    return Err(ConfigError::Parse {
+                        line: line_no,
+                        msg: "unterminated list".into(),
+                    });
+                }
+                parse_list(&vtext[1..vtext.len() - 1], line_no)?
+            } else {
+                parse_scalar(vtext, line_no)?
+            };
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            values.insert(full, value);
+        }
+        Ok(Config { values })
+    }
+
+    /// Load from a file.
+    pub fn load(path: &str) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Ok(Self::parse(&text)?)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+
+    /// Overlay: values in `other` win (CLI overrides file).
+    pub fn merge(&mut self, other: Config) {
+        self.values.extend(other.values);
+    }
+
+    /// Set a key directly (used for `--set key=value` CLI overrides).
+    pub fn set(&mut self, key: &str, raw: &str) -> Result<(), ConfigError> {
+        let v = if raw.starts_with('[') && raw.ends_with(']') {
+            parse_list(&raw[1..raw.len() - 1], 0)?
+        } else {
+            parse_scalar(raw, 0)?
+        };
+        self.values.insert(key.to_string(), v);
+        Ok(())
+    }
+
+    fn typed<T>(
+        &self,
+        key: &str,
+        want: &'static str,
+        f: impl Fn(&Value) -> Option<T>,
+    ) -> Result<T, ConfigError> {
+        let v = self
+            .values
+            .get(key)
+            .ok_or_else(|| ConfigError::Missing(key.to_string()))?;
+        f(v).ok_or_else(|| ConfigError::Type {
+            key: key.to_string(),
+            want,
+            got: v.to_string(),
+        })
+    }
+
+    pub fn str(&self, key: &str) -> Result<String, ConfigError> {
+        self.typed(key, "string", |v| match v {
+            Value::Str(s) => Some(s.clone()),
+            _ => None,
+        })
+    }
+
+    pub fn int(&self, key: &str) -> Result<i64, ConfigError> {
+        self.typed(key, "int", |v| match v {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        })
+    }
+
+    pub fn float(&self, key: &str) -> Result<f64, ConfigError> {
+        self.typed(key, "float", |v| match v {
+            Value::Float(x) => Some(*x),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        })
+    }
+
+    pub fn bool(&self, key: &str) -> Result<bool, ConfigError> {
+        self.typed(key, "bool", |v| match v {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        })
+    }
+
+    pub fn int_list(&self, key: &str) -> Result<Vec<i64>, ConfigError> {
+        self.typed(key, "int list", |v| match v {
+            Value::List(xs) => xs
+                .iter()
+                .map(|x| match x {
+                    Value::Int(i) => Some(*i),
+                    _ => None,
+                })
+                .collect(),
+            _ => None,
+        })
+    }
+
+    /// Typed get-with-default helpers (config files stay minimal).
+    pub fn int_or(&self, key: &str, default: i64) -> i64 {
+        self.int(key).unwrap_or(default)
+    }
+
+    pub fn float_or(&self, key: &str, default: f64) -> f64 {
+        self.float(key).unwrap_or(default)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.str(key).unwrap_or_else(|_| default.to_string())
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.bool(key).unwrap_or(default)
+    }
+
+    /// Reject keys not in the allow-list (typo defense for launchers).
+    pub fn check_known(&self, known: &[&str]) -> Result<(), ConfigError> {
+        let unknown: Vec<String> = self
+            .values
+            .keys()
+            .filter(|k| !known.contains(&k.as_str()))
+            .cloned()
+            .collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(ConfigError::Unknown(unknown))
+        }
+    }
+
+    /// Deterministic dump (round-trips through `parse`).
+    pub fn dump(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.values {
+            out.push_str(&format!("{k} = {v}\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# serving config
+name = "pims"
+[coordinator]
+batch_sizes = [1, 8]
+queue_depth = 256
+timeout_ms = 5.5
+drain = true
+[accel.subarray]
+rows = 256
+cols = 512
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.str("name").unwrap(), "pims");
+        assert_eq!(c.int("coordinator.queue_depth").unwrap(), 256);
+        assert_eq!(c.float("coordinator.timeout_ms").unwrap(), 5.5);
+        assert!(c.bool("coordinator.drain").unwrap());
+        assert_eq!(c.int_list("coordinator.batch_sizes").unwrap(), vec![1, 8]);
+        assert_eq!(c.int("accel.subarray.rows").unwrap(), 256);
+    }
+
+    #[test]
+    fn int_coerces_to_float_not_reverse() {
+        let c = Config::parse("x = 3\ny = 1.5").unwrap();
+        assert_eq!(c.float("x").unwrap(), 3.0);
+        assert!(c.int("y").is_err());
+    }
+
+    #[test]
+    fn missing_and_type_errors() {
+        let c = Config::parse("x = 3").unwrap();
+        assert!(matches!(c.int("nope"), Err(ConfigError::Missing(_))));
+        assert!(matches!(c.str("x"), Err(ConfigError::Type { .. })));
+    }
+
+    #[test]
+    fn parse_errors_carry_line_numbers() {
+        let err = Config::parse("a = 1\nbad line").unwrap_err();
+        match err {
+            ConfigError::Parse { line, .. } => assert_eq!(line, 2),
+            other => panic!("wrong error {other:?}"),
+        }
+    }
+
+    #[test]
+    fn merge_overrides() {
+        let mut a = Config::parse("x = 1\ny = 2").unwrap();
+        let b = Config::parse("y = 3").unwrap();
+        a.merge(b);
+        assert_eq!(a.int("y").unwrap(), 3);
+        assert_eq!(a.int("x").unwrap(), 1);
+    }
+
+    #[test]
+    fn set_override() {
+        let mut c = Config::default();
+        c.set("a.b", "42").unwrap();
+        c.set("a.l", "[1, 2]").unwrap();
+        assert_eq!(c.int("a.b").unwrap(), 42);
+        assert_eq!(c.int_list("a.l").unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn check_known_rejects_typos() {
+        let c = Config::parse("[coord]\nbatchsize = 8").unwrap();
+        let err = c.check_known(&["coord.batch_size"]).unwrap_err();
+        assert!(matches!(err, ConfigError::Unknown(_)));
+    }
+
+    #[test]
+    fn dump_roundtrip() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let c2 = Config::parse(&c.dump()).unwrap();
+        assert_eq!(c.dump(), c2.dump());
+    }
+
+    #[test]
+    fn defaults() {
+        let c = Config::default();
+        assert_eq!(c.int_or("x", 7), 7);
+        assert_eq!(c.str_or("s", "d"), "d");
+        assert!(c.bool_or("b", true));
+        assert_eq!(c.float_or("f", 2.5), 2.5);
+    }
+
+    #[test]
+    fn fuzz_generated_configs_roundtrip() {
+        let mut r = crate::proptest_lite::Runner::new(0xC0F);
+        r.run("generated config roundtrips", |g| {
+            let mut text = String::new();
+            let n = g.usize(1, 8);
+            for i in 0..n {
+                if g.bool() {
+                    text.push_str(&format!("[sec{}]\n", g.usize(0, 3)));
+                }
+                match g.usize(0, 3) {
+                    0 => text.push_str(&format!("k{i} = {}\n", g.u32(0, 9999))),
+                    1 => text.push_str(&format!(
+                        "k{i} = {:.3}\n",
+                        g.f64(-100.0, 100.0)
+                    )),
+                    2 => text.push_str(&format!("k{i} = \"v{i}\"\n")),
+                    _ => text.push_str(&format!(
+                        "k{i} = [{}, {}]\n",
+                        g.u32(0, 99),
+                        g.u32(0, 99)
+                    )),
+                }
+            }
+            let c = Config::parse(&text).unwrap();
+            let c2 = Config::parse(&c.dump()).unwrap();
+            assert_eq!(c.dump(), c2.dump(), "source:\n{text}");
+        });
+    }
+
+    #[test]
+    fn fuzz_parser_never_panics() {
+        let mut r = crate::proptest_lite::Runner::new(0xC10);
+        r.run("config parser total", |g| {
+            let bytes: Vec<u8> = (0..g.usize(0, 60))
+                .map(|_| *g.choose(b"[]=\"#.abc012 \n\t-"))
+                .collect();
+            let text = String::from_utf8_lossy(&bytes).into_owned();
+            let _ = Config::parse(&text); // must not panic
+        });
+    }
+}

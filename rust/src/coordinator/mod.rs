@@ -1,0 +1,535 @@
+//! L3 serving coordinator: request queue → dynamic batcher → PJRT
+//! executor → responses. Python is never on this path.
+//!
+//! Threading model (std::thread + channels; the offline image vendors
+//! no tokio — substitution noted in DESIGN.md §2): a bounded ingress
+//! queue applies backpressure at admission; a single batcher/executor
+//! thread owns the compiled executable (PJRT handles stay on one
+//! thread) and forms batches with a size-or-deadline policy, padding
+//! partial batches to the compiled batch shape; responses return
+//! through per-request channels.
+//!
+//! The backend is abstracted behind [`Backend`] so unit tests and the
+//! PIM co-simulation run the identical coordinator against a mock,
+//! and the E2E driver plugs in [`crate::runtime::Executable`].
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::metrics::{Counters, LatencyRecorder};
+
+/// Inference backend: consumes one padded batch, returns logits for
+/// every row (including padding rows, which the coordinator drops).
+pub trait Backend {
+    /// `flat` holds `batch * input_elems` values.
+    fn infer_batch(&mut self, flat: &[f32]) -> Result<Vec<f32>>;
+    fn batch_size(&self) -> usize;
+    fn input_elems(&self) -> usize;
+    fn num_classes(&self) -> usize;
+}
+
+/// One classification request.
+pub struct Request {
+    pub id: u64,
+    pub image: Vec<f32>,
+    pub enqueued_at: Instant,
+    pub reply: Sender<Response>,
+}
+
+/// Completed classification.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub logits: Vec<f32>,
+    pub prediction: usize,
+    /// Time from enqueue to response (queue + batch wait + execute).
+    pub latency: Duration,
+}
+
+/// Batching policy knobs.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    /// Max time the first request of a batch may wait for peers.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// Shared metrics snapshot.
+#[derive(Debug, Default, Clone)]
+pub struct ServeMetrics {
+    pub counters: Counters,
+    pub latency: LatencyRecorder,
+    pub exec_latency: LatencyRecorder,
+}
+
+/// Coordinator handle: enqueue requests, await responses, inspect
+/// metrics, shut down.
+pub struct Coordinator {
+    ingress: SyncSender<Request>,
+    next_id: AtomicU64,
+    metrics: Arc<Mutex<ServeMetrics>>,
+    stop: Arc<AtomicBool>,
+    worker: Option<JoinHandle<()>>,
+    input_elems: usize,
+}
+
+/// Client-side handle to one in-flight request.
+pub struct Pending {
+    pub id: u64,
+    rx: Receiver<Response>,
+}
+
+impl Pending {
+    pub fn wait(self) -> Result<Response> {
+        Ok(self.rx.recv()?)
+    }
+
+    pub fn wait_timeout(self, t: Duration) -> Result<Response> {
+        Ok(self.rx.recv_timeout(t)?)
+    }
+}
+
+impl Coordinator {
+    /// Start the coordinator. `make_backend` runs ON the executor
+    /// thread (PJRT handles never cross threads); `queue_depth` bounds
+    /// admission (backpressure).
+    pub fn start<F, B>(
+        make_backend: F,
+        policy: BatchPolicy,
+        queue_depth: usize,
+    ) -> Result<Coordinator>
+    where
+        F: FnOnce() -> Result<B> + Send + 'static,
+        B: Backend,
+    {
+        let (tx, rx) = sync_channel::<Request>(queue_depth);
+        let metrics = Arc::new(Mutex::new(ServeMetrics::default()));
+        let stop = Arc::new(AtomicBool::new(false));
+        // Report backend geometry back to the caller thread.
+        let (geom_tx, geom_rx) = sync_channel::<Result<usize>>(1);
+
+        let m = metrics.clone();
+        let s = stop.clone();
+        let worker = std::thread::Builder::new()
+            .name("pims-executor".into())
+            .spawn(move || {
+                let mut backend = match make_backend() {
+                    Ok(b) => {
+                        let _ = geom_tx.send(Ok(b.input_elems()));
+                        b
+                    }
+                    Err(e) => {
+                        let _ = geom_tx.send(Err(e));
+                        return;
+                    }
+                };
+                executor_loop(&mut backend, rx, policy, m, s);
+            })?;
+
+        let input_elems = geom_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("executor died during init"))??;
+        Ok(Coordinator {
+            ingress: tx,
+            next_id: AtomicU64::new(0),
+            metrics,
+            stop,
+            worker: Some(worker),
+            input_elems,
+        })
+    }
+
+    /// Submit a request. Fails fast when the queue is full
+    /// (backpressure) or the image has the wrong geometry.
+    pub fn submit(&self, image: Vec<f32>) -> Result<Pending> {
+        anyhow::ensure!(
+            image.len() == self.input_elems,
+            "image has {} elems, model expects {}",
+            image.len(),
+            self.input_elems
+        );
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (reply, rx) = std::sync::mpsc::channel();
+        let req =
+            Request { id, image, enqueued_at: Instant::now(), reply };
+        match self.ingress.try_send(req) {
+            Ok(()) => {
+                self.metrics.lock().unwrap().counters.enqueued += 1;
+                Ok(Pending { id, rx })
+            }
+            Err(TrySendError::Full(_)) => {
+                self.metrics.lock().unwrap().counters.rejected += 1;
+                anyhow::bail!("queue full (backpressure)")
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                anyhow::bail!("coordinator stopped")
+            }
+        }
+    }
+
+    /// Blocking submit: retries on backpressure until accepted.
+    pub fn submit_blocking(&self, image: Vec<f32>) -> Result<Pending> {
+        loop {
+            match self.submit(image.clone()) {
+                Ok(p) => return Ok(p),
+                Err(e) if e.to_string().contains("backpressure") => {
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    pub fn metrics(&self) -> ServeMetrics {
+        self.metrics.lock().unwrap().clone()
+    }
+
+    pub fn input_elems(&self) -> usize {
+        self.input_elems
+    }
+
+    /// Drain and stop.
+    pub fn shutdown(mut self) -> ServeMetrics {
+        self.stop.store(true, Ordering::SeqCst);
+        // Close ingress so the executor's recv unblocks.
+        drop(std::mem::replace(&mut self.ingress, {
+            let (tx, _rx) = sync_channel(1);
+            tx
+        }));
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+        self.metrics.lock().unwrap().clone()
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Drop the ingress sender FIRST so the executor's recv()
+        // unblocks — joining with the sender alive deadlocks.
+        let (dummy, _rx) = sync_channel(1);
+        drop(std::mem::replace(&mut self.ingress, dummy));
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The executor loop: collect-up-to-batch with a deadline, pad, run,
+/// reply.
+fn executor_loop<B: Backend>(
+    backend: &mut B,
+    rx: Receiver<Request>,
+    policy: BatchPolicy,
+    metrics: Arc<Mutex<ServeMetrics>>,
+    stop: Arc<AtomicBool>,
+) {
+    let batch = backend.batch_size();
+    let elems = backend.input_elems();
+    let classes = backend.num_classes();
+    let mut flat = vec![0f32; batch * elems];
+
+    'serve: loop {
+        // Block for the first request of the next batch.
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => break 'serve, // ingress closed
+        };
+        let deadline = Instant::now() + policy.max_wait;
+        let mut reqs = vec![first];
+        while reqs.len() < batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => reqs.push(r),
+                Err(_) => break,
+            }
+        }
+
+        // Pad (zero rows) and execute.
+        flat.iter_mut().for_each(|v| *v = 0.0);
+        for (i, r) in reqs.iter().enumerate() {
+            flat[i * elems..(i + 1) * elems].copy_from_slice(&r.image);
+        }
+        let t0 = Instant::now();
+        match backend.infer_batch(&flat) {
+            Ok(logits) => {
+                let exec = t0.elapsed();
+                let mut m = metrics.lock().unwrap();
+                m.exec_latency.record(exec);
+                m.counters.batches += 1;
+                for (i, r) in reqs.drain(..).enumerate() {
+                    let row =
+                        logits[i * classes..(i + 1) * classes].to_vec();
+                    let prediction = argmax(&row);
+                    let latency = r.enqueued_at.elapsed();
+                    m.latency.record(latency);
+                    m.counters.served += 1;
+                    let _ = r.reply.send(Response {
+                        id: r.id,
+                        logits: row,
+                        prediction,
+                        latency,
+                    });
+                }
+            }
+            Err(_) => {
+                let mut m = metrics.lock().unwrap();
+                m.counters.errors += 1;
+                // Drop the requests; their reply channels close and
+                // clients observe the failure.
+            }
+        }
+        if stop.load(Ordering::SeqCst) {
+            // Finish whatever is already queued, then exit.
+            while let Ok(r) = rx.try_recv() {
+                drop(r);
+            }
+            break;
+        }
+    }
+}
+
+fn argmax(row: &[f32]) -> usize {
+    row.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+/// PJRT-backed implementation for the serving binary.
+pub struct PjrtBackend {
+    pub exe: crate::runtime::Executable,
+    pub shape: [usize; 4],
+}
+
+impl Backend for PjrtBackend {
+    fn infer_batch(&mut self, flat: &[f32]) -> Result<Vec<f32>> {
+        self.exe.infer(flat, &self.shape)
+    }
+
+    fn batch_size(&self) -> usize {
+        self.exe.batch
+    }
+
+    fn input_elems(&self) -> usize {
+        self.exe.input_elems
+    }
+
+    fn num_classes(&self) -> usize {
+        self.exe.num_classes
+    }
+}
+
+/// Deterministic mock backend for tests and coordinator benches: the
+/// "logits" are a linear probe of the image so tests can verify
+/// routing (class = first pixel scaled).
+pub struct MockBackend {
+    pub batch: usize,
+    pub elems: usize,
+    pub classes: usize,
+    /// Artificial execution delay per batch.
+    pub delay: Duration,
+    pub calls: u64,
+}
+
+impl MockBackend {
+    pub fn new(batch: usize, elems: usize, classes: usize) -> Self {
+        MockBackend {
+            batch,
+            elems,
+            classes,
+            delay: Duration::ZERO,
+            calls: 0,
+        }
+    }
+}
+
+impl Backend for MockBackend {
+    fn infer_batch(&mut self, flat: &[f32]) -> Result<Vec<f32>> {
+        self.calls += 1;
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        let mut out = vec![0f32; self.batch * self.classes];
+        for b in 0..self.batch {
+            let probe = flat[b * self.elems];
+            let class =
+                ((probe * self.classes as f32) as usize).min(self.classes - 1);
+            out[b * self.classes + class] = 1.0;
+        }
+        Ok(out)
+    }
+
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    fn input_elems(&self) -> usize {
+        self.elems
+    }
+
+    fn num_classes(&self) -> usize {
+        self.classes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn coord(batch: usize, queue: usize) -> Coordinator {
+        Coordinator::start(
+            move || Ok(MockBackend::new(batch, 4, 10)),
+            BatchPolicy { max_wait: Duration::from_millis(1) },
+            queue,
+        )
+        .unwrap()
+    }
+
+    fn img(class: usize) -> Vec<f32> {
+        let mut v = vec![0.0; 4];
+        v[0] = (class as f32 + 0.5) / 10.0;
+        v
+    }
+
+    #[test]
+    fn single_request_roundtrip() {
+        let c = coord(4, 16);
+        let r = c.submit(img(3)).unwrap().wait().unwrap();
+        assert_eq!(r.prediction, 3);
+        assert_eq!(r.logits.len(), 10);
+        let m = c.shutdown();
+        assert_eq!(m.counters.served, 1);
+        assert_eq!(m.counters.batches, 1);
+    }
+
+    #[test]
+    fn batches_fill_under_load() {
+        let c = coord(4, 64);
+        let pending: Vec<Pending> =
+            (0..16).map(|i| c.submit(img(i % 10)).unwrap()).collect();
+        for (i, p) in pending.into_iter().enumerate() {
+            let r = p.wait().unwrap();
+            assert_eq!(r.prediction, i % 10);
+        }
+        let m = c.shutdown();
+        assert_eq!(m.counters.served, 16);
+        // 16 requests in batches of 4: at most 16, ideally 4 batches.
+        assert!(m.counters.batches <= 16);
+        assert!(m.counters.mean_batch_fill(4) > 0.2);
+    }
+
+    #[test]
+    fn wrong_geometry_rejected() {
+        let c = coord(2, 8);
+        assert!(c.submit(vec![0.0; 3]).is_err());
+        c.shutdown();
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        // Slow backend + tiny queue: super-capacity submits must fail.
+        let c = Coordinator::start(
+            move || {
+                let mut b = MockBackend::new(1, 4, 10);
+                b.delay = Duration::from_millis(20);
+                Ok(b)
+            },
+            BatchPolicy { max_wait: Duration::ZERO },
+            2,
+        )
+        .unwrap();
+        let mut accepted = Vec::new();
+        let mut rejected = 0;
+        for i in 0..32 {
+            match c.submit(img(i % 10)) {
+                Ok(p) => accepted.push(p),
+                Err(_) => rejected += 1,
+            }
+        }
+        assert!(rejected > 0, "expected backpressure rejections");
+        for p in accepted {
+            let _ = p.wait();
+        }
+        let m = c.shutdown();
+        assert_eq!(m.counters.rejected, rejected);
+    }
+
+    #[test]
+    fn latency_recorded() {
+        let c = coord(4, 16);
+        for i in 0..8 {
+            c.submit(img(i)).unwrap().wait().unwrap();
+        }
+        let m = c.metrics();
+        assert_eq!(m.latency.count(), 8);
+        assert!(m.exec_latency.count() >= 1);
+        c.shutdown();
+    }
+
+    #[test]
+    fn submit_blocking_never_drops() {
+        let c = Coordinator::start(
+            move || {
+                let mut b = MockBackend::new(2, 4, 10);
+                b.delay = Duration::from_millis(2);
+                Ok(b)
+            },
+            BatchPolicy::default(),
+            2,
+        )
+        .unwrap();
+        let pendings: Vec<Pending> = (0..12)
+            .map(|i| c.submit_blocking(img(i % 10)).unwrap())
+            .collect();
+        for p in pendings {
+            p.wait().unwrap();
+        }
+        let m = c.shutdown();
+        assert_eq!(m.counters.served, 12);
+    }
+
+    #[test]
+    fn backend_failure_counts_error() {
+        struct Failing;
+        impl Backend for Failing {
+            fn infer_batch(&mut self, _: &[f32]) -> Result<Vec<f32>> {
+                anyhow::bail!("boom")
+            }
+            fn batch_size(&self) -> usize {
+                1
+            }
+            fn input_elems(&self) -> usize {
+                4
+            }
+            fn num_classes(&self) -> usize {
+                10
+            }
+        }
+        let c = Coordinator::start(
+            || Ok(Failing),
+            BatchPolicy::default(),
+            4,
+        )
+        .unwrap();
+        let p = c.submit(vec![0.0; 4]).unwrap();
+        assert!(p.wait_timeout(Duration::from_secs(1)).is_err());
+        let m = c.shutdown();
+        assert_eq!(m.counters.errors, 1);
+    }
+}

@@ -1,0 +1,223 @@
+//! Datasets: the artifact-shared synthetic test split and a native
+//! procedural generator for simulator workloads.
+//!
+//! The serving path consumes `artifacts/svhn_test.bin`, written by
+//! `python/compile/dataset.py::write_bin` at artifact-build time so
+//! python-measured and rust-measured accuracy refer to byte-identical
+//! images. Format (little-endian):
+//!
+//! ```text
+//! magic  b"PIMSDS01"
+//! u32    n, h, w, c
+//! f32    n*h*w*c image values in [0, 1]
+//! u8     n labels (0..=9)
+//! ```
+//!
+//! The native generator renders the same glyph family (for workloads
+//! that don't need the trained model, e.g. PIM-simulator sweeps) but
+//! is NOT bit-identical to the python renderer — accuracy measurements
+//! must use the artifact split.
+
+use anyhow::{bail, Context, Result};
+
+use crate::prng::Pcg32;
+
+/// An in-memory image batch set.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub n: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    /// n*h*w*c, NHWC row-major, values in [0, 1].
+    pub images: Vec<f32>,
+    pub labels: Vec<u8>,
+}
+
+impl Dataset {
+    pub fn image(&self, i: usize) -> &[f32] {
+        let sz = self.h * self.w * self.c;
+        &self.images[i * sz..(i + 1) * sz]
+    }
+
+    pub fn image_elems(&self) -> usize {
+        self.h * self.w * self.c
+    }
+
+    /// Load the artifact interchange format.
+    pub fn load_bin(path: &str) -> Result<Dataset> {
+        let raw = std::fs::read(path)
+            .with_context(|| format!("reading dataset {path}"))?;
+        if raw.len() < 24 || &raw[..8] != b"PIMSDS01" {
+            bail!("{path}: bad magic (not a PIMSDS01 file)");
+        }
+        let rd_u32 = |off: usize| {
+            u32::from_le_bytes(raw[off..off + 4].try_into().unwrap())
+                as usize
+        };
+        let (n, h, w, c) = (rd_u32(8), rd_u32(12), rd_u32(16), rd_u32(20));
+        let img_bytes = n * h * w * c * 4;
+        let want = 24 + img_bytes + n;
+        if raw.len() != want {
+            bail!(
+                "{path}: size mismatch: have {} want {want} (n={n} h={h} w={w} c={c})",
+                raw.len()
+            );
+        }
+        let mut images = Vec::with_capacity(n * h * w * c);
+        for chunk in raw[24..24 + img_bytes].chunks_exact(4) {
+            images.push(f32::from_le_bytes(chunk.try_into().unwrap()));
+        }
+        let labels = raw[24 + img_bytes..].to_vec();
+        if let Some(&bad) = labels.iter().find(|&&l| l > 9) {
+            bail!("{path}: label {bad} out of range");
+        }
+        Ok(Dataset { n, h, w, c, images, labels })
+    }
+}
+
+/// 5x7 digit glyphs (same family as `python/compile/dataset.py`).
+const GLYPHS: [[u8; 7]; 10] = [
+    // each row is a 5-bit mask, MSB = leftmost column
+    [0b01110, 0b10001, 0b10011, 0b10101, 0b11001, 0b10001, 0b01110], // 0
+    [0b00100, 0b01100, 0b00100, 0b00100, 0b00100, 0b00100, 0b01110], // 1
+    [0b01110, 0b10001, 0b00001, 0b00110, 0b01000, 0b10000, 0b11111], // 2
+    [0b11110, 0b00001, 0b00001, 0b01110, 0b00001, 0b00001, 0b11110], // 3
+    [0b00010, 0b00110, 0b01010, 0b10010, 0b11111, 0b00010, 0b00010], // 4
+    [0b11111, 0b10000, 0b11110, 0b00001, 0b00001, 0b10001, 0b01110], // 5
+    [0b00110, 0b01000, 0b10000, 0b11110, 0b10001, 0b10001, 0b01110], // 6
+    [0b11111, 0b00001, 0b00010, 0b00100, 0b01000, 0b01000, 0b01000], // 7
+    [0b01110, 0b10001, 0b10001, 0b01110, 0b10001, 0b10001, 0b01110], // 8
+    [0b01110, 0b10001, 0b10001, 0b01111, 0b00001, 0b00010, 0b01100], // 9
+];
+
+/// Procedurally generate a labelled split (simulator workloads).
+pub fn generate(n: usize, size: usize, channels: usize, seed: u64) -> Dataset {
+    assert!(size >= 9, "image too small for a glyph");
+    let mut rng = Pcg32::seeded(seed);
+    let mut images = Vec::with_capacity(n * size * size * channels);
+    let mut labels = Vec::with_capacity(n);
+    for _ in 0..n {
+        let digit = rng.below(10) as usize;
+        labels.push(digit as u8);
+        render(&mut rng, digit, size, channels, &mut images);
+    }
+    Dataset { n, h: size, w: size, c: channels, images, labels }
+}
+
+fn render(
+    rng: &mut Pcg32,
+    digit: usize,
+    size: usize,
+    channels: usize,
+    out: &mut Vec<f32>,
+) {
+    let max_scale = ((size - 2) / 7).max(1);
+    let min_scale = max_scale.saturating_sub(2).max(1);
+    let scale = rng.range(min_scale, max_scale + 1);
+    let (gh, gw) = (7 * scale, 5 * scale);
+    let y0 = rng.range(0, size - gh + 1);
+    let x0 = rng.range(0, size - gw + 1);
+    let bg = rng.uniform(0.0, 0.45) as f32;
+    let fg = rng.uniform(0.55, 1.0) as f32;
+    let tint: Vec<f32> = (0..channels)
+        .map(|_| {
+            if channels == 1 {
+                1.0
+            } else {
+                rng.uniform(0.6, 1.0) as f32
+            }
+        })
+        .collect();
+    let glyph = &GLYPHS[digit];
+    for y in 0..size {
+        for x in 0..size {
+            let ink = y >= y0
+                && y < y0 + gh
+                && x >= x0
+                && x < x0 + gw
+                && (glyph[(y - y0) / scale] >> (4 - (x - x0) / scale)) & 1
+                    == 1;
+            let base = if ink { fg } else { bg };
+            let noise = rng.normal_with(0.0, 0.06) as f32;
+            for t in &tint {
+                out.push(((base + noise) * t).clamp(0.0, 1.0));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generate_shapes_and_ranges() {
+        let ds = generate(16, 40, 3, 7);
+        assert_eq!(ds.n, 16);
+        assert_eq!(ds.images.len(), 16 * 40 * 40 * 3);
+        assert!(ds.images.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        assert!(ds.labels.iter().all(|&l| l < 10));
+        assert_eq!(ds.image(3).len(), ds.image_elems());
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = generate(4, 28, 1, 3);
+        let b = generate(4, 28, 1, 3);
+        assert_eq!(a.images, b.images);
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn glyphs_have_ink() {
+        // every class renders some foreground pixels
+        for d in 0..10 {
+            let mut rng = Pcg32::seeded(d as u64);
+            let mut buf = Vec::new();
+            render(&mut rng, d, 28, 1, &mut buf);
+            let spread = buf.iter().cloned().fold(0.0f32, f32::max)
+                - buf.iter().cloned().fold(1.0f32, f32::min);
+            assert!(spread > 0.1, "digit {d} looks blank");
+        }
+    }
+
+    #[test]
+    fn load_bin_roundtrip() {
+        let dir = std::env::temp_dir().join("pims_ds_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.bin");
+        // hand-build a 2-image 4x4x1 file
+        let mut raw = Vec::new();
+        raw.extend_from_slice(b"PIMSDS01");
+        for v in [2u32, 4, 4, 1] {
+            raw.extend_from_slice(&v.to_le_bytes());
+        }
+        let imgs: Vec<f32> = (0..32).map(|i| i as f32 / 32.0).collect();
+        for v in &imgs {
+            raw.extend_from_slice(&v.to_le_bytes());
+        }
+        raw.extend_from_slice(&[3u8, 7]);
+        std::fs::write(&path, &raw).unwrap();
+        let ds = Dataset::load_bin(path.to_str().unwrap()).unwrap();
+        assert_eq!((ds.n, ds.h, ds.w, ds.c), (2, 4, 4, 1));
+        assert_eq!(ds.images, imgs);
+        assert_eq!(ds.labels, vec![3, 7]);
+    }
+
+    #[test]
+    fn load_bin_rejects_bad_files() {
+        let dir = std::env::temp_dir().join("pims_ds_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p1 = dir.join("bad_magic.bin");
+        std::fs::write(&p1, b"NOTMAGIC").unwrap();
+        assert!(Dataset::load_bin(p1.to_str().unwrap()).is_err());
+        let p2 = dir.join("truncated.bin");
+        let mut raw = b"PIMSDS01".to_vec();
+        for v in [5u32, 8, 8, 3] {
+            raw.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(&p2, &raw).unwrap();
+        assert!(Dataset::load_bin(p2.to_str().unwrap()).is_err());
+    }
+}

@@ -1,0 +1,468 @@
+//! Minimal JSON parser + writer (no `serde_json` in the offline image).
+//!
+//! Parses the artifact interchange files (`quant_golden.json`,
+//! `golden_infer.json`, `table1.json`, `manifest.json`) and serializes
+//! bench/experiment reports. Supports the full JSON value grammar with
+//! f64 numbers; no streaming, documents are artifact-sized (< MBs).
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+#[derive(Debug, Clone)]
+pub struct JsonError {
+    pub pos: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
+
+struct Parser<'a> {
+    s: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn err<T>(&self, msg: impl Into<String>) -> Result<T, JsonError> {
+        Err(JsonError { pos: self.i, msg: msg.into() })
+    }
+
+    fn ws(&mut self) {
+        while self.i < self.s.len()
+            && matches!(self.s[self.i], b' ' | b'\t' | b'\n' | b'\r')
+        {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.s.get(self.i).copied()
+    }
+
+    fn eat(&mut self, c: u8) -> Result<(), JsonError> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            self.err(format!(
+                "expected '{}', found '{}'",
+                c as char,
+                self.peek().map(|b| b as char).unwrap_or('∅')
+            ))
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Json) -> Result<Json, JsonError> {
+        if self.s[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            self.err(format!("expected '{word}'"))
+        }
+    }
+
+    fn string(&mut self) -> Result<String, JsonError> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => return self.err("unterminated string"),
+                Some(b'"') => {
+                    self.i += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.i += 1;
+                    let c = self.peek().ok_or(JsonError {
+                        pos: self.i,
+                        msg: "bad escape".into(),
+                    })?;
+                    self.i += 1;
+                    match c {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b't' => out.push('\t'),
+                        b'r' => out.push('\r'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'u' => {
+                            if self.i + 4 > self.s.len() {
+                                return self.err("bad \\u escape");
+                            }
+                            let hex = std::str::from_utf8(
+                                &self.s[self.i..self.i + 4],
+                            )
+                            .map_err(|_| JsonError {
+                                pos: self.i,
+                                msg: "bad \\u".into(),
+                            })?;
+                            let cp = u32::from_str_radix(hex, 16).map_err(
+                                |_| JsonError {
+                                    pos: self.i,
+                                    msg: "bad \\u".into(),
+                                },
+                            )?;
+                            self.i += 4;
+                            out.push(
+                                char::from_u32(cp).unwrap_or('\u{fffd}'),
+                            );
+                        }
+                        other => {
+                            return self.err(format!(
+                                "bad escape '\\{}'",
+                                other as char
+                            ))
+                        }
+                    }
+                }
+                Some(c) => {
+                    // Copy a UTF-8 run verbatim.
+                    if c < 0x80 {
+                        out.push(c as char);
+                        self.i += 1;
+                    } else {
+                        let start = self.i;
+                        self.i += 1;
+                        while self.i < self.s.len()
+                            && self.s[self.i] & 0xC0 == 0x80
+                        {
+                            self.i += 1;
+                        }
+                        out.push_str(
+                            std::str::from_utf8(&self.s[start..self.i])
+                                .map_err(|_| JsonError {
+                                    pos: start,
+                                    msg: "invalid utf-8".into(),
+                                })?,
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, JsonError> {
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        while self
+            .peek()
+            .map(|c| c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-'))
+            .unwrap_or(false)
+        {
+            self.i += 1;
+        }
+        let text = std::str::from_utf8(&self.s[start..self.i]).unwrap();
+        text.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| JsonError { pos: start, msg: format!("bad number '{text}'") })
+    }
+
+    fn value(&mut self) -> Result<Json, JsonError> {
+        self.ws();
+        match self.peek() {
+            None => self.err("unexpected end"),
+            Some(b'n') => self.lit("null", Json::Null),
+            Some(b't') => self.lit("true", Json::Bool(true)),
+            Some(b'f') => self.lit("false", Json::Bool(false)),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b'[') => {
+                self.i += 1;
+                let mut arr = Vec::new();
+                self.ws();
+                if self.peek() == Some(b']') {
+                    self.i += 1;
+                    return Ok(Json::Arr(arr));
+                }
+                loop {
+                    arr.push(self.value()?);
+                    self.ws();
+                    match self.peek() {
+                        Some(b',') => self.i += 1,
+                        Some(b']') => {
+                            self.i += 1;
+                            return Ok(Json::Arr(arr));
+                        }
+                        _ => return self.err("expected ',' or ']'"),
+                    }
+                }
+            }
+            Some(b'{') => {
+                self.i += 1;
+                let mut obj = BTreeMap::new();
+                self.ws();
+                if self.peek() == Some(b'}') {
+                    self.i += 1;
+                    return Ok(Json::Obj(obj));
+                }
+                loop {
+                    self.ws();
+                    let key = self.string()?;
+                    self.ws();
+                    self.eat(b':')?;
+                    obj.insert(key, self.value()?);
+                    self.ws();
+                    match self.peek() {
+                        Some(b',') => self.i += 1,
+                        Some(b'}') => {
+                            self.i += 1;
+                            return Ok(Json::Obj(obj));
+                        }
+                        _ => return self.err("expected ',' or '}'"),
+                    }
+                }
+            }
+            Some(_) => self.number(),
+        }
+    }
+}
+
+impl Json {
+    pub fn parse(text: &str) -> Result<Json, JsonError> {
+        let mut p = Parser { s: text.as_bytes(), i: 0 };
+        let v = p.value()?;
+        p.ws();
+        if p.i != p.s.len() {
+            return p.err("trailing garbage");
+        }
+        Ok(v)
+    }
+
+    pub fn load(path: &str) -> anyhow::Result<Json> {
+        let text = std::fs::read_to_string(path)?;
+        Ok(Json::parse(&text)?)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(o) => o.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn idx(&self, i: usize) -> Option<&Json> {
+        match self {
+            Json::Arr(a) => a.get(i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    /// Flatten an array of numbers.
+    pub fn as_f64_vec(&self) -> Option<Vec<f64>> {
+        self.as_arr()?.iter().map(Json::as_f64).collect()
+    }
+
+    /// Serialize (stable key order — Obj is a BTreeMap).
+    pub fn dump(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s);
+        s
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(x) => {
+                if x.fract() == 0.0 && x.abs() < 1e15 {
+                    out.push_str(&format!("{}", *x as i64));
+                } else {
+                    out.push_str(&format!("{x}"));
+                }
+            }
+            Json::Str(s) => {
+                out.push('"');
+                for c in s.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\t' => out.push_str("\\t"),
+                        '\r' => out.push_str("\\r"),
+                        c if (c as u32) < 0x20 => {
+                            out.push_str(&format!("\\u{:04x}", c as u32))
+                        }
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+            Json::Arr(a) => {
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(o) => {
+                out.push('{');
+                for (i, (k, v)) in o.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    Json::Str(k.clone()).write(out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars() {
+        assert_eq!(Json::parse("null").unwrap(), Json::Null);
+        assert_eq!(Json::parse("true").unwrap(), Json::Bool(true));
+        assert_eq!(Json::parse("-2.5e2").unwrap(), Json::Num(-250.0));
+        assert_eq!(
+            Json::parse("\"a\\nb\"").unwrap(),
+            Json::Str("a\nb".into())
+        );
+    }
+
+    #[test]
+    fn parses_nested() {
+        let j = Json::parse(r#"{"a": [1, 2, {"b": false}], "c": "x"}"#)
+            .unwrap();
+        assert_eq!(j.get("c").unwrap().as_str(), Some("x"));
+        assert_eq!(j.get("a").unwrap().idx(1).unwrap().as_f64(), Some(2.0));
+        assert_eq!(
+            j.get("a").unwrap().idx(2).unwrap().get("b").unwrap(),
+            &Json::Bool(false)
+        );
+    }
+
+    #[test]
+    fn f64_vec() {
+        let j = Json::parse("[1, 2.5, 3]").unwrap();
+        assert_eq!(j.as_f64_vec().unwrap(), vec![1.0, 2.5, 3.0]);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("1 2").is_err());
+        assert!(Json::parse("nul").is_err());
+    }
+
+    #[test]
+    fn roundtrip() {
+        let src = r#"{"a":[1,2.5,null,true],"s":"q\"uote"}"#;
+        let j = Json::parse(src).unwrap();
+        let j2 = Json::parse(&j.dump()).unwrap();
+        assert_eq!(j, j2);
+    }
+
+    #[test]
+    fn unicode_escapes() {
+        assert_eq!(
+            Json::parse(r#""é""#).unwrap(),
+            Json::Str("é".into())
+        );
+        let j = Json::parse("\"héllo\"").unwrap();
+        assert_eq!(j.as_str(), Some("héllo"));
+    }
+
+    #[test]
+    fn empty_containers() {
+        assert_eq!(Json::parse("[]").unwrap(), Json::Arr(vec![]));
+        assert_eq!(Json::parse("{}").unwrap(), Json::Obj(BTreeMap::new()));
+    }
+
+    fn gen_json(g: &mut crate::proptest_lite::Gen, depth: usize) -> Json {
+        match if depth == 0 { g.usize(0, 3) } else { g.usize(0, 5) } {
+            0 => Json::Null,
+            1 => Json::Bool(g.bool()),
+            2 => Json::Num((g.f64(-1e6, 1e6) * 100.0).round() / 100.0),
+            3 => Json::Str(
+                (0..g.usize(0, 8))
+                    .map(|_| {
+                        *g.choose(&[
+                            'a', 'b', '"', '\\', '\n', 'é', '0', ' ',
+                        ])
+                    })
+                    .collect(),
+            ),
+            4 => Json::Arr(
+                (0..g.usize(0, 4))
+                    .map(|_| gen_json(g, depth - 1))
+                    .collect(),
+            ),
+            _ => Json::Obj(
+                (0..g.usize(0, 4))
+                    .map(|i| (format!("k{i}"), gen_json(g, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+
+    #[test]
+    fn fuzz_roundtrip_property() {
+        let mut r = crate::proptest_lite::Runner::new(0x15E);
+        r.run("dump/parse roundtrip", |g| {
+            let v = gen_json(g, 3);
+            let back = Json::parse(&v.dump()).unwrap();
+            assert_eq!(v, back, "dump: {}", v.dump());
+        });
+    }
+
+    #[test]
+    fn fuzz_parser_never_panics_on_garbage() {
+        let mut r = crate::proptest_lite::Runner::new(0x15F);
+        r.run("parser total on garbage", |g| {
+            let bytes: Vec<u8> = (0..g.usize(0, 40))
+                .map(|_| *g.choose(b"{}[]\",:.0123456789truefalsn\\ "))
+                .collect();
+            let text = String::from_utf8_lossy(&bytes).into_owned();
+            let _ = Json::parse(&text); // must return, not panic
+        });
+    }
+}

@@ -1,0 +1,45 @@
+//! # PIMS — Processing-In-Memory SOT-MRAM CNN accelerator
+//!
+//! Reproduction of Roohi, Angizi, Fan & DeMara, *"Processing-In-Memory
+//! Acceleration of Convolutional Neural Networks for Energy-Efficiency,
+//! and Power-Intermittency Resilience"* (2019).
+//!
+//! Three-layer architecture (see `DESIGN.md`):
+//! * **L3 (this crate)** — serving coordinator, PIM co-simulator,
+//!   baselines, energy/area models, CLI.
+//! * **L2** — JAX bitwise CNN, AOT-lowered to HLO text (build time).
+//! * **L1** — Pallas AND-Accumulation kernel (build time).
+//!
+//! Module map (bottom-up):
+//! * substrates: [`prng`], [`proptest_lite`], [`benchlib`],
+//!   [`configsys`], [`jsonlite`], [`cli`]
+//! * algorithm: [`bitops`] (Eq. 1 ground truth), [`quant`] (DoReFa)
+//! * hardware sim: [`device`], [`subarray`], [`arch`], [`compressor`],
+//!   [`asr`], [`nvfa`], [`intermittency`], [`energy`]
+//! * system: [`cnn`], [`accel`], [`baselines`], [`dataset`]
+//! * serving: [`runtime`], [`coordinator`], [`metrics`]
+
+pub mod benchlib;
+pub mod bitops;
+pub mod cli;
+pub mod configsys;
+pub mod jsonlite;
+pub mod prng;
+pub mod proptest_lite;
+pub mod quant;
+
+pub mod accel;
+pub mod arch;
+pub mod asr;
+pub mod baselines;
+pub mod cnn;
+pub mod compressor;
+pub mod coordinator;
+pub mod dataset;
+pub mod device;
+pub mod energy;
+pub mod intermittency;
+pub mod metrics;
+pub mod nvfa;
+pub mod runtime;
+pub mod subarray;

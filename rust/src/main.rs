@@ -1,0 +1,414 @@
+//! `pims` — leader binary: serve the bitwise CNN over PJRT, or drive
+//! the PIM co-simulator from the command line.
+//!
+//! Subcommands:
+//!   serve          E2E serving over the AOT artifacts + synthetic SVHN
+//!   simulate       PIM energy/latency breakdown for one design point
+//!   sweep          Fig. 9/10-style sweep over designs x W:I x batch
+//!   sense-mc       Fig. 4b Monte Carlo of the AND sense margin
+//!   intermittent   Fig. 7b power-failure resilience run
+//!   info           artifact + config summary
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use pims::accel::{Accelerator, Proposed};
+use pims::baselines::{Asic, Imce, Reram};
+use pims::cli::{flag, opt_default, Cli};
+use pims::cnn;
+use pims::configsys::Config;
+use pims::coordinator::{BatchPolicy, Coordinator, PjrtBackend};
+use pims::dataset::Dataset;
+use pims::device::{monte_carlo_sense, SotCell};
+use pims::intermittency::{
+    forward_progress, run_intermittent, FrameWorkload, PowerTrace,
+};
+use pims::nvfa::NvPolicy;
+use pims::runtime::{artifacts_dir, Engine, Manifest};
+
+fn cli() -> Cli {
+    Cli::new("pims", "SOT-MRAM PIM CNN accelerator (paper reproduction)")
+        .command(
+            "serve",
+            "serve the AOT model over synthetic SVHN and report accuracy/latency/throughput",
+            vec![
+                opt_default("batch", "compiled batch size (1 or 8)", "8"),
+                opt_default("requests", "number of requests", "512"),
+                opt_default("queue", "ingress queue depth", "256"),
+                opt_default("wait-ms", "max batch wait (ms)", "2"),
+                opt_default("config", "optional config file", ""),
+            ],
+        )
+        .command(
+            "simulate",
+            "PIM co-simulation energy/latency breakdown for one design point",
+            vec![
+                opt_default("design", "proposed|imce|reram|asic", "proposed"),
+                opt_default("model", "svhn|alexnet|lenet", "svhn"),
+                opt_default("wbits", "weight bits", "1"),
+                opt_default("abits", "activation bits", "4"),
+                opt_default("batch", "batch size", "8"),
+            ],
+        )
+        .command(
+            "sweep",
+            "sweep all designs x W:I configs (Fig. 9/10 data)",
+            vec![
+                opt_default("model", "svhn|alexnet|lenet", "svhn"),
+                opt_default("batch", "batch size", "8"),
+            ],
+        )
+        .command(
+            "sense-mc",
+            "Monte Carlo of the dual-row AND sense voltage (Fig. 4b)",
+            vec![
+                opt_default("sigma", "relative MTJ-resistance sigma", "0.05"),
+                opt_default("samples", "MC samples", "10000"),
+                opt_default("seed", "PRNG seed", "42"),
+            ],
+        )
+        .command(
+            "intermittent",
+            "run a frame workload under power failures (Fig. 7b)",
+            vec![
+                opt_default("frames", "frames to complete", "200"),
+                opt_default("mean-on", "mean on-time (cycles)", "300"),
+                opt_default("ckpt", "checkpoint period (frames)", "20"),
+                flag("volatile", "CMOS-only baseline (no NV-FA)"),
+            ],
+        )
+        .command("info", "artifact and configuration summary", vec![])
+        .command(
+            "probe",
+            "load an HLO file, feed a constant image [b,h,w,c], print output stats (debugging)",
+            vec![
+                opt_default("hlo", "path to .hlo.txt", ""),
+                opt_default("shape", "b,h,w,c", "1,40,40,3"),
+                opt_default("fill", "constant fill value", "0.5"),
+            ],
+        )
+}
+
+fn pick_model(name: &str) -> Result<cnn::Model> {
+    Ok(match name {
+        "svhn" => cnn::svhn_net(),
+        "alexnet" => cnn::alexnet(),
+        "lenet" => cnn::lenet(),
+        other => anyhow::bail!("unknown model '{other}'"),
+    })
+}
+
+fn pick_design(name: &str) -> Result<Box<dyn Accelerator>> {
+    Ok(match name {
+        "proposed" => Box::new(Proposed::default()),
+        "imce" => Box::new(Imce::default()),
+        "reram" => Box::new(Reram::default()),
+        "asic" => Box::new(Asic::default()),
+        other => anyhow::bail!("unknown design '{other}'"),
+    })
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let parsed = match cli().parse(&args) {
+        Ok(p) => p,
+        Err(msg) => {
+            eprintln!("{msg}");
+            std::process::exit(if msg.starts_with("unknown") { 2 } else { 0 });
+        }
+    };
+    let code = match run(parsed) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(p: pims::cli::Parsed) -> Result<()> {
+    match p.command.as_str() {
+        "serve" => cmd_serve(&p),
+        "simulate" => cmd_simulate(&p),
+        "sweep" => cmd_sweep(&p),
+        "sense-mc" => cmd_sense_mc(&p),
+        "intermittent" => cmd_intermittent(&p),
+        "info" => cmd_info(),
+        "probe" => cmd_probe(&p),
+        other => anyhow::bail!("unhandled command {other}"),
+    }
+}
+
+fn cmd_serve(p: &pims::cli::Parsed) -> Result<()> {
+    let mut cfg = Config::default();
+    let cfg_path = p.get("config").unwrap_or("");
+    if !cfg_path.is_empty() {
+        cfg = Config::load(cfg_path)?;
+    }
+    for (k, v) in &p.set_overrides {
+        cfg.set(k, v)?;
+    }
+    let batch = p.get_usize("batch")?.unwrap_or(8);
+    let requests = cfg.int_or(
+        "serve.requests",
+        p.get_usize("requests")?.unwrap_or(512) as i64,
+    ) as usize;
+    let queue = p.get_usize("queue")?.unwrap_or(256);
+    let wait_ms = p.get_usize("wait-ms")?.unwrap_or(2) as u64;
+
+    let dir = artifacts_dir();
+    let manifest = Manifest::load(&dir)?;
+    anyhow::ensure!(
+        manifest.batches.contains(&batch),
+        "batch {batch} not exported (available: {:?})",
+        manifest.batches
+    );
+    let ds =
+        Dataset::load_bin(dir.join("svhn_test.bin").to_str().unwrap())?;
+    println!(
+        "serving W{}:I{} model, batch={batch}, {} test images",
+        manifest.w_bits, manifest.a_bits, ds.n
+    );
+
+    let model_path = manifest.model_path(&dir, batch);
+    let (h, w, c) = manifest.input_shape;
+    let elems = manifest.input_elems();
+    let classes = manifest.num_classes;
+    let coordinator = Coordinator::start(
+        move || {
+            let engine = Engine::cpu()?;
+            println!("PJRT platform: {}", engine.platform());
+            let exe =
+                engine.load_hlo(&model_path, batch, elems, classes)?;
+            Ok(PjrtBackend { exe, shape: [batch, h, w, c] })
+        },
+        BatchPolicy { max_wait: Duration::from_millis(wait_ms) },
+        queue,
+    )?;
+
+    let t0 = Instant::now();
+    let mut correct = 0usize;
+    let mut done = 0usize;
+    let mut pendings = Vec::new();
+    for i in 0..requests {
+        let img = ds.image(i % ds.n).to_vec();
+        pendings.push((i % ds.n, coordinator.submit_blocking(img)?));
+        // Harvest in waves to bound in-flight memory.
+        if pendings.len() >= 64 {
+            for (idx, pend) in pendings.drain(..) {
+                let r = pend.wait()?;
+                done += 1;
+                if r.prediction == ds.labels[idx] as usize {
+                    correct += 1;
+                }
+            }
+        }
+    }
+    for (idx, pend) in pendings.drain(..) {
+        let r = pend.wait()?;
+        done += 1;
+        if r.prediction == ds.labels[idx] as usize {
+            correct += 1;
+        }
+    }
+    let wall = t0.elapsed();
+    let m = coordinator.shutdown();
+    println!("\n== serve results ==");
+    println!("requests        : {done}");
+    println!(
+        "accuracy        : {:.2}% ({correct}/{done})",
+        100.0 * correct as f64 / done as f64
+    );
+    println!(
+        "throughput      : {:.1} img/s (wall {:.2?})",
+        done as f64 / wall.as_secs_f64(),
+        wall
+    );
+    println!("request latency : {}", m.latency.summary());
+    println!("batch exec      : {}", m.exec_latency.summary());
+    println!(
+        "batches         : {} (mean fill {:.0}%)",
+        m.counters.batches,
+        100.0 * m.counters.mean_batch_fill(batch)
+    );
+    Ok(())
+}
+
+fn cmd_simulate(p: &pims::cli::Parsed) -> Result<()> {
+    let design = pick_design(p.get("design").unwrap())?;
+    let model = pick_model(p.get("model").unwrap())?;
+    let w = p.get_usize("wbits")?.unwrap_or(1) as u32;
+    let a = p.get_usize("abits")?.unwrap_or(4) as u32;
+    let batch = p.get_usize("batch")?.unwrap_or(8);
+    let est = design.estimate(&model, w, a, batch);
+    println!(
+        "design={} model={} W{}:I{} batch={}",
+        est.design, model.name, w, a, batch
+    );
+    println!("{}", est.cost.table());
+    println!("area           : {:.4} mm²", est.area.total_mm2);
+    for (k, v) in est.area.components() {
+        println!("  {k:<14}: {v:.4} mm²");
+    }
+    println!("energy/frame   : {:.3} µJ", est.uj_per_frame());
+    println!("frames/s       : {:.0}", est.fps());
+    println!("frames/s/mm²   : {:.0}", est.fps_per_mm2());
+    println!("frames/µJ/mm²  : {:.2}", est.eff_per_mm2());
+    Ok(())
+}
+
+fn cmd_sweep(p: &pims::cli::Parsed) -> Result<()> {
+    let model = pick_model(p.get("model").unwrap())?;
+    let batch = p.get_usize("batch")?.unwrap_or(8);
+    let designs: Vec<Box<dyn Accelerator>> = vec![
+        Box::new(Proposed::default()),
+        Box::new(Imce::default()),
+        Box::new(Reram::default()),
+        Box::new(Asic::default()),
+    ];
+    println!("| design | W:I | µJ/frame | fps | fps/mm² | frames/µJ/mm² |");
+    println!("|---|---|---|---|---|---|");
+    for d in &designs {
+        for (w, a) in cnn::SWEEP_CONFIGS {
+            let e = d.estimate(&model, w, a, batch);
+            println!(
+                "| {} | {w}:{a} | {:.2} | {:.0} | {:.0} | {:.2} |",
+                e.design,
+                e.uj_per_frame(),
+                e.fps(),
+                e.fps_per_mm2(),
+                e.eff_per_mm2()
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_sense_mc(p: &pims::cli::Parsed) -> Result<()> {
+    let sigma: f64 = p.get("sigma").unwrap().parse()?;
+    let samples = p.get_usize("samples")?.unwrap_or(10_000);
+    let seed = p.get_usize("seed")?.unwrap_or(42) as u64;
+    let mc =
+        monte_carlo_sense(&SotCell::default(), 0.2, sigma, samples, seed);
+    let stats = |v: &[f64]| {
+        let mean = v.iter().sum::<f64>() / v.len() as f64;
+        let var = v.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / v.len() as f64;
+        (mean * 1e3, var.sqrt() * 1e3)
+    };
+    println!(
+        "Monte Carlo of V_sense (dual-row AND read), sigma={sigma}, n={samples}"
+    );
+    for (name, v) in
+        [("(0,0)", &mc.v00), ("(0,1)", &mc.v01), ("(1,1)", &mc.v11)]
+    {
+        let (m, s) = stats(v);
+        println!("  state {name}: mean={m:.2} mV  sd={s:.3} mV");
+    }
+    println!("  AND reference : {:.2} mV", mc.v_ref_and * 1e3);
+    println!("  worst margin  : {:.3} mV", mc.and_margin_mv);
+    println!("  error rate    : {:.2e}", mc.and_error_rate);
+    Ok(())
+}
+
+fn cmd_intermittent(p: &pims::cli::Parsed) -> Result<()> {
+    let frames = p.get_usize("frames")?.unwrap_or(200) as u64;
+    let mean_on = p.get_usize("mean-on")?.unwrap_or(300) as f64;
+    let ckpt = p.get_usize("ckpt")?.unwrap_or(20) as u64;
+    let volatile = p.has("volatile");
+    let workload = FrameWorkload {
+        frames,
+        cycles_per_frame: 10,
+        value_per_frame: 1,
+    };
+    let trace = PowerTrace::poisson(
+        mean_on,
+        50,
+        frames * workload.cycles_per_frame * 20,
+        7,
+    );
+    let r = run_intermittent(workload, &trace, NvPolicy::DualFf, ckpt, volatile);
+    println!(
+        "mode={} frames={}/{} failures={} reexecuted={} progress={:.3} finished={}",
+        if volatile { "volatile" } else { "nv-fa" },
+        r.frames_completed,
+        frames,
+        r.failures,
+        r.frames_reexecuted,
+        forward_progress(&r, &workload),
+        r.finished
+    );
+    for e in r.events.iter().take(12) {
+        println!("  {e:?}");
+    }
+    if r.events.len() > 12 {
+        println!("  ... {} more events", r.events.len() - 12);
+    }
+    Ok(())
+}
+
+fn cmd_probe(p: &pims::cli::Parsed) -> Result<()> {
+    let hlo = p.get("hlo").unwrap_or("");
+    anyhow::ensure!(!hlo.is_empty(), "--hlo required");
+    let dims: Vec<usize> = p
+        .get("shape")
+        .unwrap()
+        .split(',')
+        .map(|s| s.parse().unwrap())
+        .collect();
+    let fill: f32 = p.get("fill").unwrap().parse()?;
+    let n: usize = dims.iter().product();
+    let proto = xla::HloModuleProto::from_text_file(hlo)?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let client = xla::PjRtClient::cpu()?;
+    let exe = client.compile(&comp)?;
+    let dims_i: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    let lit = xla::Literal::vec1(&vec![fill; n]).reshape(&dims_i)?;
+    let out = exe.execute::<xla::Literal>(&[lit])?[0][0]
+        .to_literal_sync()?
+        .to_tuple1()?;
+    let vals: Vec<f32> = out.to_vec()?;
+    let nan = vals.iter().filter(|v| v.is_nan()).count();
+    let mx = vals.iter().cloned().fold(f32::MIN, f32::max);
+    let mn = vals.iter().cloned().fold(f32::MAX, f32::min);
+    println!(
+        "out: len={} nan={} min={} max={} head={:?}",
+        vals.len(),
+        nan,
+        mn,
+        mx,
+        &vals[..vals.len().min(10)]
+    );
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let dir = artifacts_dir();
+    println!("artifacts dir: {}", dir.display());
+    match Manifest::load(&dir) {
+        Ok(m) => {
+            println!(
+                "  model: W{}:I{}, batches {:?}, input {:?}, {} classes",
+                m.w_bits, m.a_bits, m.batches, m.input_shape, m.num_classes
+            );
+        }
+        Err(e) => println!("  no manifest ({e}); run `make artifacts`"),
+    }
+    let org = pims::arch::ChipOrg::default();
+    println!(
+        "chip organization: {} sub-arrays ({}x{}), {:.0} Mb total",
+        org.subarrays_total(),
+        org.subarray.rows,
+        org.subarray.cols,
+        org.capacity_bits() as f64 / 1024.0 / 1024.0
+    );
+    let m = cnn::svhn_net();
+    println!(
+        "svhn model: {} layers, {:.1} MMACs/img, {} weights",
+        m.layers.len(),
+        m.total_macs() as f64 / 1e6,
+        m.total_weights()
+    );
+    Ok(())
+}

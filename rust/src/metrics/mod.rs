@@ -1,0 +1,202 @@
+//! Serving metrics: counters, latency histograms, throughput windows.
+//!
+//! The coordinator records one [`LatencyRecorder`] sample per request
+//! and the report formatter produces the tables the E2E driver and
+//! EXPERIMENTS.md quote. Lock-free-enough for the single-leader
+//! coordinator: recorders are owned per-thread and merged at report
+//! time.
+
+use std::time::{Duration, Instant};
+
+/// Latency histogram with exact percentiles (stores all samples in ns;
+/// fine for the run sizes the harness serves).
+#[derive(Debug, Clone, Default)]
+pub struct LatencyRecorder {
+    samples_ns: Vec<u64>,
+}
+
+impl LatencyRecorder {
+    pub fn record(&mut self, d: Duration) {
+        self.samples_ns.push(d.as_nanos() as u64);
+    }
+
+    pub fn record_ns(&mut self, ns: u64) {
+        self.samples_ns.push(ns);
+    }
+
+    pub fn merge(&mut self, other: &LatencyRecorder) {
+        self.samples_ns.extend_from_slice(&other.samples_ns);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_ns.len()
+    }
+
+    pub fn percentile(&self, p: f64) -> Option<Duration> {
+        if self.samples_ns.is_empty() {
+            return None;
+        }
+        let mut s = self.samples_ns.clone();
+        s.sort_unstable();
+        let idx = ((s.len() as f64 - 1.0) * p).round() as usize;
+        Some(Duration::from_nanos(s[idx]))
+    }
+
+    pub fn mean(&self) -> Option<Duration> {
+        if self.samples_ns.is_empty() {
+            return None;
+        }
+        let sum: u64 = self.samples_ns.iter().sum();
+        Some(Duration::from_nanos(sum / self.samples_ns.len() as u64))
+    }
+
+    /// "p50 / p95 / p99 / mean" one-liner.
+    pub fn summary(&self) -> String {
+        match (self.percentile(0.5), self.percentile(0.95), self.percentile(0.99), self.mean()) {
+            (Some(p50), Some(p95), Some(p99), Some(mean)) => format!(
+                "p50={:.2?} p95={:.2?} p99={:.2?} mean={:.2?} n={}",
+                p50,
+                p95,
+                p99,
+                mean,
+                self.count()
+            ),
+            _ => "no samples".to_string(),
+        }
+    }
+}
+
+/// Throughput meter over a wall-clock window.
+#[derive(Debug)]
+pub struct Throughput {
+    start: Instant,
+    items: u64,
+}
+
+impl Default for Throughput {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Throughput {
+    pub fn new() -> Self {
+        Throughput { start: Instant::now(), items: 0 }
+    }
+
+    pub fn add(&mut self, n: u64) {
+        self.items += n;
+    }
+
+    pub fn items(&self) -> u64 {
+        self.items
+    }
+
+    pub fn per_second(&self) -> f64 {
+        let secs = self.start.elapsed().as_secs_f64();
+        if secs <= 0.0 {
+            0.0
+        } else {
+            self.items as f64 / secs
+        }
+    }
+}
+
+/// Simple named counters for coordinator events.
+#[derive(Debug, Clone, Default)]
+pub struct Counters {
+    pub enqueued: u64,
+    pub served: u64,
+    pub batches: u64,
+    pub rejected: u64,
+    pub errors: u64,
+}
+
+impl Counters {
+    pub fn merge(&mut self, o: &Counters) {
+        self.enqueued += o.enqueued;
+        self.served += o.served;
+        self.batches += o.batches;
+        self.rejected += o.rejected;
+        self.errors += o.errors;
+    }
+
+    /// Mean occupancy of the dynamic batches.
+    pub fn mean_batch_fill(&self, batch_size: usize) -> f64 {
+        if self.batches == 0 {
+            return 0.0;
+        }
+        self.served as f64 / (self.batches as f64 * batch_size as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_exact() {
+        let mut r = LatencyRecorder::default();
+        for i in 1..=100u64 {
+            r.record_ns(i * 1000);
+        }
+        assert_eq!(r.count(), 100);
+        assert_eq!(r.percentile(0.0).unwrap(), Duration::from_nanos(1000));
+        assert_eq!(
+            r.percentile(1.0).unwrap(),
+            Duration::from_nanos(100_000)
+        );
+        let p50 = r.percentile(0.5).unwrap().as_nanos() as u64;
+        assert!((49_000..=51_000).contains(&p50));
+        assert_eq!(r.mean().unwrap(), Duration::from_nanos(50_500));
+    }
+
+    #[test]
+    fn empty_recorder() {
+        let r = LatencyRecorder::default();
+        assert!(r.percentile(0.5).is_none());
+        assert!(r.mean().is_none());
+        assert_eq!(r.summary(), "no samples");
+    }
+
+    #[test]
+    fn merge_recorders() {
+        let mut a = LatencyRecorder::default();
+        a.record_ns(10);
+        let mut b = LatencyRecorder::default();
+        b.record_ns(20);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+    }
+
+    #[test]
+    fn throughput_counts() {
+        let mut t = Throughput::new();
+        t.add(5);
+        t.add(3);
+        assert_eq!(t.items(), 8);
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(t.per_second() > 0.0);
+    }
+
+    #[test]
+    fn counters_and_fill() {
+        let mut c = Counters::default();
+        c.served = 30;
+        c.batches = 5;
+        assert!((c.mean_batch_fill(8) - 0.75).abs() < 1e-9);
+        let mut d = Counters::default();
+        d.errors = 2;
+        c.merge(&d);
+        assert_eq!(c.errors, 2);
+    }
+
+    #[test]
+    fn summary_format() {
+        let mut r = LatencyRecorder::default();
+        r.record(Duration::from_micros(100));
+        let s = r.summary();
+        assert!(s.contains("p99"));
+        assert!(s.contains("n=1"));
+    }
+}

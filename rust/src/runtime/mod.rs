@@ -1,0 +1,225 @@
+//! PJRT runtime: load AOT-compiled HLO text and execute it on the
+//! request path (no python anywhere here).
+//!
+//! Wraps the `xla` crate exactly as the reference wiring does
+//! (/opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! HLO **text** is the interchange format — jax ≥ 0.5 emits protos
+//! with 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+//! text parser reassigns ids (see python/compile/aot.py).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A loaded, compiled inference executable.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Input geometry (batch, h, w, c) from the artifact manifest.
+    pub batch: usize,
+    pub input_elems: usize,
+    pub num_classes: usize,
+}
+
+/// The PJRT engine: one CPU client, N compiled model variants.
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Engine> {
+        let client =
+            xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text artifact.
+    pub fn load_hlo(
+        &self,
+        path: &Path,
+        batch: usize,
+        input_elems: usize,
+        num_classes: usize,
+    ) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable { exe, batch, input_elems, num_classes })
+    }
+}
+
+impl Executable {
+    /// Run one batch: `input` must hold `batch * input_elems` f32 NHWC
+    /// values; returns `batch * num_classes` logits.
+    ///
+    /// The exported computation takes the image tensor as its single
+    /// parameter (weights are baked as constants) and returns a
+    /// 1-tuple (aot.py lowers with `return_tuple=True`).
+    pub fn infer(&self, input: &[f32], shape: &[usize]) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            input.len() == self.batch * self.input_elems,
+            "input length {} != batch {} * elems {}",
+            input.len(),
+            self.batch,
+            self.input_elems
+        );
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(input)
+            .reshape(&dims)
+            .context("reshaping input literal")?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[lit])
+            .context("executing")?[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        let out = result.to_tuple1().context("unwrapping 1-tuple")?;
+        let logits: Vec<f32> =
+            out.to_vec::<f32>().context("reading logits")?;
+        anyhow::ensure!(
+            logits.len() == self.batch * self.num_classes,
+            "logit length {} != batch {} * classes {}",
+            logits.len(),
+            self.batch,
+            self.num_classes
+        );
+        Ok(logits)
+    }
+
+    /// Argmax per batch row.
+    pub fn predictions(&self, logits: &[f32]) -> Vec<usize> {
+        logits
+            .chunks(self.num_classes)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+}
+
+/// Locate the artifacts directory: `$PIMS_ARTIFACTS`, else
+/// `./artifacts` relative to the workspace.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("PIMS_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}
+
+/// The served model's manifest (written by aot.py).
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub w_bits: u32,
+    pub a_bits: u32,
+    pub batches: Vec<usize>,
+    pub input_shape: (usize, usize, usize),
+    pub num_classes: usize,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let j = crate::jsonlite::Json::load(
+            dir.join("manifest.json").to_str().unwrap(),
+        )
+        .context("loading manifest.json (run `make artifacts`)")?;
+        let num = |k: &str| -> Result<f64> {
+            j.get(k)
+                .and_then(|v| v.as_f64())
+                .with_context(|| format!("manifest missing '{k}'"))
+        };
+        let shape = j
+            .get("input_shape")
+            .and_then(|v| v.as_f64_vec())
+            .context("manifest missing input_shape")?;
+        anyhow::ensure!(shape.len() == 3, "input_shape must be rank 3");
+        Ok(Manifest {
+            w_bits: num("deploy_w_bits")? as u32,
+            a_bits: num("deploy_a_bits")? as u32,
+            batches: j
+                .get("batches")
+                .and_then(|v| v.as_f64_vec())
+                .context("manifest missing batches")?
+                .iter()
+                .map(|&b| b as usize)
+                .collect(),
+            input_shape: (
+                shape[0] as usize,
+                shape[1] as usize,
+                shape[2] as usize,
+            ),
+            num_classes: num("num_classes")? as usize,
+        })
+    }
+
+    pub fn input_elems(&self) -> usize {
+        self.input_shape.0 * self.input_shape.1 * self.input_shape.2
+    }
+
+    pub fn model_path(&self, dir: &Path, batch: usize) -> std::path::PathBuf {
+        dir.join(format!(
+            "model_w{}a{}_b{batch}.hlo.txt",
+            self.w_bits, self.a_bits
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Engine-level tests that need artifacts live in
+    // rust/tests/integration.rs (they require `make artifacts`).
+
+    #[test]
+    fn artifacts_dir_env_override() {
+        std::env::set_var("PIMS_ARTIFACTS", "/tmp/xyz");
+        assert_eq!(artifacts_dir(), std::path::PathBuf::from("/tmp/xyz"));
+        std::env::remove_var("PIMS_ARTIFACTS");
+        assert_eq!(artifacts_dir(), std::path::PathBuf::from("artifacts"));
+    }
+
+    #[test]
+    fn manifest_parsing() {
+        let dir = std::env::temp_dir().join("pims_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"deploy_w_bits": 1, "deploy_a_bits": 4, "batches": [1, 8],
+                "input_shape": [40, 40, 3], "num_classes": 10}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.w_bits, 1);
+        assert_eq!(m.a_bits, 4);
+        assert_eq!(m.batches, vec![1, 8]);
+        assert_eq!(m.input_elems(), 4800);
+        assert_eq!(m.num_classes, 10);
+        assert!(m
+            .model_path(&dir, 8)
+            .to_str()
+            .unwrap()
+            .ends_with("model_w1a4_b8.hlo.txt"));
+    }
+
+    #[test]
+    fn manifest_missing_is_error() {
+        let dir = std::env::temp_dir().join("pims_manifest_none");
+        std::fs::create_dir_all(&dir).unwrap();
+        let _ = std::fs::remove_file(dir.join("manifest.json"));
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

@@ -1,0 +1,195 @@
+//! Coordinator end-to-end tests against the mock backend: batching
+//! behaviour under concurrency, ordering, fairness, and sustained
+//! throughput — coordination correctness isolated from XLA.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use pims::coordinator::{
+    Backend, BatchPolicy, Coordinator, MockBackend,
+};
+
+fn img(elems: usize, class: usize) -> Vec<f32> {
+    let mut v = vec![0.0; elems];
+    v[0] = (class as f32 + 0.5) / 10.0;
+    v
+}
+
+#[test]
+fn concurrent_clients_all_served_correctly() {
+    let c = Arc::new(
+        Coordinator::start(
+            || Ok(MockBackend::new(8, 16, 10)),
+            BatchPolicy { max_wait: Duration::from_millis(1) },
+            512,
+        )
+        .unwrap(),
+    );
+    let mut handles = Vec::new();
+    for t in 0..4 {
+        let c = c.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut ok = 0;
+            for i in 0..50 {
+                let class = (t * 7 + i) % 10;
+                let r = c
+                    .submit_blocking(img(16, class))
+                    .unwrap()
+                    .wait()
+                    .unwrap();
+                if r.prediction == class {
+                    ok += 1;
+                }
+            }
+            ok
+        }));
+    }
+    let total: usize =
+        handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert_eq!(total, 200, "all responses must route to their requests");
+    let m = c.metrics();
+    assert_eq!(m.counters.served, 200);
+    // With 4 concurrent producers the batcher should pack > 1
+    // request/batch on average.
+    assert!(
+        (m.counters.served as f64 / m.counters.batches as f64) > 1.1,
+        "batching never engaged: {} batches for {} reqs",
+        m.counters.batches,
+        m.counters.served
+    );
+}
+
+#[test]
+fn responses_carry_monotonic_ids_per_submit_order() {
+    let c = Coordinator::start(
+        || Ok(MockBackend::new(4, 8, 10)),
+        BatchPolicy::default(),
+        64,
+    )
+    .unwrap();
+    let p1 = c.submit(img(8, 1)).unwrap();
+    let p2 = c.submit(img(8, 2)).unwrap();
+    assert!(p2.id > p1.id);
+    let r1 = p1.wait().unwrap();
+    let r2 = p2.wait().unwrap();
+    assert_eq!(r1.prediction, 1);
+    assert_eq!(r2.prediction, 2);
+    c.shutdown();
+}
+
+#[test]
+fn partial_batches_flush_on_deadline() {
+    // One lone request must not wait forever for batch peers.
+    let c = Coordinator::start(
+        || Ok(MockBackend::new(64, 8, 10)),
+        BatchPolicy { max_wait: Duration::from_millis(2) },
+        64,
+    )
+    .unwrap();
+    let t0 = std::time::Instant::now();
+    let r = c.submit(img(8, 5)).unwrap().wait().unwrap();
+    assert_eq!(r.prediction, 5);
+    assert!(
+        t0.elapsed() < Duration::from_millis(500),
+        "deadline flush too slow: {:?}",
+        t0.elapsed()
+    );
+    let m = c.shutdown();
+    assert_eq!(m.counters.batches, 1);
+}
+
+#[test]
+fn sustained_throughput_with_slow_backend() {
+    // Backend takes 1 ms/batch of 8: peak ~8k req/s. Push 400 requests
+    // through and verify the batcher amortizes (wall << 400 ms serial).
+    let c = Coordinator::start(
+        || {
+            let mut b = MockBackend::new(8, 8, 10);
+            b.delay = Duration::from_millis(1);
+            Ok(b)
+        },
+        BatchPolicy { max_wait: Duration::from_micros(500) },
+        512,
+    )
+    .unwrap();
+    let t0 = std::time::Instant::now();
+    let pend: Vec<_> = (0..400)
+        .map(|i| c.submit_blocking(img(8, i % 10)).unwrap())
+        .collect();
+    for p in pend {
+        p.wait().unwrap();
+    }
+    let wall = t0.elapsed();
+    let m = c.shutdown();
+    assert_eq!(m.counters.served, 400);
+    let serial = Duration::from_millis(400);
+    assert!(
+        wall < serial,
+        "batching gave no speedup: wall {wall:?} vs serial {serial:?} \
+         ({} batches)",
+        m.counters.batches
+    );
+}
+
+#[test]
+fn metrics_latency_includes_queue_time() {
+    let c = Coordinator::start(
+        || {
+            let mut b = MockBackend::new(2, 8, 10);
+            b.delay = Duration::from_millis(5);
+            Ok(b)
+        },
+        BatchPolicy::default(),
+        64,
+    )
+    .unwrap();
+    let pend: Vec<_> =
+        (0..6).map(|i| c.submit(img(8, i)).unwrap()).collect();
+    for p in pend {
+        p.wait().unwrap();
+    }
+    let m = c.shutdown();
+    // Request latency (queue + exec) must be >= exec latency.
+    let req_p50 = m.latency.percentile(0.5).unwrap();
+    let exec_p50 = m.exec_latency.percentile(0.5).unwrap();
+    assert!(req_p50 >= exec_p50);
+}
+
+#[test]
+fn geometry_comes_from_backend() {
+    struct Odd;
+    impl Backend for Odd {
+        fn infer_batch(&mut self, f: &[f32]) -> anyhow::Result<Vec<f32>> {
+            assert_eq!(f.len(), 3 * 7);
+            Ok(vec![0.0; 3 * 2])
+        }
+        fn batch_size(&self) -> usize {
+            3
+        }
+        fn input_elems(&self) -> usize {
+            7
+        }
+        fn num_classes(&self) -> usize {
+            2
+        }
+    }
+    let c = Coordinator::start(|| Ok(Odd), BatchPolicy::default(), 8)
+        .unwrap();
+    assert_eq!(c.input_elems(), 7);
+    let r = c.submit(vec![0.0; 7]).unwrap().wait().unwrap();
+    assert_eq!(r.logits.len(), 2);
+    c.shutdown();
+}
+
+#[test]
+fn init_failure_propagates() {
+    let r = Coordinator::start(
+        || -> anyhow::Result<MockBackend> {
+            anyhow::bail!("no artifacts")
+        },
+        BatchPolicy::default(),
+        8,
+    );
+    assert!(r.is_err());
+    assert!(r.err().unwrap().to_string().contains("no artifacts"));
+}

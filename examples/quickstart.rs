@@ -1,27 +1,94 @@
-//! Quickstart: load the AOT artifact, classify one synthetic digit,
-//! and show the PIM simulator's per-image cost estimate.
+//! Quickstart: estimate the PIM chip's cost, serve a few requests
+//! through the multi-worker coordinator with the PIM co-simulation
+//! backend (no artifacts needed), and — when `make artifacts` has run
+//! — classify a real test image over PJRT.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart
+//! # full PJRT section (needs the xla dep wired in, DESIGN.md §4):
+//! make artifacts && cargo run --release --features pjrt --example quickstart
 //! ```
+
+use std::time::Duration;
 
 use anyhow::Result;
 use pims::accel::{Accelerator, Proposed};
 use pims::cnn;
+use pims::coordinator::{BatchPolicy, Coordinator, PimSimBackend};
 use pims::dataset::Dataset;
 use pims::runtime::{artifacts_dir, Engine, Manifest};
 
 fn main() -> Result<()> {
-    // --- 1. Load the artifacts produced by `make artifacts`.
-    let dir = artifacts_dir();
-    let manifest = Manifest::load(&dir)?;
+    // --- 1. What does one inference cost on the SOT-MRAM chip?
+    let est = Proposed::default().estimate(&cnn::svhn_net(), 1, 4, 1);
     println!(
-        "model: W{}:I{} bitwise CNN, input {:?}",
-        manifest.w_bits, manifest.a_bits, manifest.input_shape
+        "PIM estimate (proposed accelerator, W1:I4, batch 1):\n\
+         {:.2} µJ/frame, {:.0} frames/s, {:.4} mm²",
+        est.uj_per_frame(),
+        est.fps(),
+        est.area.total_mm2
     );
 
-    // --- 2. Compile the batch-1 HLO on the PJRT CPU client.
-    let engine = Engine::cpu()?;
+    // --- 2. Serve traffic through the coordinator with the PIM
+    // co-simulation itself as the backend: 2 workers, each owning a
+    // bit-identical replica (same seed) of the bit-accurate datapath.
+    let workers = 2;
+    let model = cnn::micro_net();
+    let coordinator = Coordinator::start_pool(
+        move |_worker| PimSimBackend::new(model.clone(), 1, 4, 2, 42),
+        workers,
+        BatchPolicy { max_wait: Duration::from_millis(1) },
+        64,
+    )?;
+    let elems = coordinator.input_elems();
+    let pendings: Vec<_> = (0..8)
+        .map(|i| {
+            let img: Vec<f32> = (0..elems)
+                .map(|j| ((i * 3 + j) % 13) as f32 / 12.0)
+                .collect();
+            coordinator.submit_blocking(img)
+        })
+        .collect::<Result<_>>()?;
+    let mut energy = 0.0;
+    for (i, p) in pendings.into_iter().enumerate() {
+        let r = p.wait()?;
+        energy += r.energy_uj;
+        println!(
+            "  pimsim request {i}: class {} ({:.3} µJ, {:?})",
+            r.prediction, r.energy_uj, r.latency
+        );
+    }
+    let m = coordinator.shutdown();
+    println!(
+        "pimsim pool: {} served over {} workers, {:.3} µJ total",
+        m.counters.served, workers, energy
+    );
+
+    // --- 3. With artifacts present, classify a real test image over
+    // the AOT-compiled model on PJRT.
+    let dir = artifacts_dir();
+    let manifest = match Manifest::load(&dir) {
+        Ok(m) => m,
+        Err(e) => {
+            println!(
+                "\nskipping PJRT section ({e}); run `make artifacts` \
+                 and rebuild with `--features pjrt` for the full demo"
+            );
+            return Ok(());
+        }
+    };
+    println!(
+        "\nmodel: W{}:I{} bitwise CNN, input {:?}",
+        manifest.w_bits, manifest.a_bits, manifest.input_shape
+    );
+    // Stub builds (no `pjrt` feature) fail here: skip, don't error.
+    let engine = match Engine::cpu() {
+        Ok(e) => e,
+        Err(e) => {
+            println!("skipping PJRT section ({e})");
+            return Ok(());
+        }
+    };
     println!("PJRT platform: {}", engine.platform());
     let exe = engine.load_hlo(
         &manifest.model_path(&dir, 1),
@@ -29,8 +96,6 @@ fn main() -> Result<()> {
         manifest.input_elems(),
         manifest.num_classes,
     )?;
-
-    // --- 3. Classify the first test image.
     let ds = Dataset::load_bin(dir.join("svhn_test.bin").to_str().unwrap())?;
     let (h, w, c) = manifest.input_shape;
     let logits = exe.infer(ds.image(0), &[1, h, w, c])?;
@@ -39,16 +104,6 @@ fn main() -> Result<()> {
         "image 0: predicted {pred}, label {} — logits {:?}",
         ds.labels[0],
         logits.iter().map(|x| (x * 100.0).round() / 100.0).collect::<Vec<_>>()
-    );
-
-    // --- 4. What would this inference cost on the SOT-MRAM chip?
-    let est = Proposed::default().estimate(&cnn::svhn_net(), 1, 4, 1);
-    println!(
-        "\nPIM estimate (proposed accelerator, W1:I4, batch 1):\n\
-         {:.2} µJ/frame, {:.0} frames/s, {:.4} mm²",
-        est.uj_per_frame(),
-        est.fps(),
-        est.area.total_mm2
     );
     Ok(())
 }

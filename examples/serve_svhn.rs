@@ -8,7 +8,7 @@
 //! coordinator + PJRT runtime). Python is not involved at runtime.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example serve_svhn -- [requests] [batch]
+//! make artifacts && cargo run --release --example serve_svhn -- [requests] [batch] [workers]
 //! ```
 
 use std::time::{Duration, Instant};
@@ -24,25 +24,31 @@ fn main() -> Result<()> {
         args.first().map(|s| s.parse()).transpose()?.unwrap_or(512);
     let batch: usize =
         args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(8);
+    let workers: usize =
+        args.get(2).map(|s| s.parse()).transpose()?.unwrap_or(1);
 
     let dir = artifacts_dir();
     let manifest = Manifest::load(&dir)?;
     let ds =
         Dataset::load_bin(dir.join("svhn_test.bin").to_str().unwrap())?;
     println!(
-        "serve_svhn: {} requests, batch {batch}, W{}:I{} model, {} test images",
+        "serve_svhn: {} requests, batch {batch}, {workers} worker(s), \
+         W{}:I{} model, {} test images",
         requests, manifest.w_bits, manifest.a_bits, ds.n
     );
 
     let model_path = manifest.model_path(&dir, batch);
     let (h, w, c) = manifest.input_shape;
     let (elems, classes) = (manifest.input_elems(), manifest.num_classes);
-    let coordinator = Coordinator::start(
-        move || {
+    // Each pool worker compiles its own executable on its own thread:
+    // PJRT handles never cross threads.
+    let coordinator = Coordinator::start_pool(
+        move |_worker| {
             let engine = Engine::cpu()?;
             let exe = engine.load_hlo(&model_path, batch, elems, classes)?;
             Ok(PjrtBackend { exe, shape: [batch, h, w, c] })
         },
+        workers,
         BatchPolicy { max_wait: Duration::from_millis(2) },
         256,
     )?;
@@ -93,6 +99,12 @@ fn main() -> Result<()> {
         m.counters.batches,
         100.0 * m.counters.mean_batch_fill(batch)
     );
+    for (i, s) in m.per_worker.iter().enumerate() {
+        println!(
+            "  worker {i}: served {} in {} batches, {} errors",
+            s.served, s.batches, s.errors
+        );
+    }
     println!("\nper-class accuracy:");
     for d in 0..10 {
         let total: u32 = confusion[d].iter().sum();

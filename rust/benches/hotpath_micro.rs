@@ -78,5 +78,42 @@ fn main() {
     });
     drop(c);
 
+    // --- worker-pool throughput scaling: the same offered load on 1
+    // vs 4 executor workers whose backend sleeps per batch (so the
+    // pool, not the mock, is the variable). The w4/w1 ratio is the
+    // acceptance figure for the executor-pool refactor.
+    let pool_wall = |workers: usize| {
+        let c = Coordinator::start_pool(
+            move |_| {
+                let mut m = MockBackend::new(1, 64, 10);
+                m.delay = Duration::from_micros(400);
+                Ok(m)
+            },
+            workers,
+            BatchPolicy { max_wait: Duration::ZERO },
+            512,
+        )
+        .unwrap();
+        let img = vec![0.25f32; 64];
+        let t0 = std::time::Instant::now();
+        let pendings: Vec<_> = (0..128)
+            .map(|_| c.submit_blocking(img.clone()).unwrap())
+            .collect();
+        for p in pendings {
+            black_box(p.wait().unwrap());
+        }
+        let wall = t0.elapsed();
+        c.shutdown();
+        wall
+    };
+    let w1 = pool_wall(1);
+    let w4 = pool_wall(4);
+    b.note("pool_wall_128req_w1", format!("{w1:.2?}"));
+    b.note("pool_wall_128req_w4", format!("{w4:.2?}"));
+    b.note(
+        "pool_scaling_w4_over_w1",
+        format!("{:.2}x", w1.as_secs_f64() / w4.as_secs_f64()),
+    );
+
     b.report();
 }

@@ -38,13 +38,27 @@ impl BitPlanes {
         );
         let wpr = cols.div_ceil(64);
         let mut planes = vec![vec![0u64; rows * wpr]; bits];
+        // Out-of-range codes truncate to `bits` planes (same contract
+        // as the plane-test loop this replaces); the debug_assert
+        // above still flags them in debug builds.
+        let code_mask = (1u64 << bits) - 1;
         for r in 0..rows {
+            let row_base = r * wpr;
             for c in 0..cols {
-                let code = codes[r * cols + c];
-                for (p, plane) in planes.iter_mut().enumerate() {
-                    if (code >> p) & 1 == 1 {
-                        plane[r * wpr + c / 64] |= 1u64 << (c % 64);
-                    }
+                // Walk only the SET bits of each code (clearing the
+                // lowest one per step) instead of branch-testing all
+                // `bits` planes per element; zero codes — common in
+                // sparse activations and padding — cost one compare.
+                let mut rem = codes[r * cols + c] as u64 & code_mask;
+                if rem == 0 {
+                    continue;
+                }
+                let word = row_base + c / 64;
+                let mask = 1u64 << (c % 64);
+                while rem != 0 {
+                    let p = rem.trailing_zeros() as usize;
+                    planes[p][word] |= mask;
+                    rem &= rem - 1;
                 }
             }
         }
@@ -199,6 +213,73 @@ mod tests {
         let codes: Vec<u32> = (0..6 * 70).map(|i| (i % 16) as u32).collect();
         let bp = BitPlanes::from_codes(&codes, 6, 70, 4);
         assert_eq!(bp.to_codes(), codes);
+    }
+
+    #[test]
+    fn roundtrip_odd_geometry_property() {
+        // cols straddling word boundaries (not multiples of 64) and
+        // every bit width round-trip exactly.
+        let mut r = Runner::new(0xB19);
+        r.run("from_codes/to_codes round-trip", |g| {
+            let rows = g.usize(1, 4);
+            let cols = g.usize(1, 130);
+            let bits = g.usize(1, 8);
+            let codes = g.codes(rows * cols, bits as u32);
+            let bp = BitPlanes::from_codes(&codes, rows, cols, bits);
+            assert_eq!(bp.to_codes(), codes);
+        });
+    }
+
+    #[test]
+    fn roundtrip_single_bit_planes() {
+        let codes: Vec<u32> = (0..67).map(|i| i % 2).collect();
+        let bp = BitPlanes::from_codes(&codes, 1, 67, 1);
+        assert_eq!(bp.to_codes(), codes);
+        assert_eq!(bp.plane_row(0, 0).len(), 2);
+    }
+
+    #[test]
+    fn roundtrip_all_zero_and_all_one_codes() {
+        for bits in [1usize, 3, 8] {
+            let zeros = vec![0u32; 2 * 70];
+            let bz = BitPlanes::from_codes(&zeros, 2, 70, bits);
+            assert_eq!(bz.to_codes(), zeros);
+            for p in 0..bits {
+                assert!(bz.plane_row(p, 0).iter().all(|&w| w == 0));
+            }
+
+            let top = (1u32 << bits) - 1;
+            let ones = vec![top; 2 * 70];
+            let bo = BitPlanes::from_codes(&ones, 2, 70, bits);
+            assert_eq!(bo.to_codes(), ones);
+            // Every plane is fully populated: 70 ones per row.
+            for p in 0..bits {
+                assert_eq!(
+                    cmp_and(bo.plane_row(p, 0), bo.plane_row(p, 1)),
+                    70
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn and_accumulate_matches_naive_u64_dot_property() {
+        // Independent oracle, written out longhand (not via int_dot).
+        let mut r = Runner::new(0xB1A);
+        r.run("Eq.1 == naive u64 dot", |g| {
+            let m_bits = g.usize(1, 8);
+            let n_bits = g.usize(1, 8);
+            let k = g.usize(1, 300);
+            let ia = g.codes(k, m_bits as u32);
+            let iw = g.codes(k, n_bits as u32);
+            let mut naive = 0u64;
+            for i in 0..k {
+                naive += ia[i] as u64 * iw[i] as u64;
+            }
+            let ip = BitPlanes::from_codes(&ia, 1, k, m_bits);
+            let wp = BitPlanes::from_codes(&iw, 1, k, n_bits);
+            assert_eq!(and_accumulate(&ip, 0, &wp, 0), naive);
+        });
     }
 
     #[test]

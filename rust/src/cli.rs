@@ -47,6 +47,18 @@ impl Parsed {
         }
     }
 
+    /// Integer option with a lower bound (e.g. `--workers` must be at
+    /// least 1); missing values fall back to `min`.
+    pub fn get_usize_at_least(
+        &self,
+        name: &str,
+        min: usize,
+    ) -> anyhow::Result<usize> {
+        let v = self.get_usize(name)?.unwrap_or(min);
+        anyhow::ensure!(v >= min, "--{name}: must be >= {min}, got {v}");
+        Ok(v)
+    }
+
     pub fn has(&self, name: &str) -> bool {
         self.flags.contains_key(name)
     }
@@ -282,5 +294,15 @@ mod tests {
     fn bad_usize_is_error() {
         let p = cli().parse(&argv(&["serve", "--batch", "x"])).unwrap();
         assert!(p.get_usize("batch").is_err());
+    }
+
+    #[test]
+    fn usize_at_least_enforces_floor() {
+        let p = cli().parse(&argv(&["serve", "--batch", "4"])).unwrap();
+        assert_eq!(p.get_usize_at_least("batch", 1).unwrap(), 4);
+        // Missing option falls back to the floor itself.
+        assert_eq!(p.get_usize_at_least("artifacts-n", 1).unwrap(), 1);
+        let zero = cli().parse(&argv(&["serve", "--batch", "0"])).unwrap();
+        assert!(zero.get_usize_at_least("batch", 1).is_err());
     }
 }

@@ -252,6 +252,22 @@ pub fn lenet() -> Model {
     }
 }
 
+/// Tiny synthetic model (8x8x1 input, one quantized conv + avg-pool +
+/// FC classifier) for coordinator/PIM-co-sim tests and benches where
+/// the full SVHN network would dominate the runtime.
+pub fn micro_net() -> Model {
+    Model {
+        name: "micro",
+        input_hw: 8,
+        input_c: 1,
+        layers: vec![
+            Layer::Conv { name: "conv1", in_hw: 8, cin: 1, cout: 4, kernel: 3, stride: 1, pad: 1, quant: true },
+            Layer::Pool { name: "pool1", in_hw: 8, c: 4, window: 2 },
+            Layer::Fc { name: "fc1", cin: 4 * 4 * 4, cout: 10, quant: true },
+        ],
+    }
+}
+
 /// All Fig. 9/10 W:I sweep points (paper: 1:1, 1:4, 1:8, 2:2).
 pub const SWEEP_CONFIGS: [(u32, u32); 4] = [(1, 1), (1, 4), (1, 8), (2, 2)];
 
@@ -339,6 +355,17 @@ mod tests {
         let m = lenet();
         assert!(m.total_weights() < 100_000);
         assert_eq!(m.layers[0].out_hw(), 28);
+    }
+
+    #[test]
+    fn micro_net_shapes_chain() {
+        let m = micro_net();
+        assert_eq!(m.layers[0].gemm_shape(), Some((64, 9, 4)));
+        assert_eq!(m.layers[0].out_hw(), 8);
+        assert_eq!(m.layers[1].out_hw(), 4);
+        // FC input must equal the flattened pool output.
+        assert_eq!(m.layers[2].gemm_shape(), Some((1, 64, 10)));
+        assert_eq!(m.layers.last().unwrap().out_channels(), 10);
     }
 
     #[test]

@@ -1,0 +1,150 @@
+//! The per-worker batcher/executor loop: collect requests up to the
+//! backend's batch size with a size-or-deadline policy, pad to the
+//! compiled batch shape, execute, and reply.
+//!
+//! One [`Batcher`] runs on each worker thread and owns that worker's
+//! backend for the life of the pool (PJRT handles never cross
+//! threads). A backend error fails only the requests of the current
+//! batch — their reply channels close, clients observe the failure —
+//! and the loop keeps serving, so one bad batch never poisons the
+//! worker or its siblings.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::Receiver;
+use std::time::Instant;
+
+use super::metrics_agg::WorkerSlot;
+use super::{Backend, BatchPolicy, Request, Response};
+
+pub(super) struct Batcher {
+    policy: BatchPolicy,
+}
+
+impl Batcher {
+    pub(super) fn new(policy: BatchPolicy) -> Self {
+        Batcher { policy }
+    }
+
+    /// Collect a batch: `first` plus peers until the batch fills or
+    /// the deadline passes. When draining (shutdown in progress) only
+    /// already-queued requests are taken, without waiting.
+    fn collect(
+        &self,
+        rx: &Receiver<Request>,
+        first: Request,
+        batch: usize,
+        draining: bool,
+    ) -> Vec<Request> {
+        let mut reqs = Vec::with_capacity(batch);
+        reqs.push(first);
+        if draining {
+            while reqs.len() < batch {
+                match rx.try_recv() {
+                    Ok(r) => reqs.push(r),
+                    Err(_) => break,
+                }
+            }
+            return reqs;
+        }
+        let deadline = Instant::now() + self.policy.max_wait;
+        while reqs.len() < batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => reqs.push(r),
+                Err(_) => break,
+            }
+        }
+        reqs
+    }
+
+    /// The executor loop. Exits when the ingress side of `rx` is
+    /// closed AND the queue is drained, so shutdown never drops an
+    /// admitted request.
+    pub(super) fn run<B: Backend>(
+        &self,
+        backend: &mut B,
+        rx: Receiver<Request>,
+        slot: &WorkerSlot,
+        stop: &AtomicBool,
+    ) {
+        let batch = backend.batch_size().max(1);
+        let elems = backend.input_elems();
+        let classes = backend.num_classes();
+        let mut flat = vec![0f32; batch * elems];
+
+        loop {
+            // Block for the first request of the next batch; Err means
+            // the ingress closed and nothing is left to drain.
+            let first = match rx.recv() {
+                Ok(r) => r,
+                Err(_) => break,
+            };
+            let draining = stop.load(Ordering::SeqCst);
+            let mut reqs = self.collect(&rx, first, batch, draining);
+            let n = reqs.len();
+
+            // Pad (zero rows) and execute.
+            flat.iter_mut().for_each(|v| *v = 0.0);
+            for (i, r) in reqs.iter().enumerate() {
+                flat[i * elems..(i + 1) * elems].copy_from_slice(&r.image);
+            }
+            let t0 = Instant::now();
+            match backend.infer_batch(&flat) {
+                Ok(logits) => {
+                    let exec = t0.elapsed();
+                    // Re-read per batch: backends may model energy as
+                    // a function of the work actually done.
+                    let energy_uj = backend.energy_uj_per_request();
+                    let mut s = slot.stats.lock().unwrap();
+                    s.exec_latency.record(exec);
+                    s.counters.batches += 1;
+                    for (i, r) in reqs.drain(..).enumerate() {
+                        let row =
+                            logits[i * classes..(i + 1) * classes].to_vec();
+                        let prediction = argmax(&row);
+                        let latency = r.enqueued_at.elapsed();
+                        s.latency.record(latency);
+                        s.counters.served += 1;
+                        let _ = r.reply.send(Response {
+                            id: r.id,
+                            logits: row,
+                            prediction,
+                            latency,
+                            energy_uj,
+                        });
+                    }
+                }
+                Err(_) => {
+                    slot.stats.lock().unwrap().counters.errors += 1;
+                    // Drop the requests; their reply channels close and
+                    // clients observe the failure.
+                    reqs.clear();
+                }
+            }
+            slot.outstanding.fetch_sub(n, Ordering::Relaxed);
+        }
+    }
+}
+
+pub(super) fn argmax(row: &[f32]) -> usize {
+    row.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_picks_largest() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.3]), 1);
+        assert_eq!(argmax(&[2.0]), 0);
+        assert_eq!(argmax(&[]), 0);
+    }
+}

@@ -1,0 +1,102 @@
+//! Bounded admission: geometry validation, request-id allocation,
+//! least-outstanding-work dispatch across the worker queues, and
+//! backpressure when every queue is full.
+//!
+//! The outstanding-work gauge is incremented BEFORE a request is
+//! offered to a queue and rolled back on refusal, so a worker's
+//! decrement (which always follows a successful enqueue) can never
+//! race the gauge below zero.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{SyncSender, TrySendError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::metrics_agg::MetricsHub;
+use super::{Pending, Request};
+
+pub(super) struct Ingress {
+    senders: Vec<SyncSender<Request>>,
+    hub: Arc<MetricsHub>,
+    next_id: AtomicU64,
+    input_elems: usize,
+}
+
+impl Ingress {
+    pub(super) fn new(
+        senders: Vec<SyncSender<Request>>,
+        hub: Arc<MetricsHub>,
+        input_elems: usize,
+    ) -> Self {
+        Ingress { senders, hub, next_id: AtomicU64::new(0), input_elems }
+    }
+
+    pub(super) fn input_elems(&self) -> usize {
+        self.input_elems
+    }
+
+    /// Worker indices sorted by outstanding work, least-loaded first
+    /// (ties resolve to the lowest index).
+    fn dispatch_order(&self) -> Vec<usize> {
+        let mut order: Vec<usize> = (0..self.senders.len()).collect();
+        order.sort_by_key(|&w| {
+            self.hub.worker(w).outstanding.load(Ordering::Relaxed)
+        });
+        order
+    }
+
+    /// Submit a request. Fails fast when every worker queue is full
+    /// (backpressure) or the image has the wrong geometry.
+    pub(super) fn submit(&self, image: Vec<f32>) -> Result<Pending> {
+        anyhow::ensure!(
+            image.len() == self.input_elems,
+            "image has {} elems, model expects {}",
+            image.len(),
+            self.input_elems
+        );
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (reply, rx) = std::sync::mpsc::channel();
+        let mut req =
+            Request { id, image, enqueued_at: Instant::now(), reply };
+        let mut disconnected = 0usize;
+        for w in self.dispatch_order() {
+            let gauge = &self.hub.worker(w).outstanding;
+            gauge.fetch_add(1, Ordering::Relaxed);
+            match self.senders[w].try_send(req) {
+                Ok(()) => {
+                    self.hub.note_enqueued();
+                    return Ok(Pending { id, rx });
+                }
+                Err(TrySendError::Full(r)) => {
+                    gauge.fetch_sub(1, Ordering::Relaxed);
+                    req = r;
+                }
+                Err(TrySendError::Disconnected(r)) => {
+                    gauge.fetch_sub(1, Ordering::Relaxed);
+                    disconnected += 1;
+                    req = r;
+                }
+            }
+        }
+        if disconnected == self.senders.len() {
+            anyhow::bail!("coordinator stopped")
+        }
+        self.hub.note_rejected();
+        anyhow::bail!("queue full (backpressure)")
+    }
+
+    /// Blocking submit: retries on backpressure until accepted.
+    pub(super) fn submit_blocking(&self, image: Vec<f32>) -> Result<Pending> {
+        loop {
+            match self.submit(image.clone()) {
+                Ok(p) => return Ok(p),
+                Err(e) if e.to_string().contains("backpressure") => {
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+}

@@ -1,0 +1,158 @@
+//! Metrics aggregation for the worker pool: per-worker counters and
+//! latency recorders, merged into one [`ServeMetrics`] snapshot.
+//!
+//! Each executor worker owns a [`WorkerSlot`] and records into it
+//! without contending with its siblings (one mutex per worker, locked
+//! once per batch). Admission-side events (enqueued/rejected) live in
+//! a separate slot because they happen on caller threads before a
+//! worker is chosen. [`MetricsHub::snapshot`] merges everything —
+//! counters, latency histograms, and the live queue-depth gauge —
+//! the way the chip's H-tree funnels per-sub-array counts to the EPU.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::metrics::{Counters, LatencyRecorder};
+
+/// Merged metrics snapshot over admission and every worker.
+#[derive(Debug, Default, Clone)]
+pub struct ServeMetrics {
+    pub counters: Counters,
+    pub latency: LatencyRecorder,
+    pub exec_latency: LatencyRecorder,
+    /// Gauge: requests admitted but not yet answered (queued or in a
+    /// batch), summed over workers, at snapshot time.
+    pub queue_depth: usize,
+    /// Per-worker view, indexed by worker id.
+    pub per_worker: Vec<WorkerSnapshot>,
+}
+
+/// One worker's share of a [`ServeMetrics`] snapshot.
+#[derive(Debug, Default, Clone)]
+pub struct WorkerSnapshot {
+    pub served: u64,
+    pub batches: u64,
+    pub errors: u64,
+    /// Gauge: this worker's outstanding requests at snapshot time.
+    pub outstanding: usize,
+}
+
+/// Counters and recorders owned by one executor worker.
+#[derive(Debug, Default)]
+pub(super) struct WorkerStats {
+    pub counters: Counters,
+    pub latency: LatencyRecorder,
+    pub exec_latency: LatencyRecorder,
+}
+
+/// One worker's metrics cell: stats behind a mutex (locked by the
+/// worker once per batch, by snapshots transiently) plus the lock-free
+/// outstanding-work gauge the dispatcher reads on every submit.
+#[derive(Debug, Default)]
+pub(super) struct WorkerSlot {
+    pub(super) stats: Mutex<WorkerStats>,
+    pub(super) outstanding: AtomicUsize,
+}
+
+/// Shared hub: admission counters + one slot per worker.
+#[derive(Debug)]
+pub(super) struct MetricsHub {
+    admission: Mutex<Counters>,
+    workers: Vec<WorkerSlot>,
+}
+
+impl MetricsHub {
+    pub(super) fn new(workers: usize) -> Self {
+        MetricsHub {
+            admission: Mutex::new(Counters::default()),
+            workers: (0..workers).map(|_| WorkerSlot::default()).collect(),
+        }
+    }
+
+    pub(super) fn worker(&self, w: usize) -> &WorkerSlot {
+        &self.workers[w]
+    }
+
+    pub(super) fn worker_count(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub(super) fn note_enqueued(&self) {
+        self.admission.lock().unwrap().enqueued += 1;
+    }
+
+    pub(super) fn note_rejected(&self) {
+        self.admission.lock().unwrap().rejected += 1;
+    }
+
+    /// Merge admission + all workers into one snapshot.
+    pub(super) fn snapshot(&self) -> ServeMetrics {
+        let mut m = ServeMetrics {
+            counters: self.admission.lock().unwrap().clone(),
+            ..ServeMetrics::default()
+        };
+        for slot in &self.workers {
+            let s = slot.stats.lock().unwrap();
+            m.counters.merge(&s.counters);
+            m.latency.merge(&s.latency);
+            m.exec_latency.merge(&s.exec_latency);
+            let outstanding = slot.outstanding.load(Ordering::Relaxed);
+            m.queue_depth += outstanding;
+            m.per_worker.push(WorkerSnapshot {
+                served: s.counters.served,
+                batches: s.counters.batches,
+                errors: s.counters.errors,
+                outstanding,
+            });
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn snapshot_merges_admission_and_workers() {
+        let hub = MetricsHub::new(2);
+        hub.note_enqueued();
+        hub.note_enqueued();
+        hub.note_rejected();
+        {
+            let mut s = hub.worker(0).stats.lock().unwrap();
+            s.counters.served = 3;
+            s.counters.batches = 2;
+            s.latency.record(Duration::from_micros(10));
+        }
+        {
+            let mut s = hub.worker(1).stats.lock().unwrap();
+            s.counters.served = 1;
+            s.counters.errors = 1;
+        }
+        hub.worker(1).outstanding.store(4, Ordering::Relaxed);
+
+        let m = hub.snapshot();
+        assert_eq!(m.counters.enqueued, 2);
+        assert_eq!(m.counters.rejected, 1);
+        assert_eq!(m.counters.served, 4);
+        assert_eq!(m.counters.batches, 2);
+        assert_eq!(m.counters.errors, 1);
+        assert_eq!(m.latency.count(), 1);
+        assert_eq!(m.queue_depth, 4);
+        assert_eq!(m.per_worker.len(), 2);
+        assert_eq!(m.per_worker[0].served, 3);
+        assert_eq!(m.per_worker[1].errors, 1);
+        assert_eq!(m.per_worker[1].outstanding, 4);
+    }
+
+    #[test]
+    fn empty_hub_snapshot_is_default() {
+        let hub = MetricsHub::new(1);
+        let m = hub.snapshot();
+        assert_eq!(m.counters.served, 0);
+        assert_eq!(m.queue_depth, 0);
+        assert_eq!(m.per_worker.len(), 1);
+    }
+}

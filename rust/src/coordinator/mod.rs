@@ -1,27 +1,46 @@
-//! L3 serving coordinator: request queue → dynamic batcher → PJRT
-//! executor → responses. Python is never on this path.
+//! L3 serving coordinator: bounded ingress → per-worker dynamic
+//! batchers → an executor worker pool → responses. Python is never on
+//! this path.
 //!
 //! Threading model (std::thread + channels; the offline image vendors
-//! no tokio — substitution noted in DESIGN.md §2): a bounded ingress
-//! queue applies backpressure at admission; a single batcher/executor
-//! thread owns the compiled executable (PJRT handles stay on one
-//! thread) and forms batches with a size-or-deadline policy, padding
-//! partial batches to the compiled batch shape; responses return
-//! through per-request channels.
+//! no tokio — substitution noted in DESIGN.md §2): admission applies
+//! backpressure across N bounded worker queues with
+//! least-outstanding-work dispatch; each executor worker owns its own
+//! backend, constructed ON that worker's thread by a per-worker
+//! factory (PJRT handles never cross threads), and forms batches with
+//! a size-or-deadline policy, padding partial batches to the compiled
+//! batch shape; responses return through per-request channels.
+//! Shutdown drains: every admitted request is answered before the
+//! workers exit. The full thread-ownership map lives in DESIGN.md §3.
+//!
+//! Subsystem layout: `ingress` (admission + dispatch), `batcher`
+//! (size-or-deadline batching), `pool` (worker threads + init
+//! handshake), `metrics_agg` (per-worker counters merged into one
+//! [`ServeMetrics`]), `pimsim` (the PIM co-simulation backend).
 //!
 //! The backend is abstracted behind [`Backend`] so unit tests and the
 //! PIM co-simulation run the identical coordinator against a mock,
 //! and the E2E driver plugs in [`crate::runtime::Executable`].
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex};
+mod batcher;
+mod ingress;
+mod metrics_agg;
+mod pimsim;
+mod pool;
+
+pub use metrics_agg::{ServeMetrics, WorkerSnapshot};
+pub use pimsim::PimSimBackend;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::metrics::{Counters, LatencyRecorder};
+use ingress::Ingress;
+use metrics_agg::MetricsHub;
 
 /// Inference backend: consumes one padded batch, returns logits for
 /// every row (including padding rows, which the coordinator drops).
@@ -31,6 +50,11 @@ pub trait Backend {
     fn batch_size(&self) -> usize;
     fn input_elems(&self) -> usize;
     fn num_classes(&self) -> usize;
+    /// Modeled energy per served request [µJ]; backends without an
+    /// energy model report 0.
+    fn energy_uj_per_request(&self) -> f64 {
+        0.0
+    }
 }
 
 /// One classification request.
@@ -49,6 +73,9 @@ pub struct Response {
     pub prediction: usize,
     /// Time from enqueue to response (queue + batch wait + execute).
     pub latency: Duration,
+    /// Modeled energy for this request [µJ] (0 when the backend has no
+    /// energy model).
+    pub energy_uj: f64,
 }
 
 /// Batching policy knobs.
@@ -64,23 +91,15 @@ impl Default for BatchPolicy {
     }
 }
 
-/// Shared metrics snapshot.
-#[derive(Debug, Default, Clone)]
-pub struct ServeMetrics {
-    pub counters: Counters,
-    pub latency: LatencyRecorder,
-    pub exec_latency: LatencyRecorder,
-}
-
 /// Coordinator handle: enqueue requests, await responses, inspect
 /// metrics, shut down.
 pub struct Coordinator {
-    ingress: SyncSender<Request>,
-    next_id: AtomicU64,
-    metrics: Arc<Mutex<ServeMetrics>>,
+    ingress: Option<Ingress>,
+    hub: Arc<MetricsHub>,
     stop: Arc<AtomicBool>,
-    worker: Option<JoinHandle<()>>,
-    input_elems: usize,
+    workers: Vec<JoinHandle<()>>,
+    batch: usize,
+    num_classes: usize,
 }
 
 /// Client-side handle to one in-flight request.
@@ -100,9 +119,9 @@ impl Pending {
 }
 
 impl Coordinator {
-    /// Start the coordinator. `make_backend` runs ON the executor
-    /// thread (PJRT handles never cross threads); `queue_depth` bounds
-    /// admission (backpressure).
+    /// Start a single-worker coordinator. `make_backend` runs ON the
+    /// executor thread (PJRT handles never cross threads);
+    /// `queue_depth` bounds admission (backpressure).
     pub fn start<F, B>(
         make_backend: F,
         policy: BatchPolicy,
@@ -110,205 +129,128 @@ impl Coordinator {
     ) -> Result<Coordinator>
     where
         F: FnOnce() -> Result<B> + Send + 'static,
-        B: Backend,
+        B: Backend + 'static,
     {
-        let (tx, rx) = sync_channel::<Request>(queue_depth);
-        let metrics = Arc::new(Mutex::new(ServeMetrics::default()));
+        let maker: pool::BackendMaker<B> =
+            Box::new(move || make_backend());
+        Self::start_boxed(vec![maker], policy, queue_depth)
+    }
+
+    /// Start a pool of `workers` executors. The factory is called once
+    /// per worker, ON that worker's thread, with the worker index —
+    /// so every worker owns a private backend instance the way each
+    /// computational sub-array owns its operand rows. `queue_depth`
+    /// bounds total admission, split evenly across the worker queues;
+    /// dispatch is least-outstanding-work.
+    pub fn start_pool<F, B>(
+        factory: F,
+        workers: usize,
+        policy: BatchPolicy,
+        queue_depth: usize,
+    ) -> Result<Coordinator>
+    where
+        F: Fn(usize) -> Result<B> + Send + Sync + 'static,
+        B: Backend + 'static,
+    {
+        anyhow::ensure!(workers >= 1, "pool needs at least one worker");
+        let factory = Arc::new(factory);
+        let makers = (0..workers)
+            .map(|w| {
+                let f = factory.clone();
+                Box::new(move || f(w)) as pool::BackendMaker<B>
+            })
+            .collect();
+        Self::start_boxed(makers, policy, queue_depth)
+    }
+
+    fn start_boxed<B: Backend + 'static>(
+        makers: Vec<pool::BackendMaker<B>>,
+        policy: BatchPolicy,
+        queue_depth: usize,
+    ) -> Result<Coordinator> {
+        let hub = Arc::new(MetricsHub::new(makers.len()));
         let stop = Arc::new(AtomicBool::new(false));
-        // Report backend geometry back to the caller thread.
-        let (geom_tx, geom_rx) = sync_channel::<Result<usize>>(1);
-
-        let m = metrics.clone();
-        let s = stop.clone();
-        let worker = std::thread::Builder::new()
-            .name("pims-executor".into())
-            .spawn(move || {
-                let mut backend = match make_backend() {
-                    Ok(b) => {
-                        let _ = geom_tx.send(Ok(b.input_elems()));
-                        b
-                    }
-                    Err(e) => {
-                        let _ = geom_tx.send(Err(e));
-                        return;
-                    }
-                };
-                executor_loop(&mut backend, rx, policy, m, s);
-            })?;
-
-        let input_elems = geom_rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("executor died during init"))??;
+        let pool = pool::spawn_pool(
+            makers,
+            policy,
+            queue_depth,
+            hub.clone(),
+            stop.clone(),
+        )?;
+        let ingress = Ingress::new(
+            pool.senders,
+            hub.clone(),
+            pool.geometry.input_elems,
+        );
         Ok(Coordinator {
-            ingress: tx,
-            next_id: AtomicU64::new(0),
-            metrics,
+            ingress: Some(ingress),
+            hub,
             stop,
-            worker: Some(worker),
-            input_elems,
+            workers: pool.handles,
+            batch: pool.geometry.batch,
+            num_classes: pool.geometry.num_classes,
         })
     }
 
-    /// Submit a request. Fails fast when the queue is full
+    fn ingress(&self) -> &Ingress {
+        self.ingress.as_ref().expect("ingress alive until drop")
+    }
+
+    /// Submit a request. Fails fast when every worker queue is full
     /// (backpressure) or the image has the wrong geometry.
     pub fn submit(&self, image: Vec<f32>) -> Result<Pending> {
-        anyhow::ensure!(
-            image.len() == self.input_elems,
-            "image has {} elems, model expects {}",
-            image.len(),
-            self.input_elems
-        );
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let (reply, rx) = std::sync::mpsc::channel();
-        let req =
-            Request { id, image, enqueued_at: Instant::now(), reply };
-        match self.ingress.try_send(req) {
-            Ok(()) => {
-                self.metrics.lock().unwrap().counters.enqueued += 1;
-                Ok(Pending { id, rx })
-            }
-            Err(TrySendError::Full(_)) => {
-                self.metrics.lock().unwrap().counters.rejected += 1;
-                anyhow::bail!("queue full (backpressure)")
-            }
-            Err(TrySendError::Disconnected(_)) => {
-                anyhow::bail!("coordinator stopped")
-            }
-        }
+        self.ingress().submit(image)
     }
 
     /// Blocking submit: retries on backpressure until accepted.
     pub fn submit_blocking(&self, image: Vec<f32>) -> Result<Pending> {
-        loop {
-            match self.submit(image.clone()) {
-                Ok(p) => return Ok(p),
-                Err(e) if e.to_string().contains("backpressure") => {
-                    std::thread::sleep(Duration::from_micros(200));
-                }
-                Err(e) => return Err(e),
-            }
-        }
+        self.ingress().submit_blocking(image)
     }
 
     pub fn metrics(&self) -> ServeMetrics {
-        self.metrics.lock().unwrap().clone()
+        self.hub.snapshot()
     }
 
     pub fn input_elems(&self) -> usize {
-        self.input_elems
+        self.ingress().input_elems()
     }
 
-    /// Drain and stop.
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+
+    pub fn worker_count(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Drain and stop: closes admission, waits for every worker to
+    /// answer its queued requests, and returns the final metrics.
     pub fn shutdown(mut self) -> ServeMetrics {
         self.stop.store(true, Ordering::SeqCst);
-        // Close ingress so the executor's recv unblocks.
-        drop(std::mem::replace(&mut self.ingress, {
-            let (tx, _rx) = sync_channel(1);
-            tx
-        }));
-        if let Some(h) = self.worker.take() {
+        // Dropping the ingress closes every worker queue; the workers
+        // drain what was admitted, then exit.
+        self.ingress.take();
+        for h in self.workers.drain(..) {
             let _ = h.join();
         }
-        self.metrics.lock().unwrap().clone()
+        self.hub.snapshot()
     }
 }
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
-        // Drop the ingress sender FIRST so the executor's recv()
-        // unblocks — joining with the sender alive deadlocks.
-        let (dummy, _rx) = sync_channel(1);
-        drop(std::mem::replace(&mut self.ingress, dummy));
-        if let Some(h) = self.worker.take() {
+        // Drop the senders FIRST so blocked workers unblock — joining
+        // with the senders alive deadlocks.
+        self.ingress.take();
+        for h in self.workers.drain(..) {
             let _ = h.join();
         }
     }
-}
-
-/// The executor loop: collect-up-to-batch with a deadline, pad, run,
-/// reply.
-fn executor_loop<B: Backend>(
-    backend: &mut B,
-    rx: Receiver<Request>,
-    policy: BatchPolicy,
-    metrics: Arc<Mutex<ServeMetrics>>,
-    stop: Arc<AtomicBool>,
-) {
-    let batch = backend.batch_size();
-    let elems = backend.input_elems();
-    let classes = backend.num_classes();
-    let mut flat = vec![0f32; batch * elems];
-
-    'serve: loop {
-        // Block for the first request of the next batch.
-        let first = match rx.recv() {
-            Ok(r) => r,
-            Err(_) => break 'serve, // ingress closed
-        };
-        let deadline = Instant::now() + policy.max_wait;
-        let mut reqs = vec![first];
-        while reqs.len() < batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(r) => reqs.push(r),
-                Err(_) => break,
-            }
-        }
-
-        // Pad (zero rows) and execute.
-        flat.iter_mut().for_each(|v| *v = 0.0);
-        for (i, r) in reqs.iter().enumerate() {
-            flat[i * elems..(i + 1) * elems].copy_from_slice(&r.image);
-        }
-        let t0 = Instant::now();
-        match backend.infer_batch(&flat) {
-            Ok(logits) => {
-                let exec = t0.elapsed();
-                let mut m = metrics.lock().unwrap();
-                m.exec_latency.record(exec);
-                m.counters.batches += 1;
-                for (i, r) in reqs.drain(..).enumerate() {
-                    let row =
-                        logits[i * classes..(i + 1) * classes].to_vec();
-                    let prediction = argmax(&row);
-                    let latency = r.enqueued_at.elapsed();
-                    m.latency.record(latency);
-                    m.counters.served += 1;
-                    let _ = r.reply.send(Response {
-                        id: r.id,
-                        logits: row,
-                        prediction,
-                        latency,
-                    });
-                }
-            }
-            Err(_) => {
-                let mut m = metrics.lock().unwrap();
-                m.counters.errors += 1;
-                // Drop the requests; their reply channels close and
-                // clients observe the failure.
-            }
-        }
-        if stop.load(Ordering::SeqCst) {
-            // Finish whatever is already queued, then exit.
-            while let Ok(r) = rx.try_recv() {
-                drop(r);
-            }
-            break;
-        }
-    }
-}
-
-fn argmax(row: &[f32]) -> usize {
-    row.iter()
-        .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-        .map(|(i, _)| i)
-        .unwrap_or(0)
 }
 
 /// PJRT-backed implementation for the serving binary.
@@ -531,5 +473,83 @@ mod tests {
         assert!(p.wait_timeout(Duration::from_secs(1)).is_err());
         let m = c.shutdown();
         assert_eq!(m.counters.errors, 1);
+    }
+
+    // --- pool-specific coverage (multi-worker paths; the heavier
+    // scenarios live in tests/coordinator_e2e.rs) ---
+
+    #[test]
+    fn pool_requires_at_least_one_worker() {
+        let r = Coordinator::start_pool(
+            |_| Ok(MockBackend::new(1, 4, 10)),
+            0,
+            BatchPolicy::default(),
+            8,
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn pool_factory_sees_worker_indices() {
+        use std::sync::Mutex;
+        let seen = Arc::new(Mutex::new(Vec::new()));
+        let s = seen.clone();
+        let c = Coordinator::start_pool(
+            move |w| {
+                s.lock().unwrap().push(w);
+                Ok(MockBackend::new(2, 4, 10))
+            },
+            3,
+            BatchPolicy::default(),
+            16,
+        )
+        .unwrap();
+        assert_eq!(c.worker_count(), 3);
+        assert_eq!(c.batch_size(), 2);
+        assert_eq!(c.num_classes(), 10);
+        c.shutdown();
+        let mut ws = seen.lock().unwrap().clone();
+        ws.sort_unstable();
+        assert_eq!(ws, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn pool_init_failure_tears_down_siblings() {
+        let r = Coordinator::start_pool(
+            |w| {
+                if w == 1 {
+                    anyhow::bail!("worker 1 refused")
+                }
+                Ok(MockBackend::new(1, 4, 10))
+            },
+            2,
+            BatchPolicy::default(),
+            8,
+        );
+        let err = r.err().expect("pool init must fail");
+        assert!(err.to_string().contains("worker 1 refused"));
+    }
+
+    #[test]
+    fn pool_serves_across_workers_and_reports_queue_depth() {
+        let c = Coordinator::start_pool(
+            |_| Ok(MockBackend::new(2, 4, 10)),
+            2,
+            BatchPolicy { max_wait: Duration::from_millis(1) },
+            32,
+        )
+        .unwrap();
+        let pendings: Vec<Pending> =
+            (0..10).map(|i| c.submit(img(i % 10)).unwrap()).collect();
+        for (i, p) in pendings.into_iter().enumerate() {
+            assert_eq!(p.wait().unwrap().prediction, i % 10);
+        }
+        let m = c.shutdown();
+        assert_eq!(m.counters.served, 10);
+        assert_eq!(m.queue_depth, 0, "all work answered at shutdown");
+        assert_eq!(m.per_worker.len(), 2);
+        let per_worker_served: u64 =
+            m.per_worker.iter().map(|w| w.served).sum();
+        assert_eq!(per_worker_served, 10);
     }
 }

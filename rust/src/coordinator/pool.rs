@@ -1,0 +1,150 @@
+//! The executor worker pool: N batcher/executor threads, each owning
+//! one backend instance built ON that thread by its maker closure —
+//! mirroring how the chip scales across independent computational
+//! sub-arrays, and preserving the invariant that PJRT handles never
+//! cross threads.
+//!
+//! Construction is an all-or-nothing handshake: every worker reports
+//! its backend geometry (or its init error) over a one-shot channel;
+//! any failure tears the whole pool down and propagates the first
+//! error to the caller.
+
+use std::sync::atomic::AtomicBool;
+use std::sync::mpsc::{sync_channel, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use super::batcher::Batcher;
+use super::metrics_agg::MetricsHub;
+use super::{Backend, BatchPolicy, Request};
+
+/// A boxed per-worker backend constructor, invoked on the worker's own
+/// thread.
+pub(super) type BackendMaker<B> = Box<dyn FnOnce() -> Result<B> + Send>;
+
+/// Geometry reported by the workers' backends at init.
+pub(super) struct PoolGeometry {
+    pub batch: usize,
+    pub input_elems: usize,
+    pub num_classes: usize,
+}
+
+pub(super) struct WorkerPool {
+    pub senders: Vec<SyncSender<Request>>,
+    pub handles: Vec<JoinHandle<()>>,
+    pub geometry: PoolGeometry,
+}
+
+/// Spawn one executor thread per maker. `queue_depth` is the total
+/// admission bound, split evenly across the per-worker queues.
+pub(super) fn spawn_pool<B: Backend + 'static>(
+    makers: Vec<BackendMaker<B>>,
+    policy: BatchPolicy,
+    queue_depth: usize,
+    hub: Arc<MetricsHub>,
+    stop: Arc<AtomicBool>,
+) -> Result<WorkerPool> {
+    let workers = makers.len();
+    assert!(workers >= 1, "pool needs at least one worker");
+    assert_eq!(workers, hub.worker_count(), "hub sized to the pool");
+    let per_depth = queue_depth.div_ceil(workers).max(1);
+
+    let mut senders = Vec::with_capacity(workers);
+    let mut handles = Vec::with_capacity(workers);
+    let mut geom_rxs = Vec::with_capacity(workers);
+    for (w, maker) in makers.into_iter().enumerate() {
+        let (tx, rx) = sync_channel::<Request>(per_depth);
+        let (geom_tx, geom_rx) =
+            sync_channel::<Result<(usize, usize, usize)>>(1);
+        let hub = hub.clone();
+        let stop = stop.clone();
+        let policy = policy.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("pims-executor-{w}"))
+            .spawn(move || {
+                // The backend is constructed here, on the worker
+                // thread, and never leaves it.
+                let mut backend = match maker() {
+                    Ok(b) => {
+                        let _ = geom_tx.send(Ok((
+                            b.batch_size(),
+                            b.input_elems(),
+                            b.num_classes(),
+                        )));
+                        b
+                    }
+                    Err(e) => {
+                        let _ = geom_tx.send(Err(e));
+                        return;
+                    }
+                };
+                Batcher::new(policy).run(
+                    &mut backend,
+                    rx,
+                    hub.worker(w),
+                    &stop,
+                );
+            })?;
+        senders.push(tx);
+        handles.push(handle);
+        geom_rxs.push(geom_rx);
+    }
+
+    // Collect every worker's init result before accepting traffic.
+    let mut geometry: Option<PoolGeometry> = None;
+    let mut first_err: Option<anyhow::Error> = None;
+    for (w, geom_rx) in geom_rxs.into_iter().enumerate() {
+        match geom_rx.recv() {
+            Ok(Ok((batch, input_elems, num_classes))) => match &geometry {
+                None => {
+                    geometry = Some(PoolGeometry {
+                        batch,
+                        input_elems,
+                        num_classes,
+                    })
+                }
+                Some(g) => {
+                    if (g.input_elems != input_elems
+                        || g.num_classes != num_classes
+                        || g.batch != batch)
+                        && first_err.is_none()
+                    {
+                        first_err = Some(anyhow::anyhow!(
+                            "worker {w} backend geometry diverges: \
+                             batch {batch} x {input_elems} elems x \
+                             {num_classes} classes vs batch {} x {} x {}",
+                            g.batch,
+                            g.input_elems,
+                            g.num_classes
+                        ));
+                    }
+                }
+            },
+            Ok(Err(e)) => {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+            Err(_) => {
+                if first_err.is_none() {
+                    first_err = Some(anyhow::anyhow!(
+                        "executor {w} died during init"
+                    ));
+                }
+            }
+        }
+    }
+    if let Some(e) = first_err {
+        // Close every queue; healthy workers drain (nothing enqueued
+        // yet) and exit, then join.
+        drop(senders);
+        for h in handles {
+            let _ = h.join();
+        }
+        return Err(e);
+    }
+    let geometry = geometry.expect("at least one worker reported");
+    Ok(WorkerPool { senders, handles, geometry })
+}

@@ -17,7 +17,9 @@
 //! * hardware sim: [`device`], [`subarray`], [`arch`], [`compressor`],
 //!   [`asr`], [`nvfa`], [`intermittency`], [`energy`]
 //! * system: [`cnn`], [`accel`], [`baselines`], [`dataset`]
-//! * serving: [`runtime`], [`coordinator`], [`metrics`]
+//! * serving: [`runtime`] (PJRT, gated behind the `pjrt` feature),
+//!   [`coordinator`] (ingress → per-worker batchers → executor pool,
+//!   incl. the PIM co-sim serving backend), [`metrics`]
 
 pub mod benchlib;
 pub mod bitops;

@@ -17,7 +17,9 @@ use pims::baselines::{Asic, Imce, Reram};
 use pims::cli::{flag, opt_default, Cli};
 use pims::cnn;
 use pims::configsys::Config;
-use pims::coordinator::{BatchPolicy, Coordinator, PjrtBackend};
+use pims::coordinator::{
+    BatchPolicy, Coordinator, PimSimBackend, PjrtBackend,
+};
 use pims::dataset::Dataset;
 use pims::device::{monte_carlo_sense, SotCell};
 use pims::intermittency::{
@@ -30,12 +32,17 @@ fn cli() -> Cli {
     Cli::new("pims", "SOT-MRAM PIM CNN accelerator (paper reproduction)")
         .command(
             "serve",
-            "serve the AOT model over synthetic SVHN and report accuracy/latency/throughput",
+            "serve the model (PJRT artifacts or the PIM co-sim) and report accuracy/latency/throughput",
             vec![
+                opt_default("backend", "pjrt|pimsim", "pjrt"),
                 opt_default("batch", "compiled batch size (1 or 8)", "8"),
+                opt_default("workers", "executor workers (one backend per worker)", "1"),
                 opt_default("requests", "number of requests", "512"),
-                opt_default("queue", "ingress queue depth", "256"),
+                opt_default("queue", "total ingress queue depth", "256"),
                 opt_default("wait-ms", "max batch wait (ms)", "2"),
+                opt_default("wbits", "pimsim weight bits", "1"),
+                opt_default("abits", "pimsim activation bits", "4"),
+                opt_default("seed", "pimsim weight/dataset seed", "42"),
                 opt_default("config", "optional config file", ""),
             ],
         )
@@ -140,6 +147,15 @@ fn run(p: pims::cli::Parsed) -> Result<()> {
     }
 }
 
+/// Knobs shared by both serve backends.
+struct ServeOpts {
+    batch: usize,
+    workers: usize,
+    requests: usize,
+    queue: usize,
+    wait_ms: u64,
+}
+
 fn cmd_serve(p: &pims::cli::Parsed) -> Result<()> {
     let mut cfg = Config::default();
     let cfg_path = p.get("config").unwrap_or("");
@@ -149,16 +165,27 @@ fn cmd_serve(p: &pims::cli::Parsed) -> Result<()> {
     for (k, v) in &p.set_overrides {
         cfg.set(k, v)?;
     }
-    let batch = p.get_usize("batch")?.unwrap_or(8);
-    let requests = cfg.int_or(
-        "serve.requests",
-        p.get_usize("requests")?.unwrap_or(512) as i64,
-    ) as usize;
-    let queue = p.get_usize("queue")?.unwrap_or(256);
-    let wait_ms = p.get_usize("wait-ms")?.unwrap_or(2) as u64;
+    let opts = ServeOpts {
+        batch: p.get_usize("batch")?.unwrap_or(8),
+        workers: p.get_usize_at_least("workers", 1)?,
+        requests: cfg.int_or(
+            "serve.requests",
+            p.get_usize("requests")?.unwrap_or(512) as i64,
+        ) as usize,
+        queue: p.get_usize("queue")?.unwrap_or(256),
+        wait_ms: p.get_usize("wait-ms")?.unwrap_or(2) as u64,
+    };
+    match p.get("backend").unwrap_or("pjrt") {
+        "pjrt" => serve_pjrt(&opts),
+        "pimsim" => serve_pimsim(p, &opts),
+        other => anyhow::bail!("unknown backend '{other}' (pjrt|pimsim)"),
+    }
+}
 
+fn serve_pjrt(o: &ServeOpts) -> Result<()> {
     let dir = artifacts_dir();
     let manifest = Manifest::load(&dir)?;
+    let batch = o.batch;
     anyhow::ensure!(
         manifest.batches.contains(&batch),
         "batch {batch} not exported (available: {:?})",
@@ -167,31 +194,36 @@ fn cmd_serve(p: &pims::cli::Parsed) -> Result<()> {
     let ds =
         Dataset::load_bin(dir.join("svhn_test.bin").to_str().unwrap())?;
     println!(
-        "serving W{}:I{} model, batch={batch}, {} test images",
-        manifest.w_bits, manifest.a_bits, ds.n
+        "serving W{}:I{} model, batch={batch}, workers={}, {} test images",
+        manifest.w_bits, manifest.a_bits, o.workers, ds.n
     );
 
     let model_path = manifest.model_path(&dir, batch);
     let (h, w, c) = manifest.input_shape;
     let elems = manifest.input_elems();
     let classes = manifest.num_classes;
-    let coordinator = Coordinator::start(
-        move || {
+    // One engine + compiled executable per worker, created on that
+    // worker's thread (PJRT handles never cross threads).
+    let coordinator = Coordinator::start_pool(
+        move |worker| {
             let engine = Engine::cpu()?;
-            println!("PJRT platform: {}", engine.platform());
+            if worker == 0 {
+                println!("PJRT platform: {}", engine.platform());
+            }
             let exe =
                 engine.load_hlo(&model_path, batch, elems, classes)?;
             Ok(PjrtBackend { exe, shape: [batch, h, w, c] })
         },
-        BatchPolicy { max_wait: Duration::from_millis(wait_ms) },
-        queue,
+        o.workers,
+        BatchPolicy { max_wait: Duration::from_millis(o.wait_ms) },
+        o.queue,
     )?;
 
     let t0 = Instant::now();
     let mut correct = 0usize;
     let mut done = 0usize;
     let mut pendings = Vec::new();
-    for i in 0..requests {
+    for i in 0..o.requests {
         let img = ds.image(i % ds.n).to_vec();
         pendings.push((i % ds.n, coordinator.submit_blocking(img)?));
         // Harvest in waves to bound in-flight memory.
@@ -220,6 +252,80 @@ fn cmd_serve(p: &pims::cli::Parsed) -> Result<()> {
         "accuracy        : {:.2}% ({correct}/{done})",
         100.0 * correct as f64 / done as f64
     );
+    print_serve_tail(&m, batch, done, wall);
+    Ok(())
+}
+
+/// Serve the PIM co-simulation itself: the bit-accurate AND-Accumulate
+/// datapath answers live traffic and reports accelerator-model energy
+/// per request. Needs no artifacts and no PJRT.
+fn serve_pimsim(p: &pims::cli::Parsed, o: &ServeOpts) -> Result<()> {
+    let w_bits = p.get_usize("wbits")?.unwrap_or(1) as u32;
+    let a_bits = p.get_usize("abits")?.unwrap_or(4) as u32;
+    let seed = p.get_usize("seed")?.unwrap_or(42) as u64;
+    let model = cnn::svhn_net();
+    let ds = pims::dataset::generate(
+        256,
+        model.input_hw,
+        model.input_c,
+        seed,
+    );
+    println!(
+        "serving PIM co-sim ({}), W{w_bits}:I{a_bits}, batch={}, \
+         workers={}, {} synthetic images",
+        model.name, o.batch, o.workers, ds.n
+    );
+    let batch = o.batch;
+    let coordinator = Coordinator::start_pool(
+        move |_worker| {
+            // Same seed on every worker: bit-identical replicas.
+            PimSimBackend::new(model.clone(), w_bits, a_bits, batch, seed)
+        },
+        o.workers,
+        BatchPolicy { max_wait: Duration::from_millis(o.wait_ms) },
+        o.queue,
+    )?;
+
+    let t0 = Instant::now();
+    let mut done = 0usize;
+    let mut energy_uj = 0f64;
+    let mut pendings = Vec::new();
+    for i in 0..o.requests {
+        let img = ds.image(i % ds.n).to_vec();
+        pendings.push(coordinator.submit_blocking(img)?);
+        if pendings.len() >= 64 {
+            for pend in pendings.drain(..) {
+                let r = pend.wait()?;
+                done += 1;
+                energy_uj += r.energy_uj;
+            }
+        }
+    }
+    for pend in pendings.drain(..) {
+        let r = pend.wait()?;
+        done += 1;
+        energy_uj += r.energy_uj;
+    }
+    let wall = t0.elapsed();
+    let m = coordinator.shutdown();
+    println!("\n== serve results (pimsim) ==");
+    println!("requests        : {done}");
+    println!(
+        "energy          : {:.3} µJ total, {:.3} µJ/request \
+         (accelerator model)",
+        energy_uj,
+        energy_uj / done.max(1) as f64
+    );
+    print_serve_tail(&m, batch, done, wall);
+    Ok(())
+}
+
+fn print_serve_tail(
+    m: &pims::coordinator::ServeMetrics,
+    batch: usize,
+    done: usize,
+    wall: Duration,
+) {
     println!(
         "throughput      : {:.1} img/s (wall {:.2?})",
         done as f64 / wall.as_secs_f64(),
@@ -232,7 +338,12 @@ fn cmd_serve(p: &pims::cli::Parsed) -> Result<()> {
         m.counters.batches,
         100.0 * m.counters.mean_batch_fill(batch)
     );
-    Ok(())
+    for (w, s) in m.per_worker.iter().enumerate() {
+        println!(
+            "  worker {w:<2}     : served {} in {} batches, {} errors",
+            s.served, s.batches, s.errors
+        );
+    }
 }
 
 fn cmd_simulate(p: &pims::cli::Parsed) -> Result<()> {
@@ -348,6 +459,9 @@ fn cmd_intermittent(p: &pims::cli::Parsed) -> Result<()> {
     Ok(())
 }
 
+// Drives the `xla` crate directly, so it only exists in `pjrt` builds
+// (DESIGN.md §4).
+#[cfg(feature = "pjrt")]
 fn cmd_probe(p: &pims::cli::Parsed) -> Result<()> {
     let hlo = p.get("hlo").unwrap_or("");
     anyhow::ensure!(!hlo.is_empty(), "--hlo required");
@@ -381,6 +495,14 @@ fn cmd_probe(p: &pims::cli::Parsed) -> Result<()> {
         &vals[..vals.len().min(10)]
     );
     Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_probe(_p: &pims::cli::Parsed) -> Result<()> {
+    anyhow::bail!(
+        "probe requires the `pjrt` feature (see DESIGN.md §4); \
+         `serve --backend pimsim` runs without it"
+    )
 }
 
 fn cmd_info() -> Result<()> {

@@ -1,115 +1,198 @@
 //! PJRT runtime: load AOT-compiled HLO text and execute it on the
 //! request path (no python anywhere here).
 //!
-//! Wraps the `xla` crate exactly as the reference wiring does
-//! (/opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! The real engine wraps the `xla` crate exactly as the reference
+//! wiring does (/opt/xla-example/load_hlo): `PjRtClient::cpu()` →
 //! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
 //! HLO **text** is the interchange format — jax ≥ 0.5 emits protos
 //! with 64-bit instruction ids that xla_extension 0.5.1 rejects; the
 //! text parser reassigns ids (see python/compile/aot.py).
+//!
+//! The `xla` crate is gated behind the `pjrt` cargo feature (it is not
+//! vendored in the offline build image; DESIGN.md §4). Without the
+//! feature this module compiles a stub [`Engine`]/[`Executable`] with
+//! the same API whose `Engine::cpu()` fails with a clear message, so
+//! the coordinator, CLI, and examples build and test offline — the
+//! PIM co-simulation backend serves without PJRT entirely.
 
 use std::path::Path;
 
 use anyhow::{Context, Result};
 
-/// A loaded, compiled inference executable.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    /// Input geometry (batch, h, w, c) from the artifact manifest.
-    pub batch: usize,
-    pub input_elems: usize,
-    pub num_classes: usize,
+#[cfg(feature = "pjrt")]
+mod engine {
+    use super::*;
+
+    /// A loaded, compiled inference executable.
+    pub struct Executable {
+        exe: xla::PjRtLoadedExecutable,
+        /// Input geometry (batch, h, w, c) from the artifact manifest.
+        pub batch: usize,
+        pub input_elems: usize,
+        pub num_classes: usize,
+    }
+
+    /// The PJRT engine: one CPU client, N compiled model variants.
+    pub struct Engine {
+        client: xla::PjRtClient,
+    }
+
+    impl Engine {
+        /// Create the CPU PJRT client.
+        pub fn cpu() -> Result<Engine> {
+            let client =
+                xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(Engine { client })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load + compile an HLO text artifact.
+        pub fn load_hlo(
+            &self,
+            path: &Path,
+            batch: usize,
+            input_elems: usize,
+            num_classes: usize,
+        ) -> Result<Executable> {
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| {
+                format!("parsing HLO text {}", path.display())
+            })?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?;
+            Ok(Executable { exe, batch, input_elems, num_classes })
+        }
+    }
+
+    impl Executable {
+        /// Run one batch: `input` must hold `batch * input_elems` f32
+        /// NHWC values; returns `batch * num_classes` logits.
+        ///
+        /// The exported computation takes the image tensor as its
+        /// single parameter (weights are baked as constants) and
+        /// returns a 1-tuple (aot.py lowers with `return_tuple=True`).
+        pub fn infer(
+            &self,
+            input: &[f32],
+            shape: &[usize],
+        ) -> Result<Vec<f32>> {
+            anyhow::ensure!(
+                input.len() == self.batch * self.input_elems,
+                "input length {} != batch {} * elems {}",
+                input.len(),
+                self.batch,
+                self.input_elems
+            );
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(input)
+                .reshape(&dims)
+                .context("reshaping input literal")?;
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&[lit])
+                .context("executing")?[0][0]
+                .to_literal_sync()
+                .context("fetching result")?;
+            let out = result.to_tuple1().context("unwrapping 1-tuple")?;
+            let logits: Vec<f32> =
+                out.to_vec::<f32>().context("reading logits")?;
+            anyhow::ensure!(
+                logits.len() == self.batch * self.num_classes,
+                "logit length {} != batch {} * classes {}",
+                logits.len(),
+                self.batch,
+                self.num_classes
+            );
+            Ok(logits)
+        }
+
+        /// Argmax per batch row.
+        pub fn predictions(&self, logits: &[f32]) -> Vec<usize> {
+            super::predictions_impl(logits, self.num_classes)
+        }
+    }
 }
 
-/// The PJRT engine: one CPU client, N compiled model variants.
-pub struct Engine {
-    client: xla::PjRtClient,
+#[cfg(not(feature = "pjrt"))]
+mod engine {
+    use super::*;
+
+    const NO_PJRT: &str = "PJRT support not compiled in: enable the \
+        `pjrt` cargo feature (requires the `xla` crate; DESIGN.md §4). \
+        The PIM co-simulation backend (`serve --backend pimsim`) \
+        serves without PJRT.";
+
+    /// Stub executable compiled when the `pjrt` feature is off; keeps
+    /// the geometry API so the coordinator and examples build offline.
+    pub struct Executable {
+        pub batch: usize,
+        pub input_elems: usize,
+        pub num_classes: usize,
+    }
+
+    /// Stub engine: same API, fails at `cpu()` with a clear message.
+    pub struct Engine;
+
+    impl Engine {
+        pub fn cpu() -> Result<Engine> {
+            anyhow::bail!(NO_PJRT)
+        }
+
+        pub fn platform(&self) -> String {
+            "pjrt-stub".to_string()
+        }
+
+        pub fn load_hlo(
+            &self,
+            path: &Path,
+            batch: usize,
+            input_elems: usize,
+            num_classes: usize,
+        ) -> Result<Executable> {
+            let _ = path;
+            Ok(Executable { batch, input_elems, num_classes })
+        }
+    }
+
+    impl Executable {
+        pub fn infer(
+            &self,
+            input: &[f32],
+            shape: &[usize],
+        ) -> Result<Vec<f32>> {
+            let _ = (input, shape);
+            anyhow::bail!(NO_PJRT)
+        }
+
+        /// Argmax per batch row.
+        pub fn predictions(&self, logits: &[f32]) -> Vec<usize> {
+            super::predictions_impl(logits, self.num_classes)
+        }
+    }
 }
 
-impl Engine {
-    /// Create the CPU PJRT client.
-    pub fn cpu() -> Result<Engine> {
-        let client =
-            xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Engine { client })
-    }
+pub use engine::{Engine, Executable};
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load + compile an HLO text artifact.
-    pub fn load_hlo(
-        &self,
-        path: &Path,
-        batch: usize,
-        input_elems: usize,
-        num_classes: usize,
-    ) -> Result<Executable> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 path")?,
-        )
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))?;
-        Ok(Executable { exe, batch, input_elems, num_classes })
-    }
-}
-
-impl Executable {
-    /// Run one batch: `input` must hold `batch * input_elems` f32 NHWC
-    /// values; returns `batch * num_classes` logits.
-    ///
-    /// The exported computation takes the image tensor as its single
-    /// parameter (weights are baked as constants) and returns a
-    /// 1-tuple (aot.py lowers with `return_tuple=True`).
-    pub fn infer(&self, input: &[f32], shape: &[usize]) -> Result<Vec<f32>> {
-        anyhow::ensure!(
-            input.len() == self.batch * self.input_elems,
-            "input length {} != batch {} * elems {}",
-            input.len(),
-            self.batch,
-            self.input_elems
-        );
-        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-        let lit = xla::Literal::vec1(input)
-            .reshape(&dims)
-            .context("reshaping input literal")?;
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&[lit])
-            .context("executing")?[0][0]
-            .to_literal_sync()
-            .context("fetching result")?;
-        let out = result.to_tuple1().context("unwrapping 1-tuple")?;
-        let logits: Vec<f32> =
-            out.to_vec::<f32>().context("reading logits")?;
-        anyhow::ensure!(
-            logits.len() == self.batch * self.num_classes,
-            "logit length {} != batch {} * classes {}",
-            logits.len(),
-            self.batch,
-            self.num_classes
-        );
-        Ok(logits)
-    }
-
-    /// Argmax per batch row.
-    pub fn predictions(&self, logits: &[f32]) -> Vec<usize> {
-        logits
-            .chunks(self.num_classes)
-            .map(|row| {
-                row.iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .map(|(i, _)| i)
-                    .unwrap_or(0)
-            })
-            .collect()
-    }
+/// Argmax per `num_classes`-wide row (shared by both engine builds).
+fn predictions_impl(logits: &[f32], num_classes: usize) -> Vec<usize> {
+    logits
+        .chunks(num_classes)
+        .map(|row| {
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap_or(0)
+        })
+        .collect()
 }
 
 /// Locate the artifacts directory: `$PIMS_ARTIFACTS`, else
@@ -221,5 +304,23 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let _ = std::fs::remove_file(dir.join("manifest.json"));
         assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn predictions_rowwise_argmax() {
+        let got =
+            predictions_impl(&[0.1, 0.9, 0.0, 1.0, 0.2, 0.3], 3);
+        assert_eq!(got, vec![1, 0]);
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_engine_fails_loudly() {
+        let err = Engine::cpu().err().unwrap().to_string();
+        assert!(err.contains("pjrt"), "unhelpful stub error: {err}");
+        let exe =
+            Executable { batch: 2, input_elems: 3, num_classes: 2 };
+        assert!(exe.infer(&[0.0; 6], &[2, 1, 3, 1]).is_err());
+        assert_eq!(exe.predictions(&[0.0, 1.0, 1.0, 0.0]), vec![1, 0]);
     }
 }

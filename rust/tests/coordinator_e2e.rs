@@ -1,12 +1,16 @@
 //! Coordinator end-to-end tests against the mock backend: batching
 //! behaviour under concurrency, ordering, fairness, and sustained
-//! throughput — coordination correctness isolated from XLA.
+//! throughput — coordination correctness isolated from XLA. The pool
+//! section covers multi-worker scaling, shutdown draining, worker
+//! fault isolation, and the PIM co-simulation backend serving through
+//! the identical coordinator.
 
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
+use pims::cnn;
 use pims::coordinator::{
-    Backend, BatchPolicy, Coordinator, MockBackend,
+    Backend, BatchPolicy, Coordinator, MockBackend, PimSimBackend,
 };
 
 fn img(elems: usize, class: usize) -> Vec<f32> {
@@ -192,4 +196,226 @@ fn init_failure_propagates() {
     );
     assert!(r.is_err());
     assert!(r.err().unwrap().to_string().contains("no artifacts"));
+}
+
+// ---------------------------------------------------------------------------
+// Worker-pool scenarios
+// ---------------------------------------------------------------------------
+
+/// The acceptance scenario for the executor-pool refactor: with a
+/// sleep-bound backend (1 ms-class batches), 4 workers must clear the
+/// same offered load at least 2x faster than 1 worker.
+#[test]
+fn four_workers_scale_throughput_at_least_2x() {
+    fn run(workers: usize) -> Duration {
+        let c = Coordinator::start_pool(
+            move |_| {
+                let mut b = MockBackend::new(1, 8, 10);
+                b.delay = Duration::from_millis(5);
+                Ok(b)
+            },
+            workers,
+            BatchPolicy { max_wait: Duration::ZERO },
+            256,
+        )
+        .unwrap();
+        let t0 = Instant::now();
+        let pend: Vec<_> = (0..48)
+            .map(|i| c.submit_blocking(img(8, i % 10)).unwrap())
+            .collect();
+        for p in pend {
+            p.wait().unwrap();
+        }
+        let wall = t0.elapsed();
+        let m = c.shutdown();
+        assert_eq!(m.counters.served, 48);
+        wall
+    }
+    let w1 = run(1);
+    let w4 = run(4);
+    let speedup = w1.as_secs_f64() / w4.as_secs_f64();
+    assert!(
+        speedup >= 2.0,
+        "4 workers only {speedup:.2}x over 1 (w1 {w1:?}, w4 {w4:?})"
+    );
+}
+
+/// Least-outstanding-work dispatch engages every worker under load.
+#[test]
+fn dispatch_spreads_load_across_workers() {
+    let c = Coordinator::start_pool(
+        move |_| {
+            let mut b = MockBackend::new(1, 8, 10);
+            b.delay = Duration::from_millis(3);
+            Ok(b)
+        },
+        4,
+        BatchPolicy { max_wait: Duration::ZERO },
+        256,
+    )
+    .unwrap();
+    let pend: Vec<_> = (0..32)
+        .map(|i| c.submit_blocking(img(8, i % 10)).unwrap())
+        .collect();
+    for p in pend {
+        p.wait().unwrap();
+    }
+    let m = c.shutdown();
+    assert_eq!(m.per_worker.len(), 4);
+    for (w, s) in m.per_worker.iter().enumerate() {
+        assert!(s.served > 0, "worker {w} never served: {:?}", m.per_worker);
+    }
+}
+
+/// Shutdown with queued + in-flight requests drains: no hang, no
+/// dropped replies.
+#[test]
+fn shutdown_drains_in_flight_requests() {
+    let c = Coordinator::start_pool(
+        move |_| {
+            let mut b = MockBackend::new(1, 8, 10);
+            b.delay = Duration::from_millis(3);
+            Ok(b)
+        },
+        2,
+        BatchPolicy::default(),
+        64,
+    )
+    .unwrap();
+    let pend: Vec<_> =
+        (0..10).map(|i| c.submit(img(8, i % 10)).unwrap()).collect();
+    // Shutdown immediately, while most requests are still queued. It
+    // must block until every admitted request was answered.
+    let m = c.shutdown();
+    assert_eq!(m.counters.served, 10, "shutdown dropped replies");
+    assert_eq!(m.queue_depth, 0, "work left behind after shutdown");
+    for (i, p) in pend.into_iter().enumerate() {
+        let r = p
+            .wait_timeout(Duration::from_secs(1))
+            .expect("reply must already be buffered");
+        assert_eq!(r.prediction, i % 10);
+    }
+}
+
+/// One worker's backend erroring fails only its own requests; the
+/// sibling keeps serving and admission stays open.
+#[test]
+fn failing_worker_does_not_poison_siblings() {
+    enum TestBackend {
+        Healthy(MockBackend),
+        Broken,
+    }
+    impl Backend for TestBackend {
+        fn infer_batch(&mut self, flat: &[f32]) -> anyhow::Result<Vec<f32>> {
+            match self {
+                TestBackend::Healthy(b) => b.infer_batch(flat),
+                TestBackend::Broken => {
+                    std::thread::sleep(Duration::from_millis(3));
+                    anyhow::bail!("injected backend fault")
+                }
+            }
+        }
+        fn batch_size(&self) -> usize {
+            1
+        }
+        fn input_elems(&self) -> usize {
+            8
+        }
+        fn num_classes(&self) -> usize {
+            10
+        }
+    }
+    let c = Coordinator::start_pool(
+        |w| {
+            Ok(if w == 0 {
+                let mut b = MockBackend::new(1, 8, 10);
+                b.delay = Duration::from_millis(3);
+                TestBackend::Healthy(b)
+            } else {
+                TestBackend::Broken
+            })
+        },
+        2,
+        BatchPolicy { max_wait: Duration::ZERO },
+        64,
+    )
+    .unwrap();
+
+    // Burst of 8: least-outstanding dispatch splits them across both
+    // workers while each is busy for ~3 ms.
+    let pend: Vec<_> =
+        (0..8).map(|i| c.submit(img(8, i % 10)).unwrap()).collect();
+    let mut ok = 0;
+    let mut failed = 0;
+    for p in pend {
+        match p.wait_timeout(Duration::from_secs(5)) {
+            Ok(r) => {
+                assert_eq!(r.logits.len(), 10);
+                ok += 1;
+            }
+            Err(_) => failed += 1,
+        }
+    }
+    assert!(ok >= 1, "healthy worker served nothing");
+    assert!(failed >= 1, "broken worker failed nothing");
+
+    // The pool still serves after the faults (ties dispatch to the
+    // healthy worker 0 when both are idle).
+    let late = c
+        .submit(img(8, 4))
+        .unwrap()
+        .wait_timeout(Duration::from_secs(5))
+        .expect("pool must keep serving after a worker fault");
+    assert_eq!(late.prediction, 4);
+
+    let m = c.shutdown();
+    assert!(m.counters.errors >= 1);
+    assert_eq!(m.counters.served, ok + 1);
+    let erring: Vec<_> =
+        m.per_worker.iter().filter(|w| w.errors > 0).collect();
+    assert_eq!(erring.len(), 1, "exactly one worker errs: {:?}", m.per_worker);
+    assert!(
+        m.per_worker.iter().any(|w| w.served > 0 && w.errors == 0),
+        "sibling poisoned: {:?}",
+        m.per_worker
+    );
+}
+
+/// Acceptance: the PIM co-simulation serves an end-to-end request
+/// through the coordinator and returns logits bit-identical to the
+/// direct cnn reference path.
+#[test]
+fn pimsim_backend_serves_bit_identical_to_reference() {
+    let mk = |seed: u64| {
+        move |_worker: usize| {
+            PimSimBackend::new(cnn::micro_net(), 1, 4, 2, seed)
+        }
+    };
+    let c = Coordinator::start_pool(
+        mk(0xC0FFEE),
+        2,
+        BatchPolicy { max_wait: Duration::from_millis(1) },
+        32,
+    )
+    .unwrap();
+    let reference =
+        PimSimBackend::new(cnn::micro_net(), 1, 4, 2, 0xC0FFEE).unwrap();
+    let elems = c.input_elems();
+    assert_eq!(elems, reference.input_elems());
+
+    for phase in 0..6 {
+        let image: Vec<f32> = (0..elems)
+            .map(|i| ((i + phase * 11) % 19) as f32 / 18.0)
+            .collect();
+        let r = c.submit_blocking(image.clone()).unwrap().wait().unwrap();
+        assert_eq!(
+            r.logits,
+            reference.reference_logits(&image),
+            "served logits diverge from the cnn reference path"
+        );
+        assert!(r.energy_uj > 0.0, "pimsim must report request energy");
+    }
+    let m = c.shutdown();
+    assert_eq!(m.counters.served, 6);
+    assert_eq!(m.counters.errors, 0);
 }

@@ -92,6 +92,10 @@ fn dataset_artifact_loads() {
     assert!(ds.labels.iter().all(|&l| l < 10));
 }
 
+// Talks to the `xla` crate directly, so it only exists in `pjrt`
+// builds (DESIGN.md §4); the other tests go through the stub-capable
+// Engine API and skip themselves when artifacts are absent.
+#[cfg(feature = "pjrt")]
 #[test]
 fn bitconv_unit_hlo_executes() {
     let Some(dir) = artifacts() else { return };

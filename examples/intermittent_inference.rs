@@ -1,95 +1,103 @@
-//! Power-intermittency study (paper §II-B.3 / Fig. 7b): run a frame
-//! workload under harvested-power traces and compare forward progress
-//! of the paper's NV-FA datapath against a CMOS-only (volatile)
-//! implementation, across checkpoint periods and failure rates.
+//! Power-intermittency study on the REAL inference pipeline (paper
+//! §II-B.3 / Fig. 7b, integrated): run the bit-accurate PIM co-sim
+//! forward pass as resumable tiles under harvested-power traces,
+//! checkpointing partial sums into the NV state store, and compare
+//! forward progress against a CMOS-only (volatile) implementation —
+//! then verify the interrupted logits are bit-identical to an
+//! uninterrupted run.
 //!
 //! ```bash
 //! cargo run --release --example intermittent_inference
 //! ```
 
+use pims::cnn;
+use pims::coordinator::{Backend, PimSimBackend};
 use pims::intermittency::{
-    forward_progress, run_intermittent, FrameWorkload, PowerTrace,
+    inference_forward_progress, run_intermittent_inference,
+    InferencePlan, PowerTrace,
 };
-use pims::nvfa::NvPolicy;
 
 fn main() {
-    let workload = FrameWorkload {
-        frames: 500,
-        cycles_per_frame: 10,
-        value_per_frame: 1,
+    let backend =
+        PimSimBackend::new(cnn::micro_net(), 1, 4, 1, 0x1F7).unwrap();
+    let image: Vec<f32> = (0..backend.input_elems())
+        .map(|i| ((i * 11 + 2) % 31) as f32 / 30.0)
+        .collect();
+    let plan = InferencePlan {
+        tile_patches: 4,
+        checkpoint_period: 2,
+        cycles_per_tile: 10,
+        volatile_only: false,
     };
+    let vol_plan = InferencePlan { volatile_only: true, ..plan.clone() };
 
-    println!("workload: {} frames x {} cycles", workload.frames, workload.cycles_per_frame);
-    println!("\n== sweep: mean on-time (Poisson failures, 50-cycle outages) ==");
-    println!("| mean-on | failures | NV-FA progress | volatile progress | NV finished | vol finished |");
-    println!("|---|---|---|---|---|---|");
-    for mean_on in [100.0, 200.0, 400.0, 800.0, 3200.0] {
-        let trace = PowerTrace::poisson(
-            mean_on,
-            50,
-            workload.frames * workload.cycles_per_frame * 30,
-            42,
-        );
-        let nv = run_intermittent(
-            workload, &trace, NvPolicy::DualFf, 20, false,
-        );
-        let vol = run_intermittent(
-            workload, &trace, NvPolicy::DualFf, 20, true,
-        );
+    // Failure-free oracle run (also the bit-identity reference).
+    let clean = run_intermittent_inference(
+        &backend,
+        &image,
+        &PowerTrace::periodic(1_000_000, 0, 1),
+        &plan,
+    );
+    println!(
+        "model={} | {} tiles ({} patch rows each), ckpt every {} tiles",
+        backend.model_name(),
+        clean.tiles_total,
+        plan.tile_patches,
+        plan.checkpoint_period
+    );
+
+    println!("\n== sweep: mean on-time (Poisson failures, 20-cycle outages) ==");
+    println!(
+        "| mean-on | failures | NV progress | vol progress | NV done | \
+         vol done | bit-identical | ckpt µJ |"
+    );
+    println!("|---|---|---|---|---|---|---|---|");
+    let budget = clean.tiles_total * plan.cycles_per_tile * 40;
+    for mean_on in [40.0, 80.0, 160.0, 640.0] {
+        let trace = PowerTrace::poisson(mean_on, 20, budget, 42);
+        let nv = run_intermittent_inference(&backend, &image, &trace, &plan);
+        let vol =
+            run_intermittent_inference(&backend, &image, &trace, &vol_plan);
         println!(
-            "| {mean_on:.0} | {} | {:.3} | {:.3} | {} | {} |",
+            "| {mean_on:.0} | {} | {:.3} | {:.3} | {} | {} | {} | {:.6} |",
             nv.failures,
-            forward_progress(&nv, &workload),
-            forward_progress(&vol, &workload),
+            inference_forward_progress(&nv),
+            inference_forward_progress(&vol),
             nv.finished,
             vol.finished,
+            nv.finished && nv.logits == clean.logits,
+            nv.checkpoint_energy_uj,
         );
     }
 
-    println!("\n== sweep: checkpoint period (mean-on 300) ==");
-    println!("| ckpt period | re-executed frames | NV writes | progress |");
-    println!("|---|---|---|---|");
-    for period in [1u64, 5, 10, 20, 50, 100] {
-        let trace = PowerTrace::poisson(
-            300.0,
-            50,
-            workload.frames * workload.cycles_per_frame * 30,
-            42,
-        );
-        let r = run_intermittent(
-            workload, &trace, NvPolicy::DualFf, period, false,
-        );
+    println!("\n== sweep: checkpoint period (periodic failures, 3 tiles of power) ==");
+    println!("| ckpt period | re-executed tiles | checkpoints | ckpt µJ | progress |");
+    println!("|---|---|---|---|---|");
+    let trace = PowerTrace::periodic(30, 5, 400);
+    for period in [1u64, 2, 4, 8, 1_000] {
+        let p = InferencePlan { checkpoint_period: period, ..plan.clone() };
+        let r = run_intermittent_inference(&backend, &image, &trace, &p);
         println!(
-            "| {period} | {} | {} | {:.3} |",
-            r.frames_reexecuted,
-            r.checkpoints * 64, // 2 NV-FF x 32-bit accumulator
-            forward_progress(&r, &workload),
+            "| {period} | {} | {} | {:.6} | {:.3} |",
+            r.tiles_reexecuted,
+            r.checkpoints,
+            r.checkpoint_energy_uj,
+            inference_forward_progress(&r),
         );
     }
 
     println!("\n== Fig. 7b-style event trace (periodic failures) ==");
-    let trace = PowerTrace::periodic(260, 40, 30);
-    let r = run_intermittent(workload, &trace, NvPolicy::DualFf, 20, false);
-    for e in r.events.iter().take(16) {
+    let trace = PowerTrace::periodic(50, 10, 40);
+    let r = run_intermittent_inference(&backend, &image, &trace, &plan);
+    for e in r.events.iter().take(14) {
         println!("  {e:?}");
     }
     println!(
-        "  => finished={} value={} failures={} reexecuted={}",
-        r.finished, r.final_value, r.failures, r.frames_reexecuted
+        "  => finished={} failures={} reexecuted={} bit-identical={}",
+        r.finished,
+        r.failures,
+        r.tiles_reexecuted,
+        r.finished && r.logits == clean.logits,
     );
-
-    println!("\n== single- vs dual-NV-FF (§IV PDP trade) ==");
-    let trace = PowerTrace::periodic(260, 40, 60);
-    for (name, policy) in
-        [("dual", NvPolicy::DualFf), ("single", NvPolicy::SingleFf)]
-    {
-        let r = run_intermittent(workload, &trace, policy, 20, false);
-        println!(
-            "  {name}-FF: final value {} (exact {}), ckpt writes {}",
-            r.final_value,
-            workload.frames * workload.value_per_frame,
-            r.checkpoints
-                * if policy == NvPolicy::DualFf { 64 } else { 32 },
-        );
-    }
+    println!("\nenergy ledger (interrupted run):\n{}", r.cost.table());
 }

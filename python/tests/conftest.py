@@ -1,0 +1,8 @@
+"""Make `compile` importable when pytest runs from the repo root
+(CI invokes `python -m pytest python/tests -q` without installing the
+package)."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))

@@ -6,8 +6,12 @@
 //! a CMOS-only datapath, and time the intermittent-execution engine.
 
 use pims::benchlib::{black_box, Bench};
+use pims::cnn;
+use pims::coordinator::{Backend, PimSimBackend};
 use pims::intermittency::{
-    forward_progress, run_intermittent, Event, FrameWorkload, PowerTrace,
+    forward_progress, inference_forward_progress, run_intermittent,
+    run_intermittent_inference, Event, FrameWorkload, InferencePlan,
+    PowerTrace,
 };
 use pims::nvfa::NvPolicy;
 
@@ -101,6 +105,64 @@ fn main() {
             NvPolicy::DualFf,
             20,
             false,
+        ));
+    });
+
+    // --- The INTEGRATED path: real bit-accurate inference as
+    // resumable tiles under power failures (ISSUE 2 tentpole).
+    let backend =
+        PimSimBackend::new(cnn::micro_net(), 1, 4, 1, 0xF16).unwrap();
+    let image: Vec<f32> = (0..backend.input_elems())
+        .map(|i| ((i * 3 + 1) % 13) as f32 / 12.0)
+        .collect();
+    let plan = InferencePlan {
+        tile_patches: 4,
+        checkpoint_period: 2,
+        cycles_per_tile: 10,
+        volatile_only: false,
+    };
+    let clean = run_intermittent_inference(
+        &backend,
+        &image,
+        &PowerTrace::periodic(1_000_000, 0, 1),
+        &plan,
+    );
+    let rough_trace = PowerTrace::periodic(30, 5, 400);
+    let nv =
+        run_intermittent_inference(&backend, &image, &rough_trace, &plan);
+    let vol = run_intermittent_inference(
+        &backend,
+        &image,
+        &rough_trace,
+        &InferencePlan { volatile_only: true, ..plan.clone() },
+    );
+    b.note(
+        "inference bit-identical across failures",
+        format!(
+            "{} ({} failures, {} tiles re-executed)",
+            nv.finished && nv.logits == clean.logits,
+            nv.failures,
+            nv.tiles_reexecuted
+        ),
+    );
+    b.note(
+        "inference ckpt energy",
+        format!("{:.6} µJ over {} checkpoints", nv.checkpoint_energy_uj, nv.checkpoints),
+    );
+    b.note(
+        "inference progress nv vs volatile",
+        format!(
+            "{:.3} vs {:.3}",
+            inference_forward_progress(&nv),
+            inference_forward_progress(&vol)
+        ),
+    );
+    b.iter("intermittent_inference_micro", || {
+        black_box(run_intermittent_inference(
+            &backend,
+            &image,
+            &rough_trace,
+            &plan,
         ));
     });
     b.report();

@@ -62,6 +62,17 @@ pub fn epu_fp_layer_cost(
     );
 }
 
+/// Charge `bits` of MTJ checkpoint writes into the ledger — the
+/// resumable-inference NV checkpoint path (§II-B.3 at tile
+/// granularity). Energy-only: checkpoint writes overlap the array
+/// pipeline the way the NV-FA shadow writes do.
+pub fn charge_nv_checkpoint(cost: &mut CostBreakdown, bits: u64) {
+    cost.add_energy_only(
+        "nv_checkpoint",
+        bits as f64 * tech45::NV_WRITE_PJ,
+    );
+}
+
 /// Full estimate of one model execution.
 #[derive(Debug, Clone)]
 pub struct RunEstimate {
@@ -436,6 +447,16 @@ mod tests {
             .map(|l| l.macs())
             .sum();
         assert!((pe - fp_macs as f64 * EPU_FP_MAC_PJ).abs() < 1e-6);
+    }
+
+    #[test]
+    fn nv_checkpoint_charge_is_energy_only() {
+        let mut c = CostBreakdown::new();
+        charge_nv_checkpoint(&mut c, 1000);
+        charge_nv_checkpoint(&mut c, 24);
+        let (e, l) = c.component("nv_checkpoint").unwrap();
+        assert!((e - 1024.0 * tech45::NV_WRITE_PJ).abs() < 1e-9);
+        assert_eq!(l, 0.0, "checkpoints overlap the array pipeline");
     }
 
     #[test]

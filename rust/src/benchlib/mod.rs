@@ -77,10 +77,15 @@ impl Bench {
     pub fn new(group: &str) -> Self {
         // Keep default budgets small: the full bench suite covers every
         // paper table/figure and must finish in minutes on one core.
+        // CI's bench-smoke shrinks them further via the env knob.
+        let target_ms = std::env::var("PIMS_BENCH_TARGET_MS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(300);
         Bench {
             group: group.to_string(),
-            warmup: Duration::from_millis(50),
-            target_time: Duration::from_millis(300),
+            warmup: Duration::from_millis((target_ms / 6).max(1)),
+            target_time: Duration::from_millis(target_ms),
             max_iters: 1000,
             results: Vec::new(),
             notes: Vec::new(),
@@ -145,6 +150,52 @@ impl Bench {
                 println!("| {k} | {v} |");
             }
         }
+        if let Ok(dir) = std::env::var("PIMS_BENCH_JSON_DIR") {
+            if !dir.is_empty() {
+                match self.write_json(&dir) {
+                    Ok(p) => println!("\n(bench json written to {p})"),
+                    Err(e) => eprintln!("bench json write failed: {e}"),
+                }
+            }
+        }
+    }
+
+    /// Write `BENCH_<group>.json` (measurements + notes) into `dir` —
+    /// the machine-readable artifact CI's bench-smoke uploads. Called
+    /// automatically by [`Bench::report`] when `PIMS_BENCH_JSON_DIR`
+    /// is set.
+    pub fn write_json(&self, dir: &str) -> std::io::Result<String> {
+        use crate::jsonlite::Json;
+        use std::collections::BTreeMap;
+        let cases: Vec<Json> = self
+            .results
+            .iter()
+            .map(|m| {
+                let mut o = BTreeMap::new();
+                o.insert("name".to_string(), Json::Str(m.name.clone()));
+                o.insert("iters".to_string(), Json::Num(m.iters as f64));
+                o.insert("mean_ns".to_string(), Json::Num(m.mean_ns));
+                o.insert("p50_ns".to_string(), Json::Num(m.p50_ns));
+                o.insert("p95_ns".to_string(), Json::Num(m.p95_ns));
+                o.insert("p99_ns".to_string(), Json::Num(m.p99_ns));
+                o.insert("min_ns".to_string(), Json::Num(m.min_ns));
+                o.insert("max_ns".to_string(), Json::Num(m.max_ns));
+                Json::Obj(o)
+            })
+            .collect();
+        let notes: BTreeMap<String, Json> = self
+            .notes
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
+            .collect();
+        let mut root = BTreeMap::new();
+        root.insert("group".to_string(), Json::Str(self.group.clone()));
+        root.insert("cases".to_string(), Json::Arr(cases));
+        root.insert("notes".to_string(), Json::Obj(notes));
+        std::fs::create_dir_all(dir)?;
+        let path = format!("{dir}/BENCH_{}.json", self.group);
+        std::fs::write(&path, Json::Obj(root).dump())?;
+        Ok(path)
     }
 
     pub fn results(&self) -> &[Measurement] {
@@ -191,6 +242,27 @@ mod tests {
         let mut b = Bench::new("t");
         b.note("energy_uj", 471.8);
         assert_eq!(b.notes.len(), 1);
+    }
+
+    #[test]
+    fn json_report_roundtrips() {
+        let mut b = Bench::new("jsontest").with_budget(1, 5);
+        b.iter("work", || {
+            black_box((0..64).sum::<u64>());
+        });
+        b.note("ratio", "2.00x");
+        let dir = std::env::temp_dir().join("pims_bench_json");
+        let path = b.write_json(dir.to_str().unwrap()).unwrap();
+        assert!(path.ends_with("BENCH_jsontest.json"));
+        let j = crate::jsonlite::Json::load(&path).unwrap();
+        assert_eq!(j.get("group").unwrap().as_str(), Some("jsontest"));
+        let case = j.get("cases").unwrap().idx(0).unwrap();
+        assert_eq!(case.get("name").unwrap().as_str(), Some("work"));
+        assert!(case.get("mean_ns").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(
+            j.get("notes").unwrap().get("ratio").unwrap().as_str(),
+            Some("2.00x")
+        );
     }
 
     #[test]

@@ -31,7 +31,7 @@ impl BitPlanes {
     /// `< 2^bits`) into packed bit-planes.
     pub fn from_codes(codes: &[u32], rows: usize, cols: usize, bits: usize) -> Self {
         assert_eq!(codes.len(), rows * cols, "codes length mismatch");
-        assert!(bits >= 1 && bits <= 32);
+        assert!((1..=32).contains(&bits));
         debug_assert!(
             codes.iter().all(|&c| (c as u64) < (1u64 << bits)),
             "code out of range for {bits}-bit planes"

@@ -47,6 +47,15 @@ impl Parsed {
         }
     }
 
+    pub fn get_u64(&self, name: &str) -> anyhow::Result<Option<u64>> {
+        match self.flags.get(name) {
+            None => Ok(None),
+            Some(v) => Ok(Some(v.parse().map_err(|_| {
+                anyhow::anyhow!("--{name}: expected integer, got '{v}'")
+            })?)),
+        }
+    }
+
     /// Integer option with a lower bound (e.g. `--workers` must be at
     /// least 1); missing values fall back to `min`.
     pub fn get_usize_at_least(
@@ -294,6 +303,16 @@ mod tests {
     fn bad_usize_is_error() {
         let p = cli().parse(&argv(&["serve", "--batch", "x"])).unwrap();
         assert!(p.get_usize("batch").is_err());
+        assert!(p.get_u64("batch").is_err());
+    }
+
+    #[test]
+    fn u64_parses_large_values() {
+        let p = cli()
+            .parse(&argv(&["serve", "--batch", "10000000000"]))
+            .unwrap();
+        assert_eq!(p.get_u64("batch").unwrap(), Some(10_000_000_000));
+        assert_eq!(p.get_u64("artifacts").unwrap(), None);
     }
 
     #[test]

@@ -13,8 +13,16 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::Receiver;
 use std::time::Instant;
 
+use super::chaos::ChaosClock;
 use super::metrics_agg::WorkerSlot;
 use super::{Backend, BatchPolicy, Request, Response};
+
+/// Chaos mode: cap on consecutive power failures re-killing the SAME
+/// batch. A schedule whose on-time never fits one batch would
+/// otherwise starve the queue; after the cap the batch completes (a
+/// sustained brown-out must eventually let one batch through for the
+/// drain guarantee to hold).
+const MAX_KILLS_PER_BATCH: u64 = 8;
 
 pub(super) struct Batcher {
     policy: BatchPolicy,
@@ -69,6 +77,7 @@ impl Batcher {
         rx: Receiver<Request>,
         slot: &WorkerSlot,
         stop: &AtomicBool,
+        mut chaos: Option<ChaosClock>,
     ) {
         let batch = backend.batch_size().max(1);
         let elems = backend.input_elems();
@@ -92,7 +101,27 @@ impl Batcher {
                 flat[i * elems..(i + 1) * elems].copy_from_slice(&r.image);
             }
             let t0 = Instant::now();
-            match backend.infer_batch(&flat) {
+            // Chaos mode: the trace may kill this worker mid-batch —
+            // the execution's volatile results are lost before any
+            // reply is sent; the backend restores from NV state and
+            // the batch re-runs. Admitted requests are never dropped.
+            let mut result = backend.infer_batch(&flat);
+            if let Some(clock) = chaos.as_mut() {
+                let mut kills = 0u64;
+                while result.is_ok()
+                    && kills < MAX_KILLS_PER_BATCH
+                    && clock.batch_strikes()
+                {
+                    kills += 1;
+                    backend.power_fail_restore();
+                    result = backend.infer_batch(&flat);
+                }
+                if kills > 0 {
+                    slot.stats.lock().unwrap().counters.chaos_kills +=
+                        kills;
+                }
+            }
+            match result {
                 Ok(logits) => {
                     let exec = t0.elapsed();
                     // Re-read per batch: backends may model energy as
@@ -116,6 +145,10 @@ impl Batcher {
                             energy_uj,
                         });
                     }
+                    drop(s);
+                    // Results delivered: NV-shadowed backend state
+                    // (served-frame counters) becomes durable.
+                    backend.nv_commit();
                 }
                 Err(_) => {
                     slot.stats.lock().unwrap().counters.errors += 1;

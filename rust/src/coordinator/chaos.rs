@@ -1,0 +1,125 @@
+//! Chaos mode: trace-scheduled power failures injected into the
+//! executor workers. A worker "dies" mid-batch — the batch it just
+//! computed is lost before any reply is sent — then the pool resumes
+//! from NV state ([`super::Backend::power_fail_restore`]) and re-runs
+//! the batch, so no admitted request is ever dropped. This is the
+//! serving-side counterpart of `intermittency::inference`: the same
+//! [`TraceSpec`] grammar drives both.
+
+use crate::intermittency::{PowerInterval, TraceSpec};
+
+/// Chaos schedule applied to every pool worker. Trace cycles are
+/// consumed by batch executions (`cycles_per_batch` each); when an
+/// on-interval runs out mid-batch, that batch's worker is killed.
+#[derive(Debug, Clone)]
+pub struct ChaosPolicy {
+    pub spec: TraceSpec,
+    /// Trace cycles one executed batch consumes.
+    pub cycles_per_batch: u64,
+    /// On-cycles materialized for open-ended specs; the schedule
+    /// repeats once exhausted (chaos never stops).
+    pub horizon: u64,
+}
+
+impl ChaosPolicy {
+    pub fn new(spec: TraceSpec) -> ChaosPolicy {
+        ChaosPolicy { spec, cycles_per_batch: 1, horizon: 4096 }
+    }
+}
+
+/// Per-worker failure clock, ticked once per batch execution.
+pub(super) struct ChaosClock {
+    intervals: Vec<PowerInterval>,
+    idx: usize,
+    remaining: u64,
+    cycles_per_batch: u64,
+}
+
+impl ChaosClock {
+    /// Poisson schedules decorrelate across workers (per-worker seed
+    /// offset); deterministic schedules strike in lockstep, which is
+    /// the harsher test.
+    pub(super) fn new(policy: &ChaosPolicy, worker: usize) -> ChaosClock {
+        let mut spec = policy.spec.clone();
+        if let TraceSpec::Poisson { seed, .. } = &mut spec {
+            *seed = seed.wrapping_add(worker as u64);
+        }
+        let trace = spec.build(policy.horizon.max(1));
+        let remaining = trace
+            .intervals
+            .first()
+            .map(|iv| iv.on_cycles)
+            .unwrap_or(u64::MAX);
+        ChaosClock {
+            intervals: trace.intervals,
+            idx: 0,
+            remaining,
+            cycles_per_batch: policy.cycles_per_batch.max(1),
+        }
+    }
+
+    /// Advance by one batch execution. Returns true when a power
+    /// failure strikes during that batch (its results are lost).
+    pub(super) fn batch_strikes(&mut self) -> bool {
+        if self.intervals.is_empty() {
+            return false;
+        }
+        if self.remaining >= self.cycles_per_batch {
+            self.remaining -= self.cycles_per_batch;
+            false
+        } else {
+            self.idx = (self.idx + 1) % self.intervals.len();
+            self.remaining = self.intervals[self.idx].on_cycles;
+            true
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy(spec: &str) -> ChaosPolicy {
+        ChaosPolicy::new(TraceSpec::parse(spec).unwrap())
+    }
+
+    #[test]
+    fn periodic_clock_strikes_on_schedule() {
+        // 3 on-cycles per interval at 1 cycle/batch: 3 survive, 1 dies.
+        let mut c = ChaosClock::new(&policy("periodic:3:1:100"), 0);
+        let pattern: Vec<bool> =
+            (0..8).map(|_| c.batch_strikes()).collect();
+        assert_eq!(
+            pattern,
+            vec![false, false, false, true, false, false, false, true]
+        );
+    }
+
+    #[test]
+    fn schedule_wraps_forever() {
+        let mut c = ChaosClock::new(&policy("periodic:1:1:2"), 0);
+        let kills = (0..100).filter(|_| c.batch_strikes()).count();
+        assert!(kills >= 40, "schedule must repeat: {kills} kills");
+    }
+
+    #[test]
+    fn poisson_workers_decorrelated() {
+        let p = policy("poisson:4:1:9");
+        let mut a = ChaosClock::new(&p, 0);
+        let mut b = ChaosClock::new(&p, 1);
+        let pa: Vec<bool> = (0..64).map(|_| a.batch_strikes()).collect();
+        let pb: Vec<bool> = (0..64).map(|_| b.batch_strikes()).collect();
+        assert_ne!(pa, pb, "workers must not fail in lockstep");
+    }
+
+    #[test]
+    fn cycles_per_batch_scales_failure_rate() {
+        let mut p = policy("periodic:10:1:100");
+        p.cycles_per_batch = 5;
+        let mut c = ChaosClock::new(&p, 0);
+        // 10-cycle intervals at 5 cycles/batch: 2 survive, 1 dies.
+        assert!(!c.batch_strikes());
+        assert!(!c.batch_strikes());
+        assert!(c.batch_strikes());
+    }
+}

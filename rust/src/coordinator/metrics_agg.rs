@@ -33,6 +33,8 @@ pub struct WorkerSnapshot {
     pub served: u64,
     pub batches: u64,
     pub errors: u64,
+    /// Chaos-mode power failures that killed this worker mid-batch.
+    pub chaos_kills: u64,
     /// Gauge: this worker's outstanding requests at snapshot time.
     pub outstanding: usize,
 }
@@ -102,6 +104,7 @@ impl MetricsHub {
                 served: s.counters.served,
                 batches: s.counters.batches,
                 errors: s.counters.errors,
+                chaos_kills: s.counters.chaos_kills,
                 outstanding,
             });
         }

@@ -23,13 +23,18 @@
 //! and the E2E driver plugs in [`crate::runtime::Executable`].
 
 mod batcher;
+mod chaos;
 mod ingress;
 mod metrics_agg;
 mod pimsim;
 mod pool;
 
+pub use chaos::ChaosPolicy;
 pub use metrics_agg::{ServeMetrics, WorkerSnapshot};
-pub use pimsim::PimSimBackend;
+pub use pimsim::{
+    PimSimBackend, ResumableForward, TileId, DEFAULT_TILE_PATCHES,
+    SNAPSHOT_HEADER_WORDS,
+};
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
@@ -55,6 +60,15 @@ pub trait Backend {
     fn energy_uj_per_request(&self) -> f64 {
         0.0
     }
+
+    /// Chaos-mode hook: a simulated power failure killed the worker
+    /// mid-batch. Volatile state is lost; the backend restores from
+    /// its NV state. Stateless backends need no action.
+    fn power_fail_restore(&mut self) {}
+
+    /// Chaos-mode hook: the last batch's results were delivered;
+    /// backends with NV-shadowed state commit it here.
+    fn nv_commit(&mut self) {}
 }
 
 /// One classification request.
@@ -131,8 +145,7 @@ impl Coordinator {
         F: FnOnce() -> Result<B> + Send + 'static,
         B: Backend + 'static,
     {
-        let maker: pool::BackendMaker<B> =
-            Box::new(move || make_backend());
+        let maker: pool::BackendMaker<B> = Box::new(make_backend);
         Self::start_boxed(vec![maker], policy, queue_depth)
     }
 
@@ -152,6 +165,44 @@ impl Coordinator {
         F: Fn(usize) -> Result<B> + Send + Sync + 'static,
         B: Backend + 'static,
     {
+        Self::start_pool_inner(factory, workers, policy, queue_depth, None)
+    }
+
+    /// Start a pool with chaos mode: workers are killed mid-batch on
+    /// the [`ChaosPolicy`] trace schedule and resume from NV state —
+    /// no admitted request is dropped, kills show up in the per-worker
+    /// metrics.
+    pub fn start_pool_with_chaos<F, B>(
+        factory: F,
+        workers: usize,
+        policy: BatchPolicy,
+        queue_depth: usize,
+        chaos: ChaosPolicy,
+    ) -> Result<Coordinator>
+    where
+        F: Fn(usize) -> Result<B> + Send + Sync + 'static,
+        B: Backend + 'static,
+    {
+        Self::start_pool_inner(
+            factory,
+            workers,
+            policy,
+            queue_depth,
+            Some(chaos),
+        )
+    }
+
+    fn start_pool_inner<F, B>(
+        factory: F,
+        workers: usize,
+        policy: BatchPolicy,
+        queue_depth: usize,
+        chaos: Option<ChaosPolicy>,
+    ) -> Result<Coordinator>
+    where
+        F: Fn(usize) -> Result<B> + Send + Sync + 'static,
+        B: Backend + 'static,
+    {
         anyhow::ensure!(workers >= 1, "pool needs at least one worker");
         let factory = Arc::new(factory);
         let makers = (0..workers)
@@ -160,13 +211,22 @@ impl Coordinator {
                 Box::new(move || f(w)) as pool::BackendMaker<B>
             })
             .collect();
-        Self::start_boxed(makers, policy, queue_depth)
+        Self::start_boxed_inner(makers, policy, queue_depth, chaos)
     }
 
     fn start_boxed<B: Backend + 'static>(
         makers: Vec<pool::BackendMaker<B>>,
         policy: BatchPolicy,
         queue_depth: usize,
+    ) -> Result<Coordinator> {
+        Self::start_boxed_inner(makers, policy, queue_depth, None)
+    }
+
+    fn start_boxed_inner<B: Backend + 'static>(
+        makers: Vec<pool::BackendMaker<B>>,
+        policy: BatchPolicy,
+        queue_depth: usize,
+        chaos: Option<ChaosPolicy>,
     ) -> Result<Coordinator> {
         let hub = Arc::new(MetricsHub::new(makers.len()));
         let stop = Arc::new(AtomicBool::new(false));
@@ -176,6 +236,7 @@ impl Coordinator {
             queue_depth,
             hub.clone(),
             stop.clone(),
+            chaos,
         )?;
         let ingress = Ingress::new(
             pool.senders,
@@ -528,6 +589,39 @@ mod tests {
         );
         let err = r.err().expect("pool init must fail");
         assert!(err.to_string().contains("worker 1 refused"));
+    }
+
+    #[test]
+    fn chaos_kills_fire_without_dropping_requests() {
+        let chaos = ChaosPolicy::new(
+            crate::intermittency::TraceSpec::parse("periodic:2:1:64")
+                .unwrap(),
+        );
+        let c = Coordinator::start_pool_with_chaos(
+            |_| Ok(MockBackend::new(2, 4, 10)),
+            2,
+            BatchPolicy { max_wait: Duration::from_millis(1) },
+            32,
+            chaos,
+        )
+        .unwrap();
+        let pendings: Vec<Pending> = (0..20)
+            .map(|i| c.submit_blocking(img(i % 10)).unwrap())
+            .collect();
+        for (i, p) in pendings.into_iter().enumerate() {
+            let r = p.wait().unwrap();
+            assert_eq!(r.prediction, i % 10, "kills must not corrupt");
+        }
+        let m = c.shutdown();
+        assert_eq!(m.counters.served, 20, "chaos dropped requests");
+        assert!(
+            m.counters.chaos_kills >= 1,
+            "no kill fired: {:?}",
+            m.per_worker
+        );
+        let per_worker: u64 =
+            m.per_worker.iter().map(|w| w.chaos_kills).sum();
+        assert_eq!(per_worker, m.counters.chaos_kills);
     }
 
     #[test]

@@ -17,6 +17,7 @@ use std::thread::JoinHandle;
 use anyhow::Result;
 
 use super::batcher::Batcher;
+use super::chaos::{ChaosClock, ChaosPolicy};
 use super::metrics_agg::MetricsHub;
 use super::{Backend, BatchPolicy, Request};
 
@@ -45,6 +46,7 @@ pub(super) fn spawn_pool<B: Backend + 'static>(
     queue_depth: usize,
     hub: Arc<MetricsHub>,
     stop: Arc<AtomicBool>,
+    chaos: Option<ChaosPolicy>,
 ) -> Result<WorkerPool> {
     let workers = makers.len();
     assert!(workers >= 1, "pool needs at least one worker");
@@ -61,6 +63,9 @@ pub(super) fn spawn_pool<B: Backend + 'static>(
         let hub = hub.clone();
         let stop = stop.clone();
         let policy = policy.clone();
+        // Each worker gets its own failure clock (poisson schedules
+        // decorrelate by worker index).
+        let clock = chaos.as_ref().map(|p| ChaosClock::new(p, w));
         let handle = std::thread::Builder::new()
             .name(format!("pims-executor-{w}"))
             .spawn(move || {
@@ -85,6 +90,7 @@ pub(super) fn spawn_pool<B: Backend + 'static>(
                     rx,
                     hub.worker(w),
                     &stop,
+                    clock,
                 );
             })?;
         senders.push(tx);

@@ -15,6 +15,12 @@
 use crate::nvfa::{NvAccumulator, NvPolicy};
 use crate::prng::Pcg32;
 
+pub mod inference;
+pub use inference::{
+    inference_forward_progress, run_intermittent_inference,
+    InferencePlan, IntermittentInferenceResult, TileEvent,
+};
+
 /// One contiguous powered-on interval followed by an outage.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct PowerInterval {
@@ -87,6 +93,117 @@ impl PowerTrace {
 
     pub fn failure_count(&self) -> usize {
         self.intervals.len().saturating_sub(1)
+    }
+}
+
+/// Parsed trace spec for the CLI (`infer --power-trace`,
+/// `serve --chaos`):
+///
+/// * `poisson:<mean-on>:<off>[:<seed>]`
+/// * `periodic:<on>:<off>[:<count>]`
+/// * `bursty:<good-on>:<bad-on>:<off>[:<epochs>:<per-epoch>]`
+///
+/// All quantities are cycles of the consuming workload (array cycles
+/// for intermittent inference, batch executions for chaos mode).
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceSpec {
+    Poisson { mean_on: f64, off: u64, seed: u64 },
+    Periodic { on: u64, off: u64, count: Option<usize> },
+    Bursty {
+        good_on: u64,
+        bad_on: u64,
+        off: u64,
+        epochs: usize,
+        per_epoch: usize,
+    },
+}
+
+impl TraceSpec {
+    pub fn parse(s: &str) -> anyhow::Result<TraceSpec> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let int = |i: usize, what: &str| -> anyhow::Result<u64> {
+            parts
+                .get(i)
+                .ok_or_else(|| anyhow::anyhow!("{s}: missing {what}"))?
+                .parse()
+                .map_err(|_| anyhow::anyhow!("{s}: bad {what}"))
+        };
+        let opt_int = |i: usize, what: &str| -> anyhow::Result<Option<u64>> {
+            match parts.get(i) {
+                None => Ok(None),
+                Some(v) => Ok(Some(v.parse().map_err(|_| {
+                    anyhow::anyhow!("{s}: bad {what}")
+                })?)),
+            }
+        };
+        match parts[0] {
+            "poisson" => {
+                anyhow::ensure!(parts.len() <= 4, "{s}: too many fields");
+                let mean_on = int(1, "mean-on")? as f64;
+                anyhow::ensure!(mean_on >= 1.0, "{s}: mean-on must be >= 1");
+                Ok(TraceSpec::Poisson {
+                    mean_on,
+                    off: int(2, "off")?,
+                    seed: opt_int(3, "seed")?.unwrap_or(7),
+                })
+            }
+            "periodic" => {
+                anyhow::ensure!(parts.len() <= 4, "{s}: too many fields");
+                let on = int(1, "on")?;
+                anyhow::ensure!(on >= 1, "{s}: on must be >= 1");
+                Ok(TraceSpec::Periodic {
+                    on,
+                    off: int(2, "off")?,
+                    count: opt_int(3, "count")?.map(|c| c as usize),
+                })
+            }
+            "bursty" => {
+                anyhow::ensure!(parts.len() <= 6, "{s}: too many fields");
+                let good_on = int(1, "good-on")?;
+                let bad_on = int(2, "bad-on")?;
+                anyhow::ensure!(
+                    good_on >= 1 && bad_on >= 1,
+                    "{s}: on-times must be >= 1"
+                );
+                Ok(TraceSpec::Bursty {
+                    good_on,
+                    bad_on,
+                    off: int(3, "off")?,
+                    epochs: opt_int(4, "epochs")?.unwrap_or(4) as usize,
+                    per_epoch: opt_int(5, "per-epoch")?.unwrap_or(2)
+                        as usize,
+                })
+            }
+            other => anyhow::bail!(
+                "unknown trace kind '{other}' (poisson|periodic|bursty)"
+            ),
+        }
+    }
+
+    /// Materialize a trace covering at least `total_on_cycles` of
+    /// useful power where the spec leaves the horizon open (poisson
+    /// always; periodic without an explicit count). Bursty traces are
+    /// exactly as specified and may end earlier — a run can legally
+    /// finish un-powered.
+    pub fn build(&self, total_on_cycles: u64) -> PowerTrace {
+        match *self {
+            TraceSpec::Poisson { mean_on, off, seed } => {
+                PowerTrace::poisson(mean_on, off, total_on_cycles, seed)
+            }
+            TraceSpec::Periodic { on, off, count } => {
+                let count = count.unwrap_or_else(|| {
+                    (total_on_cycles.div_ceil(on) + 1) as usize
+                });
+                PowerTrace::periodic(on, off, count)
+            }
+            TraceSpec::Bursty {
+                good_on,
+                bad_on,
+                off,
+                epochs,
+                per_epoch,
+            } => PowerTrace::bursty(good_on, bad_on, off, epochs, per_epoch),
+        }
     }
 }
 
@@ -193,11 +310,7 @@ pub fn run_intermittent(
                 acc = NvAccumulator::new(32, policy, checkpoint_period);
             } else {
                 acc.restore();
-                // The restored state IS the last checkpoint, so the
-                // checkpoint cadence restarts from it (otherwise the
-                // period drifts and loss is no longer bounded by one
-                // period per failure).
-                acc.frames_since_ckpt = 0;
+                acc.reset_cadence();
                 reexecuted += frames_done - frames_durable;
                 frames_done = frames_durable;
             }
@@ -237,6 +350,7 @@ pub fn forward_progress(r: &IntermittentResult, w: &FrameWorkload) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::proptest_lite::Runner;
 
     const W: FrameWorkload =
         FrameWorkload { frames: 100, cycles_per_frame: 10, value_per_frame: 7 };
@@ -309,6 +423,128 @@ mod tests {
         assert_eq!(t.intervals.len(), 8);
         assert_eq!(t.intervals[0].on_cycles, 1000);
         assert_eq!(t.intervals[2].on_cycles, 10);
+    }
+
+    #[test]
+    fn trace_ending_inside_outage_reports_unfinished() {
+        // The trace's only interval powers 5 frames, then the outage
+        // runs to the end of the trace: no mid-run failure, workload
+        // unfinished, the 5 durable-or-volatile frames reported as-is.
+        let trace = PowerTrace {
+            intervals: vec![PowerInterval {
+                on_cycles: 50,
+                off_cycles: 1000,
+            }],
+        };
+        let r = run_intermittent(W, &trace, NvPolicy::DualFf, 5, false);
+        assert!(!r.finished);
+        assert_eq!(r.failures, 0);
+        assert_eq!(r.frames_completed, 5);
+        assert_eq!(r.frames_reexecuted, 0);
+        assert!(matches!(
+            r.events.last(),
+            Some(Event::Done { frames: 5, .. })
+        ));
+    }
+
+    #[test]
+    fn zero_length_intervals_are_harmless() {
+        // Degenerate on-times power zero frames but still count as
+        // failures; the accumulator survives them with nothing lost.
+        let mut intervals =
+            vec![PowerInterval { on_cycles: 0, off_cycles: 10 }; 3];
+        intervals.push(PowerInterval {
+            on_cycles: 10_000,
+            off_cycles: 0,
+        });
+        let trace = PowerTrace { intervals };
+        let r = run_intermittent(W, &trace, NvPolicy::DualFf, 20, false);
+        assert!(r.finished);
+        assert_eq!(r.final_value, 700);
+        assert_eq!(r.failures, 3);
+        assert_eq!(r.frames_reexecuted, 0);
+    }
+
+    #[test]
+    fn checkpoint_period_larger_than_workload() {
+        // Period 10_000 >> 100 frames: no periodic checkpoint ever
+        // fires, so the one failure loses everything accumulated, and
+        // only the final durability checkpoint is written.
+        let trace = PowerTrace {
+            intervals: vec![
+                PowerInterval { on_cycles: 500, off_cycles: 10 },
+                PowerInterval { on_cycles: 2000, off_cycles: 0 },
+            ],
+        };
+        let r =
+            run_intermittent(W, &trace, NvPolicy::DualFf, 10_000, false);
+        assert!(r.finished);
+        assert_eq!(r.final_value, 700);
+        assert_eq!(r.checkpoints, 1, "only the final durability write");
+        assert_eq!(r.frames_reexecuted, 50, "the whole first interval");
+    }
+
+    #[test]
+    fn loss_per_failure_bounded_by_checkpoint_period_property() {
+        let mut r = Runner::new(0xF7B);
+        r.run("reexec <= failures x ckpt period", |g| {
+            let period = g.usize(1, 30) as u64;
+            let w = FrameWorkload {
+                frames: g.usize(1, 120) as u64,
+                cycles_per_frame: g.usize(1, 12) as u64,
+                value_per_frame: 3,
+            };
+            let trace = PowerTrace::poisson(
+                g.f64(20.0, 400.0),
+                g.usize(0, 60) as u64,
+                w.frames * w.cycles_per_frame * 4,
+                g.u64_any(),
+            );
+            let res =
+                run_intermittent(w, &trace, NvPolicy::DualFf, period, false);
+            assert!(
+                res.frames_reexecuted <= res.failures * period,
+                "reexec {} > failures {} x period {period}",
+                res.frames_reexecuted,
+                res.failures
+            );
+            if res.finished {
+                assert_eq!(
+                    res.final_value,
+                    w.frames * w.value_per_frame
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn trace_specs_parse_and_build() {
+        let p = TraceSpec::parse("poisson:300:50").unwrap();
+        assert_eq!(
+            p,
+            TraceSpec::Poisson { mean_on: 300.0, off: 50, seed: 7 }
+        );
+        let t = p.build(10_000);
+        assert!(t.total_on_cycles() >= 10_000);
+
+        let p = TraceSpec::parse("periodic:260:40:12").unwrap();
+        assert_eq!(
+            p,
+            TraceSpec::Periodic { on: 260, off: 40, count: Some(12) }
+        );
+        assert_eq!(p.build(1).intervals.len(), 12);
+        // Open count sizes itself to the budget.
+        let open = TraceSpec::parse("periodic:100:10").unwrap();
+        assert!(open.build(1000).total_on_cycles() >= 1000);
+
+        let b = TraceSpec::parse("bursty:1000:10:5:4:2").unwrap();
+        assert_eq!(b.build(0).intervals.len(), 8);
+
+        assert!(TraceSpec::parse("poisson:0:50").is_err());
+        assert!(TraceSpec::parse("periodic:x:40").is_err());
+        assert!(TraceSpec::parse("periodic:100").is_err());
+        assert!(TraceSpec::parse("sawtooth:1:2").is_err());
+        assert!(TraceSpec::parse("poisson:1:2:3:4").is_err());
     }
 
     #[test]

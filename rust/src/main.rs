@@ -3,6 +3,9 @@
 //!
 //! Subcommands:
 //!   serve          E2E serving over the AOT artifacts + synthetic SVHN
+//!                  (`--chaos` kills workers mid-batch on a schedule)
+//!   infer          single-image PIM co-sim inference, optionally
+//!                  under a power-failure trace (resumable NV tiles)
 //!   simulate       PIM energy/latency breakdown for one design point
 //!   sweep          Fig. 9/10-style sweep over designs x W:I x batch
 //!   sense-mc       Fig. 4b Monte Carlo of the AND sense margin
@@ -14,16 +17,18 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 use pims::accel::{Accelerator, Proposed};
 use pims::baselines::{Asic, Imce, Reram};
-use pims::cli::{flag, opt_default, Cli};
+use pims::cli::{flag, opt, opt_default, Cli};
 use pims::cnn;
 use pims::configsys::Config;
 use pims::coordinator::{
-    BatchPolicy, Coordinator, PimSimBackend, PjrtBackend,
+    BatchPolicy, ChaosPolicy, Coordinator, PimSimBackend, PjrtBackend,
 };
 use pims::dataset::Dataset;
 use pims::device::{monte_carlo_sense, SotCell};
 use pims::intermittency::{
-    forward_progress, run_intermittent, FrameWorkload, PowerTrace,
+    forward_progress, inference_forward_progress, run_intermittent,
+    run_intermittent_inference, FrameWorkload, InferencePlan, PowerTrace,
+    TraceSpec,
 };
 use pims::nvfa::NvPolicy;
 use pims::runtime::{artifacts_dir, Engine, Manifest};
@@ -43,7 +48,23 @@ fn cli() -> Cli {
                 opt_default("wbits", "pimsim weight bits", "1"),
                 opt_default("abits", "pimsim activation bits", "4"),
                 opt_default("seed", "pimsim weight/dataset seed", "42"),
+                opt("chaos", "kill workers mid-batch on a trace schedule: poisson:<mean-on>:<off>[:<seed>] | periodic:<on>:<off>[:<count>] | bursty:<good>:<bad>:<off>[:<epochs>:<per-epoch>] (pimsim only)"),
+                opt_default("chaos-cycles", "trace cycles one batch consumes (chaos mode)", "1"),
                 opt_default("config", "optional config file", ""),
+            ],
+        )
+        .command(
+            "infer",
+            "single-image inference on the bit-accurate PIM co-sim, optionally under a power-failure trace (resumable NV tiles)",
+            vec![
+                opt_default("model", "micro|svhn", "micro"),
+                opt_default("wbits", "weight bits", "1"),
+                opt_default("abits", "activation bits", "4"),
+                opt_default("seed", "weight/image seed", "42"),
+                opt("power-trace", "poisson:<mean-on>:<off>[:<seed>] | periodic:<on>:<off>[:<count>] | bursty:<good>:<bad>:<off>[:<epochs>:<per-epoch>]"),
+                opt_default("tile-patches", "patch rows per resumable tile", "16"),
+                opt_default("ckpt", "checkpoint period (tiles)", "4"),
+                opt_default("cycles-per-tile", "trace cycles one tile consumes", "10"),
             ],
         )
         .command(
@@ -137,6 +158,7 @@ fn main() {
 fn run(p: pims::cli::Parsed) -> Result<()> {
     match p.command.as_str() {
         "serve" => cmd_serve(&p),
+        "infer" => cmd_infer(&p),
         "simulate" => cmd_simulate(&p),
         "sweep" => cmd_sweep(&p),
         "sense-mc" => cmd_sense_mc(&p),
@@ -176,9 +198,29 @@ fn cmd_serve(p: &pims::cli::Parsed) -> Result<()> {
         wait_ms: p.get_usize("wait-ms")?.unwrap_or(2) as u64,
     };
     match p.get("backend").unwrap_or("pjrt") {
-        "pjrt" => serve_pjrt(&opts),
+        "pjrt" => {
+            anyhow::ensure!(
+                p.get("chaos").unwrap_or("").is_empty(),
+                "--chaos requires --backend pimsim (PJRT backends \
+                 have no NV state to resume from)"
+            );
+            serve_pjrt(&opts)
+        }
         "pimsim" => serve_pimsim(p, &opts),
         other => anyhow::bail!("unknown backend '{other}' (pjrt|pimsim)"),
+    }
+}
+
+/// Parse the `--chaos` flags into a policy, if chaos mode was asked.
+fn chaos_policy(p: &pims::cli::Parsed) -> Result<Option<ChaosPolicy>> {
+    match p.get("chaos") {
+        Some(spec) if !spec.is_empty() => {
+            let mut cp = ChaosPolicy::new(TraceSpec::parse(spec)?);
+            cp.cycles_per_batch =
+                p.get_u64("chaos-cycles")?.unwrap_or(1).max(1);
+            Ok(Some(cp))
+        }
+        _ => Ok(None),
     }
 }
 
@@ -276,15 +318,28 @@ fn serve_pimsim(p: &pims::cli::Parsed, o: &ServeOpts) -> Result<()> {
         model.name, o.batch, o.workers, ds.n
     );
     let batch = o.batch;
-    let coordinator = Coordinator::start_pool(
-        move |_worker| {
-            // Same seed on every worker: bit-identical replicas.
-            PimSimBackend::new(model.clone(), w_bits, a_bits, batch, seed)
-        },
-        o.workers,
-        BatchPolicy { max_wait: Duration::from_millis(o.wait_ms) },
-        o.queue,
-    )?;
+    let chaos = chaos_policy(p)?;
+    if let Some(cp) = &chaos {
+        println!(
+            "chaos mode: {:?}, {} cycle(s)/batch — workers die \
+             mid-batch and resume from NV state",
+            cp.spec, cp.cycles_per_batch
+        );
+    }
+    let factory = move |_worker: usize| {
+        // Same seed on every worker: bit-identical replicas.
+        PimSimBackend::new(model.clone(), w_bits, a_bits, batch, seed)
+    };
+    let policy =
+        BatchPolicy { max_wait: Duration::from_millis(o.wait_ms) };
+    let coordinator = match chaos {
+        Some(cp) => Coordinator::start_pool_with_chaos(
+            factory, o.workers, policy, o.queue, cp,
+        )?,
+        None => Coordinator::start_pool(
+            factory, o.workers, policy, o.queue,
+        )?,
+    };
 
     let t0 = Instant::now();
     let mut done = 0usize;
@@ -338,12 +393,125 @@ fn print_serve_tail(
         m.counters.batches,
         100.0 * m.counters.mean_batch_fill(batch)
     );
-    for (w, s) in m.per_worker.iter().enumerate() {
+    if m.counters.chaos_kills > 0 {
         println!(
-            "  worker {w:<2}     : served {} in {} batches, {} errors",
-            s.served, s.batches, s.errors
+            "chaos kills     : {} (every batch re-ran after NV restore)",
+            m.counters.chaos_kills
         );
     }
+    for (w, s) in m.per_worker.iter().enumerate() {
+        println!(
+            "  worker {w:<2}     : served {} in {} batches, {} errors, \
+             {} chaos kills",
+            s.served, s.batches, s.errors, s.chaos_kills
+        );
+    }
+}
+
+/// `pims infer`: one image through the bit-accurate PIM co-sim as
+/// resumable tiles, optionally under a power-failure trace — the
+/// integrated Fig. 7 scenario. Reports checkpoint count/energy,
+/// re-executed tiles, forward progress vs. the volatile baseline, and
+/// verifies the interrupted logits are bit-identical to an
+/// uninterrupted run.
+fn cmd_infer(p: &pims::cli::Parsed) -> Result<()> {
+    let w_bits = p.get_usize("wbits")?.unwrap_or(1) as u32;
+    let a_bits = p.get_usize("abits")?.unwrap_or(4) as u32;
+    let seed = p.get_u64("seed")?.unwrap_or(42);
+    let model = match p.get("model").unwrap_or("micro") {
+        "micro" => cnn::micro_net(),
+        "svhn" => cnn::svhn_net(),
+        other => anyhow::bail!("unknown model '{other}' (micro|svhn)"),
+    };
+    let ds = pims::dataset::generate(1, model.input_hw, model.input_c, seed);
+    let image = ds.image(0).to_vec();
+    let backend =
+        PimSimBackend::new(model, w_bits, a_bits, 1, seed)?;
+    let plan = InferencePlan {
+        tile_patches: p.get_usize_at_least("tile-patches", 1)?,
+        checkpoint_period: p.get_u64("ckpt")?.unwrap_or(4).max(1),
+        cycles_per_tile: p.get_u64("cycles-per-tile")?.unwrap_or(10).max(1),
+        volatile_only: false,
+    };
+    let tiles =
+        backend.begin_forward(&image, plan.tile_patches).total_tiles();
+    let work = tiles * plan.cycles_per_tile;
+    println!(
+        "model={} W{w_bits}:I{a_bits}, {tiles} tiles x {} cycles \
+         ({} patch rows/tile), ckpt every {} tiles",
+        backend.model_name(),
+        plan.cycles_per_tile,
+        plan.tile_patches,
+        plan.checkpoint_period
+    );
+
+    // The failure-free oracle run.
+    let clean_trace = PowerTrace::periodic(work.max(1) * 2, 0, 1);
+    let clean =
+        run_intermittent_inference(&backend, &image, &clean_trace, &plan);
+    anyhow::ensure!(clean.finished, "oracle run must finish");
+
+    let spec = p.get("power-trace").unwrap_or("");
+    if spec.is_empty() {
+        println!(
+            "uninterrupted: {} tiles, ckpt energy {:.6} µJ, logits {:?}",
+            clean.tiles_executed,
+            clean.checkpoint_energy_uj,
+            &clean.logits[..clean.logits.len().min(10)]
+        );
+        println!("{}", clean.cost.table());
+        return Ok(());
+    }
+    let trace = TraceSpec::parse(spec)?.build(work.max(1) * 20);
+    let nv = run_intermittent_inference(&backend, &image, &trace, &plan);
+    let vol = run_intermittent_inference(
+        &backend,
+        &image,
+        &trace,
+        &InferencePlan { volatile_only: true, ..plan.clone() },
+    );
+
+    println!("\n== intermittent inference ({spec}) ==");
+    println!(
+        "| mode | finished | failures | tiles exec | re-exec | ckpts | \
+         ckpt µJ | progress |"
+    );
+    println!("|---|---|---|---|---|---|---|---|");
+    for (name, r) in [("nv-tiles", &nv), ("volatile", &vol)] {
+        println!(
+            "| {name} | {} | {} | {} | {} | {} | {:.6} | {:.3} |",
+            r.finished,
+            r.failures,
+            r.tiles_executed,
+            r.tiles_reexecuted,
+            r.checkpoints,
+            r.checkpoint_energy_uj,
+            inference_forward_progress(r)
+        );
+    }
+    for e in nv.events.iter().take(10) {
+        println!("  {e:?}");
+    }
+    if nv.events.len() > 10 {
+        println!("  ... {} more events", nv.events.len() - 10);
+    }
+    if nv.finished {
+        let identical = nv.logits == clean.logits;
+        println!(
+            "logits bit-identical to uninterrupted run: {identical}"
+        );
+        anyhow::ensure!(
+            identical,
+            "BUG: interrupted logits diverged from the oracle"
+        );
+    } else {
+        println!(
+            "trace ended before completion ({} of {} tiles)",
+            nv.tiles_executed - nv.tiles_reexecuted,
+            nv.tiles_total
+        );
+    }
+    Ok(())
 }
 
 fn cmd_simulate(p: &pims::cli::Parsed) -> Result<()> {
@@ -459,9 +627,9 @@ fn cmd_intermittent(p: &pims::cli::Parsed) -> Result<()> {
     Ok(())
 }
 
-// Drives the `xla` crate directly, so it only exists in `pjrt` builds
-// (DESIGN.md §4).
-#[cfg(feature = "pjrt")]
+// Drives the `xla` crate directly, so it only exists in real-XLA
+// builds (`pjrt` + `xla-vendored`; DESIGN.md §4).
+#[cfg(all(feature = "pjrt", feature = "xla-vendored"))]
 fn cmd_probe(p: &pims::cli::Parsed) -> Result<()> {
     let hlo = p.get("hlo").unwrap_or("");
     anyhow::ensure!(!hlo.is_empty(), "--hlo required");
@@ -497,11 +665,11 @@ fn cmd_probe(p: &pims::cli::Parsed) -> Result<()> {
     Ok(())
 }
 
-#[cfg(not(feature = "pjrt"))]
+#[cfg(not(all(feature = "pjrt", feature = "xla-vendored")))]
 fn cmd_probe(_p: &pims::cli::Parsed) -> Result<()> {
     anyhow::bail!(
-        "probe requires the `pjrt` feature (see DESIGN.md §4); \
-         `serve --backend pimsim` runs without it"
+        "probe requires the `pjrt` + `xla-vendored` features (see \
+         DESIGN.md §4); `serve --backend pimsim` runs without them"
     )
 }
 

@@ -110,6 +110,10 @@ pub struct Counters {
     pub batches: u64,
     pub rejected: u64,
     pub errors: u64,
+    /// Chaos mode: simulated power failures that killed a batch
+    /// mid-execution (the batch re-ran after NV restore — no request
+    /// was dropped).
+    pub chaos_kills: u64,
 }
 
 impl Counters {
@@ -119,6 +123,7 @@ impl Counters {
         self.batches += o.batches;
         self.rejected += o.rejected;
         self.errors += o.errors;
+        self.chaos_kills += o.chaos_kills;
     }
 
     /// Mean occupancy of the dynamic batches.

@@ -78,7 +78,7 @@ pub struct NvAccumulator {
     /// Per-bit FF state: (sum FF, carry shadow for SingleFf modeling).
     sum_ff: Vec<NvFlipFlop>,
     /// Frames accumulated since the last checkpoint.
-    pub frames_since_ckpt: u64,
+    frames_since_ckpt: u64,
     /// Totals for the energy model.
     pub adds: u64,
     pub checkpoints: u64,
@@ -147,6 +147,19 @@ impl NvAccumulator {
         }
     }
 
+    /// Frames accumulated since the last checkpoint.
+    pub fn frames_since_ckpt(&self) -> u64 {
+        self.frames_since_ckpt
+    }
+
+    /// Restart the checkpoint cadence without writing the NV elements.
+    /// Used after a restore: the restored state IS the last checkpoint,
+    /// so the period counts from it (otherwise the cadence drifts and
+    /// loss is no longer bounded by one period per failure).
+    pub fn reset_cadence(&mut self) {
+        self.frames_since_ckpt = 0;
+    }
+
     /// Force a checkpoint of the volatile state into the NV elements.
     pub fn checkpoint(&mut self) {
         for ff in self.sum_ff.iter_mut() {
@@ -201,6 +214,67 @@ impl NvAccumulator {
 /// is ≈ (m+n)·58 ps.
 pub fn add_window_ps(m_bits: usize, n_bits: usize) -> f64 {
     (m_bits + n_bits) as f64 * 58.0
+}
+
+/// Tile-granular NV checkpoint store: the §II-B.3 NV-FF idea scaled up
+/// to the resumable inference engine. The store keeps exactly one
+/// committed snapshot (a word-serialized engine state); `checkpoint`
+/// overwrites it and counts the MTJ bits actually written, `restore`
+/// hands the committed words back after a power failure.
+///
+/// Checkpoints charge only the state that is NOT already durable:
+/// in-flight partial-sum accumulator words plus a small control record.
+/// Operands (weights, activations) are resident in the non-volatile
+/// SOT-MRAM arrays by construction — the PIM premise — and their
+/// writes are charged by the normal `accel` operand-write path.
+#[derive(Debug, Clone, Default)]
+pub struct NvStateStore {
+    committed: Vec<u64>,
+    valid: bool,
+    /// Checkpoint commits performed.
+    pub checkpoints: u64,
+    /// Restores served after power failures.
+    pub restores: u64,
+    /// MTJ bits written across all checkpoints (energy accounting).
+    pub nv_bit_writes: u64,
+}
+
+impl NvStateStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Commit `words` as the new NV snapshot. `charged_words` is the
+    /// number of words actually written into MTJ cells this checkpoint
+    /// (the incremental accumulator + control state; NV-resident
+    /// operands cost nothing).
+    pub fn checkpoint(&mut self, words: &[u64], charged_words: usize) {
+        self.committed.clear();
+        self.committed.extend_from_slice(words);
+        self.valid = true;
+        self.checkpoints += 1;
+        self.nv_bit_writes += 64 * charged_words as u64;
+    }
+
+    /// Power-up restore: the last committed snapshot, or `None` if no
+    /// checkpoint was ever written (cold restart).
+    pub fn restore(&mut self) -> Option<Vec<u64>> {
+        if self.valid {
+            self.restores += 1;
+            Some(self.committed.clone())
+        } else {
+            None
+        }
+    }
+
+    pub fn has_checkpoint(&self) -> bool {
+        self.valid
+    }
+
+    /// MTJ checkpoint-write energy so far [pJ].
+    pub fn energy_pj(&self) -> f64 {
+        self.nv_bit_writes as f64 * crate::energy::tech45::NV_WRITE_PJ
+    }
 }
 
 #[cfg(test)]
@@ -300,5 +374,47 @@ mod tests {
         // §II-B.3: "≈ m+n × 58 ps"
         assert_eq!(add_window_ps(1, 4), 290.0);
         assert_eq!(add_window_ps(8, 2), 580.0);
+    }
+
+    #[test]
+    fn reset_cadence_defers_next_checkpoint() {
+        let mut acc = NvAccumulator::new(8, NvPolicy::DualFf, 3);
+        acc.end_frame();
+        acc.end_frame();
+        assert_eq!(acc.frames_since_ckpt(), 2);
+        acc.reset_cadence();
+        assert_eq!(acc.frames_since_ckpt(), 0);
+        // The full period must elapse again before the next write.
+        assert!(!acc.end_frame());
+        assert!(!acc.end_frame());
+        assert!(acc.end_frame());
+        assert_eq!(acc.checkpoints, 1);
+    }
+
+    #[test]
+    fn state_store_roundtrip_and_accounting() {
+        let mut st = NvStateStore::new();
+        assert!(!st.has_checkpoint());
+        assert!(st.restore().is_none());
+        st.checkpoint(&[1, 2, 3], 2);
+        st.checkpoint(&[4, 5], 1);
+        assert_eq!(st.restore().unwrap(), vec![4, 5]);
+        assert_eq!(st.checkpoints, 2);
+        assert_eq!(st.restores, 1);
+        // 2 + 1 charged words at 64 bits each.
+        assert_eq!(st.nv_bit_writes, 3 * 64);
+        let want = 3.0 * 64.0 * crate::energy::tech45::NV_WRITE_PJ;
+        assert!((st.energy_pj() - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn state_store_restore_is_repeatable() {
+        // NV reads are non-destructive: every power failure restores
+        // the same committed snapshot until the next checkpoint.
+        let mut st = NvStateStore::new();
+        st.checkpoint(&[7, 8], 2);
+        assert_eq!(st.restore().unwrap(), vec![7, 8]);
+        assert_eq!(st.restore().unwrap(), vec![7, 8]);
+        assert_eq!(st.restores, 2);
     }
 }

@@ -8,18 +8,20 @@
 //! with 64-bit instruction ids that xla_extension 0.5.1 rejects; the
 //! text parser reassigns ids (see python/compile/aot.py).
 //!
-//! The `xla` crate is gated behind the `pjrt` cargo feature (it is not
-//! vendored in the offline build image; DESIGN.md §4). Without the
-//! feature this module compiles a stub [`Engine`]/[`Executable`] with
-//! the same API whose `Engine::cpu()` fails with a clear message, so
-//! the coordinator, CLI, and examples build and test offline — the
-//! PIM co-simulation backend serves without PJRT entirely.
+//! The `xla` crate is gated behind the `pjrt` + `xla-vendored` cargo
+//! features (it is not vendored in the offline build image; DESIGN.md
+//! §4). Without both, this module compiles a stub
+//! [`Engine`]/[`Executable`] with the same API whose `Engine::cpu()`
+//! fails with a clear message, so the coordinator, CLI, and examples
+//! build and test offline — including `cargo check --features pjrt`,
+//! which CI runs against the stub — and the PIM co-simulation backend
+//! serves without PJRT entirely.
 
 use std::path::Path;
 
 use anyhow::{Context, Result};
 
-#[cfg(feature = "pjrt")]
+#[cfg(all(feature = "pjrt", feature = "xla-vendored"))]
 mod engine {
     use super::*;
 
@@ -121,14 +123,14 @@ mod engine {
     }
 }
 
-#[cfg(not(feature = "pjrt"))]
+#[cfg(not(all(feature = "pjrt", feature = "xla-vendored")))]
 mod engine {
     use super::*;
 
     const NO_PJRT: &str = "PJRT support not compiled in: enable the \
-        `pjrt` cargo feature (requires the `xla` crate; DESIGN.md §4). \
-        The PIM co-simulation backend (`serve --backend pimsim`) \
-        serves without PJRT.";
+        `pjrt` and `xla-vendored` cargo features (the latter requires \
+        the `xla` crate; DESIGN.md §4). The PIM co-simulation backend \
+        (`serve --backend pimsim`) serves without PJRT.";
 
     /// Stub executable compiled when the `pjrt` feature is off; keeps
     /// the geometry API so the coordinator and examples build offline.
@@ -313,7 +315,7 @@ mod tests {
         assert_eq!(got, vec![1, 0]);
     }
 
-    #[cfg(not(feature = "pjrt"))]
+    #[cfg(not(all(feature = "pjrt", feature = "xla-vendored")))]
     #[test]
     fn stub_engine_fails_loudly() {
         let err = Engine::cpu().err().unwrap().to_string();

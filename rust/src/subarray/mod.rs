@@ -47,6 +47,20 @@ impl OpLedger {
             + self.xor_ops as f64 * c.write_latency_ns
     }
 
+    /// Ledger of one parallel-AND tile: `rows` two-row AND senses,
+    /// each with its write-back, over `cols`-bit rows (§II-A). This is
+    /// the unit of work one resumable inference tile issues to the
+    /// sub-arrays, charged without simulating every row.
+    pub fn for_and_tile(rows: u64, cols: u64) -> OpLedger {
+        OpLedger {
+            logic_ops: rows,
+            logic_bits: rows * cols,
+            row_writes: rows,
+            write_bits: rows * cols,
+            ..OpLedger::default()
+        }
+    }
+
     pub fn merge(&mut self, other: &OpLedger) {
         self.row_reads += other.row_reads;
         self.row_writes += other.row_writes;
@@ -294,6 +308,24 @@ mod tests {
         assert_eq!(sa.ledger.xor_ops, 1);
         // xor pays write-back bits
         assert_eq!(sa.ledger.write_bits, 3 * 96);
+    }
+
+    #[test]
+    fn and_tile_ledger_matches_simulated_ops() {
+        // for_and_tile must charge exactly what issuing the row ops on
+        // a live sub-array charges.
+        let mut sa = small();
+        sa.write_row(0, &[1, 0]);
+        sa.write_row(1, &[3, 0]);
+        let base = sa.ledger;
+        for _ in 0..4 {
+            sa.and_to(0, 1, 2);
+        }
+        let mut simulated = sa.ledger;
+        // Subtract the operand writes done before the AND phase.
+        simulated.row_writes -= base.row_writes;
+        simulated.write_bits -= base.write_bits;
+        assert_eq!(simulated, OpLedger::for_and_tile(4, 96));
     }
 
     #[test]

@@ -92,10 +92,11 @@ fn dataset_artifact_loads() {
     assert!(ds.labels.iter().all(|&l| l < 10));
 }
 
-// Talks to the `xla` crate directly, so it only exists in `pjrt`
-// builds (DESIGN.md §4); the other tests go through the stub-capable
-// Engine API and skip themselves when artifacts are absent.
-#[cfg(feature = "pjrt")]
+// Talks to the `xla` crate directly, so it only exists in real-XLA
+// builds (`pjrt` + `xla-vendored`; DESIGN.md §4); the other tests go
+// through the stub-capable Engine API and skip themselves when
+// artifacts are absent.
+#[cfg(all(feature = "pjrt", feature = "xla-vendored"))]
 #[test]
 fn bitconv_unit_hlo_executes() {
     let Some(dir) = artifacts() else { return };

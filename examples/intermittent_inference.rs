@@ -1,5 +1,5 @@
 //! Power-intermittency study on the REAL inference pipeline (paper
-//! §II-B.3 / Fig. 7b, integrated): run the bit-accurate PIM co-sim
+//! §II-B.3 / Fig. 7b, integrated): run the bit-accurate PIM engine's
 //! forward pass as resumable tiles under harvested-power traces,
 //! checkpointing partial sums into the NV state store, and compare
 //! forward progress against a CMOS-only (volatile) implementation —
@@ -11,36 +11,35 @@
 //! ```
 
 use pims::cnn;
-use pims::coordinator::{Backend, PimSimBackend};
+use pims::engine::ModelPlan;
 use pims::intermittency::{
     inference_forward_progress, run_intermittent_inference,
     InferencePlan, PowerTrace,
 };
 
 fn main() {
-    let backend =
-        PimSimBackend::new(cnn::micro_net(), 1, 4, 1, 0x1F7).unwrap();
-    let image: Vec<f32> = (0..backend.input_elems())
+    let mplan =
+        ModelPlan::compile(cnn::micro_net(), 1, 4, 0x1F7).unwrap();
+    let image: Vec<f32> = (0..mplan.input_elems())
         .map(|i| ((i * 11 + 2) % 31) as f32 / 30.0)
         .collect();
     let plan = InferencePlan {
         tile_patches: 4,
         checkpoint_period: 2,
-        cycles_per_tile: 10,
-        volatile_only: false,
+        ..InferencePlan::default()
     };
     let vol_plan = InferencePlan { volatile_only: true, ..plan.clone() };
 
     // Failure-free oracle run (also the bit-identity reference).
     let clean = run_intermittent_inference(
-        &backend,
+        &mplan,
         &image,
         &PowerTrace::periodic(1_000_000, 0, 1),
         &plan,
     );
     println!(
         "model={} | {} tiles ({} patch rows each), ckpt every {} tiles",
-        backend.model_name(),
+        mplan.model_name(),
         clean.tiles_total,
         plan.tile_patches,
         plan.checkpoint_period
@@ -55,9 +54,9 @@ fn main() {
     let budget = clean.tiles_total * plan.cycles_per_tile * 40;
     for mean_on in [40.0, 80.0, 160.0, 640.0] {
         let trace = PowerTrace::poisson(mean_on, 20, budget, 42);
-        let nv = run_intermittent_inference(&backend, &image, &trace, &plan);
+        let nv = run_intermittent_inference(&mplan, &image, &trace, &plan);
         let vol =
-            run_intermittent_inference(&backend, &image, &trace, &vol_plan);
+            run_intermittent_inference(&mplan, &image, &trace, &vol_plan);
         println!(
             "| {mean_on:.0} | {} | {:.3} | {:.3} | {} | {} | {} | {:.6} |",
             nv.failures,
@@ -76,7 +75,7 @@ fn main() {
     let trace = PowerTrace::periodic(30, 5, 400);
     for period in [1u64, 2, 4, 8, 1_000] {
         let p = InferencePlan { checkpoint_period: period, ..plan.clone() };
-        let r = run_intermittent_inference(&backend, &image, &trace, &p);
+        let r = run_intermittent_inference(&mplan, &image, &trace, &p);
         println!(
             "| {period} | {} | {} | {:.6} | {:.3} |",
             r.tiles_reexecuted,
@@ -86,9 +85,24 @@ fn main() {
         );
     }
 
+    println!("\n== sweep: engine lanes (sub-array parallelism; same trace) ==");
+    println!("| lanes | on-cycles to finish | failures | bit-identical |");
+    println!("|---|---|---|---|");
+    let trace = PowerTrace::periodic(50, 10, 400);
+    for lanes in [1usize, 2, 4, 8] {
+        let p = InferencePlan { lanes, ..plan.clone() };
+        let r = run_intermittent_inference(&mplan, &image, &trace, &p);
+        println!(
+            "| {lanes} | {} | {} | {} |",
+            r.cycles_spent,
+            r.failures,
+            r.finished && r.logits == clean.logits,
+        );
+    }
+
     println!("\n== Fig. 7b-style event trace (periodic failures) ==");
     let trace = PowerTrace::periodic(50, 10, 40);
-    let r = run_intermittent_inference(&backend, &image, &trace, &plan);
+    let r = run_intermittent_inference(&mplan, &image, &trace, &plan);
     for e in r.events.iter().take(14) {
         println!("  {e:?}");
     }

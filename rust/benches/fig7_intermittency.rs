@@ -7,7 +7,7 @@
 
 use pims::benchlib::{black_box, Bench};
 use pims::cnn;
-use pims::coordinator::{Backend, PimSimBackend};
+use pims::engine::ModelPlan;
 use pims::intermittency::{
     forward_progress, inference_forward_progress, run_intermittent,
     run_intermittent_inference, Event, FrameWorkload, InferencePlan,
@@ -110,28 +110,26 @@ fn main() {
 
     // --- The INTEGRATED path: real bit-accurate inference as
     // resumable tiles under power failures (ISSUE 2 tentpole).
-    let backend =
-        PimSimBackend::new(cnn::micro_net(), 1, 4, 1, 0xF16).unwrap();
-    let image: Vec<f32> = (0..backend.input_elems())
+    let mplan = ModelPlan::compile(cnn::micro_net(), 1, 4, 0xF16).unwrap();
+    let image: Vec<f32> = (0..mplan.input_elems())
         .map(|i| ((i * 3 + 1) % 13) as f32 / 12.0)
         .collect();
     let plan = InferencePlan {
         tile_patches: 4,
         checkpoint_period: 2,
-        cycles_per_tile: 10,
-        volatile_only: false,
+        ..InferencePlan::default()
     };
     let clean = run_intermittent_inference(
-        &backend,
+        &mplan,
         &image,
         &PowerTrace::periodic(1_000_000, 0, 1),
         &plan,
     );
     let rough_trace = PowerTrace::periodic(30, 5, 400);
     let nv =
-        run_intermittent_inference(&backend, &image, &rough_trace, &plan);
+        run_intermittent_inference(&mplan, &image, &rough_trace, &plan);
     let vol = run_intermittent_inference(
-        &backend,
+        &mplan,
         &image,
         &rough_trace,
         &InferencePlan { volatile_only: true, ..plan.clone() },
@@ -159,11 +157,66 @@ fn main() {
     );
     b.iter("intermittent_inference_micro", || {
         black_box(run_intermittent_inference(
-            &backend,
+            &mplan,
             &image,
             &rough_trace,
             &plan,
         ));
     });
+
+    // --- SVHN-scale intermittent run (ROADMAP follow-up from PR 2).
+    // Heavy: the full paper model per iteration — gated so CI's
+    // bench-smoke stays fast. Run with PIMS_BENCH_HEAVY=1.
+    if std::env::var("PIMS_BENCH_HEAVY").ok().as_deref() == Some("1") {
+        let svhn = ModelPlan::compile(cnn::svhn_net(), 1, 4, 0x5F1).unwrap();
+        let image: Vec<f32> = (0..svhn.input_elems())
+            .map(|i| ((i * 13 + 5) % 41) as f32 / 40.0)
+            .collect();
+        let plan = InferencePlan {
+            tile_patches: 256,
+            checkpoint_period: 4,
+            lanes: 4,
+            ..InferencePlan::default()
+        };
+        let tiles = svhn.total_tiles(plan.tile_patches);
+        let clean = run_intermittent_inference(
+            &svhn,
+            &image,
+            &PowerTrace::periodic(u64::MAX / 4, 0, 1),
+            &plan,
+        );
+        // 4 waves of power per interval: several mid-layer failures.
+        let trace =
+            PowerTrace::periodic(4 * plan.cycles_per_tile, 20, 4000);
+        let rough =
+            run_intermittent_inference(&svhn, &image, &trace, &plan);
+        b.note(
+            "svhn intermittent bit-identical",
+            format!(
+                "{} ({} tiles, {} failures, {} re-executed)",
+                rough.finished && rough.logits == clean.logits,
+                tiles,
+                rough.failures,
+                rough.tiles_reexecuted
+            ),
+        );
+        b.note(
+            "svhn ckpt energy",
+            format!(
+                "{:.3} µJ over {} checkpoints",
+                rough.checkpoint_energy_uj, rough.checkpoints
+            ),
+        );
+        b.iter("intermittent_inference_svhn", || {
+            black_box(run_intermittent_inference(
+                &svhn, &image, &trace, &plan,
+            ));
+        });
+    } else {
+        b.note(
+            "svhn intermittent case",
+            "skipped (set PIMS_BENCH_HEAVY=1)",
+        );
+    }
     b.report();
 }

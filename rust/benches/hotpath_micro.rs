@@ -11,8 +11,10 @@ use std::time::Duration;
 
 use pims::benchlib::{black_box, Bench};
 use pims::bitops::{self, BitPlanes};
+use pims::cnn;
 use pims::compressor;
 use pims::coordinator::{BatchPolicy, Coordinator, MockBackend};
+use pims::engine::{ModelPlan, TileScheduler};
 use pims::prng::Pcg32;
 use pims::subarray::{SubArray, SubArrayGeom};
 
@@ -41,6 +43,35 @@ fn main() {
     b.iter("bitwise_matmul_64x144x16", || {
         black_box(bitops::bitwise_matmul(&ia2, p, k, 4, &iw2, f, 1));
     });
+
+    // --- engine: compiled-plan batched forward (micro_net, batch 8) —
+    // the serving hot path over the extracted engine subsystem. A
+    // batch is mapped across virtual sub-array lanes; frames/sec at
+    // lanes=1 vs lanes=4 is the acceptance figure for the engine
+    // extraction, recorded as notes in the BENCH JSON.
+    let eplan =
+        ModelPlan::compile(cnn::micro_net(), 1, 4, 0xE17).unwrap();
+    let ebatch = 8;
+    let eflat: Vec<f32> = (0..ebatch * eplan.input_elems())
+        .map(|i| ((i * 7 + 1) % 19) as f32 / 18.0)
+        .collect();
+    let mut engine_fps = Vec::new();
+    for lanes in [1usize, 4] {
+        let sched = TileScheduler::new(lanes);
+        let name = format!("engine_forward_batch_b8_lanes{lanes}");
+        let m = b.iter(&name, || {
+            black_box(
+                eplan.forward_batch(&eflat, ebatch, &sched).unwrap(),
+            );
+        });
+        engine_fps.push(ebatch as f64 / (m.mean_ns * 1e-9));
+    }
+    b.note("engine_fps_lanes1", format!("{:.0}", engine_fps[0]));
+    b.note("engine_fps_lanes4", format!("{:.0}", engine_fps[1]));
+    b.note(
+        "engine_lanes4_speedup",
+        format!("{:.2}x", engine_fps[1] / engine_fps[0]),
+    );
 
     // --- compressor tree popcount of one 512-bit row
     let bits: Vec<bool> = (0..512).map(|_| rng.chance(0.5)).collect();

@@ -60,6 +60,14 @@ impl ChipOrg {
         self.subarrays_total()
     }
 
+    /// Virtual engine-lane count for a requested software parallelism:
+    /// a lane models one concurrently computing sub-array, so the chip
+    /// never offers more than [`Self::parallel_subarrays`] of them (and
+    /// never fewer than one).
+    pub fn engine_lanes(&self, requested: usize) -> usize {
+        requested.clamp(1, self.parallel_subarrays())
+    }
+
     /// Decompose a flat sub-array index into (group, bank, mat, sub).
     pub fn locate(&self, idx: usize) -> SubArrayAddr {
         assert!(idx < self.subarrays_total());
@@ -169,6 +177,15 @@ mod tests {
             assert!(addr.bank < org.banks_per_group);
             assert!(addr.mat < org.mats_per_bank);
         });
+    }
+
+    #[test]
+    fn engine_lanes_clamped_to_parallel_subarrays() {
+        let org = ChipOrg::default();
+        assert_eq!(org.engine_lanes(0), 1);
+        assert_eq!(org.engine_lanes(1), 1);
+        assert_eq!(org.engine_lanes(8), 8);
+        assert_eq!(org.engine_lanes(1 << 30), org.parallel_subarrays());
     }
 
     #[test]

@@ -93,8 +93,13 @@ impl Bench {
     }
 
     pub fn with_budget(mut self, warmup_ms: u64, target_ms: u64) -> Self {
-        self.warmup = Duration::from_millis(warmup_ms);
-        self.target_time = Duration::from_millis(target_ms);
+        // The env knob (CI bench-smoke) outranks per-bench defaults —
+        // otherwise a bench that picks its own budget silently ignores
+        // the smoke run's shrink request.
+        if std::env::var("PIMS_BENCH_TARGET_MS").is_err() {
+            self.warmup = Duration::from_millis(warmup_ms);
+            self.target_time = Duration::from_millis(target_ms);
+        }
         self
     }
 

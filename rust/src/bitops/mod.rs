@@ -65,6 +65,50 @@ impl BitPlanes {
         BitPlanes { bits, rows, cols, words_per_row: wpr, planes }
     }
 
+    /// Decompose the TRANSPOSE of a row-major `rows x cols` code matrix
+    /// into packed bit-planes — the result is a `cols x rows` plane set
+    /// with `planes[p]` holding plane p of column c of the source in its
+    /// row c — WITHOUT materializing the transposed code buffer. This is
+    /// the Fig. 3 data-organization step (weight columns become C_n(W)
+    /// sub-array rows) as a single scatter pass over the source layout.
+    pub fn from_codes_transposed(
+        codes: &[u32],
+        rows: usize,
+        cols: usize,
+        bits: usize,
+    ) -> Self {
+        assert_eq!(codes.len(), rows * cols, "codes length mismatch");
+        assert!((1..=32).contains(&bits));
+        debug_assert!(
+            codes.iter().all(|&c| (c as u64) < (1u64 << bits)),
+            "code out of range for {bits}-bit planes"
+        );
+        // Output geometry: `cols` logical rows of `rows` elements each.
+        let wpr = rows.div_ceil(64);
+        let mut planes = vec![vec![0u64; cols * wpr]; bits];
+        let code_mask = (1u64 << bits) - 1;
+        for r in 0..rows {
+            // Source element (r, c) lands at output (row c, column r):
+            // the word index and bit mask depend only on r, so hoist
+            // them out of the inner column walk.
+            let word_off = r / 64;
+            let mask = 1u64 << (r % 64);
+            for c in 0..cols {
+                let mut rem = codes[r * cols + c] as u64 & code_mask;
+                if rem == 0 {
+                    continue;
+                }
+                let word = c * wpr + word_off;
+                while rem != 0 {
+                    let p = rem.trailing_zeros() as usize;
+                    planes[p][word] |= mask;
+                    rem &= rem - 1;
+                }
+            }
+        }
+        BitPlanes { bits, rows: cols, cols: rows, words_per_row: wpr, planes }
+    }
+
     /// Reconstruct the code at (row, col).
     pub fn code_at(&self, row: usize, col: usize) -> u32 {
         let mut v = 0u32;
@@ -126,7 +170,10 @@ pub fn int_dot(a: &[u32], b: &[u32]) -> u64 {
 /// the AND-Accumulation identity. Weight planes are decomposed from the
 /// TRANSPOSED weight matrix so each output needs only row-row ANDs —
 /// mirroring the paper's data organization step (Fig. 3) where C_n(W)
-/// rows are written beneath the C_m(I) rows of the same sub-array.
+/// rows are written beneath the C_m(I) rows of the same sub-array. The
+/// transpose happens inside the plane decomposition
+/// ([`BitPlanes::from_codes_transposed`]); no transposed code buffer is
+/// ever materialized.
 pub fn bitwise_matmul(
     ia: &[u32],
     p: usize,
@@ -139,14 +186,7 @@ pub fn bitwise_matmul(
     assert_eq!(ia.len(), p * k);
     assert_eq!(iw.len(), k * f);
     let ip = BitPlanes::from_codes(ia, p, k, m_bits);
-    // transpose weights to [f x k]
-    let mut wt = vec![0u32; f * k];
-    for r in 0..k {
-        for c in 0..f {
-            wt[c * k + r] = iw[r * f + c];
-        }
-    }
-    let wp = BitPlanes::from_codes(&wt, f, k, n_bits);
+    let wp = BitPlanes::from_codes_transposed(iw, k, f, n_bits);
     let mut out = vec![0u64; p * f];
     for i in 0..p {
         for j in 0..f {
@@ -260,6 +300,49 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn from_codes_transposed_matches_materialized_transpose_property() {
+        // The fused transpose-decompose must equal decomposing an
+        // explicitly materialized transpose, for every geometry
+        // (including word-straddling row lengths) and bit width.
+        let mut r = Runner::new(0xB1B);
+        r.run("from_codes_transposed == from_codes(transpose)", |g| {
+            let rows = g.usize(1, 70);
+            let cols = g.usize(1, 9);
+            let bits = g.usize(1, 8);
+            let codes = g.codes(rows * cols, bits as u32);
+            let fused =
+                BitPlanes::from_codes_transposed(&codes, rows, cols, bits);
+            let mut t = vec![0u32; cols * rows];
+            for r_ in 0..rows {
+                for c in 0..cols {
+                    t[c * rows + r_] = codes[r_ * cols + c];
+                }
+            }
+            let explicit = BitPlanes::from_codes(&t, cols, rows, bits);
+            assert_eq!(fused.rows, cols);
+            assert_eq!(fused.cols, rows);
+            assert_eq!(fused.to_codes(), explicit.to_codes());
+            for p in 0..bits {
+                for row in 0..cols {
+                    assert_eq!(
+                        fused.plane_row(p, row),
+                        explicit.plane_row(p, row),
+                        "plane {p} row {row} packed words diverged"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn from_codes_transposed_roundtrip_small() {
+        // 2x3 source; transpose is 3x2.
+        let codes = vec![1, 2, 3, 4, 5, 6];
+        let bp = BitPlanes::from_codes_transposed(&codes, 2, 3, 3);
+        assert_eq!(bp.to_codes(), vec![1, 4, 2, 5, 3, 6]);
     }
 
     #[test]

@@ -31,9 +31,13 @@ mod pool;
 
 pub use chaos::ChaosPolicy;
 pub use metrics_agg::{ServeMetrics, WorkerSnapshot};
-pub use pimsim::{
-    PimSimBackend, ResumableForward, TileId, DEFAULT_TILE_PATCHES,
-    SNAPSHOT_HEADER_WORDS,
+pub use pimsim::PimSimBackend;
+// The resumable engine moved to `crate::engine` (DESIGN.md §7). The
+// names stay importable from here, but construction/resume now go
+// through `engine::ModelPlan` + `TileScheduler` rather than
+// `&PimSimBackend`.
+pub use crate::engine::{
+    ResumableForward, TileId, DEFAULT_TILE_PATCHES, SNAPSHOT_HEADER_WORDS,
 };
 
 use std::sync::atomic::{AtomicBool, Ordering};

@@ -1,92 +1,36 @@
-//! PIM co-simulation serving backend: the bit-accurate software model
-//! of the SOT-MRAM accelerator as a [`Backend`], so the co-simulation
-//! itself can serve coordinator traffic and report per-request energy
-//! from the accelerator cost model — not just offline estimates.
+//! PIM co-simulation serving backend: backend plumbing over the
+//! inference engine ([`crate::engine`]), so the bit-accurate software
+//! model of the SOT-MRAM accelerator can serve coordinator traffic and
+//! report per-request energy from the accelerator cost model.
 //!
-//! Every quantized GEMM runs through the paper's AND-Accumulation
-//! identity (Eq. 1) on packed bit-planes ([`crate::bitops`]); the
-//! independent oracle path computes the same layers with a dense
-//! integer dot product. Both paths share every f32 post-processing op
-//! in the same order, and `and_accumulate == int_dot` exactly (the
-//! bitops property tests), so [`PimSimBackend::reference_logits`] is
+//! All GEMM / im2col / bit-plane work lives in `engine::` — this
+//! module only adapts a compiled [`ModelPlan`] to the [`Backend`]
+//! trait: batch geometry checks, the accelerator-model energy ledger,
+//! served-frame counters with their NV shadow (chaos-mode hooks), and
+//! the lane knob ([`PimSimBackend::with_lanes`]) that maps serving
+//! parallelism onto virtual sub-array lanes.
+//!
+//! The engine's independent oracle path
+//! ([`PimSimBackend::reference_logits`], dense integer dots) is
 //! bit-identical to what [`Backend::infer_batch`] serves — the e2e
-//! acceptance check for the serving integration.
-//!
-//! The bitwise path executes as **resumable tiles**
-//! ([`ResumableForward`]): each GEMM layer is split into chunks of
-//! patch rows whose raw AND-accumulations append to a partial-sum
-//! buffer, and the in-flight state serializes to NV-checkpointable
-//! words ([`ResumableForward::snapshot`]) and restores bit-identically
-//! ([`ResumableForward::resume`]). This is the §II-B.3
-//! power-intermittency story at inference granularity: operands live
-//! in the non-volatile arrays, only the partial sums and control state
-//! need checkpointing (see `intermittency::inference` and DESIGN.md
-//! §6). Serving just drives the same engine to completion, so the
-//! served path IS the resumable path.
-//!
-//! Weights are procedurally generated (seeded) integer codes: the
-//! backend models the accelerator's datapath and energy, not a trained
-//! model. Per-request energy comes from the [`crate::accel`]
-//! cost-ledger estimate of one frame at the configured W:I bit-widths.
+//! acceptance check for the serving integration. Weights are
+//! procedurally generated (seeded) integer codes: the backend models
+//! the accelerator's datapath and energy, not a trained model.
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use crate::accel::{Accelerator, Proposed};
-use crate::bitops::{self, BitPlanes};
-use crate::cnn::{Layer, Model};
-use crate::prng::Pcg32;
-use crate::quant;
-use crate::subarray::{OpLedger, SubArrayGeom};
+use crate::arch::ChipOrg;
+use crate::cnn::Model;
+use crate::engine::{ModelPlan, ResumableForward, TileScheduler};
 
 use super::Backend;
 
-/// Which integer GEMM engine computes Eq. (1).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum GemmEngine {
-    /// Packed bit-plane AND-accumulate — the PIM datapath.
-    Bitwise,
-    /// Dense integer dot product — the independent oracle.
-    IntDot,
-}
-
-/// Per-layer quantized weights, stored TRANSPOSED (`[F x K]`
-/// row-major) so both engines read one filter's reduction row
-/// contiguously — the Fig. 3 data organization, where each sub-array
-/// holds C_n(W) rows beneath the C_m(I) rows they AND against. The
-/// weight bit-planes are decomposed once at construction (they are
-/// NV-resident and never change).
-struct LayerWeights {
-    codes_t: Vec<u32>,
-    wp: BitPlanes,
-    k: usize,
-    f: usize,
-    m_bits: u32,
-    n_bits: u32,
-}
-
-/// Activation/weight bit-widths for one layer: quantized layers use
-/// the configured W:I widths; first/last (unquantized) layers run the
-/// 8:8-bit fixed-point convention (DESIGN.md §2).
-fn layer_io_bits(layer: &Layer, w_bits: u32, a_bits: u32) -> (u32, u32) {
-    if layer.is_quant() {
-        (a_bits.min(8), w_bits.min(8))
-    } else {
-        (8, 8)
-    }
-}
-
-/// Default patch rows per resumable tile: the 64-patch resident tile
-/// of the area model's working-set convention.
-pub const DEFAULT_TILE_PATCHES: usize = 64;
-
-/// Serving backend over the bit-accurate PIM path.
+/// Serving backend over the bit-accurate PIM engine.
 pub struct PimSimBackend {
-    model: Model,
+    plan: ModelPlan,
+    sched: TileScheduler,
     batch: usize,
-    input_elems: usize,
-    num_classes: usize,
-    /// Parallel to `model.layers`; `None` for pool layers.
-    weights: Vec<Option<LayerWeights>>,
     energy_uj_per_frame: f64,
     frames_served: u64,
     /// NV shadow of `frames_served`, committed per delivered batch;
@@ -98,6 +42,7 @@ impl PimSimBackend {
     /// Build a backend for `model` at W:I = `w_bits`:`a_bits`, serving
     /// `batch`-row requests. `seed` fixes the generated weight codes,
     /// so equal seeds give bit-identical replicas across pool workers.
+    /// Executes serially; see [`Self::with_lanes`].
     pub fn new(
         model: Model,
         w_bits: u32,
@@ -106,50 +51,41 @@ impl PimSimBackend {
         seed: u64,
     ) -> Result<PimSimBackend> {
         anyhow::ensure!(batch >= 1, "batch must be >= 1");
-        anyhow::ensure!(
-            (1..=8).contains(&w_bits) && (1..=8).contains(&a_bits),
-            "W:I bit-widths must be in 1..=8 (got {w_bits}:{a_bits})"
-        );
-        let input_elems = model.input_hw * model.input_hw * model.input_c;
-        let num_classes = model
-            .layers
-            .last()
-            .context("model has no layers")?
-            .out_channels();
-        let mut weights = Vec::with_capacity(model.layers.len());
-        for (li, layer) in model.layers.iter().enumerate() {
-            weights.push(layer.gemm_shape().map(|(_, k, f)| {
-                let (m_bits, n_bits) = layer_io_bits(layer, w_bits, a_bits);
-                let mut rng =
-                    Pcg32::new(seed ^ 0xA17C_0DE5, li as u64 + 1);
-                let codes_t: Vec<u32> =
-                    (0..f * k).map(|_| rng.below(1u32 << n_bits)).collect();
-                let wp = BitPlanes::from_codes(
-                    &codes_t,
-                    f,
-                    k,
-                    n_bits as usize,
-                );
-                LayerWeights { codes_t, wp, k, f, m_bits, n_bits }
-            }));
-        }
         let energy_uj_per_frame = Proposed::default()
             .estimate(&model, w_bits, a_bits, batch)
             .uj_per_frame();
+        let plan = ModelPlan::compile(model, w_bits, a_bits, seed)?;
         Ok(PimSimBackend {
-            model,
+            plan,
+            sched: TileScheduler::default(),
             batch,
-            input_elems,
-            num_classes,
-            weights,
             energy_uj_per_frame,
             frames_served: 0,
             nv_frames_served: 0,
         })
     }
 
+    /// Execute over `lanes` virtual sub-array lanes (clamped to the
+    /// chip's concurrently computing sub-arrays). Logits are
+    /// bit-identical for any lane count.
+    pub fn with_lanes(mut self, lanes: usize) -> Self {
+        self.sched = TileScheduler::for_chip(&ChipOrg::default(), lanes);
+        self
+    }
+
+    /// Engine lanes this backend executes with.
+    pub fn lanes(&self) -> usize {
+        self.sched.lanes()
+    }
+
+    /// The compiled execution plan (shared with the intermittency
+    /// driver and benches).
+    pub fn plan(&self) -> &ModelPlan {
+        &self.plan
+    }
+
     pub fn model_name(&self) -> &'static str {
-        self.model.name
+        self.plan.model_name()
     }
 
     /// Accelerator-model energy for one frame [µJ].
@@ -165,129 +101,27 @@ impl PimSimBackend {
     /// The oracle path: identical layers and f32 post-processing, but
     /// dense integer dots instead of bit-plane AND-accumulation.
     pub fn reference_logits(&self, image: &[f32]) -> Vec<f32> {
-        self.forward_dense(image)
+        self.plan.reference_logits(image)
     }
 
-    /// Begin a resumable bitwise forward pass over one image, splitting
-    /// every GEMM layer into tiles of at most `tile_patches` patch
-    /// rows. Driving [`ResumableForward::step_tile`] to completion is
-    /// exactly the serving path.
+    /// Begin a resumable bitwise forward pass over one image on this
+    /// backend's lane configuration (see
+    /// [`crate::engine::ModelPlan::begin_forward`]).
     pub fn begin_forward(
         &self,
         image: &[f32],
         tile_patches: usize,
     ) -> ResumableForward<'_> {
-        assert_eq!(image.len(), self.input_elems, "image geometry");
-        assert!(tile_patches >= 1, "tile_patches must be >= 1");
-        let total_tiles = self
-            .model
-            .layers
-            .iter()
-            .map(|l| tiles_in_layer(l, tile_patches))
-            .sum();
-        let mut rf = ResumableForward {
-            b: self,
-            tile_patches,
-            layer: 0,
-            tile: 0,
-            x: image.to_vec(),
-            h: self.model.input_hw,
-            w: self.model.input_hw,
-            c: self.model.input_c,
-            ia: Vec::new(),
-            p: 0,
-            oh: 0,
-            ow: 0,
-            raw: Vec::new(),
-            done: false,
-            total_tiles,
-            tiles_done: 0,
-            ledger: OpLedger::default(),
-        };
-        rf.enter_layer();
-        rf
-    }
-
-    fn forward(&self, image: &[f32], engine: GemmEngine) -> Vec<f32> {
-        match engine {
-            GemmEngine::Bitwise => {
-                let mut rf =
-                    self.begin_forward(image, DEFAULT_TILE_PATCHES);
-                while rf.step_tile().is_some() {}
-                rf.into_logits()
-            }
-            GemmEngine::IntDot => self.forward_dense(image),
-        }
-    }
-
-    /// Dense whole-layer execution (the IntDot oracle): same layer
-    /// walk and identical f32 post-processing as the tiled path.
-    fn forward_dense(&self, image: &[f32]) -> Vec<f32> {
-        debug_assert_eq!(image.len(), self.input_elems);
-        let mut x = image.to_vec();
-        let (mut h, mut w, mut c) = (
-            self.model.input_hw,
-            self.model.input_hw,
-            self.model.input_c,
-        );
-        let last = self.model.layers.len() - 1;
-        for (li, layer) in self.model.layers.iter().enumerate() {
-            match layer {
-                Layer::Pool { window, .. } => {
-                    x = avg_pool(&x, h, w, c, *window);
-                    h /= *window;
-                    w /= *window;
-                }
-                Layer::Conv { kernel, stride, pad, cout, .. } => {
-                    let lw =
-                        self.weights[li].as_ref().expect("conv weights");
-                    let ia = quant::act_to_codes(&x, lw.m_bits);
-                    let (patches, oh, ow) = bitops::im2col(
-                        &ia, h, w, c, *kernel, *kernel, *stride, *pad,
-                    );
-                    let p = oh * ow;
-                    let raw =
-                        gemm_raw(&patches, 0, p, lw, GemmEngine::IntDot);
-                    x = postprocess(&raw, &patches, p, lw, li == last);
-                    h = oh;
-                    w = ow;
-                    c = *cout;
-                }
-                Layer::Fc { cout, .. } => {
-                    let lw =
-                        self.weights[li].as_ref().expect("fc weights");
-                    let ia = quant::act_to_codes(&x, lw.m_bits);
-                    let raw =
-                        gemm_raw(&ia, 0, 1, lw, GemmEngine::IntDot);
-                    x = postprocess(&raw, &ia, 1, lw, li == last);
-                    h = 1;
-                    w = 1;
-                    c = *cout;
-                }
-            }
-        }
-        debug_assert_eq!(x.len(), self.num_classes);
-        x
+        self.plan.begin_forward(image, tile_patches, self.sched)
     }
 }
 
 impl Backend for PimSimBackend {
     fn infer_batch(&mut self, flat: &[f32]) -> Result<Vec<f32>> {
-        anyhow::ensure!(
-            flat.len() == self.batch * self.input_elems,
-            "input length {} != batch {} * elems {}",
-            flat.len(),
-            self.batch,
-            self.input_elems
-        );
-        let mut out = Vec::with_capacity(self.batch * self.num_classes);
-        for b in 0..self.batch {
-            let row =
-                &flat[b * self.input_elems..(b + 1) * self.input_elems];
-            out.extend_from_slice(&self.forward(row, GemmEngine::Bitwise));
-        }
+        let out =
+            self.plan.forward_batch(flat, self.batch, &self.sched)?;
         self.frames_served += self.batch as u64;
-        Ok(out)
+        Ok(out.logits)
     }
 
     fn batch_size(&self) -> usize {
@@ -295,11 +129,11 @@ impl Backend for PimSimBackend {
     }
 
     fn input_elems(&self) -> usize {
-        self.input_elems
+        self.plan.input_elems()
     }
 
     fn num_classes(&self) -> usize {
-        self.num_classes
+        self.plan.num_classes()
     }
 
     fn energy_uj_per_request(&self) -> f64 {
@@ -307,431 +141,14 @@ impl Backend for PimSimBackend {
     }
 
     fn power_fail_restore(&mut self) {
-        // Weights and the cost model are NV-resident and survive; the
-        // volatile served-frame counter reverts to its NV shadow.
+        // The plan (weights, cost model) is NV-resident and survives;
+        // the volatile served-frame counter reverts to its NV shadow.
         self.frames_served = self.nv_frames_served;
     }
 
     fn nv_commit(&mut self) {
         self.nv_frames_served = self.frames_served;
     }
-}
-
-// ---------------------------------------------------------------------------
-// Resumable tiled execution
-// ---------------------------------------------------------------------------
-
-/// Identifies one resumable execution tile.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub struct TileId {
-    pub layer: usize,
-    pub tile: usize,
-}
-
-/// Words of snapshot control state (magic, layer, tile, h, w, c,
-/// x_len, raw_len) — the part of a checkpoint that is always written.
-pub const SNAPSHOT_HEADER_WORDS: usize = 8;
-
-/// `"PIMSNVS1"` — snapshot format tag.
-const SNAPSHOT_MAGIC: u64 = 0x5049_4D53_4E56_5331;
-
-fn tiles_in_layer(layer: &Layer, tile_patches: usize) -> u64 {
-    match layer.gemm_shape() {
-        Some((p, _, _)) => p.div_ceil(tile_patches) as u64,
-        None => 1,
-    }
-}
-
-/// In-flight tile-granular forward pass. The working state (`x`,
-/// partial sums, layer/tile cursor) is volatile; [`Self::snapshot`]
-/// serializes it for the NV store and [`Self::resume`] reconstructs it
-/// bit-identically. Per-layer operand state (`ia`) is recomputed from
-/// `x` on entry — operands are NV-resident and never checkpointed.
-pub struct ResumableForward<'a> {
-    b: &'a PimSimBackend,
-    tile_patches: usize,
-    layer: usize,
-    /// Next tile within the current layer.
-    tile: usize,
-    /// Input activations of the current layer (logits once done).
-    x: Vec<f32>,
-    h: usize,
-    w: usize,
-    c: usize,
-    /// Quantized operand codes of the current GEMM layer (im2col
-    /// patches for conv, the activation vector for FC).
-    ia: Vec<u32>,
-    /// Patch rows of the current GEMM layer (0 for pool layers).
-    p: usize,
-    oh: usize,
-    ow: usize,
-    /// Raw Eq.-1 partial sums of the tiles completed in this layer.
-    raw: Vec<u64>,
-    done: bool,
-    total_tiles: u64,
-    tiles_done: u64,
-    /// Sub-array row-op accounting across executed tiles.
-    ledger: OpLedger,
-}
-
-impl<'a> ResumableForward<'a> {
-    /// Total tiles this pass executes when uninterrupted.
-    pub fn total_tiles(&self) -> u64 {
-        self.total_tiles
-    }
-
-    /// Tiles executed by THIS engine instance (a resumed instance
-    /// starts from the durable tile count of its snapshot).
-    pub fn tiles_done(&self) -> u64 {
-        self.tiles_done
-    }
-
-    pub fn is_done(&self) -> bool {
-        self.done
-    }
-
-    /// Current cursor (the next tile to execute); `layer` equals the
-    /// layer count once done.
-    pub fn position(&self) -> TileId {
-        TileId { layer: self.layer, tile: self.tile }
-    }
-
-    /// Partial-sum words currently buffered for the open layer.
-    pub fn raw_len(&self) -> usize {
-        self.raw.len()
-    }
-
-    /// Row-op ledger of the tiles executed so far.
-    pub fn ledger(&self) -> &OpLedger {
-        &self.ledger
-    }
-
-    /// Final logits, once [`Self::is_done`].
-    pub fn logits(&self) -> Option<&[f32]> {
-        if self.done {
-            Some(&self.x)
-        } else {
-            None
-        }
-    }
-
-    fn into_logits(self) -> Vec<f32> {
-        debug_assert!(self.done, "into_logits before completion");
-        self.x
-    }
-
-    /// Derive the current layer's operand state from `x` (deterministic
-    /// — bit-identical on every re-derivation after a restore).
-    fn enter_layer(&mut self) {
-        let b = self.b;
-        if self.layer >= b.model.layers.len() {
-            self.done = true;
-            return;
-        }
-        match &b.model.layers[self.layer] {
-            Layer::Pool { .. } => {
-                self.ia.clear();
-                self.p = 0;
-            }
-            Layer::Conv { kernel, stride, pad, .. } => {
-                let lw =
-                    b.weights[self.layer].as_ref().expect("conv weights");
-                let codes = quant::act_to_codes(&self.x, lw.m_bits);
-                let (patches, oh, ow) = bitops::im2col(
-                    &codes, self.h, self.w, self.c, *kernel, *kernel,
-                    *stride, *pad,
-                );
-                self.ia = patches;
-                self.oh = oh;
-                self.ow = ow;
-                self.p = oh * ow;
-            }
-            Layer::Fc { .. } => {
-                let lw =
-                    b.weights[self.layer].as_ref().expect("fc weights");
-                self.ia = quant::act_to_codes(&self.x, lw.m_bits);
-                self.oh = 1;
-                self.ow = 1;
-                self.p = 1;
-            }
-        }
-    }
-
-    fn advance_layer(&mut self) {
-        self.layer += 1;
-        self.tile = 0;
-        self.raw.clear();
-        self.enter_layer();
-    }
-
-    /// Execute the next tile. Returns the executed tile's id, or
-    /// `None` once the pass is complete.
-    pub fn step_tile(&mut self) -> Option<TileId> {
-        if self.done {
-            return None;
-        }
-        let b = self.b;
-        let id = TileId { layer: self.layer, tile: self.tile };
-        match &b.model.layers[self.layer] {
-            Layer::Pool { window, .. } => {
-                self.x = avg_pool(&self.x, self.h, self.w, self.c, *window);
-                self.h /= *window;
-                self.w /= *window;
-                self.advance_layer();
-            }
-            layer @ (Layer::Conv { .. } | Layer::Fc { .. }) => {
-                let lw =
-                    b.weights[self.layer].as_ref().expect("gemm weights");
-                let start = self.tile * self.tile_patches;
-                let end = (start + self.tile_patches).min(self.p);
-                debug_assert!(start < end, "tile past layer end");
-                let mut tile_raw =
-                    gemm_raw(&self.ia, start, end, lw, GemmEngine::Bitwise);
-                self.raw.append(&mut tile_raw);
-                // Charge the tile's parallel-AND row ops.
-                let cols = SubArrayGeom::default().cols as u64;
-                let and_rows = ((end - start) * lw.f) as u64
-                    * lw.m_bits as u64
-                    * lw.n_bits as u64
-                    * (lw.k as u64).div_ceil(cols);
-                self.ledger.merge(&OpLedger::for_and_tile(and_rows, cols));
-                self.tile += 1;
-                if self.tile * self.tile_patches >= self.p {
-                    // Layer complete: the shared f32 post-processing.
-                    let is_last =
-                        self.layer == b.model.layers.len() - 1;
-                    self.x = postprocess(
-                        &self.raw, &self.ia, self.p, lw, is_last,
-                    );
-                    self.h = self.oh;
-                    self.w = self.ow;
-                    self.c = layer.out_channels();
-                    self.advance_layer();
-                }
-            }
-        }
-        self.tiles_done += 1;
-        Some(id)
-    }
-
-    /// Serialize the volatile working state to NV-checkpointable words:
-    /// `[magic, layer, tile, h, w, c, x_len, raw_len, x as f32 bits...,
-    /// raw...]`.
-    pub fn snapshot(&self) -> Vec<u64> {
-        let mut words = Vec::with_capacity(
-            SNAPSHOT_HEADER_WORDS + self.x.len() + self.raw.len(),
-        );
-        words.push(SNAPSHOT_MAGIC);
-        words.push(self.layer as u64);
-        words.push(self.tile as u64);
-        words.push(self.h as u64);
-        words.push(self.w as u64);
-        words.push(self.c as u64);
-        words.push(self.x.len() as u64);
-        words.push(self.raw.len() as u64);
-        words.extend(self.x.iter().map(|&v| v.to_bits() as u64));
-        words.extend(self.raw.iter().copied());
-        words
-    }
-
-    /// Reconstruct an engine from snapshot `words` — the power-up
-    /// restore path. Operand state is re-derived from the restored
-    /// activations, so the resumed pass is bit-identical to one that
-    /// never lost power.
-    pub fn resume(
-        b: &'a PimSimBackend,
-        tile_patches: usize,
-        words: &[u64],
-    ) -> Result<ResumableForward<'a>> {
-        anyhow::ensure!(tile_patches >= 1, "tile_patches must be >= 1");
-        anyhow::ensure!(
-            words.len() >= SNAPSHOT_HEADER_WORDS
-                && words[0] == SNAPSHOT_MAGIC,
-            "corrupt NV snapshot header"
-        );
-        let layer = words[1] as usize;
-        let tile = words[2] as usize;
-        let (h, w, c) =
-            (words[3] as usize, words[4] as usize, words[5] as usize);
-        let x_len = words[6] as usize;
-        let raw_len = words[7] as usize;
-        anyhow::ensure!(
-            words.len() == SNAPSHOT_HEADER_WORDS + x_len + raw_len,
-            "corrupt NV snapshot payload: {} words, header says {}",
-            words.len(),
-            SNAPSHOT_HEADER_WORDS + x_len + raw_len
-        );
-        anyhow::ensure!(
-            layer <= b.model.layers.len(),
-            "snapshot layer {layer} out of range"
-        );
-        if layer < b.model.layers.len() {
-            anyhow::ensure!(
-                x_len == h * w * c,
-                "snapshot activation geometry mismatch"
-            );
-            if let Some((p, _, f)) = b.model.layers[layer].gemm_shape() {
-                // A live engine advances to the next layer as soon as
-                // the last tile completes, so a cursor at-or-past the
-                // layer end can only come from corruption.
-                anyhow::ensure!(
-                    tile * tile_patches < p,
-                    "snapshot tile cursor past layer end"
-                );
-                let expect = tile * tile_patches * f;
-                anyhow::ensure!(
-                    raw_len == expect,
-                    "snapshot partial sums: {raw_len} words, tile \
-                     cursor implies {expect}"
-                );
-            } else {
-                anyhow::ensure!(
-                    raw_len == 0 && tile == 0,
-                    "pool layers hold no partial sums"
-                );
-            }
-        }
-        let x: Vec<f32> = words
-            [SNAPSHOT_HEADER_WORDS..SNAPSHOT_HEADER_WORDS + x_len]
-            .iter()
-            .map(|&v| f32::from_bits(v as u32))
-            .collect();
-        let raw = words[SNAPSHOT_HEADER_WORDS + x_len..].to_vec();
-        let total_tiles = b
-            .model
-            .layers
-            .iter()
-            .map(|l| tiles_in_layer(l, tile_patches))
-            .sum();
-        let tiles_done = b.model.layers[..layer]
-            .iter()
-            .map(|l| tiles_in_layer(l, tile_patches))
-            .sum::<u64>()
-            + tile as u64;
-        let mut rf = ResumableForward {
-            b,
-            tile_patches,
-            layer,
-            tile,
-            x,
-            h,
-            w,
-            c,
-            ia: Vec::new(),
-            p: 0,
-            oh: 0,
-            ow: 0,
-            raw,
-            done: false,
-            total_tiles,
-            tiles_done,
-            ledger: OpLedger::default(),
-        };
-        rf.enter_layer();
-        Ok(rf)
-    }
-}
-
-/// Raw Eq.-1 outputs for patch rows `[row_start, row_end)` of one
-/// layer, in (patch, filter) order — tile-chunked calls concatenate to
-/// exactly the whole-layer result.
-fn gemm_raw(
-    ia: &[u32],
-    row_start: usize,
-    row_end: usize,
-    lw: &LayerWeights,
-    engine: GemmEngine,
-) -> Vec<u64> {
-    debug_assert!(row_end <= ia.len() / lw.k);
-    let rows = row_end - row_start;
-    let mut raw = Vec::with_capacity(rows * lw.f);
-    match engine {
-        GemmEngine::Bitwise => {
-            let ip = BitPlanes::from_codes(
-                &ia[row_start * lw.k..row_end * lw.k],
-                rows,
-                lw.k,
-                lw.m_bits as usize,
-            );
-            for i in 0..rows {
-                for j in 0..lw.f {
-                    raw.push(bitops::and_accumulate(&ip, i, &lw.wp, j));
-                }
-            }
-        }
-        GemmEngine::IntDot => {
-            for i in row_start..row_end {
-                let patch = &ia[i * lw.k..(i + 1) * lw.k];
-                for j in 0..lw.f {
-                    let col = &lw.codes_t[j * lw.k..(j + 1) * lw.k];
-                    raw.push(bitops::int_dot(patch, col));
-                }
-            }
-        }
-    }
-    raw
-}
-
-/// Shared dequantize + activation over a whole layer's raw outputs —
-/// byte-for-byte the post-processing both engines and the tiled path
-/// run, in the same order.
-fn postprocess(
-    raw: &[u64],
-    ia: &[u32],
-    p: usize,
-    lw: &LayerWeights,
-    is_last: bool,
-) -> Vec<f32> {
-    debug_assert_eq!(raw.len(), p * lw.f);
-    debug_assert_eq!(ia.len(), p * lw.k);
-    let mut out = vec![0f32; p * lw.f];
-    for i in 0..p {
-        let psum: u64 = ia[i * lw.k..(i + 1) * lw.k]
-            .iter()
-            .map(|&v| v as u64)
-            .sum();
-        for j in 0..lw.f {
-            let y = quant::dequantize_dot(
-                raw[i * lw.f + j],
-                psum,
-                1.0,
-                lw.m_bits,
-                lw.n_bits,
-            );
-            out[i * lw.f + j] =
-                if is_last { y } else { hidden_activation(y, lw.k) };
-        }
-    }
-    out
-}
-
-/// Hidden-layer activation: re-center the dequantized partial into
-/// [0, 1] for the next layer's quantizer (the EPU's BN+act stage).
-fn hidden_activation(y: f32, k: usize) -> f32 {
-    (0.5 + y / k as f32).clamp(0.0, 1.0)
-}
-
-/// Average pooling over an NHWC f32 map (window == stride).
-fn avg_pool(x: &[f32], h: usize, w: usize, c: usize, win: usize) -> Vec<f32> {
-    debug_assert_eq!(x.len(), h * w * c);
-    let (oh, ow) = (h / win, w / win);
-    let norm = (win * win) as f32;
-    let mut out = vec![0f32; oh * ow * c];
-    for oy in 0..oh {
-        for ox in 0..ow {
-            for ch in 0..c {
-                let mut s = 0f32;
-                for ky in 0..win {
-                    for kx in 0..win {
-                        s += x[((oy * win + ky) * w + (ox * win + kx)) * c
-                            + ch];
-                    }
-                }
-                out[(oy * ow + ox) * c + ch] = s / norm;
-            }
-        }
-    }
-    out
 }
 
 #[cfg(test)]
@@ -754,6 +171,7 @@ mod tests {
         assert_eq!(b.input_elems(), 8 * 8);
         assert_eq!(b.num_classes(), 10);
         assert_eq!(b.batch_size(), 2);
+        assert_eq!(b.lanes(), 1);
         assert!(b.energy_uj_per_request() > 0.0);
     }
 
@@ -794,6 +212,41 @@ mod tests {
             let served = b.infer_batch(&image).unwrap();
             assert_eq!(served, b.reference_logits(&image));
         });
+    }
+
+    #[test]
+    fn lane_counts_serve_bit_identically() {
+        // The serving acceptance for the engine extraction: a threaded
+        // backend answers with exactly the serial backend's bytes.
+        let mut serial = backend();
+        let mut threaded = PimSimBackend::new(
+            cnn::micro_net(),
+            1,
+            4,
+            2,
+            0xBEEF,
+        )
+        .unwrap()
+        .with_lanes(4);
+        assert_eq!(threaded.lanes(), 4);
+        let flat: Vec<f32> = img(serial.input_elems(), 3)
+            .into_iter()
+            .chain(img(serial.input_elems(), 11))
+            .collect();
+        assert_eq!(
+            serial.infer_batch(&flat).unwrap(),
+            threaded.infer_batch(&flat).unwrap()
+        );
+    }
+
+    #[test]
+    fn lanes_clamped_to_chip() {
+        let b = backend().with_lanes(usize::MAX);
+        assert_eq!(
+            b.lanes(),
+            crate::arch::ChipOrg::default().parallel_subarrays()
+        );
+        assert_eq!(backend().with_lanes(0).lanes(), 1);
     }
 
     #[test]
@@ -856,113 +309,6 @@ mod tests {
         assert_eq!(b.input_elems(), 40 * 40 * 3);
         assert_eq!(b.num_classes(), 10);
         assert!(b.energy_uj_per_frame() > 0.0);
-    }
-
-    // --- resumable tiled execution ---
-
-    #[test]
-    fn tiled_execution_matches_oracle_for_any_tile_size() {
-        let b = backend();
-        let image = img(b.input_elems(), 2);
-        let want = b.reference_logits(&image);
-        for tile_patches in [1, 3, 8, 64, 1000] {
-            let mut rf = b.begin_forward(&image, tile_patches);
-            let total = rf.total_tiles();
-            assert!(total >= 1);
-            let mut steps = 0u64;
-            while rf.step_tile().is_some() {
-                steps += 1;
-            }
-            assert_eq!(steps, total, "tile count must match the plan");
-            assert_eq!(rf.tiles_done(), total);
-            assert!(rf.is_done());
-            assert_eq!(
-                rf.logits().unwrap(),
-                &want[..],
-                "tile_patches={tile_patches} diverged"
-            );
-            assert!(rf.ledger().logic_ops > 0, "tiles must charge ops");
-        }
-    }
-
-    #[test]
-    fn micro_net_tile_plan() {
-        // conv1 P=64, pool, fc P=1: with 16-patch tiles that is
-        // 4 + 1 + 1 tiles.
-        let b = backend();
-        let rf = b.begin_forward(&img(b.input_elems(), 0), 16);
-        assert_eq!(rf.total_tiles(), 6);
-        assert_eq!(rf.position(), TileId { layer: 0, tile: 0 });
-    }
-
-    #[test]
-    fn snapshot_resume_is_bit_identical_at_every_tile() {
-        let b = backend();
-        let image = img(b.input_elems(), 7);
-        let want = {
-            let mut rf = b.begin_forward(&image, 8);
-            while rf.step_tile().is_some() {}
-            rf.into_logits()
-        };
-        // Interrupt after every possible tile prefix; the resumed
-        // engine must land on the same bits.
-        let total = b.begin_forward(&image, 8).total_tiles();
-        for cut in 0..total {
-            let mut rf = b.begin_forward(&image, 8);
-            for _ in 0..cut {
-                rf.step_tile();
-            }
-            let words = rf.snapshot();
-            drop(rf); // power failure: volatile state gone
-            let mut resumed =
-                ResumableForward::resume(&b, 8, &words).unwrap();
-            assert_eq!(resumed.tiles_done(), cut);
-            while resumed.step_tile().is_some() {}
-            assert_eq!(
-                resumed.logits().unwrap(),
-                &want[..],
-                "resume after {cut} tiles diverged"
-            );
-        }
-    }
-
-    #[test]
-    fn snapshot_of_finished_pass_restores_logits() {
-        let b = backend();
-        let image = img(b.input_elems(), 1);
-        let mut rf = b.begin_forward(&image, 16);
-        while rf.step_tile().is_some() {}
-        let words = rf.snapshot();
-        let restored = ResumableForward::resume(&b, 16, &words).unwrap();
-        assert!(restored.is_done());
-        assert_eq!(restored.logits().unwrap(), rf.logits().unwrap());
-    }
-
-    #[test]
-    fn corrupt_snapshots_rejected() {
-        let b = backend();
-        let image = img(b.input_elems(), 0);
-        let mut rf = b.begin_forward(&image, 8);
-        rf.step_tile();
-        let words = rf.snapshot();
-
-        // Bad magic.
-        let mut bad = words.clone();
-        bad[0] = 0xDEAD_BEEF;
-        assert!(ResumableForward::resume(&b, 8, &bad).is_err());
-        // Truncated payload.
-        assert!(ResumableForward::resume(&b, 8, &words[..words.len() - 1])
-            .is_err());
-        // Layer out of range.
-        let mut bad = words.clone();
-        bad[1] = 99;
-        assert!(ResumableForward::resume(&b, 8, &bad).is_err());
-        // Tile cursor inconsistent with the partial-sum payload.
-        let mut bad = words.clone();
-        bad[2] += 1;
-        assert!(ResumableForward::resume(&b, 8, &bad).is_err());
-        // Empty input.
-        assert!(ResumableForward::resume(&b, 8, &[]).is_err());
     }
 
     #[test]

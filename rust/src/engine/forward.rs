@@ -1,0 +1,633 @@
+//! Resumable tiled execution of a compiled [`ModelPlan`].
+//!
+//! The bitwise forward pass executes as **resumable tiles**: each GEMM
+//! layer is split into chunks of patch rows whose raw AND-accumulations
+//! append to a partial-sum buffer, and the in-flight state serializes
+//! to NV-checkpointable words ([`ResumableForward::snapshot`]) and
+//! restores bit-identically ([`ResumableForward::resume`]). This is
+//! the §II-B.3 power-intermittency story at inference granularity:
+//! operands live in the non-volatile arrays, only the partial sums and
+//! control state need checkpointing (see `intermittency::inference`
+//! and DESIGN.md §6/§7).
+//!
+//! Tiles execute through the [`TileScheduler`]:
+//! [`ResumableForward::step_wave`] runs the next wave of up to
+//! `lanes` tiles concurrently (the sub-array parallelism model), and
+//! [`ResumableForward::step_tile`] is the serial single-tile special
+//! case. Because every tile writes a disjoint slice of exact integer
+//! partial sums, logits, snapshots, and ledgers are bit-identical for
+//! any lane count — a snapshot taken under one lane count restores
+//! under any other.
+
+use anyhow::Result;
+
+use crate::bitops;
+use crate::cnn::Layer;
+use crate::quant;
+use crate::subarray::OpLedger;
+
+use super::lanes::TileScheduler;
+use super::plan::{avg_pool, postprocess, ModelPlan};
+
+/// Identifies one resumable execution tile.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TileId {
+    pub layer: usize,
+    pub tile: usize,
+}
+
+/// Words of snapshot control state (magic, layer, tile, tile_patches,
+/// lanes, h, w, c, x_len, raw_len) — the part of a checkpoint that is
+/// always written.
+pub const SNAPSHOT_HEADER_WORDS: usize = 10;
+
+/// `"PIMSNVS2"` — snapshot format tag (v2 is self-describing: it
+/// records the tile size the cursor counts in, and the lane count the
+/// snapshot was taken under).
+const SNAPSHOT_MAGIC: u64 = 0x5049_4D53_4E56_5332;
+
+/// In-flight tile-granular forward pass over a compiled plan. The
+/// working state (`x`, partial sums, layer/tile cursor) is volatile;
+/// [`Self::snapshot`] serializes it for the NV store and
+/// [`Self::resume`] reconstructs it bit-identically. Per-layer operand
+/// state (`ia`) is recomputed from `x` on entry — operands are
+/// NV-resident and never checkpointed.
+pub struct ResumableForward<'a> {
+    plan: &'a ModelPlan,
+    sched: TileScheduler,
+    tile_patches: usize,
+    layer: usize,
+    /// Next tile within the current layer.
+    tile: usize,
+    /// Input activations of the current layer (logits once done).
+    x: Vec<f32>,
+    h: usize,
+    w: usize,
+    c: usize,
+    /// Quantized operand codes of the current GEMM layer (im2col
+    /// patches for conv, the activation vector for FC).
+    ia: Vec<u32>,
+    /// Patch rows of the current GEMM layer (0 for pool layers).
+    p: usize,
+    oh: usize,
+    ow: usize,
+    /// Raw Eq.-1 partial sums of the tiles completed in this layer.
+    raw: Vec<u64>,
+    done: bool,
+    total_tiles: u64,
+    tiles_done: u64,
+    /// Sub-array row-op accounting across executed tiles.
+    ledger: OpLedger,
+}
+
+impl<'a> ResumableForward<'a> {
+    /// Begin a resumable forward pass over one image, splitting every
+    /// GEMM layer into tiles of at most `tile_patches` patch rows.
+    /// Driving [`Self::step_wave`] to completion is exactly the
+    /// serving path.
+    pub fn begin(
+        plan: &'a ModelPlan,
+        image: &[f32],
+        tile_patches: usize,
+        sched: TileScheduler,
+    ) -> ResumableForward<'a> {
+        assert_eq!(image.len(), plan.input_elems(), "image geometry");
+        assert!(tile_patches >= 1, "tile_patches must be >= 1");
+        let mut rf = ResumableForward {
+            plan,
+            sched,
+            tile_patches,
+            layer: 0,
+            tile: 0,
+            x: image.to_vec(),
+            h: plan.model().input_hw,
+            w: plan.model().input_hw,
+            c: plan.model().input_c,
+            ia: Vec::new(),
+            p: 0,
+            oh: 0,
+            ow: 0,
+            raw: Vec::new(),
+            done: false,
+            total_tiles: plan.total_tiles(tile_patches),
+            tiles_done: 0,
+            ledger: OpLedger::default(),
+        };
+        rf.enter_layer();
+        rf
+    }
+
+    /// Total tiles this pass executes when uninterrupted.
+    pub fn total_tiles(&self) -> u64 {
+        self.total_tiles
+    }
+
+    /// Tiles executed by THIS engine instance (a resumed instance
+    /// starts from the durable tile count of its snapshot).
+    pub fn tiles_done(&self) -> u64 {
+        self.tiles_done
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.done
+    }
+
+    /// Lane count this engine executes waves with.
+    pub fn lanes(&self) -> usize {
+        self.sched.lanes()
+    }
+
+    /// Current cursor (the next tile to execute); `layer` equals the
+    /// layer count once done.
+    pub fn position(&self) -> TileId {
+        TileId { layer: self.layer, tile: self.tile }
+    }
+
+    /// Partial-sum words currently buffered for the open layer.
+    pub fn raw_len(&self) -> usize {
+        self.raw.len()
+    }
+
+    /// Row-op ledger of the tiles executed so far.
+    pub fn ledger(&self) -> &OpLedger {
+        &self.ledger
+    }
+
+    /// Final logits, once [`Self::is_done`].
+    pub fn logits(&self) -> Option<&[f32]> {
+        if self.done {
+            Some(&self.x)
+        } else {
+            None
+        }
+    }
+
+    /// Final logits by value (panics before completion).
+    pub fn into_logits(self) -> Vec<f32> {
+        debug_assert!(self.done, "into_logits before completion");
+        self.x
+    }
+
+    /// Derive the current layer's operand state from `x` (deterministic
+    /// — bit-identical on every re-derivation after a restore).
+    fn enter_layer(&mut self) {
+        let plan = self.plan;
+        if self.layer >= plan.model().layers.len() {
+            self.done = true;
+            return;
+        }
+        match &plan.model().layers[self.layer] {
+            Layer::Pool { .. } => {
+                self.ia.clear();
+                self.p = 0;
+            }
+            Layer::Conv { kernel, stride, pad, .. } => {
+                let lw = plan.layer_plan(self.layer).expect("conv plan");
+                let codes = quant::act_to_codes(&self.x, lw.m_bits);
+                let (patches, oh, ow) = bitops::im2col(
+                    &codes, self.h, self.w, self.c, *kernel, *kernel,
+                    *stride, *pad,
+                );
+                self.ia = patches;
+                self.oh = oh;
+                self.ow = ow;
+                self.p = oh * ow;
+            }
+            Layer::Fc { .. } => {
+                let lw = plan.layer_plan(self.layer).expect("fc plan");
+                self.ia = quant::act_to_codes(&self.x, lw.m_bits);
+                self.oh = 1;
+                self.ow = 1;
+                self.p = 1;
+            }
+        }
+    }
+
+    fn advance_layer(&mut self) {
+        self.layer += 1;
+        self.tile = 0;
+        self.raw.clear();
+        self.enter_layer();
+    }
+
+    /// Execute up to `max_tiles` tiles of the CURRENT layer (never
+    /// crossing a layer boundary); returns how many ran.
+    fn exec_tiles(&mut self, max_tiles: usize) -> u64 {
+        debug_assert!(!self.done && max_tiles >= 1);
+        let plan = self.plan;
+        match &plan.model().layers[self.layer] {
+            Layer::Pool { window, .. } => {
+                self.x =
+                    avg_pool(&self.x, self.h, self.w, self.c, *window);
+                self.h /= *window;
+                self.w /= *window;
+                self.tiles_done += 1;
+                self.advance_layer();
+                1
+            }
+            layer @ (Layer::Conv { .. } | Layer::Fc { .. }) => {
+                let lw = plan.layer_plan(self.layer).expect("gemm plan");
+                let tiles_in = self.p.div_ceil(self.tile_patches);
+                debug_assert!(self.tile < tiles_in, "tile past layer end");
+                let n = max_tiles.min(tiles_in - self.tile);
+                let (mut wave_raw, wave_ledger) = self.sched.run_tiles(
+                    lw,
+                    &self.ia,
+                    self.p,
+                    self.tile_patches,
+                    self.tile,
+                    self.tile + n,
+                );
+                self.raw.append(&mut wave_raw);
+                self.ledger.merge(&wave_ledger);
+                self.tile += n;
+                self.tiles_done += n as u64;
+                if self.tile * self.tile_patches >= self.p {
+                    // Layer complete: the shared f32 post-processing.
+                    let is_last =
+                        self.layer == plan.model().layers.len() - 1;
+                    self.x = postprocess(
+                        &self.raw, &self.ia, self.p, lw, is_last,
+                    );
+                    self.h = self.oh;
+                    self.w = self.ow;
+                    self.c = layer.out_channels();
+                    self.advance_layer();
+                }
+                n as u64
+            }
+        }
+    }
+
+    /// Execute the next single tile (serial semantics). Returns the
+    /// executed tile's id, or `None` once the pass is complete.
+    pub fn step_tile(&mut self) -> Option<TileId> {
+        if self.done {
+            return None;
+        }
+        let id = TileId { layer: self.layer, tile: self.tile };
+        self.exec_tiles(1);
+        Some(id)
+    }
+
+    /// Execute the next wave: up to `lanes` tiles of the current layer
+    /// concurrently across the lane pool (the sub-arrays of one wave
+    /// compute in the same array cycles). Returns the number of tiles
+    /// executed, or `None` once the pass is complete.
+    pub fn step_wave(&mut self) -> Option<u64> {
+        if self.done {
+            return None;
+        }
+        Some(self.exec_tiles(self.sched.lanes()))
+    }
+
+    /// Serialize the volatile working state to NV-checkpointable words:
+    /// `[magic, layer, tile, tile_patches, lanes, h, w, c, x_len,
+    /// raw_len, x as f32 bits..., raw...]`.
+    pub fn snapshot(&self) -> Vec<u64> {
+        let mut words = Vec::with_capacity(
+            SNAPSHOT_HEADER_WORDS + self.x.len() + self.raw.len(),
+        );
+        words.push(SNAPSHOT_MAGIC);
+        words.push(self.layer as u64);
+        words.push(self.tile as u64);
+        words.push(self.tile_patches as u64);
+        words.push(self.sched.lanes() as u64);
+        words.push(self.h as u64);
+        words.push(self.w as u64);
+        words.push(self.c as u64);
+        words.push(self.x.len() as u64);
+        words.push(self.raw.len() as u64);
+        words.extend(self.x.iter().map(|&v| v.to_bits() as u64));
+        words.extend(self.raw.iter().copied());
+        words
+    }
+
+    /// Reconstruct an engine from snapshot `words` — the power-up
+    /// restore path. Operand state is re-derived from the restored
+    /// activations, so the resumed pass is bit-identical to one that
+    /// never lost power. Snapshots are self-describing: the tile size
+    /// the cursor counts in comes from the header, so the power-up
+    /// consumer needs no out-of-band config to recover the state. The
+    /// recorded lane count is informational only — `sched` need not
+    /// match it (the cursor is tile-granular and tile results are
+    /// lane-invariant), so a checkpoint taken on an N-lane engine
+    /// restores on any other lane count.
+    pub fn resume(
+        plan: &'a ModelPlan,
+        sched: TileScheduler,
+        words: &[u64],
+    ) -> Result<ResumableForward<'a>> {
+        anyhow::ensure!(
+            words.len() >= SNAPSHOT_HEADER_WORDS
+                && words[0] == SNAPSHOT_MAGIC,
+            "corrupt NV snapshot header"
+        );
+        let layer = words[1] as usize;
+        let tile = words[2] as usize;
+        let tile_patches = words[3] as usize;
+        anyhow::ensure!(
+            tile_patches >= 1,
+            "snapshot records an impossible tile size"
+        );
+        anyhow::ensure!(
+            words[4] >= 1,
+            "snapshot records an impossible lane count"
+        );
+        let (h, w, c) =
+            (words[5] as usize, words[6] as usize, words[7] as usize);
+        let x_len = words[8] as usize;
+        let raw_len = words[9] as usize;
+        anyhow::ensure!(
+            words.len() == SNAPSHOT_HEADER_WORDS + x_len + raw_len,
+            "corrupt NV snapshot payload: {} words, header says {}",
+            words.len(),
+            SNAPSHOT_HEADER_WORDS + x_len + raw_len
+        );
+        anyhow::ensure!(
+            layer <= plan.model().layers.len(),
+            "snapshot layer {layer} out of range"
+        );
+        if layer < plan.model().layers.len() {
+            anyhow::ensure!(
+                x_len == h * w * c,
+                "snapshot activation geometry mismatch"
+            );
+            if let Some(lw) = plan.layer_plan(layer) {
+                // A live engine advances to the next layer as soon as
+                // the last tile completes, so a cursor at-or-past the
+                // layer end can only come from corruption.
+                anyhow::ensure!(
+                    tile * tile_patches < lw.p,
+                    "snapshot tile cursor past layer end"
+                );
+                let expect = tile * tile_patches * lw.f;
+                anyhow::ensure!(
+                    raw_len == expect,
+                    "snapshot partial sums: {raw_len} words, tile \
+                     cursor implies {expect}"
+                );
+            } else {
+                anyhow::ensure!(
+                    raw_len == 0 && tile == 0,
+                    "pool layers hold no partial sums"
+                );
+            }
+        }
+        let x: Vec<f32> = words
+            [SNAPSHOT_HEADER_WORDS..SNAPSHOT_HEADER_WORDS + x_len]
+            .iter()
+            .map(|&v| f32::from_bits(v as u32))
+            .collect();
+        let raw = words[SNAPSHOT_HEADER_WORDS + x_len..].to_vec();
+        let tiles_done = (0..layer)
+            .map(|li| plan.tiles_in_layer(li, tile_patches))
+            .sum::<u64>()
+            + tile as u64;
+        let mut rf = ResumableForward {
+            plan,
+            sched,
+            tile_patches,
+            layer,
+            tile,
+            x,
+            h,
+            w,
+            c,
+            ia: Vec::new(),
+            p: 0,
+            oh: 0,
+            ow: 0,
+            raw,
+            done: false,
+            total_tiles: plan.total_tiles(tile_patches),
+            tiles_done,
+            ledger: OpLedger::default(),
+        };
+        rf.enter_layer();
+        Ok(rf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn;
+
+    fn plan() -> ModelPlan {
+        ModelPlan::compile(cnn::micro_net(), 1, 4, 0xBEEF).unwrap()
+    }
+
+    fn img(elems: usize, phase: usize) -> Vec<f32> {
+        (0..elems).map(|i| ((i + phase) % 17) as f32 / 16.0).collect()
+    }
+
+    fn serial() -> TileScheduler {
+        TileScheduler::new(1)
+    }
+
+    #[test]
+    fn tiled_execution_matches_oracle_for_any_tile_size() {
+        let p = plan();
+        let image = img(p.input_elems(), 2);
+        let want = p.reference_logits(&image);
+        for tile_patches in [1, 3, 8, 64, 1000] {
+            let mut rf = p.begin_forward(&image, tile_patches, serial());
+            let total = rf.total_tiles();
+            assert!(total >= 1);
+            let mut steps = 0u64;
+            while rf.step_tile().is_some() {
+                steps += 1;
+            }
+            assert_eq!(steps, total, "tile count must match the plan");
+            assert_eq!(rf.tiles_done(), total);
+            assert!(rf.is_done());
+            assert_eq!(
+                rf.logits().unwrap(),
+                &want[..],
+                "tile_patches={tile_patches} diverged"
+            );
+            assert!(rf.ledger().logic_ops > 0, "tiles must charge ops");
+        }
+    }
+
+    #[test]
+    fn micro_net_tile_plan() {
+        // conv1 P=64, pool, fc P=1: with 16-patch tiles that is
+        // 4 + 1 + 1 tiles.
+        let p = plan();
+        let rf = p.begin_forward(&img(p.input_elems(), 0), 16, serial());
+        assert_eq!(rf.total_tiles(), 6);
+        assert_eq!(rf.position(), TileId { layer: 0, tile: 0 });
+        assert_eq!(rf.lanes(), 1);
+    }
+
+    #[test]
+    fn wave_execution_lane_invariant() {
+        // Wave-driven execution at lanes {1, 2, 8} lands on the same
+        // logits and identical ledger totals as serial tile stepping.
+        let p = plan();
+        let image = img(p.input_elems(), 4);
+        let (want, want_ledger) = {
+            let mut rf = p.begin_forward(&image, 4, serial());
+            while rf.step_tile().is_some() {}
+            let ledger = *rf.ledger();
+            (rf.into_logits(), ledger)
+        };
+        for lanes in [1usize, 2, 8] {
+            let mut rf =
+                p.begin_forward(&image, 4, TileScheduler::new(lanes));
+            let mut executed = 0u64;
+            while let Some(n) = rf.step_wave() {
+                assert!(n >= 1 && n <= lanes as u64);
+                executed += n;
+            }
+            assert_eq!(executed, rf.total_tiles());
+            assert_eq!(
+                rf.ledger(),
+                &want_ledger,
+                "lanes={lanes} ledger diverged"
+            );
+            assert_eq!(
+                rf.into_logits(),
+                want,
+                "lanes={lanes} logits diverged"
+            );
+        }
+    }
+
+    #[test]
+    fn snapshot_resume_is_bit_identical_at_every_tile() {
+        let p = plan();
+        let image = img(p.input_elems(), 7);
+        let want = {
+            let mut rf = p.begin_forward(&image, 8, serial());
+            while rf.step_tile().is_some() {}
+            rf.into_logits()
+        };
+        // Interrupt after every possible tile prefix; the resumed
+        // engine must land on the same bits.
+        let total = p.begin_forward(&image, 8, serial()).total_tiles();
+        for cut in 0..total {
+            let mut rf = p.begin_forward(&image, 8, serial());
+            for _ in 0..cut {
+                rf.step_tile();
+            }
+            let words = rf.snapshot();
+            drop(rf); // power failure: volatile state gone
+            let mut resumed =
+                ResumableForward::resume(&p, serial(), &words).unwrap();
+            assert_eq!(resumed.tiles_done(), cut);
+            while resumed.step_tile().is_some() {}
+            assert_eq!(
+                resumed.logits().unwrap(),
+                &want[..],
+                "resume after {cut} tiles diverged"
+            );
+        }
+    }
+
+    #[test]
+    fn snapshot_under_threads_restores_on_any_lane_count() {
+        // A checkpoint taken mid-run on a threaded (lanes=4) engine
+        // restores bit-identically on 1-, 2-, and 8-lane engines: the
+        // cursor is tile-granular and tile results are lane-invariant.
+        let p = plan();
+        let image = img(p.input_elems(), 9);
+        let want = p.reference_logits(&image);
+        let mut rf =
+            p.begin_forward(&image, 2, TileScheduler::new(4));
+        rf.step_wave(); // mid-layer cursor under threaded execution
+        let words = rf.snapshot();
+        assert_eq!(words[3], 2, "snapshot must record its tile size");
+        assert_eq!(words[4], 4, "snapshot must record its lane count");
+        drop(rf);
+        for lanes in [1usize, 2, 8] {
+            let mut resumed = ResumableForward::resume(
+                &p,
+                TileScheduler::new(lanes),
+                &words,
+            )
+            .unwrap();
+            while resumed.step_wave().is_some() {}
+            assert_eq!(
+                resumed.logits().unwrap(),
+                &want[..],
+                "restore onto lanes={lanes} diverged"
+            );
+        }
+    }
+
+    #[test]
+    fn snapshot_of_finished_pass_restores_logits() {
+        let p = plan();
+        let image = img(p.input_elems(), 1);
+        let mut rf = p.begin_forward(&image, 16, serial());
+        while rf.step_tile().is_some() {}
+        let words = rf.snapshot();
+        let restored =
+            ResumableForward::resume(&p, serial(), &words).unwrap();
+        assert!(restored.is_done());
+        assert_eq!(restored.logits().unwrap(), rf.logits().unwrap());
+    }
+
+    #[test]
+    fn snapshots_are_self_describing_about_tile_size() {
+        // The power-up consumer needs no out-of-band tile-size config:
+        // resume derives it from the header, even when the snapshot
+        // was taken with a non-default tile size.
+        let p = plan();
+        let image = img(p.input_elems(), 5);
+        let want = p.reference_logits(&image);
+        let mut rf = p.begin_forward(&image, 3, serial());
+        for _ in 0..5 {
+            rf.step_tile();
+        }
+        let words = rf.snapshot();
+        drop(rf);
+        let mut resumed =
+            ResumableForward::resume(&p, serial(), &words).unwrap();
+        assert_eq!(resumed.total_tiles(), p.total_tiles(3));
+        while resumed.step_tile().is_some() {}
+        assert_eq!(resumed.logits().unwrap(), &want[..]);
+    }
+
+    #[test]
+    fn corrupt_snapshots_rejected() {
+        let p = plan();
+        let image = img(p.input_elems(), 0);
+        let mut rf = p.begin_forward(&image, 8, serial());
+        rf.step_tile();
+        let words = rf.snapshot();
+
+        // Bad magic.
+        let mut bad = words.clone();
+        bad[0] = 0xDEAD_BEEF;
+        assert!(ResumableForward::resume(&p, serial(), &bad).is_err());
+        // Truncated payload.
+        assert!(ResumableForward::resume(
+            &p,
+            serial(),
+            &words[..words.len() - 1]
+        )
+        .is_err());
+        // Layer out of range.
+        let mut bad = words.clone();
+        bad[1] = 99;
+        assert!(ResumableForward::resume(&p, serial(), &bad).is_err());
+        // Zero tile size recorded.
+        let mut bad = words.clone();
+        bad[3] = 0;
+        assert!(ResumableForward::resume(&p, serial(), &bad).is_err());
+        // Zero lanes recorded.
+        let mut bad = words.clone();
+        bad[4] = 0;
+        assert!(ResumableForward::resume(&p, serial(), &bad).is_err());
+        // Tile cursor inconsistent with the partial-sum payload.
+        let mut bad = words.clone();
+        bad[2] += 1;
+        assert!(ResumableForward::resume(&p, serial(), &bad).is_err());
+        // Empty input.
+        assert!(ResumableForward::resume(&p, serial(), &[]).is_err());
+    }
+}

@@ -1,0 +1,196 @@
+//! Sub-array-parallel tile execution: virtual engine lanes.
+//!
+//! The paper's throughput comes from mapping AND-Accumulation across
+//! *parallel computational sub-arrays* (Fig. 3, §III-B): every
+//! sub-array computes its resident rows concurrently. The software
+//! mirror is the [`TileScheduler`]: each GEMM layer's patch rows are
+//! partitioned into tiles, tiles are assigned to virtual lanes with a
+//! deterministic assignment, and lanes execute on a `std::thread`
+//! scoped pool. Lane counts are clamped to the chip's physically
+//! concurrent sub-arrays ([`crate::arch::ChipOrg::engine_lanes`]).
+//!
+//! Determinism: every tile writes a disjoint slice of the layer's raw
+//! Eq.-1 output buffer, raw values are exact integers independent of
+//! execution order, and per-lane [`OpLedger`]s are merged in lane
+//! order (and are sums, hence order-free) — so logits and ledger
+//! totals are bit-identical to serial execution for ANY lane count.
+
+use crate::arch::ChipOrg;
+use crate::subarray::OpLedger;
+
+use super::plan::{and_tile_ledger, gemm_raw_slice, GemmEngine, LayerPlan};
+
+/// Tile-to-lane scheduler over a fixed virtual lane count.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TileScheduler {
+    lanes: usize,
+}
+
+impl Default for TileScheduler {
+    /// Serial execution (one lane) — bit-identical by construction.
+    fn default() -> Self {
+        TileScheduler { lanes: 1 }
+    }
+}
+
+impl TileScheduler {
+    /// A scheduler with exactly `lanes` virtual lanes (min 1).
+    pub fn new(lanes: usize) -> Self {
+        TileScheduler { lanes: lanes.max(1) }
+    }
+
+    /// Derive the lane count from a chip organization: the requested
+    /// software parallelism, clamped to the sub-arrays that can
+    /// actually compute concurrently.
+    pub fn for_chip(org: &ChipOrg, requested: usize) -> Self {
+        TileScheduler { lanes: org.engine_lanes(requested) }
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Execute GEMM tiles `[tile_start, tile_end)` of one layer over
+    /// operand codes `ia` (`p` patch rows of `lw.k`), returning the raw
+    /// Eq.-1 outputs for those rows plus the row-op ledger. Tiles are
+    /// assigned to lanes in contiguous blocks (lane `l` executes tiles
+    /// `[start + l*ceil(n/lanes), ...)`) — deterministic, and each lane
+    /// writes its own disjoint output slice.
+    pub(crate) fn run_tiles(
+        &self,
+        lw: &LayerPlan,
+        ia: &[u32],
+        p: usize,
+        tile_patches: usize,
+        tile_start: usize,
+        tile_end: usize,
+    ) -> (Vec<u64>, OpLedger) {
+        debug_assert!(tile_start < tile_end, "empty tile range");
+        let row_start = tile_start * tile_patches;
+        let row_end = (tile_end * tile_patches).min(p);
+        debug_assert!(row_start < row_end, "tile range past layer end");
+        let total_rows = row_end - row_start;
+        let mut raw = vec![0u64; total_rows * lw.f];
+        let n_tiles = tile_end - tile_start;
+        let lanes = self.lanes.min(n_tiles);
+        if lanes <= 1 {
+            gemm_raw_slice(
+                ia,
+                row_start,
+                row_end,
+                lw,
+                GemmEngine::Bitwise,
+                &mut raw,
+            );
+            return (raw, and_tile_ledger(lw, total_rows));
+        }
+        // Carve the output into one contiguous row-range chunk per
+        // lane, at tile boundaries.
+        let tiles_per_lane = n_tiles.div_ceil(lanes);
+        let mut jobs: Vec<(usize, usize, &mut [u64])> = Vec::new();
+        let mut rest: &mut [u64] = &mut raw;
+        for l in 0..lanes {
+            let ts = tile_start + l * tiles_per_lane;
+            let te = (ts + tiles_per_lane).min(tile_end);
+            if ts >= te {
+                break;
+            }
+            let rs = ts * tile_patches;
+            let re = (te * tile_patches).min(p);
+            let words = (re - rs) * lw.f;
+            let taken = std::mem::take(&mut rest);
+            let (head, tail) = taken.split_at_mut(words);
+            rest = tail;
+            jobs.push((rs, re, head));
+        }
+        debug_assert!(rest.is_empty(), "output rows not fully assigned");
+        std::thread::scope(|s| {
+            let handles: Vec<_> = jobs
+                .into_iter()
+                .map(|(rs, re, out)| {
+                    s.spawn(move || {
+                        gemm_raw_slice(
+                            ia,
+                            rs,
+                            re,
+                            lw,
+                            GemmEngine::Bitwise,
+                            out,
+                        );
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().expect("engine lane panicked");
+            }
+        });
+        // The ledger is linear in rows, so charging the whole range at
+        // once equals the per-tile (and per-lane) sum exactly.
+        (raw, and_tile_ledger(lw, total_rows))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn;
+    use crate::engine::ModelPlan;
+    use crate::proptest_lite::Runner;
+    use crate::quant;
+
+    #[test]
+    fn chip_derived_lanes_clamp() {
+        let org = ChipOrg::default();
+        assert_eq!(TileScheduler::for_chip(&org, 0).lanes(), 1);
+        assert_eq!(TileScheduler::for_chip(&org, 4).lanes(), 4);
+        assert_eq!(
+            TileScheduler::for_chip(&org, usize::MAX).lanes(),
+            org.parallel_subarrays()
+        );
+        assert_eq!(TileScheduler::new(0).lanes(), 1);
+        assert_eq!(TileScheduler::default().lanes(), 1);
+    }
+
+    #[test]
+    fn run_tiles_lane_invariant_property() {
+        // Any lane count produces the serial raw words and ledger,
+        // for any tile size and sub-range.
+        let plan =
+            ModelPlan::compile(cnn::micro_net(), 1, 4, 0x1A9E).unwrap();
+        let lw = plan.layer_plan(0).unwrap();
+        let mut r = Runner::with_cases(0x1A9F, 16);
+        r.run("run_tiles lane-invariant", |g| {
+            let x: Vec<f32> = (0..lw.p * lw.k)
+                .map(|_| g.f64(0.0, 1.0) as f32)
+                .collect();
+            let ia = quant::act_to_codes(&x, lw.m_bits);
+            let tile_patches = g.usize(1, 24);
+            let n_tiles = lw.p.div_ceil(tile_patches);
+            let tile_start = g.usize(0, n_tiles - 1);
+            let tile_end = g.usize(tile_start + 1, n_tiles);
+            let (want_raw, want_ledger) = TileScheduler::new(1).run_tiles(
+                lw,
+                &ia,
+                lw.p,
+                tile_patches,
+                tile_start,
+                tile_end,
+            );
+            for lanes in [2usize, 3, 8] {
+                let (raw, ledger) = TileScheduler::new(lanes).run_tiles(
+                    lw,
+                    &ia,
+                    lw.p,
+                    tile_patches,
+                    tile_start,
+                    tile_end,
+                );
+                assert_eq!(raw, want_raw, "lanes={lanes} raw diverged");
+                assert_eq!(
+                    ledger, want_ledger,
+                    "lanes={lanes} ledger diverged"
+                );
+            }
+        });
+    }
+}

@@ -1,0 +1,40 @@
+//! The inference engine: compiled model plans + sub-array-parallel
+//! tile execution.
+//!
+//! This subsystem is the software mirror of the paper's execution
+//! model (§III-B, Fig. 3): weights live in the arrays as transposed
+//! bit-planes, convolutions run as bitwise GEMMs over im2col patch
+//! rows, and throughput comes from *parallel computational
+//! sub-arrays*. Three layers:
+//!
+//! * [`ModelPlan`] — the compile-once artifact per (model, W:I config,
+//!   seed): per-layer transposed weight bit-planes, GEMM/im2col
+//!   geometry, layer schedule, and quantization parameters. Neither
+//!   serving nor the intermittency driver re-decomposes weights per
+//!   request.
+//! * [`TileScheduler`] — partitions each GEMM layer into tiles
+//!   assigned to virtual sub-array lanes (derived from
+//!   [`crate::arch::ChipOrg`]), executed across a `std::thread` lane
+//!   pool with deterministic tile→lane assignment, so results and
+//!   [`crate::subarray::OpLedger`] merges are bit-identical to serial
+//!   execution.
+//! * [`ResumableForward`] — tile-granular execution with
+//!   NV-checkpointable snapshots ([`ResumableForward::snapshot`] /
+//!   [`ResumableForward::resume`]); [`ModelPlan::forward_batch`] is
+//!   the batched serving entry that amortizes plan lookup and scratch
+//!   buffers across a coordinator batch.
+//!
+//! Consumers: `coordinator::PimSimBackend` (serving),
+//! `intermittency::inference` (power-failure replay), and the CLI's
+//! `infer`/`serve --lanes`. Why determinism holds under threading, and
+//! the lane ↔ `ChipOrg` mapping, are documented in DESIGN.md §7.
+
+mod forward;
+mod lanes;
+mod plan;
+
+pub use forward::{
+    ResumableForward, TileId, SNAPSHOT_HEADER_WORDS,
+};
+pub use lanes::TileScheduler;
+pub use plan::{BatchOutput, LayerPlan, ModelPlan, DEFAULT_TILE_PATCHES};

@@ -1,0 +1,666 @@
+//! Compiled model plans: the compile-once artifact of the inference
+//! engine.
+//!
+//! A [`ModelPlan`] is built once per (model, W:I config, seed) and holds
+//! everything the per-request hot path would otherwise recompute:
+//! per-layer TRANSPOSED weight codes, their NV-resident bit-plane
+//! decomposition (Fig. 3's data organization — each sub-array stores
+//! C_n(W) rows beneath the C_m(I) rows they AND against), the GEMM/
+//! im2col geometry of every layer, and the quantization bit-widths.
+//! Serving, batched execution, and the intermittency driver all consume
+//! the same plan, so weight planes are decomposed exactly once per
+//! process, never per request.
+
+use anyhow::{Context, Result};
+
+use crate::bitops::{self, BitPlanes};
+use crate::cnn::{Layer, Model};
+use crate::prng::Pcg32;
+use crate::quant;
+use crate::subarray::{OpLedger, SubArrayGeom};
+
+use super::forward::ResumableForward;
+use super::lanes::TileScheduler;
+
+/// Default patch rows per execution tile: the 64-patch resident tile
+/// of the area model's working-set convention.
+pub const DEFAULT_TILE_PATCHES: usize = 64;
+
+/// Which integer GEMM engine computes Eq. (1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum GemmEngine {
+    /// Packed bit-plane AND-accumulate — the PIM datapath.
+    Bitwise,
+    /// Dense integer dot product — the independent oracle.
+    IntDot,
+}
+
+/// Compiled state of one GEMM (conv or FC) layer: quantized weights
+/// stored TRANSPOSED (`[F x K]` row-major) so both engines read one
+/// filter's reduction row contiguously, their bit-plane decomposition,
+/// and the layer's GEMM + im2col scratch geometry.
+#[derive(Debug, Clone)]
+pub struct LayerPlan {
+    /// Transposed weight codes (`[F x K]`), read by the int-dot oracle.
+    pub(crate) codes_t: Vec<u32>,
+    /// Bit-plane decomposition of `codes_t` (NV-resident, immutable).
+    pub(crate) wp: BitPlanes,
+    /// Output patch rows (P of the GEMM view).
+    pub p: usize,
+    /// Reduction length.
+    pub k: usize,
+    /// Filter count.
+    pub f: usize,
+    /// Activation bits (C_m(I) planes).
+    pub m_bits: u32,
+    /// Weight bits (C_n(W) planes).
+    pub n_bits: u32,
+}
+
+/// Activation/weight bit-widths for one layer: quantized layers use
+/// the configured W:I widths; first/last (unquantized) layers run the
+/// 8:8-bit fixed-point convention (DESIGN.md §2).
+fn layer_io_bits(layer: &Layer, w_bits: u32, a_bits: u32) -> (u32, u32) {
+    if layer.is_quant() {
+        (a_bits.min(8), w_bits.min(8))
+    } else {
+        (8, 8)
+    }
+}
+
+/// Row-op ledger one GEMM execution of `rows` patch rows charges: the
+/// parallel-AND senses of every (activation-plane, weight-plane) pair,
+/// serialized over ceil(K / sub-array columns) row segments. Linear in
+/// `rows`, so any tiling of a layer charges identical totals.
+pub(crate) fn and_tile_ledger(lw: &LayerPlan, rows: usize) -> OpLedger {
+    let cols = SubArrayGeom::default().cols as u64;
+    let and_rows = (rows * lw.f) as u64
+        * lw.m_bits as u64
+        * lw.n_bits as u64
+        * (lw.k as u64).div_ceil(cols);
+    OpLedger::for_and_tile(and_rows, cols)
+}
+
+/// Result of one batched forward pass.
+#[derive(Debug, Clone)]
+pub struct BatchOutput {
+    /// `batch * num_classes` logits, image-major.
+    pub logits: Vec<f32>,
+    /// Sub-array row-op accounting merged across all lanes, in
+    /// deterministic lane order (bit-identical for any lane count).
+    pub ledger: OpLedger,
+}
+
+/// Compile-once execution plan for one (model, W:I, seed) triple.
+#[derive(Debug, Clone)]
+pub struct ModelPlan {
+    model: Model,
+    w_bits: u32,
+    a_bits: u32,
+    seed: u64,
+    input_elems: usize,
+    num_classes: usize,
+    /// Parallel to `model.layers`; `None` for pool layers.
+    layers: Vec<Option<LayerPlan>>,
+}
+
+impl ModelPlan {
+    /// Compile `model` at W:I = `w_bits`:`a_bits`. `seed` fixes the
+    /// procedurally generated weight codes, so equal seeds give
+    /// bit-identical plans (and therefore bit-identical replicas
+    /// across pool workers). Weight planes are decomposed here, once;
+    /// they are NV-resident and never change afterwards.
+    pub fn compile(
+        model: Model,
+        w_bits: u32,
+        a_bits: u32,
+        seed: u64,
+    ) -> Result<ModelPlan> {
+        anyhow::ensure!(
+            (1..=8).contains(&w_bits) && (1..=8).contains(&a_bits),
+            "W:I bit-widths must be in 1..=8 (got {w_bits}:{a_bits})"
+        );
+        let input_elems = model.input_hw * model.input_hw * model.input_c;
+        let num_classes = model
+            .layers
+            .last()
+            .context("model has no layers")?
+            .out_channels();
+        let mut layers = Vec::with_capacity(model.layers.len());
+        for (li, layer) in model.layers.iter().enumerate() {
+            layers.push(layer.gemm_shape().map(|(p, k, f)| {
+                let (m_bits, n_bits) = layer_io_bits(layer, w_bits, a_bits);
+                // Codes are generated directly in the transposed
+                // layout, so the compiler (like
+                // `bitops::BitPlanes::from_codes_transposed` on
+                // naturally-ordered weights) never materializes a
+                // transpose scratch buffer.
+                let mut rng = Pcg32::new(seed ^ 0xA17C_0DE5, li as u64 + 1);
+                let codes_t: Vec<u32> =
+                    (0..f * k).map(|_| rng.below(1u32 << n_bits)).collect();
+                let wp =
+                    BitPlanes::from_codes(&codes_t, f, k, n_bits as usize);
+                LayerPlan { codes_t, wp, p, k, f, m_bits, n_bits }
+            }));
+        }
+        Ok(ModelPlan {
+            model,
+            w_bits,
+            a_bits,
+            seed,
+            input_elems,
+            num_classes,
+            layers,
+        })
+    }
+
+    pub fn model(&self) -> &Model {
+        &self.model
+    }
+
+    pub fn model_name(&self) -> &'static str {
+        self.model.name
+    }
+
+    /// (weight bits, activation bits) of the quantized layers.
+    pub fn bit_widths(&self) -> (u32, u32) {
+        (self.w_bits, self.a_bits)
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    pub fn input_elems(&self) -> usize {
+        self.input_elems
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+
+    /// The compiled plan of layer `li` (`None` for pool layers).
+    pub fn layer_plan(&self, li: usize) -> Option<&LayerPlan> {
+        self.layers[li].as_ref()
+    }
+
+    /// Execution tiles layer `li` splits into at `tile_patches` patch
+    /// rows per tile (pool layers run as one tile).
+    pub fn tiles_in_layer(&self, li: usize, tile_patches: usize) -> u64 {
+        match &self.layers[li] {
+            Some(lw) => lw.p.div_ceil(tile_patches) as u64,
+            None => 1,
+        }
+    }
+
+    /// Tiles one uninterrupted forward pass executes.
+    pub fn total_tiles(&self, tile_patches: usize) -> u64 {
+        (0..self.model.layers.len())
+            .map(|li| self.tiles_in_layer(li, tile_patches))
+            .sum()
+    }
+
+    /// Begin a resumable tiled forward pass over one image; tiles
+    /// execute `sched.lanes()` at a time ([`ResumableForward::step_wave`]).
+    pub fn begin_forward(
+        &self,
+        image: &[f32],
+        tile_patches: usize,
+        sched: TileScheduler,
+    ) -> ResumableForward<'_> {
+        ResumableForward::begin(self, image, tile_patches, sched)
+    }
+
+    /// One image through the tiled bitwise path (wave-driven; the
+    /// single-image convenience over [`Self::begin_forward`]).
+    pub fn forward(
+        &self,
+        image: &[f32],
+        tile_patches: usize,
+        sched: TileScheduler,
+    ) -> Vec<f32> {
+        let mut rf = self.begin_forward(image, tile_patches, sched);
+        while rf.step_wave().is_some() {}
+        rf.into_logits()
+    }
+
+    /// A whole coordinator batch through the bitwise path: `flat` holds
+    /// `batch * input_elems` values, image-major. Images are assigned
+    /// to engine lanes round-robin (deterministic), each lane reuses
+    /// one scratch allocation across its images, and plan lookup is
+    /// amortized over the batch. Logits are bit-identical to running
+    /// [`Self::forward`] per image, for any lane count.
+    pub fn forward_batch(
+        &self,
+        flat: &[f32],
+        batch: usize,
+        sched: &TileScheduler,
+    ) -> Result<BatchOutput> {
+        anyhow::ensure!(batch >= 1, "batch must be >= 1");
+        anyhow::ensure!(
+            flat.len() == batch * self.input_elems,
+            "input length {} != batch {batch} * elems {}",
+            flat.len(),
+            self.input_elems
+        );
+        let lanes = sched.lanes().min(batch);
+        let mut logits = vec![0f32; batch * self.num_classes];
+        let mut ledger = OpLedger::default();
+        if lanes <= 1 {
+            let mut scratch = Scratch::default();
+            for (img, out) in flat
+                .chunks(self.input_elems)
+                .zip(logits.chunks_mut(self.num_classes))
+            {
+                let y = self.forward_whole(img, &mut scratch, &mut ledger);
+                out.copy_from_slice(&y);
+            }
+            return Ok(BatchOutput { logits, ledger });
+        }
+        // Round-robin image -> lane assignment; each lane owns disjoint
+        // output rows, so threads never share mutable state.
+        let mut lane_jobs: Vec<Vec<(&[f32], &mut [f32])>> =
+            (0..lanes).map(|_| Vec::new()).collect();
+        for (i, (img, out)) in flat
+            .chunks(self.input_elems)
+            .zip(logits.chunks_mut(self.num_classes))
+            .enumerate()
+        {
+            lane_jobs[i % lanes].push((img, out));
+        }
+        let lane_ledgers: Vec<OpLedger> = std::thread::scope(|s| {
+            let handles: Vec<_> = lane_jobs
+                .into_iter()
+                .map(|jobs| {
+                    s.spawn(move || {
+                        let mut scratch = Scratch::default();
+                        let mut lane_ledger = OpLedger::default();
+                        for (img, out) in jobs {
+                            let y = self.forward_whole(
+                                img,
+                                &mut scratch,
+                                &mut lane_ledger,
+                            );
+                            out.copy_from_slice(&y);
+                        }
+                        lane_ledger
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("engine lane panicked"))
+                .collect()
+        });
+        // Merge in lane order: deterministic (and commutative anyway —
+        // the ledger is a sum).
+        for l in &lane_ledgers {
+            ledger.merge(l);
+        }
+        Ok(BatchOutput { logits, ledger })
+    }
+
+    /// The oracle path: identical layer walk and f32 post-processing,
+    /// but dense integer dots instead of bit-plane AND-accumulation.
+    pub fn reference_logits(&self, image: &[f32]) -> Vec<f32> {
+        let mut scratch = Scratch::default();
+        self.walk_layers(image, GemmEngine::IntDot, &mut scratch, None)
+    }
+
+    /// Whole-layer bitwise execution with ledger accounting — the
+    /// serving hot path (one lane's work inside [`Self::forward_batch`]).
+    fn forward_whole(
+        &self,
+        image: &[f32],
+        scratch: &mut Scratch,
+        ledger: &mut OpLedger,
+    ) -> Vec<f32> {
+        self.walk_layers(image, GemmEngine::Bitwise, scratch, Some(ledger))
+    }
+
+    /// Shared layer walk of both whole-layer engines. Byte-for-byte the
+    /// post-processing order of the tiled path, so all three execution
+    /// modes (dense oracle, whole-layer bitwise, resumable tiles) are
+    /// bit-identical.
+    fn walk_layers(
+        &self,
+        image: &[f32],
+        engine: GemmEngine,
+        scratch: &mut Scratch,
+        mut ledger: Option<&mut OpLedger>,
+    ) -> Vec<f32> {
+        debug_assert_eq!(image.len(), self.input_elems, "image geometry");
+        let mut x = image.to_vec();
+        let (mut h, mut w, mut c) = (
+            self.model.input_hw,
+            self.model.input_hw,
+            self.model.input_c,
+        );
+        let last = self.model.layers.len() - 1;
+        for (li, layer) in self.model.layers.iter().enumerate() {
+            match layer {
+                Layer::Pool { window, .. } => {
+                    x = avg_pool(&x, h, w, c, *window);
+                    h /= *window;
+                    w /= *window;
+                }
+                Layer::Conv { kernel, stride, pad, cout, .. } => {
+                    let lw = self.layers[li].as_ref().expect("conv plan");
+                    let ia = quant::act_to_codes(&x, lw.m_bits);
+                    let (patches, oh, ow) = bitops::im2col(
+                        &ia, h, w, c, *kernel, *kernel, *stride, *pad,
+                    );
+                    let p = oh * ow;
+                    gemm_raw_into(
+                        &patches,
+                        0,
+                        p,
+                        lw,
+                        engine,
+                        &mut scratch.raw,
+                    );
+                    if let Some(l) = ledger.as_deref_mut() {
+                        l.merge(&and_tile_ledger(lw, p));
+                    }
+                    x = postprocess(&scratch.raw, &patches, p, lw, li == last);
+                    h = oh;
+                    w = ow;
+                    c = *cout;
+                }
+                Layer::Fc { cout, .. } => {
+                    let lw = self.layers[li].as_ref().expect("fc plan");
+                    let ia = quant::act_to_codes(&x, lw.m_bits);
+                    gemm_raw_into(&ia, 0, 1, lw, engine, &mut scratch.raw);
+                    if let Some(l) = ledger.as_deref_mut() {
+                        l.merge(&and_tile_ledger(lw, 1));
+                    }
+                    x = postprocess(&scratch.raw, &ia, 1, lw, li == last);
+                    h = 1;
+                    w = 1;
+                    c = *cout;
+                }
+            }
+        }
+        debug_assert_eq!(x.len(), self.num_classes);
+        x
+    }
+}
+
+/// Per-lane scratch reused across the images of a batch: the raw
+/// Eq.-1 partial-sum buffer is the largest per-layer allocation
+/// (`P x F` u64 words), so one lane allocates it once per layer shape
+/// instead of once per image.
+#[derive(Debug, Default)]
+struct Scratch {
+    raw: Vec<u64>,
+}
+
+/// Raw Eq.-1 outputs for patch rows `[row_start, row_end)` of one
+/// layer into `out` (exactly `(row_end - row_start) * F` words), in
+/// (patch, filter) order — tile-chunked calls concatenate to exactly
+/// the whole-layer result.
+pub(crate) fn gemm_raw_slice(
+    ia: &[u32],
+    row_start: usize,
+    row_end: usize,
+    lw: &LayerPlan,
+    engine: GemmEngine,
+    out: &mut [u64],
+) {
+    debug_assert!(row_end <= ia.len() / lw.k);
+    let rows = row_end - row_start;
+    debug_assert_eq!(out.len(), rows * lw.f);
+    match engine {
+        GemmEngine::Bitwise => {
+            let ip = BitPlanes::from_codes(
+                &ia[row_start * lw.k..row_end * lw.k],
+                rows,
+                lw.k,
+                lw.m_bits as usize,
+            );
+            let mut idx = 0;
+            for i in 0..rows {
+                for j in 0..lw.f {
+                    out[idx] = bitops::and_accumulate(&ip, i, &lw.wp, j);
+                    idx += 1;
+                }
+            }
+        }
+        GemmEngine::IntDot => {
+            let mut idx = 0;
+            for i in row_start..row_end {
+                let patch = &ia[i * lw.k..(i + 1) * lw.k];
+                for j in 0..lw.f {
+                    let col = &lw.codes_t[j * lw.k..(j + 1) * lw.k];
+                    out[idx] = bitops::int_dot(patch, col);
+                    idx += 1;
+                }
+            }
+        }
+    }
+}
+
+/// [`gemm_raw_slice`] into a reusable buffer (cleared + resized).
+pub(crate) fn gemm_raw_into(
+    ia: &[u32],
+    row_start: usize,
+    row_end: usize,
+    lw: &LayerPlan,
+    engine: GemmEngine,
+    out: &mut Vec<u64>,
+) {
+    out.clear();
+    out.resize((row_end - row_start) * lw.f, 0);
+    gemm_raw_slice(ia, row_start, row_end, lw, engine, out);
+}
+
+/// Shared dequantize + activation over a whole layer's raw outputs —
+/// byte-for-byte the post-processing every engine and the tiled path
+/// run, in the same order.
+pub(crate) fn postprocess(
+    raw: &[u64],
+    ia: &[u32],
+    p: usize,
+    lw: &LayerPlan,
+    is_last: bool,
+) -> Vec<f32> {
+    debug_assert_eq!(raw.len(), p * lw.f);
+    debug_assert_eq!(ia.len(), p * lw.k);
+    let mut out = vec![0f32; p * lw.f];
+    for i in 0..p {
+        let psum: u64 = ia[i * lw.k..(i + 1) * lw.k]
+            .iter()
+            .map(|&v| v as u64)
+            .sum();
+        for j in 0..lw.f {
+            let y = quant::dequantize_dot(
+                raw[i * lw.f + j],
+                psum,
+                1.0,
+                lw.m_bits,
+                lw.n_bits,
+            );
+            out[i * lw.f + j] =
+                if is_last { y } else { hidden_activation(y, lw.k) };
+        }
+    }
+    out
+}
+
+/// Hidden-layer activation: re-center the dequantized partial into
+/// [0, 1] for the next layer's quantizer (the EPU's BN+act stage).
+fn hidden_activation(y: f32, k: usize) -> f32 {
+    (0.5 + y / k as f32).clamp(0.0, 1.0)
+}
+
+/// Average pooling over an NHWC f32 map (window == stride).
+pub(crate) fn avg_pool(
+    x: &[f32],
+    h: usize,
+    w: usize,
+    c: usize,
+    win: usize,
+) -> Vec<f32> {
+    debug_assert_eq!(x.len(), h * w * c);
+    let (oh, ow) = (h / win, w / win);
+    let norm = (win * win) as f32;
+    let mut out = vec![0f32; oh * ow * c];
+    for oy in 0..oh {
+        for ox in 0..ow {
+            for ch in 0..c {
+                let mut s = 0f32;
+                for ky in 0..win {
+                    for kx in 0..win {
+                        s += x[((oy * win + ky) * w + (ox * win + kx)) * c
+                            + ch];
+                    }
+                }
+                out[(oy * ow + ox) * c + ch] = s / norm;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn;
+    use crate::proptest_lite::Runner;
+
+    fn plan() -> ModelPlan {
+        ModelPlan::compile(cnn::micro_net(), 1, 4, 0xBEEF).unwrap()
+    }
+
+    fn img(elems: usize, phase: usize) -> Vec<f32> {
+        (0..elems).map(|i| ((i + phase) % 17) as f32 / 16.0).collect()
+    }
+
+    #[test]
+    fn compile_geometry() {
+        let p = plan();
+        assert_eq!(p.input_elems(), 8 * 8);
+        assert_eq!(p.num_classes(), 10);
+        assert_eq!(p.bit_widths(), (1, 4));
+        assert_eq!(p.seed(), 0xBEEF);
+        // conv1 (quant, W1:I4), pool (none), fc1 (quant).
+        let conv1 = p.layer_plan(0).unwrap();
+        assert_eq!((conv1.p, conv1.k, conv1.f), (64, 9, 4));
+        assert_eq!((conv1.m_bits, conv1.n_bits), (4, 1));
+        assert!(p.layer_plan(1).is_none());
+        let fc1 = p.layer_plan(2).unwrap();
+        assert_eq!((fc1.p, fc1.k, fc1.f), (1, 64, 10));
+        // Tile schedule: conv1 64 patches at 16/tile + pool + fc.
+        assert_eq!(p.tiles_in_layer(0, 16), 4);
+        assert_eq!(p.total_tiles(16), 6);
+    }
+
+    #[test]
+    fn compile_rejects_bad_bit_widths() {
+        assert!(ModelPlan::compile(cnn::micro_net(), 0, 4, 1).is_err());
+        assert!(ModelPlan::compile(cnn::micro_net(), 1, 9, 1).is_err());
+    }
+
+    #[test]
+    fn equal_seeds_compile_identical_plans() {
+        let a = ModelPlan::compile(cnn::micro_net(), 1, 4, 7).unwrap();
+        let b = ModelPlan::compile(cnn::micro_net(), 1, 4, 7).unwrap();
+        let c = ModelPlan::compile(cnn::micro_net(), 1, 4, 8).unwrap();
+        assert_eq!(
+            a.layer_plan(0).unwrap().codes_t,
+            b.layer_plan(0).unwrap().codes_t
+        );
+        assert_ne!(
+            a.layer_plan(0).unwrap().codes_t,
+            c.layer_plan(0).unwrap().codes_t,
+            "different seeds must give different weights"
+        );
+    }
+
+    #[test]
+    fn forward_batch_matches_per_image_forward_property() {
+        // Satellite acceptance (a): forward_batch == per-image forward,
+        // elementwise, across random configs/batches/lane counts.
+        let mut r = Runner::with_cases(0xE7A, 10);
+        r.run("forward_batch == per-image forward", |g| {
+            let w_bits = g.u32(1, 2);
+            let a_bits = g.u32(1, 4);
+            let plan = ModelPlan::compile(
+                cnn::micro_net(),
+                w_bits,
+                a_bits,
+                g.u64_any(),
+            )
+            .unwrap();
+            let batch = g.usize(1, 5);
+            let lanes = g.usize(1, 8);
+            let flat: Vec<f32> = (0..batch * plan.input_elems())
+                .map(|_| g.f64(0.0, 1.0) as f32)
+                .collect();
+            let sched = TileScheduler::new(lanes);
+            let out = plan.forward_batch(&flat, batch, &sched).unwrap();
+            assert_eq!(out.logits.len(), batch * plan.num_classes());
+            for b in 0..batch {
+                let image = &flat
+                    [b * plan.input_elems()..(b + 1) * plan.input_elems()];
+                let single =
+                    plan.forward(image, DEFAULT_TILE_PATCHES, sched);
+                assert_eq!(
+                    &out.logits[b * plan.num_classes()
+                        ..(b + 1) * plan.num_classes()],
+                    &single[..],
+                    "batch row {b} diverged from per-image forward"
+                );
+                assert_eq!(single, plan.reference_logits(image));
+            }
+        });
+    }
+
+    #[test]
+    fn lane_counts_bit_identical_logits_and_ledgers() {
+        // Satellite acceptance (b): lanes {1, 2, 8} produce
+        // bit-identical logits and identical merged ledger totals.
+        let p = plan();
+        let batch = 6;
+        let flat: Vec<f32> = (0..batch)
+            .flat_map(|b| img(p.input_elems(), b))
+            .collect();
+        let base = p
+            .forward_batch(&flat, batch, &TileScheduler::new(1))
+            .unwrap();
+        assert!(base.ledger.logic_ops > 0, "batch must charge row ops");
+        for lanes in [2usize, 8] {
+            let out = p
+                .forward_batch(&flat, batch, &TileScheduler::new(lanes))
+                .unwrap();
+            assert_eq!(out.logits, base.logits, "lanes={lanes} diverged");
+            assert_eq!(
+                out.ledger, base.ledger,
+                "lanes={lanes} ledger diverged"
+            );
+        }
+    }
+
+    #[test]
+    fn forward_batch_rejects_bad_geometry() {
+        let p = plan();
+        assert!(p
+            .forward_batch(&[0.0; 3], 1, &TileScheduler::new(1))
+            .is_err());
+        assert!(p
+            .forward_batch(&[], 0, &TileScheduler::new(1))
+            .is_err());
+    }
+
+    #[test]
+    fn ledger_totals_invariant_under_tiling() {
+        // and_tile_ledger is linear in rows: any tile split of a layer
+        // charges exactly the whole-layer totals.
+        let p = plan();
+        let lw = p.layer_plan(0).unwrap();
+        let mut split = OpLedger::default();
+        split.merge(&and_tile_ledger(lw, 10));
+        split.merge(&and_tile_ledger(lw, 54));
+        assert_eq!(split, and_tile_ledger(lw, 64));
+    }
+}

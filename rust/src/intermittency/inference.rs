@@ -1,5 +1,5 @@
 //! Intermittent execution of REAL PIM inference (the tentpole of the
-//! Fig. 7 reproduction): a [`PimSimBackend`] forward pass runs as
+//! Fig. 7 reproduction): a compiled [`ModelPlan`] forward pass runs as
 //! resumable tiles under a [`PowerTrace`], checkpointing its in-flight
 //! partial sums into an NV state store and restoring bit-identically
 //! after every power failure.
@@ -12,12 +12,21 @@
 //! MTJ writes are charged through the [`crate::accel`]/[`crate::energy`]
 //! ledger (`nv_checkpoint` component) and tile re-execution through the
 //! sub-array [`OpLedger`].
+//!
+//! This driver is a thin consumer of [`crate::engine`]: execution
+//! advances in **waves** of up to [`InferencePlan::lanes`] tiles
+//! ([`ResumableForward::step_wave`]) — the sub-arrays of one wave
+//! compute concurrently, so a wave consumes one tile's worth of
+//! on-cycles regardless of its width. With `lanes == 1` the behaviour
+//! is exactly the serial tile-at-a-time execution.
 
 use crate::accel::charge_nv_checkpoint;
-use crate::coordinator::{PimSimBackend, ResumableForward};
-use crate::coordinator::SNAPSHOT_HEADER_WORDS;
+use crate::arch::ChipOrg;
 use crate::device::SotCosts;
 use crate::energy::CostBreakdown;
+use crate::engine::{
+    ModelPlan, ResumableForward, TileScheduler, SNAPSHOT_HEADER_WORDS,
+};
 use crate::nvfa::NvStateStore;
 use crate::subarray::OpLedger;
 
@@ -30,8 +39,12 @@ pub struct InferencePlan {
     pub tile_patches: usize,
     /// Checkpoint every N completed tiles.
     pub checkpoint_period: u64,
-    /// Array cycles one tile consumes against the power trace.
+    /// Array cycles one tile (= one wave; parallel lanes share the
+    /// same cycles) consumes against the power trace.
     pub cycles_per_tile: u64,
+    /// Virtual sub-array lanes tiles execute across (clamped to the
+    /// chip's concurrent sub-arrays; 1 = serial).
+    pub lanes: usize,
     /// CMOS-only baseline: no NV checkpoints, every failure restarts
     /// the inference from the input image.
     pub volatile_only: bool,
@@ -43,6 +56,7 @@ impl Default for InferencePlan {
             tile_patches: 16,
             checkpoint_period: 4,
             cycles_per_tile: 10,
+            lanes: 1,
             volatile_only: false,
         }
     }
@@ -119,23 +133,27 @@ fn commit_checkpoint(
     });
 }
 
-/// Execute `backend`'s forward pass over `image` under `trace`.
+/// Execute `plan`'s forward pass over `image` under `trace`.
 ///
 /// NV mode checkpoints the engine snapshot every
-/// `plan.checkpoint_period` tiles into an [`NvStateStore`] (charging
+/// `exec.checkpoint_period` tiles into an [`NvStateStore`] (charging
 /// header + fresh partial-sum words as MTJ writes) and resumes from it
 /// after each outage. Volatile mode models the CMOS-only baseline:
-/// every outage restarts from the image.
+/// every outage restarts from the image. Waves of `exec.lanes` tiles
+/// execute concurrently and consume `exec.cycles_per_tile` on-cycles
+/// per wave; logits and snapshots are bit-identical for any lane
+/// count.
 pub fn run_intermittent_inference(
-    backend: &PimSimBackend,
+    plan: &ModelPlan,
     image: &[f32],
     trace: &PowerTrace,
-    plan: &InferencePlan,
+    exec: &InferencePlan,
 ) -> IntermittentInferenceResult {
-    assert!(plan.checkpoint_period >= 1, "checkpoint period >= 1");
-    assert!(plan.cycles_per_tile >= 1, "cycles per tile >= 1");
+    assert!(exec.checkpoint_period >= 1, "checkpoint period >= 1");
+    assert!(exec.cycles_per_tile >= 1, "cycles per tile >= 1");
+    let sched = TileScheduler::for_chip(&ChipOrg::default(), exec.lanes);
     let mut store = NvStateStore::new();
-    let mut rf = backend.begin_forward(image, plan.tile_patches);
+    let mut rf = plan.begin_forward(image, exec.tile_patches, sched);
     let tiles_total = rf.total_tiles();
     let mut events = Vec::new();
     let mut ledger = OpLedger::default();
@@ -154,19 +172,19 @@ pub fn run_intermittent_inference(
 
     'outer: for (i, iv) in trace.intervals.iter().enumerate() {
         let mut budget = iv.on_cycles;
-        while budget >= plan.cycles_per_tile {
+        while budget >= exec.cycles_per_tile {
             if rf.is_done() {
                 finished = true;
                 break 'outer;
             }
-            budget -= plan.cycles_per_tile;
-            cycles += plan.cycles_per_tile;
-            rf.step_tile().expect("engine not done");
-            executed += 1;
-            tiles_in_state += 1;
-            tiles_since_ckpt += 1;
-            if !plan.volatile_only
-                && tiles_since_ckpt >= plan.checkpoint_period
+            budget -= exec.cycles_per_tile;
+            cycles += exec.cycles_per_tile;
+            let n = rf.step_wave().expect("engine not done");
+            executed += n;
+            tiles_in_state += n;
+            tiles_since_ckpt += n;
+            if !exec.volatile_only
+                && tiles_since_ckpt >= exec.checkpoint_period
             {
                 commit_checkpoint(
                     &rf,
@@ -188,14 +206,12 @@ pub fn run_intermittent_inference(
                 tiles_lost: tiles_since_ckpt,
             });
             ledger.merge(rf.ledger());
-            if !plan.volatile_only && store.has_checkpoint() {
+            if !exec.volatile_only && store.has_checkpoint() {
                 let words = store.restore().expect("checkpoint present");
-                rf = ResumableForward::resume(
-                    backend,
-                    plan.tile_patches,
-                    &words,
-                )
-                .expect("NV snapshot must restore");
+                // Snapshots are self-describing (tile size is in the
+                // header), so restore needs only the plan + lanes.
+                rf = ResumableForward::resume(plan, sched, &words)
+                    .expect("NV snapshot must restore");
                 reexecuted += tiles_since_ckpt;
                 tiles_in_state -= tiles_since_ckpt;
                 let pos = rf.position();
@@ -205,7 +221,7 @@ pub fn run_intermittent_inference(
                 });
             } else {
                 // CMOS-only (or nothing durable yet): cold restart.
-                rf = backend.begin_forward(image, plan.tile_patches);
+                rf = plan.begin_forward(image, exec.tile_patches, sched);
                 reexecuted += tiles_in_state;
                 tiles_in_state = 0;
                 committed = (usize::MAX, 0);
@@ -216,7 +232,7 @@ pub fn run_intermittent_inference(
     }
     ledger.merge(rf.ledger());
     if finished
-        && !plan.volatile_only
+        && !exec.volatile_only
         && (tiles_since_ckpt > 0 || !store.has_checkpoint())
     {
         // Final checkpoint makes the logits durable — unless the last
@@ -260,39 +276,38 @@ pub fn run_intermittent_inference(
 mod tests {
     use super::*;
     use crate::cnn;
-    use crate::coordinator::Backend;
     use crate::intermittency::PowerTrace;
 
-    fn backend() -> PimSimBackend {
-        PimSimBackend::new(cnn::micro_net(), 1, 4, 1, 0x1AB).unwrap()
+    fn plan() -> ModelPlan {
+        ModelPlan::compile(cnn::micro_net(), 1, 4, 0x1AB).unwrap()
     }
 
-    fn image(b: &PimSimBackend) -> Vec<f32> {
-        (0..b.input_elems())
+    fn image(p: &ModelPlan) -> Vec<f32> {
+        (0..p.input_elems())
             .map(|i| ((i * 7 + 3) % 23) as f32 / 22.0)
             .collect()
     }
 
     fn uninterrupted(
-        b: &PimSimBackend,
+        p: &ModelPlan,
         img: &[f32],
-        plan: &InferencePlan,
+        exec: &InferencePlan,
     ) -> IntermittentInferenceResult {
         let trace = PowerTrace::periodic(1_000_000, 0, 1);
-        run_intermittent_inference(b, img, &trace, plan)
+        run_intermittent_inference(p, img, &trace, exec)
     }
 
     #[test]
     fn uninterrupted_run_matches_serving_path() {
-        let b = backend();
-        let img = image(&b);
-        let plan = InferencePlan::default();
-        let r = uninterrupted(&b, &img, &plan);
+        let p = plan();
+        let img = image(&p);
+        let exec = InferencePlan::default();
+        let r = uninterrupted(&p, &img, &exec);
         assert!(r.finished);
         assert_eq!(r.failures, 0);
         assert_eq!(r.tiles_executed, r.tiles_total);
         assert_eq!(r.tiles_reexecuted, 0);
-        assert_eq!(r.logits, b.reference_logits(&img));
+        assert_eq!(r.logits, p.reference_logits(&img));
         assert!(inference_forward_progress(&r) == 1.0);
     }
 
@@ -301,15 +316,14 @@ mod tests {
         // micro_net at 16 patch rows/tile is 6 tiles; period 3 commits
         // at tiles 3 and 6 — the tile-6 commit already covers the
         // finished state, so no extra final checkpoint may be written.
-        let b = backend();
-        let img = image(&b);
-        let plan = InferencePlan {
+        let p = plan();
+        let img = image(&p);
+        let exec = InferencePlan {
             tile_patches: 16,
             checkpoint_period: 3,
-            cycles_per_tile: 10,
-            volatile_only: false,
+            ..InferencePlan::default()
         };
-        let r = uninterrupted(&b, &img, &plan);
+        let r = uninterrupted(&p, &img, &exec);
         assert!(r.finished);
         assert_eq!(r.checkpoints, 2, "final ckpt duplicated");
         let ckpt_events = r
@@ -322,18 +336,17 @@ mod tests {
 
     #[test]
     fn interrupted_logits_bit_identical() {
-        let b = backend();
-        let img = image(&b);
-        let plan = InferencePlan {
+        let p = plan();
+        let img = image(&p);
+        let exec = InferencePlan {
             tile_patches: 4,
             checkpoint_period: 2,
-            cycles_per_tile: 10,
-            volatile_only: false,
+            ..InferencePlan::default()
         };
-        let want = uninterrupted(&b, &img, &plan);
+        let want = uninterrupted(&p, &img, &exec);
         // 3 tiles of power per interval: many failures mid-layer.
         let trace = PowerTrace::periodic(30, 5, 100);
-        let r = run_intermittent_inference(&b, &img, &trace, &plan);
+        let r = run_intermittent_inference(&p, &img, &trace, &exec);
         assert!(r.finished);
         assert!(r.failures >= 3, "failures = {}", r.failures);
         assert_eq!(r.logits, want.logits, "bit-identity under failures");
@@ -344,41 +357,69 @@ mod tests {
     }
 
     #[test]
+    fn lanes_bit_identical_and_faster_in_cycles() {
+        // The sub-array parallelism story at inference granularity: a
+        // 4-lane run consumes fewer on-cycles (waves share cycles) and
+        // lands on exactly the serial logits, failures or not.
+        let p = plan();
+        let img = image(&p);
+        let serial = InferencePlan {
+            tile_patches: 2,
+            checkpoint_period: 2,
+            ..InferencePlan::default()
+        };
+        let wide = InferencePlan { lanes: 4, ..serial.clone() };
+        let clean = uninterrupted(&p, &img, &serial);
+        let clean_wide = uninterrupted(&p, &img, &wide);
+        assert!(clean_wide.finished);
+        assert_eq!(clean_wide.logits, clean.logits);
+        assert!(
+            clean_wide.cycles_spent < clean.cycles_spent,
+            "lanes must compress the cycle schedule: {} >= {}",
+            clean_wide.cycles_spent,
+            clean.cycles_spent
+        );
+        // Same trace, with failures: still bit-identical.
+        let trace = PowerTrace::periodic(40, 5, 200);
+        let rough = run_intermittent_inference(&p, &img, &trace, &wide);
+        assert!(rough.finished);
+        assert_eq!(rough.logits, clean.logits);
+    }
+
+    #[test]
     fn loss_bounded_by_checkpoint_period() {
-        let b = backend();
-        let img = image(&b);
-        let plan = InferencePlan {
+        let p = plan();
+        let img = image(&p);
+        let exec = InferencePlan {
             tile_patches: 2,
             checkpoint_period: 3,
-            cycles_per_tile: 10,
-            volatile_only: false,
+            ..InferencePlan::default()
         };
         let trace = PowerTrace::poisson(120.0, 20, 100_000, 99);
-        let r = run_intermittent_inference(&b, &img, &trace, &plan);
+        let r = run_intermittent_inference(&p, &img, &trace, &exec);
         assert!(
-            r.tiles_reexecuted <= r.failures * plan.checkpoint_period,
+            r.tiles_reexecuted <= r.failures * exec.checkpoint_period,
             "reexec {} > {} failures x period {}",
             r.tiles_reexecuted,
             r.failures,
-            plan.checkpoint_period
+            exec.checkpoint_period
         );
     }
 
     #[test]
     fn volatile_baseline_strictly_worse() {
-        let b = backend();
-        let img = image(&b);
+        let p = plan();
+        let img = image(&p);
         let nv_plan = InferencePlan {
             tile_patches: 4,
             checkpoint_period: 2,
-            cycles_per_tile: 10,
-            volatile_only: false,
+            ..InferencePlan::default()
         };
         let vol_plan =
             InferencePlan { volatile_only: true, ..nv_plan.clone() };
         let trace = PowerTrace::periodic(40, 5, 200);
-        let nv = run_intermittent_inference(&b, &img, &trace, &nv_plan);
-        let vol = run_intermittent_inference(&b, &img, &trace, &vol_plan);
+        let nv = run_intermittent_inference(&p, &img, &trace, &nv_plan);
+        let vol = run_intermittent_inference(&p, &img, &trace, &vol_plan);
         assert!(nv.finished);
         assert!(
             inference_forward_progress(&nv)
@@ -393,11 +434,11 @@ mod tests {
 
     #[test]
     fn trace_too_short_reports_unfinished() {
-        let b = backend();
-        let img = image(&b);
-        let plan = InferencePlan::default();
+        let p = plan();
+        let img = image(&p);
+        let exec = InferencePlan::default();
         let trace = PowerTrace::periodic(10, 5, 2);
-        let r = run_intermittent_inference(&b, &img, &trace, &plan);
+        let r = run_intermittent_inference(&p, &img, &trace, &exec);
         assert!(!r.finished);
         assert!(r.logits.is_empty());
         assert!(r.tiles_executed < r.tiles_total);
@@ -408,17 +449,16 @@ mod tests {
     fn ledger_charges_reexecution() {
         // The same trace with and without failures: the interrupted
         // run must charge strictly more tile-execution energy.
-        let b = backend();
-        let img = image(&b);
-        let plan = InferencePlan {
+        let p = plan();
+        let img = image(&p);
+        let exec = InferencePlan {
             tile_patches: 2,
             checkpoint_period: 2,
-            cycles_per_tile: 10,
-            volatile_only: false,
+            ..InferencePlan::default()
         };
-        let clean = uninterrupted(&b, &img, &plan);
+        let clean = uninterrupted(&p, &img, &exec);
         let trace = PowerTrace::periodic(50, 5, 100);
-        let rough = run_intermittent_inference(&b, &img, &trace, &plan);
+        let rough = run_intermittent_inference(&p, &img, &trace, &exec);
         assert!(rough.finished);
         let (e_clean, _) = clean.cost.component("tile_execution").unwrap();
         let (e_rough, _) = rough.cost.component("tile_execution").unwrap();

@@ -17,9 +17,11 @@
 //! * hardware sim: [`device`], [`subarray`], [`arch`], [`compressor`],
 //!   [`asr`], [`nvfa`], [`intermittency`], [`energy`]
 //! * system: [`cnn`], [`accel`], [`baselines`], [`dataset`]
+//! * engine: [`engine`] (compiled model plans, sub-array-parallel tile
+//!   execution, resumable forward passes — DESIGN.md §7)
 //! * serving: [`runtime`] (PJRT, gated behind the `pjrt` feature),
 //!   [`coordinator`] (ingress → per-worker batchers → executor pool,
-//!   incl. the PIM co-sim serving backend), [`metrics`]
+//!   incl. the PIM co-sim serving backend over `engine`), [`metrics`]
 
 pub mod benchlib;
 pub mod bitops;
@@ -40,6 +42,7 @@ pub mod coordinator;
 pub mod dataset;
 pub mod device;
 pub mod energy;
+pub mod engine;
 pub mod intermittency;
 pub mod metrics;
 pub mod nvfa;

@@ -25,6 +25,7 @@ use pims::coordinator::{
 };
 use pims::dataset::Dataset;
 use pims::device::{monte_carlo_sense, SotCell};
+use pims::engine::ModelPlan;
 use pims::intermittency::{
     forward_progress, inference_forward_progress, run_intermittent,
     run_intermittent_inference, FrameWorkload, InferencePlan, PowerTrace,
@@ -48,6 +49,7 @@ fn cli() -> Cli {
                 opt_default("wbits", "pimsim weight bits", "1"),
                 opt_default("abits", "pimsim activation bits", "4"),
                 opt_default("seed", "pimsim weight/dataset seed", "42"),
+                opt_default("lanes", "pimsim engine lanes per worker (virtual parallel sub-arrays)", "1"),
                 opt("chaos", "kill workers mid-batch on a trace schedule: poisson:<mean-on>:<off>[:<seed>] | periodic:<on>:<off>[:<count>] | bursty:<good>:<bad>:<off>[:<epochs>:<per-epoch>] (pimsim only)"),
                 opt_default("chaos-cycles", "trace cycles one batch consumes (chaos mode)", "1"),
                 opt_default("config", "optional config file", ""),
@@ -65,6 +67,7 @@ fn cli() -> Cli {
                 opt_default("tile-patches", "patch rows per resumable tile", "16"),
                 opt_default("ckpt", "checkpoint period (tiles)", "4"),
                 opt_default("cycles-per-tile", "trace cycles one tile consumes", "10"),
+                opt_default("lanes", "engine lanes (virtual parallel sub-arrays; one wave of lanes tiles shares the tile cycles)", "1"),
             ],
         )
         .command(
@@ -305,6 +308,9 @@ fn serve_pimsim(p: &pims::cli::Parsed, o: &ServeOpts) -> Result<()> {
     let w_bits = p.get_usize("wbits")?.unwrap_or(1) as u32;
     let a_bits = p.get_usize("abits")?.unwrap_or(4) as u32;
     let seed = p.get_usize("seed")?.unwrap_or(42) as u64;
+    // Clamp up front so the banner reports what actually runs.
+    let lanes = pims::arch::ChipOrg::default()
+        .engine_lanes(p.get_usize_at_least("lanes", 1)?);
     let model = cnn::svhn_net();
     let ds = pims::dataset::generate(
         256,
@@ -314,8 +320,8 @@ fn serve_pimsim(p: &pims::cli::Parsed, o: &ServeOpts) -> Result<()> {
     );
     println!(
         "serving PIM co-sim ({}), W{w_bits}:I{a_bits}, batch={}, \
-         workers={}, {} synthetic images",
-        model.name, o.batch, o.workers, ds.n
+         workers={}, {} engine lane(s)/worker, {} synthetic images",
+        model.name, o.batch, o.workers, lanes, ds.n
     );
     let batch = o.batch;
     let chaos = chaos_policy(p)?;
@@ -327,8 +333,10 @@ fn serve_pimsim(p: &pims::cli::Parsed, o: &ServeOpts) -> Result<()> {
         );
     }
     let factory = move |_worker: usize| {
-        // Same seed on every worker: bit-identical replicas.
+        // Same seed on every worker: bit-identical replicas (for any
+        // lane count — engine results are lane-invariant).
         PimSimBackend::new(model.clone(), w_bits, a_bits, batch, seed)
+            .map(|b| b.with_lanes(lanes))
     };
     let policy =
         BatchPolicy { max_wait: Duration::from_millis(o.wait_ms) };
@@ -425,37 +433,41 @@ fn cmd_infer(p: &pims::cli::Parsed) -> Result<()> {
     };
     let ds = pims::dataset::generate(1, model.input_hw, model.input_c, seed);
     let image = ds.image(0).to_vec();
-    let backend =
-        PimSimBackend::new(model, w_bits, a_bits, 1, seed)?;
+    let mplan = ModelPlan::compile(model, w_bits, a_bits, seed)?;
     let plan = InferencePlan {
         tile_patches: p.get_usize_at_least("tile-patches", 1)?,
         checkpoint_period: p.get_u64("ckpt")?.unwrap_or(4).max(1),
         cycles_per_tile: p.get_u64("cycles-per-tile")?.unwrap_or(10).max(1),
+        // Clamp up front so the banner reports what actually runs.
+        lanes: pims::arch::ChipOrg::default()
+            .engine_lanes(p.get_usize_at_least("lanes", 1)?),
         volatile_only: false,
     };
-    let tiles =
-        backend.begin_forward(&image, plan.tile_patches).total_tiles();
+    let tiles = mplan.total_tiles(plan.tile_patches);
     let work = tiles * plan.cycles_per_tile;
     println!(
         "model={} W{w_bits}:I{a_bits}, {tiles} tiles x {} cycles \
-         ({} patch rows/tile), ckpt every {} tiles",
-        backend.model_name(),
+         ({} patch rows/tile), {} lane(s), ckpt every {} tiles",
+        mplan.model_name(),
         plan.cycles_per_tile,
         plan.tile_patches,
+        plan.lanes,
         plan.checkpoint_period
     );
 
     // The failure-free oracle run.
     let clean_trace = PowerTrace::periodic(work.max(1) * 2, 0, 1);
     let clean =
-        run_intermittent_inference(&backend, &image, &clean_trace, &plan);
+        run_intermittent_inference(&mplan, &image, &clean_trace, &plan);
     anyhow::ensure!(clean.finished, "oracle run must finish");
 
     let spec = p.get("power-trace").unwrap_or("");
     if spec.is_empty() {
         println!(
-            "uninterrupted: {} tiles, ckpt energy {:.6} µJ, logits {:?}",
+            "uninterrupted: {} tiles in {} on-cycles, ckpt energy \
+             {:.6} µJ, logits {:?}",
             clean.tiles_executed,
+            clean.cycles_spent,
             clean.checkpoint_energy_uj,
             &clean.logits[..clean.logits.len().min(10)]
         );
@@ -463,9 +475,9 @@ fn cmd_infer(p: &pims::cli::Parsed) -> Result<()> {
         return Ok(());
     }
     let trace = TraceSpec::parse(spec)?.build(work.max(1) * 20);
-    let nv = run_intermittent_inference(&backend, &image, &trace, &plan);
+    let nv = run_intermittent_inference(&mplan, &image, &trace, &plan);
     let vol = run_intermittent_inference(
-        &backend,
+        &mplan,
         &image,
         &trace,
         &InferencePlan { volatile_only: true, ..plan.clone() },

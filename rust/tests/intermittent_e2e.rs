@@ -1,20 +1,26 @@
-//! End-to-end power-intermittency acceptance (ISSUE 2):
+//! End-to-end power-intermittency acceptance (ISSUE 2, extended by
+//! ISSUE 3 with threaded engine lanes):
 //!
 //! 1. Real PIM inference interrupted by ≥3 power failures produces
 //!    logits **bit-identical** to an uninterrupted run, reporting
 //!    checkpoint count/energy and re-executed tiles, while the
 //!    volatile-only baseline shows strictly worse forward progress on
 //!    the same trace.
-//! 2. A coordinator pool in chaos mode — workers killed mid-batch on a
-//!    trace schedule — resumes from NV state and answers every
-//!    admitted request with uncorrupted logits.
+//! 2. The same guarantee holds under sub-array-parallel execution:
+//!    checkpoints taken mid-run on a 4-lane engine restore
+//!    bit-identically (even onto a different lane count).
+//! 3. A coordinator pool in chaos mode — workers killed mid-batch on a
+//!    trace schedule, serial AND 4-lane backends — resumes from NV
+//!    state and answers every admitted request with uncorrupted
+//!    logits.
 
 use std::time::Duration;
 
 use pims::cnn;
 use pims::coordinator::{
-    Backend, BatchPolicy, ChaosPolicy, Coordinator, PimSimBackend,
+    BatchPolicy, ChaosPolicy, Coordinator, PimSimBackend,
 };
+use pims::engine::ModelPlan;
 use pims::intermittency::{
     inference_forward_progress, run_intermittent_inference,
     InferencePlan, PowerTrace, TraceSpec,
@@ -28,32 +34,31 @@ fn image(elems: usize, phase: usize) -> Vec<f32> {
 
 #[test]
 fn inference_survives_three_plus_failures_bit_identically() {
-    let backend =
-        PimSimBackend::new(cnn::micro_net(), 1, 4, 1, 0xE2E).unwrap();
-    let img = image(backend.input_elems(), 1);
+    let mplan =
+        ModelPlan::compile(cnn::micro_net(), 1, 4, 0xE2E).unwrap();
+    let img = image(mplan.input_elems(), 1);
     let plan = InferencePlan {
         tile_patches: 4,
         checkpoint_period: 2,
-        cycles_per_tile: 10,
-        volatile_only: false,
+        ..InferencePlan::default()
     };
 
     // Failure-free oracle.
     let clean_trace = PowerTrace::periodic(1_000_000, 0, 1);
     let clean =
-        run_intermittent_inference(&backend, &img, &clean_trace, &plan);
+        run_intermittent_inference(&mplan, &img, &clean_trace, &plan);
     assert!(clean.finished);
     assert_eq!(clean.failures, 0);
     assert_eq!(
         clean.logits,
-        backend.reference_logits(&img),
+        mplan.reference_logits(&img),
         "tiled path must match the dense oracle"
     );
 
     // 3 tiles of power per interval: the run crosses many outages,
     // several of them mid-layer.
     let trace = PowerTrace::periodic(30, 5, 200);
-    let nv = run_intermittent_inference(&backend, &img, &trace, &plan);
+    let nv = run_intermittent_inference(&mplan, &img, &trace, &plan);
     assert!(nv.finished, "NV run must finish within the trace");
     assert!(nv.failures >= 3, "only {} failures", nv.failures);
     assert_eq!(
@@ -78,7 +83,7 @@ fn inference_survives_three_plus_failures_bit_identically() {
     // The CMOS-only baseline on the SAME trace: strictly worse forward
     // progress (it restarts the whole inference on every failure).
     let vol_plan = InferencePlan { volatile_only: true, ..plan };
-    let vol = run_intermittent_inference(&backend, &img, &trace, &vol_plan);
+    let vol = run_intermittent_inference(&mplan, &img, &trace, &vol_plan);
     assert!(
         inference_forward_progress(&nv) > inference_forward_progress(&vol),
         "volatile must be strictly worse: nv {} vs vol {}",
@@ -90,13 +95,50 @@ fn inference_survives_three_plus_failures_bit_identically() {
 }
 
 #[test]
-fn chaos_pool_resumes_from_nv_without_dropping_requests() {
+fn threaded_lanes_survive_failures_bit_identically() {
+    // ISSUE 3 satellite: checkpoints taken under threaded (4-lane)
+    // execution restore bit-identically — including when the restore
+    // happens on a different lane count, modeling power-up onto a
+    // differently provisioned chip.
+    let mplan =
+        ModelPlan::compile(cnn::micro_net(), 1, 4, 0xE2E).unwrap();
+    let img = image(mplan.input_elems(), 3);
+    let serial = InferencePlan {
+        tile_patches: 2,
+        checkpoint_period: 3,
+        ..InferencePlan::default()
+    };
+    let clean_trace = PowerTrace::periodic(1_000_000, 0, 1);
+    let clean =
+        run_intermittent_inference(&mplan, &img, &clean_trace, &serial);
+    assert!(clean.finished);
+
+    // Waves of power small enough that failures land mid-layer while
+    // 4 lanes execute concurrently.
+    let trace = PowerTrace::periodic(40, 5, 400);
+    for lanes in [2usize, 4, 8] {
+        let wide = InferencePlan { lanes, ..serial.clone() };
+        let r = run_intermittent_inference(&mplan, &img, &trace, &wide);
+        assert!(r.finished, "lanes={lanes} must finish");
+        assert!(r.failures >= 1, "lanes={lanes} saw no failures");
+        assert!(r.checkpoints > 0 && r.restores > 0);
+        assert_eq!(
+            r.logits, clean.logits,
+            "lanes={lanes}: threaded checkpoints must restore \
+             bit-identically ({} failures)",
+            r.failures
+        );
+    }
+}
+
+fn chaos_roundtrip(lanes: usize) {
     let seed = 0xC4A0;
     let chaos =
         ChaosPolicy::new(TraceSpec::parse("periodic:2:1:64").unwrap());
     let c = Coordinator::start_pool_with_chaos(
         move |_worker| {
             PimSimBackend::new(cnn::micro_net(), 1, 4, 2, seed)
+                .map(|b| b.with_lanes(lanes))
         },
         2,
         BatchPolicy { max_wait: Duration::from_millis(1) },
@@ -121,7 +163,7 @@ fn chaos_pool_resumes_from_nv_without_dropping_requests() {
         assert_eq!(
             r.logits,
             reference.reference_logits(img),
-            "post-kill replies must be uncorrupted"
+            "post-kill replies must be uncorrupted (lanes={lanes})"
         );
     }
 
@@ -133,4 +175,18 @@ fn chaos_pool_resumes_from_nv_without_dropping_requests() {
         m.per_worker
     );
     assert_eq!(m.queue_depth, 0);
+}
+
+#[test]
+fn chaos_pool_resumes_from_nv_without_dropping_requests() {
+    chaos_roundtrip(1);
+}
+
+#[test]
+fn chaos_pool_with_threaded_lanes_resumes_bit_identically() {
+    // ISSUE 3 satellite: `serve --lanes 4` under chaos — workers are
+    // killed mid-batch while their engines execute across a 4-lane
+    // thread pool, and NV restore still yields the serial reference
+    // bytes for every admitted request.
+    chaos_roundtrip(4);
 }

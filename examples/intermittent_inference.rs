@@ -10,8 +10,9 @@
 //! cargo run --release --example intermittent_inference
 //! ```
 
+use pims::arch::{ChipOrg, HTree};
 use pims::cnn;
-use pims::engine::ModelPlan;
+use pims::engine::{LaneSchedule, ModelPlan};
 use pims::intermittency::{
     inference_forward_progress, run_intermittent_inference,
     InferencePlan, PowerTrace,
@@ -85,17 +86,30 @@ fn main() {
         );
     }
 
-    println!("\n== sweep: engine lanes (sub-array parallelism; same trace) ==");
-    println!("| lanes | on-cycles to finish | failures | bit-identical |");
-    println!("|---|---|---|---|");
+    println!("\n== sweep: lane schedule (sub-array parallelism; same trace) ==");
+    println!(
+        "| schedule | on-cycles to finish | failures | merge bit-levels \
+         | bit-identical |"
+    );
+    println!("|---|---|---|---|---|");
     let trace = PowerTrace::periodic(50, 10, 400);
-    for lanes in [1usize, 2, 4, 8] {
-        let p = InferencePlan { lanes, ..plan.clone() };
+    let mut schedules: Vec<LaneSchedule> = [1usize, 2, 4, 8]
+        .iter()
+        .map(|&l| LaneSchedule::uniform(l))
+        .collect();
+    schedules.push(LaneSchedule::auto(
+        &mplan,
+        &ChipOrg::default(),
+        &HTree::default(),
+    ));
+    for sched in schedules {
+        let p = InferencePlan { lanes: sched.clone(), ..plan.clone() };
         let r = run_intermittent_inference(&mplan, &image, &trace, &p);
         println!(
-            "| {lanes} | {} | {} | {} |",
+            "| {sched} | {} | {} | {} | {} |",
             r.cycles_spent,
             r.failures,
+            r.merge_traffic.bit_levels,
             r.finished && r.logits == clean.logits,
         );
     }

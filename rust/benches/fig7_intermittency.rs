@@ -7,7 +7,7 @@
 
 use pims::benchlib::{black_box, Bench};
 use pims::cnn;
-use pims::engine::ModelPlan;
+use pims::engine::{LaneSchedule, ModelPlan};
 use pims::intermittency::{
     forward_progress, inference_forward_progress, run_intermittent,
     run_intermittent_inference, Event, FrameWorkload, InferencePlan,
@@ -175,7 +175,7 @@ fn main() {
         let plan = InferencePlan {
             tile_patches: 256,
             checkpoint_period: 4,
-            lanes: 4,
+            lanes: LaneSchedule::uniform(4),
             ..InferencePlan::default()
         };
         let tiles = svhn.total_tiles(plan.tile_patches);

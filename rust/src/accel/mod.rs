@@ -25,11 +25,12 @@
 //! designs execute them as 8:8-bit bitwise layers (fixed-point first/
 //! last layer, standard BCNN-accelerator practice; DESIGN.md §2).
 
-use crate::arch::{ChipOrg, HTree};
+use crate::arch::{ChipOrg, HTree, LaneTraffic};
 use crate::cnn::{Layer, Model};
 use crate::compressor;
 use crate::device::SotCosts;
-use crate::energy::{fom, tech45, AreaModel, CostBreakdown};
+use crate::energy::{components, fom, tech45, AreaModel, CostBreakdown};
+use crate::subarray::PARTIAL_SUM_BITS;
 
 /// Effective bit-widths for a quantized layer (capped at 8 for the
 /// bit-plane mapping).
@@ -68,8 +69,25 @@ pub fn epu_fp_layer_cost(
 /// pipeline the way the NV-FA shadow writes do.
 pub fn charge_nv_checkpoint(cost: &mut CostBreakdown, bits: u64) {
     cost.add_energy_only(
-        "nv_checkpoint",
+        components::NV_CHECKPOINT,
         bits as f64 * tech45::NV_WRITE_PJ,
+    );
+}
+
+/// Charge the engine lane schedule's H-tree traffic into the ledger —
+/// the interconnect cost of sub-array-parallel execution (operand
+/// broadcast out to the lanes, partial-sum merge back to the anchor).
+/// Serial schedules move nothing and charge a zero component, so
+/// Fig. 9/10-style tables always show the line.
+pub fn charge_inter_lane_merge(
+    cost: &mut CostBreakdown,
+    traffic: &LaneTraffic,
+    htree: &HTree,
+) {
+    cost.add(
+        components::INTER_LANE_MERGE,
+        traffic.energy_pj(htree),
+        traffic.latency_ns(htree),
     );
 }
 
@@ -263,9 +281,10 @@ impl Proposed {
             / ops.streams as f64;
         cost.add("operand_write", wr_e, wr_cycles * self.cycle_ns);
 
-        // --- H-tree: partial counts (16-bit) funneled to the EPU, and
-        // the input feature map entering from the chip port.
-        let (cnt_e, _) = self.htree.io_transfer(ops.partials * 16);
+        // --- H-tree: partial counts funneled to the EPU, and the
+        // input feature map entering from the chip port.
+        let (cnt_e, _) =
+            self.htree.io_transfer(ops.partials * PARTIAL_SUM_BITS);
         let (in_e, in_l) =
             self.htree.io_transfer((batch * p * k) as u64);
         cost.add("htree", cnt_e + in_e, in_l);
@@ -457,6 +476,27 @@ mod tests {
         let (e, l) = c.component("nv_checkpoint").unwrap();
         assert!((e - 1024.0 * tech45::NV_WRITE_PJ).abs() < 1e-9);
         assert_eq!(l, 0.0, "checkpoints overlap the array pipeline");
+    }
+
+    #[test]
+    fn inter_lane_merge_charge_follows_traffic() {
+        let org = ChipOrg::default();
+        let h = HTree::default();
+        let mut t = LaneTraffic::default();
+        t.charge(org.lane_addr(0), org.lane_addr(1), 1000);
+        let mut c = CostBreakdown::new();
+        charge_inter_lane_merge(&mut c, &t, &h);
+        let (e, l) =
+            c.component(components::INTER_LANE_MERGE).unwrap();
+        assert!((e - 1000.0 * h.energy_pj_per_bit_level).abs() < 1e-9);
+        assert!((l - h.latency_ns_per_level).abs() < 1e-9);
+        // Serial schedules charge a zero (but present) component.
+        let mut c0 = CostBreakdown::new();
+        charge_inter_lane_merge(&mut c0, &LaneTraffic::default(), &h);
+        assert_eq!(
+            c0.component(components::INTER_LANE_MERGE),
+            Some((0.0, 0.0))
+        );
     }
 
     #[test]

@@ -68,6 +68,14 @@ impl ChipOrg {
         requested.clamp(1, self.parallel_subarrays())
     }
 
+    /// Placement of one virtual engine lane: lanes occupy sub-arrays
+    /// in flat index order (lane 0 is the staging/merge anchor), so
+    /// low lane counts stay within a mat/bank and only wide schedules
+    /// reach across groups.
+    pub fn lane_addr(&self, lane: usize) -> SubArrayAddr {
+        self.locate(lane % self.subarrays_total())
+    }
+
     /// Decompose a flat sub-array index into (group, bank, mat, sub).
     pub fn locate(&self, idx: usize) -> SubArrayAddr {
         assert!(idx < self.subarrays_total());
@@ -128,6 +136,59 @@ pub fn tree_levels(a: SubArrayAddr, b: SubArrayAddr) -> u32 {
         1
     } else {
         0
+    }
+}
+
+/// Accumulated inter-lane H-tree traffic: bits moved between
+/// sub-arrays, weighted by the tree levels each transfer crosses.
+/// This is the interconnect side of the lane model — engine lanes
+/// placed on distinct mats/banks/groups pay for broadcasting operand
+/// rows out and funneling partial sums back ([`HTree::transfer`]),
+/// while same-mat lanes move bits for free. Counts are exact integers,
+/// so totals are bit-identical across runs; energy/latency conversion
+/// happens once at the end via an [`HTree`] cost table.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LaneTraffic {
+    /// Total bits moved between sub-arrays.
+    pub bits: u64,
+    /// Sum over transfers of `bits x tree levels` (energy-weighted).
+    pub bit_levels: u64,
+    /// Sum over transfers of the tree levels crossed (latency-weighted;
+    /// the H-tree is pipelined per transfer, not per bit).
+    pub hops: u64,
+}
+
+impl LaneTraffic {
+    /// Charge one transfer of `bits` from `a` to `b` (free within a
+    /// mat, like [`HTree::transfer`]).
+    pub fn charge(&mut self, a: SubArrayAddr, b: SubArrayAddr, bits: u64) {
+        let lv = tree_levels(a, b) as u64;
+        if lv == 0 || bits == 0 {
+            return;
+        }
+        self.bits += bits;
+        self.bit_levels += bits * lv;
+        self.hops += lv;
+    }
+
+    pub fn merge(&mut self, other: &LaneTraffic) {
+        self.bits += other.bits;
+        self.bit_levels += other.bit_levels;
+        self.hops += other.hops;
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.bits == 0 && self.bit_levels == 0 && self.hops == 0
+    }
+
+    /// Wire energy [pJ] under an H-tree cost table.
+    pub fn energy_pj(&self, h: &HTree) -> f64 {
+        self.bit_levels as f64 * h.energy_pj_per_bit_level
+    }
+
+    /// Serial transfer latency [ns] under an H-tree cost table.
+    pub fn latency_ns(&self, h: &HTree) -> f64 {
+        self.hops as f64 * h.latency_ns_per_level
     }
 }
 
@@ -211,6 +272,49 @@ mod tests {
         assert!(l1 > 0.0);
         let (e0, l0) = h.transfer(a, a, 512);
         assert_eq!((e0, l0), (0.0, 0.0));
+    }
+
+    #[test]
+    fn lane_traffic_accumulates_exact_integers() {
+        let org = ChipOrg::default();
+        let h = HTree::default();
+        let mut t = LaneTraffic::default();
+        assert!(t.is_zero());
+        let a0 = org.lane_addr(0);
+        // Same mat: free.
+        t.charge(a0, a0, 512);
+        assert!(t.is_zero());
+        // Lane 1 sits one mat over (1 level), lane 4 one bank over
+        // (2 levels) under the default organization.
+        t.charge(a0, org.lane_addr(1), 100);
+        t.charge(org.lane_addr(4), a0, 10);
+        assert_eq!(t.bits, 110);
+        assert_eq!(t.bit_levels, 100 + 20);
+        assert_eq!(t.hops, 3);
+        let mut u = LaneTraffic::default();
+        u.merge(&t);
+        u.merge(&t);
+        assert_eq!(u.bit_levels, 240);
+        assert!(
+            (t.energy_pj(&h) - 120.0 * h.energy_pj_per_bit_level).abs()
+                < 1e-12
+        );
+        assert!(
+            (t.latency_ns(&h) - 3.0 * h.latency_ns_per_level).abs()
+                < 1e-12
+        );
+    }
+
+    #[test]
+    fn lane_addresses_follow_flat_order() {
+        let org = ChipOrg::default();
+        assert_eq!(org.lane_addr(0), org.locate(0));
+        assert_eq!(org.lane_addr(3), org.locate(3));
+        // Wraps past the physical sub-array count.
+        assert_eq!(
+            org.lane_addr(org.subarrays_total() + 2),
+            org.locate(2)
+        );
     }
 
     #[test]

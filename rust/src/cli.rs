@@ -71,6 +71,38 @@ impl Parsed {
     pub fn has(&self, name: &str) -> bool {
         self.flags.contains_key(name)
     }
+
+    /// Shared parser for `--lanes`-style options: the literal `auto`
+    /// (per-layer H-tree tuning), or a fixed count >= 1 clamped to
+    /// the chip's concurrently computing sub-arrays. This is the one
+    /// place the `ChipOrg::engine_lanes` clamp is applied for the
+    /// CLI, so every subcommand's banner reports what actually runs.
+    pub fn get_lanes(&self, name: &str) -> anyhow::Result<LaneArg> {
+        match self.flags.get(name).map(|s| s.as_str()) {
+            None => Ok(LaneArg::Fixed(1)),
+            Some("auto") => Ok(LaneArg::Auto),
+            Some(v) => {
+                let n: usize = v.parse().map_err(|_| {
+                    anyhow::anyhow!(
+                        "--{name}: expected integer or 'auto', got '{v}'"
+                    )
+                })?;
+                anyhow::ensure!(n >= 1, "--{name}: must be >= 1, got {n}");
+                Ok(LaneArg::Fixed(
+                    crate::arch::ChipOrg::default().engine_lanes(n),
+                ))
+            }
+        }
+    }
+}
+
+/// Value of a `--lanes`-style option.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LaneArg {
+    /// Tune one lane count per layer against the H-tree cost model.
+    Auto,
+    /// A fixed count for every layer, already chip-clamped.
+    Fixed(usize),
 }
 
 /// CLI definition + parser.
@@ -313,6 +345,39 @@ mod tests {
             .unwrap();
         assert_eq!(p.get_u64("batch").unwrap(), Some(10_000_000_000));
         assert_eq!(p.get_u64("artifacts").unwrap(), None);
+    }
+
+    #[test]
+    fn lanes_parse_auto_fixed_and_clamp() {
+        let cli = Cli::new("pims", "test").command(
+            "serve",
+            "run",
+            vec![opt_default("lanes", "engine lanes", "1")],
+        );
+        let p = cli.parse(&argv(&["serve"])).unwrap();
+        assert_eq!(p.get_lanes("lanes").unwrap(), LaneArg::Fixed(1));
+        let p = cli.parse(&argv(&["serve", "--lanes", "auto"])).unwrap();
+        assert_eq!(p.get_lanes("lanes").unwrap(), LaneArg::Auto);
+        let p = cli.parse(&argv(&["serve", "--lanes", "4"])).unwrap();
+        assert_eq!(p.get_lanes("lanes").unwrap(), LaneArg::Fixed(4));
+        // Clamped to the chip's parallel sub-arrays.
+        let big = format!("{}", usize::MAX);
+        let args: Vec<String> =
+            vec!["serve".into(), "--lanes".into(), big];
+        let p = cli.parse(&args).unwrap();
+        assert_eq!(
+            p.get_lanes("lanes").unwrap(),
+            LaneArg::Fixed(
+                crate::arch::ChipOrg::default().parallel_subarrays()
+            )
+        );
+        // Rejections: zero and junk.
+        let p = cli.parse(&argv(&["serve", "--lanes", "0"])).unwrap();
+        assert!(p.get_lanes("lanes").is_err());
+        let p = cli.parse(&argv(&["serve", "--lanes", "many"])).unwrap();
+        assert!(p.get_lanes("lanes").is_err());
+        // An undeclared option falls back to serial.
+        assert_eq!(p.get_lanes("nope").unwrap(), LaneArg::Fixed(1));
     }
 
     #[test]

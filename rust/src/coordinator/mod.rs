@@ -18,6 +18,12 @@
 //! handshake), `metrics_agg` (per-worker counters merged into one
 //! [`ServeMetrics`]), `pimsim` (the PIM co-simulation backend).
 //!
+//! Engine parallelism is NOT owned here: a PIM backend's lane jobs
+//! run on the process-wide persistent [`crate::engine::LaneRuntime`],
+//! so `--workers W --lanes L` draws from one fixed thread budget
+//! (asserted by `tests/coordinator_e2e.rs`) instead of spawning up to
+//! W x L scoped threads per batch as before.
+//!
 //! The backend is abstracted behind [`Backend`] so unit tests and the
 //! PIM co-simulation run the identical coordinator against a mock,
 //! and the E2E driver plugs in [`crate::runtime::Executable`].

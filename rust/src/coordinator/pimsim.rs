@@ -5,10 +5,15 @@
 //!
 //! All GEMM / im2col / bit-plane work lives in `engine::` — this
 //! module only adapts a compiled [`ModelPlan`] to the [`Backend`]
-//! trait: batch geometry checks, the accelerator-model energy ledger,
-//! served-frame counters with their NV shadow (chaos-mode hooks), and
-//! the lane knob ([`PimSimBackend::with_lanes`]) that maps serving
-//! parallelism onto virtual sub-array lanes.
+//! trait: batch geometry checks, the accelerator-model energy ledger
+//! (including the `inter_lane_merge` H-tree component of the lane
+//! schedule), served-frame counters with their NV shadow (chaos-mode
+//! hooks), and the lane knobs ([`PimSimBackend::with_lanes`] /
+//! [`PimSimBackend::with_lane_schedule`] /
+//! [`PimSimBackend::with_auto_lanes`]) that map serving parallelism
+//! onto virtual sub-array lanes. Execution draws worker threads from
+//! the shared [`crate::engine::LaneRuntime`] budget — a pool of
+//! coordinator workers never owns engine threads of its own.
 //!
 //! The engine's independent oracle path
 //! ([`PimSimBackend::reference_logits`], dense integer dots) is
@@ -20,9 +25,11 @@
 use anyhow::Result;
 
 use crate::accel::{Accelerator, Proposed};
-use crate::arch::ChipOrg;
+use crate::arch::{ChipOrg, HTree};
 use crate::cnn::Model;
-use crate::engine::{ModelPlan, ResumableForward, TileScheduler};
+use crate::engine::{
+    LaneSchedule, ModelPlan, ResumableForward, TileScheduler,
+};
 
 use super::Backend;
 
@@ -32,6 +39,10 @@ pub struct PimSimBackend {
     sched: TileScheduler,
     batch: usize,
     energy_uj_per_frame: f64,
+    /// H-tree energy of the lane schedule's image-to-lane funnel,
+    /// amortized per frame (0 when serial) — the `inter_lane_merge`
+    /// share of each served request.
+    merge_uj_per_frame: f64,
     frames_served: u64,
     /// NV shadow of `frames_served`, committed per delivered batch;
     /// a chaos-mode power failure rolls the volatile counter back here.
@@ -60,22 +71,61 @@ impl PimSimBackend {
             sched: TileScheduler::default(),
             batch,
             energy_uj_per_frame,
+            merge_uj_per_frame: 0.0,
             frames_served: 0,
             nv_frames_served: 0,
         })
     }
 
-    /// Execute over `lanes` virtual sub-array lanes (clamped to the
-    /// chip's concurrently computing sub-arrays). Logits are
-    /// bit-identical for any lane count.
-    pub fn with_lanes(mut self, lanes: usize) -> Self {
-        self.sched = TileScheduler::for_chip(&ChipOrg::default(), lanes);
+    /// Execute over `lanes` virtual sub-array lanes on every layer
+    /// (clamped to the chip's concurrently computing sub-arrays).
+    /// Logits are bit-identical for any lane count.
+    pub fn with_lanes(self, lanes: usize) -> Self {
+        self.with_lane_schedule(LaneSchedule::uniform(lanes))
+    }
+
+    /// Execute a (possibly per-layer) lane schedule. Logits are
+    /// bit-identical for any schedule; the schedule's H-tree traffic
+    /// is charged into each request's energy.
+    pub fn with_lane_schedule(mut self, sched: LaneSchedule) -> Self {
+        self.sched =
+            TileScheduler::from_schedule(sched, &ChipOrg::default());
+        // The same traffic accounting forward_batch charges per call,
+        // amortized per frame (batches are padded to full, so every
+        // executed batch maps images identically).
+        self.merge_uj_per_frame = self
+            .sched
+            .batch_traffic(&self.plan, self.batch)
+            .energy_pj(&HTree::default())
+            * 1e-6
+            / self.batch as f64;
         self
     }
 
-    /// Engine lanes this backend executes with.
+    /// Auto-tune the lane schedule against this backend's compiled
+    /// plan and the H-tree cost model (`--lanes auto`).
+    pub fn with_auto_lanes(self) -> Self {
+        let sched = LaneSchedule::auto(
+            self.plan(),
+            &ChipOrg::default(),
+            &HTree::default(),
+        );
+        self.with_lane_schedule(sched)
+    }
+
+    /// Widest engine lane count this backend executes with.
     pub fn lanes(&self) -> usize {
         self.sched.lanes()
+    }
+
+    /// The lane schedule this backend executes.
+    pub fn lane_schedule(&self) -> &LaneSchedule {
+        self.sched.schedule()
+    }
+
+    /// H-tree merge energy per served frame [µJ] (0 when serial).
+    pub fn merge_uj_per_frame(&self) -> f64 {
+        self.merge_uj_per_frame
     }
 
     /// The compiled execution plan (shared with the intermittency
@@ -88,14 +138,18 @@ impl PimSimBackend {
         self.plan.model_name()
     }
 
-    /// Accelerator-model energy for one frame [µJ].
+    /// Accelerator-model energy for one frame [µJ] (datapath only;
+    /// [`Backend::energy_uj_per_request`] adds the lane schedule's
+    /// inter-lane merge share).
     pub fn energy_uj_per_frame(&self) -> f64 {
         self.energy_uj_per_frame
     }
 
-    /// Cumulative energy of every frame served so far [µJ].
+    /// Cumulative energy of every frame served so far [µJ],
+    /// including the inter-lane merge share.
     pub fn total_energy_uj(&self) -> f64 {
-        self.frames_served as f64 * self.energy_uj_per_frame
+        self.frames_served as f64
+            * (self.energy_uj_per_frame + self.merge_uj_per_frame)
     }
 
     /// The oracle path: identical layers and f32 post-processing, but
@@ -112,7 +166,7 @@ impl PimSimBackend {
         image: &[f32],
         tile_patches: usize,
     ) -> ResumableForward<'_> {
-        self.plan.begin_forward(image, tile_patches, self.sched)
+        self.plan.begin_forward(image, tile_patches, &self.sched)
     }
 }
 
@@ -137,7 +191,7 @@ impl Backend for PimSimBackend {
     }
 
     fn energy_uj_per_request(&self) -> f64 {
-        self.energy_uj_per_frame
+        self.energy_uj_per_frame + self.merge_uj_per_frame
     }
 
     fn power_fail_restore(&mut self) {
@@ -247,6 +301,60 @@ mod tests {
             crate::arch::ChipOrg::default().parallel_subarrays()
         );
         assert_eq!(backend().with_lanes(0).lanes(), 1);
+    }
+
+    #[test]
+    fn auto_schedule_serves_bit_identically_with_merge_energy() {
+        let mut serial = backend();
+        let mut auto = PimSimBackend::new(
+            cnn::micro_net(),
+            1,
+            4,
+            2,
+            0xBEEF,
+        )
+        .unwrap()
+        .with_auto_lanes();
+        assert!(
+            format!("{}", auto.lane_schedule()).starts_with("auto["),
+            "auto must install a per-layer schedule"
+        );
+        let flat: Vec<f32> = img(serial.input_elems(), 2)
+            .into_iter()
+            .chain(img(serial.input_elems(), 9))
+            .collect();
+        assert_eq!(
+            serial.infer_batch(&flat).unwrap(),
+            auto.infer_batch(&flat).unwrap(),
+            "auto-tuned serving must answer the serial bytes"
+        );
+        // Schedule-dependent energy: deterministic, zero when serial.
+        assert_eq!(serial.merge_uj_per_frame(), 0.0);
+        let again = PimSimBackend::new(cnn::micro_net(), 1, 4, 2, 0xBEEF)
+            .unwrap()
+            .with_auto_lanes();
+        assert_eq!(
+            auto.merge_uj_per_frame(),
+            again.merge_uj_per_frame(),
+            "merge energy must be bit-identical across builds"
+        );
+        assert!(
+            auto.energy_uj_per_request()
+                >= auto.energy_uj_per_frame(),
+            "request energy includes the merge share"
+        );
+    }
+
+    #[test]
+    fn wide_lanes_charge_the_image_funnel() {
+        let b = backend().with_lanes(4);
+        // batch 2 across >1 whole-image lanes: image 1 sits off the
+        // anchor mat and pays the H-tree.
+        assert!(b.merge_uj_per_frame() > 0.0);
+        assert!(
+            b.energy_uj_per_request()
+                > b.energy_uj_per_frame()
+        );
     }
 
     #[test]

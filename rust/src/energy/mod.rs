@@ -42,6 +42,19 @@ pub mod tech45 {
     pub const NV_WRITE_PJ: f64 = 0.3;
 }
 
+/// Canonical component names of the shared cost ledgers, so producers
+/// (`accel`, `intermittency`) and consumers (CLI tables, tests,
+/// benches) agree on spelling.
+pub mod components {
+    /// Sub-array row ops of (re-)executed inference tiles.
+    pub const TILE_EXECUTION: &str = "tile_execution";
+    /// MTJ checkpoint writes of the resumable-inference NV store.
+    pub const NV_CHECKPOINT: &str = "nv_checkpoint";
+    /// H-tree wire traffic of the engine lane schedule: operand
+    /// broadcast out to the lanes plus partial-sum merge back.
+    pub const INTER_LANE_MERGE: &str = "inter_lane_merge";
+}
+
 /// A cost sum with per-component attribution.
 #[derive(Debug, Clone, Default)]
 pub struct CostBreakdown {

@@ -11,16 +11,21 @@
 //! and DESIGN.md §6/§7).
 //!
 //! Tiles execute through the [`TileScheduler`]:
-//! [`ResumableForward::step_wave`] runs the next wave of up to
-//! `lanes` tiles concurrently (the sub-array parallelism model), and
+//! [`ResumableForward::step_wave`] runs the next wave of up to the
+//! current layer's scheduled lane count concurrently (the sub-array
+//! parallelism model, on the shared persistent lane pool), and
 //! [`ResumableForward::step_tile`] is the serial single-tile special
 //! case. Because every tile writes a disjoint slice of exact integer
 //! partial sums, logits, snapshots, and ledgers are bit-identical for
-//! any lane count — a snapshot taken under one lane count restores
-//! under any other.
+//! any lane schedule — a snapshot taken under one schedule restores
+//! under any other (v2 snapshots are lane-agnostic; the recorded lane
+//! count is informational). The H-tree traffic each wave's lane split
+//! creates accumulates as exact [`LaneTraffic`] next to the op
+//! ledger, feeding the `inter_lane_merge` energy component.
 
 use anyhow::Result;
 
+use crate::arch::LaneTraffic;
 use crate::bitops;
 use crate::cnn::Layer;
 use crate::quant;
@@ -78,6 +83,8 @@ pub struct ResumableForward<'a> {
     tiles_done: u64,
     /// Sub-array row-op accounting across executed tiles.
     ledger: OpLedger,
+    /// H-tree traffic of the lane splits executed so far.
+    traffic: LaneTraffic,
 }
 
 impl<'a> ResumableForward<'a> {
@@ -89,13 +96,13 @@ impl<'a> ResumableForward<'a> {
         plan: &'a ModelPlan,
         image: &[f32],
         tile_patches: usize,
-        sched: TileScheduler,
+        sched: &TileScheduler,
     ) -> ResumableForward<'a> {
         assert_eq!(image.len(), plan.input_elems(), "image geometry");
         assert!(tile_patches >= 1, "tile_patches must be >= 1");
         let mut rf = ResumableForward {
             plan,
-            sched,
+            sched: sched.clone(),
             tile_patches,
             layer: 0,
             tile: 0,
@@ -112,6 +119,7 @@ impl<'a> ResumableForward<'a> {
             total_tiles: plan.total_tiles(tile_patches),
             tiles_done: 0,
             ledger: OpLedger::default(),
+            traffic: LaneTraffic::default(),
         };
         rf.enter_layer();
         rf
@@ -132,9 +140,21 @@ impl<'a> ResumableForward<'a> {
         self.done
     }
 
-    /// Lane count this engine executes waves with.
+    /// Widest lane count of this engine's schedule (wave width varies
+    /// per layer under a tuned schedule).
     pub fn lanes(&self) -> usize {
         self.sched.lanes()
+    }
+
+    /// The lane schedule this engine executes.
+    pub fn scheduler(&self) -> &TileScheduler {
+        &self.sched
+    }
+
+    /// H-tree traffic of the lane splits executed by THIS engine
+    /// instance (reset on resume, like the op ledger).
+    pub fn traffic(&self) -> &LaneTraffic {
+        &self.traffic
     }
 
     /// Current cursor (the next tile to execute); `layer` equals the
@@ -230,16 +250,18 @@ impl<'a> ResumableForward<'a> {
                 let tiles_in = self.p.div_ceil(self.tile_patches);
                 debug_assert!(self.tile < tiles_in, "tile past layer end");
                 let n = max_tiles.min(tiles_in - self.tile);
-                let (mut wave_raw, wave_ledger) = self.sched.run_tiles(
-                    lw,
-                    &self.ia,
-                    self.p,
-                    self.tile_patches,
-                    self.tile,
-                    self.tile + n,
-                );
+                let (mut wave_raw, wave_ledger, wave_traffic) =
+                    self.sched.run_tiles(
+                        self.layer,
+                        lw,
+                        &self.ia,
+                        self.p,
+                        self.tile_patches,
+                        self.tile..self.tile + n,
+                    );
                 self.raw.append(&mut wave_raw);
                 self.ledger.merge(&wave_ledger);
+                self.traffic.merge(&wave_traffic);
                 self.tile += n;
                 self.tiles_done += n as u64;
                 if self.tile * self.tile_patches >= self.p {
@@ -270,15 +292,17 @@ impl<'a> ResumableForward<'a> {
         Some(id)
     }
 
-    /// Execute the next wave: up to `lanes` tiles of the current layer
-    /// concurrently across the lane pool (the sub-arrays of one wave
-    /// compute in the same array cycles). Returns the number of tiles
-    /// executed, or `None` once the pass is complete.
+    /// Execute the next wave: up to the current layer's scheduled
+    /// lane count of tiles, concurrently on the shared lane pool (the
+    /// sub-arrays of one wave compute in the same array cycles).
+    /// Returns the number of tiles executed, or `None` once the pass
+    /// is complete.
     pub fn step_wave(&mut self) -> Option<u64> {
         if self.done {
             return None;
         }
-        Some(self.exec_tiles(self.sched.lanes()))
+        let width = self.sched.lanes_for_layer(self.layer);
+        Some(self.exec_tiles(width))
     }
 
     /// Serialize the volatile working state to NV-checkpointable words:
@@ -311,11 +335,11 @@ impl<'a> ResumableForward<'a> {
     /// consumer needs no out-of-band config to recover the state. The
     /// recorded lane count is informational only — `sched` need not
     /// match it (the cursor is tile-granular and tile results are
-    /// lane-invariant), so a checkpoint taken on an N-lane engine
-    /// restores on any other lane count.
+    /// lane-invariant), so a checkpoint taken under one lane schedule
+    /// restores on any other, including auto-tuned per-layer ones.
     pub fn resume(
         plan: &'a ModelPlan,
-        sched: TileScheduler,
+        sched: &TileScheduler,
         words: &[u64],
     ) -> Result<ResumableForward<'a>> {
         anyhow::ensure!(
@@ -386,7 +410,7 @@ impl<'a> ResumableForward<'a> {
             + tile as u64;
         let mut rf = ResumableForward {
             plan,
-            sched,
+            sched: sched.clone(),
             tile_patches,
             layer,
             tile,
@@ -403,6 +427,7 @@ impl<'a> ResumableForward<'a> {
             total_tiles: plan.total_tiles(tile_patches),
             tiles_done,
             ledger: OpLedger::default(),
+            traffic: LaneTraffic::default(),
         };
         rf.enter_layer();
         Ok(rf)
@@ -432,7 +457,7 @@ mod tests {
         let image = img(p.input_elems(), 2);
         let want = p.reference_logits(&image);
         for tile_patches in [1, 3, 8, 64, 1000] {
-            let mut rf = p.begin_forward(&image, tile_patches, serial());
+            let mut rf = p.begin_forward(&image, tile_patches, &serial());
             let total = rf.total_tiles();
             assert!(total >= 1);
             let mut steps = 0u64;
@@ -456,7 +481,7 @@ mod tests {
         // conv1 P=64, pool, fc P=1: with 16-patch tiles that is
         // 4 + 1 + 1 tiles.
         let p = plan();
-        let rf = p.begin_forward(&img(p.input_elems(), 0), 16, serial());
+        let rf = p.begin_forward(&img(p.input_elems(), 0), 16, &serial());
         assert_eq!(rf.total_tiles(), 6);
         assert_eq!(rf.position(), TileId { layer: 0, tile: 0 });
         assert_eq!(rf.lanes(), 1);
@@ -469,14 +494,14 @@ mod tests {
         let p = plan();
         let image = img(p.input_elems(), 4);
         let (want, want_ledger) = {
-            let mut rf = p.begin_forward(&image, 4, serial());
+            let mut rf = p.begin_forward(&image, 4, &serial());
             while rf.step_tile().is_some() {}
             let ledger = *rf.ledger();
             (rf.into_logits(), ledger)
         };
         for lanes in [1usize, 2, 8] {
             let mut rf =
-                p.begin_forward(&image, 4, TileScheduler::new(lanes));
+                p.begin_forward(&image, 4, &TileScheduler::new(lanes));
             let mut executed = 0u64;
             while let Some(n) = rf.step_wave() {
                 assert!(n >= 1 && n <= lanes as u64);
@@ -501,22 +526,22 @@ mod tests {
         let p = plan();
         let image = img(p.input_elems(), 7);
         let want = {
-            let mut rf = p.begin_forward(&image, 8, serial());
+            let mut rf = p.begin_forward(&image, 8, &serial());
             while rf.step_tile().is_some() {}
             rf.into_logits()
         };
         // Interrupt after every possible tile prefix; the resumed
         // engine must land on the same bits.
-        let total = p.begin_forward(&image, 8, serial()).total_tiles();
+        let total = p.begin_forward(&image, 8, &serial()).total_tiles();
         for cut in 0..total {
-            let mut rf = p.begin_forward(&image, 8, serial());
+            let mut rf = p.begin_forward(&image, 8, &serial());
             for _ in 0..cut {
                 rf.step_tile();
             }
             let words = rf.snapshot();
             drop(rf); // power failure: volatile state gone
             let mut resumed =
-                ResumableForward::resume(&p, serial(), &words).unwrap();
+                ResumableForward::resume(&p, &serial(), &words).unwrap();
             assert_eq!(resumed.tiles_done(), cut);
             while resumed.step_tile().is_some() {}
             assert_eq!(
@@ -536,7 +561,7 @@ mod tests {
         let image = img(p.input_elems(), 9);
         let want = p.reference_logits(&image);
         let mut rf =
-            p.begin_forward(&image, 2, TileScheduler::new(4));
+            p.begin_forward(&image, 2, &TileScheduler::new(4));
         rf.step_wave(); // mid-layer cursor under threaded execution
         let words = rf.snapshot();
         assert_eq!(words[3], 2, "snapshot must record its tile size");
@@ -545,7 +570,7 @@ mod tests {
         for lanes in [1usize, 2, 8] {
             let mut resumed = ResumableForward::resume(
                 &p,
-                TileScheduler::new(lanes),
+                &TileScheduler::new(lanes),
                 &words,
             )
             .unwrap();
@@ -562,11 +587,11 @@ mod tests {
     fn snapshot_of_finished_pass_restores_logits() {
         let p = plan();
         let image = img(p.input_elems(), 1);
-        let mut rf = p.begin_forward(&image, 16, serial());
+        let mut rf = p.begin_forward(&image, 16, &serial());
         while rf.step_tile().is_some() {}
         let words = rf.snapshot();
         let restored =
-            ResumableForward::resume(&p, serial(), &words).unwrap();
+            ResumableForward::resume(&p, &serial(), &words).unwrap();
         assert!(restored.is_done());
         assert_eq!(restored.logits().unwrap(), rf.logits().unwrap());
     }
@@ -579,14 +604,14 @@ mod tests {
         let p = plan();
         let image = img(p.input_elems(), 5);
         let want = p.reference_logits(&image);
-        let mut rf = p.begin_forward(&image, 3, serial());
+        let mut rf = p.begin_forward(&image, 3, &serial());
         for _ in 0..5 {
             rf.step_tile();
         }
         let words = rf.snapshot();
         drop(rf);
         let mut resumed =
-            ResumableForward::resume(&p, serial(), &words).unwrap();
+            ResumableForward::resume(&p, &serial(), &words).unwrap();
         assert_eq!(resumed.total_tiles(), p.total_tiles(3));
         while resumed.step_tile().is_some() {}
         assert_eq!(resumed.logits().unwrap(), &want[..]);
@@ -596,38 +621,38 @@ mod tests {
     fn corrupt_snapshots_rejected() {
         let p = plan();
         let image = img(p.input_elems(), 0);
-        let mut rf = p.begin_forward(&image, 8, serial());
+        let mut rf = p.begin_forward(&image, 8, &serial());
         rf.step_tile();
         let words = rf.snapshot();
 
         // Bad magic.
         let mut bad = words.clone();
         bad[0] = 0xDEAD_BEEF;
-        assert!(ResumableForward::resume(&p, serial(), &bad).is_err());
+        assert!(ResumableForward::resume(&p, &serial(), &bad).is_err());
         // Truncated payload.
         assert!(ResumableForward::resume(
             &p,
-            serial(),
+            &serial(),
             &words[..words.len() - 1]
         )
         .is_err());
         // Layer out of range.
         let mut bad = words.clone();
         bad[1] = 99;
-        assert!(ResumableForward::resume(&p, serial(), &bad).is_err());
+        assert!(ResumableForward::resume(&p, &serial(), &bad).is_err());
         // Zero tile size recorded.
         let mut bad = words.clone();
         bad[3] = 0;
-        assert!(ResumableForward::resume(&p, serial(), &bad).is_err());
+        assert!(ResumableForward::resume(&p, &serial(), &bad).is_err());
         // Zero lanes recorded.
         let mut bad = words.clone();
         bad[4] = 0;
-        assert!(ResumableForward::resume(&p, serial(), &bad).is_err());
+        assert!(ResumableForward::resume(&p, &serial(), &bad).is_err());
         // Tile cursor inconsistent with the partial-sum payload.
         let mut bad = words.clone();
         bad[2] += 1;
-        assert!(ResumableForward::resume(&p, serial(), &bad).is_err());
+        assert!(ResumableForward::resume(&p, &serial(), &bad).is_err());
         // Empty input.
-        assert!(ResumableForward::resume(&p, serial(), &[]).is_err());
+        assert!(ResumableForward::resume(&p, &serial(), &[]).is_err());
     }
 }

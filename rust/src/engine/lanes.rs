@@ -5,66 +5,127 @@
 //! sub-array computes its resident rows concurrently. The software
 //! mirror is the [`TileScheduler`]: each GEMM layer's patch rows are
 //! partitioned into tiles, tiles are assigned to virtual lanes with a
-//! deterministic assignment, and lanes execute on a `std::thread`
-//! scoped pool. Lane counts are clamped to the chip's physically
-//! concurrent sub-arrays ([`crate::arch::ChipOrg::engine_lanes`]).
+//! deterministic assignment, and lane jobs execute on the process-wide
+//! persistent [`crate::engine::LaneRuntime`] (no thread is ever
+//! spawned on the hot path). How many lanes each layer uses comes
+//! from a [`LaneSchedule`] — one global count, or the H-tree-tuned
+//! per-layer schedule — clamped to the chip's physically concurrent
+//! sub-arrays ([`crate::arch::ChipOrg::engine_lanes`]).
 //!
 //! Determinism: every tile writes a disjoint slice of the layer's raw
 //! Eq.-1 output buffer, raw values are exact integers independent of
 //! execution order, and per-lane [`OpLedger`]s are merged in lane
 //! order (and are sums, hence order-free) — so logits and ledger
-//! totals are bit-identical to serial execution for ANY lane count.
+//! totals are bit-identical to serial execution for ANY schedule.
+//! Fan-out is not free on the modeled chip, though: each non-anchor
+//! lane's operand broadcast and partial-sum merge bits are charged as
+//! exact [`LaneTraffic`] over the H-tree levels between the lanes'
+//! sub-arrays — the interconnect cost the tuner optimizes against.
 
-use crate::arch::ChipOrg;
+use std::ops::Range;
+
+use crate::arch::{ChipOrg, LaneTraffic};
 use crate::subarray::OpLedger;
 
-use super::plan::{and_tile_ledger, gemm_raw_slice, GemmEngine, LayerPlan};
+use super::plan::{
+    and_tile_ledger, gemm_raw_slice, GemmEngine, LayerPlan, ModelPlan,
+};
+use super::pool::{LaneBudget, LaneJob};
+use super::tuner::{
+    batch_merge_traffic, charge_lane_split, LaneSchedule,
+};
 
-/// Tile-to-lane scheduler over a fixed virtual lane count.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// Tile-to-lane scheduler over a per-layer lane schedule.
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TileScheduler {
-    lanes: usize,
+    sched: LaneSchedule,
+    org: ChipOrg,
 }
 
 impl Default for TileScheduler {
     /// Serial execution (one lane) — bit-identical by construction.
     fn default() -> Self {
-        TileScheduler { lanes: 1 }
+        TileScheduler::new(1)
     }
 }
 
 impl TileScheduler {
-    /// A scheduler with exactly `lanes` virtual lanes (min 1).
+    /// A scheduler with `lanes` virtual lanes on every layer, clamped
+    /// to the default chip's concurrently computing sub-arrays (like
+    /// every other constructor — the software knob can never claim
+    /// more parallelism, or charge less H-tree traffic, than the
+    /// modeled chip provides).
     pub fn new(lanes: usize) -> Self {
-        TileScheduler { lanes: lanes.max(1) }
+        Self::for_chip(&ChipOrg::default(), lanes)
     }
 
     /// Derive the lane count from a chip organization: the requested
     /// software parallelism, clamped to the sub-arrays that can
     /// actually compute concurrently.
     pub fn for_chip(org: &ChipOrg, requested: usize) -> Self {
-        TileScheduler { lanes: org.engine_lanes(requested) }
+        TileScheduler {
+            sched: LaneSchedule::uniform(org.engine_lanes(requested)),
+            org: *org,
+        }
     }
 
+    /// Execute a (possibly per-layer) schedule, clamped to `org`.
+    pub fn from_schedule(sched: LaneSchedule, org: &ChipOrg) -> Self {
+        TileScheduler { sched: sched.clamped(org), org: *org }
+    }
+
+    /// Widest lane count any layer uses.
     pub fn lanes(&self) -> usize {
-        self.lanes
+        self.sched.max_lanes()
     }
 
-    /// Execute GEMM tiles `[tile_start, tile_end)` of one layer over
-    /// operand codes `ia` (`p` patch rows of `lw.k`), returning the raw
-    /// Eq.-1 outputs for those rows plus the row-op ledger. Tiles are
-    /// assigned to lanes in contiguous blocks (lane `l` executes tiles
-    /// `[start + l*ceil(n/lanes), ...)`) — deterministic, and each lane
-    /// writes its own disjoint output slice.
+    /// Lanes layer `li` executes across.
+    pub fn lanes_for_layer(&self, li: usize) -> usize {
+        self.sched.layer_lanes(li)
+    }
+
+    /// The schedule this scheduler executes.
+    pub fn schedule(&self) -> &LaneSchedule {
+        &self.sched
+    }
+
+    /// H-tree traffic of mapping a `batch`-image
+    /// [`ModelPlan::forward_batch`] onto this scheduler's lanes, on
+    /// this scheduler's chip organization. The single source of truth
+    /// shared by batched execution and the serving energy precompute
+    /// ([`crate::coordinator::PimSimBackend`]), so the charged and the
+    /// reported traffic can never diverge.
+    pub fn batch_traffic(
+        &self,
+        plan: &ModelPlan,
+        batch: usize,
+    ) -> LaneTraffic {
+        batch_merge_traffic(
+            plan,
+            batch,
+            self.lanes().min(batch.max(1)),
+            &self.org,
+        )
+    }
+
+    /// Execute GEMM tiles `tiles` of layer `li` over operand codes
+    /// `ia` (`p` patch rows of `lw.k`), returning the raw Eq.-1
+    /// outputs for those rows, the row-op ledger, and the H-tree
+    /// traffic the lane split creates. Tiles are assigned to lanes in
+    /// contiguous blocks (lane `l` executes tiles
+    /// `[start + l*ceil(n/lanes), ...)`) — deterministic, each lane
+    /// writes its own disjoint output slice, and lane jobs run on the
+    /// shared persistent pool.
     pub(crate) fn run_tiles(
         &self,
+        li: usize,
         lw: &LayerPlan,
         ia: &[u32],
         p: usize,
         tile_patches: usize,
-        tile_start: usize,
-        tile_end: usize,
-    ) -> (Vec<u64>, OpLedger) {
+        tiles: Range<usize>,
+    ) -> (Vec<u64>, OpLedger, LaneTraffic) {
+        let (tile_start, tile_end) = (tiles.start, tiles.end);
         debug_assert!(tile_start < tile_end, "empty tile range");
         let row_start = tile_start * tile_patches;
         let row_end = (tile_end * tile_patches).min(p);
@@ -72,7 +133,7 @@ impl TileScheduler {
         let total_rows = row_end - row_start;
         let mut raw = vec![0u64; total_rows * lw.f];
         let n_tiles = tile_end - tile_start;
-        let lanes = self.lanes.min(n_tiles);
+        let lanes = self.lanes_for_layer(li).min(n_tiles);
         if lanes <= 1 {
             gemm_raw_slice(
                 ia,
@@ -82,12 +143,18 @@ impl TileScheduler {
                 GemmEngine::Bitwise,
                 &mut raw,
             );
-            return (raw, and_tile_ledger(lw, total_rows));
+            return (
+                raw,
+                and_tile_ledger(lw, total_rows),
+                LaneTraffic::default(),
+            );
         }
         // Carve the output into one contiguous row-range chunk per
-        // lane, at tile boundaries.
+        // lane, at tile boundaries, charging each non-anchor lane's
+        // operand broadcast in and partial-sum merge out.
         let tiles_per_lane = n_tiles.div_ceil(lanes);
-        let mut jobs: Vec<(usize, usize, &mut [u64])> = Vec::new();
+        let mut traffic = LaneTraffic::default();
+        let mut jobs: Vec<LaneJob<'_>> = Vec::new();
         let mut rest: &mut [u64] = &mut raw;
         for l in 0..lanes {
             let ts = tile_start + l * tiles_per_lane;
@@ -101,32 +168,29 @@ impl TileScheduler {
             let taken = std::mem::take(&mut rest);
             let (head, tail) = taken.split_at_mut(words);
             rest = tail;
-            jobs.push((rs, re, head));
+            charge_lane_split(
+                &mut traffic,
+                &self.org,
+                l,
+                (re - rs) as u64,
+                lw,
+            );
+            jobs.push(Box::new(move || {
+                gemm_raw_slice(
+                    ia,
+                    rs,
+                    re,
+                    lw,
+                    GemmEngine::Bitwise,
+                    head,
+                );
+            }));
         }
         debug_assert!(rest.is_empty(), "output rows not fully assigned");
-        std::thread::scope(|s| {
-            let handles: Vec<_> = jobs
-                .into_iter()
-                .map(|(rs, re, out)| {
-                    s.spawn(move || {
-                        gemm_raw_slice(
-                            ia,
-                            rs,
-                            re,
-                            lw,
-                            GemmEngine::Bitwise,
-                            out,
-                        );
-                    })
-                })
-                .collect();
-            for h in handles {
-                h.join().expect("engine lane panicked");
-            }
-        });
+        LaneBudget::shared().run_jobs(jobs);
         // The ledger is linear in rows, so charging the whole range at
         // once equals the per-tile (and per-lane) sum exactly.
-        (raw, and_tile_ledger(lw, total_rows))
+        (raw, and_tile_ledger(lw, total_rows), traffic)
     }
 }
 
@@ -148,7 +212,23 @@ mod tests {
             org.parallel_subarrays()
         );
         assert_eq!(TileScheduler::new(0).lanes(), 1);
+        assert_eq!(
+            TileScheduler::new(usize::MAX).lanes(),
+            org.parallel_subarrays(),
+            "every constructor clamps to the chip"
+        );
         assert_eq!(TileScheduler::default().lanes(), 1);
+        let per = TileScheduler::from_schedule(
+            LaneSchedule::per_layer(vec![2, usize::MAX]),
+            &org,
+        );
+        assert_eq!(per.lanes_for_layer(0), 2);
+        assert_eq!(
+            per.lanes_for_layer(1),
+            org.parallel_subarrays(),
+            "from_schedule must clamp to the chip"
+        );
+        assert_eq!(per.lanes_for_layer(9), 1);
     }
 
     #[test]
@@ -168,29 +248,88 @@ mod tests {
             let n_tiles = lw.p.div_ceil(tile_patches);
             let tile_start = g.usize(0, n_tiles - 1);
             let tile_end = g.usize(tile_start + 1, n_tiles);
-            let (want_raw, want_ledger) = TileScheduler::new(1).run_tiles(
-                lw,
-                &ia,
-                lw.p,
-                tile_patches,
-                tile_start,
-                tile_end,
-            );
-            for lanes in [2usize, 3, 8] {
-                let (raw, ledger) = TileScheduler::new(lanes).run_tiles(
+            let (want_raw, want_ledger, want_traffic) =
+                TileScheduler::new(1).run_tiles(
+                    0,
                     lw,
                     &ia,
                     lw.p,
                     tile_patches,
-                    tile_start,
-                    tile_end,
+                    tile_start..tile_end,
                 );
+            assert!(want_traffic.is_zero(), "serial moves no bits");
+            for lanes in [2usize, 3, 8] {
+                let (raw, ledger, traffic) = TileScheduler::new(lanes)
+                    .run_tiles(
+                        0,
+                        lw,
+                        &ia,
+                        lw.p,
+                        tile_patches,
+                        tile_start..tile_end,
+                    );
                 assert_eq!(raw, want_raw, "lanes={lanes} raw diverged");
                 assert_eq!(
                     ledger, want_ledger,
                     "lanes={lanes} ledger diverged"
                 );
+                if tile_end - tile_start > 1 && lanes > 1 {
+                    assert!(
+                        !traffic.is_zero(),
+                        "a real split must charge the tree"
+                    );
+                }
             }
         });
+    }
+
+    #[test]
+    fn batch_traffic_matches_what_forward_batch_charges() {
+        // The precompute serving uses and the traffic execution
+        // reports come from the same method — byte-equal.
+        let plan =
+            ModelPlan::compile(cnn::micro_net(), 1, 4, 0xFACE).unwrap();
+        let batch = 5;
+        let flat: Vec<f32> = (0..batch * plan.input_elems())
+            .map(|i| (i % 7) as f32 / 6.0)
+            .collect();
+        for lanes in [1usize, 3, 8] {
+            let sched = TileScheduler::new(lanes);
+            let out = plan.forward_batch(&flat, batch, &sched).unwrap();
+            assert_eq!(
+                out.traffic,
+                sched.batch_traffic(&plan, batch),
+                "lanes={lanes} reported vs charged traffic diverged"
+            );
+        }
+    }
+
+    #[test]
+    fn per_layer_schedule_drives_tile_split() {
+        // The same call fans out on a layer the schedule widens and
+        // stays serial on one it doesn't — outputs identical.
+        let plan =
+            ModelPlan::compile(cnn::micro_net(), 1, 4, 0xD0D0).unwrap();
+        let lw = plan.layer_plan(0).unwrap();
+        let x: Vec<f32> = (0..lw.p * lw.k)
+            .map(|i| (i % 11) as f32 / 10.0)
+            .collect();
+        let ia = quant::act_to_codes(&x, lw.m_bits);
+        let org = ChipOrg::default();
+        let sched = TileScheduler::from_schedule(
+            LaneSchedule::per_layer(vec![4, 1, 1]),
+            &org,
+        );
+        let n_tiles = lw.p.div_ceil(8);
+        let (raw_wide, ledger_wide, t_wide) =
+            sched.run_tiles(0, lw, &ia, lw.p, 8, 0..n_tiles);
+        // Layer 2 of the schedule is serial: same call shape, no
+        // traffic.
+        let (raw_serial, ledger_serial, t_serial) =
+            sched.run_tiles(2, lw, &ia, lw.p, 8, 0..n_tiles);
+        assert_eq!(raw_wide, raw_serial);
+        assert_eq!(ledger_wide, ledger_serial);
+        assert!(!t_wide.is_zero());
+        assert!(t_serial.is_zero());
     }
 }

@@ -5,7 +5,7 @@
 //! model (§III-B, Fig. 3): weights live in the arrays as transposed
 //! bit-planes, convolutions run as bitwise GEMMs over im2col patch
 //! rows, and throughput comes from *parallel computational
-//! sub-arrays*. Three layers:
+//! sub-arrays*. Four pieces:
 //!
 //! * [`ModelPlan`] — the compile-once artifact per (model, W:I config,
 //!   seed): per-layer transposed weight bit-planes, GEMM/im2col
@@ -14,10 +14,17 @@
 //!   request.
 //! * [`TileScheduler`] — partitions each GEMM layer into tiles
 //!   assigned to virtual sub-array lanes (derived from
-//!   [`crate::arch::ChipOrg`]), executed across a `std::thread` lane
-//!   pool with deterministic tile→lane assignment, so results and
-//!   [`crate::subarray::OpLedger`] merges are bit-identical to serial
-//!   execution.
+//!   [`crate::arch::ChipOrg`]) per a [`LaneSchedule`] — one uniform
+//!   count, or the H-tree-tuned per-layer schedule
+//!   ([`LaneSchedule::auto`]) — with deterministic tile→lane
+//!   assignment, so results and [`crate::subarray::OpLedger`] merges
+//!   are bit-identical to serial execution. Each lane split's
+//!   operand-broadcast and partial-sum-merge bits are charged as
+//!   [`crate::arch::LaneTraffic`] over the modeled H-tree.
+//! * [`LaneRuntime`] / [`LaneBudget`] — the process-wide persistent
+//!   pool of lane worker threads every consumer shares (no thread is
+//!   spawned on the hot path; `serve --workers W --lanes L` draws
+//!   from one fixed budget instead of standing up W x L threads).
 //! * [`ResumableForward`] — tile-granular execution with
 //!   NV-checkpointable snapshots ([`ResumableForward::snapshot`] /
 //!   [`ResumableForward::resume`]); [`ModelPlan::forward_batch`] is
@@ -26,15 +33,20 @@
 //!
 //! Consumers: `coordinator::PimSimBackend` (serving),
 //! `intermittency::inference` (power-failure replay), and the CLI's
-//! `infer`/`serve --lanes`. Why determinism holds under threading, and
-//! the lane ↔ `ChipOrg` mapping, are documented in DESIGN.md §7.
+//! `infer`/`serve --lanes` (including `--lanes auto`). Why determinism
+//! holds under threading, the lane ↔ `ChipOrg` mapping, and the
+//! tuner's cost model are documented in DESIGN.md §7–§8.
 
 mod forward;
 mod lanes;
 mod plan;
+pub mod pool;
+mod tuner;
 
 pub use forward::{
     ResumableForward, TileId, SNAPSHOT_HEADER_WORDS,
 };
 pub use lanes::TileScheduler;
 pub use plan::{BatchOutput, LayerPlan, ModelPlan, DEFAULT_TILE_PATCHES};
+pub use pool::{LaneBudget, LaneRuntime};
+pub use tuner::{batch_merge_traffic, LaneSchedule, MAX_AUTO_LANES};

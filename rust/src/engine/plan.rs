@@ -13,6 +13,7 @@
 
 use anyhow::{Context, Result};
 
+use crate::arch::LaneTraffic;
 use crate::bitops::{self, BitPlanes};
 use crate::cnn::{Layer, Model};
 use crate::prng::Pcg32;
@@ -21,6 +22,7 @@ use crate::subarray::{OpLedger, SubArrayGeom};
 
 use super::forward::ResumableForward;
 use super::lanes::TileScheduler;
+use super::pool::{LaneBudget, LaneJob};
 
 /// Default patch rows per execution tile: the 64-patch resident tile
 /// of the area model's working-set convention.
@@ -89,6 +91,10 @@ pub struct BatchOutput {
     /// Sub-array row-op accounting merged across all lanes, in
     /// deterministic lane order (bit-identical for any lane count).
     pub ledger: OpLedger,
+    /// H-tree traffic of the image-to-lane mapping (exact integers;
+    /// zero when serial) — feeds the `inter_lane_merge` energy
+    /// component of served requests.
+    pub traffic: LaneTraffic,
 }
 
 /// Compile-once execution plan for one (model, W:I, seed) triple.
@@ -200,13 +206,14 @@ impl ModelPlan {
             .sum()
     }
 
-    /// Begin a resumable tiled forward pass over one image; tiles
-    /// execute `sched.lanes()` at a time ([`ResumableForward::step_wave`]).
+    /// Begin a resumable tiled forward pass over one image; each
+    /// layer's tiles execute its scheduled lane count at a time
+    /// ([`ResumableForward::step_wave`]).
     pub fn begin_forward(
         &self,
         image: &[f32],
         tile_patches: usize,
-        sched: TileScheduler,
+        sched: &TileScheduler,
     ) -> ResumableForward<'_> {
         ResumableForward::begin(self, image, tile_patches, sched)
     }
@@ -217,7 +224,7 @@ impl ModelPlan {
         &self,
         image: &[f32],
         tile_patches: usize,
-        sched: TileScheduler,
+        sched: &TileScheduler,
     ) -> Vec<f32> {
         let mut rf = self.begin_forward(image, tile_patches, sched);
         while rf.step_wave().is_some() {}
@@ -227,9 +234,12 @@ impl ModelPlan {
     /// A whole coordinator batch through the bitwise path: `flat` holds
     /// `batch * input_elems` values, image-major. Images are assigned
     /// to engine lanes round-robin (deterministic), each lane reuses
-    /// one scratch allocation across its images, and plan lookup is
-    /// amortized over the batch. Logits are bit-identical to running
-    /// [`Self::forward`] per image, for any lane count.
+    /// one scratch allocation across its images, plan lookup is
+    /// amortized over the batch, and lane jobs run on the process-wide
+    /// persistent [`crate::engine::LaneRuntime`] — no thread is
+    /// spawned per batch, and coordinator workers share one thread
+    /// budget. Logits are bit-identical to running [`Self::forward`]
+    /// per image, for any lane count.
     pub fn forward_batch(
         &self,
         flat: &[f32],
@@ -244,6 +254,7 @@ impl ModelPlan {
             self.input_elems
         );
         let lanes = sched.lanes().min(batch);
+        let traffic = sched.batch_traffic(self, batch);
         let mut logits = vec![0f32; batch * self.num_classes];
         let mut ledger = OpLedger::default();
         if lanes <= 1 {
@@ -255,49 +266,47 @@ impl ModelPlan {
                 let y = self.forward_whole(img, &mut scratch, &mut ledger);
                 out.copy_from_slice(&y);
             }
-            return Ok(BatchOutput { logits, ledger });
+            return Ok(BatchOutput { logits, ledger, traffic });
         }
         // Round-robin image -> lane assignment; each lane owns disjoint
-        // output rows, so threads never share mutable state.
-        let mut lane_jobs: Vec<Vec<(&[f32], &mut [f32])>> =
+        // output rows, so jobs never share mutable state.
+        let mut lane_images: Vec<Vec<(&[f32], &mut [f32])>> =
             (0..lanes).map(|_| Vec::new()).collect();
         for (i, (img, out)) in flat
             .chunks(self.input_elems)
             .zip(logits.chunks_mut(self.num_classes))
             .enumerate()
         {
-            lane_jobs[i % lanes].push((img, out));
+            lane_images[i % lanes].push((img, out));
         }
-        let lane_ledgers: Vec<OpLedger> = std::thread::scope(|s| {
-            let handles: Vec<_> = lane_jobs
-                .into_iter()
-                .map(|jobs| {
-                    s.spawn(move || {
-                        let mut scratch = Scratch::default();
-                        let mut lane_ledger = OpLedger::default();
-                        for (img, out) in jobs {
-                            let y = self.forward_whole(
-                                img,
-                                &mut scratch,
-                                &mut lane_ledger,
-                            );
-                            out.copy_from_slice(&y);
-                        }
-                        lane_ledger
-                    })
-                })
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("engine lane panicked"))
-                .collect()
-        });
+        let mut lane_ledgers: Vec<Option<OpLedger>> =
+            (0..lanes).map(|_| None).collect();
+        let jobs: Vec<LaneJob<'_>> = lane_images
+            .into_iter()
+            .zip(lane_ledgers.iter_mut())
+            .map(|(images, slot)| {
+                Box::new(move || {
+                    let mut scratch = Scratch::default();
+                    let mut lane_ledger = OpLedger::default();
+                    for (img, out) in images {
+                        let y = self.forward_whole(
+                            img,
+                            &mut scratch,
+                            &mut lane_ledger,
+                        );
+                        out.copy_from_slice(&y);
+                    }
+                    *slot = Some(lane_ledger);
+                }) as LaneJob<'_>
+            })
+            .collect();
+        LaneBudget::shared().run_jobs(jobs);
         // Merge in lane order: deterministic (and commutative anyway —
         // the ledger is a sum).
-        for l in &lane_ledgers {
-            ledger.merge(l);
+        for l in lane_ledgers {
+            ledger.merge(&l.expect("lane job ran to completion"));
         }
-        Ok(BatchOutput { logits, ledger })
+        Ok(BatchOutput { logits, ledger, traffic })
     }
 
     /// The oracle path: identical layer walk and f32 post-processing,
@@ -604,7 +613,7 @@ mod tests {
                 let image = &flat
                     [b * plan.input_elems()..(b + 1) * plan.input_elems()];
                 let single =
-                    plan.forward(image, DEFAULT_TILE_PATCHES, sched);
+                    plan.forward(image, DEFAULT_TILE_PATCHES, &sched);
                 assert_eq!(
                     &out.logits[b * plan.num_classes()
                         ..(b + 1) * plan.num_classes()],
@@ -629,6 +638,7 @@ mod tests {
             .forward_batch(&flat, batch, &TileScheduler::new(1))
             .unwrap();
         assert!(base.ledger.logic_ops > 0, "batch must charge row ops");
+        assert!(base.traffic.is_zero(), "serial moves no bits");
         for lanes in [2usize, 8] {
             let out = p
                 .forward_batch(&flat, batch, &TileScheduler::new(lanes))
@@ -637,6 +647,17 @@ mod tests {
             assert_eq!(
                 out.ledger, base.ledger,
                 "lanes={lanes} ledger diverged"
+            );
+            assert!(
+                !out.traffic.is_zero(),
+                "lanes={lanes} must charge the image-to-lane funnel"
+            );
+            let again = p
+                .forward_batch(&flat, batch, &TileScheduler::new(lanes))
+                .unwrap();
+            assert_eq!(
+                out.traffic, again.traffic,
+                "lanes={lanes} traffic must be bit-identical"
             );
         }
     }

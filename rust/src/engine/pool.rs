@@ -1,0 +1,468 @@
+//! The persistent lane runtime: one process-wide pool of long-lived
+//! worker threads that every engine consumer shares.
+//!
+//! PR 3's `TileScheduler` spawned `std::thread::scope` workers per
+//! `run_tiles` call and per `forward_batch` batch — a thread create +
+//! join on the hot path of every layer, and `serve --workers W
+//! --lanes L` could stand up W x L transient threads with no shared
+//! cap. The [`LaneRuntime`] replaces both: a fixed budget of worker
+//! threads (clamped to `std::thread::available_parallelism` and to
+//! the chip's physically concurrent sub-arrays,
+//! [`crate::arch::ChipOrg::parallel_subarrays`]) is spawned once per
+//! process, jobs are dispatched through a shared queue, and
+//! coordinator workers draw lanes from the budget through a cheap
+//! [`LaneBudget`] handle instead of each owning threads.
+//!
+//! Determinism is unaffected: jobs still write disjoint output slices
+//! and results are collected into caller-indexed slots, so which pool
+//! thread ran a job never changes a single bit (DESIGN.md §8).
+//!
+//! ## Scoped semantics on persistent threads
+//!
+//! Engine jobs borrow the caller's stack (operand slices, output
+//! chunks), while pool threads want `'static` closures. The bridge is
+//! [`LaneBudget::run_jobs`]: it erases the job lifetimes, enqueues
+//! them, and **does not return until every job has completed** — the
+//! same guarantee `std::thread::scope` gives, enforced by a
+//! completion latch. While waiting, the calling thread helps by
+//! draining its OWN still-queued jobs (never a sibling scope's, so
+//! one caller's reply latency is bounded by its own work), which
+//! guarantees progress even if every pool thread is busy — a lone
+//! caller on a budget-1 machine simply runs its jobs inline. A
+//! panicking job marks the latch and `run_jobs` re-raises
+//! `"engine lane panicked"` after the scope drains, matching the
+//! scoped-spawn behaviour.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+use crate::arch::ChipOrg;
+
+/// A borrowed engine job: runs once, writes only caller-owned state.
+pub type LaneJob<'env> = Box<dyn FnOnce() + Send + 'env>;
+
+/// Lane worker threads spawned by this process (the global runtime
+/// spawns its budget exactly once; this never grows afterwards).
+static LANE_THREADS_SPAWNED: AtomicUsize = AtomicUsize::new(0);
+
+static GLOBAL: OnceLock<LaneRuntime> = OnceLock::new();
+
+/// One queued job plus the latch of the scope that submitted it.
+struct Runnable {
+    job: Box<dyn FnOnce() + Send + 'static>,
+    latch: Arc<Latch>,
+}
+
+impl Runnable {
+    fn run(self) {
+        let panicked =
+            catch_unwind(AssertUnwindSafe(self.job)).is_err();
+        self.latch.complete(panicked);
+    }
+}
+
+/// Completion latch of one `run_jobs` scope.
+struct Latch {
+    state: Mutex<LatchState>,
+    done: Condvar,
+}
+
+struct LatchState {
+    remaining: usize,
+    panicked: bool,
+}
+
+impl Latch {
+    fn new(jobs: usize) -> Arc<Latch> {
+        Arc::new(Latch {
+            state: Mutex::new(LatchState {
+                remaining: jobs,
+                panicked: false,
+            }),
+            done: Condvar::new(),
+        })
+    }
+
+    fn complete(&self, panicked: bool) {
+        let mut s = self.state.lock().expect("latch poisoned");
+        s.remaining -= 1;
+        if panicked {
+            s.panicked = true;
+        }
+        if s.remaining == 0 {
+            self.done.notify_all();
+        }
+    }
+}
+
+/// Hard backstop for the lifetime-erasure invariant: created after
+/// jobs with erased lifetimes enter the shared queue and forgotten
+/// once the latch has drained. If `run_jobs` ever unwinds in between
+/// (it has no such path today, but the invariant is load-bearing for
+/// soundness), dropping this aborts the process instead of letting a
+/// pool thread run a job whose borrowed stack frame is gone.
+struct AbortOnEarlyUnwind;
+
+impl Drop for AbortOnEarlyUnwind {
+    fn drop(&mut self) {
+        eprintln!(
+            "fatal: engine lane scope unwound before its jobs drained"
+        );
+        std::process::abort();
+    }
+}
+
+/// The shared dispatch state of the runtime.
+struct Shared {
+    queue: Mutex<VecDeque<Runnable>>,
+    work: Condvar,
+}
+
+impl Shared {
+    fn push(&self, r: Runnable) {
+        self.queue.lock().expect("lane queue poisoned").push_back(r);
+        self.work.notify_one();
+    }
+
+    /// Pop the first queued job belonging to `latch`. Waiting callers
+    /// only ever self-serve their own scope — running a sibling
+    /// scope's (possibly long) job would delay this caller's reply by
+    /// the sibling's load instead of its own.
+    fn try_pop_own(&self, latch: &Arc<Latch>) -> Option<Runnable> {
+        let mut q = self.queue.lock().expect("lane queue poisoned");
+        let idx =
+            q.iter().position(|r| Arc::ptr_eq(&r.latch, latch))?;
+        q.remove(idx)
+    }
+}
+
+/// Process-wide pool of persistent engine worker threads.
+pub struct LaneRuntime {
+    shared: Arc<Shared>,
+    threads: usize,
+}
+
+impl LaneRuntime {
+    /// The shared runtime, spawned on first use with
+    /// [`Self::budget`] worker threads (named `pims-lane-<i>`).
+    pub fn global() -> &'static LaneRuntime {
+        GLOBAL.get_or_init(|| LaneRuntime::new(Self::budget()))
+    }
+
+    /// The process lane budget: the host's available parallelism,
+    /// never more than the chip's concurrently computing sub-arrays.
+    pub fn budget() -> usize {
+        let host = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        host.clamp(1, ChipOrg::default().parallel_subarrays())
+    }
+
+    /// Lane worker threads this process has ever spawned (equals the
+    /// budget once the runtime exists — the pool never grows, no
+    /// matter how many coordinator workers x lanes are configured).
+    pub fn spawned_threads() -> usize {
+        LANE_THREADS_SPAWNED.load(Ordering::SeqCst)
+    }
+
+    fn new(threads: usize) -> LaneRuntime {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            work: Condvar::new(),
+        });
+        for i in 0..threads {
+            let shared = shared.clone();
+            std::thread::Builder::new()
+                .name(format!("pims-lane-{i}"))
+                .spawn(move || worker_loop(&shared))
+                .expect("spawn lane worker");
+            LANE_THREADS_SPAWNED.fetch_add(1, Ordering::SeqCst);
+        }
+        LaneRuntime { shared, threads }
+    }
+
+    /// Worker threads in the pool.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `jobs` to completion on the shared pool (see the module
+    /// docs for the scoped-semantics contract). The calling thread
+    /// runs the last job inline and drains its own queued jobs while
+    /// waiting, so no call can deadlock on a saturated pool.
+    fn run_jobs(&self, jobs: Vec<LaneJob<'_>>) {
+        let n = jobs.len();
+        if n == 0 {
+            return;
+        }
+        if n == 1 {
+            let job = jobs.into_iter().next().expect("one job");
+            job();
+            return;
+        }
+        let latch = Latch::new(n);
+        let guard = AbortOnEarlyUnwind;
+        let mut inline = None;
+        for (i, job) in jobs.into_iter().enumerate() {
+            // SAFETY: this function does not return until the latch
+            // reports every job complete, so the borrows inside the
+            // closures outlive every execution (the same guarantee
+            // `std::thread::scope` provides structurally). Only the
+            // trait object's lifetime bound changes; layout and
+            // vtable are untouched.
+            let job: Box<dyn FnOnce() + Send + 'static> = unsafe {
+                Box::from_raw(Box::into_raw(job)
+                    as *mut (dyn FnOnce() + Send + 'static))
+            };
+            let r = Runnable { job, latch: latch.clone() };
+            if i == n - 1 {
+                inline = Some(r);
+            } else {
+                self.shared.push(r);
+            }
+        }
+        inline.expect("inline job set").run();
+        // Help-then-wait: run our OWN still-queued jobs (so progress
+        // never depends on pool threads being free), then sleep until
+        // the jobs running elsewhere complete the latch. Jobs of
+        // sibling scopes are left to the pool — stealing them would
+        // couple this caller's latency to the siblings' load.
+        loop {
+            match self.shared.try_pop_own(&latch) {
+                Some(r) => r.run(),
+                None => {
+                    let mut s =
+                        latch.state.lock().expect("latch poisoned");
+                    while s.remaining != 0 {
+                        s = latch
+                            .done
+                            .wait(s)
+                            .expect("latch wait poisoned");
+                    }
+                    break;
+                }
+            }
+        }
+        // Every job has completed; the borrows are dead and unwinding
+        // (for the panic re-raise below) is safe again.
+        std::mem::forget(guard);
+        let panicked =
+            latch.state.lock().expect("latch poisoned").panicked;
+        if panicked {
+            panic!("engine lane panicked");
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let job = {
+            let mut q =
+                shared.queue.lock().expect("lane queue poisoned");
+            loop {
+                match q.pop_front() {
+                    Some(r) => break r,
+                    None => {
+                        q = shared
+                            .work
+                            .wait(q)
+                            .expect("lane wait poisoned");
+                    }
+                }
+            }
+        };
+        job.run();
+    }
+}
+
+/// Cheap, copyable handle to the shared [`LaneRuntime`]: what engine
+/// executors and coordinator workers hold instead of owning threads.
+/// Every handle draws from the same fixed thread budget, so `serve
+/// --workers W --lanes L` can never stand up more than
+/// [`LaneRuntime::budget`] engine threads.
+#[derive(Clone, Copy)]
+pub struct LaneBudget {
+    runtime: &'static LaneRuntime,
+}
+
+impl std::fmt::Debug for LaneBudget {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("LaneBudget")
+            .field("threads", &self.runtime.threads())
+            .finish()
+    }
+}
+
+impl Default for LaneBudget {
+    fn default() -> Self {
+        LaneBudget::shared()
+    }
+}
+
+impl LaneBudget {
+    /// Handle to the process-wide runtime.
+    pub fn shared() -> LaneBudget {
+        LaneBudget { runtime: LaneRuntime::global() }
+    }
+
+    /// Worker threads backing this budget.
+    pub fn threads(&self) -> usize {
+        self.runtime.threads()
+    }
+
+    /// Run borrowed jobs to completion on the shared pool.
+    pub fn run_jobs(&self, jobs: Vec<LaneJob<'_>>) {
+        self.runtime.run_jobs(jobs);
+    }
+}
+
+/// PR 3's executor, kept as the benchmark reference: spawn fresh
+/// scoped threads for every call. `hotpath_micro` races it against
+/// [`LaneBudget::run_jobs`] on identical job sets to show the
+/// persistent pool is never slower than respawning.
+pub fn run_jobs_scoped(jobs: Vec<LaneJob<'_>>) {
+    std::thread::scope(|s| {
+        let handles: Vec<_> =
+            jobs.into_iter().map(|job| s.spawn(job)).collect();
+        for h in handles {
+            h.join().expect("engine lane panicked");
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn budget_clamped_to_host_and_chip() {
+        let b = LaneRuntime::budget();
+        assert!(b >= 1);
+        assert!(b <= ChipOrg::default().parallel_subarrays());
+    }
+
+    #[test]
+    fn jobs_all_run_and_results_land_in_slots() {
+        let budget = LaneBudget::shared();
+        let n = 17;
+        let mut out = vec![0u64; n];
+        let jobs: Vec<LaneJob<'_>> = out
+            .chunks_mut(1)
+            .enumerate()
+            .map(|(i, slot)| {
+                Box::new(move || slot[0] = (i as u64 + 1) * 3)
+                    as LaneJob<'_>
+            })
+            .collect();
+        budget.run_jobs(jobs);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, (i as u64 + 1) * 3, "job {i} never ran");
+        }
+    }
+
+    #[test]
+    fn empty_and_single_job_fast_paths() {
+        let budget = LaneBudget::shared();
+        budget.run_jobs(Vec::new());
+        let mut hit = false;
+        budget.run_jobs(vec![
+            Box::new(|| hit = true) as LaneJob<'_>
+        ]);
+        assert!(hit);
+    }
+
+    #[test]
+    fn pool_never_grows_across_calls() {
+        let budget = LaneBudget::shared();
+        let before = LaneRuntime::spawned_threads();
+        assert!(before <= LaneRuntime::budget());
+        for _ in 0..8 {
+            let counter = AtomicU64::new(0);
+            let jobs: Vec<LaneJob<'_>> = (0..32)
+                .map(|_| {
+                    Box::new(|| {
+                        counter.fetch_add(1, Ordering::SeqCst);
+                    }) as LaneJob<'_>
+                })
+                .collect();
+            budget.run_jobs(jobs);
+            assert_eq!(counter.load(Ordering::SeqCst), 32);
+        }
+        assert_eq!(
+            LaneRuntime::spawned_threads(),
+            before,
+            "persistent pool must not respawn per call"
+        );
+    }
+
+    #[test]
+    fn concurrent_scopes_share_the_pool() {
+        // Many caller threads submitting at once (the serve pool
+        // shape): every scope completes with its own results intact.
+        let handles: Vec<_> = (0..6)
+            .map(|t| {
+                std::thread::spawn(move || {
+                    let budget = LaneBudget::shared();
+                    let mut out = vec![0usize; 9];
+                    let jobs: Vec<LaneJob<'_>> = out
+                        .chunks_mut(1)
+                        .enumerate()
+                        .map(|(i, slot)| {
+                            Box::new(move || slot[0] = t * 100 + i)
+                                as LaneJob<'_>
+                        })
+                        .collect();
+                    budget.run_jobs(jobs);
+                    out
+                })
+            })
+            .collect();
+        for (t, h) in handles.into_iter().enumerate() {
+            let out = h.join().unwrap();
+            for (i, v) in out.iter().enumerate() {
+                assert_eq!(*v, t * 100 + i);
+            }
+        }
+    }
+
+    #[test]
+    fn panicking_job_propagates_after_drain() {
+        let budget = LaneBudget::shared();
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let jobs: Vec<LaneJob<'_>> = (0..4)
+                .map(|i| {
+                    Box::new(move || {
+                        if i == 2 {
+                            panic!("boom");
+                        }
+                    }) as LaneJob<'_>
+                })
+                .collect();
+            budget.run_jobs(jobs);
+        }));
+        assert!(caught.is_err(), "lane panic must propagate");
+    }
+
+    #[test]
+    fn scoped_reference_matches_pool_results() {
+        fn mk(out: &mut [u64]) -> Vec<LaneJob<'_>> {
+            out.chunks_mut(2)
+                .enumerate()
+                .map(|(i, c)| {
+                    Box::new(move || {
+                        c[0] = i as u64;
+                        c[1] = i as u64 * 7;
+                    }) as LaneJob<'_>
+                })
+                .collect()
+        }
+        let mut a = vec![0u64; 8];
+        let mut b = vec![0u64; 8];
+        LaneBudget::shared().run_jobs(mk(&mut a));
+        run_jobs_scoped(mk(&mut b));
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,471 @@
+//! Per-layer lane schedules and the H-tree-aware lane auto-tuner.
+//!
+//! PR 3 treated engine lanes as one global knob and never charged the
+//! traffic that sub-array parallelism creates on the chip's H-tree.
+//! This module closes both gaps (ROADMAP follow-ups after PR 3):
+//!
+//! * [`LaneSchedule`] — how many virtual sub-array lanes each layer
+//!   of a compiled plan executes across: one uniform count (the old
+//!   `--lanes N` behaviour) or a per-layer vector chosen by the
+//!   tuner (`--lanes auto`).
+//! * [`LaneSchedule::auto`] — an analytic cost model in the spirit of
+//!   per-layer mapping co-exploration (NAND-SPIN PIM, arXiv:2204.09989;
+//!   racetrack co-search, arXiv:2507.01429): for each GEMM layer and
+//!   candidate lane count it charges the AND-phase array cycles the
+//!   lanes split, PLUS the operand-broadcast and partial-sum-merge
+//!   bits each extra lane moves across [`crate::arch::HTree`] levels
+//!   (lanes placed via [`crate::arch::ChipOrg::lane_addr`]), and
+//!   keeps the fastest count. Wide fan-out stops paying off exactly
+//!   where merge traffic crosses mat/bank/group boundaries — the
+//!   paper's §III-C reason parallelism is *hierarchical*.
+//! * [`batch_merge_traffic`] — the same wire accounting for
+//!   `forward_batch`'s image-per-lane mapping, so served requests
+//!   carry an `inter_lane_merge` energy component.
+//!
+//! Schedules only shape *how work is split*, never what is computed:
+//! every tile still writes a disjoint slice of exact integer partial
+//! sums, so logits and [`crate::subarray::OpLedger`] totals are
+//! bit-identical to serial execution under ANY schedule (property
+//! tests below), and traffic totals are exact integers — runs are
+//! reproducible to the last bit.
+
+use std::fmt;
+use std::sync::Arc;
+
+use crate::accel::Proposed;
+use crate::arch::{ChipOrg, HTree, LaneTraffic};
+use crate::subarray::PARTIAL_SUM_BITS;
+
+use super::plan::{LayerPlan, ModelPlan};
+
+/// Widest per-layer lane count the tuner will consider. The chip
+/// clamp ([`ChipOrg::engine_lanes`]) still applies on top; this keeps
+/// schedules printable and candidate sweeps cheap.
+pub const MAX_AUTO_LANES: usize = 512;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum Lanes {
+    /// Every layer runs the same lane count.
+    Uniform(usize),
+    /// One lane count per model layer (pool layers hold 1).
+    PerLayer(Arc<[usize]>),
+}
+
+/// How many virtual sub-array lanes each layer executes across.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LaneSchedule {
+    lanes: Lanes,
+}
+
+impl Default for LaneSchedule {
+    /// Serial execution everywhere.
+    fn default() -> Self {
+        LaneSchedule::uniform(1)
+    }
+}
+
+impl LaneSchedule {
+    /// The same lane count for every layer (min 1) — the `--lanes N`
+    /// behaviour.
+    pub fn uniform(lanes: usize) -> LaneSchedule {
+        LaneSchedule { lanes: Lanes::Uniform(lanes.max(1)) }
+    }
+
+    /// An explicit per-layer schedule (entries clamped to >= 1;
+    /// layers past the vector run serial).
+    pub fn per_layer(lanes: Vec<usize>) -> LaneSchedule {
+        let v: Vec<usize> = lanes.iter().map(|&l| l.max(1)).collect();
+        LaneSchedule { lanes: Lanes::PerLayer(v.into()) }
+    }
+
+    /// Auto-tune one lane count per layer of `plan` against the
+    /// H-tree cost model (see the module docs). Deterministic: equal
+    /// plans and cost tables give equal schedules.
+    pub fn auto(
+        plan: &ModelPlan,
+        org: &ChipOrg,
+        htree: &HTree,
+    ) -> LaneSchedule {
+        let cycle_ns = Proposed::default().cycle_ns;
+        let lanes: Vec<usize> = (0..plan.model().layers.len())
+            .map(|li| match plan.layer_plan(li) {
+                Some(lw) => best_lanes(org, htree, lw, cycle_ns),
+                None => 1,
+            })
+            .collect();
+        LaneSchedule { lanes: Lanes::PerLayer(lanes.into()) }
+    }
+
+    /// Lane count of layer `li` (1 for layers past the schedule).
+    pub fn layer_lanes(&self, li: usize) -> usize {
+        match &self.lanes {
+            Lanes::Uniform(n) => *n,
+            Lanes::PerLayer(v) => v.get(li).copied().unwrap_or(1),
+        }
+    }
+
+    /// Widest lane count any layer uses (>= 1).
+    pub fn max_lanes(&self) -> usize {
+        match &self.lanes {
+            Lanes::Uniform(n) => *n,
+            Lanes::PerLayer(v) => {
+                v.iter().copied().max().unwrap_or(1).max(1)
+            }
+        }
+    }
+
+    /// True when every layer runs serial.
+    pub fn is_serial(&self) -> bool {
+        self.max_lanes() == 1
+    }
+
+    /// The schedule with every entry clamped to the chip's
+    /// concurrently computing sub-arrays.
+    pub fn clamped(&self, org: &ChipOrg) -> LaneSchedule {
+        match &self.lanes {
+            Lanes::Uniform(n) => {
+                LaneSchedule::uniform(org.engine_lanes(*n))
+            }
+            Lanes::PerLayer(v) => LaneSchedule::per_layer(
+                v.iter().map(|&l| org.engine_lanes(l)).collect(),
+            ),
+        }
+    }
+}
+
+impl fmt::Display for LaneSchedule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match &self.lanes {
+            Lanes::Uniform(n) => write!(f, "{n}"),
+            Lanes::PerLayer(v) => {
+                write!(f, "auto[")?;
+                for (i, l) in v.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ",")?;
+                    }
+                    write!(f, "{l}")?;
+                }
+                write!(f, "]")
+            }
+        }
+    }
+}
+
+/// Operand-broadcast bits one patch row sends out to a non-anchor
+/// lane: its K activation codes at the layer's C_m(I) width.
+pub(crate) fn broadcast_bits_per_row(lw: &LayerPlan) -> u64 {
+    lw.k as u64 * lw.m_bits as u64
+}
+
+/// Partial-sum merge bits one patch row funnels back to the anchor:
+/// one [`PARTIAL_SUM_BITS`]-wide count per filter.
+pub(crate) fn merge_bits_per_row(lw: &LayerPlan) -> u64 {
+    lw.f as u64 * PARTIAL_SUM_BITS
+}
+
+/// Charge lane `lane`'s share of one layer split: `rows` patch rows'
+/// operand broadcast out to the lane and their partial-sum merge back
+/// to the anchor (free for the anchor lane itself). The ONE place the
+/// split cost is defined — the tuner scores with it and
+/// `TileScheduler::run_tiles` charges executed splits with it, so the
+/// model optimized against is always the cost the executor reports.
+pub(crate) fn charge_lane_split(
+    t: &mut LaneTraffic,
+    org: &ChipOrg,
+    lane: usize,
+    rows: u64,
+    lw: &LayerPlan,
+) {
+    if lane == 0 {
+        return;
+    }
+    let anchor = org.lane_addr(0);
+    let addr = org.lane_addr(lane);
+    t.charge(anchor, addr, rows * broadcast_bits_per_row(lw));
+    t.charge(addr, anchor, rows * merge_bits_per_row(lw));
+}
+
+/// Analytic per-layer score [ns] of executing `lw` across `lanes`:
+/// AND-phase array cycles split across the lanes, plus the H-tree
+/// serialization and per-level latency of the broadcast/merge bits
+/// the split creates. The wire term charges one row width
+/// (`org.subarray.cols` bits) per level per array cycle.
+fn lane_score_ns(
+    org: &ChipOrg,
+    htree: &HTree,
+    lw: &LayerPlan,
+    lanes: usize,
+    cycle_ns: f64,
+) -> f64 {
+    let cols = org.subarray.cols as u64;
+    let chunks = (lw.k as u64).div_ceil(cols);
+    let row_ops = lw.f as u64
+        * lw.m_bits as u64
+        * lw.n_bits as u64
+        * chunks;
+    let rows_per_lane = lw.p.div_ceil(lanes);
+    // AND sense + write-back: two array cycles per row op (§II-A).
+    let compute_ns =
+        rows_per_lane as f64 * row_ops as f64 * 2.0 * cycle_ns;
+    let mut t = LaneTraffic::default();
+    let mut remaining = lw.p;
+    for lane in 0..lanes {
+        let rows = remaining.min(rows_per_lane);
+        if rows == 0 {
+            break;
+        }
+        remaining -= rows;
+        charge_lane_split(&mut t, org, lane, rows as u64, lw);
+    }
+    let wire_ns = t.bit_levels as f64 / cols as f64 * cycle_ns
+        + t.latency_ns(htree);
+    compute_ns + wire_ns
+}
+
+/// The fastest power-of-two lane count for one layer (ties break to
+/// the narrower count, so serial wins whenever fan-out buys nothing).
+fn best_lanes(
+    org: &ChipOrg,
+    htree: &HTree,
+    lw: &LayerPlan,
+    cycle_ns: f64,
+) -> usize {
+    let cap = org
+        .engine_lanes(usize::MAX)
+        .min(MAX_AUTO_LANES)
+        .min(lw.p.max(1));
+    let mut best = 1usize;
+    let mut best_ns = lane_score_ns(org, htree, lw, 1, cycle_ns);
+    let mut lanes = 2usize;
+    while lanes <= cap {
+        let ns = lane_score_ns(org, htree, lw, lanes, cycle_ns);
+        if ns < best_ns {
+            best = lanes;
+            best_ns = ns;
+        }
+        lanes *= 2;
+    }
+    best
+}
+
+/// H-tree traffic of one `forward_batch` call: `batch` images are
+/// assigned round-robin to `lanes` whole-image lanes, so each image
+/// on a non-anchor lane broadcasts its operand rows out once and
+/// funnels every GEMM layer's partial counts back. Exact integers —
+/// deterministic per (plan, batch, lanes) and zero when serial.
+pub fn batch_merge_traffic(
+    plan: &ModelPlan,
+    batch: usize,
+    lanes: usize,
+    org: &ChipOrg,
+) -> LaneTraffic {
+    let lanes = lanes.clamp(1, batch.max(1));
+    let mut broadcast = 0u64;
+    let mut merge = 0u64;
+    for li in 0..plan.model().layers.len() {
+        if let Some(lw) = plan.layer_plan(li) {
+            broadcast += lw.p as u64 * broadcast_bits_per_row(lw);
+            merge += lw.p as u64 * merge_bits_per_row(lw);
+        }
+    }
+    let anchor = org.lane_addr(0);
+    let mut t = LaneTraffic::default();
+    for img in 0..batch {
+        let lane = img % lanes;
+        if lane == 0 {
+            continue;
+        }
+        let addr = org.lane_addr(lane);
+        t.charge(anchor, addr, broadcast);
+        t.charge(addr, anchor, merge);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn;
+    use crate::engine::{TileScheduler, DEFAULT_TILE_PATCHES};
+    use crate::proptest_lite::Runner;
+    use crate::subarray::OpLedger;
+
+    fn plan() -> ModelPlan {
+        ModelPlan::compile(cnn::micro_net(), 1, 4, 0x7A5E).unwrap()
+    }
+
+    #[test]
+    fn uniform_schedule_basics() {
+        let s = LaneSchedule::uniform(4);
+        assert_eq!(s.layer_lanes(0), 4);
+        assert_eq!(s.layer_lanes(99), 4);
+        assert_eq!(s.max_lanes(), 4);
+        assert!(!s.is_serial());
+        assert!(LaneSchedule::uniform(0).is_serial());
+        assert_eq!(LaneSchedule::default(), LaneSchedule::uniform(1));
+        assert_eq!(format!("{}", LaneSchedule::uniform(8)), "8");
+    }
+
+    #[test]
+    fn per_layer_schedule_basics() {
+        let s = LaneSchedule::per_layer(vec![2, 0, 8]);
+        assert_eq!(s.layer_lanes(0), 2);
+        assert_eq!(s.layer_lanes(1), 1, "entries clamp to >= 1");
+        assert_eq!(s.layer_lanes(2), 8);
+        assert_eq!(s.layer_lanes(3), 1, "past the schedule is serial");
+        assert_eq!(s.max_lanes(), 8);
+        assert_eq!(format!("{s}"), "auto[2,1,8]");
+        let clamped = LaneSchedule::per_layer(vec![usize::MAX])
+            .clamped(&ChipOrg::default());
+        assert_eq!(
+            clamped.layer_lanes(0),
+            ChipOrg::default().parallel_subarrays()
+        );
+    }
+
+    #[test]
+    fn auto_schedule_is_deterministic_and_shaped_by_layers() {
+        let p = plan();
+        let org = ChipOrg::default();
+        let h = HTree::default();
+        let a = LaneSchedule::auto(&p, &org, &h);
+        let b = LaneSchedule::auto(&p, &org, &h);
+        assert_eq!(a, b, "tuning must be deterministic");
+        // micro_net: conv (64 patch rows), pool, fc (1 patch row).
+        assert!(
+            a.layer_lanes(0) > 1,
+            "a 64-row conv layer must fan out: {a}"
+        );
+        assert_eq!(a.layer_lanes(1), 1, "pool layers hold no lanes");
+        assert_eq!(
+            a.layer_lanes(2),
+            1,
+            "a single-row FC layer has nothing to split: {a}"
+        );
+        assert!(a.max_lanes() <= MAX_AUTO_LANES);
+        let shown = format!("{a}");
+        assert!(shown.starts_with("auto["), "{shown}");
+    }
+
+    #[test]
+    fn score_charges_tree_crossings() {
+        // Fan-out past the mat boundary must pay wire time: the score
+        // of a 64-lane split exceeds pure compute/64.
+        let p = plan();
+        let org = ChipOrg::default();
+        let h = HTree::default();
+        let lw = p.layer_plan(0).unwrap();
+        let cycle_ns = Proposed::default().cycle_ns;
+        let serial = lane_score_ns(&org, &h, lw, 1, cycle_ns);
+        let wide = lane_score_ns(&org, &h, lw, 64, cycle_ns);
+        assert!(wide < serial, "fan-out must help a 64-row layer");
+        assert!(
+            wide > serial / 64.0,
+            "wide schedules must pay the H-tree: {wide} vs {}",
+            serial / 64.0
+        );
+    }
+
+    #[test]
+    fn batch_traffic_zero_when_serial_and_exact_otherwise() {
+        let p = plan();
+        let org = ChipOrg::default();
+        assert!(batch_merge_traffic(&p, 8, 1, &org).is_zero());
+        assert!(batch_merge_traffic(&p, 1, 8, &org).is_zero());
+        let t2 = batch_merge_traffic(&p, 4, 2, &org);
+        assert!(!t2.is_zero());
+        // Deterministic and strictly monotone in cross-lane images.
+        assert_eq!(t2, batch_merge_traffic(&p, 4, 2, &org));
+        let t4 = batch_merge_traffic(&p, 8, 2, &org);
+        assert!(t4.bit_levels > t2.bit_levels);
+    }
+
+    #[test]
+    fn auto_schedule_bit_identical_to_serial_property() {
+        // Satellite acceptance: every auto-tuned schedule yields
+        // logits and OpLedger totals bit-identical to serial — for
+        // single-image tiled execution AND batched serving.
+        let org = ChipOrg::default();
+        let h = HTree::default();
+        let mut r = Runner::with_cases(0xA07, 8);
+        r.run("auto schedule == serial", |g| {
+            let p = ModelPlan::compile(
+                cnn::micro_net(),
+                g.u32(1, 2),
+                g.u32(1, 4),
+                g.u64_any(),
+            )
+            .unwrap();
+            let auto = TileScheduler::from_schedule(
+                LaneSchedule::auto(&p, &org, &h),
+                &org,
+            );
+            let serial = TileScheduler::new(1);
+            let image: Vec<f32> = (0..p.input_elems())
+                .map(|_| g.f64(0.0, 1.0) as f32)
+                .collect();
+            let tile_patches = g.usize(1, 24);
+            // Tiled single-image path, driven to completion.
+            let (want, want_ledger) = {
+                let mut rf =
+                    p.begin_forward(&image, tile_patches, &serial);
+                while rf.step_wave().is_some() {}
+                let ledger = *rf.ledger();
+                (rf.into_logits(), ledger)
+            };
+            let mut rf = p.begin_forward(&image, tile_patches, &auto);
+            while rf.step_wave().is_some() {}
+            assert_eq!(rf.ledger(), &want_ledger, "ledger diverged");
+            assert_eq!(rf.into_logits(), want, "logits diverged");
+            // Batched serving path.
+            let batch = g.usize(1, 5);
+            let flat: Vec<f32> = (0..batch * p.input_elems())
+                .map(|_| g.f64(0.0, 1.0) as f32)
+                .collect();
+            let a = p.forward_batch(&flat, batch, &auto).unwrap();
+            let s = p.forward_batch(&flat, batch, &serial).unwrap();
+            assert_eq!(a.logits, s.logits, "batch logits diverged");
+            assert_eq!(a.ledger, s.ledger, "batch ledger diverged");
+        });
+    }
+
+    #[test]
+    fn executed_traffic_matches_schedule_not_threads() {
+        // The merge traffic charged by execution is a function of the
+        // schedule alone: two runs of the same schedule charge
+        // identical exact totals, and serial charges none.
+        let p = plan();
+        let org = ChipOrg::default();
+        let h = HTree::default();
+        let image: Vec<f32> = (0..p.input_elems())
+            .map(|i| (i % 13) as f32 / 12.0)
+            .collect();
+        let auto = TileScheduler::from_schedule(
+            LaneSchedule::auto(&p, &org, &h),
+            &org,
+        );
+        let run = |sched: &TileScheduler| {
+            let mut rf = p.begin_forward(&image, 4, sched);
+            while rf.step_wave().is_some() {}
+            *rf.traffic()
+        };
+        let t1 = run(&auto);
+        let t2 = run(&auto);
+        assert_eq!(t1, t2, "traffic must be bit-identical across runs");
+        assert!(!t1.is_zero(), "a fanned-out schedule moves bits");
+        assert!(run(&TileScheduler::new(1)).is_zero());
+        let _ = p.forward(&image, DEFAULT_TILE_PATCHES, &auto);
+    }
+
+    #[test]
+    fn ledger_and_merge_stay_separate() {
+        // OpLedger (sub-array row ops) stays lane-invariant even when
+        // traffic is charged — the two ledgers never mix.
+        let p = plan();
+        let lw = p.layer_plan(0).unwrap();
+        let ledger = OpLedger::for_and_tile(4, 512);
+        assert_eq!(ledger.logic_ops, 4);
+        assert!(merge_bits_per_row(lw) > 0);
+        assert!(broadcast_bits_per_row(lw) > 0);
+    }
+}

@@ -14,18 +14,23 @@
 //! sub-array [`OpLedger`].
 //!
 //! This driver is a thin consumer of [`crate::engine`]: execution
-//! advances in **waves** of up to [`InferencePlan::lanes`] tiles
-//! ([`ResumableForward::step_wave`]) — the sub-arrays of one wave
+//! advances in **waves** of up to the current layer's scheduled lane
+//! count ([`ResumableForward::step_wave`], driven by the
+//! [`InferencePlan::lanes`] schedule) — the sub-arrays of one wave
 //! compute concurrently, so a wave consumes one tile's worth of
-//! on-cycles regardless of its width. With `lanes == 1` the behaviour
-//! is exactly the serial tile-at-a-time execution.
+//! on-cycles regardless of its width. With a serial schedule the
+//! behaviour is exactly the tile-at-a-time execution. The H-tree
+//! traffic each lane split creates (operand broadcast + partial-sum
+//! merge) is charged into the `inter_lane_merge` ledger component, so
+//! the reported energy reflects interconnect cost, not just row ops.
 
-use crate::accel::charge_nv_checkpoint;
-use crate::arch::ChipOrg;
+use crate::accel::{charge_inter_lane_merge, charge_nv_checkpoint};
+use crate::arch::{ChipOrg, HTree, LaneTraffic};
 use crate::device::SotCosts;
-use crate::energy::CostBreakdown;
+use crate::energy::{components, CostBreakdown};
 use crate::engine::{
-    ModelPlan, ResumableForward, TileScheduler, SNAPSHOT_HEADER_WORDS,
+    LaneSchedule, ModelPlan, ResumableForward, TileScheduler,
+    SNAPSHOT_HEADER_WORDS,
 };
 use crate::nvfa::NvStateStore;
 use crate::subarray::OpLedger;
@@ -42,9 +47,11 @@ pub struct InferencePlan {
     /// Array cycles one tile (= one wave; parallel lanes share the
     /// same cycles) consumes against the power trace.
     pub cycles_per_tile: u64,
-    /// Virtual sub-array lanes tiles execute across (clamped to the
-    /// chip's concurrent sub-arrays; 1 = serial).
-    pub lanes: usize,
+    /// Lane schedule tiles execute across (entries clamped to the
+    /// chip's concurrent sub-arrays; [`LaneSchedule::uniform`]`(1)` =
+    /// serial, [`LaneSchedule::auto`] = the H-tree-tuned per-layer
+    /// schedule).
+    pub lanes: LaneSchedule,
     /// CMOS-only baseline: no NV checkpoints, every failure restarts
     /// the inference from the input image.
     pub volatile_only: bool,
@@ -56,7 +63,7 @@ impl Default for InferencePlan {
             tile_patches: 16,
             checkpoint_period: 4,
             cycles_per_tile: 10,
-            lanes: 1,
+            lanes: LaneSchedule::uniform(1),
             volatile_only: false,
         }
     }
@@ -94,8 +101,13 @@ pub struct IntermittentInferenceResult {
     /// MTJ checkpoint-write energy [µJ] (the `nv_checkpoint` ledger
     /// component).
     pub checkpoint_energy_uj: f64,
+    /// H-tree traffic of the executed lane splits, including
+    /// re-executed waves (exact integers; zero under a serial
+    /// schedule).
+    pub merge_traffic: LaneTraffic,
     /// Energy + latency ledger: `tile_execution` (sub-array row ops,
-    /// including re-executed tiles) + `nv_checkpoint`.
+    /// including re-executed tiles) + `nv_checkpoint` +
+    /// `inter_lane_merge` (H-tree wire cost of the lane schedule).
     pub cost: CostBreakdown,
     pub events: Vec<TileEvent>,
 }
@@ -139,10 +151,10 @@ fn commit_checkpoint(
 /// `exec.checkpoint_period` tiles into an [`NvStateStore`] (charging
 /// header + fresh partial-sum words as MTJ writes) and resumes from it
 /// after each outage. Volatile mode models the CMOS-only baseline:
-/// every outage restarts from the image. Waves of `exec.lanes` tiles
-/// execute concurrently and consume `exec.cycles_per_tile` on-cycles
-/// per wave; logits and snapshots are bit-identical for any lane
-/// count.
+/// every outage restarts from the image. Waves execute the scheduled
+/// lane count concurrently and consume `exec.cycles_per_tile`
+/// on-cycles per wave; logits and snapshots are bit-identical for any
+/// lane schedule.
 pub fn run_intermittent_inference(
     plan: &ModelPlan,
     image: &[f32],
@@ -151,12 +163,16 @@ pub fn run_intermittent_inference(
 ) -> IntermittentInferenceResult {
     assert!(exec.checkpoint_period >= 1, "checkpoint period >= 1");
     assert!(exec.cycles_per_tile >= 1, "cycles per tile >= 1");
-    let sched = TileScheduler::for_chip(&ChipOrg::default(), exec.lanes);
+    let sched = TileScheduler::from_schedule(
+        exec.lanes.clone(),
+        &ChipOrg::default(),
+    );
     let mut store = NvStateStore::new();
-    let mut rf = plan.begin_forward(image, exec.tile_patches, sched);
+    let mut rf = plan.begin_forward(image, exec.tile_patches, &sched);
     let tiles_total = rf.total_tiles();
     let mut events = Vec::new();
     let mut ledger = OpLedger::default();
+    let mut traffic = LaneTraffic::default();
     let mut executed = 0u64;
     let mut reexecuted = 0u64;
     let mut failures = 0u64;
@@ -206,11 +222,12 @@ pub fn run_intermittent_inference(
                 tiles_lost: tiles_since_ckpt,
             });
             ledger.merge(rf.ledger());
+            traffic.merge(rf.traffic());
             if !exec.volatile_only && store.has_checkpoint() {
                 let words = store.restore().expect("checkpoint present");
                 // Snapshots are self-describing (tile size is in the
-                // header), so restore needs only the plan + lanes.
-                rf = ResumableForward::resume(plan, sched, &words)
+                // header), so restore needs only the plan + schedule.
+                rf = ResumableForward::resume(plan, &sched, &words)
                     .expect("NV snapshot must restore");
                 reexecuted += tiles_since_ckpt;
                 tiles_in_state -= tiles_since_ckpt;
@@ -221,7 +238,7 @@ pub fn run_intermittent_inference(
                 });
             } else {
                 // CMOS-only (or nothing durable yet): cold restart.
-                rf = plan.begin_forward(image, exec.tile_patches, sched);
+                rf = plan.begin_forward(image, exec.tile_patches, &sched);
                 reexecuted += tiles_in_state;
                 tiles_in_state = 0;
                 committed = (usize::MAX, 0);
@@ -231,6 +248,7 @@ pub fn run_intermittent_inference(
         }
     }
     ledger.merge(rf.ledger());
+    traffic.merge(rf.traffic());
     if finished
         && !exec.volatile_only
         && (tiles_since_ckpt > 0 || !store.has_checkpoint())
@@ -242,17 +260,18 @@ pub fn run_intermittent_inference(
     }
     events.push(TileEvent::Done);
 
-    // Charge both energy streams through the shared ledger types.
+    // Charge all three energy streams through the shared ledger types.
     let costs = SotCosts::default();
     let mut cost = CostBreakdown::new();
     cost.add(
-        "tile_execution",
+        components::TILE_EXECUTION,
         ledger.energy_pj(&costs),
         ledger.latency_ns(&costs),
     );
     charge_nv_checkpoint(&mut cost, store.nv_bit_writes);
+    charge_inter_lane_merge(&mut cost, &traffic, &HTree::default());
     let checkpoint_energy_uj = cost
-        .component("nv_checkpoint")
+        .component(components::NV_CHECKPOINT)
         .map(|(e, _)| e * 1e-6)
         .unwrap_or(0.0);
 
@@ -267,6 +286,7 @@ pub fn run_intermittent_inference(
         restores: store.restores,
         cycles_spent: cycles,
         checkpoint_energy_uj,
+        merge_traffic: traffic,
         cost,
         events,
     }
@@ -368,7 +388,10 @@ mod tests {
             checkpoint_period: 2,
             ..InferencePlan::default()
         };
-        let wide = InferencePlan { lanes: 4, ..serial.clone() };
+        let wide = InferencePlan {
+            lanes: LaneSchedule::uniform(4),
+            ..serial.clone()
+        };
         let clean = uninterrupted(&p, &img, &serial);
         let clean_wide = uninterrupted(&p, &img, &wide);
         assert!(clean_wide.finished);
@@ -384,6 +407,53 @@ mod tests {
         let rough = run_intermittent_inference(&p, &img, &trace, &wide);
         assert!(rough.finished);
         assert_eq!(rough.logits, clean.logits);
+    }
+
+    #[test]
+    fn merge_component_reflects_the_lane_schedule() {
+        // Serial runs report a zero inter-lane merge component; wide
+        // and auto-tuned schedules charge exact, reproducible H-tree
+        // traffic while staying bit-identical in logits.
+        let p = plan();
+        let img = image(&p);
+        let serial = InferencePlan {
+            tile_patches: 2,
+            checkpoint_period: 2,
+            ..InferencePlan::default()
+        };
+        let base = uninterrupted(&p, &img, &serial);
+        assert!(base.merge_traffic.is_zero());
+        assert_eq!(
+            base.cost.component("inter_lane_merge"),
+            Some((0.0, 0.0)),
+            "the component must be present even when serial"
+        );
+        let auto = InferencePlan {
+            lanes: LaneSchedule::auto(
+                &p,
+                &ChipOrg::default(),
+                &HTree::default(),
+            ),
+            ..serial.clone()
+        };
+        let a1 = uninterrupted(&p, &img, &auto);
+        let a2 = uninterrupted(&p, &img, &auto);
+        assert_eq!(a1.logits, base.logits, "auto schedule diverged");
+        assert!(!a1.merge_traffic.is_zero());
+        assert_eq!(
+            a1.merge_traffic, a2.merge_traffic,
+            "traffic must be bit-identical across runs"
+        );
+        let (e, _) = a1.cost.component("inter_lane_merge").unwrap();
+        assert!(e > 0.0, "fanned-out waves must charge the tree");
+        // Re-executed waves charge again: a failing trace on the same
+        // schedule moves at least as many bits.
+        let trace = PowerTrace::periodic(40, 5, 400);
+        let rough = run_intermittent_inference(&p, &img, &trace, &auto);
+        assert!(rough.finished);
+        assert!(
+            rough.merge_traffic.bit_levels >= a1.merge_traffic.bit_levels
+        );
     }
 
     #[test]

@@ -18,7 +18,8 @@
 //!   [`asr`], [`nvfa`], [`intermittency`], [`energy`]
 //! * system: [`cnn`], [`accel`], [`baselines`], [`dataset`]
 //! * engine: [`engine`] (compiled model plans, sub-array-parallel tile
-//!   execution, resumable forward passes — DESIGN.md §7)
+//!   execution on the persistent lane runtime, H-tree-aware lane
+//!   auto-tuning, resumable forward passes — DESIGN.md §7–§8)
 //! * serving: [`runtime`] (PJRT, gated behind the `pjrt` feature),
 //!   [`coordinator`] (ingress → per-worker batchers → executor pool,
 //!   incl. the PIM co-sim serving backend over `engine`), [`metrics`]

@@ -17,7 +17,8 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 use pims::accel::{Accelerator, Proposed};
 use pims::baselines::{Asic, Imce, Reram};
-use pims::cli::{flag, opt, opt_default, Cli};
+use pims::arch::{ChipOrg, HTree};
+use pims::cli::{flag, opt, opt_default, Cli, LaneArg};
 use pims::cnn;
 use pims::configsys::Config;
 use pims::coordinator::{
@@ -25,7 +26,7 @@ use pims::coordinator::{
 };
 use pims::dataset::Dataset;
 use pims::device::{monte_carlo_sense, SotCell};
-use pims::engine::ModelPlan;
+use pims::engine::{LaneSchedule, ModelPlan, TileScheduler};
 use pims::intermittency::{
     forward_progress, inference_forward_progress, run_intermittent,
     run_intermittent_inference, FrameWorkload, InferencePlan, PowerTrace,
@@ -49,7 +50,7 @@ fn cli() -> Cli {
                 opt_default("wbits", "pimsim weight bits", "1"),
                 opt_default("abits", "pimsim activation bits", "4"),
                 opt_default("seed", "pimsim weight/dataset seed", "42"),
-                opt_default("lanes", "pimsim engine lanes per worker (virtual parallel sub-arrays)", "1"),
+                opt_default("lanes", "pimsim engine lanes per worker (virtual parallel sub-arrays), or 'auto' for per-layer H-tree tuning", "1"),
                 opt("chaos", "kill workers mid-batch on a trace schedule: poisson:<mean-on>:<off>[:<seed>] | periodic:<on>:<off>[:<count>] | bursty:<good>:<bad>:<off>[:<epochs>:<per-epoch>] (pimsim only)"),
                 opt_default("chaos-cycles", "trace cycles one batch consumes (chaos mode)", "1"),
                 opt_default("config", "optional config file", ""),
@@ -67,7 +68,7 @@ fn cli() -> Cli {
                 opt_default("tile-patches", "patch rows per resumable tile", "16"),
                 opt_default("ckpt", "checkpoint period (tiles)", "4"),
                 opt_default("cycles-per-tile", "trace cycles one tile consumes", "10"),
-                opt_default("lanes", "engine lanes (virtual parallel sub-arrays; one wave of lanes tiles shares the tile cycles)", "1"),
+                opt_default("lanes", "engine lanes (virtual parallel sub-arrays; one wave of lanes tiles shares the tile cycles), or 'auto' for per-layer H-tree tuning", "1"),
             ],
         )
         .command(
@@ -118,6 +119,21 @@ fn cli() -> Cli {
                 opt_default("fill", "constant fill value", "0.5"),
             ],
         )
+}
+
+/// Resolve a parsed `--lanes` argument against a compiled plan: fixed
+/// counts become uniform schedules, `auto` tunes one count per layer
+/// on the default chip + H-tree models. Shared by `infer` and `serve`
+/// so both subcommands interpret the flag identically.
+fn resolve_lanes(arg: LaneArg, plan: &ModelPlan) -> LaneSchedule {
+    match arg {
+        LaneArg::Fixed(n) => LaneSchedule::uniform(n),
+        LaneArg::Auto => LaneSchedule::auto(
+            plan,
+            &ChipOrg::default(),
+            &HTree::default(),
+        ),
+    }
 }
 
 fn pick_model(name: &str) -> Result<cnn::Model> {
@@ -308,10 +324,14 @@ fn serve_pimsim(p: &pims::cli::Parsed, o: &ServeOpts) -> Result<()> {
     let w_bits = p.get_usize("wbits")?.unwrap_or(1) as u32;
     let a_bits = p.get_usize("abits")?.unwrap_or(4) as u32;
     let seed = p.get_usize("seed")?.unwrap_or(42) as u64;
-    // Clamp up front so the banner reports what actually runs.
-    let lanes = pims::arch::ChipOrg::default()
-        .engine_lanes(p.get_usize_at_least("lanes", 1)?);
     let model = cnn::svhn_net();
+    // One probe plan, compiled once, drives auto-tuning AND the
+    // banner's merge-share line (workers compile their own replicas
+    // on their threads). Resolving the schedule up front means the
+    // banner reports what actually runs and every worker shares one
+    // schedule. The CLI clamp lives in `cli::Parsed::get_lanes`.
+    let probe = ModelPlan::compile(model.clone(), w_bits, a_bits, seed)?;
+    let sched = resolve_lanes(p.get_lanes("lanes")?, &probe);
     let ds = pims::dataset::generate(
         256,
         model.input_hw,
@@ -320,8 +340,14 @@ fn serve_pimsim(p: &pims::cli::Parsed, o: &ServeOpts) -> Result<()> {
     );
     println!(
         "serving PIM co-sim ({}), W{w_bits}:I{a_bits}, batch={}, \
-         workers={}, {} engine lane(s)/worker, {} synthetic images",
-        model.name, o.batch, o.workers, lanes, ds.n
+         workers={}, lane schedule {} per worker (shared engine \
+         thread budget: {}), {} synthetic images",
+        model.name,
+        o.batch,
+        o.workers,
+        sched,
+        pims::engine::LaneRuntime::budget(),
+        ds.n
     );
     let batch = o.batch;
     let chaos = chaos_policy(p)?;
@@ -332,11 +358,20 @@ fn serve_pimsim(p: &pims::cli::Parsed, o: &ServeOpts) -> Result<()> {
             cp.spec, cp.cycles_per_batch
         );
     }
+    // The schedule's H-tree share of each request (0 when serial) —
+    // the same engine-side accounting the backends charge, read off
+    // the probe plan so the results can attribute it.
+    let merge_uj_per_request =
+        TileScheduler::from_schedule(sched.clone(), &ChipOrg::default())
+            .batch_traffic(&probe, batch)
+            .energy_pj(&HTree::default())
+            * 1e-6
+            / batch.max(1) as f64;
     let factory = move |_worker: usize| {
         // Same seed on every worker: bit-identical replicas (for any
-        // lane count — engine results are lane-invariant).
+        // lane schedule — engine results are lane-invariant).
         PimSimBackend::new(model.clone(), w_bits, a_bits, batch, seed)
-            .map(|b| b.with_lanes(lanes))
+            .map(|b| b.with_lane_schedule(sched.clone()))
     };
     let policy =
         BatchPolicy { max_wait: Duration::from_millis(o.wait_ms) };
@@ -378,6 +413,10 @@ fn serve_pimsim(p: &pims::cli::Parsed, o: &ServeOpts) -> Result<()> {
          (accelerator model)",
         energy_uj,
         energy_uj / done.max(1) as f64
+    );
+    println!(
+        "inter-lane merge: {merge_uj_per_request:.6} µJ/request \
+         (H-tree share of the lane schedule, included above)"
     );
     print_serve_tail(&m, batch, done, wall);
     Ok(())
@@ -434,20 +473,22 @@ fn cmd_infer(p: &pims::cli::Parsed) -> Result<()> {
     let ds = pims::dataset::generate(1, model.input_hw, model.input_c, seed);
     let image = ds.image(0).to_vec();
     let mplan = ModelPlan::compile(model, w_bits, a_bits, seed)?;
+    // The CLI clamp (and the `auto` literal) live in
+    // `cli::Parsed::get_lanes`; auto tunes per layer against the
+    // compiled plan and the H-tree cost model.
+    let lanes = resolve_lanes(p.get_lanes("lanes")?, &mplan);
     let plan = InferencePlan {
         tile_patches: p.get_usize_at_least("tile-patches", 1)?,
         checkpoint_period: p.get_u64("ckpt")?.unwrap_or(4).max(1),
         cycles_per_tile: p.get_u64("cycles-per-tile")?.unwrap_or(10).max(1),
-        // Clamp up front so the banner reports what actually runs.
-        lanes: pims::arch::ChipOrg::default()
-            .engine_lanes(p.get_usize_at_least("lanes", 1)?),
+        lanes,
         volatile_only: false,
     };
     let tiles = mplan.total_tiles(plan.tile_patches);
     let work = tiles * plan.cycles_per_tile;
     println!(
         "model={} W{w_bits}:I{a_bits}, {tiles} tiles x {} cycles \
-         ({} patch rows/tile), {} lane(s), ckpt every {} tiles",
+         ({} patch rows/tile), lane schedule {}, ckpt every {} tiles",
         mplan.model_name(),
         plan.cycles_per_tile,
         plan.tile_patches,

@@ -13,6 +13,13 @@
 
 use crate::device::SotCosts;
 
+/// Bits of one funneled partial count: the width at which a
+/// sub-array's AND-accumulation partials leave for the EPU / a merge
+/// anchor over the H-tree (shared by the accelerator cost model and
+/// the engine's inter-lane merge accounting, so both charge the same
+/// wire traffic per partial).
+pub const PARTIAL_SUM_BITS: u64 = 16;
+
 /// Operation ledger: counts of each primitive issued on a sub-array.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct OpLedger {

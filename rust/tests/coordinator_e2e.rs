@@ -381,6 +381,79 @@ fn failing_worker_does_not_poison_siblings() {
     );
 }
 
+/// ISSUE 4 satellite: engine lane threads are a shared, fixed
+/// process-wide budget. Before the persistent `LaneRuntime`, `serve
+/// --workers 4 --lanes 8` could stand up 4 x 8 scoped engine threads
+/// per batch wave; now every worker draws from one pool, so the
+/// engine thread count never exceeds the budget and never grows
+/// across serving bursts.
+#[test]
+fn engine_threads_bounded_by_shared_lane_budget() {
+    use pims::engine::{LaneBudget, LaneRuntime};
+    let budget = LaneBudget::shared().threads();
+    assert!(budget >= 1);
+    assert_eq!(budget, LaneRuntime::budget());
+
+    let mk = move |_w: usize| {
+        PimSimBackend::new(cnn::micro_net(), 1, 4, 4, 0xB0D6)
+            .map(|b| b.with_lanes(8))
+    };
+    let serve_burst = || {
+        let c = Coordinator::start_pool(
+            mk,
+            4,
+            BatchPolicy { max_wait: Duration::from_millis(1) },
+            64,
+        )
+        .unwrap();
+        let elems = c.input_elems();
+        let pendings: Vec<_> = (0..24)
+            .map(|i| c.submit_blocking(img(elems, i % 10)).unwrap())
+            .collect();
+        for p in pendings {
+            p.wait().unwrap();
+        }
+        let m = c.shutdown();
+        assert_eq!(m.counters.served, 24);
+    };
+
+    serve_burst();
+    let after_first = LaneRuntime::spawned_threads();
+    assert!(
+        after_first <= budget,
+        "{after_first} engine threads spawned, budget {budget}"
+    );
+    serve_burst();
+    assert_eq!(
+        LaneRuntime::spawned_threads(),
+        after_first,
+        "engine thread count grew across serving bursts"
+    );
+
+    // On Linux, also count the live threads by name: total engine
+    // threads in the process must be within the budget even while a
+    // 4-worker x 8-lane pool was just serving.
+    #[cfg(target_os = "linux")]
+    {
+        let mut live = 0usize;
+        if let Ok(tasks) = std::fs::read_dir("/proc/self/task") {
+            for t in tasks.flatten() {
+                if let Ok(comm) =
+                    std::fs::read_to_string(t.path().join("comm"))
+                {
+                    if comm.trim().starts_with("pims-lane") {
+                        live += 1;
+                    }
+                }
+            }
+            assert!(
+                live <= budget,
+                "{live} live engine threads exceed the budget {budget}"
+            );
+        }
+    }
+}
+
 /// Acceptance: the PIM co-simulation serves an end-to-end request
 /// through the coordinator and returns logits bit-identical to the
 /// direct cnn reference path.

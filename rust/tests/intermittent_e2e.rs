@@ -13,14 +13,21 @@
 //!    trace schedule, serial AND 4-lane backends — resumes from NV
 //!    state and answers every admitted request with uncorrupted
 //!    logits.
+//! 4. (ISSUE 4) Snapshots are lane-schedule-agnostic: a checkpoint
+//!    taken under the auto-tuned per-layer schedule restores
+//!    bit-identically under a serial (or any uniform) schedule, and
+//!    vice versa — power-up onto a differently provisioned chip.
 
 use std::time::Duration;
 
+use pims::arch::{ChipOrg, HTree};
 use pims::cnn;
 use pims::coordinator::{
     BatchPolicy, ChaosPolicy, Coordinator, PimSimBackend,
 };
-use pims::engine::ModelPlan;
+use pims::engine::{
+    LaneSchedule, ModelPlan, ResumableForward, TileScheduler,
+};
 use pims::intermittency::{
     inference_forward_progress, run_intermittent_inference,
     InferencePlan, PowerTrace, TraceSpec,
@@ -117,7 +124,10 @@ fn threaded_lanes_survive_failures_bit_identically() {
     // 4 lanes execute concurrently.
     let trace = PowerTrace::periodic(40, 5, 400);
     for lanes in [2usize, 4, 8] {
-        let wide = InferencePlan { lanes, ..serial.clone() };
+        let wide = InferencePlan {
+            lanes: LaneSchedule::uniform(lanes),
+            ..serial.clone()
+        };
         let r = run_intermittent_inference(&mplan, &img, &trace, &wide);
         assert!(r.finished, "lanes={lanes} must finish");
         assert!(r.failures >= 1, "lanes={lanes} saw no failures");
@@ -128,6 +138,59 @@ fn threaded_lanes_survive_failures_bit_identically() {
              bit-identically ({} failures)",
             r.failures
         );
+    }
+}
+
+#[test]
+fn snapshots_cross_restore_between_lane_schedules() {
+    // ISSUE 4 satellite: v2 snapshots are lane-agnostic. A checkpoint
+    // taken mid-run under the auto-tuned per-layer schedule restores
+    // bit-identically under serial/uniform schedules, and a serial
+    // checkpoint restores under the auto schedule.
+    let mplan =
+        ModelPlan::compile(cnn::micro_net(), 1, 4, 0x5C4D).unwrap();
+    let img = image(mplan.input_elems(), 6);
+    let want = mplan.reference_logits(&img);
+    let org = ChipOrg::default();
+    let auto = TileScheduler::from_schedule(
+        LaneSchedule::auto(&mplan, &org, &HTree::default()),
+        &org,
+    );
+    assert!(
+        auto.lanes() > 1,
+        "the tuned micro_net schedule must fan out somewhere"
+    );
+    let serial = TileScheduler::new(1);
+    let uniform3 = TileScheduler::new(3);
+    let schedules: [(&str, &TileScheduler); 3] = [
+        ("auto", &auto),
+        ("serial", &serial),
+        ("uniform3", &uniform3),
+    ];
+    for (from_name, from) in schedules {
+        // Take a mid-layer snapshot under `from`.
+        let mut rf = mplan.begin_forward(&img, 2, from);
+        rf.step_wave();
+        rf.step_wave();
+        assert!(!rf.is_done(), "snapshot point must be mid-run");
+        let words = rf.snapshot();
+        drop(rf); // power failure: volatile state gone
+        for (to_name, to) in schedules {
+            let mut resumed =
+                ResumableForward::resume(&mplan, to, &words)
+                    .unwrap_or_else(|e| {
+                        panic!(
+                            "{from_name} -> {to_name} restore \
+                             refused: {e}"
+                        )
+                    });
+            while resumed.step_wave().is_some() {}
+            assert_eq!(
+                resumed.logits().unwrap(),
+                &want[..],
+                "{from_name} snapshot diverged restoring on {to_name}"
+            );
+        }
     }
 }
 

@@ -9,12 +9,11 @@
 //! make artifacts && cargo run --release --features pjrt --example quickstart
 //! ```
 
-use std::time::Duration;
-
-use anyhow::Result;
+use anyhow::{Context, Result};
 use pims::accel::{Accelerator, Proposed};
+use pims::apicfg::RunConfig;
 use pims::cnn;
-use pims::coordinator::{BatchPolicy, Coordinator, PimSimBackend};
+use pims::coordinator::Coordinator;
 use pims::dataset::Dataset;
 use pims::runtime::{artifacts_dir, Engine, Manifest};
 
@@ -32,14 +31,18 @@ fn main() -> Result<()> {
     // --- 2. Serve traffic through the coordinator with the PIM
     // co-simulation itself as the backend: 2 workers, each owning a
     // bit-identical replica (same seed) of the bit-accurate datapath.
-    let workers = 2;
-    let model = cnn::micro_net();
-    let coordinator = Coordinator::start_pool(
-        move |_worker| PimSimBackend::new(model.clone(), 1, 4, 2, 42),
-        workers,
-        BatchPolicy { max_wait: Duration::from_millis(1) },
-        64,
-    )?;
+    // One declarative RunConfig launches the whole stack (serving API
+    // v2, DESIGN.md §9).
+    let cfg = RunConfig {
+        model: "micro".to_string(),
+        batch: 2,
+        workers: 2,
+        queue: 64,
+        wait_ms: 1.0,
+        ..RunConfig::default()
+    };
+    let workers = cfg.workers;
+    let coordinator = Coordinator::launch(&cfg)?;
     let elems = coordinator.input_elems();
     let pendings: Vec<_> = (0..8)
         .map(|i| {
@@ -55,7 +58,9 @@ fn main() -> Result<()> {
         energy += r.energy_uj;
         println!(
             "  pimsim request {i}: class {} ({:.3} µJ, {:?})",
-            r.prediction, r.energy_uj, r.latency
+            r.prediction().context("classify reply")?,
+            r.energy_uj,
+            r.latency
         );
     }
     let m = coordinator.shutdown();

@@ -11,12 +11,13 @@
 //! make artifacts && cargo run --release --example serve_svhn -- [requests] [batch] [workers]
 //! ```
 
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
 use anyhow::Result;
-use pims::coordinator::{BatchPolicy, Coordinator, PjrtBackend};
+use pims::apicfg::{BackendKind, RunConfig};
+use pims::coordinator::Coordinator;
 use pims::dataset::Dataset;
-use pims::runtime::{artifacts_dir, Engine, Manifest};
+use pims::runtime::{artifacts_dir, Manifest};
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -37,21 +38,18 @@ fn main() -> Result<()> {
         requests, manifest.w_bits, manifest.a_bits, ds.n
     );
 
-    let model_path = manifest.model_path(&dir, batch);
-    let (h, w, c) = manifest.input_shape;
-    let (elems, classes) = (manifest.input_elems(), manifest.num_classes);
-    // Each pool worker compiles its own executable on its own thread:
-    // PJRT handles never cross threads.
-    let coordinator = Coordinator::start_pool(
-        move |_worker| {
-            let engine = Engine::cpu()?;
-            let exe = engine.load_hlo(&model_path, batch, elems, classes)?;
-            Ok(PjrtBackend { exe, shape: [batch, h, w, c] })
-        },
+    // One declarative RunConfig launches the PJRT pool; each worker
+    // compiles its own executable on its own thread (PJRT handles
+    // never cross threads — Coordinator::launch keeps the invariant).
+    let cfg = RunConfig {
+        backend: BackendKind::Pjrt,
+        batch,
         workers,
-        BatchPolicy { max_wait: Duration::from_millis(2) },
-        256,
-    )?;
+        queue: 256,
+        wait_ms: 2.0,
+        ..RunConfig::default()
+    };
+    let coordinator = Coordinator::launch(&cfg)?;
 
     // Closed-loop load generator with a modest in-flight window so the
     // batcher sees real concurrency.
@@ -65,16 +63,18 @@ fn main() -> Result<()> {
         if inflight.len() >= 2 * batch {
             let (idx, p) = inflight.remove(0);
             let r = p.wait()?;
-            confusion[ds.labels[idx] as usize][r.prediction] += 1;
-            if r.prediction == ds.labels[idx] as usize {
+            let pred = r.prediction().expect("classify reply");
+            confusion[ds.labels[idx] as usize][pred] += 1;
+            if pred == ds.labels[idx] as usize {
                 correct += 1;
             }
         }
     }
     for (idx, p) in inflight {
         let r = p.wait()?;
-        confusion[ds.labels[idx] as usize][r.prediction] += 1;
-        if r.prediction == ds.labels[idx] as usize {
+        let pred = r.prediction().expect("classify reply");
+        confusion[ds.labels[idx] as usize][pred] += 1;
+        if pred == ds.labels[idx] as usize {
             correct += 1;
         }
     }

@@ -14,7 +14,8 @@ use pims::benchlib::{black_box, Bench};
 use pims::bitops::{self, BitPlanes};
 use pims::cnn;
 use pims::compressor;
-use pims::coordinator::{BatchPolicy, Coordinator, MockBackend};
+use pims::apicfg::RunConfig;
+use pims::coordinator::{Coordinator, Job, MockBackend};
 use pims::engine::pool::{run_jobs_scoped, LaneBudget, LaneJob};
 use pims::engine::{LaneSchedule, ModelPlan, TileScheduler};
 use pims::prng::Pcg32;
@@ -166,11 +167,12 @@ fn main() {
     });
 
     // --- coordinator round-trip overhead (mock backend, batch 8)
-    let c = Coordinator::start(
-        || Ok(MockBackend::new(8, 64, 10)),
-        BatchPolicy { max_wait: Duration::from_micros(200) },
-        256,
-    )
+    let pool_cfg = |workers: usize, queue: usize, wait_ms: f64| {
+        RunConfig { workers, queue, wait_ms, ..RunConfig::default() }
+    };
+    let c = Coordinator::launch_pool(&pool_cfg(1, 256, 0.2), |_| {
+        Ok(MockBackend::new(8, 64, 10))
+    })
     .unwrap();
     let img = vec![0.5f32; 64];
     b.iter("coordinator_roundtrip_b8", || {
@@ -183,20 +185,36 @@ fn main() {
     });
     drop(c);
 
+    // --- v2 typed-job submit→response overhead: one Classify job
+    // through a batch-1 pool with no batch wait — the pure coordinator
+    // cost a single v2 request pays (ISSUE 5 satellite; asserted by
+    // bench-smoke).
+    let c = Coordinator::launch_pool(&pool_cfg(1, 64, 0.0), |_| {
+        Ok(MockBackend::new(1, 64, 10))
+    })
+    .unwrap();
+    b.iter("submit_wait_roundtrip", || {
+        black_box(
+            c.submit_job(Job::Classify(img.clone()))
+                .unwrap()
+                .wait()
+                .unwrap(),
+        );
+    });
+    drop(c);
+
     // --- worker-pool throughput scaling: the same offered load on 1
     // vs 4 executor workers whose backend sleeps per batch (so the
     // pool, not the mock, is the variable). The w4/w1 ratio is the
     // acceptance figure for the executor-pool refactor.
     let pool_wall = |workers: usize| {
-        let c = Coordinator::start_pool(
+        let c = Coordinator::launch_pool(
+            &pool_cfg(workers, 512, 0.0),
             move |_| {
                 let mut m = MockBackend::new(1, 64, 10);
                 m.delay = Duration::from_micros(400);
                 Ok(m)
             },
-            workers,
-            BatchPolicy { max_wait: Duration::ZERO },
-            512,
         )
         .unwrap();
         let img = vec![0.25f32; 64];

@@ -1,0 +1,725 @@
+//! Declarative run configuration — the single artifact that captures
+//! a serving/inference run (serving API v2, DESIGN.md §9).
+//!
+//! PR 1–4 scattered backend/lane/chaos/NV configuration across three
+//! `Coordinator::start*` variants, a `with_lanes`/`with_lane_schedule`
+//! builder chain, and duplicated flag plumbing in `cmd_serve` and
+//! `cmd_infer`. Config-driven design-space exploration is how related
+//! PIM systems expose their knobs (the MRAM mobile/IoT co-design of
+//! arXiv:1811.12179, the racetrack co-exploration framework of
+//! arXiv:2507.01429): the configuration is a first-class declarative
+//! object. [`RunConfig`] is that object here — model, bit-widths,
+//! seed, lane schedule, tile size, chaos spec, NV checkpoint cadence,
+//! worker pool shape, and batch policy in one plain struct that
+//!
+//! * loads and dumps through the existing [`crate::configsys`] format
+//!   (`serve --config pims.cfg`, CLI flags as overrides —
+//!   [`RunConfig::from_parsed`]), round-tripping exactly
+//!   (`Config::parse(rc.dump()) == rc`, property-tested below), with
+//!   unknown keys rejected by `check_known`;
+//! * launches the whole stack through one entry point,
+//!   [`crate::coordinator::Coordinator::launch`] (or `launch_pool`
+//!   for custom backends), subsuming `start`/`start_pool`/
+//!   `start_pool_with_chaos`.
+
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::arch::{ChipOrg, HTree};
+use crate::cli::{LaneArg, Parsed};
+use crate::cnn::{self, Model};
+use crate::configsys::{Config, Value};
+use crate::engine::{LaneSchedule, ModelPlan};
+use crate::intermittency::TraceSpec;
+
+/// Which serving backend a [`RunConfig`] launches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// AOT artifacts over the PJRT runtime.
+    Pjrt,
+    /// The bit-accurate PIM co-simulation (no artifacts needed).
+    PimSim,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        Ok(match s {
+            "pjrt" => BackendKind::Pjrt,
+            "pimsim" => BackendKind::PimSim,
+            other => {
+                anyhow::bail!("unknown backend '{other}' (pjrt|pimsim)")
+            }
+        })
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BackendKind::Pjrt => "pjrt",
+            BackendKind::PimSim => "pimsim",
+        }
+    }
+}
+
+/// A model constructor by name — shared by `RunConfig`, `infer`, and
+/// `simulate` so every entry point speaks the same model vocabulary.
+pub fn model_by_name(name: &str) -> Result<Model> {
+    Ok(match name {
+        "micro" => cnn::micro_net(),
+        "svhn" => cnn::svhn_net(),
+        "alexnet" => cnn::alexnet(),
+        "lenet" => cnn::lenet(),
+        other => anyhow::bail!(
+            "unknown model '{other}' (micro|svhn|alexnet|lenet)"
+        ),
+    })
+}
+
+/// Every config key [`RunConfig`] reads or writes; anything else in a
+/// `--config` file fails [`Config::check_known`] instead of being
+/// silently ignored.
+pub const KNOWN_KEYS: &[&str] = &[
+    "run.backend",
+    "run.model",
+    "run.wbits",
+    "run.abits",
+    "run.seed",
+    "serve.batch",
+    "serve.workers",
+    "serve.queue",
+    "serve.wait_ms",
+    "serve.requests",
+    "engine.lanes",
+    "engine.tile_patches",
+    "nv.ckpt_period",
+    "chaos.trace",
+    "chaos.cycles_per_batch",
+];
+
+/// One declarative serving/inference run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunConfig {
+    /// `run.backend` — which backend serves.
+    pub backend: BackendKind,
+    /// `run.model` — model name (see [`model_by_name`]).
+    pub model: String,
+    /// `run.wbits` / `run.abits` — W:I bit-widths of quantized layers.
+    pub w_bits: u32,
+    pub a_bits: u32,
+    /// `run.seed` — weight/dataset seed (equal seeds give bit-identical
+    /// worker replicas).
+    pub seed: u64,
+    /// `serve.batch` — compiled batch shape per worker.
+    pub batch: usize,
+    /// `serve.workers` — executor pool width (one backend per worker).
+    pub workers: usize,
+    /// `serve.queue` — total admission bound (backpressure).
+    pub queue: usize,
+    /// `serve.wait_ms` — max batch wait in milliseconds (fractional
+    /// values express sub-millisecond policies).
+    pub wait_ms: f64,
+    /// `serve.requests` — how many requests the serve driver offers.
+    pub requests: usize,
+    /// `engine.lanes` — engine lane schedule: a fixed per-layer count
+    /// or `"auto"` (H-tree-tuned per layer).
+    pub lanes: LaneArg,
+    /// `engine.tile_patches` — patch rows per resumable tile.
+    pub tile_patches: usize,
+    /// `nv.ckpt_period` — NV checkpoint cadence (tiles).
+    pub ckpt_period: u64,
+    /// `chaos.trace` — power-failure trace spec for chaos serving
+    /// (`None` = chaos off). Kept as its [`TraceSpec`] source string so
+    /// the config dumps/loads losslessly; validated on every load.
+    pub chaos: Option<String>,
+    /// `chaos.cycles_per_batch` — trace cycles one batch consumes.
+    pub chaos_cycles: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            backend: BackendKind::PimSim,
+            model: "svhn".to_string(),
+            w_bits: 1,
+            a_bits: 4,
+            seed: 42,
+            batch: 8,
+            workers: 1,
+            queue: 256,
+            wait_ms: 2.0,
+            requests: 512,
+            lanes: LaneArg::Fixed(1),
+            tile_patches: 16,
+            ckpt_period: 4,
+            chaos: None,
+            chaos_cycles: 1,
+        }
+    }
+}
+
+/// Read an int key with a default and a floor.
+fn int_key(cfg: &Config, key: &str, default: i64, min: i64) -> Result<i64> {
+    match cfg.get(key) {
+        None => Ok(default),
+        Some(_) => {
+            let v = cfg.int(key)?;
+            anyhow::ensure!(
+                v >= min,
+                "config key '{key}': must be >= {min}, got {v}"
+            );
+            Ok(v)
+        }
+    }
+}
+
+impl RunConfig {
+    /// Build from parsed config text. Missing keys take the defaults;
+    /// unknown keys are an error (typo defense); every value is
+    /// validated (bit-width ranges, model name, chaos grammar).
+    pub fn from_config(cfg: &Config) -> Result<RunConfig> {
+        cfg.check_known(KNOWN_KEYS).map_err(|e| {
+            anyhow::anyhow!("{e}\nknown keys: {}", KNOWN_KEYS.join(", "))
+        })?;
+        let d = RunConfig::default();
+        let backend = match cfg.get("run.backend") {
+            None => d.backend,
+            Some(_) => BackendKind::parse(&cfg.str("run.backend")?)?,
+        };
+        let model = match cfg.get("run.model") {
+            None => d.model,
+            Some(_) => cfg.str("run.model")?,
+        };
+        let lanes = match cfg.get("engine.lanes") {
+            None => d.lanes,
+            Some(Value::Str(s)) if s == "auto" => LaneArg::Auto,
+            Some(Value::Int(n)) => {
+                anyhow::ensure!(
+                    *n >= 1,
+                    "engine.lanes: must be >= 1 or \"auto\", got {n}"
+                );
+                LaneArg::Fixed(
+                    ChipOrg::default().engine_lanes(*n as usize),
+                )
+            }
+            Some(v) => anyhow::bail!(
+                "engine.lanes: expected int or \"auto\", got {v}"
+            ),
+        };
+        let chaos = match cfg.get("chaos.trace") {
+            None => None,
+            Some(_) => {
+                let s = cfg.str("chaos.trace")?;
+                if s.is_empty() {
+                    None
+                } else {
+                    Some(s)
+                }
+            }
+        };
+        let wait_ms = match cfg.get("serve.wait_ms") {
+            None => d.wait_ms,
+            Some(_) => cfg.float("serve.wait_ms")?,
+        };
+        let rc = RunConfig {
+            backend,
+            model,
+            w_bits: int_key(cfg, "run.wbits", d.w_bits as i64, 1)? as u32,
+            a_bits: int_key(cfg, "run.abits", d.a_bits as i64, 1)? as u32,
+            seed: int_key(cfg, "run.seed", d.seed as i64, 0)? as u64,
+            batch: int_key(cfg, "serve.batch", d.batch as i64, 1)?
+                as usize,
+            workers: int_key(cfg, "serve.workers", d.workers as i64, 1)?
+                as usize,
+            queue: int_key(cfg, "serve.queue", d.queue as i64, 1)?
+                as usize,
+            wait_ms,
+            requests: int_key(
+                cfg,
+                "serve.requests",
+                d.requests as i64,
+                0,
+            )? as usize,
+            lanes,
+            tile_patches: int_key(
+                cfg,
+                "engine.tile_patches",
+                d.tile_patches as i64,
+                1,
+            )? as usize,
+            ckpt_period: int_key(
+                cfg,
+                "nv.ckpt_period",
+                d.ckpt_period as i64,
+                1,
+            )? as u64,
+            chaos,
+            chaos_cycles: int_key(
+                cfg,
+                "chaos.cycles_per_batch",
+                d.chaos_cycles as i64,
+                1,
+            )? as u64,
+        };
+        rc.validate()?;
+        Ok(rc)
+    }
+
+    /// Load from a config file.
+    pub fn load(path: &str) -> Result<RunConfig> {
+        Self::from_config(
+            &Config::load(path)
+                .with_context(|| format!("loading config '{path}'"))?,
+        )
+    }
+
+    /// Build from a parsed CLI invocation: the `--config` file (plus
+    /// `--set` overrides) forms the base, then flags the user gave
+    /// explicitly override it. A flag left at its declared default
+    /// only fills keys the file leaves unset, so `serve --config
+    /// pims.cfg` honors the file while `serve --config pims.cfg
+    /// --wbits 2` overrides it — the one config path `cmd_serve` and
+    /// `cmd_infer` both construct through.
+    pub fn from_parsed(p: &Parsed) -> Result<RunConfig> {
+        let mut cfg = match p.get("config") {
+            Some(path) if !path.is_empty() => Config::load(path)
+                .with_context(|| format!("loading config '{path}'"))?,
+            _ => Config::default(),
+        };
+        for (k, v) in &p.set_overrides {
+            cfg.set(k, v)?;
+        }
+        let mut rc = Self::from_config(&cfg)?;
+        let use_flag = |flag: &str, key: &str| -> bool {
+            p.get(flag).is_some()
+                && (p.is_explicit(flag) || cfg.get(key).is_none())
+        };
+        if use_flag("backend", "run.backend") {
+            rc.backend = BackendKind::parse(p.get("backend").unwrap())?;
+        }
+        if use_flag("model", "run.model") {
+            rc.model = p.get("model").unwrap().to_string();
+        }
+        if use_flag("wbits", "run.wbits") {
+            rc.w_bits = p.get_usize("wbits")?.unwrap_or(1) as u32;
+        }
+        if use_flag("abits", "run.abits") {
+            rc.a_bits = p.get_usize("abits")?.unwrap_or(4) as u32;
+        }
+        if use_flag("seed", "run.seed") {
+            rc.seed = p.get_u64("seed")?.unwrap_or(42);
+        }
+        if use_flag("batch", "serve.batch") {
+            rc.batch = p.get_usize_at_least("batch", 1)?;
+        }
+        if use_flag("workers", "serve.workers") {
+            rc.workers = p.get_usize_at_least("workers", 1)?;
+        }
+        if use_flag("queue", "serve.queue") {
+            rc.queue = p.get_usize_at_least("queue", 1)?;
+        }
+        if use_flag("wait-ms", "serve.wait_ms") {
+            let raw = p.get("wait-ms").unwrap();
+            rc.wait_ms = raw.parse::<f64>().map_err(|_| {
+                anyhow::anyhow!(
+                    "--wait-ms: expected a number (ms), got '{raw}'"
+                )
+            })?;
+        }
+        if use_flag("requests", "serve.requests") {
+            rc.requests = p.get_usize("requests")?.unwrap_or(512);
+        }
+        if use_flag("lanes", "engine.lanes") {
+            rc.lanes = p.get_lanes("lanes")?;
+        }
+        if use_flag("tile-patches", "engine.tile_patches") {
+            rc.tile_patches = p.get_usize_at_least("tile-patches", 1)?;
+        }
+        if use_flag("ckpt", "nv.ckpt_period") {
+            rc.ckpt_period = p.get_u64("ckpt")?.unwrap_or(4).max(1);
+        }
+        if use_flag("chaos", "chaos.trace") {
+            let s = p.get("chaos").unwrap();
+            rc.chaos = if s.is_empty() {
+                None
+            } else {
+                Some(s.to_string())
+            };
+        }
+        if use_flag("chaos-cycles", "chaos.cycles_per_batch") {
+            rc.chaos_cycles =
+                p.get_u64("chaos-cycles")?.unwrap_or(1).max(1);
+        }
+        rc.validate()?;
+        Ok(rc)
+    }
+
+    /// Reject impossible runs with actionable messages. Called by
+    /// every load path, and cheap enough to call on hand-built
+    /// configs too.
+    pub fn validate(&self) -> Result<()> {
+        model_by_name(&self.model)?;
+        anyhow::ensure!(
+            (1..=8).contains(&self.w_bits)
+                && (1..=8).contains(&self.a_bits),
+            "W:I bit-widths must be in 1..=8 (got {}:{})",
+            self.w_bits,
+            self.a_bits
+        );
+        anyhow::ensure!(self.batch >= 1, "batch must be >= 1");
+        anyhow::ensure!(self.workers >= 1, "workers must be >= 1");
+        anyhow::ensure!(self.queue >= 1, "queue must be >= 1");
+        anyhow::ensure!(
+            self.wait_ms.is_finite() && self.wait_ms >= 0.0,
+            "wait_ms must be finite and >= 0, got {}",
+            self.wait_ms
+        );
+        anyhow::ensure!(
+            self.tile_patches >= 1,
+            "tile_patches must be >= 1"
+        );
+        anyhow::ensure!(self.ckpt_period >= 1, "ckpt_period must be >= 1");
+        anyhow::ensure!(
+            self.chaos_cycles >= 1,
+            "chaos_cycles must be >= 1"
+        );
+        if let LaneArg::Fixed(n) = self.lanes {
+            anyhow::ensure!(n >= 1, "lanes must be >= 1");
+            // Fixed counts must already be chip-clamped (the CLI and
+            // config loaders clamp on entry) — otherwise dump()/parse
+            // would not round-trip bit-exactly.
+            let clamped = ChipOrg::default().engine_lanes(n);
+            anyhow::ensure!(
+                n == clamped,
+                "lanes {n} exceeds the chip's {clamped} concurrently \
+                 computing sub-arrays"
+            );
+        }
+        if let Some(spec) = &self.chaos {
+            TraceSpec::parse(spec)
+                .with_context(|| format!("chaos trace '{spec}'"))?;
+        }
+        anyhow::ensure!(
+            self.seed <= i64::MAX as u64,
+            "seed must fit the config format's integer range"
+        );
+        Ok(())
+    }
+
+    /// The config-file form of this run (inverse of
+    /// [`Self::from_config`]; keys in [`KNOWN_KEYS`]).
+    pub fn to_config(&self) -> Config {
+        let mut c = Config::default();
+        let ok = "RunConfig values are well-formed config scalars";
+        c.set("run.backend", &format!("\"{}\"", self.backend.as_str()))
+            .expect(ok);
+        c.set("run.model", &format!("\"{}\"", self.model)).expect(ok);
+        c.set("run.wbits", &self.w_bits.to_string()).expect(ok);
+        c.set("run.abits", &self.a_bits.to_string()).expect(ok);
+        c.set("run.seed", &self.seed.to_string()).expect(ok);
+        c.set("serve.batch", &self.batch.to_string()).expect(ok);
+        c.set("serve.workers", &self.workers.to_string()).expect(ok);
+        c.set("serve.queue", &self.queue.to_string()).expect(ok);
+        c.set("serve.wait_ms", &self.wait_ms.to_string()).expect(ok);
+        c.set("serve.requests", &self.requests.to_string()).expect(ok);
+        match self.lanes {
+            LaneArg::Auto => c.set("engine.lanes", "\"auto\"").expect(ok),
+            LaneArg::Fixed(n) => {
+                c.set("engine.lanes", &n.to_string()).expect(ok)
+            }
+        }
+        c.set("engine.tile_patches", &self.tile_patches.to_string())
+            .expect(ok);
+        c.set("nv.ckpt_period", &self.ckpt_period.to_string())
+            .expect(ok);
+        if let Some(spec) = &self.chaos {
+            c.set("chaos.trace", &format!("\"{spec}\"")).expect(ok);
+        }
+        c.set("chaos.cycles_per_batch", &self.chaos_cycles.to_string())
+            .expect(ok);
+        c
+    }
+
+    /// Deterministic config text; `Config::parse(rc.dump())` rebuilds
+    /// an identical `RunConfig` (property-tested below).
+    pub fn dump(&self) -> String {
+        self.to_config().dump()
+    }
+
+    /// Construct this run's model.
+    pub fn build_model(&self) -> Result<Model> {
+        model_by_name(&self.model)
+    }
+
+    /// Compile this run's execution plan (weights fixed by `seed`).
+    pub fn compile_plan(&self) -> Result<ModelPlan> {
+        ModelPlan::compile(
+            self.build_model()?,
+            self.w_bits,
+            self.a_bits,
+            self.seed,
+        )
+    }
+
+    /// Resolve the lane knob against a compiled plan: fixed counts
+    /// become uniform schedules, `auto` tunes one count per layer on
+    /// the default chip + H-tree models.
+    pub fn lane_schedule(&self, plan: &ModelPlan) -> LaneSchedule {
+        match self.lanes {
+            LaneArg::Fixed(n) => LaneSchedule::uniform(n),
+            LaneArg::Auto => LaneSchedule::auto(
+                plan,
+                &ChipOrg::default(),
+                &HTree::default(),
+            ),
+        }
+    }
+
+    /// The batcher's size-or-deadline wait.
+    pub fn max_wait(&self) -> Duration {
+        Duration::from_secs_f64(self.wait_ms.max(0.0) / 1e3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cli::{opt, opt_default, Cli};
+    use crate::proptest_lite::Runner;
+
+    #[test]
+    fn defaults_round_trip() {
+        let rc = RunConfig::default();
+        let back =
+            RunConfig::from_config(&Config::parse(&rc.dump()).unwrap())
+                .unwrap();
+        assert_eq!(rc, back);
+    }
+
+    #[test]
+    fn round_trip_property() {
+        // Satellite acceptance: Config::parse(rc.dump()) reproduces an
+        // identical RunConfig for randomized knob combinations.
+        let mut r = Runner::new(0xA9C);
+        r.run("RunConfig dump/parse round-trips", |g| {
+            let lanes = if g.bool() {
+                LaneArg::Auto
+            } else {
+                LaneArg::Fixed(
+                    ChipOrg::default().engine_lanes(g.usize(1, 64)),
+                )
+            };
+            let chaos = match g.usize(0, 2) {
+                0 => None,
+                1 => Some(format!(
+                    "periodic:{}:{}:{}",
+                    g.u32(1, 500),
+                    g.u32(1, 100),
+                    g.u32(1, 64)
+                )),
+                _ => Some(format!(
+                    "poisson:{}:{}:{}",
+                    g.u32(1, 500),
+                    g.u32(1, 100),
+                    g.u32(0, 9999)
+                )),
+            };
+            let rc = RunConfig {
+                backend: if g.bool() {
+                    BackendKind::PimSim
+                } else {
+                    BackendKind::Pjrt
+                },
+                model: g
+                    .choose(&["micro", "svhn", "alexnet", "lenet"])
+                    .to_string(),
+                w_bits: g.u32(1, 8),
+                a_bits: g.u32(1, 8),
+                seed: g.u64_any() >> 1, // keep within i64
+                batch: g.usize(1, 64),
+                workers: g.usize(1, 8),
+                queue: g.usize(1, 1024),
+                wait_ms: g.u32(0, 50) as f64,
+                requests: g.usize(0, 4096),
+                lanes,
+                tile_patches: g.usize(1, 256),
+                ckpt_period: g.u32(1, 64) as u64,
+                chaos,
+                chaos_cycles: g.u32(1, 16) as u64,
+            };
+            rc.validate().unwrap();
+            let text = rc.dump();
+            let back =
+                RunConfig::from_config(&Config::parse(&text).unwrap())
+                    .unwrap_or_else(|e| {
+                        panic!("round-trip rejected:\n{text}\n{e:#}")
+                    });
+            assert_eq!(rc, back, "round-trip diverged:\n{text}");
+        });
+    }
+
+    #[test]
+    fn unknown_keys_rejected_helpfully() {
+        let cfg = Config::parse("[run]\nbackned = \"pimsim\"").unwrap();
+        let err = RunConfig::from_config(&cfg).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("run.backned"),
+            "error must name the bad key: {msg}"
+        );
+        assert!(
+            msg.contains("run.backend"),
+            "error must list known keys: {msg}"
+        );
+    }
+
+    #[test]
+    fn bad_values_rejected() {
+        for text in [
+            "[run]\nwbits = 0",
+            "[run]\nwbits = 9",
+            "[run]\nbackend = \"gpu\"",
+            "[run]\nmodel = \"resnet\"",
+            "[serve]\nworkers = 0",
+            "[engine]\nlanes = 0",
+            "[engine]\nlanes = true",
+            "[chaos]\ntrace = \"nonsense\"",
+        ] {
+            let cfg = Config::parse(text).unwrap();
+            assert!(
+                RunConfig::from_config(&cfg).is_err(),
+                "must reject: {text}"
+            );
+        }
+    }
+
+    #[test]
+    fn lanes_parse_auto_and_clamp() {
+        let cfg = Config::parse("[engine]\nlanes = \"auto\"").unwrap();
+        assert_eq!(
+            RunConfig::from_config(&cfg).unwrap().lanes,
+            LaneArg::Auto
+        );
+        let cfg = Config::parse("[engine]\nlanes = 4").unwrap();
+        assert_eq!(
+            RunConfig::from_config(&cfg).unwrap().lanes,
+            LaneArg::Fixed(4)
+        );
+        let cfg =
+            Config::parse("[engine]\nlanes = 100000000").unwrap();
+        assert_eq!(
+            RunConfig::from_config(&cfg).unwrap().lanes,
+            LaneArg::Fixed(ChipOrg::default().parallel_subarrays()),
+            "config lanes clamp to the chip like the CLI flag"
+        );
+    }
+
+    fn serve_cli() -> Cli {
+        Cli::new("pims", "test").command(
+            "serve",
+            "test serve",
+            vec![
+                opt_default("backend", "b", "pjrt"),
+                opt_default("wbits", "w", "1"),
+                opt_default("seed", "s", "42"),
+                opt_default("workers", "n", "1"),
+                opt_default("config", "file", ""),
+                opt("chaos", "spec"),
+            ],
+        )
+    }
+
+    fn tmp_config(name: &str, text: &str) -> String {
+        let mut p = std::env::temp_dir();
+        p.push(format!(
+            "pims_apicfg_{}_{name}.cfg",
+            std::process::id()
+        ));
+        std::fs::write(&p, text).unwrap();
+        p.to_str().unwrap().to_string()
+    }
+
+    #[test]
+    fn from_parsed_file_base_with_flag_overrides() {
+        let path = tmp_config(
+            "overrides",
+            "[run]\nbackend = \"pimsim\"\nwbits = 2\nseed = 7\n\
+             [serve]\nworkers = 3\n",
+        );
+        // No explicit flags: the file wins over the declared defaults.
+        let args: Vec<String> =
+            ["serve", "--config", path.as_str()].iter().map(|s| s.to_string()).collect();
+        let p = serve_cli().parse(&args).unwrap();
+        let rc = RunConfig::from_parsed(&p).unwrap();
+        assert_eq!(rc.backend, BackendKind::PimSim);
+        assert_eq!(rc.w_bits, 2);
+        assert_eq!(rc.seed, 7);
+        assert_eq!(rc.workers, 3);
+
+        // Explicit flags beat the file; untouched file keys survive.
+        let args: Vec<String> =
+            ["serve", "--config", path.as_str(), "--wbits", "4", "--seed", "9"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        let p = serve_cli().parse(&args).unwrap();
+        let rc = RunConfig::from_parsed(&p).unwrap();
+        assert_eq!(rc.w_bits, 4, "explicit flag must override the file");
+        assert_eq!(rc.seed, 9);
+        assert_eq!(rc.workers, 3, "file value must survive");
+        assert_eq!(rc.backend, BackendKind::PimSim);
+
+        // --set overrides land on the file before flags are applied.
+        let args: Vec<String> =
+            ["serve", "--config", path.as_str(), "--set", "serve.workers=5"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        let p = serve_cli().parse(&args).unwrap();
+        let rc = RunConfig::from_parsed(&p).unwrap();
+        assert_eq!(rc.workers, 5);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn from_parsed_without_file_takes_flag_defaults() {
+        let args: Vec<String> =
+            ["serve"].iter().map(|s| s.to_string()).collect();
+        let p = serve_cli().parse(&args).unwrap();
+        let rc = RunConfig::from_parsed(&p).unwrap();
+        assert_eq!(rc.backend, BackendKind::Pjrt, "flag default");
+        assert_eq!(rc.w_bits, 1);
+        assert_eq!(rc.model, "svhn", "undeclared flags keep defaults");
+    }
+
+    #[test]
+    fn from_parsed_validates_chaos_spec() {
+        let args: Vec<String> =
+            ["serve", "--chaos", "bogus:1:2"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        let p = serve_cli().parse(&args).unwrap();
+        assert!(RunConfig::from_parsed(&p).is_err());
+    }
+
+    #[test]
+    fn helpers_resolve_model_and_schedule() {
+        let rc = RunConfig {
+            model: "micro".into(),
+            ..RunConfig::default()
+        };
+        let plan = rc.compile_plan().unwrap();
+        assert_eq!(plan.input_elems(), 8 * 8);
+        assert!(rc.lane_schedule(&plan).is_serial());
+        let auto = RunConfig { lanes: LaneArg::Auto, ..rc.clone() };
+        assert!(
+            format!("{}", auto.lane_schedule(&plan)).starts_with("auto["),
+            "auto must resolve to the tuned per-layer schedule"
+        );
+        assert_eq!(
+            RunConfig { wait_ms: 0.5, ..rc }.max_wait(),
+            Duration::from_micros(500)
+        );
+        assert!(model_by_name("nope").is_err());
+    }
+}

@@ -5,7 +5,7 @@
 //! are errors (not silently ignored), and `--help` output is generated
 //! from the declarations.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 /// One declared option.
 #[derive(Debug, Clone)]
@@ -29,6 +29,9 @@ pub struct CommandSpec {
 pub struct Parsed {
     pub command: String,
     pub flags: BTreeMap<String, String>,
+    /// Flags the user actually typed (vs. declared defaults) — config
+    /// loaders use this to decide whether a flag overrides a file key.
+    pub explicit: BTreeSet<String>,
     pub set_overrides: Vec<(String, String)>,
     pub positional: Vec<String>,
 }
@@ -36,6 +39,12 @@ pub struct Parsed {
 impl Parsed {
     pub fn get(&self, name: &str) -> Option<&str> {
         self.flags.get(name).map(|s| s.as_str())
+    }
+
+    /// True when the user passed `--name` on the command line (a
+    /// declared default alone does not count).
+    pub fn is_explicit(&self, name: &str) -> bool {
+        self.explicit.contains(name)
     }
 
     pub fn get_usize(&self, name: &str) -> anyhow::Result<Option<usize>> {
@@ -180,6 +189,7 @@ impl Cli {
         let mut parsed = Parsed {
             command: command.clone(),
             flags: BTreeMap::new(),
+            explicit: BTreeSet::new(),
             set_overrides: Vec::new(),
             positional: Vec::new(),
         };
@@ -235,6 +245,7 @@ impl Cli {
                     "true".to_string()
                 };
                 parsed.flags.insert(name.to_string(), value);
+                parsed.explicit.insert(name.to_string());
             } else {
                 parsed.positional.push(arg.clone());
             }
@@ -288,6 +299,9 @@ mod tests {
         assert_eq!(p.get("batch"), Some("8"));
         assert_eq!(p.get("artifacts"), Some("a/"));
         assert!(!p.has("verbose"));
+        // Defaults are seeded but not explicit; typed flags are.
+        assert!(!p.is_explicit("batch"));
+        assert!(p.is_explicit("artifacts"));
     }
 
     #[test]

@@ -1,6 +1,7 @@
-//! The per-worker batcher/executor loop: collect requests up to the
+//! The per-worker batcher/executor loop: collect typed jobs up to the
 //! backend's batch size with a size-or-deadline policy, pad to the
-//! compiled batch shape, execute, and reply.
+//! compiled batch shape, execute through [`Backend::run_batch`], and
+//! reply with typed [`super::JobOutput`]s.
 //!
 //! One [`Batcher`] runs on each worker thread and owns that worker's
 //! backend for the life of the pool (PJRT handles never cross
@@ -8,14 +9,26 @@
 //! batch — their reply channels close, clients observe the failure —
 //! and the loop keeps serving, so one bad batch never poisons the
 //! worker or its siblings.
+//!
+//! Serving API v2 (DESIGN.md §9): a job whose client cancelled
+//! (dropped its `Pending`) or whose deadline expired while queued is
+//! skipped HERE, before it occupies a padded batch row — the batch
+//! slot is freed instead of executing for nobody — and counted in
+//! `dropped_replies`, as is any reply whose send fails because the
+//! client vanished mid-execution.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::Receiver;
 use std::time::Instant;
 
+use anyhow::Result;
+
 use super::chaos::ChaosClock;
 use super::metrics_agg::WorkerSlot;
-use super::{Backend, BatchPolicy, Request, Response};
+use super::{
+    Backend, BatchPolicy, JobBatch, JobKind, JobOutput, QueuedJob,
+    Response,
+};
 
 /// Chaos mode: cap on consecutive power failures re-killing the SAME
 /// batch. A schedule whose on-time never fits one batch would
@@ -28,6 +41,22 @@ pub(super) struct Batcher {
     policy: BatchPolicy,
 }
 
+/// One typed-batch execution with output-arity enforcement: a backend
+/// must answer every occupied row exactly once.
+fn exec_batch<B: Backend>(
+    backend: &mut B,
+    jobs: &JobBatch,
+    n: usize,
+) -> Result<Vec<JobOutput>> {
+    let outputs = backend.run_batch(jobs)?;
+    anyhow::ensure!(
+        outputs.len() == n,
+        "backend returned {} outputs for {n} jobs",
+        outputs.len()
+    );
+    Ok(outputs)
+}
+
 impl Batcher {
     pub(super) fn new(policy: BatchPolicy) -> Self {
         Batcher { policy }
@@ -38,11 +67,11 @@ impl Batcher {
     /// already-queued requests are taken, without waiting.
     fn collect(
         &self,
-        rx: &Receiver<Request>,
-        first: Request,
+        rx: &Receiver<QueuedJob>,
+        first: QueuedJob,
         batch: usize,
         draining: bool,
-    ) -> Vec<Request> {
+    ) -> Vec<QueuedJob> {
         let mut reqs = Vec::with_capacity(batch);
         reqs.push(first);
         if draining {
@@ -74,14 +103,13 @@ impl Batcher {
     pub(super) fn run<B: Backend>(
         &self,
         backend: &mut B,
-        rx: Receiver<Request>,
+        rx: Receiver<QueuedJob>,
         slot: &WorkerSlot,
         stop: &AtomicBool,
         mut chaos: Option<ChaosClock>,
     ) {
         let batch = backend.batch_size().max(1);
         let elems = backend.input_elems();
-        let classes = backend.num_classes();
         let mut flat = vec![0f32; batch * elems];
 
         loop {
@@ -93,19 +121,40 @@ impl Batcher {
             };
             let draining = stop.load(Ordering::SeqCst);
             let mut reqs = self.collect(&rx, first, batch, draining);
+            // Everything popped counts against the outstanding gauge,
+            // whether it executes or not.
+            let popped = reqs.len();
+
+            // v2: cancelled / deadline-expired jobs free their batch
+            // slot here; their reply sender drops unsent.
+            let now = Instant::now();
+            reqs.retain(|r| !r.dead(now));
+            let dropped = (popped - reqs.len()) as u64;
+            if dropped > 0 {
+                slot.stats.lock().unwrap().counters.dropped_replies +=
+                    dropped;
+            }
+            if reqs.is_empty() {
+                slot.outstanding.fetch_sub(popped, Ordering::Relaxed);
+                continue;
+            }
             let n = reqs.len();
 
-            // Pad (zero rows) and execute.
+            // Pad (zero rows) and execute the typed batch.
             flat.iter_mut().for_each(|v| *v = 0.0);
             for (i, r) in reqs.iter().enumerate() {
-                flat[i * elems..(i + 1) * elems].copy_from_slice(&r.image);
+                flat[i * elems..(i + 1) * elems]
+                    .copy_from_slice(r.job.image());
             }
+            let kinds: Vec<JobKind> =
+                reqs.iter().map(|r| r.job.kind()).collect();
+            let jobs = JobBatch::new(&flat, &kinds);
             let t0 = Instant::now();
             // Chaos mode: the trace may kill this worker mid-batch —
             // the execution's volatile results are lost before any
             // reply is sent; the backend restores from NV state and
             // the batch re-runs. Admitted requests are never dropped.
-            let mut result = backend.infer_batch(&flat);
+            let mut result = exec_batch(backend, &jobs, n);
             if let Some(clock) = chaos.as_mut() {
                 let mut kills = 0u64;
                 while result.is_ok()
@@ -114,7 +163,7 @@ impl Batcher {
                 {
                     kills += 1;
                     backend.power_fail_restore();
-                    result = backend.infer_batch(&flat);
+                    result = exec_batch(backend, &jobs, n);
                 }
                 if kills > 0 {
                     slot.stats.lock().unwrap().counters.chaos_kills +=
@@ -122,7 +171,7 @@ impl Batcher {
                 }
             }
             match result {
-                Ok(logits) => {
+                Ok(outputs) => {
                     let exec = t0.elapsed();
                     // Re-read per batch: backends may model energy as
                     // a function of the work actually done.
@@ -130,20 +179,22 @@ impl Batcher {
                     let mut s = slot.stats.lock().unwrap();
                     s.exec_latency.record(exec);
                     s.counters.batches += 1;
-                    for (i, r) in reqs.drain(..).enumerate() {
-                        let row =
-                            logits[i * classes..(i + 1) * classes].to_vec();
-                        let prediction = argmax(&row);
+                    for (r, output) in reqs.drain(..).zip(outputs) {
                         let latency = r.enqueued_at.elapsed();
                         s.latency.record(latency);
                         s.counters.served += 1;
-                        let _ = r.reply.send(Response {
+                        let sent = r.reply.send(Response {
                             id: r.id,
-                            logits: row,
-                            prediction,
+                            output,
                             latency,
                             energy_uj,
                         });
+                        if sent.is_err() {
+                            // The client dropped its Pending after we
+                            // started executing: the reply has nowhere
+                            // to go.
+                            s.counters.dropped_replies += 1;
+                        }
                     }
                     drop(s);
                     // Results delivered: NV-shadowed backend state
@@ -157,27 +208,7 @@ impl Batcher {
                     reqs.clear();
                 }
             }
-            slot.outstanding.fetch_sub(n, Ordering::Relaxed);
+            slot.outstanding.fetch_sub(popped, Ordering::Relaxed);
         }
-    }
-}
-
-pub(super) fn argmax(row: &[f32]) -> usize {
-    row.iter()
-        .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-        .map(|(i, _)| i)
-        .unwrap_or(0)
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn argmax_picks_largest() {
-        assert_eq!(argmax(&[0.1, 0.9, 0.3]), 1);
-        assert_eq!(argmax(&[2.0]), 0);
-        assert_eq!(argmax(&[]), 0);
     }
 }

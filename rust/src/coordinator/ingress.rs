@@ -1,4 +1,4 @@
-//! Bounded admission: geometry validation, request-id allocation,
+//! Bounded admission: geometry/job validation, request-id allocation,
 //! least-outstanding-work dispatch across the worker queues, and
 //! backpressure when every queue is full.
 //!
@@ -7,7 +7,7 @@
 //! decrement (which always follows a successful enqueue) can never
 //! race the gauge below zero.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{SyncSender, TrySendError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -15,10 +15,10 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use super::metrics_agg::MetricsHub;
-use super::{Pending, Request};
+use super::{Job, Pending, QueuedJob, Response};
 
 pub(super) struct Ingress {
-    senders: Vec<SyncSender<Request>>,
+    senders: Vec<SyncSender<QueuedJob>>,
     hub: Arc<MetricsHub>,
     next_id: AtomicU64,
     input_elems: usize,
@@ -26,7 +26,7 @@ pub(super) struct Ingress {
 
 impl Ingress {
     pub(super) fn new(
-        senders: Vec<SyncSender<Request>>,
+        senders: Vec<SyncSender<QueuedJob>>,
         hub: Arc<MetricsHub>,
         input_elems: usize,
     ) -> Self {
@@ -47,19 +47,34 @@ impl Ingress {
         order
     }
 
-    /// Submit a request. Fails fast when every worker queue is full
-    /// (backpressure) or the image has the wrong geometry.
-    pub(super) fn submit(&self, image: Vec<f32>) -> Result<Pending> {
+    /// Submit a typed job. Fails fast when every worker queue is full
+    /// (backpressure), the job's image has the wrong geometry, or the
+    /// job parameters are malformed (e.g. `TopK { k: 0 }`).
+    pub(super) fn submit(
+        &self,
+        job: Job,
+        deadline: Option<Instant>,
+    ) -> Result<Pending> {
         anyhow::ensure!(
-            image.len() == self.input_elems,
+            job.image().len() == self.input_elems,
             "image has {} elems, model expects {}",
-            image.len(),
+            job.image().len(),
             self.input_elems
         );
+        if let Job::TopK { k, .. } = &job {
+            anyhow::ensure!(*k >= 1, "top-k requires k >= 1");
+        }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let (reply, rx) = std::sync::mpsc::channel();
-        let mut req =
-            Request { id, image, enqueued_at: Instant::now(), reply };
+        let (reply, rx) = std::sync::mpsc::channel::<Response>();
+        let cancelled = Arc::new(AtomicBool::new(false));
+        let mut req = QueuedJob {
+            id,
+            job,
+            enqueued_at: Instant::now(),
+            deadline,
+            reply,
+            cancelled: cancelled.clone(),
+        };
         let mut disconnected = 0usize;
         for w in self.dispatch_order() {
             let gauge = &self.hub.worker(w).outstanding;
@@ -67,7 +82,7 @@ impl Ingress {
             match self.senders[w].try_send(req) {
                 Ok(()) => {
                     self.hub.note_enqueued();
-                    return Ok(Pending { id, rx });
+                    return Ok(Pending { id, rx, cancel: cancelled });
                 }
                 Err(TrySendError::Full(r)) => {
                     gauge.fetch_sub(1, Ordering::Relaxed);
@@ -88,9 +103,13 @@ impl Ingress {
     }
 
     /// Blocking submit: retries on backpressure until accepted.
-    pub(super) fn submit_blocking(&self, image: Vec<f32>) -> Result<Pending> {
+    pub(super) fn submit_blocking(
+        &self,
+        job: Job,
+        deadline: Option<Instant>,
+    ) -> Result<Pending> {
         loop {
-            match self.submit(image.clone()) {
+            match self.submit(job.clone(), deadline) {
                 Ok(p) => return Ok(p),
                 Err(e) if e.to_string().contains("backpressure") => {
                     std::thread::sleep(Duration::from_micros(200));

@@ -1,0 +1,288 @@
+//! Typed serving jobs — the request/response vocabulary of the v2 API
+//! (DESIGN.md §9).
+//!
+//! PR 1–4 spoke one hardcoded dialect: an image in, logits + argmax
+//! out. The paper's accelerator serves *diverse* low bit-width CNN
+//! workloads, and the ROADMAP's many-scenario north star needs a
+//! request type that can carry more than single-shot classification —
+//! so a request is now a [`Job`] and a reply carries a [`JobOutput`]:
+//!
+//! * [`Job::Classify`] — argmax + full logits (the v1 behaviour;
+//!   logits stay bit-identical to the PR 4 path).
+//! * [`Job::Logits`] — raw logits only, for callers doing their own
+//!   post-processing.
+//! * [`Job::TopK`] — the best `k` (class, logit) pairs, ranked.
+//! * [`Job::EnergyAudit`] — classification plus a per-request
+//!   [`EnergyAudit`]: the engine's [`OpLedger`] row-op totals, the
+//!   lane schedule's H-tree merge traffic, and a per-component
+//!   [`CostBreakdown`] — not just a scalar µJ.
+//!
+//! Backends see one [`JobBatch`] per executed batch (padded operand
+//! rows + per-row job kinds); the default
+//! [`super::Backend::run_batch`] adapter derives every output from a
+//! single `infer_batch` call, so all job kinds share one forward pass.
+
+use crate::arch::LaneTraffic;
+use crate::energy::CostBreakdown;
+use crate::subarray::OpLedger;
+
+/// One typed inference job (the v2 request).
+#[derive(Debug, Clone)]
+pub enum Job {
+    /// Classify one image: prediction + full logits.
+    Classify(Vec<f32>),
+    /// Raw logits for one image, no post-processing.
+    Logits(Vec<f32>),
+    /// The best `k` (class, logit) pairs for one image, ranked.
+    TopK { image: Vec<f32>, k: usize },
+    /// Classify one image and attach a per-request energy audit.
+    EnergyAudit(Vec<f32>),
+}
+
+impl Job {
+    /// The job's operand image (every kind carries exactly one).
+    pub fn image(&self) -> &[f32] {
+        match self {
+            Job::Classify(img)
+            | Job::Logits(img)
+            | Job::EnergyAudit(img) => img,
+            Job::TopK { image, .. } => image,
+        }
+    }
+
+    /// The payload-free kind tag a backend batches over.
+    pub fn kind(&self) -> JobKind {
+        match self {
+            Job::Classify(_) => JobKind::Classify,
+            Job::Logits(_) => JobKind::Logits,
+            Job::TopK { k, .. } => JobKind::TopK(*k),
+            Job::EnergyAudit(_) => JobKind::EnergyAudit,
+        }
+    }
+}
+
+/// A [`Job`]'s kind, without its image payload — what a backend sees
+/// per occupied batch row.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobKind {
+    Classify,
+    Logits,
+    TopK(usize),
+    EnergyAudit,
+}
+
+/// One executed batch from the backend's point of view: operand rows
+/// padded to the compiled batch shape, plus the job kind of every
+/// occupied row (padding rows have no kind and produce no output).
+pub struct JobBatch<'a> {
+    flat: &'a [f32],
+    kinds: &'a [JobKind],
+}
+
+impl<'a> JobBatch<'a> {
+    /// `flat` holds `batch_size * input_elems` values (zero-padded);
+    /// `kinds` has one entry per occupied row, in row order.
+    pub fn new(flat: &'a [f32], kinds: &'a [JobKind]) -> JobBatch<'a> {
+        JobBatch { flat, kinds }
+    }
+
+    /// The padded operand rows (`batch_size * input_elems` values).
+    pub fn flat(&self) -> &[f32] {
+        self.flat
+    }
+
+    /// Job kinds of the occupied rows (`len() <= batch_size`).
+    pub fn kinds(&self) -> &[JobKind] {
+        self.kinds
+    }
+
+    /// Occupied rows in this batch.
+    pub fn jobs(&self) -> usize {
+        self.kinds.len()
+    }
+}
+
+/// The typed result of one [`Job`] (the v2 reply payload).
+#[derive(Debug, Clone)]
+pub enum JobOutput {
+    Classify { prediction: usize, logits: Vec<f32> },
+    Logits(Vec<f32>),
+    /// Ranked (class, logit) pairs, best first.
+    TopK(Vec<(usize, f32)>),
+    EnergyAudit(Box<EnergyAudit>),
+}
+
+impl JobOutput {
+    /// The predicted class, where the job kind produces one.
+    pub fn prediction(&self) -> Option<usize> {
+        match self {
+            JobOutput::Classify { prediction, .. } => Some(*prediction),
+            JobOutput::TopK(ranked) => ranked.first().map(|&(c, _)| c),
+            JobOutput::EnergyAudit(a) => Some(a.prediction),
+            JobOutput::Logits(_) => None,
+        }
+    }
+
+    /// The full logits row, where the job kind carries one.
+    pub fn logits(&self) -> Option<&[f32]> {
+        match self {
+            JobOutput::Classify { logits, .. } => Some(logits),
+            JobOutput::Logits(logits) => Some(logits),
+            JobOutput::EnergyAudit(a) => Some(&a.logits),
+            JobOutput::TopK(_) => None,
+        }
+    }
+
+    /// The ranked (class, logit) pairs of a [`Job::TopK`] reply.
+    pub fn top_k(&self) -> Option<&[(usize, f32)]> {
+        match self {
+            JobOutput::TopK(ranked) => Some(ranked),
+            _ => None,
+        }
+    }
+
+    /// The audit of a [`Job::EnergyAudit`] reply.
+    pub fn audit(&self) -> Option<&EnergyAudit> {
+        match self {
+            JobOutput::EnergyAudit(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// Per-request energy attribution (the [`Job::EnergyAudit`] payload).
+///
+/// PIM backends fill every field from the engine's own accounting
+/// ([`super::PimSimBackend`] reports the frame's [`OpLedger`], the
+/// lane schedule's H-tree merge traffic, and the component breakdown
+/// the `infer` CLI tables print); backends without an engine report
+/// the scalar default ([`EnergyAudit::from_scalar`]).
+#[derive(Debug, Clone, Default)]
+pub struct EnergyAudit {
+    /// Per-component energy/latency of one served frame — the same
+    /// ledger format `infer`/`simulate` tables render
+    /// ([`CostBreakdown::table`]), including `inter_lane_merge`.
+    pub cost: CostBreakdown,
+    /// Sub-array row-op totals one frame charges (engine accounting;
+    /// all-zero for backends without a PIM engine).
+    pub ledger: OpLedger,
+    /// H-tree merge traffic of one executed batch at the backend's
+    /// lane schedule (exact integers; zero when serial).
+    pub merge_traffic: LaneTraffic,
+    /// Headline per-request energy [µJ] — matches the reply's
+    /// `energy_uj`.
+    pub energy_uj: f64,
+    /// The audited frame still answers the request.
+    pub logits: Vec<f32>,
+    pub prediction: usize,
+}
+
+impl EnergyAudit {
+    /// Scalar-only audit for backends without component accounting:
+    /// the whole per-request energy lands in one `backend_energy`
+    /// component.
+    pub fn from_scalar(energy_uj: f64) -> EnergyAudit {
+        let mut cost = CostBreakdown::new();
+        cost.add(
+            crate::energy::components::BACKEND_ENERGY,
+            energy_uj * 1e6,
+            0.0,
+        );
+        EnergyAudit { cost, energy_uj, ..EnergyAudit::default() }
+    }
+}
+
+/// Index of the largest logit. Total over NaN (a NaN row must not
+/// panic the worker thread that runs the default `run_batch` adapter).
+pub(crate) fn argmax(row: &[f32]) -> usize {
+    row.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+/// The best `min(k, classes)` (class, logit) pairs, descending by
+/// logit with ties broken by ascending class — deterministic for any
+/// input, and a total order even under NaN (like [`argmax`], a bad
+/// row must not panic the worker thread).
+pub(crate) fn top_k(row: &[f32], k: usize) -> Vec<(usize, f32)> {
+    let mut ranked: Vec<(usize, f32)> =
+        row.iter().copied().enumerate().collect();
+    ranked.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+    ranked.truncate(k.max(1).min(row.len()));
+    ranked
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_picks_largest() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.3]), 1);
+        assert_eq!(argmax(&[2.0]), 0);
+        assert_eq!(argmax(&[]), 0);
+    }
+
+    #[test]
+    fn top_k_ranks_and_truncates() {
+        let row = [0.1f32, 0.9, 0.3, 0.9];
+        assert_eq!(top_k(&row, 3), vec![(1, 0.9), (3, 0.9), (2, 0.3)]);
+        assert_eq!(top_k(&row, 100).len(), 4, "k clamps to classes");
+        assert_eq!(top_k(&row, 0), vec![(1, 0.9)], "k floors at 1");
+    }
+
+    #[test]
+    fn job_accessors() {
+        let img = vec![0.25f32; 4];
+        assert_eq!(Job::Classify(img.clone()).kind(), JobKind::Classify);
+        assert_eq!(Job::Logits(img.clone()).kind(), JobKind::Logits);
+        assert_eq!(
+            Job::TopK { image: img.clone(), k: 3 }.kind(),
+            JobKind::TopK(3)
+        );
+        assert_eq!(
+            Job::EnergyAudit(img.clone()).kind(),
+            JobKind::EnergyAudit
+        );
+        for j in [
+            Job::Classify(img.clone()),
+            Job::Logits(img.clone()),
+            Job::TopK { image: img.clone(), k: 1 },
+            Job::EnergyAudit(img.clone()),
+        ] {
+            assert_eq!(j.image(), &img[..]);
+        }
+    }
+
+    #[test]
+    fn output_accessors() {
+        let c = JobOutput::Classify {
+            prediction: 3,
+            logits: vec![0.0, 1.0],
+        };
+        assert_eq!(c.prediction(), Some(3));
+        assert_eq!(c.logits(), Some(&[0.0f32, 1.0][..]));
+        let t = JobOutput::TopK(vec![(7, 0.9), (1, 0.2)]);
+        assert_eq!(t.prediction(), Some(7));
+        assert!(t.logits().is_none());
+        assert_eq!(t.top_k().unwrap().len(), 2);
+        let l = JobOutput::Logits(vec![0.5]);
+        assert_eq!(l.prediction(), None);
+        assert!(l.audit().is_none());
+    }
+
+    #[test]
+    fn scalar_audit_carries_one_component() {
+        let a = EnergyAudit::from_scalar(2.5);
+        assert_eq!(a.energy_uj, 2.5);
+        let (e, _) = a
+            .cost
+            .component(crate::energy::components::BACKEND_ENERGY)
+            .unwrap();
+        assert!((e * 1e-6 - 2.5).abs() < 1e-9);
+        assert!(a.ledger == OpLedger::default());
+        assert!(a.merge_traffic.is_zero());
+    }
+}

@@ -27,6 +27,16 @@ pub struct ServeMetrics {
     pub per_worker: Vec<WorkerSnapshot>,
 }
 
+impl ServeMetrics {
+    /// Gauge: admitted jobs whose reply was never delivered —
+    /// cancelled or deadline-expired before execution (freeing their
+    /// batch slot), or a reply send that failed because the client
+    /// dropped its `Pending` (serving API v2, DESIGN.md §9).
+    pub fn dropped_replies(&self) -> u64 {
+        self.counters.dropped_replies
+    }
+}
+
 /// One worker's share of a [`ServeMetrics`] snapshot.
 #[derive(Debug, Default, Clone)]
 pub struct WorkerSnapshot {
@@ -35,6 +45,9 @@ pub struct WorkerSnapshot {
     pub errors: u64,
     /// Chaos-mode power failures that killed this worker mid-batch.
     pub chaos_kills: u64,
+    /// Replies this worker could not deliver (cancelled, expired, or
+    /// client gone).
+    pub dropped_replies: u64,
     /// Gauge: this worker's outstanding requests at snapshot time.
     pub outstanding: usize,
 }
@@ -105,6 +118,7 @@ impl MetricsHub {
                 batches: s.counters.batches,
                 errors: s.counters.errors,
                 chaos_kills: s.counters.chaos_kills,
+                dropped_replies: s.counters.dropped_replies,
                 outstanding,
             });
         }
@@ -133,6 +147,7 @@ mod tests {
             let mut s = hub.worker(1).stats.lock().unwrap();
             s.counters.served = 1;
             s.counters.errors = 1;
+            s.counters.dropped_replies = 2;
         }
         hub.worker(1).outstanding.store(4, Ordering::Relaxed);
 
@@ -147,6 +162,8 @@ mod tests {
         assert_eq!(m.per_worker.len(), 2);
         assert_eq!(m.per_worker[0].served, 3);
         assert_eq!(m.per_worker[1].errors, 1);
+        assert_eq!(m.per_worker[1].dropped_replies, 2);
+        assert_eq!(m.dropped_replies(), 2);
         assert_eq!(m.per_worker[1].outstanding, 4);
     }
 

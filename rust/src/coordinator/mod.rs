@@ -1,6 +1,15 @@
 //! L3 serving coordinator: bounded ingress → per-worker dynamic
-//! batchers → an executor worker pool → responses. Python is never on
-//! this path.
+//! batchers → an executor worker pool → typed responses. Python is
+//! never on this path.
+//!
+//! Serving API v2 (DESIGN.md §9): clients submit typed [`Job`]s
+//! (`Classify` / `Logits` / `TopK` / `EnergyAudit`) with optional
+//! per-job deadlines and cancel-on-drop [`Pending`] handles, backends
+//! execute whole [`JobBatch`]es through [`Backend::run_batch`], and
+//! the entire stack launches from one declarative
+//! [`crate::apicfg::RunConfig`] via [`Coordinator::launch`] (or
+//! [`Coordinator::launch_pool`] for custom backends) — subsuming the
+//! v1 `start` / `start_pool` / `start_pool_with_chaos` trio.
 //!
 //! Threading model (std::thread + channels; the offline image vendors
 //! no tokio — substitution noted in DESIGN.md §2): admission applies
@@ -10,11 +19,15 @@
 //! factory (PJRT handles never cross threads), and forms batches with
 //! a size-or-deadline policy, padding partial batches to the compiled
 //! batch shape; responses return through per-request channels.
-//! Shutdown drains: every admitted request is answered before the
-//! workers exit. The full thread-ownership map lives in DESIGN.md §3.
+//! Shutdown drains: every admitted request that was not cancelled or
+//! deadline-expired is answered before the workers exit (cancelled /
+//! expired jobs are skipped and counted in
+//! [`ServeMetrics::dropped_replies`]). The full thread-ownership map
+//! lives in DESIGN.md §3.
 //!
-//! Subsystem layout: `ingress` (admission + dispatch), `batcher`
-//! (size-or-deadline batching), `pool` (worker threads + init
+//! Subsystem layout: `job` (the typed Job/JobOutput vocabulary),
+//! `ingress` (admission + dispatch), `batcher` (size-or-deadline
+//! batching over job batches), `pool` (worker threads + init
 //! handshake), `metrics_agg` (per-worker counters merged into one
 //! [`ServeMetrics`]), `pimsim` (the PIM co-simulation backend).
 //!
@@ -31,11 +44,13 @@
 mod batcher;
 mod chaos;
 mod ingress;
+mod job;
 mod metrics_agg;
 mod pimsim;
 mod pool;
 
 pub use chaos::ChaosPolicy;
+pub use job::{EnergyAudit, Job, JobBatch, JobKind, JobOutput};
 pub use metrics_agg::{ServeMetrics, WorkerSnapshot};
 pub use pimsim::PimSimBackend;
 // The resumable engine moved to `crate::engine` (DESIGN.md §7). The
@@ -54,11 +69,18 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::apicfg::{BackendKind, RunConfig};
+use crate::cli::LaneArg;
+
 use ingress::Ingress;
 use metrics_agg::MetricsHub;
 
-/// Inference backend: consumes one padded batch, returns logits for
-/// every row (including padding rows, which the coordinator drops).
+/// Inference backend. [`Backend::infer_batch`] is the primitive every
+/// backend provides (one padded batch of operand rows in, logits for
+/// every row out — padding rows included, the coordinator drops
+/// them); [`Backend::run_batch`] is the v2 typed entry the batcher
+/// calls, whose default adapter derives every [`JobOutput`] from one
+/// `infer_batch` pass — so v1-era backends port without changes.
 pub trait Backend {
     /// `flat` holds `batch * input_elems` values.
     fn infer_batch(&mut self, flat: &[f32]) -> Result<Vec<f32>>;
@@ -71,6 +93,49 @@ pub trait Backend {
         0.0
     }
 
+    /// Execute one padded batch of typed jobs (serving API v2). All
+    /// job kinds share a single forward pass: the default adapter
+    /// calls [`Backend::infer_batch`] once and post-processes each
+    /// occupied row per its [`JobKind`]. Returns exactly one output
+    /// per entry of `jobs.kinds()`, in row order.
+    fn run_batch(&mut self, jobs: &JobBatch) -> Result<Vec<JobOutput>> {
+        let logits = self.infer_batch(jobs.flat())?;
+        let classes = self.num_classes();
+        let out = jobs
+            .kinds()
+            .iter()
+            .enumerate()
+            .map(|(i, kind)| {
+                let row = &logits[i * classes..(i + 1) * classes];
+                match *kind {
+                    JobKind::Classify => JobOutput::Classify {
+                        prediction: job::argmax(row),
+                        logits: row.to_vec(),
+                    },
+                    JobKind::Logits => JobOutput::Logits(row.to_vec()),
+                    JobKind::TopK(k) => {
+                        JobOutput::TopK(job::top_k(row, k))
+                    }
+                    JobKind::EnergyAudit => {
+                        let mut audit = self.frame_audit();
+                        audit.logits = row.to_vec();
+                        audit.prediction = job::argmax(row);
+                        JobOutput::EnergyAudit(Box::new(audit))
+                    }
+                }
+            })
+            .collect();
+        Ok(out)
+    }
+
+    /// Per-frame energy attribution for [`Job::EnergyAudit`] replies.
+    /// The default reports the scalar per-request energy as one
+    /// component; backends with real accounting (the PIM co-sim)
+    /// override this with engine ledger totals.
+    fn frame_audit(&self) -> EnergyAudit {
+        EnergyAudit::from_scalar(self.energy_uj_per_request())
+    }
+
     /// Chaos-mode hook: a simulated power failure killed the worker
     /// mid-batch. Volatile state is lost; the backend restores from
     /// its NV state. Stateless backends need no action.
@@ -81,20 +146,36 @@ pub trait Backend {
     fn nv_commit(&mut self) {}
 }
 
-/// One classification request.
-pub struct Request {
-    pub id: u64,
-    pub image: Vec<f32>,
-    pub enqueued_at: Instant,
-    pub reply: Sender<Response>,
+/// One admitted job on a worker queue — the internal wire format of
+/// the v2 API (clients speak [`Job`] / [`Pending`] / [`Response`]).
+pub(crate) struct QueuedJob {
+    pub(crate) id: u64,
+    pub(crate) job: Job,
+    pub(crate) enqueued_at: Instant,
+    /// Per-job deadline: still queued past this instant → the worker
+    /// drops the job instead of executing it.
+    pub(crate) deadline: Option<Instant>,
+    pub(crate) reply: Sender<Response>,
+    /// Set when the client drops its [`Pending`]; the worker then
+    /// frees the batch slot instead of executing for nobody.
+    pub(crate) cancelled: Arc<AtomicBool>,
 }
 
-/// Completed classification.
+impl QueuedJob {
+    /// True when executing this job would be wasted work: the client
+    /// cancelled, or the deadline passed while it sat in the queue.
+    pub(crate) fn dead(&self, now: Instant) -> bool {
+        self.cancelled.load(Ordering::Relaxed)
+            || self.deadline.is_some_and(|d| now > d)
+    }
+}
+
+/// Completed job (the v2 reply).
 #[derive(Debug, Clone)]
 pub struct Response {
     pub id: u64,
-    pub logits: Vec<f32>,
-    pub prediction: usize,
+    /// The typed result of the submitted [`Job`].
+    pub output: JobOutput,
     /// Time from enqueue to response (queue + batch wait + execute).
     pub latency: Duration,
     /// Modeled energy for this request [µJ] (0 when the backend has no
@@ -102,9 +183,23 @@ pub struct Response {
     pub energy_uj: f64,
 }
 
-/// Batching policy knobs.
+impl Response {
+    /// The predicted class, where the job kind produces one.
+    pub fn prediction(&self) -> Option<usize> {
+        self.output.prediction()
+    }
+
+    /// The full logits row, where the job kind carries one.
+    pub fn logits(&self) -> Option<&[f32]> {
+        self.output.logits()
+    }
+}
+
+/// Batching policy knobs (internal: derived from
+/// `RunConfig::max_wait` by `launch_pool` — the v1 public constructors
+/// that took this directly are gone).
 #[derive(Debug, Clone)]
-pub struct BatchPolicy {
+pub(crate) struct BatchPolicy {
     /// Max time the first request of a batch may wait for peers.
     pub max_wait: Duration,
 }
@@ -115,7 +210,7 @@ impl Default for BatchPolicy {
     }
 }
 
-/// Coordinator handle: enqueue requests, await responses, inspect
+/// Coordinator handle: enqueue jobs, await responses, inspect
 /// metrics, shut down.
 pub struct Coordinator {
     ingress: Option<Ingress>,
@@ -126,110 +221,136 @@ pub struct Coordinator {
     num_classes: usize,
 }
 
-/// Client-side handle to one in-flight request.
+/// Client-side handle to one in-flight job. Dropping it cancels the
+/// job: a cancelled job still queued when its worker reaches it is
+/// skipped, freeing the batch slot (counted in
+/// [`ServeMetrics::dropped_replies`]).
 pub struct Pending {
     pub id: u64,
     rx: Receiver<Response>,
+    cancel: Arc<AtomicBool>,
 }
 
 impl Pending {
     pub fn wait(self) -> Result<Response> {
-        Ok(self.rx.recv()?)
+        let r = self.rx.recv()?;
+        Ok(r)
     }
 
+    /// Wait up to `t`. On timeout `self` is dropped, which cancels
+    /// the job — a still-queued job frees its batch slot instead of
+    /// leaving a dangling reply sender.
     pub fn wait_timeout(self, t: Duration) -> Result<Response> {
-        Ok(self.rx.recv_timeout(t)?)
+        let r = self.rx.recv_timeout(t)?;
+        Ok(r)
+    }
+
+    /// Explicit cancellation (identical to dropping the handle).
+    pub fn cancel(self) {}
+}
+
+impl Drop for Pending {
+    fn drop(&mut self) {
+        self.cancel.store(true, Ordering::Relaxed);
     }
 }
 
 impl Coordinator {
-    /// Start a single-worker coordinator. `make_backend` runs ON the
-    /// executor thread (PJRT handles never cross threads);
-    /// `queue_depth` bounds admission (backpressure).
-    pub fn start<F, B>(
-        make_backend: F,
-        policy: BatchPolicy,
-        queue_depth: usize,
-    ) -> Result<Coordinator>
-    where
-        F: FnOnce() -> Result<B> + Send + 'static,
-        B: Backend + 'static,
-    {
-        let maker: pool::BackendMaker<B> = Box::new(make_backend);
-        Self::start_boxed(vec![maker], policy, queue_depth)
+    /// Serving API v2: launch the backend a [`RunConfig`] declares —
+    /// the one constructor `serve`, `infer --audit` paths, examples,
+    /// and tests share. Subsumes the v1 `start` / `start_pool` /
+    /// `start_pool_with_chaos` trio (DESIGN.md §9 migration table).
+    pub fn launch(cfg: &RunConfig) -> Result<Coordinator> {
+        cfg.validate()?;
+        match cfg.backend {
+            BackendKind::PimSim => {
+                let model = cfg.build_model()?;
+                let (w_bits, a_bits) = (cfg.w_bits, cfg.a_bits);
+                let (batch, seed, lanes) = (cfg.batch, cfg.seed, cfg.lanes);
+                Self::launch_pool(cfg, move |_worker| {
+                    // Same seed on every worker: bit-identical
+                    // replicas for any lane schedule.
+                    let b = PimSimBackend::new(
+                        model.clone(),
+                        w_bits,
+                        a_bits,
+                        batch,
+                        seed,
+                    )?;
+                    Ok(match lanes {
+                        LaneArg::Auto => b.with_auto_lanes(),
+                        LaneArg::Fixed(n) => b.with_lanes(n),
+                    })
+                })
+            }
+            BackendKind::Pjrt => {
+                let chaos_requested =
+                    matches!(cfg.chaos.as_deref(), Some(s) if !s.is_empty());
+                anyhow::ensure!(
+                    !chaos_requested,
+                    "chaos mode requires the pimsim backend (PJRT \
+                     backends have no NV state to resume from)"
+                );
+                let dir = crate::runtime::artifacts_dir();
+                let manifest = crate::runtime::Manifest::load(&dir)?;
+                let batch = cfg.batch;
+                anyhow::ensure!(
+                    manifest.batches.contains(&batch),
+                    "batch {batch} not exported (available: {:?})",
+                    manifest.batches
+                );
+                let model_path = manifest.model_path(&dir, batch);
+                let (h, w, c) = manifest.input_shape;
+                let elems = manifest.input_elems();
+                let classes = manifest.num_classes;
+                // One engine + compiled executable per worker, created
+                // on that worker's thread (PJRT handles never cross
+                // threads).
+                Self::launch_pool(cfg, move |worker| {
+                    let engine = crate::runtime::Engine::cpu()?;
+                    if worker == 0 {
+                        println!("PJRT platform: {}", engine.platform());
+                    }
+                    let exe = engine
+                        .load_hlo(&model_path, batch, elems, classes)?;
+                    Ok(PjrtBackend { exe, shape: [batch, h, w, c] })
+                })
+            }
+        }
     }
 
-    /// Start a pool of `workers` executors. The factory is called once
-    /// per worker, ON that worker's thread, with the worker index —
-    /// so every worker owns a private backend instance the way each
-    /// computational sub-array owns its operand rows. `queue_depth`
-    /// bounds total admission, split evenly across the worker queues;
-    /// dispatch is least-outstanding-work.
-    pub fn start_pool<F, B>(
-        factory: F,
-        workers: usize,
-        policy: BatchPolicy,
-        queue_depth: usize,
-    ) -> Result<Coordinator>
+    /// Serving API v2, custom-backend form: the pool shape (workers,
+    /// queue depth, batch wait, chaos) comes from `cfg`, the backend
+    /// from `factory` — called once per worker, ON that worker's
+    /// thread, with the worker index, so every worker owns a private
+    /// backend instance the way each computational sub-array owns its
+    /// operand rows. `cfg.queue` bounds total admission, split evenly
+    /// across the worker queues; dispatch is least-outstanding-work.
+    pub fn launch_pool<F, B>(cfg: &RunConfig, factory: F) -> Result<Coordinator>
     where
         F: Fn(usize) -> Result<B> + Send + Sync + 'static,
         B: Backend + 'static,
     {
-        Self::start_pool_inner(factory, workers, policy, queue_depth, None)
-    }
-
-    /// Start a pool with chaos mode: workers are killed mid-batch on
-    /// the [`ChaosPolicy`] trace schedule and resume from NV state —
-    /// no admitted request is dropped, kills show up in the per-worker
-    /// metrics.
-    pub fn start_pool_with_chaos<F, B>(
-        factory: F,
-        workers: usize,
-        policy: BatchPolicy,
-        queue_depth: usize,
-        chaos: ChaosPolicy,
-    ) -> Result<Coordinator>
-    where
-        F: Fn(usize) -> Result<B> + Send + Sync + 'static,
-        B: Backend + 'static,
-    {
-        Self::start_pool_inner(
-            factory,
-            workers,
-            policy,
-            queue_depth,
-            Some(chaos),
-        )
-    }
-
-    fn start_pool_inner<F, B>(
-        factory: F,
-        workers: usize,
-        policy: BatchPolicy,
-        queue_depth: usize,
-        chaos: Option<ChaosPolicy>,
-    ) -> Result<Coordinator>
-    where
-        F: Fn(usize) -> Result<B> + Send + Sync + 'static,
-        B: Backend + 'static,
-    {
-        anyhow::ensure!(workers >= 1, "pool needs at least one worker");
+        anyhow::ensure!(cfg.workers >= 1, "pool needs at least one worker");
+        let chaos = match &cfg.chaos {
+            Some(spec) if !spec.is_empty() => {
+                let mut cp = ChaosPolicy::new(
+                    crate::intermittency::TraceSpec::parse(spec)?,
+                );
+                cp.cycles_per_batch = cfg.chaos_cycles.max(1);
+                Some(cp)
+            }
+            _ => None,
+        };
+        let policy = BatchPolicy { max_wait: cfg.max_wait() };
         let factory = Arc::new(factory);
-        let makers = (0..workers)
+        let makers = (0..cfg.workers)
             .map(|w| {
                 let f = factory.clone();
                 Box::new(move || f(w)) as pool::BackendMaker<B>
             })
             .collect();
-        Self::start_boxed_inner(makers, policy, queue_depth, chaos)
-    }
-
-    fn start_boxed<B: Backend + 'static>(
-        makers: Vec<pool::BackendMaker<B>>,
-        policy: BatchPolicy,
-        queue_depth: usize,
-    ) -> Result<Coordinator> {
-        Self::start_boxed_inner(makers, policy, queue_depth, None)
+        Self::start_boxed_inner(makers, policy, cfg.queue, chaos)
     }
 
     fn start_boxed_inner<B: Backend + 'static>(
@@ -267,15 +388,41 @@ impl Coordinator {
         self.ingress.as_ref().expect("ingress alive until drop")
     }
 
-    /// Submit a request. Fails fast when every worker queue is full
-    /// (backpressure) or the image has the wrong geometry.
+    /// Submit a classification request (shorthand for
+    /// [`Job::Classify`]; logits are bit-identical to the v1 path).
+    /// Fails fast when every worker queue is full (backpressure) or
+    /// the image has the wrong geometry.
     pub fn submit(&self, image: Vec<f32>) -> Result<Pending> {
-        self.ingress().submit(image)
+        self.submit_job(Job::Classify(image))
     }
 
-    /// Blocking submit: retries on backpressure until accepted.
+    /// Blocking classification submit: retries on backpressure until
+    /// accepted.
     pub fn submit_blocking(&self, image: Vec<f32>) -> Result<Pending> {
-        self.ingress().submit_blocking(image)
+        self.submit_job_blocking(Job::Classify(image))
+    }
+
+    /// Submit a typed job. Fails fast when every worker queue is full
+    /// (backpressure) or the job's image has the wrong geometry.
+    pub fn submit_job(&self, job: Job) -> Result<Pending> {
+        self.ingress().submit(job, None)
+    }
+
+    /// Blocking typed submit: retries on backpressure until accepted.
+    pub fn submit_job_blocking(&self, job: Job) -> Result<Pending> {
+        self.ingress().submit_blocking(job, None)
+    }
+
+    /// Submit a typed job with a deadline: if it is still queued when
+    /// `deadline` elapses, the worker drops it (freeing its batch
+    /// slot, counted in [`ServeMetrics::dropped_replies`]) and the
+    /// client's wait fails.
+    pub fn submit_job_with_deadline(
+        &self,
+        job: Job,
+        deadline: Duration,
+    ) -> Result<Pending> {
+        self.ingress().submit(job, Some(Instant::now() + deadline))
     }
 
     pub fn metrics(&self) -> ServeMetrics {
@@ -405,12 +552,16 @@ impl Backend for MockBackend {
 mod tests {
     use super::*;
 
+    /// Pool knobs for mock-backend tests (the backend itself comes
+    /// from the `launch_pool` factory).
+    fn cfg(workers: usize, queue: usize, wait_ms: f64) -> RunConfig {
+        RunConfig { workers, queue, wait_ms, ..RunConfig::default() }
+    }
+
     fn coord(batch: usize, queue: usize) -> Coordinator {
-        Coordinator::start(
-            move || Ok(MockBackend::new(batch, 4, 10)),
-            BatchPolicy { max_wait: Duration::from_millis(1) },
-            queue,
-        )
+        Coordinator::launch_pool(&cfg(1, queue, 1.0), move |_| {
+            Ok(MockBackend::new(batch, 4, 10))
+        })
         .unwrap()
     }
 
@@ -424,11 +575,57 @@ mod tests {
     fn single_request_roundtrip() {
         let c = coord(4, 16);
         let r = c.submit(img(3)).unwrap().wait().unwrap();
-        assert_eq!(r.prediction, 3);
-        assert_eq!(r.logits.len(), 10);
+        assert_eq!(r.prediction(), Some(3));
+        assert_eq!(r.logits().unwrap().len(), 10);
         let m = c.shutdown();
         assert_eq!(m.counters.served, 1);
         assert_eq!(m.counters.batches, 1);
+        assert_eq!(m.dropped_replies(), 0);
+    }
+
+    #[test]
+    fn all_job_kinds_roundtrip_through_one_pool() {
+        let c = coord(4, 16);
+        let cls = c
+            .submit_job(Job::Classify(img(3)))
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(cls.prediction(), Some(3));
+        let logits = c
+            .submit_job(Job::Logits(img(3)))
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(
+            logits.logits().unwrap(),
+            cls.logits().unwrap(),
+            "Logits must carry the Classify row verbatim"
+        );
+        assert_eq!(logits.prediction(), None);
+        let top = c
+            .submit_job(Job::TopK { image: img(3), k: 2 })
+            .unwrap()
+            .wait()
+            .unwrap();
+        let ranked = top.output.top_k().unwrap();
+        assert_eq!(ranked.len(), 2);
+        assert_eq!(ranked[0].0, 3, "best class must lead");
+        assert!(ranked[0].1 >= ranked[1].1, "ranking must be sorted");
+        let audit = c
+            .submit_job(Job::EnergyAudit(img(3)))
+            .unwrap()
+            .wait()
+            .unwrap();
+        let a = audit.output.audit().unwrap();
+        assert_eq!(a.prediction, 3);
+        assert_eq!(a.logits, cls.logits().unwrap());
+        assert_eq!(
+            a.energy_uj, 0.0,
+            "mock backend has no energy model"
+        );
+        let m = c.shutdown();
+        assert_eq!(m.counters.served, 4);
     }
 
     #[test]
@@ -438,7 +635,7 @@ mod tests {
             (0..16).map(|i| c.submit(img(i % 10)).unwrap()).collect();
         for (i, p) in pending.into_iter().enumerate() {
             let r = p.wait().unwrap();
-            assert_eq!(r.prediction, i % 10);
+            assert_eq!(r.prediction(), Some(i % 10));
         }
         let m = c.shutdown();
         assert_eq!(m.counters.served, 16);
@@ -451,21 +648,20 @@ mod tests {
     fn wrong_geometry_rejected() {
         let c = coord(2, 8);
         assert!(c.submit(vec![0.0; 3]).is_err());
+        assert!(c
+            .submit_job(Job::TopK { image: img(1), k: 0 })
+            .is_err());
         c.shutdown();
     }
 
     #[test]
     fn backpressure_rejects_when_full() {
         // Slow backend + tiny queue: super-capacity submits must fail.
-        let c = Coordinator::start(
-            move || {
-                let mut b = MockBackend::new(1, 4, 10);
-                b.delay = Duration::from_millis(20);
-                Ok(b)
-            },
-            BatchPolicy { max_wait: Duration::ZERO },
-            2,
-        )
+        let c = Coordinator::launch_pool(&cfg(1, 2, 0.0), move |_| {
+            let mut b = MockBackend::new(1, 4, 10);
+            b.delay = Duration::from_millis(20);
+            Ok(b)
+        })
         .unwrap();
         let mut accepted = Vec::new();
         let mut rejected = 0;
@@ -497,15 +693,11 @@ mod tests {
 
     #[test]
     fn submit_blocking_never_drops() {
-        let c = Coordinator::start(
-            move || {
-                let mut b = MockBackend::new(2, 4, 10);
-                b.delay = Duration::from_millis(2);
-                Ok(b)
-            },
-            BatchPolicy::default(),
-            2,
-        )
+        let c = Coordinator::launch_pool(&cfg(1, 2, 2.0), move |_| {
+            let mut b = MockBackend::new(2, 4, 10);
+            b.delay = Duration::from_millis(2);
+            Ok(b)
+        })
         .unwrap();
         let pendings: Vec<Pending> = (0..12)
             .map(|i| c.submit_blocking(img(i % 10)).unwrap())
@@ -534,16 +726,80 @@ mod tests {
                 10
             }
         }
-        let c = Coordinator::start(
-            || Ok(Failing),
-            BatchPolicy::default(),
-            4,
-        )
-        .unwrap();
+        let c = Coordinator::launch_pool(&cfg(1, 4, 2.0), |_| Ok(Failing))
+            .unwrap();
         let p = c.submit(vec![0.0; 4]).unwrap();
         assert!(p.wait_timeout(Duration::from_secs(1)).is_err());
         let m = c.shutdown();
         assert_eq!(m.counters.errors, 1);
+    }
+
+    // --- v2 cancellation / deadline coverage (ISSUE 5 satellite:
+    // orphaned replies free their batch slot and are counted) ---
+
+    #[test]
+    fn cancelled_pending_frees_slot_and_counts_dropped() {
+        // Generous 100 ms batch vs 10 ms staging: the cancellation
+        // must land while the second job is still queued, even on a
+        // loaded CI runner.
+        let c = Coordinator::launch_pool(&cfg(1, 8, 0.0), move |_| {
+            let mut b = MockBackend::new(1, 4, 10);
+            b.delay = Duration::from_millis(100);
+            Ok(b)
+        })
+        .unwrap();
+        // First job occupies the worker; the second sits queued.
+        let a = c.submit(img(1)).unwrap();
+        std::thread::sleep(Duration::from_millis(10));
+        let b = c.submit(img(2)).unwrap();
+        drop(b); // cancel while queued
+        a.wait().unwrap();
+        let m = c.shutdown();
+        assert_eq!(m.counters.served, 1, "cancelled job must not run");
+        assert_eq!(m.dropped_replies(), 1);
+        assert_eq!(m.queue_depth, 0, "cancelled job freed its slot");
+    }
+
+    #[test]
+    fn deadline_expired_job_is_dropped_not_executed() {
+        let c = Coordinator::launch_pool(&cfg(1, 8, 0.0), move |_| {
+            let mut b = MockBackend::new(1, 4, 10);
+            b.delay = Duration::from_millis(100);
+            Ok(b)
+        })
+        .unwrap();
+        let a = c.submit(img(1)).unwrap();
+        std::thread::sleep(Duration::from_millis(10));
+        let d = c
+            .submit_job_with_deadline(
+                Job::Classify(img(2)),
+                Duration::from_millis(1),
+            )
+            .unwrap();
+        // The worker is busy for ~100 ms; the deadline passes first.
+        assert!(d.wait_timeout(Duration::from_secs(2)).is_err());
+        a.wait().unwrap();
+        let m = c.shutdown();
+        assert_eq!(m.counters.served, 1);
+        assert!(m.dropped_replies() >= 1);
+        assert_eq!(m.queue_depth, 0);
+    }
+
+    #[test]
+    fn timed_out_wait_counts_dropped_reply() {
+        // The pre-v2 leak: wait_timeout gave up but the dead reply
+        // sender silently swallowed the send. Now it is counted.
+        let c = Coordinator::launch_pool(&cfg(1, 4, 0.0), move |_| {
+            let mut b = MockBackend::new(1, 4, 10);
+            b.delay = Duration::from_millis(20);
+            Ok(b)
+        })
+        .unwrap();
+        let p = c.submit(img(3)).unwrap();
+        assert!(p.wait_timeout(Duration::from_millis(1)).is_err());
+        let m = c.shutdown();
+        assert_eq!(m.dropped_replies(), 1);
+        assert_eq!(m.queue_depth, 0);
     }
 
     // --- pool-specific coverage (multi-worker paths; the heavier
@@ -551,12 +807,11 @@ mod tests {
 
     #[test]
     fn pool_requires_at_least_one_worker() {
-        let r = Coordinator::start_pool(
-            |_| Ok(MockBackend::new(1, 4, 10)),
-            0,
-            BatchPolicy::default(),
-            8,
-        );
+        let mut zero = cfg(1, 8, 2.0);
+        zero.workers = 0;
+        let r = Coordinator::launch_pool(&zero, |_| {
+            Ok(MockBackend::new(1, 4, 10))
+        });
         assert!(r.is_err());
     }
 
@@ -565,15 +820,10 @@ mod tests {
         use std::sync::Mutex;
         let seen = Arc::new(Mutex::new(Vec::new()));
         let s = seen.clone();
-        let c = Coordinator::start_pool(
-            move |w| {
-                s.lock().unwrap().push(w);
-                Ok(MockBackend::new(2, 4, 10))
-            },
-            3,
-            BatchPolicy::default(),
-            16,
-        )
+        let c = Coordinator::launch_pool(&cfg(3, 16, 2.0), move |w| {
+            s.lock().unwrap().push(w);
+            Ok(MockBackend::new(2, 4, 10))
+        })
         .unwrap();
         assert_eq!(c.worker_count(), 3);
         assert_eq!(c.batch_size(), 2);
@@ -586,41 +836,36 @@ mod tests {
 
     #[test]
     fn pool_init_failure_tears_down_siblings() {
-        let r = Coordinator::start_pool(
-            |w| {
-                if w == 1 {
-                    anyhow::bail!("worker 1 refused")
-                }
-                Ok(MockBackend::new(1, 4, 10))
-            },
-            2,
-            BatchPolicy::default(),
-            8,
-        );
+        let r = Coordinator::launch_pool(&cfg(2, 8, 2.0), |w| {
+            if w == 1 {
+                anyhow::bail!("worker 1 refused")
+            }
+            Ok(MockBackend::new(1, 4, 10))
+        });
         let err = r.err().expect("pool init must fail");
         assert!(err.to_string().contains("worker 1 refused"));
     }
 
     #[test]
     fn chaos_kills_fire_without_dropping_requests() {
-        let chaos = ChaosPolicy::new(
-            crate::intermittency::TraceSpec::parse("periodic:2:1:64")
-                .unwrap(),
-        );
-        let c = Coordinator::start_pool_with_chaos(
-            |_| Ok(MockBackend::new(2, 4, 10)),
-            2,
-            BatchPolicy { max_wait: Duration::from_millis(1) },
-            32,
-            chaos,
-        )
+        let chaos_cfg = RunConfig {
+            chaos: Some("periodic:2:1:64".to_string()),
+            ..cfg(2, 32, 1.0)
+        };
+        let c = Coordinator::launch_pool(&chaos_cfg, |_| {
+            Ok(MockBackend::new(2, 4, 10))
+        })
         .unwrap();
         let pendings: Vec<Pending> = (0..20)
             .map(|i| c.submit_blocking(img(i % 10)).unwrap())
             .collect();
         for (i, p) in pendings.into_iter().enumerate() {
             let r = p.wait().unwrap();
-            assert_eq!(r.prediction, i % 10, "kills must not corrupt");
+            assert_eq!(
+                r.prediction(),
+                Some(i % 10),
+                "kills must not corrupt"
+            );
         }
         let m = c.shutdown();
         assert_eq!(m.counters.served, 20, "chaos dropped requests");
@@ -636,17 +881,14 @@ mod tests {
 
     #[test]
     fn pool_serves_across_workers_and_reports_queue_depth() {
-        let c = Coordinator::start_pool(
-            |_| Ok(MockBackend::new(2, 4, 10)),
-            2,
-            BatchPolicy { max_wait: Duration::from_millis(1) },
-            32,
-        )
+        let c = Coordinator::launch_pool(&cfg(2, 32, 1.0), |_| {
+            Ok(MockBackend::new(2, 4, 10))
+        })
         .unwrap();
         let pendings: Vec<Pending> =
             (0..10).map(|i| c.submit(img(i % 10)).unwrap()).collect();
         for (i, p) in pendings.into_iter().enumerate() {
-            assert_eq!(p.wait().unwrap().prediction, i % 10);
+            assert_eq!(p.wait().unwrap().prediction(), Some(i % 10));
         }
         let m = c.shutdown();
         assert_eq!(m.counters.served, 10);

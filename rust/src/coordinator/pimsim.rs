@@ -25,13 +25,16 @@
 use anyhow::Result;
 
 use crate::accel::{Accelerator, Proposed};
-use crate::arch::{ChipOrg, HTree};
+use crate::arch::{ChipOrg, HTree, LaneTraffic};
 use crate::cnn::Model;
+use crate::device::SotCosts;
+use crate::energy::{components, CostBreakdown};
 use crate::engine::{
     LaneSchedule, ModelPlan, ResumableForward, TileScheduler,
 };
+use crate::subarray::OpLedger;
 
-use super::Backend;
+use super::{Backend, EnergyAudit};
 
 /// Serving backend over the bit-accurate PIM engine.
 pub struct PimSimBackend {
@@ -43,6 +46,13 @@ pub struct PimSimBackend {
     /// amortized per frame (0 when serial) — the `inter_lane_merge`
     /// share of each served request.
     merge_uj_per_frame: f64,
+    /// One executed batch's exact merge-traffic integers at the lane
+    /// schedule (the source `merge_uj_per_frame` is priced from),
+    /// cached so `frame_audit` never re-walks the layers.
+    merge_traffic: LaneTraffic,
+    /// Per-frame sub-array row-op totals of the compiled plan (input
+    /// independent), cached for the same reason.
+    frame_ledger: OpLedger,
     frames_served: u64,
     /// NV shadow of `frames_served`, committed per delivered batch;
     /// a chaos-mode power failure rolls the volatile counter back here.
@@ -66,12 +76,16 @@ impl PimSimBackend {
             .estimate(&model, w_bits, a_bits, batch)
             .uj_per_frame();
         let plan = ModelPlan::compile(model, w_bits, a_bits, seed)?;
+        let frame_ledger = plan.frame_ledger();
         Ok(PimSimBackend {
             plan,
             sched: TileScheduler::default(),
             batch,
             energy_uj_per_frame,
             merge_uj_per_frame: 0.0,
+            // Serial default schedule: nothing crosses the H-tree.
+            merge_traffic: LaneTraffic::default(),
+            frame_ledger,
             frames_served: 0,
             nv_frames_served: 0,
         })
@@ -92,10 +106,12 @@ impl PimSimBackend {
             TileScheduler::from_schedule(sched, &ChipOrg::default());
         // The same traffic accounting forward_batch charges per call,
         // amortized per frame (batches are padded to full, so every
-        // executed batch maps images identically).
+        // executed batch maps images identically). Cached once here;
+        // `frame_audit` reuses it on the serving path.
+        self.merge_traffic =
+            self.sched.batch_traffic(&self.plan, self.batch);
         self.merge_uj_per_frame = self
-            .sched
-            .batch_traffic(&self.plan, self.batch)
+            .merge_traffic
             .energy_pj(&HTree::default())
             * 1e-6
             / self.batch as f64;
@@ -192,6 +208,38 @@ impl Backend for PimSimBackend {
 
     fn energy_uj_per_request(&self) -> f64 {
         self.energy_uj_per_frame + self.merge_uj_per_frame
+    }
+
+    /// The v2 `EnergyAudit` payload, from the engine's own accounting
+    /// (not the scalar default): the frame's exact row-op totals
+    /// (`ModelPlan::frame_ledger`) priced through the SOT cost table,
+    /// the lane schedule's H-tree merge share (amortized per frame,
+    /// the same accounting `energy_uj_per_request` folds in), and one
+    /// executed batch's merge-traffic integers.
+    fn frame_audit(&self) -> EnergyAudit {
+        let ledger = self.frame_ledger;
+        let costs = SotCosts::default();
+        let mut cost = CostBreakdown::new();
+        cost.add(
+            components::TILE_EXECUTION,
+            ledger.energy_pj(&costs),
+            ledger.latency_ns(&costs),
+        );
+        let htree = HTree::default();
+        let b = self.batch as f64;
+        cost.add(
+            components::INTER_LANE_MERGE,
+            self.merge_traffic.energy_pj(&htree) / b,
+            self.merge_traffic.latency_ns(&htree) / b,
+        );
+        EnergyAudit {
+            cost,
+            ledger,
+            merge_traffic: self.merge_traffic,
+            energy_uj: self.energy_uj_per_frame + self.merge_uj_per_frame,
+            logits: Vec::new(),
+            prediction: 0,
+        }
     }
 
     fn power_fail_restore(&mut self) {
@@ -417,6 +465,42 @@ mod tests {
         assert_eq!(b.input_elems(), 40 * 40 * 3);
         assert_eq!(b.num_classes(), 10);
         assert!(b.energy_uj_per_frame() > 0.0);
+    }
+
+    #[test]
+    fn frame_audit_reports_engine_totals() {
+        // The v2 audit must be the engine's accounting, not a scalar:
+        // ledger == the compiled plan's per-frame row ops, the
+        // tile_execution component prices exactly that ledger, and the
+        // inter_lane_merge share matches the serving precompute.
+        let b = backend().with_lanes(4);
+        let audit = b.frame_audit();
+        assert_eq!(audit.ledger, b.plan().frame_ledger());
+        let costs = crate::device::SotCosts::default();
+        let (e_tile, l_tile) = audit
+            .cost
+            .component(crate::energy::components::TILE_EXECUTION)
+            .unwrap();
+        assert_eq!(e_tile, audit.ledger.energy_pj(&costs));
+        assert_eq!(l_tile, audit.ledger.latency_ns(&costs));
+        let (e_merge, _) = audit
+            .cost
+            .component(crate::energy::components::INTER_LANE_MERGE)
+            .unwrap();
+        assert!(
+            (e_merge * 1e-6 - b.merge_uj_per_frame()).abs() < 1e-12,
+            "merge component must equal the per-frame merge share"
+        );
+        assert!(!audit.merge_traffic.is_zero());
+        assert_eq!(audit.energy_uj, b.energy_uj_per_request());
+        // Serial backends audit a zero merge share.
+        let serial = backend().frame_audit();
+        assert!(serial.merge_traffic.is_zero());
+        let (e0, _) = serial
+            .cost
+            .component(crate::energy::components::INTER_LANE_MERGE)
+            .unwrap();
+        assert_eq!(e0, 0.0);
     }
 
     #[test]

@@ -19,7 +19,7 @@ use anyhow::Result;
 use super::batcher::Batcher;
 use super::chaos::{ChaosClock, ChaosPolicy};
 use super::metrics_agg::MetricsHub;
-use super::{Backend, BatchPolicy, Request};
+use super::{Backend, BatchPolicy, QueuedJob};
 
 /// A boxed per-worker backend constructor, invoked on the worker's own
 /// thread.
@@ -33,7 +33,7 @@ pub(super) struct PoolGeometry {
 }
 
 pub(super) struct WorkerPool {
-    pub senders: Vec<SyncSender<Request>>,
+    pub senders: Vec<SyncSender<QueuedJob>>,
     pub handles: Vec<JoinHandle<()>>,
     pub geometry: PoolGeometry,
 }
@@ -57,7 +57,7 @@ pub(super) fn spawn_pool<B: Backend + 'static>(
     let mut handles = Vec::with_capacity(workers);
     let mut geom_rxs = Vec::with_capacity(workers);
     for (w, maker) in makers.into_iter().enumerate() {
-        let (tx, rx) = sync_channel::<Request>(per_depth);
+        let (tx, rx) = sync_channel::<QueuedJob>(per_depth);
         let (geom_tx, geom_rx) =
             sync_channel::<Result<(usize, usize, usize)>>(1);
         let hub = hub.clone();

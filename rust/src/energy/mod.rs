@@ -53,6 +53,10 @@ pub mod components {
     /// H-tree wire traffic of the engine lane schedule: operand
     /// broadcast out to the lanes plus partial-sum merge back.
     pub const INTER_LANE_MERGE: &str = "inter_lane_merge";
+    /// Scalar per-request energy of a backend without component
+    /// accounting (the default `EnergyAudit` adapter of the serving
+    /// API v2, DESIGN.md §9).
+    pub const BACKEND_ENERGY: &str = "backend_energy";
 }
 
 /// A cost sum with per-component attribution.

@@ -206,6 +206,20 @@ impl ModelPlan {
             .sum()
     }
 
+    /// Sub-array row-op totals one image's forward pass charges — the
+    /// same per-layer `and_tile_ledger` accounting [`Self::forward`] /
+    /// [`Self::forward_batch`] merge, summed over the whole layer
+    /// walk. The ledger is a function of layer geometry only (input
+    /// independent), so serving can attribute exact per-frame totals
+    /// (the v2 `EnergyAudit` job) without re-executing a frame.
+    pub fn frame_ledger(&self) -> OpLedger {
+        let mut ledger = OpLedger::default();
+        for lw in self.layers.iter().flatten() {
+            ledger.merge(&and_tile_ledger(lw, lw.p));
+        }
+        ledger
+    }
+
     /// Begin a resumable tiled forward pass over one image; each
     /// layer's tiles execute its scheduled lane count at a time
     /// ([`ResumableForward::step_wave`]).
@@ -671,6 +685,19 @@ mod tests {
         assert!(p
             .forward_batch(&[], 0, &TileScheduler::new(1))
             .is_err());
+    }
+
+    #[test]
+    fn frame_ledger_matches_executed_forward() {
+        // The serving audit's per-frame totals are exactly what one
+        // executed image charges, for any input.
+        let p = plan();
+        let flat = img(p.input_elems(), 4);
+        let out = p
+            .forward_batch(&flat, 1, &TileScheduler::new(1))
+            .unwrap();
+        assert_eq!(p.frame_ledger(), out.ledger);
+        assert!(p.frame_ledger().logic_ops > 0);
     }
 
     #[test]

@@ -20,9 +20,11 @@
 //! * engine: [`engine`] (compiled model plans, sub-array-parallel tile
 //!   execution on the persistent lane runtime, H-tree-aware lane
 //!   auto-tuning, resumable forward passes — DESIGN.md §7–§8)
-//! * serving: [`runtime`] (PJRT, gated behind the `pjrt` feature),
-//!   [`coordinator`] (ingress → per-worker batchers → executor pool,
-//!   incl. the PIM co-sim serving backend over `engine`), [`metrics`]
+//! * serving: [`apicfg`] (declarative `RunConfig`, the one artifact a
+//!   run launches from — DESIGN.md §9), [`runtime`] (PJRT, gated
+//!   behind the `pjrt` feature), [`coordinator`] (typed Job/JobOutput
+//!   API, ingress → per-worker batchers → executor pool, incl. the
+//!   PIM co-sim serving backend over `engine`), [`metrics`]
 
 pub mod benchlib;
 pub mod bitops;
@@ -34,6 +36,7 @@ pub mod proptest_lite;
 pub mod quant;
 
 pub mod accel;
+pub mod apicfg;
 pub mod arch;
 pub mod asr;
 pub mod baselines;

@@ -3,7 +3,10 @@
 //!
 //! Subcommands:
 //!   serve          E2E serving over the AOT artifacts + synthetic SVHN
-//!                  (`--chaos` kills workers mid-batch on a schedule)
+//!                  (`--chaos` kills workers mid-batch on a schedule,
+//!                  `--audit` prints a per-request energy audit,
+//!                  `--config` loads a declarative RunConfig file with
+//!                  flags as overrides)
 //!   infer          single-image PIM co-sim inference, optionally
 //!                  under a power-failure trace (resumable NV tiles)
 //!   simulate       PIM energy/latency breakdown for one design point
@@ -11,29 +14,32 @@
 //!   sense-mc       Fig. 4b Monte Carlo of the AND sense margin
 //!   intermittent   Fig. 7b power-failure resilience run
 //!   info           artifact + config summary
+//!
+//! Both `serve` and `infer` construct through one declarative
+//! [`RunConfig`] (serving API v2, DESIGN.md §9): the `--config` file
+//! is the base, explicitly typed flags override it, and the whole
+//! stack launches via `Coordinator::launch`.
 
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 use pims::accel::{Accelerator, Proposed};
-use pims::baselines::{Asic, Imce, Reram};
+use pims::apicfg::{model_by_name, BackendKind, RunConfig};
 use pims::arch::{ChipOrg, HTree};
-use pims::cli::{flag, opt, opt_default, Cli, LaneArg};
+use pims::baselines::{Asic, Imce, Reram};
+use pims::cli::{flag, opt, opt_default, Cli};
 use pims::cnn;
-use pims::configsys::Config;
-use pims::coordinator::{
-    BatchPolicy, ChaosPolicy, Coordinator, PimSimBackend, PjrtBackend,
-};
+use pims::coordinator::{Coordinator, Job};
 use pims::dataset::Dataset;
 use pims::device::{monte_carlo_sense, SotCell};
-use pims::engine::{LaneSchedule, ModelPlan, TileScheduler};
+use pims::engine::TileScheduler;
 use pims::intermittency::{
     forward_progress, inference_forward_progress, run_intermittent,
     run_intermittent_inference, FrameWorkload, InferencePlan, PowerTrace,
     TraceSpec,
 };
 use pims::nvfa::NvPolicy;
-use pims::runtime::{artifacts_dir, Engine, Manifest};
+use pims::runtime::{artifacts_dir, Manifest};
 
 fn cli() -> Cli {
     Cli::new("pims", "SOT-MRAM PIM CNN accelerator (paper reproduction)")
@@ -53,14 +59,15 @@ fn cli() -> Cli {
                 opt_default("lanes", "pimsim engine lanes per worker (virtual parallel sub-arrays), or 'auto' for per-layer H-tree tuning", "1"),
                 opt("chaos", "kill workers mid-batch on a trace schedule: poisson:<mean-on>:<off>[:<seed>] | periodic:<on>:<off>[:<count>] | bursty:<good>:<bad>:<off>[:<epochs>:<per-epoch>] (pimsim only)"),
                 opt_default("chaos-cycles", "trace cycles one batch consumes (chaos mode)", "1"),
-                opt_default("config", "optional config file", ""),
+                flag("audit", "print a per-request energy audit (component table + merge traffic) for a sampled request"),
+                opt_default("config", "RunConfig file; explicit flags override it", ""),
             ],
         )
         .command(
             "infer",
             "single-image inference on the bit-accurate PIM co-sim, optionally under a power-failure trace (resumable NV tiles)",
             vec![
-                opt_default("model", "micro|svhn", "micro"),
+                opt_default("model", "micro|svhn|alexnet|lenet", "micro"),
                 opt_default("wbits", "weight bits", "1"),
                 opt_default("abits", "activation bits", "4"),
                 opt_default("seed", "weight/image seed", "42"),
@@ -69,6 +76,7 @@ fn cli() -> Cli {
                 opt_default("ckpt", "checkpoint period (tiles)", "4"),
                 opt_default("cycles-per-tile", "trace cycles one tile consumes", "10"),
                 opt_default("lanes", "engine lanes (virtual parallel sub-arrays; one wave of lanes tiles shares the tile cycles), or 'auto' for per-layer H-tree tuning", "1"),
+                opt_default("config", "RunConfig file; explicit flags override it", ""),
             ],
         )
         .command(
@@ -76,7 +84,7 @@ fn cli() -> Cli {
             "PIM co-simulation energy/latency breakdown for one design point",
             vec![
                 opt_default("design", "proposed|imce|reram|asic", "proposed"),
-                opt_default("model", "svhn|alexnet|lenet", "svhn"),
+                opt_default("model", "micro|svhn|alexnet|lenet", "svhn"),
                 opt_default("wbits", "weight bits", "1"),
                 opt_default("abits", "activation bits", "4"),
                 opt_default("batch", "batch size", "8"),
@@ -86,7 +94,7 @@ fn cli() -> Cli {
             "sweep",
             "sweep all designs x W:I configs (Fig. 9/10 data)",
             vec![
-                opt_default("model", "svhn|alexnet|lenet", "svhn"),
+                opt_default("model", "micro|svhn|alexnet|lenet", "svhn"),
                 opt_default("batch", "batch size", "8"),
             ],
         )
@@ -119,40 +127,6 @@ fn cli() -> Cli {
                 opt_default("fill", "constant fill value", "0.5"),
             ],
         )
-}
-
-/// Resolve a parsed `--lanes` argument against a compiled plan: fixed
-/// counts become uniform schedules, `auto` tunes one count per layer
-/// on the default chip + H-tree models. Shared by `infer` and `serve`
-/// so both subcommands interpret the flag identically.
-fn resolve_lanes(arg: LaneArg, plan: &ModelPlan) -> LaneSchedule {
-    match arg {
-        LaneArg::Fixed(n) => LaneSchedule::uniform(n),
-        LaneArg::Auto => LaneSchedule::auto(
-            plan,
-            &ChipOrg::default(),
-            &HTree::default(),
-        ),
-    }
-}
-
-fn pick_model(name: &str) -> Result<cnn::Model> {
-    Ok(match name {
-        "svhn" => cnn::svhn_net(),
-        "alexnet" => cnn::alexnet(),
-        "lenet" => cnn::lenet(),
-        other => anyhow::bail!("unknown model '{other}'"),
-    })
-}
-
-fn pick_design(name: &str) -> Result<Box<dyn Accelerator>> {
-    Ok(match name {
-        "proposed" => Box::new(Proposed::default()),
-        "imce" => Box::new(Imce::default()),
-        "reram" => Box::new(Reram::default()),
-        "asic" => Box::new(Asic::default()),
-        other => anyhow::bail!("unknown design '{other}'"),
-    })
 }
 
 fn main() {
@@ -188,103 +162,48 @@ fn run(p: pims::cli::Parsed) -> Result<()> {
     }
 }
 
-/// Knobs shared by both serve backends.
-struct ServeOpts {
-    batch: usize,
-    workers: usize,
-    requests: usize,
-    queue: usize,
-    wait_ms: u64,
+fn pick_design(name: &str) -> Result<Box<dyn Accelerator>> {
+    Ok(match name {
+        "proposed" => Box::new(Proposed::default()),
+        "imce" => Box::new(Imce::default()),
+        "reram" => Box::new(Reram::default()),
+        "asic" => Box::new(Asic::default()),
+        other => anyhow::bail!("unknown design '{other}'"),
+    })
 }
 
 fn cmd_serve(p: &pims::cli::Parsed) -> Result<()> {
-    let mut cfg = Config::default();
-    let cfg_path = p.get("config").unwrap_or("");
-    if !cfg_path.is_empty() {
-        cfg = Config::load(cfg_path)?;
-    }
-    for (k, v) in &p.set_overrides {
-        cfg.set(k, v)?;
-    }
-    let opts = ServeOpts {
-        batch: p.get_usize("batch")?.unwrap_or(8),
-        workers: p.get_usize_at_least("workers", 1)?,
-        requests: cfg.int_or(
-            "serve.requests",
-            p.get_usize("requests")?.unwrap_or(512) as i64,
-        ) as usize,
-        queue: p.get_usize("queue")?.unwrap_or(256),
-        wait_ms: p.get_usize("wait-ms")?.unwrap_or(2) as u64,
-    };
-    match p.get("backend").unwrap_or("pjrt") {
-        "pjrt" => {
-            anyhow::ensure!(
-                p.get("chaos").unwrap_or("").is_empty(),
-                "--chaos requires --backend pimsim (PJRT backends \
-                 have no NV state to resume from)"
-            );
-            serve_pjrt(&opts)
-        }
-        "pimsim" => serve_pimsim(p, &opts),
-        other => anyhow::bail!("unknown backend '{other}' (pjrt|pimsim)"),
+    // One declarative config for both backends: `--config` file as
+    // the base, explicit flags as overrides (RunConfig::from_parsed).
+    let cfg = RunConfig::from_parsed(p)?;
+    match cfg.backend {
+        BackendKind::Pjrt => serve_pjrt(p, &cfg),
+        BackendKind::PimSim => serve_pimsim(p, &cfg),
     }
 }
 
-/// Parse the `--chaos` flags into a policy, if chaos mode was asked.
-fn chaos_policy(p: &pims::cli::Parsed) -> Result<Option<ChaosPolicy>> {
-    match p.get("chaos") {
-        Some(spec) if !spec.is_empty() => {
-            let mut cp = ChaosPolicy::new(TraceSpec::parse(spec)?);
-            cp.cycles_per_batch =
-                p.get_u64("chaos-cycles")?.unwrap_or(1).max(1);
-            Ok(Some(cp))
-        }
-        _ => Ok(None),
-    }
-}
-
-fn serve_pjrt(o: &ServeOpts) -> Result<()> {
+fn serve_pjrt(p: &pims::cli::Parsed, cfg: &RunConfig) -> Result<()> {
     let dir = artifacts_dir();
+    // Loaded here only for the banner + dataset; batch-exported
+    // validation lives in Coordinator::launch.
     let manifest = Manifest::load(&dir)?;
-    let batch = o.batch;
-    anyhow::ensure!(
-        manifest.batches.contains(&batch),
-        "batch {batch} not exported (available: {:?})",
-        manifest.batches
-    );
+    let batch = cfg.batch;
     let ds =
         Dataset::load_bin(dir.join("svhn_test.bin").to_str().unwrap())?;
     println!(
         "serving W{}:I{} model, batch={batch}, workers={}, {} test images",
-        manifest.w_bits, manifest.a_bits, o.workers, ds.n
+        manifest.w_bits, manifest.a_bits, cfg.workers, ds.n
     );
 
-    let model_path = manifest.model_path(&dir, batch);
-    let (h, w, c) = manifest.input_shape;
-    let elems = manifest.input_elems();
-    let classes = manifest.num_classes;
-    // One engine + compiled executable per worker, created on that
-    // worker's thread (PJRT handles never cross threads).
-    let coordinator = Coordinator::start_pool(
-        move |worker| {
-            let engine = Engine::cpu()?;
-            if worker == 0 {
-                println!("PJRT platform: {}", engine.platform());
-            }
-            let exe =
-                engine.load_hlo(&model_path, batch, elems, classes)?;
-            Ok(PjrtBackend { exe, shape: [batch, h, w, c] })
-        },
-        o.workers,
-        BatchPolicy { max_wait: Duration::from_millis(o.wait_ms) },
-        o.queue,
-    )?;
+    // Workers construct their PJRT executables inside
+    // Coordinator::launch, each on its own thread.
+    let coordinator = Coordinator::launch(cfg)?;
 
     let t0 = Instant::now();
     let mut correct = 0usize;
     let mut done = 0usize;
     let mut pendings = Vec::new();
-    for i in 0..o.requests {
+    for i in 0..cfg.requests {
         let img = ds.image(i % ds.n).to_vec();
         pendings.push((i % ds.n, coordinator.submit_blocking(img)?));
         // Harvest in waves to bound in-flight memory.
@@ -292,7 +211,7 @@ fn serve_pjrt(o: &ServeOpts) -> Result<()> {
             for (idx, pend) in pendings.drain(..) {
                 let r = pend.wait()?;
                 done += 1;
-                if r.prediction == ds.labels[idx] as usize {
+                if r.prediction() == Some(ds.labels[idx] as usize) {
                     correct += 1;
                 }
             }
@@ -301,11 +220,14 @@ fn serve_pjrt(o: &ServeOpts) -> Result<()> {
     for (idx, pend) in pendings.drain(..) {
         let r = pend.wait()?;
         done += 1;
-        if r.prediction == ds.labels[idx] as usize {
+        if r.prediction() == Some(ds.labels[idx] as usize) {
             correct += 1;
         }
     }
     let wall = t0.elapsed();
+    if p.has("audit") {
+        print_audit(&coordinator, ds.image(0).to_vec())?;
+    }
     let m = coordinator.shutdown();
     println!("\n== serve results ==");
     println!("requests        : {done}");
@@ -320,75 +242,56 @@ fn serve_pjrt(o: &ServeOpts) -> Result<()> {
 /// Serve the PIM co-simulation itself: the bit-accurate AND-Accumulate
 /// datapath answers live traffic and reports accelerator-model energy
 /// per request. Needs no artifacts and no PJRT.
-fn serve_pimsim(p: &pims::cli::Parsed, o: &ServeOpts) -> Result<()> {
-    let w_bits = p.get_usize("wbits")?.unwrap_or(1) as u32;
-    let a_bits = p.get_usize("abits")?.unwrap_or(4) as u32;
-    let seed = p.get_usize("seed")?.unwrap_or(42) as u64;
-    let model = cnn::svhn_net();
-    // One probe plan, compiled once, drives auto-tuning AND the
-    // banner's merge-share line (workers compile their own replicas
-    // on their threads). Resolving the schedule up front means the
-    // banner reports what actually runs and every worker shares one
-    // schedule. The CLI clamp lives in `cli::Parsed::get_lanes`.
-    let probe = ModelPlan::compile(model.clone(), w_bits, a_bits, seed)?;
-    let sched = resolve_lanes(p.get_lanes("lanes")?, &probe);
+fn serve_pimsim(p: &pims::cli::Parsed, cfg: &RunConfig) -> Result<()> {
+    // One probe plan, compiled once, resolves the lane schedule for
+    // the banner and the merge-share line (workers compile their own
+    // replicas on their threads, deterministically identical).
+    let probe = cfg.compile_plan()?;
+    let sched = cfg.lane_schedule(&probe);
+    let model = cfg.build_model()?;
     let ds = pims::dataset::generate(
         256,
         model.input_hw,
         model.input_c,
-        seed,
+        cfg.seed,
     );
     println!(
-        "serving PIM co-sim ({}), W{w_bits}:I{a_bits}, batch={}, \
+        "serving PIM co-sim ({}), W{}:I{}, batch={}, \
          workers={}, lane schedule {} per worker (shared engine \
          thread budget: {}), {} synthetic images",
-        model.name,
-        o.batch,
-        o.workers,
+        probe.model_name(),
+        cfg.w_bits,
+        cfg.a_bits,
+        cfg.batch,
+        cfg.workers,
         sched,
         pims::engine::LaneRuntime::budget(),
         ds.n
     );
-    let batch = o.batch;
-    let chaos = chaos_policy(p)?;
-    if let Some(cp) = &chaos {
+    let batch = cfg.batch;
+    if let Some(spec) = &cfg.chaos {
         println!(
-            "chaos mode: {:?}, {} cycle(s)/batch — workers die \
+            "chaos mode: {spec}, {} cycle(s)/batch — workers die \
              mid-batch and resume from NV state",
-            cp.spec, cp.cycles_per_batch
+            cfg.chaos_cycles
         );
     }
     // The schedule's H-tree share of each request (0 when serial) —
     // the same engine-side accounting the backends charge, read off
     // the probe plan so the results can attribute it.
     let merge_uj_per_request =
-        TileScheduler::from_schedule(sched.clone(), &ChipOrg::default())
+        TileScheduler::from_schedule(sched, &ChipOrg::default())
             .batch_traffic(&probe, batch)
             .energy_pj(&HTree::default())
             * 1e-6
             / batch.max(1) as f64;
-    let factory = move |_worker: usize| {
-        // Same seed on every worker: bit-identical replicas (for any
-        // lane schedule — engine results are lane-invariant).
-        PimSimBackend::new(model.clone(), w_bits, a_bits, batch, seed)
-            .map(|b| b.with_lane_schedule(sched.clone()))
-    };
-    let policy =
-        BatchPolicy { max_wait: Duration::from_millis(o.wait_ms) };
-    let coordinator = match chaos {
-        Some(cp) => Coordinator::start_pool_with_chaos(
-            factory, o.workers, policy, o.queue, cp,
-        )?,
-        None => Coordinator::start_pool(
-            factory, o.workers, policy, o.queue,
-        )?,
-    };
+    let coordinator = Coordinator::launch(cfg)?;
 
     let t0 = Instant::now();
     let mut done = 0usize;
     let mut energy_uj = 0f64;
     let mut pendings = Vec::new();
-    for i in 0..o.requests {
+    for i in 0..cfg.requests {
         let img = ds.image(i % ds.n).to_vec();
         pendings.push(coordinator.submit_blocking(img)?);
         if pendings.len() >= 64 {
@@ -405,6 +308,9 @@ fn serve_pimsim(p: &pims::cli::Parsed, o: &ServeOpts) -> Result<()> {
         energy_uj += r.energy_uj;
     }
     let wall = t0.elapsed();
+    if p.has("audit") {
+        print_audit(&coordinator, ds.image(0).to_vec())?;
+    }
     let m = coordinator.shutdown();
     println!("\n== serve results (pimsim) ==");
     println!("requests        : {done}");
@@ -419,6 +325,35 @@ fn serve_pimsim(p: &pims::cli::Parsed, o: &ServeOpts) -> Result<()> {
          (H-tree share of the lane schedule, included above)"
     );
     print_serve_tail(&m, batch, done, wall);
+    Ok(())
+}
+
+/// `serve --audit`: submit one [`Job::EnergyAudit`] for a sampled
+/// request and print the per-component table (the same
+/// `CostBreakdown` formatter `infer`/`simulate` use, including the
+/// `inter_lane_merge` line) plus the exact merge-traffic integers.
+fn print_audit(c: &Coordinator, image: Vec<f32>) -> Result<()> {
+    let r = c.submit_job_blocking(Job::EnergyAudit(image))?.wait()?;
+    let audit = r.output.audit().context("audit reply")?;
+    println!("\n== energy audit (sampled request) ==");
+    println!("{}", audit.cost.table());
+    println!(
+        "headline energy : {:.6} µJ/request (what every reply's \
+         energy_uj reports)",
+        audit.energy_uj
+    );
+    println!(
+        "merge traffic   : {} bits, {} bit-levels, {} hops \
+         (one executed batch at the lane schedule)",
+        audit.merge_traffic.bits,
+        audit.merge_traffic.bit_levels,
+        audit.merge_traffic.hops
+    );
+    println!(
+        "frame row ops   : {} logic ops ({} prediction for the \
+         sampled image)",
+        audit.ledger.logic_ops, audit.prediction
+    );
     Ok(())
 }
 
@@ -446,6 +381,13 @@ fn print_serve_tail(
             m.counters.chaos_kills
         );
     }
+    if m.dropped_replies() > 0 {
+        println!(
+            "dropped replies : {} (cancelled/expired jobs freed their \
+             batch slots)",
+            m.dropped_replies()
+        );
+    }
     for (w, s) in m.per_worker.iter().enumerate() {
         println!(
             "  worker {w:<2}     : served {} in {} batches, {} errors, \
@@ -462,34 +404,34 @@ fn print_serve_tail(
 /// verifies the interrupted logits are bit-identical to an
 /// uninterrupted run.
 fn cmd_infer(p: &pims::cli::Parsed) -> Result<()> {
-    let w_bits = p.get_usize("wbits")?.unwrap_or(1) as u32;
-    let a_bits = p.get_usize("abits")?.unwrap_or(4) as u32;
-    let seed = p.get_u64("seed")?.unwrap_or(42);
-    let model = match p.get("model").unwrap_or("micro") {
-        "micro" => cnn::micro_net(),
-        "svhn" => cnn::svhn_net(),
-        other => anyhow::bail!("unknown model '{other}' (micro|svhn)"),
-    };
-    let ds = pims::dataset::generate(1, model.input_hw, model.input_c, seed);
+    // Model / bit-width / seed / lanes / tile / NV-cadence knobs all
+    // come from the same RunConfig path `serve` uses (ISSUE 5
+    // satellite: no duplicated flag plumbing).
+    let cfg = RunConfig::from_parsed(p)?;
+    let model = cfg.build_model()?;
+    let ds = pims::dataset::generate(
+        1,
+        model.input_hw,
+        model.input_c,
+        cfg.seed,
+    );
     let image = ds.image(0).to_vec();
-    let mplan = ModelPlan::compile(model, w_bits, a_bits, seed)?;
-    // The CLI clamp (and the `auto` literal) live in
-    // `cli::Parsed::get_lanes`; auto tunes per layer against the
-    // compiled plan and the H-tree cost model.
-    let lanes = resolve_lanes(p.get_lanes("lanes")?, &mplan);
+    let mplan = cfg.compile_plan()?;
     let plan = InferencePlan {
-        tile_patches: p.get_usize_at_least("tile-patches", 1)?,
-        checkpoint_period: p.get_u64("ckpt")?.unwrap_or(4).max(1),
+        tile_patches: cfg.tile_patches,
+        checkpoint_period: cfg.ckpt_period,
         cycles_per_tile: p.get_u64("cycles-per-tile")?.unwrap_or(10).max(1),
-        lanes,
+        lanes: cfg.lane_schedule(&mplan),
         volatile_only: false,
     };
     let tiles = mplan.total_tiles(plan.tile_patches);
     let work = tiles * plan.cycles_per_tile;
     println!(
-        "model={} W{w_bits}:I{a_bits}, {tiles} tiles x {} cycles \
+        "model={} W{}:I{}, {tiles} tiles x {} cycles \
          ({} patch rows/tile), lane schedule {}, ckpt every {} tiles",
         mplan.model_name(),
+        cfg.w_bits,
+        cfg.a_bits,
         plan.cycles_per_tile,
         plan.tile_patches,
         plan.lanes,
@@ -569,7 +511,7 @@ fn cmd_infer(p: &pims::cli::Parsed) -> Result<()> {
 
 fn cmd_simulate(p: &pims::cli::Parsed) -> Result<()> {
     let design = pick_design(p.get("design").unwrap())?;
-    let model = pick_model(p.get("model").unwrap())?;
+    let model = model_by_name(p.get("model").unwrap())?;
     let w = p.get_usize("wbits")?.unwrap_or(1) as u32;
     let a = p.get_usize("abits")?.unwrap_or(4) as u32;
     let batch = p.get_usize("batch")?.unwrap_or(8);
@@ -591,7 +533,7 @@ fn cmd_simulate(p: &pims::cli::Parsed) -> Result<()> {
 }
 
 fn cmd_sweep(p: &pims::cli::Parsed) -> Result<()> {
-    let model = pick_model(p.get("model").unwrap())?;
+    let model = model_by_name(p.get("model").unwrap())?;
     let batch = p.get_usize("batch")?.unwrap_or(8);
     let designs: Vec<Box<dyn Accelerator>> = vec![
         Box::new(Proposed::default()),

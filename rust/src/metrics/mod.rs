@@ -114,6 +114,11 @@ pub struct Counters {
     /// mid-execution (the batch re-ran after NV restore — no request
     /// was dropped).
     pub chaos_kills: u64,
+    /// Admitted jobs whose reply was never delivered: the client
+    /// cancelled (dropped its `Pending`) or the per-job deadline
+    /// expired before execution — freeing the batch slot — or the
+    /// reply send failed after execution.
+    pub dropped_replies: u64,
 }
 
 impl Counters {
@@ -124,6 +129,7 @@ impl Counters {
         self.rejected += o.rejected;
         self.errors += o.errors;
         self.chaos_kills += o.chaos_kills;
+        self.dropped_replies += o.dropped_replies;
     }
 
     /// Mean occupancy of the dynamic batches.
@@ -192,8 +198,10 @@ mod tests {
         assert!((c.mean_batch_fill(8) - 0.75).abs() < 1e-9);
         let mut d = Counters::default();
         d.errors = 2;
+        d.dropped_replies = 3;
         c.merge(&d);
         assert_eq!(c.errors, 2);
+        assert_eq!(c.dropped_replies, 3);
     }
 
     #[test]

@@ -4,14 +4,25 @@
 //! section covers multi-worker scaling, shutdown draining, worker
 //! fault isolation, and the PIM co-simulation backend serving through
 //! the identical coordinator.
+//!
+//! ISSUE 5 (serving API v2) acceptance lives here too: all four typed
+//! job kinds round-trip through a live pool with `EnergyAudit` totals
+//! matching the engine's own accounting, `Classify` logits
+//! bit-identical to the v1 path, and `serve --config <file>` + flag
+//! overrides exercised against the real binary.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use pims::apicfg::RunConfig;
+use pims::cli::LaneArg;
 use pims::cnn;
 use pims::coordinator::{
-    Backend, BatchPolicy, Coordinator, MockBackend, PimSimBackend,
+    Backend, Coordinator, Job, MockBackend, PimSimBackend,
 };
+use pims::device::SotCosts;
+use pims::energy::components;
+use pims::engine::TileScheduler;
 
 fn img(elems: usize, class: usize) -> Vec<f32> {
     let mut v = vec![0.0; elems];
@@ -19,14 +30,18 @@ fn img(elems: usize, class: usize) -> Vec<f32> {
     v
 }
 
+/// Pool knobs for mock-backend pools (the backend comes from the
+/// `launch_pool` factory).
+fn cfg(workers: usize, queue: usize, wait_ms: f64) -> RunConfig {
+    RunConfig { workers, queue, wait_ms, ..RunConfig::default() }
+}
+
 #[test]
 fn concurrent_clients_all_served_correctly() {
     let c = Arc::new(
-        Coordinator::start(
-            || Ok(MockBackend::new(8, 16, 10)),
-            BatchPolicy { max_wait: Duration::from_millis(1) },
-            512,
-        )
+        Coordinator::launch_pool(&cfg(1, 512, 1.0), |_| {
+            Ok(MockBackend::new(8, 16, 10))
+        })
         .unwrap(),
     );
     let mut handles = Vec::new();
@@ -41,7 +56,7 @@ fn concurrent_clients_all_served_correctly() {
                     .unwrap()
                     .wait()
                     .unwrap();
-                if r.prediction == class {
+                if r.prediction() == Some(class) {
                     ok += 1;
                 }
             }
@@ -65,34 +80,30 @@ fn concurrent_clients_all_served_correctly() {
 
 #[test]
 fn responses_carry_monotonic_ids_per_submit_order() {
-    let c = Coordinator::start(
-        || Ok(MockBackend::new(4, 8, 10)),
-        BatchPolicy::default(),
-        64,
-    )
+    let c = Coordinator::launch_pool(&cfg(1, 64, 2.0), |_| {
+        Ok(MockBackend::new(4, 8, 10))
+    })
     .unwrap();
     let p1 = c.submit(img(8, 1)).unwrap();
     let p2 = c.submit(img(8, 2)).unwrap();
     assert!(p2.id > p1.id);
     let r1 = p1.wait().unwrap();
     let r2 = p2.wait().unwrap();
-    assert_eq!(r1.prediction, 1);
-    assert_eq!(r2.prediction, 2);
+    assert_eq!(r1.prediction(), Some(1));
+    assert_eq!(r2.prediction(), Some(2));
     c.shutdown();
 }
 
 #[test]
 fn partial_batches_flush_on_deadline() {
     // One lone request must not wait forever for batch peers.
-    let c = Coordinator::start(
-        || Ok(MockBackend::new(64, 8, 10)),
-        BatchPolicy { max_wait: Duration::from_millis(2) },
-        64,
-    )
+    let c = Coordinator::launch_pool(&cfg(1, 64, 2.0), |_| {
+        Ok(MockBackend::new(64, 8, 10))
+    })
     .unwrap();
     let t0 = std::time::Instant::now();
     let r = c.submit(img(8, 5)).unwrap().wait().unwrap();
-    assert_eq!(r.prediction, 5);
+    assert_eq!(r.prediction(), Some(5));
     assert!(
         t0.elapsed() < Duration::from_millis(500),
         "deadline flush too slow: {:?}",
@@ -106,15 +117,11 @@ fn partial_batches_flush_on_deadline() {
 fn sustained_throughput_with_slow_backend() {
     // Backend takes 1 ms/batch of 8: peak ~8k req/s. Push 400 requests
     // through and verify the batcher amortizes (wall << 400 ms serial).
-    let c = Coordinator::start(
-        || {
-            let mut b = MockBackend::new(8, 8, 10);
-            b.delay = Duration::from_millis(1);
-            Ok(b)
-        },
-        BatchPolicy { max_wait: Duration::from_micros(500) },
-        512,
-    )
+    let c = Coordinator::launch_pool(&cfg(1, 512, 0.5), |_| {
+        let mut b = MockBackend::new(8, 8, 10);
+        b.delay = Duration::from_millis(1);
+        Ok(b)
+    })
     .unwrap();
     let t0 = std::time::Instant::now();
     let pend: Vec<_> = (0..400)
@@ -137,15 +144,11 @@ fn sustained_throughput_with_slow_backend() {
 
 #[test]
 fn metrics_latency_includes_queue_time() {
-    let c = Coordinator::start(
-        || {
-            let mut b = MockBackend::new(2, 8, 10);
-            b.delay = Duration::from_millis(5);
-            Ok(b)
-        },
-        BatchPolicy::default(),
-        64,
-    )
+    let c = Coordinator::launch_pool(&cfg(1, 64, 2.0), |_| {
+        let mut b = MockBackend::new(2, 8, 10);
+        b.delay = Duration::from_millis(5);
+        Ok(b)
+    })
     .unwrap();
     let pend: Vec<_> =
         (0..6).map(|i| c.submit(img(8, i)).unwrap()).collect();
@@ -177,22 +180,21 @@ fn geometry_comes_from_backend() {
             2
         }
     }
-    let c = Coordinator::start(|| Ok(Odd), BatchPolicy::default(), 8)
-        .unwrap();
+    let c =
+        Coordinator::launch_pool(&cfg(1, 8, 2.0), |_| Ok(Odd)).unwrap();
     assert_eq!(c.input_elems(), 7);
     let r = c.submit(vec![0.0; 7]).unwrap().wait().unwrap();
-    assert_eq!(r.logits.len(), 2);
+    assert_eq!(r.logits().unwrap().len(), 2);
     c.shutdown();
 }
 
 #[test]
 fn init_failure_propagates() {
-    let r = Coordinator::start(
-        || -> anyhow::Result<MockBackend> {
+    let r = Coordinator::launch_pool(
+        &cfg(1, 8, 2.0),
+        |_| -> anyhow::Result<MockBackend> {
             anyhow::bail!("no artifacts")
         },
-        BatchPolicy::default(),
-        8,
     );
     assert!(r.is_err());
     assert!(r.err().unwrap().to_string().contains("no artifacts"));
@@ -208,16 +210,11 @@ fn init_failure_propagates() {
 #[test]
 fn four_workers_scale_throughput_at_least_2x() {
     fn run(workers: usize) -> Duration {
-        let c = Coordinator::start_pool(
-            move |_| {
-                let mut b = MockBackend::new(1, 8, 10);
-                b.delay = Duration::from_millis(5);
-                Ok(b)
-            },
-            workers,
-            BatchPolicy { max_wait: Duration::ZERO },
-            256,
-        )
+        let c = Coordinator::launch_pool(&cfg(workers, 256, 0.0), |_| {
+            let mut b = MockBackend::new(1, 8, 10);
+            b.delay = Duration::from_millis(5);
+            Ok(b)
+        })
         .unwrap();
         let t0 = Instant::now();
         let pend: Vec<_> = (0..48)
@@ -243,16 +240,11 @@ fn four_workers_scale_throughput_at_least_2x() {
 /// Least-outstanding-work dispatch engages every worker under load.
 #[test]
 fn dispatch_spreads_load_across_workers() {
-    let c = Coordinator::start_pool(
-        move |_| {
-            let mut b = MockBackend::new(1, 8, 10);
-            b.delay = Duration::from_millis(3);
-            Ok(b)
-        },
-        4,
-        BatchPolicy { max_wait: Duration::ZERO },
-        256,
-    )
+    let c = Coordinator::launch_pool(&cfg(4, 256, 0.0), |_| {
+        let mut b = MockBackend::new(1, 8, 10);
+        b.delay = Duration::from_millis(3);
+        Ok(b)
+    })
     .unwrap();
     let pend: Vec<_> = (0..32)
         .map(|i| c.submit_blocking(img(8, i % 10)).unwrap())
@@ -271,16 +263,11 @@ fn dispatch_spreads_load_across_workers() {
 /// dropped replies.
 #[test]
 fn shutdown_drains_in_flight_requests() {
-    let c = Coordinator::start_pool(
-        move |_| {
-            let mut b = MockBackend::new(1, 8, 10);
-            b.delay = Duration::from_millis(3);
-            Ok(b)
-        },
-        2,
-        BatchPolicy::default(),
-        64,
-    )
+    let c = Coordinator::launch_pool(&cfg(2, 64, 2.0), |_| {
+        let mut b = MockBackend::new(1, 8, 10);
+        b.delay = Duration::from_millis(3);
+        Ok(b)
+    })
     .unwrap();
     let pend: Vec<_> =
         (0..10).map(|i| c.submit(img(8, i % 10)).unwrap()).collect();
@@ -293,7 +280,7 @@ fn shutdown_drains_in_flight_requests() {
         let r = p
             .wait_timeout(Duration::from_secs(1))
             .expect("reply must already be buffered");
-        assert_eq!(r.prediction, i % 10);
+        assert_eq!(r.prediction(), Some(i % 10));
     }
 }
 
@@ -325,20 +312,15 @@ fn failing_worker_does_not_poison_siblings() {
             10
         }
     }
-    let c = Coordinator::start_pool(
-        |w| {
-            Ok(if w == 0 {
-                let mut b = MockBackend::new(1, 8, 10);
-                b.delay = Duration::from_millis(3);
-                TestBackend::Healthy(b)
-            } else {
-                TestBackend::Broken
-            })
-        },
-        2,
-        BatchPolicy { max_wait: Duration::ZERO },
-        64,
-    )
+    let c = Coordinator::launch_pool(&cfg(2, 64, 0.0), |w| {
+        Ok(if w == 0 {
+            let mut b = MockBackend::new(1, 8, 10);
+            b.delay = Duration::from_millis(3);
+            TestBackend::Healthy(b)
+        } else {
+            TestBackend::Broken
+        })
+    })
     .unwrap();
 
     // Burst of 8: least-outstanding dispatch splits them across both
@@ -350,7 +332,7 @@ fn failing_worker_does_not_poison_siblings() {
     for p in pend {
         match p.wait_timeout(Duration::from_secs(5)) {
             Ok(r) => {
-                assert_eq!(r.logits.len(), 10);
+                assert_eq!(r.logits().unwrap().len(), 10);
                 ok += 1;
             }
             Err(_) => failed += 1,
@@ -366,7 +348,7 @@ fn failing_worker_does_not_poison_siblings() {
         .unwrap()
         .wait_timeout(Duration::from_secs(5))
         .expect("pool must keep serving after a worker fault");
-    assert_eq!(late.prediction, 4);
+    assert_eq!(late.prediction(), Some(4));
 
     let m = c.shutdown();
     assert!(m.counters.errors >= 1);
@@ -394,18 +376,17 @@ fn engine_threads_bounded_by_shared_lane_budget() {
     assert!(budget >= 1);
     assert_eq!(budget, LaneRuntime::budget());
 
-    let mk = move |_w: usize| {
-        PimSimBackend::new(cnn::micro_net(), 1, 4, 4, 0xB0D6)
-            .map(|b| b.with_lanes(8))
+    let pool_cfg = RunConfig {
+        model: "micro".to_string(),
+        w_bits: 1,
+        a_bits: 4,
+        batch: 4,
+        seed: 0xB0D6,
+        lanes: LaneArg::Fixed(8),
+        ..cfg(4, 64, 1.0)
     };
     let serve_burst = || {
-        let c = Coordinator::start_pool(
-            mk,
-            4,
-            BatchPolicy { max_wait: Duration::from_millis(1) },
-            64,
-        )
-        .unwrap();
+        let c = Coordinator::launch(&pool_cfg).unwrap();
         let elems = c.input_elems();
         let pendings: Vec<_> = (0..24)
             .map(|i| c.submit_blocking(img(elems, i % 10)).unwrap())
@@ -459,18 +440,13 @@ fn engine_threads_bounded_by_shared_lane_budget() {
 /// direct cnn reference path.
 #[test]
 fn pimsim_backend_serves_bit_identical_to_reference() {
-    let mk = |seed: u64| {
-        move |_worker: usize| {
-            PimSimBackend::new(cnn::micro_net(), 1, 4, 2, seed)
-        }
+    let pool_cfg = RunConfig {
+        model: "micro".to_string(),
+        batch: 2,
+        seed: 0xC0FFEE,
+        ..cfg(2, 32, 1.0)
     };
-    let c = Coordinator::start_pool(
-        mk(0xC0FFEE),
-        2,
-        BatchPolicy { max_wait: Duration::from_millis(1) },
-        32,
-    )
-    .unwrap();
+    let c = Coordinator::launch(&pool_cfg).unwrap();
     let reference =
         PimSimBackend::new(cnn::micro_net(), 1, 4, 2, 0xC0FFEE).unwrap();
     let elems = c.input_elems();
@@ -482,8 +458,8 @@ fn pimsim_backend_serves_bit_identical_to_reference() {
             .collect();
         let r = c.submit_blocking(image.clone()).unwrap().wait().unwrap();
         assert_eq!(
-            r.logits,
-            reference.reference_logits(&image),
+            r.logits().unwrap(),
+            &reference.reference_logits(&image)[..],
             "served logits diverge from the cnn reference path"
         );
         assert!(r.energy_uj > 0.0, "pimsim must report request energy");
@@ -491,4 +467,190 @@ fn pimsim_backend_serves_bit_identical_to_reference() {
     let m = c.shutdown();
     assert_eq!(m.counters.served, 6);
     assert_eq!(m.counters.errors, 0);
+}
+
+// ---------------------------------------------------------------------------
+// Serving API v2 (ISSUE 5): typed jobs + RunConfig
+// ---------------------------------------------------------------------------
+
+/// ISSUE 5 acceptance: all four job kinds round-trip through a LIVE
+/// coordinator pool over the PIM co-sim, with `Classify` logits
+/// bit-identical to the v1 path and `EnergyAudit` totals matching the
+/// engine's own `OpLedger` / merge-traffic accounting for the same
+/// frame.
+#[test]
+fn all_four_job_kinds_roundtrip_live_pimsim_pool() {
+    let pool_cfg = RunConfig {
+        model: "micro".to_string(),
+        batch: 2,
+        seed: 0x5E57,
+        lanes: LaneArg::Fixed(4),
+        ..cfg(2, 32, 1.0)
+    };
+    let c = Coordinator::launch(&pool_cfg).unwrap();
+    let elems = c.input_elems();
+    let classes = c.num_classes();
+    let image: Vec<f32> =
+        (0..elems).map(|i| ((i * 3 + 1) % 23) as f32 / 22.0).collect();
+
+    // The engine-side expectations, computed independently of serving.
+    let reference = PimSimBackend::new(cnn::micro_net(), 1, 4, 2, 0x5E57)
+        .unwrap()
+        .with_lanes(4);
+    let want_logits = reference.reference_logits(&image);
+    let plan = pool_cfg.compile_plan().unwrap();
+    let want_ledger = plan.frame_ledger();
+    let sched = TileScheduler::from_schedule(
+        pool_cfg.lane_schedule(&plan),
+        &pims::arch::ChipOrg::default(),
+    );
+    let want_traffic = sched.batch_traffic(&plan, pool_cfg.batch);
+
+    // Classify: bit-identical to the v1 path (PR 4 logits).
+    let r = c
+        .submit_job_blocking(Job::Classify(image.clone()))
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert_eq!(r.logits().unwrap(), &want_logits[..]);
+    let want_pred = r.prediction().unwrap();
+
+    // Logits: the raw row, verbatim.
+    let r = c
+        .submit_job_blocking(Job::Logits(image.clone()))
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert_eq!(r.logits().unwrap(), &want_logits[..]);
+
+    // TopK: ranked, consistent with the logits row.
+    let r = c
+        .submit_job_blocking(Job::TopK { image: image.clone(), k: 3 })
+        .unwrap()
+        .wait()
+        .unwrap();
+    let ranked = r.output.top_k().unwrap();
+    assert_eq!(ranked.len(), 3usize.min(classes));
+    assert_eq!(ranked[0].0, want_pred, "best class must lead");
+    for pair in ranked.windows(2) {
+        assert!(pair[0].1 >= pair[1].1, "ranking must be sorted");
+    }
+    for &(cls, logit) in ranked {
+        assert_eq!(logit, want_logits[cls], "scores must be the logits");
+    }
+
+    // EnergyAudit: the engine's accounting, not a scalar.
+    let r = c
+        .submit_job_blocking(Job::EnergyAudit(image.clone()))
+        .unwrap()
+        .wait()
+        .unwrap();
+    let audit = r.output.audit().unwrap();
+    assert_eq!(audit.logits, want_logits, "audit still classifies");
+    assert_eq!(audit.prediction, want_pred);
+    assert_eq!(
+        audit.ledger, want_ledger,
+        "audit ledger must be the engine's per-frame OpLedger"
+    );
+    assert_eq!(
+        audit.merge_traffic, want_traffic,
+        "audit traffic must match the engine's batch accounting"
+    );
+    assert!(!audit.merge_traffic.is_zero(), "4 lanes move bits");
+    let costs = SotCosts::default();
+    let (e_tile, l_tile) =
+        audit.cost.component(components::TILE_EXECUTION).unwrap();
+    assert_eq!(e_tile, want_ledger.energy_pj(&costs));
+    assert_eq!(l_tile, want_ledger.latency_ns(&costs));
+    let (e_merge, _) =
+        audit.cost.component(components::INTER_LANE_MERGE).unwrap();
+    assert!(e_merge > 0.0, "lane schedule must charge the H-tree");
+    assert!(
+        (audit.energy_uj - r.energy_uj).abs() < 1e-12,
+        "audit headline must match the reply's energy_uj"
+    );
+    assert!(
+        (audit.energy_uj - reference.energy_uj_per_frame()
+            - reference.merge_uj_per_frame())
+        .abs()
+            < 1e-12
+    );
+
+    let m = c.shutdown();
+    assert_eq!(m.counters.served, 4);
+    assert_eq!(m.counters.errors, 0);
+}
+
+/// ISSUE 5 acceptance: `serve --config <file>` with flags as
+/// overrides, against the real binary. The file sets pimsim, micro,
+/// batch 2, 2 workers and 4 requests; `--requests 8` (explicit)
+/// overrides the file, while the declared `--batch 8` default does
+/// NOT override the file's `serve.batch = 2`.
+#[test]
+fn serve_config_file_with_flag_overrides_e2e() {
+    let mut path = std::env::temp_dir();
+    path.push(format!("pims_serve_e2e_{}.cfg", std::process::id()));
+    std::fs::write(
+        &path,
+        "[run]\nbackend = \"pimsim\"\nmodel = \"micro\"\nseed = 7\n\
+         [serve]\nrequests = 4\nworkers = 2\nbatch = 2\nqueue = 32\n",
+    )
+    .unwrap();
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_pims"))
+        .args([
+            "serve",
+            "--config",
+            path.to_str().unwrap(),
+            "--requests",
+            "8",
+            "--audit",
+        ])
+        .output()
+        .expect("serve must run");
+    std::fs::remove_file(&path).ok();
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        out.status.success(),
+        "serve failed\nstdout:\n{stdout}\nstderr:\n{stderr}"
+    );
+    assert!(
+        stdout.contains("serving PIM co-sim (micro)"),
+        "file must pick backend+model: {stdout}"
+    );
+    assert!(
+        stdout.contains("batch=2"),
+        "file batch must beat the flag default: {stdout}"
+    );
+    assert!(
+        stdout.contains("workers=2"),
+        "file workers must apply: {stdout}"
+    );
+    assert!(
+        stdout.contains("requests        : 8"),
+        "explicit --requests must override the file: {stdout}"
+    );
+    assert!(
+        stdout.contains("== energy audit (sampled request) =="),
+        "--audit must print the audit section: {stdout}"
+    );
+    assert!(
+        stdout.contains(components::TILE_EXECUTION)
+            && stdout.contains(components::INTER_LANE_MERGE),
+        "audit table must carry the engine components: {stdout}"
+    );
+
+    // A config typo must fail loudly, naming the bad key.
+    std::fs::write(&path, "[serve]\nbatchsize = 2\n").unwrap();
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_pims"))
+        .args(["serve", "--config", path.to_str().unwrap()])
+        .output()
+        .expect("serve must run");
+    std::fs::remove_file(&path).ok();
+    assert!(!out.status.success(), "typo config must be rejected");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        stderr.contains("serve.batchsize"),
+        "error must name the unknown key: {stderr}"
+    );
 }

@@ -204,8 +204,15 @@ fn serve_accuracy_end_to_end_small() {
     let (elems, classes) =
         (manifest.input_elems(), manifest.num_classes);
     let model_path = manifest.model_path(&dir, 8);
-    let coord = pims::coordinator::Coordinator::start(
-        move || {
+    let pool_cfg = pims::apicfg::RunConfig {
+        workers: 1,
+        queue: 64,
+        wait_ms: 5.0,
+        ..pims::apicfg::RunConfig::default()
+    };
+    let coord = pims::coordinator::Coordinator::launch_pool(
+        &pool_cfg,
+        move |_worker| {
             let engine = Engine::cpu()?;
             let exe = engine.load_hlo(&model_path, 8, elems, classes)?;
             Ok(pims::coordinator::PjrtBackend {
@@ -213,10 +220,6 @@ fn serve_accuracy_end_to_end_small() {
                 shape: [8, h, w, c],
             })
         },
-        pims::coordinator::BatchPolicy {
-            max_wait: std::time::Duration::from_millis(5),
-        },
-        64,
     )
     .expect("coordinator");
     let mut correct = 0;
@@ -228,7 +231,7 @@ fn serve_accuracy_end_to_end_small() {
         .collect();
     for (i, p) in pend {
         let r = p.wait().unwrap();
-        if r.prediction == ds.labels[i] as usize {
+        if r.prediction() == Some(ds.labels[i] as usize) {
             correct += 1;
         }
     }

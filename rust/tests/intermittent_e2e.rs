@@ -20,17 +20,17 @@
 
 use std::time::Duration;
 
+use pims::apicfg::RunConfig;
 use pims::arch::{ChipOrg, HTree};
+use pims::cli::LaneArg;
 use pims::cnn;
-use pims::coordinator::{
-    BatchPolicy, ChaosPolicy, Coordinator, PimSimBackend,
-};
+use pims::coordinator::{Coordinator, PimSimBackend};
 use pims::engine::{
     LaneSchedule, ModelPlan, ResumableForward, TileScheduler,
 };
 use pims::intermittency::{
     inference_forward_progress, run_intermittent_inference,
-    InferencePlan, PowerTrace, TraceSpec,
+    InferencePlan, PowerTrace,
 };
 
 fn image(elems: usize, phase: usize) -> Vec<f32> {
@@ -196,19 +196,22 @@ fn snapshots_cross_restore_between_lane_schedules() {
 
 fn chaos_roundtrip(lanes: usize) {
     let seed = 0xC4A0;
-    let chaos =
-        ChaosPolicy::new(TraceSpec::parse("periodic:2:1:64").unwrap());
-    let c = Coordinator::start_pool_with_chaos(
-        move |_worker| {
-            PimSimBackend::new(cnn::micro_net(), 1, 4, 2, seed)
-                .map(|b| b.with_lanes(lanes))
-        },
-        2,
-        BatchPolicy { max_wait: Duration::from_millis(1) },
-        32,
-        chaos,
-    )
-    .unwrap();
+    // The v2 declarative path: chaos, lanes, and the pool shape all
+    // come from one RunConfig (`serve --backend pimsim --chaos ...`).
+    let cfg = RunConfig {
+        model: "micro".to_string(),
+        w_bits: 1,
+        a_bits: 4,
+        seed,
+        batch: 2,
+        workers: 2,
+        queue: 32,
+        wait_ms: 1.0,
+        lanes: LaneArg::Fixed(lanes),
+        chaos: Some("periodic:2:1:64".to_string()),
+        ..RunConfig::default()
+    };
+    let c = Coordinator::launch(&cfg).unwrap();
     let reference =
         PimSimBackend::new(cnn::micro_net(), 1, 4, 2, seed).unwrap();
     let elems = c.input_elems();
@@ -224,8 +227,8 @@ fn chaos_roundtrip(lanes: usize) {
             .wait_timeout(Duration::from_secs(30))
             .expect("chaos mode must not drop admitted requests");
         assert_eq!(
-            r.logits,
-            reference.reference_logits(img),
+            r.logits().unwrap(),
+            &reference.reference_logits(img)[..],
             "post-kill replies must be uncorrupted (lanes={lanes})"
         );
     }

@@ -30,7 +30,7 @@ use crate::arch::{ChipOrg, HTree};
 use crate::cli::{LaneArg, Parsed};
 use crate::cnn::{self, Model};
 use crate::configsys::{Config, Value};
-use crate::engine::{LaneSchedule, ModelPlan};
+use crate::engine::{Calibration, LaneSchedule, ModelPlan};
 use crate::intermittency::TraceSpec;
 
 /// Which serving backend a [`RunConfig`] launches.
@@ -91,6 +91,7 @@ pub const KNOWN_KEYS: &[&str] = &[
     "serve.requests",
     "engine.lanes",
     "engine.tile_patches",
+    "engine.calibration",
     "nv.ckpt_period",
     "chaos.trace",
     "chaos.cycles_per_batch",
@@ -125,6 +126,13 @@ pub struct RunConfig {
     pub lanes: LaneArg,
     /// `engine.tile_patches` — patch rows per resumable tile.
     pub tile_patches: usize,
+    /// `engine.calibration` — path to a measured [`Calibration`] JSON
+    /// table (the artifact `hotpath_micro` emits); `None` = score
+    /// `--lanes auto` against the modeled chip constants. Kept as the
+    /// path string so the config dumps/loads losslessly; the file is
+    /// read when the schedule is resolved, not at validation (paths
+    /// are machine-specific).
+    pub calibration: Option<String>,
     /// `nv.ckpt_period` — NV checkpoint cadence (tiles).
     pub ckpt_period: u64,
     /// `chaos.trace` — power-failure trace spec for chaos serving
@@ -150,6 +158,7 @@ impl Default for RunConfig {
             requests: 512,
             lanes: LaneArg::Fixed(1),
             tile_patches: 16,
+            calibration: None,
             ckpt_period: 4,
             chaos: None,
             chaos_cycles: 1,
@@ -205,6 +214,17 @@ impl RunConfig {
                 "engine.lanes: expected int or \"auto\", got {v}"
             ),
         };
+        let calibration = match cfg.get("engine.calibration") {
+            None => None,
+            Some(_) => {
+                let s = cfg.str("engine.calibration")?;
+                if s.is_empty() {
+                    None
+                } else {
+                    Some(s)
+                }
+            }
+        };
         let chaos = match cfg.get("chaos.trace") {
             None => None,
             Some(_) => {
@@ -246,6 +266,7 @@ impl RunConfig {
                 d.tile_patches as i64,
                 1,
             )? as usize,
+            calibration,
             ckpt_period: int_key(
                 cfg,
                 "nv.ckpt_period",
@@ -333,6 +354,14 @@ impl RunConfig {
         }
         if use_flag("tile-patches", "engine.tile_patches") {
             rc.tile_patches = p.get_usize_at_least("tile-patches", 1)?;
+        }
+        if use_flag("calibration", "engine.calibration") {
+            let s = p.get("calibration").unwrap();
+            rc.calibration = if s.is_empty() {
+                None
+            } else {
+                Some(s.to_string())
+            };
         }
         if use_flag("ckpt", "nv.ckpt_period") {
             rc.ckpt_period = p.get_u64("ckpt")?.unwrap_or(4).max(1);
@@ -429,6 +458,10 @@ impl RunConfig {
         }
         c.set("engine.tile_patches", &self.tile_patches.to_string())
             .expect(ok);
+        if let Some(path) = &self.calibration {
+            c.set("engine.calibration", &format!("\"{path}\""))
+                .expect(ok);
+        }
         c.set("nv.ckpt_period", &self.ckpt_period.to_string())
             .expect(ok);
         if let Some(spec) = &self.chaos {
@@ -461,17 +494,23 @@ impl RunConfig {
     }
 
     /// Resolve the lane knob against a compiled plan: fixed counts
-    /// become uniform schedules, `auto` tunes one count per layer on
-    /// the default chip + H-tree models.
-    pub fn lane_schedule(&self, plan: &ModelPlan) -> LaneSchedule {
-        match self.lanes {
+    /// become uniform schedules, `auto` tunes one count per layer —
+    /// against the measured [`Calibration`] table when
+    /// `engine.calibration` names one, against the modeled chip +
+    /// H-tree constants otherwise. Errors only when a named
+    /// calibration file is missing or malformed.
+    pub fn lane_schedule(&self, plan: &ModelPlan) -> Result<LaneSchedule> {
+        Ok(match self.lanes {
             LaneArg::Fixed(n) => LaneSchedule::uniform(n),
-            LaneArg::Auto => LaneSchedule::auto(
-                plan,
-                &ChipOrg::default(),
-                &HTree::default(),
-            ),
-        }
+            LaneArg::Auto => {
+                let org = ChipOrg::default();
+                let cal = match &self.calibration {
+                    Some(path) => Calibration::load(path)?,
+                    None => Calibration::modeled(&org, &HTree::default()),
+                };
+                LaneSchedule::auto_with(plan, &org, &cal)
+            }
+        })
     }
 
     /// The batcher's size-or-deadline wait.
@@ -542,6 +581,11 @@ mod tests {
                 requests: g.usize(0, 4096),
                 lanes,
                 tile_patches: g.usize(1, 256),
+                calibration: if g.bool() {
+                    None
+                } else {
+                    Some(format!("/tmp/cal_{}.json", g.u32(0, 999)))
+                },
                 ckpt_period: g.u32(1, 64) as u64,
                 chaos,
                 chaos_cycles: g.u32(1, 16) as u64,
@@ -710,10 +754,11 @@ mod tests {
         };
         let plan = rc.compile_plan().unwrap();
         assert_eq!(plan.input_elems(), 8 * 8);
-        assert!(rc.lane_schedule(&plan).is_serial());
+        assert!(rc.lane_schedule(&plan).unwrap().is_serial());
         let auto = RunConfig { lanes: LaneArg::Auto, ..rc.clone() };
         assert!(
-            format!("{}", auto.lane_schedule(&plan)).starts_with("auto["),
+            format!("{}", auto.lane_schedule(&plan).unwrap())
+                .starts_with("auto["),
             "auto must resolve to the tuned per-layer schedule"
         );
         assert_eq!(
@@ -721,5 +766,44 @@ mod tests {
             Duration::from_micros(500)
         );
         assert!(model_by_name("nope").is_err());
+    }
+
+    #[test]
+    fn lane_schedule_consumes_measured_calibration() {
+        // Acceptance: `--lanes auto` with `engine.calibration` set
+        // loads the measured table and tunes against it; a missing or
+        // malformed file is a hard error, not a silent fallback.
+        let rc = RunConfig {
+            model: "micro".into(),
+            lanes: LaneArg::Auto,
+            ..RunConfig::default()
+        };
+        let plan = rc.compile_plan().unwrap();
+        let modeled = rc.lane_schedule(&plan).unwrap();
+
+        // A hop-dominated measured table forces serial everywhere —
+        // observably different from the modeled schedule's fan-out.
+        let path = tmp_config(
+            "cal",
+            "{\"hop_ns\": 1e9, \"kernel_ns_per_row_op\": 1e-9, \
+             \"wire_ns_per_bit_level\": 1e9}",
+        );
+        let calibrated = RunConfig {
+            calibration: Some(path.clone()),
+            ..rc.clone()
+        };
+        let sched = calibrated.lane_schedule(&plan).unwrap();
+        assert!(
+            sched.is_serial(),
+            "hop-dominated measured costs must stay serial: {sched}"
+        );
+        assert_ne!(sched, modeled, "the table must actually be consumed");
+        std::fs::remove_file(&path).ok();
+
+        let missing = RunConfig {
+            calibration: Some("/nonexistent/cal.json".into()),
+            ..rc
+        };
+        assert!(missing.lane_schedule(&plan).is_err());
     }
 }

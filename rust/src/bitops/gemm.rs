@@ -1,0 +1,382 @@
+//! Plane-pair-major bitwise GEMM: the word-parallel serving kernel for
+//! Eq. (1).
+//!
+//! [`super::and_accumulate`] evaluates the AND-Accumulation identity
+//! one output element at a time: for every `(patch, filter)` pair it
+//! re-streams all `m x n` plane-row pairs, so a `P x F` GEMM walks each
+//! weight plane row `P` times and each activation plane row `F` times
+//! with zero blocking. This module restructures the same arithmetic the
+//! way bit-serial PE designs lay it out (Stripes/Pragmatic-style
+//! bit-significance-major order — the bit-plane parallelism NAND-SPIN
+//! and MRAM co-designed accelerators exploit in hardware):
+//!
+//! * **Outer loops over plane pairs `(m, n)`** — each pass touches one
+//!   activation plane and one weight plane, so a plane's packed words
+//!   stream through the cache exactly once per pair instead of once
+//!   per output element.
+//! * **A register-blocked micro-kernel** ([`BLOCK`]`x`[`BLOCK`] patch
+//!   rows x filter rows per iteration) that loads each packed u64 word
+//!   once and ANDs it against the whole opposing block, accumulating
+//!   `BLOCK * BLOCK` popcounts in registers.
+//! * **Harley–Seal carry-save popcount** for long reduction rows
+//!   ([`CSA_BREAK_EVEN_WORDS`] and up): a CSA tree compresses 16 ANDed
+//!   words into one `popcount` of the `sixteens` limb plus carry limbs,
+//!   cutting `count_ones` calls ~16x. Below the break-even the straight
+//!   per-word `count_ones` sum wins (the CSA prologue/epilogue costs
+//!   more than it saves), so short rows take the blocked path.
+//! * Each plane pair's finished count panel shifts by `<< (m + n)` into
+//!   the u64 output, exactly Eq. (1)'s weighting.
+//!
+//! The result is bit-identical to [`super::and_accumulate`] (and to the
+//! dense [`super::int_dot`] oracle) for every geometry — property
+//! tests below pin all three against each other across word-straddling
+//! K, 1-bit and 8-bit planes, block-remainder P/F, and empty K.
+
+use super::BitPlanes;
+
+/// Patch/filter rows per register block of the micro-kernel. 4x4 keeps
+/// the 16 popcount accumulators plus the 4 cached operand words within
+/// the x86-64/aarch64 integer register budget.
+pub const BLOCK: usize = 4;
+
+/// Packed words per row at and above which the Harley–Seal carry-save
+/// reduction replaces straight `count_ones` accumulation. One CSA
+/// round compresses 16 words, so rows shorter than one round can never
+/// win; empirically the crossover sits right around one round (1024
+/// reduction bits) once the prologue/epilogue is amortized.
+pub const CSA_BREAK_EVEN_WORDS: usize = 16;
+
+/// Carry-save adder: `a + b + c == sum + 2 * carry`, bitwise.
+#[inline(always)]
+fn csa(a: u64, b: u64, c: u64) -> (u64, u64) {
+    let u = a ^ b;
+    (u ^ c, (a & b) | (u & c))
+}
+
+/// Popcount of `AND(a, b)` via a Harley–Seal carry-save tree: 16 ANDed
+/// words per round collapse into one `count_ones` of the `sixteens`
+/// limb, with the `ones`/`twos`/`fours`/`eights` carry limbs counted
+/// once at the end. Bit-identical to [`super::cmp_and`].
+pub fn harley_seal_and(a: &[u64], b: &[u64]) -> u64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let mut sixteens_total = 0u64;
+    let (mut ones, mut twos, mut fours, mut eights) =
+        (0u64, 0u64, 0u64, 0u64);
+    let mut i = 0;
+    while i + 16 <= n {
+        let d = |k: usize| a[i + k] & b[i + k];
+        let (s, twos_a) = csa(ones, d(0), d(1));
+        let (s, twos_b) = csa(s, d(2), d(3));
+        let (t, fours_a) = csa(twos, twos_a, twos_b);
+        let (s, twos_a) = csa(s, d(4), d(5));
+        let (s, twos_b) = csa(s, d(6), d(7));
+        let (t, fours_b) = csa(t, twos_a, twos_b);
+        let (f4, eights_a) = csa(fours, fours_a, fours_b);
+        let (s, twos_a) = csa(s, d(8), d(9));
+        let (s, twos_b) = csa(s, d(10), d(11));
+        let (t, fours_a) = csa(t, twos_a, twos_b);
+        let (s, twos_a) = csa(s, d(12), d(13));
+        let (s, twos_b) = csa(s, d(14), d(15));
+        let (t, fours_b) = csa(t, twos_a, twos_b);
+        let (f4, eights_b) = csa(f4, fours_a, fours_b);
+        let (e8, sixteens) = csa(eights, eights_a, eights_b);
+        ones = s;
+        twos = t;
+        fours = f4;
+        eights = e8;
+        sixteens_total += sixteens.count_ones() as u64;
+        i += 16;
+    }
+    let mut total = 16 * sixteens_total
+        + 8 * eights.count_ones() as u64
+        + 4 * fours.count_ones() as u64
+        + 2 * twos.count_ones() as u64
+        + ones.count_ones() as u64;
+    while i < n {
+        total += (a[i] & b[i]).count_ones() as u64;
+        i += 1;
+    }
+    total
+}
+
+/// CMP(AND(a, b)) with the reduction picked by row length: Harley–Seal
+/// at [`CSA_BREAK_EVEN_WORDS`] words and above, straight per-word
+/// `count_ones` below.
+#[inline]
+pub fn popcount_and(a: &[u64], b: &[u64]) -> u64 {
+    if a.len() >= CSA_BREAK_EVEN_WORDS {
+        harley_seal_and(a, b)
+    } else {
+        super::cmp_and(a, b)
+    }
+}
+
+/// Plane-pair-major bitwise GEMM over pre-decomposed planes:
+/// `out[i * wp.rows + j] = sum_{m,n} 2^(m+n) CMP(AND(ip[m][i], wp[n][j]))`
+/// for all `ip.rows x wp.rows` outputs — Eq. (1) for the whole panel in
+/// one blocked sweep per plane pair. `out` is overwritten.
+///
+/// Bit-identical to calling [`super::and_accumulate`] per output (the
+/// two paths are cross-pinned by property test), but each plane row is
+/// streamed once per plane pair instead of once per opposing row.
+pub fn bitwise_gemm(ip: &BitPlanes, wp: &BitPlanes, out: &mut [u64]) {
+    assert_eq!(ip.cols, wp.cols, "reduction length mismatch");
+    let (p, f) = (ip.rows, wp.rows);
+    assert_eq!(out.len(), p * f, "output panel geometry");
+    out.fill(0);
+    let words = ip.words_per_row;
+    debug_assert_eq!(words, wp.words_per_row);
+    for m in 0..ip.bits {
+        let ap = &ip.planes[m];
+        for n in 0..wp.bits {
+            let shift = (m + n) as u32;
+            let bp = &wp.planes[n];
+            if words >= CSA_BREAK_EVEN_WORDS {
+                // Long rows: the CSA reduction dominates, one pair at
+                // a time (16 interleaved CSA states would spill every
+                // register the micro-kernel is trying to keep).
+                for i in 0..p {
+                    let a = &ap[i * words..(i + 1) * words];
+                    let orow = &mut out[i * f..(i + 1) * f];
+                    for (j, o) in orow.iter_mut().enumerate() {
+                        let b = &bp[j * words..(j + 1) * words];
+                        *o += harley_seal_and(a, b) << shift;
+                    }
+                }
+            } else {
+                panel_blocked(ap, bp, p, f, words, shift, out);
+            }
+        }
+    }
+}
+
+/// One plane pair's count panel via the register-blocked micro-kernel:
+/// [`BLOCK`]`x`[`BLOCK`] outputs share each loaded word, so a word is
+/// read once and ANDed against the whole opposing block. Remainder
+/// blocks (P or F not multiples of [`BLOCK`]) shrink naturally.
+fn panel_blocked(
+    ap: &[u64],
+    bp: &[u64],
+    p: usize,
+    f: usize,
+    words: usize,
+    shift: u32,
+    out: &mut [u64],
+) {
+    let mut i0 = 0;
+    while i0 < p {
+        let ib = (i0 + BLOCK).min(p);
+        let mut j0 = 0;
+        while j0 < f {
+            let jb = (j0 + BLOCK).min(f);
+            let mut acc = [[0u64; BLOCK]; BLOCK];
+            for w in 0..words {
+                // Cache the block's weight-plane words once per w.
+                let mut bv = [0u64; BLOCK];
+                for (bj, j) in (j0..jb).enumerate() {
+                    bv[bj] = bp[j * words + w];
+                }
+                for (bi, i) in (i0..ib).enumerate() {
+                    let av = ap[i * words + w];
+                    if av == 0 {
+                        // Zero activation words are common (sparse
+                        // activations, high planes, row padding).
+                        continue;
+                    }
+                    for (bj, acc_ij) in
+                        acc[bi].iter_mut().enumerate().take(jb - j0)
+                    {
+                        *acc_ij += (av & bv[bj]).count_ones() as u64;
+                    }
+                }
+            }
+            for (bi, i) in (i0..ib).enumerate() {
+                for (bj, j) in (j0..jb).enumerate() {
+                    out[i * f + j] += acc[bi][bj] << shift;
+                }
+            }
+            j0 = jb;
+        }
+        i0 = ib;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitops::{and_accumulate, cmp_and, int_dot};
+    use crate::proptest_lite::Runner;
+
+    /// Build the two plane sets of a `p x k (m_bits)` by
+    /// `k x f (n_bits)` GEMM the way the engine does (weights
+    /// transposed), plus the dense operands for the oracle.
+    fn planes(
+        ia: &[u32],
+        p: usize,
+        k: usize,
+        m_bits: usize,
+        iw_t: &[u32],
+        f: usize,
+        n_bits: usize,
+    ) -> (BitPlanes, BitPlanes) {
+        let ip = BitPlanes::from_codes(ia, p, k, m_bits);
+        let wp = BitPlanes::from_codes(iw_t, f, k, n_bits);
+        (ip, wp)
+    }
+
+    #[test]
+    fn gemm_equals_and_accumulate_and_int_dot_property() {
+        // The three-way pin: plane-pair kernel == per-output Eq. 1 ==
+        // dense integer dot, across odd geometries (K straddling u64
+        // words, P/F off the register block, every bit width).
+        let mut r = Runner::new(0x6E77);
+        r.run("bitwise_gemm == and_accumulate == int_dot", |g| {
+            let p = g.usize(1, 11);
+            let f = g.usize(1, 10);
+            // Bias K toward word boundaries half the time.
+            let k = if g.bool() {
+                *g.choose(&[1usize, 63, 64, 65, 127, 128, 129, 192])
+            } else {
+                g.usize(1, 300)
+            };
+            let m_bits = g.usize(1, 8);
+            let n_bits = g.usize(1, 8);
+            let ia = g.codes(p * k, m_bits as u32);
+            let iw_t = g.codes(f * k, n_bits as u32);
+            let (ip, wp) = planes(&ia, p, k, m_bits, &iw_t, f, n_bits);
+            let mut out = vec![u64::MAX; p * f];
+            bitwise_gemm(&ip, &wp, &mut out);
+            for i in 0..p {
+                for j in 0..f {
+                    let want = and_accumulate(&ip, i, &wp, j);
+                    assert_eq!(
+                        out[i * f + j],
+                        want,
+                        "({i},{j}) diverged from and_accumulate \
+                         at p={p} f={f} k={k} m={m_bits} n={n_bits}"
+                    );
+                    assert_eq!(
+                        out[i * f + j],
+                        int_dot(
+                            &ia[i * k..(i + 1) * k],
+                            &iw_t[j * k..(j + 1) * k]
+                        ),
+                        "({i},{j}) diverged from the dense oracle"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn gemm_handles_1bit_and_8bit_planes() {
+        for (m_bits, n_bits) in [(1usize, 1usize), (8, 8), (1, 8), (8, 1)] {
+            let (p, k, f) = (5, 70, 3);
+            let ia: Vec<u32> = (0..p * k)
+                .map(|i| (i as u32 * 7 + 3) & ((1 << m_bits) - 1))
+                .collect();
+            let iw_t: Vec<u32> = (0..f * k)
+                .map(|i| (i as u32 * 5 + 1) & ((1 << n_bits) - 1))
+                .collect();
+            let (ip, wp) = planes(&ia, p, k, m_bits, &iw_t, f, n_bits);
+            let mut out = vec![0u64; p * f];
+            bitwise_gemm(&ip, &wp, &mut out);
+            for i in 0..p {
+                for j in 0..f {
+                    assert_eq!(
+                        out[i * f + j],
+                        and_accumulate(&ip, i, &wp, j),
+                        "m={m_bits} n={n_bits} ({i},{j})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_empty_k_is_all_zero() {
+        let ip = BitPlanes::from_codes(&[], 3, 0, 4);
+        let wp = BitPlanes::from_codes(&[], 2, 0, 2);
+        let mut out = vec![u64::MAX; 6];
+        bitwise_gemm(&ip, &wp, &mut out);
+        assert_eq!(out, vec![0u64; 6], "empty K must zero the panel");
+    }
+
+    #[test]
+    fn gemm_block_remainders_cover_every_output() {
+        // P and F deliberately off the 4x4 block (and 1x1), K a single
+        // partial word: the remainder paths must still fill everything.
+        for (p, f) in [(1usize, 1usize), (5, 7), (4, 5), (3, 4), (9, 2)] {
+            let k = 13;
+            let ia: Vec<u32> = (0..p * k).map(|i| (i % 4) as u32).collect();
+            let iw_t: Vec<u32> =
+                (0..f * k).map(|i| (i % 2) as u32).collect();
+            let (ip, wp) = planes(&ia, p, k, 2, &iw_t, f, 1);
+            let mut out = vec![u64::MAX; p * f];
+            bitwise_gemm(&ip, &wp, &mut out);
+            for i in 0..p {
+                for j in 0..f {
+                    assert_eq!(
+                        out[i * f + j],
+                        and_accumulate(&ip, i, &wp, j),
+                        "p={p} f={f} ({i},{j})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn harley_seal_matches_cmp_and_property() {
+        // The CSA reduction is bit-identical to the naive popcount for
+        // every length: below one round, exact multiples of 16, and
+        // remainder tails.
+        let mut r = Runner::new(0xC5A);
+        r.run("harley_seal_and == cmp_and", |g| {
+            let words = if g.bool() {
+                *g.choose(&[0usize, 1, 15, 16, 17, 31, 32, 33, 48])
+            } else {
+                g.usize(0, 80)
+            };
+            let a: Vec<u64> =
+                (0..words).map(|_| g.u64_any()).collect();
+            let b: Vec<u64> =
+                (0..words).map(|_| g.u64_any()).collect();
+            assert_eq!(
+                harley_seal_and(&a, &b),
+                cmp_and(&a, &b),
+                "words={words}"
+            );
+            assert_eq!(popcount_and(&a, &b), cmp_and(&a, &b));
+        });
+    }
+
+    #[test]
+    fn harley_seal_saturated_words() {
+        let a = vec![u64::MAX; 40];
+        assert_eq!(harley_seal_and(&a, &a), 40 * 64);
+        let z = vec![0u64; 40];
+        assert_eq!(harley_seal_and(&a, &z), 0);
+    }
+
+    #[test]
+    fn csa_is_a_full_adder() {
+        for a in [0u64, 1, u64::MAX, 0xF0F0] {
+            for b in [0u64, 1, u64::MAX, 0x0F0F] {
+                for c in [0u64, u64::MAX, 0x3333] {
+                    let (s, h) = csa(a, b, c);
+                    for bit in 0..64 {
+                        let ones = ((a >> bit) & 1)
+                            + ((b >> bit) & 1)
+                            + ((c >> bit) & 1);
+                        assert_eq!(
+                            ones,
+                            ((s >> bit) & 1) + 2 * ((h >> bit) & 1)
+                        );
+                    }
+                }
+            }
+        }
+    }
+}

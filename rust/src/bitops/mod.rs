@@ -13,6 +13,8 @@
 //! `CMP` counts ones (the 4:2-compressor tree in hardware, `popcount`
 //! here).
 
+pub mod gemm;
+
 /// A bit-plane matrix: `planes[p]` holds plane p (LSB first) of a
 /// logical `rows x cols` matrix of k-bit unsigned codes, packed 64
 /// elements per u64 word, row-major.

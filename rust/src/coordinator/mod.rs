@@ -267,6 +267,16 @@ impl Coordinator {
                 let model = cfg.build_model()?;
                 let (w_bits, a_bits) = (cfg.w_bits, cfg.a_bits);
                 let (batch, seed, lanes) = (cfg.batch, cfg.seed, cfg.lanes);
+                // Resolve the auto-tuner's cost table once, up front:
+                // a bad `engine.calibration` path fails launch instead
+                // of every worker, and all replicas tune against the
+                // same table.
+                let calibration = match (&cfg.lanes, &cfg.calibration) {
+                    (LaneArg::Auto, Some(path)) => {
+                        Some(crate::engine::Calibration::load(path)?)
+                    }
+                    _ => None,
+                };
                 Self::launch_pool(cfg, move |_worker| {
                     // Same seed on every worker: bit-identical
                     // replicas for any lane schedule.
@@ -277,9 +287,12 @@ impl Coordinator {
                         batch,
                         seed,
                     )?;
-                    Ok(match lanes {
-                        LaneArg::Auto => b.with_auto_lanes(),
-                        LaneArg::Fixed(n) => b.with_lanes(n),
+                    Ok(match (lanes, &calibration) {
+                        (LaneArg::Auto, Some(cal)) => {
+                            b.with_auto_lanes_calibrated(cal)
+                        }
+                        (LaneArg::Auto, None) => b.with_auto_lanes(),
+                        (LaneArg::Fixed(n), _) => b.with_lanes(n),
                     })
                 })
             }

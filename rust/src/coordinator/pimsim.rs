@@ -30,7 +30,7 @@ use crate::cnn::Model;
 use crate::device::SotCosts;
 use crate::energy::{components, CostBreakdown};
 use crate::engine::{
-    LaneSchedule, ModelPlan, ResumableForward, TileScheduler,
+    Calibration, LaneSchedule, ModelPlan, ResumableForward, TileScheduler,
 };
 use crate::subarray::OpLedger;
 
@@ -121,10 +121,20 @@ impl PimSimBackend {
     /// Auto-tune the lane schedule against this backend's compiled
     /// plan and the H-tree cost model (`--lanes auto`).
     pub fn with_auto_lanes(self) -> Self {
-        let sched = LaneSchedule::auto(
+        let org = ChipOrg::default();
+        let cal = Calibration::modeled(&org, &HTree::default());
+        self.with_auto_lanes_calibrated(&cal)
+    }
+
+    /// `--lanes auto` against an explicit [`Calibration`] table —
+    /// measured host costs when `--calibration file` supplied one,
+    /// [`Calibration::modeled`] otherwise. Only the schedule choice
+    /// depends on the table; logits stay bit-identical regardless.
+    pub fn with_auto_lanes_calibrated(self, cal: &Calibration) -> Self {
+        let sched = LaneSchedule::auto_with(
             self.plan(),
             &ChipOrg::default(),
-            &HTree::default(),
+            cal,
         );
         self.with_lane_schedule(sched)
     }

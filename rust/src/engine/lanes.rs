@@ -28,7 +28,8 @@ use crate::arch::{ChipOrg, LaneTraffic};
 use crate::subarray::OpLedger;
 
 use super::plan::{
-    and_tile_ledger, gemm_raw_slice, GemmEngine, LayerPlan, ModelPlan,
+    and_tile_ledger, gemm_raw_slice, GemmEngine, GemmKernel, LayerPlan,
+    ModelPlan,
 };
 use super::pool::{LaneBudget, LaneJob};
 use super::tuner::{
@@ -140,7 +141,7 @@ impl TileScheduler {
                 row_start,
                 row_end,
                 lw,
-                GemmEngine::Bitwise,
+                GemmEngine::Bitwise(GemmKernel::default()),
                 &mut raw,
             );
             return (
@@ -181,7 +182,7 @@ impl TileScheduler {
                     rs,
                     re,
                     lw,
-                    GemmEngine::Bitwise,
+                    GemmEngine::Bitwise(GemmKernel::default()),
                     head,
                 );
             }));

@@ -47,6 +47,10 @@ pub use forward::{
     ResumableForward, TileId, SNAPSHOT_HEADER_WORDS,
 };
 pub use lanes::TileScheduler;
-pub use plan::{BatchOutput, LayerPlan, ModelPlan, DEFAULT_TILE_PATCHES};
+pub use plan::{
+    BatchOutput, GemmKernel, LayerPlan, ModelPlan, DEFAULT_TILE_PATCHES,
+};
 pub use pool::{LaneBudget, LaneRuntime};
-pub use tuner::{batch_merge_traffic, LaneSchedule, MAX_AUTO_LANES};
+pub use tuner::{
+    batch_merge_traffic, Calibration, LaneSchedule, MAX_AUTO_LANES,
+};

@@ -28,11 +28,29 @@ use super::pool::{LaneBudget, LaneJob};
 /// of the area model's working-set convention.
 pub const DEFAULT_TILE_PATCHES: usize = 64;
 
+/// Which bitwise kernel evaluates Eq. (1) over the packed planes.
+///
+/// Both produce bit-identical raw outputs (pinned by property test in
+/// `bitops::gemm`); they differ only in loop order and therefore host
+/// speed. `OpLedger` accounting is identical for both — the ledger
+/// counts logical array row-ops, not host instructions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum GemmKernel {
+    /// Plane-pair-major, register-blocked, Harley–Seal popcount
+    /// ([`bitops::gemm::bitwise_gemm`]) — the fast path.
+    #[default]
+    PlanePair,
+    /// The per-output [`bitops::and_accumulate`] loop — kept as the
+    /// in-tree reference the determinism tests and benches compare
+    /// against.
+    PerOutput,
+}
+
 /// Which integer GEMM engine computes Eq. (1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub(crate) enum GemmEngine {
     /// Packed bit-plane AND-accumulate — the PIM datapath.
-    Bitwise,
+    Bitwise(GemmKernel),
     /// Dense integer dot product — the independent oracle.
     IntDot,
 }
@@ -260,6 +278,20 @@ impl ModelPlan {
         batch: usize,
         sched: &TileScheduler,
     ) -> Result<BatchOutput> {
+        self.forward_batch_with(flat, batch, sched, GemmKernel::default())
+    }
+
+    /// [`Self::forward_batch`] with an explicit bitwise kernel choice.
+    /// Both kernels are bit-identical (logits and ledger); the
+    /// [`GemmKernel::PerOutput`] path exists so tests and benches can
+    /// compare the plane-pair fast path against the reference loop.
+    pub fn forward_batch_with(
+        &self,
+        flat: &[f32],
+        batch: usize,
+        sched: &TileScheduler,
+        kernel: GemmKernel,
+    ) -> Result<BatchOutput> {
         anyhow::ensure!(batch >= 1, "batch must be >= 1");
         anyhow::ensure!(
             flat.len() == batch * self.input_elems,
@@ -277,7 +309,8 @@ impl ModelPlan {
                 .chunks(self.input_elems)
                 .zip(logits.chunks_mut(self.num_classes))
             {
-                let y = self.forward_whole(img, &mut scratch, &mut ledger);
+                let y =
+                    self.forward_whole(img, &mut scratch, &mut ledger, kernel);
                 out.copy_from_slice(&y);
             }
             return Ok(BatchOutput { logits, ledger, traffic });
@@ -307,6 +340,7 @@ impl ModelPlan {
                             img,
                             &mut scratch,
                             &mut lane_ledger,
+                            kernel,
                         );
                         out.copy_from_slice(&y);
                     }
@@ -337,8 +371,14 @@ impl ModelPlan {
         image: &[f32],
         scratch: &mut Scratch,
         ledger: &mut OpLedger,
+        kernel: GemmKernel,
     ) -> Vec<f32> {
-        self.walk_layers(image, GemmEngine::Bitwise, scratch, Some(ledger))
+        self.walk_layers(
+            image,
+            GemmEngine::Bitwise(kernel),
+            scratch,
+            Some(ledger),
+        )
     }
 
     /// Shared layer walk of both whole-layer engines. Byte-for-byte the
@@ -434,18 +474,26 @@ pub(crate) fn gemm_raw_slice(
     let rows = row_end - row_start;
     debug_assert_eq!(out.len(), rows * lw.f);
     match engine {
-        GemmEngine::Bitwise => {
+        GemmEngine::Bitwise(kernel) => {
             let ip = BitPlanes::from_codes(
                 &ia[row_start * lw.k..row_end * lw.k],
                 rows,
                 lw.k,
                 lw.m_bits as usize,
             );
-            let mut idx = 0;
-            for i in 0..rows {
-                for j in 0..lw.f {
-                    out[idx] = bitops::and_accumulate(&ip, i, &lw.wp, j);
-                    idx += 1;
+            match kernel {
+                GemmKernel::PlanePair => {
+                    bitops::gemm::bitwise_gemm(&ip, &lw.wp, out);
+                }
+                GemmKernel::PerOutput => {
+                    let mut idx = 0;
+                    for i in 0..rows {
+                        for j in 0..lw.f {
+                            out[idx] =
+                                bitops::and_accumulate(&ip, i, &lw.wp, j);
+                            idx += 1;
+                        }
+                    }
                 }
             }
         }
@@ -635,6 +683,58 @@ mod tests {
                     "batch row {b} diverged from per-image forward"
                 );
                 assert_eq!(single, plan.reference_logits(image));
+            }
+        });
+    }
+
+    #[test]
+    fn kernels_bit_identical_logits_and_ledgers_property() {
+        // The plane-pair fast path and the per-output reference loop
+        // are the same computation: logits AND OpLedger totals match
+        // bit-for-bit, and both match the dense oracle.
+        let mut r = Runner::with_cases(0x6E78, 8);
+        r.run("PlanePair == PerOutput == oracle", |g| {
+            let plan = ModelPlan::compile(
+                cnn::micro_net(),
+                g.u32(1, 2),
+                g.u32(1, 4),
+                g.u64_any(),
+            )
+            .unwrap();
+            let batch = g.usize(1, 4);
+            let lanes = g.usize(1, 6);
+            let flat: Vec<f32> = (0..batch * plan.input_elems())
+                .map(|_| g.f64(0.0, 1.0) as f32)
+                .collect();
+            let sched = TileScheduler::new(lanes);
+            let fast = plan
+                .forward_batch_with(
+                    &flat,
+                    batch,
+                    &sched,
+                    GemmKernel::PlanePair,
+                )
+                .unwrap();
+            let refr = plan
+                .forward_batch_with(
+                    &flat,
+                    batch,
+                    &sched,
+                    GemmKernel::PerOutput,
+                )
+                .unwrap();
+            assert_eq!(fast.logits, refr.logits, "kernel logits diverged");
+            assert_eq!(fast.ledger, refr.ledger, "kernel ledger diverged");
+            assert_eq!(fast.traffic, refr.traffic);
+            for b in 0..batch {
+                let image = &flat
+                    [b * plan.input_elems()..(b + 1) * plan.input_elems()];
+                assert_eq!(
+                    &fast.logits[b * plan.num_classes()
+                        ..(b + 1) * plan.num_classes()],
+                    &plan.reference_logits(image)[..],
+                    "batch row {b} diverged from the dense oracle"
+                );
             }
         });
     }

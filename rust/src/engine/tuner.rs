@@ -32,8 +32,11 @@
 use std::fmt;
 use std::sync::Arc;
 
+use anyhow::{Context, Result};
+
 use crate::accel::Proposed;
 use crate::arch::{ChipOrg, HTree, LaneTraffic};
+use crate::jsonlite::Json;
 use crate::subarray::PARTIAL_SUM_BITS;
 
 use super::plan::{LayerPlan, ModelPlan};
@@ -42,6 +45,88 @@ use super::plan::{LayerPlan, ModelPlan};
 /// clamp ([`ChipOrg::engine_lanes`]) still applies on top; this keeps
 /// schedules printable and candidate sweeps cheap.
 pub const MAX_AUTO_LANES: usize = 512;
+
+/// Per-term cost table the per-layer lane scorer optimizes against:
+/// either
+/// derived from the modeled chip constants ([`Calibration::modeled`] —
+/// exactly the PR 4 wire-model formula), or MEASURED on the serving
+/// host by `hotpath_micro` and loaded from a JSON file
+/// (`--calibration file` / the `engine.calibration` config key), so
+/// `--lanes auto` optimizes against observed costs instead of
+/// datasheet constants.
+///
+/// Keys of the JSON form (all finite and > 0):
+/// `{"kernel_ns_per_row_op": .., "wire_ns_per_bit_level": ..,
+///   "hop_ns": ..}`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Calibration {
+    /// ns one logical array row-op costs on the executing substrate
+    /// (modeled: AND sense + write-back = two array cycles).
+    pub kernel_ns_per_row_op: f64,
+    /// ns to move one bit across one H-tree level (modeled: one array
+    /// cycle per `cols`-bit row width per level).
+    pub wire_ns_per_bit_level: f64,
+    /// Per-transfer latency of one H-tree hop [ns].
+    pub hop_ns: f64,
+}
+
+impl Calibration {
+    /// The wire-model table: scoring with it reproduces the PR 4
+    /// analytic formula bit-for-bit, so `--lanes auto` without a
+    /// calibration file behaves exactly as before.
+    pub fn modeled(org: &ChipOrg, htree: &HTree) -> Calibration {
+        let cycle_ns = Proposed::default().cycle_ns;
+        Calibration {
+            kernel_ns_per_row_op: 2.0 * cycle_ns,
+            wire_ns_per_bit_level: cycle_ns / org.subarray.cols as f64,
+            hop_ns: htree.latency_ns_per_level,
+        }
+    }
+
+    /// Parse from the JSON object form. Rejects missing keys and
+    /// non-positive or non-finite entries (a zeroed table would make
+    /// every lane count score 0 and the tuner degenerate).
+    pub fn from_json(j: &Json) -> Result<Calibration> {
+        let field = |key: &str| -> Result<f64> {
+            let v = j
+                .get(key)
+                .and_then(Json::as_f64)
+                .with_context(|| {
+                    format!("calibration: missing numeric key '{key}'")
+                })?;
+            anyhow::ensure!(
+                v.is_finite() && v > 0.0,
+                "calibration: '{key}' must be finite and > 0 (got {v})"
+            );
+            Ok(v)
+        };
+        Ok(Calibration {
+            kernel_ns_per_row_op: field("kernel_ns_per_row_op")?,
+            wire_ns_per_bit_level: field("wire_ns_per_bit_level")?,
+            hop_ns: field("hop_ns")?,
+        })
+    }
+
+    /// Load a measured table from a JSON file (the artifact
+    /// `hotpath_micro` emits next to its BENCH JSON).
+    pub fn load(path: &str) -> Result<Calibration> {
+        let j = Json::load(path)
+            .with_context(|| format!("loading calibration {path}"))?;
+        Self::from_json(&j)
+            .with_context(|| format!("parsing calibration {path}"))
+    }
+
+    /// The JSON object form [`Self::load`] reads back.
+    pub fn dump(&self) -> String {
+        format!(
+            "{{\"hop_ns\": {}, \"kernel_ns_per_row_op\": {}, \
+             \"wire_ns_per_bit_level\": {}}}",
+            self.hop_ns,
+            self.kernel_ns_per_row_op,
+            self.wire_ns_per_bit_level
+        )
+    }
+}
 
 #[derive(Debug, Clone, PartialEq, Eq)]
 enum Lanes {
@@ -86,10 +171,20 @@ impl LaneSchedule {
         org: &ChipOrg,
         htree: &HTree,
     ) -> LaneSchedule {
-        let cycle_ns = Proposed::default().cycle_ns;
+        Self::auto_with(plan, org, &Calibration::modeled(org, htree))
+    }
+
+    /// [`Self::auto`] against an explicit [`Calibration`] table —
+    /// measured host costs when one was supplied, the wire model
+    /// otherwise.
+    pub fn auto_with(
+        plan: &ModelPlan,
+        org: &ChipOrg,
+        cal: &Calibration,
+    ) -> LaneSchedule {
         let lanes: Vec<usize> = (0..plan.model().layers.len())
             .map(|li| match plan.layer_plan(li) {
-                Some(lw) => best_lanes(org, htree, lw, cycle_ns),
+                Some(lw) => best_lanes(org, lw, cal),
                 None => 1,
             })
             .collect();
@@ -185,17 +280,19 @@ pub(crate) fn charge_lane_split(
     t.charge(addr, anchor, rows * merge_bits_per_row(lw));
 }
 
-/// Analytic per-layer score [ns] of executing `lw` across `lanes`:
-/// AND-phase array cycles split across the lanes, plus the H-tree
-/// serialization and per-level latency of the broadcast/merge bits
-/// the split creates. The wire term charges one row width
-/// (`org.subarray.cols` bits) per level per array cycle.
+/// Per-layer score [ns] of executing `lw` across `lanes` under a
+/// [`Calibration`] table: row-op compute split across the lanes, plus
+/// the per-bit-level serialization and per-hop latency of the
+/// broadcast/merge bits the split creates. With
+/// [`Calibration::modeled`] this is exactly the PR 4 analytic formula
+/// (two array cycles per row op, one `cols`-bit row width per level
+/// per cycle); with a measured table every term is an observed host
+/// cost.
 fn lane_score_ns(
     org: &ChipOrg,
-    htree: &HTree,
     lw: &LayerPlan,
     lanes: usize,
-    cycle_ns: f64,
+    cal: &Calibration,
 ) -> f64 {
     let cols = org.subarray.cols as u64;
     let chunks = (lw.k as u64).div_ceil(cols);
@@ -204,9 +301,9 @@ fn lane_score_ns(
         * lw.n_bits as u64
         * chunks;
     let rows_per_lane = lw.p.div_ceil(lanes);
-    // AND sense + write-back: two array cycles per row op (§II-A).
-    let compute_ns =
-        rows_per_lane as f64 * row_ops as f64 * 2.0 * cycle_ns;
+    let compute_ns = rows_per_lane as f64
+        * row_ops as f64
+        * cal.kernel_ns_per_row_op;
     let mut t = LaneTraffic::default();
     let mut remaining = lw.p;
     for lane in 0..lanes {
@@ -217,28 +314,23 @@ fn lane_score_ns(
         remaining -= rows;
         charge_lane_split(&mut t, org, lane, rows as u64, lw);
     }
-    let wire_ns = t.bit_levels as f64 / cols as f64 * cycle_ns
-        + t.latency_ns(htree);
+    let wire_ns = t.bit_levels as f64 * cal.wire_ns_per_bit_level
+        + t.hops as f64 * cal.hop_ns;
     compute_ns + wire_ns
 }
 
 /// The fastest power-of-two lane count for one layer (ties break to
 /// the narrower count, so serial wins whenever fan-out buys nothing).
-fn best_lanes(
-    org: &ChipOrg,
-    htree: &HTree,
-    lw: &LayerPlan,
-    cycle_ns: f64,
-) -> usize {
+fn best_lanes(org: &ChipOrg, lw: &LayerPlan, cal: &Calibration) -> usize {
     let cap = org
         .engine_lanes(usize::MAX)
         .min(MAX_AUTO_LANES)
         .min(lw.p.max(1));
     let mut best = 1usize;
-    let mut best_ns = lane_score_ns(org, htree, lw, 1, cycle_ns);
+    let mut best_ns = lane_score_ns(org, lw, 1, cal);
     let mut lanes = 2usize;
     while lanes <= cap {
-        let ns = lane_score_ns(org, htree, lw, lanes, cycle_ns);
+        let ns = lane_score_ns(org, lw, lanes, cal);
         if ns < best_ns {
             best = lanes;
             best_ns = ns;
@@ -348,6 +440,102 @@ mod tests {
     }
 
     #[test]
+    fn modeled_calibration_reproduces_auto() {
+        // `auto` is defined as `auto_with(modeled)`: the wire-model
+        // table changes nothing for callers without a measured file.
+        let p = plan();
+        let org = ChipOrg::default();
+        let h = HTree::default();
+        let cal = Calibration::modeled(&org, &h);
+        assert_eq!(
+            LaneSchedule::auto(&p, &org, &h),
+            LaneSchedule::auto_with(&p, &org, &cal),
+        );
+        let cycle_ns = Proposed::default().cycle_ns;
+        assert!((cal.kernel_ns_per_row_op - 2.0 * cycle_ns).abs() < 1e-12);
+        assert!(
+            (cal.wire_ns_per_bit_level
+                - cycle_ns / org.subarray.cols as f64)
+                .abs()
+                < 1e-15
+        );
+        assert!((cal.hop_ns - h.latency_ns_per_level).abs() < 1e-12);
+    }
+
+    #[test]
+    fn calibration_json_round_trip() {
+        let cal = Calibration {
+            kernel_ns_per_row_op: 3.25,
+            wire_ns_per_bit_level: 0.004,
+            hop_ns: 0.31,
+        };
+        let j = Json::parse(&cal.dump()).unwrap();
+        assert_eq!(Calibration::from_json(&j).unwrap(), cal);
+    }
+
+    #[test]
+    fn calibration_rejects_bad_tables() {
+        for text in [
+            "{}",
+            "{\"kernel_ns_per_row_op\": 1.0}",
+            "{\"hop_ns\": 0.0, \"kernel_ns_per_row_op\": 1.0, \
+             \"wire_ns_per_bit_level\": 1.0}",
+            "{\"hop_ns\": -1.0, \"kernel_ns_per_row_op\": 1.0, \
+             \"wire_ns_per_bit_level\": 1.0}",
+        ] {
+            let j = Json::parse(text).unwrap();
+            assert!(
+                Calibration::from_json(&j).is_err(),
+                "must reject {text}"
+            );
+        }
+        assert!(Calibration::load("/nonexistent/cal.json").is_err());
+    }
+
+    #[test]
+    fn measured_calibration_shifts_the_knee_not_correctness() {
+        // A table where compute is nearly free and every hop is very
+        // expensive must pull the tuner toward serial; one where
+        // compute dominates must fan out. Either way execution stays
+        // bit-identical — the schedule only shapes the split.
+        let p = plan();
+        let org = ChipOrg::default();
+        let wire_bound = Calibration {
+            kernel_ns_per_row_op: 1e-6,
+            wire_ns_per_bit_level: 10.0,
+            hop_ns: 1e6,
+        };
+        let s = LaneSchedule::auto_with(&p, &org, &wire_bound);
+        assert!(s.is_serial(), "hop-dominated costs must stay serial: {s}");
+        let compute_bound = Calibration {
+            kernel_ns_per_row_op: 1e6,
+            wire_ns_per_bit_level: 1e-9,
+            hop_ns: 1e-9,
+        };
+        let w = LaneSchedule::auto_with(&p, &org, &compute_bound);
+        assert!(
+            w.layer_lanes(0) > 1,
+            "compute-dominated costs must fan out: {w}"
+        );
+        let image: Vec<f32> = (0..p.input_elems())
+            .map(|i| (i % 9) as f32 / 8.0)
+            .collect();
+        let serial = p.forward(
+            &image,
+            DEFAULT_TILE_PATCHES,
+            &TileScheduler::new(1),
+        );
+        for sched in [s, w] {
+            let t = TileScheduler::from_schedule(sched, &org);
+            assert_eq!(
+                p.forward(&image, DEFAULT_TILE_PATCHES, &t),
+                serial,
+                "calibrated schedules must stay bit-identical"
+            );
+        }
+    }
+
+    #[test]
     fn score_charges_tree_crossings() {
         // Fan-out past the mat boundary must pay wire time: the score
         // of a 64-lane split exceeds pure compute/64.
@@ -355,9 +543,9 @@ mod tests {
         let org = ChipOrg::default();
         let h = HTree::default();
         let lw = p.layer_plan(0).unwrap();
-        let cycle_ns = Proposed::default().cycle_ns;
-        let serial = lane_score_ns(&org, &h, lw, 1, cycle_ns);
-        let wide = lane_score_ns(&org, &h, lw, 64, cycle_ns);
+        let cal = Calibration::modeled(&org, &h);
+        let serial = lane_score_ns(&org, lw, 1, &cal);
+        let wide = lane_score_ns(&org, lw, 64, &cal);
         assert!(wide < serial, "fan-out must help a 64-row layer");
         assert!(
             wide > serial / 64.0,

@@ -57,6 +57,7 @@ fn cli() -> Cli {
                 opt_default("abits", "pimsim activation bits", "4"),
                 opt_default("seed", "pimsim weight/dataset seed", "42"),
                 opt_default("lanes", "pimsim engine lanes per worker (virtual parallel sub-arrays), or 'auto' for per-layer H-tree tuning", "1"),
+                opt("calibration", "measured tuner cost table (JSON from the hotpath_micro bench) for --lanes auto; default: modeled chip constants"),
                 opt("chaos", "kill workers mid-batch on a trace schedule: poisson:<mean-on>:<off>[:<seed>] | periodic:<on>:<off>[:<count>] | bursty:<good>:<bad>:<off>[:<epochs>:<per-epoch>] (pimsim only)"),
                 opt_default("chaos-cycles", "trace cycles one batch consumes (chaos mode)", "1"),
                 flag("audit", "print a per-request energy audit (component table + merge traffic) for a sampled request"),
@@ -76,6 +77,7 @@ fn cli() -> Cli {
                 opt_default("ckpt", "checkpoint period (tiles)", "4"),
                 opt_default("cycles-per-tile", "trace cycles one tile consumes", "10"),
                 opt_default("lanes", "engine lanes (virtual parallel sub-arrays; one wave of lanes tiles shares the tile cycles), or 'auto' for per-layer H-tree tuning", "1"),
+                opt("calibration", "measured tuner cost table (JSON from the hotpath_micro bench) for --lanes auto; default: modeled chip constants"),
                 opt_default("config", "RunConfig file; explicit flags override it", ""),
             ],
         )
@@ -247,7 +249,7 @@ fn serve_pimsim(p: &pims::cli::Parsed, cfg: &RunConfig) -> Result<()> {
     // the banner and the merge-share line (workers compile their own
     // replicas on their threads, deterministically identical).
     let probe = cfg.compile_plan()?;
-    let sched = cfg.lane_schedule(&probe);
+    let sched = cfg.lane_schedule(&probe)?;
     let model = cfg.build_model()?;
     let ds = pims::dataset::generate(
         256,
@@ -421,7 +423,7 @@ fn cmd_infer(p: &pims::cli::Parsed) -> Result<()> {
         tile_patches: cfg.tile_patches,
         checkpoint_period: cfg.ckpt_period,
         cycles_per_tile: p.get_u64("cycles-per-tile")?.unwrap_or(10).max(1),
-        lanes: cfg.lane_schedule(&mplan),
+        lanes: cfg.lane_schedule(&mplan)?,
         volatile_only: false,
     };
     let tiles = mplan.total_tiles(plan.tile_patches);

@@ -501,7 +501,7 @@ fn all_four_job_kinds_roundtrip_live_pimsim_pool() {
     let plan = pool_cfg.compile_plan().unwrap();
     let want_ledger = plan.frame_ledger();
     let sched = TileScheduler::from_schedule(
-        pool_cfg.lane_schedule(&plan),
+        pool_cfg.lane_schedule(&plan).unwrap(),
         &pims::arch::ChipOrg::default(),
     );
     let want_traffic = sched.batch_traffic(&plan, pool_cfg.batch);

@@ -1,0 +1,90 @@
+//! Fleet-scale intermittent-edge simulation benchmark (ISSUE 7).
+//!
+//! Times `run_fleet` on a seeded mixed-profile fleet and records the
+//! fleet's own BENCH-style headline numbers (goodput, re-execution
+//! ratio, checkpoint overhead, determinism digest) as notes. The
+//! SVHN-scale fleet — the paper model on every node — is gated behind
+//! PIMS_BENCH_HEAVY=1 so CI's bench-smoke stays fast; the nightly
+//! heavy job runs it.
+
+use pims::benchlib::{black_box, Bench};
+use pims::cli::CadenceArg;
+use pims::cnn;
+use pims::engine::ModelPlan;
+use pims::fleet::{run_fleet, FleetSpec, DEFAULT_PROFILES};
+use pims::intermittency::TraceSpec;
+
+fn profiles(spec: &str) -> Vec<TraceSpec> {
+    spec.split(',')
+        .map(|s| TraceSpec::parse(s.trim()).unwrap())
+        .collect()
+}
+
+fn main() {
+    let mut b = Bench::new("fleet_sim").with_budget(200, 1500);
+
+    // --- Micro fleet: the CI smoke case's shape.
+    let plan = ModelPlan::compile(cnn::micro_net(), 1, 4, 42).unwrap();
+    let spec = FleetSpec {
+        nodes: 32,
+        jobs: 96,
+        profiles: profiles(DEFAULT_PROFILES),
+        cadence: CadenceArg::Auto,
+        requeue_after: 16,
+        tile_patches: 16,
+        cycles_per_tile: 10,
+        seed: 42,
+    };
+    let r = run_fleet(&plan, &spec).unwrap();
+    println!("{}\n{}", r.summary(), r.cost.table());
+    b.note(
+        "micro fleet completed",
+        format!("{}/{} (dropped {})", r.completed_jobs, r.jobs, r.dropped_jobs),
+    );
+    b.note("micro goodput fps", format!("{:.1}", r.goodput_fps));
+    b.note("micro reexec ratio", format!("{:.4}", r.reexec_ratio));
+    b.note("micro ckpt overhead", format!("{:.4}", r.ckpt_overhead));
+    b.note(
+        "micro logits digest",
+        format!("{:016x}", r.logits_digest),
+    );
+    b.iter("fleet_micro_32x96", || {
+        black_box(run_fleet(&plan, &spec).unwrap());
+    });
+
+    // --- SVHN-scale fleet: the paper model on every node. Heavy.
+    if std::env::var("PIMS_BENCH_HEAVY").ok().as_deref() == Some("1") {
+        let svhn =
+            ModelPlan::compile(cnn::svhn_net(), 1, 4, 0x5F1).unwrap();
+        let spec = FleetSpec {
+            nodes: 24,
+            jobs: 24,
+            profiles: profiles(DEFAULT_PROFILES),
+            cadence: CadenceArg::Auto,
+            requeue_after: 32,
+            tile_patches: 256,
+            cycles_per_tile: 10,
+            seed: 7,
+        };
+        let r = run_fleet(&svhn, &spec).unwrap();
+        b.note(
+            "svhn fleet completed",
+            format!(
+                "{}/{} ({} failures, {} tiles re-executed)",
+                r.completed_jobs, r.jobs, r.failures, r.tiles_reexecuted
+            ),
+        );
+        b.note("svhn goodput fps", format!("{:.3}", r.goodput_fps));
+        b.note(
+            "svhn ckpt overhead",
+            format!("{:.4}", r.ckpt_overhead),
+        );
+        b.note(
+            "svhn logits digest",
+            format!("{:016x}", r.logits_digest),
+        );
+    } else {
+        b.note("svhn fleet case", "skipped (set PIMS_BENCH_HEAVY=1)");
+    }
+    b.report();
+}

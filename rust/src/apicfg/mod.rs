@@ -27,7 +27,7 @@ use std::time::Duration;
 use anyhow::{Context, Result};
 
 use crate::arch::{ChipOrg, HTree};
-use crate::cli::{LaneArg, Parsed};
+use crate::cli::{CadenceArg, LaneArg, Parsed};
 use crate::cnn::{self, Model};
 use crate::configsys::{Config, Value};
 use crate::engine::{Calibration, LaneSchedule, ModelPlan};
@@ -95,6 +95,11 @@ pub const KNOWN_KEYS: &[&str] = &[
     "nv.ckpt_period",
     "chaos.trace",
     "chaos.cycles_per_batch",
+    "fleet.nodes",
+    "fleet.jobs",
+    "fleet.profiles",
+    "fleet.cadence",
+    "fleet.requeue_after",
 ];
 
 /// One declarative serving/inference run.
@@ -141,6 +146,21 @@ pub struct RunConfig {
     pub chaos: Option<String>,
     /// `chaos.cycles_per_batch` — trace cycles one batch consumes.
     pub chaos_cycles: u64,
+    /// `fleet.nodes` — virtual edge nodes in a `pims fleet` run.
+    pub fleet_nodes: usize,
+    /// `fleet.jobs` — frames admitted to the fleet coordinator.
+    pub fleet_jobs: usize,
+    /// `fleet.profiles` — comma-separated harvest [`TraceSpec`]s,
+    /// assigned round-robin with per-node seed jitter. Kept as the
+    /// source string so the config dumps/loads losslessly; validated
+    /// on every load.
+    pub fleet_profiles: String,
+    /// `fleet.cadence` — NV checkpoint cadence in tiles, or `"auto"`
+    /// (per-node tuning against the node's own harvest profile).
+    pub fleet_cadence: CadenceArg,
+    /// `fleet.requeue_after` — consecutive dark slots before the
+    /// coordinator pulls a node's job back (0 = sticky nodes).
+    pub fleet_requeue_after: u64,
 }
 
 impl Default for RunConfig {
@@ -162,6 +182,11 @@ impl Default for RunConfig {
             ckpt_period: 4,
             chaos: None,
             chaos_cycles: 1,
+            fleet_nodes: 32,
+            fleet_jobs: 96,
+            fleet_profiles: crate::fleet::DEFAULT_PROFILES.to_string(),
+            fleet_cadence: CadenceArg::Auto,
+            fleet_requeue_after: 64,
         }
     }
 }
@@ -240,6 +265,24 @@ impl RunConfig {
             None => d.wait_ms,
             Some(_) => cfg.float("serve.wait_ms")?,
         };
+        let fleet_profiles = match cfg.get("fleet.profiles") {
+            None => d.fleet_profiles,
+            Some(_) => cfg.str("fleet.profiles")?,
+        };
+        let fleet_cadence = match cfg.get("fleet.cadence") {
+            None => d.fleet_cadence,
+            Some(Value::Str(s)) if s == "auto" => CadenceArg::Auto,
+            Some(Value::Int(n)) => {
+                anyhow::ensure!(
+                    *n >= 1,
+                    "fleet.cadence: must be >= 1 or \"auto\", got {n}"
+                );
+                CadenceArg::Fixed(*n as u64)
+            }
+            Some(v) => anyhow::bail!(
+                "fleet.cadence: expected int or \"auto\", got {v}"
+            ),
+        };
         let rc = RunConfig {
             backend,
             model,
@@ -279,6 +322,26 @@ impl RunConfig {
                 "chaos.cycles_per_batch",
                 d.chaos_cycles as i64,
                 1,
+            )? as u64,
+            fleet_nodes: int_key(
+                cfg,
+                "fleet.nodes",
+                d.fleet_nodes as i64,
+                1,
+            )? as usize,
+            fleet_jobs: int_key(
+                cfg,
+                "fleet.jobs",
+                d.fleet_jobs as i64,
+                1,
+            )? as usize,
+            fleet_profiles,
+            fleet_cadence,
+            fleet_requeue_after: int_key(
+                cfg,
+                "fleet.requeue_after",
+                d.fleet_requeue_after as i64,
+                0,
             )? as u64,
         };
         rc.validate()?;
@@ -378,6 +441,22 @@ impl RunConfig {
             rc.chaos_cycles =
                 p.get_u64("chaos-cycles")?.unwrap_or(1).max(1);
         }
+        if use_flag("nodes", "fleet.nodes") {
+            rc.fleet_nodes = p.get_usize_at_least("nodes", 1)?;
+        }
+        if use_flag("jobs", "fleet.jobs") {
+            rc.fleet_jobs = p.get_usize_at_least("jobs", 1)?;
+        }
+        if use_flag("profiles", "fleet.profiles") {
+            rc.fleet_profiles = p.get("profiles").unwrap().to_string();
+        }
+        if use_flag("cadence", "fleet.cadence") {
+            rc.fleet_cadence = p.get_cadence("cadence")?;
+        }
+        if use_flag("requeue-after", "fleet.requeue_after") {
+            rc.fleet_requeue_after =
+                p.get_u64("requeue-after")?.unwrap_or(64);
+        }
         rc.validate()?;
         Ok(rc)
     }
@@ -428,6 +507,27 @@ impl RunConfig {
                 .with_context(|| format!("chaos trace '{spec}'"))?;
         }
         anyhow::ensure!(
+            self.fleet_nodes >= 1,
+            "fleet nodes must be >= 1"
+        );
+        anyhow::ensure!(self.fleet_jobs >= 1, "fleet jobs must be >= 1");
+        if let CadenceArg::Fixed(k) = self.fleet_cadence {
+            anyhow::ensure!(
+                k >= 1 && k <= i64::MAX as u64,
+                "fleet cadence must be >= 1 (and fit the config \
+                 format's integer range)"
+            );
+        }
+        anyhow::ensure!(
+            self.fleet_requeue_after <= i64::MAX as u64,
+            "fleet requeue_after must fit the config format's \
+             integer range"
+        );
+        for spec in self.fleet_profiles.split(',') {
+            TraceSpec::parse(spec.trim())
+                .with_context(|| format!("fleet profile '{spec}'"))?;
+        }
+        anyhow::ensure!(
             self.seed <= i64::MAX as u64,
             "seed must fit the config format's integer range"
         );
@@ -469,6 +569,23 @@ impl RunConfig {
         }
         c.set("chaos.cycles_per_batch", &self.chaos_cycles.to_string())
             .expect(ok);
+        c.set("fleet.nodes", &self.fleet_nodes.to_string()).expect(ok);
+        c.set("fleet.jobs", &self.fleet_jobs.to_string()).expect(ok);
+        c.set("fleet.profiles", &format!("\"{}\"", self.fleet_profiles))
+            .expect(ok);
+        match self.fleet_cadence {
+            CadenceArg::Auto => {
+                c.set("fleet.cadence", "\"auto\"").expect(ok)
+            }
+            CadenceArg::Fixed(k) => {
+                c.set("fleet.cadence", &k.to_string()).expect(ok)
+            }
+        }
+        c.set(
+            "fleet.requeue_after",
+            &self.fleet_requeue_after.to_string(),
+        )
+        .expect(ok);
         c
     }
 
@@ -516,6 +633,36 @@ impl RunConfig {
     /// The batcher's size-or-deadline wait.
     pub fn max_wait(&self) -> Duration {
         Duration::from_secs_f64(self.wait_ms.max(0.0) / 1e3)
+    }
+
+    /// Resolve the `fleet.*` knobs into a validated
+    /// [`crate::fleet::FleetSpec`] (profiles parsed, engine knobs —
+    /// tile size, seed — shared with the serving paths).
+    /// `cycles_per_tile` is the fleet slot width, a simulator knob
+    /// rather than a run property, so it stays a parameter.
+    pub fn fleet_spec(
+        &self,
+        cycles_per_tile: u64,
+    ) -> Result<crate::fleet::FleetSpec> {
+        let mut profiles = Vec::new();
+        for spec in self.fleet_profiles.split(',') {
+            profiles.push(
+                TraceSpec::parse(spec.trim())
+                    .with_context(|| format!("fleet profile '{spec}'"))?,
+            );
+        }
+        let spec = crate::fleet::FleetSpec {
+            nodes: self.fleet_nodes,
+            jobs: self.fleet_jobs,
+            profiles,
+            cadence: self.fleet_cadence,
+            requeue_after: self.fleet_requeue_after,
+            tile_patches: self.tile_patches,
+            cycles_per_tile,
+            seed: self.seed,
+        };
+        spec.validate()?;
+        Ok(spec)
     }
 }
 
@@ -589,6 +736,21 @@ mod tests {
                 ckpt_period: g.u32(1, 64) as u64,
                 chaos,
                 chaos_cycles: g.u32(1, 16) as u64,
+                fleet_nodes: g.usize(1, 512),
+                fleet_jobs: g.usize(1, 1024),
+                fleet_profiles: g
+                    .choose(&[
+                        "poisson:400:60",
+                        "solar:600:80:16:3, rf:300:50:8:5",
+                        crate::fleet::DEFAULT_PROFILES,
+                    ])
+                    .to_string(),
+                fleet_cadence: if g.bool() {
+                    CadenceArg::Auto
+                } else {
+                    CadenceArg::Fixed(g.u32(1, 64) as u64)
+                },
+                fleet_requeue_after: g.u32(0, 128) as u64,
             };
             rc.validate().unwrap();
             let text = rc.dump();
@@ -627,6 +789,12 @@ mod tests {
             "[engine]\nlanes = 0",
             "[engine]\nlanes = true",
             "[chaos]\ntrace = \"nonsense\"",
+            "[fleet]\nnodes = 0",
+            "[fleet]\njobs = 0",
+            "[fleet]\ncadence = 0",
+            "[fleet]\ncadence = true",
+            "[fleet]\nprofiles = \"poisson:400:60,bogus:1\"",
+            "[fleet]\nrequeue_after = -1",
         ] {
             let cfg = Config::parse(text).unwrap();
             assert!(
@@ -654,6 +822,40 @@ mod tests {
             RunConfig::from_config(&cfg).unwrap().lanes,
             LaneArg::Fixed(ChipOrg::default().parallel_subarrays()),
             "config lanes clamp to the chip like the CLI flag"
+        );
+    }
+
+    #[test]
+    fn fleet_keys_parse_and_resolve() {
+        let cfg = Config::parse(
+            "[fleet]\nnodes = 200\njobs = 400\n\
+             profiles = \"solar:600:80:16,rf:300:50:8\"\n\
+             cadence = 6\nrequeue_after = 0\n",
+        )
+        .unwrap();
+        let rc = RunConfig::from_config(&cfg).unwrap();
+        assert_eq!(rc.fleet_nodes, 200);
+        assert_eq!(rc.fleet_jobs, 400);
+        assert_eq!(rc.fleet_cadence, CadenceArg::Fixed(6));
+        assert_eq!(rc.fleet_requeue_after, 0);
+
+        let spec = rc.fleet_spec(10).unwrap();
+        assert_eq!(spec.nodes, 200);
+        assert_eq!(spec.profiles.len(), 2);
+        assert_eq!(spec.profiles[0].kind(), "solar");
+        assert_eq!(spec.cadence, CadenceArg::Fixed(6));
+        assert_eq!(spec.tile_patches, rc.tile_patches);
+        assert_eq!(spec.seed, rc.seed);
+
+        let back =
+            RunConfig::from_config(&Config::parse(&rc.dump()).unwrap())
+                .unwrap();
+        assert_eq!(rc, back);
+
+        let auto = Config::parse("[fleet]\ncadence = \"auto\"").unwrap();
+        assert_eq!(
+            RunConfig::from_config(&auto).unwrap().fleet_cadence,
+            CadenceArg::Auto
         );
     }
 

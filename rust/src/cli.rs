@@ -103,6 +103,25 @@ impl Parsed {
             }
         }
     }
+
+    /// Shared parser for `--cadence`-style options: the literal
+    /// `auto` (per-node harvest-profile tuning) or a fixed tile count
+    /// >= 1. Missing values default to `auto` — tuning is the fleet's
+    /// reason to exist.
+    pub fn get_cadence(&self, name: &str) -> anyhow::Result<CadenceArg> {
+        match self.flags.get(name).map(|s| s.as_str()) {
+            None | Some("auto") => Ok(CadenceArg::Auto),
+            Some(v) => {
+                let n: u64 = v.parse().map_err(|_| {
+                    anyhow::anyhow!(
+                        "--{name}: expected integer or 'auto', got '{v}'"
+                    )
+                })?;
+                anyhow::ensure!(n >= 1, "--{name}: must be >= 1, got {n}");
+                Ok(CadenceArg::Fixed(n))
+            }
+        }
+    }
 }
 
 /// Value of a `--lanes`-style option.
@@ -112,6 +131,15 @@ pub enum LaneArg {
     Auto,
     /// A fixed count for every layer, already chip-clamped.
     Fixed(usize),
+}
+
+/// Value of a `--cadence`-style option (NV checkpoint cadence).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CadenceArg {
+    /// Tune one cadence per fleet node against its harvest profile.
+    Auto,
+    /// Checkpoint every `n` tiles on every node.
+    Fixed(u64),
 }
 
 /// CLI definition + parser.
@@ -392,6 +420,30 @@ mod tests {
         assert!(p.get_lanes("lanes").is_err());
         // An undeclared option falls back to serial.
         assert_eq!(p.get_lanes("nope").unwrap(), LaneArg::Fixed(1));
+    }
+
+    #[test]
+    fn cadence_parses_auto_and_fixed() {
+        let cli = Cli::new("pims", "test").command(
+            "fleet",
+            "run",
+            vec![opt_default("cadence", "ckpt cadence", "auto")],
+        );
+        let p = cli.parse(&argv(&["fleet"])).unwrap();
+        assert_eq!(p.get_cadence("cadence").unwrap(), CadenceArg::Auto);
+        let p = cli.parse(&argv(&["fleet", "--cadence", "8"])).unwrap();
+        assert_eq!(
+            p.get_cadence("cadence").unwrap(),
+            CadenceArg::Fixed(8)
+        );
+        // Rejections: zero and junk.
+        let p = cli.parse(&argv(&["fleet", "--cadence", "0"])).unwrap();
+        assert!(p.get_cadence("cadence").is_err());
+        let p =
+            cli.parse(&argv(&["fleet", "--cadence", "many"])).unwrap();
+        assert!(p.get_cadence("cadence").is_err());
+        // An undeclared option defaults to auto-tuning.
+        assert_eq!(p.get_cadence("nope").unwrap(), CadenceArg::Auto);
     }
 
     #[test]

@@ -1,0 +1,130 @@
+//! Deterministic re-dispatch queue: the coordinator-side bookkeeping
+//! for work that moves between executors.
+//!
+//! The serving pool's ingress hands each admitted request to exactly
+//! one worker and never takes it back; the fleet coordinator
+//! ([`crate::fleet`]) cannot make that assumption — a node that goes
+//! dark mid-frame may keep its job (and resume from NV) or have it
+//! pulled back and re-dispatched to a live node. [`WorkQueue`] is the
+//! shared vocabulary for that: a strict FIFO of admitted job ids with
+//! requeue-to-tail semantics and conservation accounting, so "zero
+//! dropped admitted jobs" is checkable as an arithmetic identity
+//! rather than trusted.
+
+use std::collections::VecDeque;
+
+/// A deterministic FIFO of admitted job ids.
+///
+/// Jobs enter in admission order, dispatch from the head, and return
+/// to the TAIL when pulled back from a dark node — live nodes drain
+/// fresh work before retrying displaced work, and two runs with equal
+/// admission/requeue sequences dispatch identically (no hashing, no
+/// timestamps).
+#[derive(Debug, Clone, Default)]
+pub struct WorkQueue {
+    queue: VecDeque<usize>,
+    admitted: usize,
+    completed: usize,
+    requeues: u64,
+}
+
+impl WorkQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Admit job ids `0..jobs` in order.
+    pub fn admit(&mut self, jobs: usize) {
+        self.queue.extend(0..jobs);
+        self.admitted += jobs;
+    }
+
+    /// Dispatch the next job (FIFO head), if any is waiting.
+    pub fn take(&mut self) -> Option<usize> {
+        self.queue.pop_front()
+    }
+
+    /// Return a job pulled back from a dark or exhausted node. It
+    /// joins the tail, behind work that has not yet run at all.
+    pub fn requeue(&mut self, job: usize) {
+        self.queue.push_back(job);
+        self.requeues += 1;
+    }
+
+    /// Record one job finished by an executor.
+    pub fn complete(&mut self) {
+        self.completed += 1;
+    }
+
+    /// Jobs waiting for dispatch.
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn admitted(&self) -> usize {
+        self.admitted
+    }
+
+    pub fn completed(&self) -> usize {
+        self.completed
+    }
+
+    /// Times any job was pulled back and re-dispatched.
+    pub fn requeues(&self) -> u64 {
+        self.requeues
+    }
+
+    /// Conservation check: admitted jobs not completed, not waiting,
+    /// and not among the caller's `in_flight` count have been lost.
+    /// A correct coordinator always reports zero here.
+    pub fn dropped(&self, in_flight: usize) -> usize {
+        self.admitted
+            .saturating_sub(self.completed)
+            .saturating_sub(self.queue.len())
+            .saturating_sub(in_flight)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_dispatch_in_admission_order() {
+        let mut q = WorkQueue::new();
+        q.admit(3);
+        assert_eq!(q.admitted(), 3);
+        assert_eq!(q.take(), Some(0));
+        assert_eq!(q.take(), Some(1));
+        assert_eq!(q.take(), Some(2));
+        assert_eq!(q.take(), None);
+    }
+
+    #[test]
+    fn requeue_joins_the_tail() {
+        let mut q = WorkQueue::new();
+        q.admit(3);
+        let a = q.take().unwrap();
+        q.requeue(a); // displaced work waits behind fresh work
+        assert_eq!(q.take(), Some(1));
+        assert_eq!(q.take(), Some(2));
+        assert_eq!(q.take(), Some(0));
+        assert_eq!(q.requeues(), 1);
+    }
+
+    #[test]
+    fn conservation_identity_holds() {
+        let mut q = WorkQueue::new();
+        q.admit(4);
+        let _a = q.take().unwrap(); // in flight
+        let b = q.take().unwrap();
+        q.complete(); // b finished
+        let _ = b;
+        // 4 admitted = 1 completed + 2 pending + 1 in flight.
+        assert_eq!(q.completed(), 1);
+        assert_eq!(q.pending(), 2);
+        assert_eq!(q.dropped(1), 0);
+        // Losing track of the in-flight job shows up immediately.
+        assert_eq!(q.dropped(0), 1);
+    }
+}

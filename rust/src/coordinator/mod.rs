@@ -43,6 +43,7 @@
 
 mod batcher;
 mod chaos;
+mod dispatch;
 mod ingress;
 mod job;
 mod metrics_agg;
@@ -50,6 +51,7 @@ mod pimsim;
 mod pool;
 
 pub use chaos::ChaosPolicy;
+pub use dispatch::WorkQueue;
 pub use job::{EnergyAudit, Job, JobBatch, JobKind, JobOutput};
 pub use metrics_agg::{ServeMetrics, WorkerSnapshot};
 pub use pimsim::PimSimBackend;

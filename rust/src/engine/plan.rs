@@ -238,6 +238,19 @@ impl ModelPlan {
         ledger
     }
 
+    /// Raw Eq.-1 partial-sum words (`P x F` u64 per GEMM layer) one
+    /// frame's forward pass writes — the payload a full-frame NV
+    /// checkpoint would persist. The per-node cadence tuner
+    /// ([`crate::fleet`]) divides this by [`Self::total_tiles`] to
+    /// estimate the fresh words each incremental checkpoint charges.
+    pub fn partial_sum_words(&self) -> u64 {
+        self.layers
+            .iter()
+            .flatten()
+            .map(|lw| (lw.p * lw.f) as u64)
+            .sum()
+    }
+
     /// Begin a resumable tiled forward pass over one image; each
     /// layer's tiles execute its scheduled lane count at a time
     /// ([`ResumableForward::step_wave`]).
@@ -624,6 +637,8 @@ mod tests {
         // Tile schedule: conv1 64 patches at 16/tile + pool + fc.
         assert_eq!(p.tiles_in_layer(0, 16), 4);
         assert_eq!(p.total_tiles(16), 6);
+        // conv1 64x4 + fc1 1x10 partial words (pool writes none).
+        assert_eq!(p.partial_sum_words(), 64 * 4 + 10);
     }
 
     #[test]

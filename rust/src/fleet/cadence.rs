@@ -1,0 +1,176 @@
+//! Per-node NV checkpoint cadence auto-tuning (DESIGN.md §11).
+//!
+//! The single-node driver takes `checkpoint_period` as a constant; a
+//! fleet node can do better, because its harvest profile is known up
+//! front. Checkpointing every tile wastes MTJ-write energy on a node
+//! with long steady on-intervals; checkpointing rarely wastes
+//! re-execution energy on a node that browns out every few tiles.
+//! [`tune_cadence`] picks the cadence (tiles between checkpoints) that
+//! minimizes the modeled sum of both, the same analytic sweep shape as
+//! [`crate::engine::LaneSchedule::auto`]: power-of-two candidates,
+//! deterministic scoring, ties broken toward the smaller (safer)
+//! cadence.
+//!
+//! The objective, per frame, in pJ:
+//!
+//! ```text
+//! score(K) = failures/frame x (K / 2) x E_tile      (re-execution)
+//!          + tiles/K x (HEADER + K x W_tile) x 64 x NV_WRITE_PJ
+//! ```
+//!
+//! where `failures/frame = tiles_per_frame / mean_on_tiles` (outages
+//! hit uniformly, losing K/2 tiles on average), `E_tile` is the
+//! per-tile share of [`ModelPlan::frame_ledger`] energy, and `W_tile`
+//! is the per-tile share of [`ModelPlan::partial_sum_words`] — the
+//! fresh words an incremental checkpoint persists on top of the
+//! snapshot header. Candidates above half the mean on-interval (in
+//! tiles) are excluded: a cadence the harvest can rarely complete
+//! would stall durable progress entirely.
+
+use crate::device::SotCosts;
+use crate::energy::tech45;
+use crate::engine::{ModelPlan, SNAPSHOT_HEADER_WORDS};
+use crate::intermittency::PowerTrace;
+
+/// Analytic cost model of one node's (plan, harvest profile) pair.
+#[derive(Debug, Clone)]
+pub struct CadenceModel {
+    /// Tiles one frame executes.
+    pub tiles_per_frame: u64,
+    /// Mean on-interval length of the harvest trace, in tiles.
+    pub mean_on_tiles: f64,
+    /// Energy one tile's row ops charge [pJ].
+    pub tile_energy_pj: f64,
+    /// Raw partial-sum words one tile contributes on average.
+    pub words_per_tile: f64,
+}
+
+impl CadenceModel {
+    pub fn new(
+        plan: &ModelPlan,
+        trace: &PowerTrace,
+        tile_patches: usize,
+        cycles_per_tile: u64,
+    ) -> CadenceModel {
+        let tiles_per_frame = plan.total_tiles(tile_patches).max(1);
+        let mean_on_cycles = if trace.intervals.is_empty() {
+            cycles_per_tile as f64
+        } else {
+            trace.total_on_cycles() as f64 / trace.intervals.len() as f64
+        };
+        let mean_on_tiles =
+            (mean_on_cycles / cycles_per_tile.max(1) as f64).max(1e-9);
+        let energy = plan.frame_ledger().energy_pj(&SotCosts::default());
+        CadenceModel {
+            tiles_per_frame,
+            mean_on_tiles,
+            tile_energy_pj: energy / tiles_per_frame as f64,
+            words_per_tile: plan.partial_sum_words() as f64
+                / tiles_per_frame as f64,
+        }
+    }
+
+    /// Modeled per-frame cost [pJ] of checkpointing every `cadence`
+    /// tiles: expected re-execution energy + MTJ checkpoint energy.
+    pub fn score_pj(&self, cadence: u64) -> f64 {
+        let k = cadence.max(1) as f64;
+        let tiles = self.tiles_per_frame as f64;
+        let failures_per_frame = tiles / self.mean_on_tiles;
+        let reexec = failures_per_frame * (k / 2.0) * self.tile_energy_pj;
+        let ckpt_words =
+            SNAPSHOT_HEADER_WORDS as f64 + k * self.words_per_tile;
+        let ckpt = (tiles / k) * ckpt_words * 64.0 * tech45::NV_WRITE_PJ;
+        reexec + ckpt
+    }
+
+    /// Largest cadence the harvest profile can routinely complete:
+    /// half the mean on-interval, so an average interval commits at
+    /// least two checkpoints and durable progress never stalls.
+    pub fn progress_cap(&self) -> u64 {
+        ((self.mean_on_tiles / 2.0) as u64).max(1)
+    }
+}
+
+/// Pick the checkpoint cadence for one node: sweep power-of-two
+/// candidates `1, 2, 4, ...` up to `min(tiles_per_frame,
+/// progress_cap)`, score each with [`CadenceModel::score_pj`], keep
+/// the cheapest (strict `<`, so ties break toward the smaller and
+/// therefore safer cadence). Fully deterministic.
+pub fn tune_cadence(
+    plan: &ModelPlan,
+    trace: &PowerTrace,
+    tile_patches: usize,
+    cycles_per_tile: u64,
+) -> u64 {
+    let model = CadenceModel::new(plan, trace, tile_patches, cycles_per_tile);
+    let cap = model.tiles_per_frame.min(model.progress_cap());
+    let mut best = 1u64;
+    let mut best_score = model.score_pj(1);
+    let mut k = 2u64;
+    while k <= cap {
+        let score = model.score_pj(k);
+        if score < best_score {
+            best = k;
+            best_score = score;
+        }
+        k *= 2;
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn;
+
+    fn plan() -> ModelPlan {
+        ModelPlan::compile(cnn::micro_net(), 1, 4, 0xF1EE7).unwrap()
+    }
+
+    #[test]
+    fn model_terms_pull_in_opposite_directions() {
+        let p = plan();
+        // Flaky power: failures dominate, so doubling the cadence
+        // must cost more re-execution than it saves in checkpoints.
+        let flaky = PowerTrace::periodic(20, 10, 50);
+        let m = CadenceModel::new(&p, &flaky, 16, 10);
+        assert!(m.score_pj(64) > m.score_pj(1));
+        // Steady power: failures are rare, so checkpointing every
+        // tile wastes MTJ writes vs a loose cadence.
+        let steady = PowerTrace::periodic(1_000_000, 10, 50);
+        let m = CadenceModel::new(&p, &steady, 16, 10);
+        assert!(m.score_pj(1) > m.score_pj(4));
+    }
+
+    #[test]
+    fn steadier_harvest_tunes_looser_cadence() {
+        let p = plan();
+        let flaky = PowerTrace::periodic(20, 10, 50);
+        let steady = PowerTrace::periodic(100_000, 10, 50);
+        let tight = tune_cadence(&p, &flaky, 16, 10);
+        let loose = tune_cadence(&p, &steady, 16, 10);
+        assert!(tight <= loose, "flaky {tight} vs steady {loose}");
+        assert!(tight >= 1);
+        assert!(loose <= p.total_tiles(16));
+    }
+
+    #[test]
+    fn cadence_respects_the_progress_cap() {
+        let p = plan();
+        // Mean on-interval of 4 tiles -> cap of 2: the tuner must not
+        // pick a cadence the harvest can rarely complete.
+        let trace = PowerTrace::periodic(40, 10, 50);
+        let m = CadenceModel::new(&p, &trace, 16, 10);
+        assert_eq!(m.progress_cap(), 2);
+        assert!(tune_cadence(&p, &trace, 16, 10) <= 2);
+    }
+
+    #[test]
+    fn tuning_is_deterministic() {
+        let p = plan();
+        let trace = PowerTrace::poisson(300.0, 40, 50_000, 11);
+        let a = tune_cadence(&p, &trace, 16, 10);
+        let b = tune_cadence(&p, &trace, 16, 10);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,38 @@
+//! Fleet-scale intermittent-edge simulation (DESIGN.md §11).
+//!
+//! The paper's motivating deployment is battery-less IoT nodes that
+//! "maintain computational forward-progress" across power loss; this
+//! module exercises that story at fleet scale. Hundreds to thousands
+//! of virtual edge nodes each own a real [`crate::engine::ResumableForward`]
+//! + [`crate::nvfa::NvStateStore`] pair and an independent harvested-power
+//! profile ([`crate::intermittency::TraceSpec`] — poisson, periodic,
+//! bursty, solar and RF-harvest day-night curves with seeded per-node
+//! jitter). A coordinator [`crate::coordinator::WorkQueue`] dispatches
+//! frames across nodes that blink in and out of power, pulling work
+//! back from nodes that stay dark too long or exhaust their harvest,
+//! so no admitted job is ever dropped.
+//!
+//! Each node auto-tunes its NV checkpoint cadence against its own
+//! harvest profile ([`tune_cadence`] — minimize expected
+//! re-execution energy + MTJ-write energy, the same analytic sweep
+//! shape as `LaneSchedule::auto`), and the run emits a BENCH-style
+//! [`FleetReport`] (goodput frames/s, per-node + aggregate
+//! `CostBreakdown`, re-execution ratio, checkpoint overhead) that is
+//! byte-reproducible for equal seeds — the CI fleet-smoke
+//! determinism gate. The `pims fleet` CLI verb drives all of this
+//! from a [`crate::apicfg::RunConfig`].
+
+mod cadence;
+mod report;
+mod sim;
+
+pub use cadence::{tune_cadence, CadenceModel};
+pub use report::{FleetReport, NodeStats};
+pub use sim::{run_fleet, FleetSpec};
+
+/// Default mixed harvest-profile set: one of each trace kind, so even
+/// a small fleet exercises steady, periodic, bursty, day-night solar
+/// and RF-burst nodes side by side.
+pub const DEFAULT_PROFILES: &str = "poisson:400:60,periodic:260:40,\
+                                    bursty:900:90:40:6:4,solar:600:80:16,\
+                                    rf:300:50:8";

@@ -1,0 +1,320 @@
+//! BENCH-style fleet report: one JSON document per run with the
+//! fleet's meta, goodput/energy notes, the aggregate cost table, and
+//! a per-node row set.
+//!
+//! Serialization is deliberately byte-reproducible: [`Json::Obj`]
+//! keys sort (BTreeMap), integers dump as integers, and every float
+//! is formatted through a fixed-precision string — so the CI
+//! fleet-smoke job can `cmp` two same-seed reports and treat any
+//! byte of drift as a determinism regression.
+
+use std::collections::BTreeMap;
+
+use crate::energy::CostBreakdown;
+use crate::jsonlite::Json;
+
+/// Lifetime counters and energy of one virtual node.
+#[derive(Debug, Clone)]
+pub struct NodeStats {
+    pub id: usize,
+    pub profile: String,
+    pub cadence: u64,
+    pub completed: u64,
+    pub failures: u64,
+    pub requeues: u64,
+    pub tiles_executed: u64,
+    pub tiles_reexecuted: u64,
+    pub checkpoints: u64,
+    pub restores: u64,
+    pub nv_bit_writes: u64,
+    pub cycles_on: u64,
+    pub cost: CostBreakdown,
+}
+
+/// Everything one fleet run reports.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    pub model: String,
+    pub w_bits: u32,
+    pub a_bits: u32,
+    pub seed: u64,
+    pub profiles: Vec<String>,
+    /// "auto" or the fixed tile count.
+    pub cadence: String,
+    pub requeue_after: u64,
+    pub tile_patches: usize,
+    pub cycles_per_tile: u64,
+    pub jobs: usize,
+    pub completed_jobs: usize,
+    pub unfinished_jobs: usize,
+    /// Admitted jobs lost by the coordinator — always 0 for a
+    /// correct run ([`crate::coordinator::WorkQueue::dropped`]).
+    pub dropped_jobs: usize,
+    pub requeues: u64,
+    pub failures: u64,
+    pub tiles_executed: u64,
+    pub tiles_reexecuted: u64,
+    pub slots: u64,
+    /// Simulated wall time [s] at the proposed design's cycle time.
+    pub sim_seconds: f64,
+    /// Completed frames per simulated second.
+    pub goodput_fps: f64,
+    /// Re-executed tiles / executed tiles.
+    pub reexec_ratio: f64,
+    /// nv_checkpoint energy / total energy.
+    pub ckpt_overhead: f64,
+    /// Aggregate energy/latency across all nodes.
+    pub cost: CostBreakdown,
+    /// FNV-1a over (job id, logits bits) of every completed frame —
+    /// one u64 that pins bit-identical fleet output.
+    pub logits_digest: u64,
+    pub nodes: Vec<NodeStats>,
+}
+
+fn num(v: u64) -> Json {
+    Json::Num(v as f64)
+}
+
+fn fixed(v: f64) -> Json {
+    Json::Str(format!("{v:.6}"))
+}
+
+fn cost_json(cost: &CostBreakdown) -> Json {
+    let rows = cost
+        .components()
+        .map(|(name, pj, ns)| {
+            let mut o = BTreeMap::new();
+            o.insert("component".to_string(), Json::Str(name.to_string()));
+            o.insert("energy_pj".to_string(), fixed(pj));
+            o.insert("latency_ns".to_string(), fixed(ns));
+            Json::Obj(o)
+        })
+        .collect();
+    Json::Arr(rows)
+}
+
+impl FleetReport {
+    pub fn to_json(&self) -> Json {
+        let mut meta = BTreeMap::new();
+        meta.insert("model".to_string(), Json::Str(self.model.clone()));
+        meta.insert("w_bits".to_string(), num(self.w_bits as u64));
+        meta.insert("a_bits".to_string(), num(self.a_bits as u64));
+        meta.insert("seed".to_string(), num(self.seed));
+        meta.insert(
+            "profiles".to_string(),
+            Json::Arr(
+                self.profiles
+                    .iter()
+                    .map(|p| Json::Str(p.clone()))
+                    .collect(),
+            ),
+        );
+        meta.insert("cadence".to_string(), Json::Str(self.cadence.clone()));
+        meta.insert("requeue_after".to_string(), num(self.requeue_after));
+        meta.insert(
+            "tile_patches".to_string(),
+            num(self.tile_patches as u64),
+        );
+        meta.insert(
+            "cycles_per_tile".to_string(),
+            num(self.cycles_per_tile),
+        );
+        meta.insert("nodes".to_string(), num(self.nodes.len() as u64));
+        meta.insert("jobs".to_string(), num(self.jobs as u64));
+
+        let mut notes = BTreeMap::new();
+        notes.insert(
+            "completed_jobs".to_string(),
+            num(self.completed_jobs as u64),
+        );
+        notes.insert(
+            "unfinished_jobs".to_string(),
+            num(self.unfinished_jobs as u64),
+        );
+        notes.insert(
+            "dropped_jobs".to_string(),
+            num(self.dropped_jobs as u64),
+        );
+        notes.insert("requeues".to_string(), num(self.requeues));
+        notes.insert("failures".to_string(), num(self.failures));
+        notes.insert(
+            "tiles_executed".to_string(),
+            num(self.tiles_executed),
+        );
+        notes.insert(
+            "tiles_reexecuted".to_string(),
+            num(self.tiles_reexecuted),
+        );
+        notes.insert("slots".to_string(), num(self.slots));
+        notes.insert("sim_seconds".to_string(), fixed(self.sim_seconds));
+        notes.insert("goodput_fps".to_string(), fixed(self.goodput_fps));
+        notes.insert(
+            "reexec_ratio".to_string(),
+            fixed(self.reexec_ratio),
+        );
+        notes.insert(
+            "ckpt_overhead".to_string(),
+            fixed(self.ckpt_overhead),
+        );
+        notes.insert(
+            "energy_uj".to_string(),
+            fixed(self.cost.energy_uj()),
+        );
+        notes.insert(
+            "logits_digest".to_string(),
+            Json::Str(format!("{:016x}", self.logits_digest)),
+        );
+
+        let node_rows = self
+            .nodes
+            .iter()
+            .map(|n| {
+                let mut o = BTreeMap::new();
+                o.insert("id".to_string(), num(n.id as u64));
+                o.insert(
+                    "profile".to_string(),
+                    Json::Str(n.profile.clone()),
+                );
+                o.insert("cadence".to_string(), num(n.cadence));
+                o.insert("completed".to_string(), num(n.completed));
+                o.insert("failures".to_string(), num(n.failures));
+                o.insert("requeues".to_string(), num(n.requeues));
+                o.insert(
+                    "tiles_executed".to_string(),
+                    num(n.tiles_executed),
+                );
+                o.insert(
+                    "tiles_reexecuted".to_string(),
+                    num(n.tiles_reexecuted),
+                );
+                o.insert("checkpoints".to_string(), num(n.checkpoints));
+                o.insert("restores".to_string(), num(n.restores));
+                o.insert(
+                    "nv_bit_writes".to_string(),
+                    num(n.nv_bit_writes),
+                );
+                o.insert("cycles_on".to_string(), num(n.cycles_on));
+                o.insert(
+                    "energy_uj".to_string(),
+                    fixed(n.cost.energy_uj()),
+                );
+                Json::Obj(o)
+            })
+            .collect();
+
+        let mut root = BTreeMap::new();
+        root.insert("group".to_string(), Json::Str("fleet".to_string()));
+        root.insert("meta".to_string(), Json::Obj(meta));
+        root.insert("notes".to_string(), Json::Obj(notes));
+        root.insert("cost".to_string(), cost_json(&self.cost));
+        root.insert("nodes".to_string(), Json::Arr(node_rows));
+        Json::Obj(root)
+    }
+
+    /// The serialized report (byte-reproducible for equal runs).
+    pub fn dump(&self) -> String {
+        self.to_json().dump()
+    }
+
+    /// Human summary for the CLI.
+    pub fn summary(&self) -> String {
+        format!(
+            "fleet: {} nodes, {} jobs -> {} completed \
+             ({} unfinished, {} dropped)\n\
+             goodput {:.1} frames/s | failures {} | requeues {} | \
+             reexec ratio {:.4} | ckpt overhead {:.4}\n\
+             energy {:.3} uJ | logits digest {:016x}",
+            self.nodes.len(),
+            self.jobs,
+            self.completed_jobs,
+            self.unfinished_jobs,
+            self.dropped_jobs,
+            self.goodput_fps,
+            self.failures,
+            self.requeues,
+            self.reexec_ratio,
+            self.ckpt_overhead,
+            self.cost.energy_uj(),
+            self.logits_digest,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::components;
+
+    fn report() -> FleetReport {
+        let mut cost = CostBreakdown::new();
+        cost.add(components::TILE_EXECUTION, 1000.0, 50.0);
+        FleetReport {
+            model: "micro".to_string(),
+            w_bits: 1,
+            a_bits: 4,
+            seed: 42,
+            profiles: vec!["poisson".to_string(), "solar".to_string()],
+            cadence: "auto".to_string(),
+            requeue_after: 64,
+            tile_patches: 16,
+            cycles_per_tile: 10,
+            jobs: 4,
+            completed_jobs: 4,
+            unfinished_jobs: 0,
+            dropped_jobs: 0,
+            requeues: 1,
+            failures: 3,
+            tiles_executed: 30,
+            tiles_reexecuted: 6,
+            slots: 100,
+            sim_seconds: 1.1e-6,
+            goodput_fps: 3_636_363.0,
+            reexec_ratio: 0.2,
+            ckpt_overhead: 0.01,
+            cost: cost.clone(),
+            logits_digest: 0xDEAD_BEEF,
+            nodes: vec![NodeStats {
+                id: 0,
+                profile: "poisson".to_string(),
+                cadence: 2,
+                completed: 4,
+                failures: 3,
+                requeues: 1,
+                tiles_executed: 30,
+                tiles_reexecuted: 6,
+                checkpoints: 12,
+                restores: 3,
+                nv_bit_writes: 4096,
+                cycles_on: 300,
+                cost,
+            }],
+        }
+    }
+
+    #[test]
+    fn report_round_trips_through_jsonlite() {
+        let r = report();
+        let text = r.dump();
+        let j = Json::parse(&text).unwrap();
+        assert_eq!(j.get("group").unwrap().as_str().unwrap(), "fleet");
+        let notes = j.get("notes").unwrap();
+        assert_eq!(
+            notes.get("completed_jobs").unwrap().as_f64().unwrap(),
+            4.0
+        );
+        assert_eq!(
+            notes.get("logits_digest").unwrap().as_str().unwrap(),
+            "00000000deadbeef"
+        );
+        assert_eq!(
+            j.get("nodes").unwrap().as_arr().unwrap().len(),
+            1
+        );
+        assert_eq!(
+            j.get("meta").unwrap().get("nodes").unwrap().as_f64(),
+            Some(1.0)
+        );
+        // Serialization is stable: dump(parse(dump)) == dump.
+        assert_eq!(Json::parse(&text).unwrap().dump(), text);
+    }
+}

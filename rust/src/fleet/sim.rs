@@ -1,0 +1,700 @@
+//! The fleet simulator: N virtual edge nodes, each a real
+//! [`ResumableForward`] + [`NvStateStore`] pair under its own harvest
+//! trace, with a coordinator [`WorkQueue`] dispatching frames across
+//! nodes that blink in and out of power.
+//!
+//! Time advances in **slots** of `cycles_per_tile` harvested cycles.
+//! Each slot, every node (in id order — the determinism guarantee)
+//! consumes one slot of its power trace: a powered node restores or
+//! resumes its engine, pulls a job if idle, executes one tile, and
+//! checkpoints at its cadence; a node going dark loses its volatile
+//! engine state (the power failure); a node dark for `requeue_after`
+//! consecutive slots, or whose trace is exhausted, has its job pulled
+//! back to the queue tail and re-dispatched cold elsewhere. No job is
+//! ever dropped: at any instant every admitted job is completed,
+//! queued, or in flight on exactly one node
+//! ([`WorkQueue::dropped`] stays zero).
+//!
+//! The repo invariant holds per frame: a completed job's logits are
+//! checked bit-identical against [`ModelPlan::reference_logits`]
+//! (the uninterrupted dense oracle) no matter how many outages and
+//! node migrations the frame suffered; `run_fleet` fails hard on any
+//! divergence.
+
+use anyhow::Result;
+
+use crate::accel::{
+    charge_inter_lane_merge, charge_nv_checkpoint, Proposed,
+};
+use crate::arch::{HTree, LaneTraffic};
+use crate::cli::CadenceArg;
+use crate::coordinator::WorkQueue;
+use crate::dataset::{self, Dataset};
+use crate::device::SotCosts;
+use crate::energy::{components, CostBreakdown};
+use crate::engine::{
+    ModelPlan, ResumableForward, TileScheduler, SNAPSHOT_HEADER_WORDS,
+};
+use crate::intermittency::{PowerInterval, PowerTrace, TraceSpec};
+use crate::nvfa::NvStateStore;
+use crate::subarray::OpLedger;
+
+use super::cadence::tune_cadence;
+use super::report::{FleetReport, NodeStats};
+
+/// Declarative description of one fleet run.
+#[derive(Debug, Clone)]
+pub struct FleetSpec {
+    /// Virtual edge nodes.
+    pub nodes: usize,
+    /// Frames admitted to the coordinator queue.
+    pub jobs: usize,
+    /// Harvest profiles, assigned round-robin (`node i` gets
+    /// `profiles[i % len]` reseeded with a per-node jitter seed).
+    pub profiles: Vec<TraceSpec>,
+    /// Checkpoint cadence: fixed tiles, or per-node auto-tuning.
+    pub cadence: CadenceArg,
+    /// Consecutive dark slots before the coordinator pulls a node's
+    /// job back to the queue (0 = sticky: only trace exhaustion
+    /// re-queues).
+    pub requeue_after: u64,
+    /// Patch rows per execution tile.
+    pub tile_patches: usize,
+    /// Harvested cycles one tile costs (the slot width).
+    pub cycles_per_tile: u64,
+    /// Master seed: images, per-node trace jitter.
+    pub seed: u64,
+}
+
+impl FleetSpec {
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.nodes >= 1, "fleet needs at least one node");
+        anyhow::ensure!(self.jobs >= 1, "fleet needs at least one job");
+        anyhow::ensure!(
+            !self.profiles.is_empty(),
+            "fleet needs at least one harvest profile"
+        );
+        anyhow::ensure!(
+            self.tile_patches >= 1,
+            "tile_patches must be >= 1"
+        );
+        anyhow::ensure!(
+            self.cycles_per_tile >= 1,
+            "cycles_per_tile must be >= 1"
+        );
+        if let CadenceArg::Fixed(k) = self.cadence {
+            anyhow::ensure!(k >= 1, "checkpoint cadence must be >= 1");
+        }
+        Ok(())
+    }
+}
+
+/// What one trace slot offers a node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SlotState {
+    Powered,
+    Dark,
+    Exhausted,
+}
+
+/// Walks a materialized [`PowerTrace`] in tile-sized slots: each
+/// on-interval yields `on / cycles_per_slot` powered slots (a tile
+/// needs a full slot of power), then the on-remainder plus the outage
+/// round up to dark slots. Past the last interval the node is
+/// exhausted for good.
+struct PowerCursor {
+    intervals: Vec<PowerInterval>,
+    idx: usize,
+    on_slots: u64,
+    off_slots: u64,
+    cycles_per_slot: u64,
+}
+
+impl PowerCursor {
+    fn new(trace: PowerTrace, cycles_per_slot: u64) -> PowerCursor {
+        let mut c = PowerCursor {
+            intervals: trace.intervals,
+            idx: 0,
+            on_slots: 0,
+            off_slots: 0,
+            cycles_per_slot,
+        };
+        c.load();
+        c
+    }
+
+    fn load(&mut self) {
+        if let Some(iv) = self.intervals.get(self.idx) {
+            self.on_slots = iv.on_cycles / self.cycles_per_slot;
+            let tail =
+                iv.on_cycles % self.cycles_per_slot + iv.off_cycles;
+            self.off_slots = tail.div_ceil(self.cycles_per_slot);
+        }
+    }
+
+    fn next(&mut self) -> SlotState {
+        loop {
+            if self.idx >= self.intervals.len() {
+                return SlotState::Exhausted;
+            }
+            if self.on_slots > 0 {
+                self.on_slots -= 1;
+                return SlotState::Powered;
+            }
+            if self.off_slots > 0 {
+                self.off_slots -= 1;
+                return SlotState::Dark;
+            }
+            self.idx += 1;
+            self.load();
+        }
+    }
+
+    /// Total slots this cursor can ever yield (the safety horizon).
+    fn total_slots(&self) -> u64 {
+        let c = self.cycles_per_slot;
+        self.intervals
+            .iter()
+            .map(|iv| {
+                iv.on_cycles / c
+                    + (iv.on_cycles % c + iv.off_cycles).div_ceil(c)
+            })
+            .sum()
+    }
+}
+
+/// One virtual edge node: its harvest cursor, tuned cadence, the
+/// in-flight (engine, job, NV store) triple, and lifetime counters.
+struct Node<'p> {
+    id: usize,
+    profile: &'static str,
+    cursor: PowerCursor,
+    cadence: u64,
+    powered: bool,
+    engine: Option<ResumableForward<'p>>,
+    job: Option<usize>,
+    store: NvStateStore,
+    /// (layer, raw words) of the last commit — incremental-charge
+    /// state, exactly the single-node driver's convention.
+    committed: (usize, usize),
+    tiles_since_ckpt: u64,
+    /// Tiles of the in-flight job whose results live in this node
+    /// (volatile engine + NV store); all discarded on re-queue.
+    tiles_in_state: u64,
+    dark_slots: u64,
+    completed: u64,
+    failures: u64,
+    requeues: u64,
+    tiles_executed: u64,
+    tiles_reexecuted: u64,
+    checkpoints: u64,
+    restores: u64,
+    nv_bit_writes: u64,
+    cycles_on: u64,
+    ledger: OpLedger,
+    traffic: LaneTraffic,
+}
+
+/// Incremental checkpoint commit — same fresh-word accounting as the
+/// single-node driver: same layer re-commits only the raw delta, a
+/// new layer commits its full raw buffer, header always charged.
+fn commit_checkpoint(
+    rf: &ResumableForward<'_>,
+    store: &mut NvStateStore,
+    committed: &mut (usize, usize),
+) {
+    let pos = rf.position();
+    let fresh = if pos.layer == committed.0 {
+        rf.raw_len().saturating_sub(committed.1)
+    } else {
+        rf.raw_len()
+    };
+    store.checkpoint(&rf.snapshot(), SNAPSHOT_HEADER_WORDS + fresh);
+    *committed = (pos.layer, rf.raw_len());
+}
+
+impl<'p> Node<'p> {
+    /// Power failure: the volatile engine dies; tiles since the last
+    /// checkpoint are lost and will re-execute from NV state.
+    fn fail_volatile(&mut self) {
+        if let Some(rf) = self.engine.take() {
+            self.failures += 1;
+            self.ledger.merge(rf.ledger());
+            self.traffic.merge(rf.traffic());
+            self.tiles_reexecuted += self.tiles_since_ckpt;
+            self.tiles_in_state -= self.tiles_since_ckpt;
+            self.tiles_since_ckpt = 0;
+        }
+    }
+
+    /// Coordinator pulls the job back (dark too long, or trace
+    /// exhausted): ALL of this node's progress on the job — volatile
+    /// and NV-durable — is discarded, and the job re-dispatches cold.
+    fn abandon_job(&mut self, queue: &mut WorkQueue) {
+        if let Some(rf) = self.engine.take() {
+            self.ledger.merge(rf.ledger());
+            self.traffic.merge(rf.traffic());
+        }
+        if let Some(j) = self.job.take() {
+            queue.requeue(j);
+            self.requeues += 1;
+            self.tiles_reexecuted += self.tiles_in_state;
+            self.tiles_in_state = 0;
+            self.tiles_since_ckpt = 0;
+            self.flush_store();
+        }
+    }
+
+    /// Fold the per-job NV store counters into lifetime totals and
+    /// hand the next job a fresh store.
+    fn flush_store(&mut self) {
+        self.checkpoints += self.store.checkpoints;
+        self.restores += self.store.restores;
+        self.nv_bit_writes += self.store.nv_bit_writes;
+        self.store = NvStateStore::new();
+        self.committed = (usize::MAX, 0);
+    }
+
+    /// Power is back: resume from the NV checkpoint if one exists,
+    /// else begin the job cold.
+    fn wake(
+        &mut self,
+        plan: &'p ModelPlan,
+        sched: &TileScheduler,
+        images: &Dataset,
+        tile_patches: usize,
+    ) -> Result<()> {
+        let j = self.job.expect("wake requires an assigned job");
+        if self.store.has_checkpoint() {
+            let words = self.store.restore().expect("checkpoint present");
+            let rf = ResumableForward::resume(plan, sched, &words)?;
+            self.tiles_in_state = rf.tiles_done();
+            self.engine = Some(rf);
+        } else {
+            self.committed = (usize::MAX, 0);
+            self.tiles_in_state = 0;
+            self.engine = Some(ResumableForward::begin(
+                plan,
+                images.image(j),
+                tile_patches,
+                sched,
+            ));
+        }
+        self.tiles_since_ckpt = 0;
+        Ok(())
+    }
+
+    /// Execute one tile; checkpoint at the cadence; on completion,
+    /// verify against the uninterrupted reference and retire the job.
+    fn run_tile(
+        &mut self,
+        plan: &'p ModelPlan,
+        queue: &mut WorkQueue,
+        results: &mut [Option<Vec<f32>>],
+        images: &Dataset,
+    ) -> Result<()> {
+        let rf = self.engine.as_mut().expect("powered node has engine");
+        rf.step_tile();
+        self.tiles_executed += 1;
+        self.tiles_in_state += 1;
+        self.tiles_since_ckpt += 1;
+        if !rf.is_done() {
+            if self.tiles_since_ckpt >= self.cadence {
+                commit_checkpoint(
+                    self.engine.as_ref().expect("engine"),
+                    &mut self.store,
+                    &mut self.committed,
+                );
+                self.tiles_since_ckpt = 0;
+            }
+            return Ok(());
+        }
+        let rf = self.engine.take().expect("engine");
+        // Final durability checkpoint, deduplicated exactly like the
+        // single-node driver: skip it when the last periodic commit
+        // already covers the finished state.
+        if self.tiles_since_ckpt > 0 || !self.store.has_checkpoint() {
+            commit_checkpoint(&rf, &mut self.store, &mut self.committed);
+        }
+        self.tiles_since_ckpt = 0;
+        let logits =
+            rf.logits().expect("finished pass yields logits").to_vec();
+        self.ledger.merge(rf.ledger());
+        self.traffic.merge(rf.traffic());
+        let j = self.job.take().expect("finished node has a job");
+        let reference = plan.reference_logits(images.image(j));
+        anyhow::ensure!(
+            logits == reference,
+            "fleet node {} job {j}: logits diverged from the \
+             uninterrupted reference",
+            self.id
+        );
+        results[j] = Some(logits);
+        queue.complete();
+        self.completed += 1;
+        self.tiles_in_state = 0;
+        self.flush_store();
+        Ok(())
+    }
+}
+
+/// FNV-1a over one byte.
+fn fnv1a(acc: u64, byte: u8) -> u64 {
+    (acc ^ byte as u64).wrapping_mul(0x100_0000_01b3)
+}
+
+/// Run a fleet to completion (or until every trace is exhausted).
+///
+/// Deterministic end to end: equal (plan, spec) pairs produce
+/// byte-identical [`FleetReport::dump`] output — the CI fleet-smoke
+/// determinism gate.
+pub fn run_fleet(plan: &ModelPlan, spec: &FleetSpec) -> Result<FleetReport> {
+    spec.validate()?;
+    let sched = TileScheduler::new(1);
+    let tiles_per_job = plan.total_tiles(spec.tile_patches).max(1);
+    let job_cycles = tiles_per_job * spec.cycles_per_tile;
+    // Generous per-node harvest horizon: ~8x the node's fair share of
+    // frames, so open-horizon profiles never starve the fleet even
+    // when finite (bursty) nodes exhaust early and shed their work.
+    let share = (spec.jobs as u64).div_ceil(spec.nodes as u64) + 2;
+    let budget = share * job_cycles * 8;
+    let images = dataset::generate(
+        spec.jobs,
+        plan.model().input_hw,
+        plan.model().input_c,
+        spec.seed,
+    );
+
+    let mut nodes: Vec<Node<'_>> = Vec::with_capacity(spec.nodes);
+    for i in 0..spec.nodes {
+        let profile = &spec.profiles[i % spec.profiles.len()];
+        let node_seed = spec
+            .seed
+            .wrapping_add(0x9E37_79B9_7F4A_7C15u64.wrapping_mul(i as u64 + 1));
+        let trace = profile.with_seed(node_seed).build(budget);
+        let cadence = match spec.cadence {
+            CadenceArg::Fixed(k) => k.min(tiles_per_job),
+            CadenceArg::Auto => tune_cadence(
+                plan,
+                &trace,
+                spec.tile_patches,
+                spec.cycles_per_tile,
+            ),
+        };
+        nodes.push(Node {
+            id: i,
+            profile: profile.kind(),
+            cursor: PowerCursor::new(trace, spec.cycles_per_tile),
+            cadence,
+            powered: false,
+            engine: None,
+            job: None,
+            store: NvStateStore::new(),
+            committed: (usize::MAX, 0),
+            tiles_since_ckpt: 0,
+            tiles_in_state: 0,
+            dark_slots: 0,
+            completed: 0,
+            failures: 0,
+            requeues: 0,
+            tiles_executed: 0,
+            tiles_reexecuted: 0,
+            checkpoints: 0,
+            restores: 0,
+            nv_bit_writes: 0,
+            cycles_on: 0,
+            ledger: OpLedger::default(),
+            traffic: LaneTraffic::default(),
+        });
+    }
+
+    let mut queue = WorkQueue::new();
+    queue.admit(spec.jobs);
+    let mut results: Vec<Option<Vec<f32>>> = vec![None; spec.jobs];
+
+    let max_slots: u64 = nodes
+        .iter()
+        .map(|n| n.cursor.total_slots())
+        .sum::<u64>()
+        + spec.jobs as u64
+        + 64;
+    let mut slots = 0u64;
+    while queue.completed() < spec.jobs && slots < max_slots {
+        let mut any_alive = false;
+        for node in nodes.iter_mut() {
+            match node.cursor.next() {
+                SlotState::Exhausted => {
+                    // Harvest is gone for good: shed the job so a
+                    // live node can finish it. Idempotent afterwards.
+                    node.powered = false;
+                    node.abandon_job(&mut queue);
+                }
+                SlotState::Dark => {
+                    any_alive = true;
+                    if node.powered {
+                        node.powered = false;
+                        node.dark_slots = 0;
+                        node.fail_volatile();
+                    }
+                    if node.job.is_some() {
+                        node.dark_slots += 1;
+                        if spec.requeue_after > 0
+                            && node.dark_slots >= spec.requeue_after
+                        {
+                            node.abandon_job(&mut queue);
+                        }
+                    }
+                }
+                SlotState::Powered => {
+                    any_alive = true;
+                    node.powered = true;
+                    node.cycles_on += spec.cycles_per_tile;
+                    if node.job.is_none() {
+                        if let Some(j) = queue.take() {
+                            node.job = Some(j);
+                            node.dark_slots = 0;
+                        }
+                    }
+                    if node.job.is_some() && node.engine.is_none() {
+                        node.wake(
+                            plan,
+                            &sched,
+                            &images,
+                            spec.tile_patches,
+                        )?;
+                    }
+                    if node.engine.is_some() {
+                        node.run_tile(
+                            plan,
+                            &mut queue,
+                            &mut results,
+                            &images,
+                        )?;
+                    }
+                }
+            }
+        }
+        if !any_alive {
+            break;
+        }
+        slots += 1;
+    }
+    // Anything still on a node goes back to the queue as unfinished —
+    // conservation, never silent loss.
+    for node in nodes.iter_mut() {
+        node.abandon_job(&mut queue);
+    }
+
+    // Per-node and aggregate cost assembly, single-node conventions:
+    // row ops as tile_execution, MTJ writes as nv_checkpoint, H-tree
+    // traffic as inter_lane_merge (zero under serial lanes, but the
+    // component line is always present).
+    let costs = SotCosts::default();
+    let htree = HTree::default();
+    let mut total_cost = CostBreakdown::new();
+    let mut total_exec = 0u64;
+    let mut total_reexec = 0u64;
+    let mut total_failures = 0u64;
+    let mut node_stats = Vec::with_capacity(nodes.len());
+    for n in &nodes {
+        let mut cost = CostBreakdown::new();
+        cost.add(
+            components::TILE_EXECUTION,
+            n.ledger.energy_pj(&costs),
+            n.ledger.latency_ns(&costs),
+        );
+        charge_nv_checkpoint(&mut cost, n.nv_bit_writes);
+        charge_inter_lane_merge(&mut cost, &n.traffic, &htree);
+        total_cost.merge(&cost);
+        total_exec += n.tiles_executed;
+        total_reexec += n.tiles_reexecuted;
+        total_failures += n.failures;
+        node_stats.push(NodeStats {
+            id: n.id,
+            profile: n.profile.to_string(),
+            cadence: n.cadence,
+            completed: n.completed,
+            failures: n.failures,
+            requeues: n.requeues,
+            tiles_executed: n.tiles_executed,
+            tiles_reexecuted: n.tiles_reexecuted,
+            checkpoints: n.checkpoints,
+            restores: n.restores,
+            nv_bit_writes: n.nv_bit_writes,
+            cycles_on: n.cycles_on,
+            cost,
+        });
+    }
+
+    let completed_jobs = queue.completed();
+    let sim_seconds = slots as f64
+        * spec.cycles_per_tile as f64
+        * Proposed::default().cycle_ns
+        * 1e-9;
+    let goodput_fps = if sim_seconds > 0.0 {
+        completed_jobs as f64 / sim_seconds
+    } else {
+        0.0
+    };
+    let total_pj = total_cost.energy_uj() * 1e6;
+    let ckpt_pj = total_cost
+        .component(components::NV_CHECKPOINT)
+        .map(|(e, _)| e)
+        .unwrap_or(0.0);
+
+    let mut digest = 0xcbf2_9ce4_8422_2325u64;
+    for (j, r) in results.iter().enumerate() {
+        if let Some(logits) = r {
+            for b in (j as u64).to_le_bytes() {
+                digest = fnv1a(digest, b);
+            }
+            for v in logits {
+                for b in v.to_bits().to_le_bytes() {
+                    digest = fnv1a(digest, b);
+                }
+            }
+        }
+    }
+
+    Ok(FleetReport {
+        model: plan.model_name().to_string(),
+        w_bits: plan.bit_widths().0,
+        a_bits: plan.bit_widths().1,
+        seed: spec.seed,
+        profiles: spec.profiles.iter().map(|p| p.kind().to_string()).collect(),
+        cadence: match spec.cadence {
+            CadenceArg::Auto => "auto".to_string(),
+            CadenceArg::Fixed(k) => k.to_string(),
+        },
+        requeue_after: spec.requeue_after,
+        tile_patches: spec.tile_patches,
+        cycles_per_tile: spec.cycles_per_tile,
+        jobs: spec.jobs,
+        completed_jobs,
+        unfinished_jobs: queue.pending(),
+        dropped_jobs: queue.dropped(0),
+        requeues: queue.requeues(),
+        failures: total_failures,
+        tiles_executed: total_exec,
+        tiles_reexecuted: total_reexec,
+        slots,
+        sim_seconds,
+        goodput_fps,
+        reexec_ratio: if total_exec > 0 {
+            total_reexec as f64 / total_exec as f64
+        } else {
+            0.0
+        },
+        ckpt_overhead: if total_pj > 0.0 { ckpt_pj / total_pj } else { 0.0 },
+        cost: total_cost,
+        logits_digest: digest,
+        nodes: node_stats,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn;
+    use crate::fleet::DEFAULT_PROFILES;
+
+    fn mixed_profiles() -> Vec<TraceSpec> {
+        DEFAULT_PROFILES
+            .split(',')
+            .map(|s| TraceSpec::parse(s).unwrap())
+            .collect()
+    }
+
+    fn small_spec() -> FleetSpec {
+        FleetSpec {
+            nodes: 8,
+            jobs: 24,
+            profiles: mixed_profiles(),
+            cadence: CadenceArg::Auto,
+            requeue_after: 16,
+            tile_patches: 16,
+            cycles_per_tile: 10,
+            seed: 42,
+        }
+    }
+
+    #[test]
+    fn small_fleet_completes_every_admitted_job() {
+        let plan =
+            ModelPlan::compile(cnn::micro_net(), 1, 4, 0xF1EE7).unwrap();
+        let r = run_fleet(&plan, &small_spec()).unwrap();
+        assert_eq!(r.completed_jobs, 24);
+        assert_eq!(r.unfinished_jobs, 0);
+        assert_eq!(r.dropped_jobs, 0);
+        // Outages actually happened and the fleet survived them.
+        assert!(r.failures > 0, "mixed profiles must cause outages");
+        assert!(r.goodput_fps > 0.0);
+        // Energy components all present.
+        for c in [
+            components::TILE_EXECUTION,
+            components::NV_CHECKPOINT,
+            components::INTER_LANE_MERGE,
+        ] {
+            assert!(r.cost.component(c).is_some(), "missing {c}");
+        }
+    }
+
+    #[test]
+    fn fleet_runs_are_byte_identical() {
+        let plan =
+            ModelPlan::compile(cnn::micro_net(), 1, 4, 0xF1EE7).unwrap();
+        let a = run_fleet(&plan, &small_spec()).unwrap();
+        let b = run_fleet(&plan, &small_spec()).unwrap();
+        assert_eq!(a.logits_digest, b.logits_digest);
+        assert_eq!(a.dump(), b.dump(), "fleet report must be reproducible");
+        // A different seed gives a genuinely different fleet.
+        let mut other = small_spec();
+        other.seed = 43;
+        let c = run_fleet(&plan, &other).unwrap();
+        assert_ne!(a.logits_digest, c.logits_digest);
+    }
+
+    #[test]
+    fn sticky_nodes_still_finish_via_nv_restore() {
+        // requeue_after = 0: jobs never migrate; completion relies
+        // entirely on NV checkpoint + restore across outages.
+        let plan =
+            ModelPlan::compile(cnn::micro_net(), 1, 4, 0xF1EE7).unwrap();
+        let mut spec = small_spec();
+        spec.requeue_after = 0;
+        spec.profiles = vec![TraceSpec::parse("periodic:90:30").unwrap()];
+        let r = run_fleet(&plan, &spec).unwrap();
+        assert_eq!(r.completed_jobs, 24);
+        assert_eq!(r.dropped_jobs, 0);
+        let restores: u64 =
+            r.nodes.iter().map(|n| n.restores).sum();
+        assert!(restores > 0, "9-tile intervals must force NV restores");
+    }
+
+    #[test]
+    fn spec_validation_rejects_degenerate_fleets() {
+        let ok = small_spec();
+        for (field, bad) in [
+            ("nodes", FleetSpec { nodes: 0, ..ok.clone() }),
+            ("jobs", FleetSpec { jobs: 0, ..ok.clone() }),
+            (
+                "profiles",
+                FleetSpec { profiles: vec![], ..ok.clone() },
+            ),
+            (
+                "cadence",
+                FleetSpec {
+                    cadence: CadenceArg::Fixed(0),
+                    ..ok.clone()
+                },
+            ),
+            (
+                "cycles",
+                FleetSpec { cycles_per_tile: 0, ..ok.clone() },
+            ),
+        ] {
+            assert!(bad.validate().is_err(), "{field} must be rejected");
+        }
+        assert!(ok.validate().is_ok());
+    }
+}

@@ -4,7 +4,8 @@
 //! unpredictably. This module provides:
 //!
 //! * [`PowerTrace`] — on/off interval generators (Poisson, periodic,
-//!   bursty) with deterministic seeding;
+//!   bursty, plus solar and RF-harvest day-night curves) with
+//!   deterministic seeding;
 //! * [`run_intermittent`] — executes a frame workload on an
 //!   [`NvAccumulator`]-backed datapath under a trace, modeling loss
 //!   and recovery exactly as Fig. 7b's timing diagram shows;
@@ -87,6 +88,75 @@ impl PowerTrace {
         PowerTrace { intervals }
     }
 
+    /// Solar harvesting day-night curve. A day is `day_slots` equal
+    /// harvest slots: daylight (the first half) follows a half-sine
+    /// irradiance curve peaking at `peak_on` cycles per slot, night
+    /// yields only a trickle (`peak_on / 64`, at least 1 cycle, so
+    /// the budget loop always terminates). Seeded per-slot jitter
+    /// (+/-15%) models cloud cover. Days repeat until at least
+    /// `total_on_cycles` of useful power have been emitted.
+    pub fn solar(
+        peak_on: u64,
+        off_cycles: u64,
+        day_slots: usize,
+        total_on_cycles: u64,
+        seed: u64,
+    ) -> Self {
+        let day_slots = day_slots.max(2);
+        let trickle = (peak_on / 64).max(1);
+        let mut rng = Pcg32::seeded(seed);
+        let mut intervals = Vec::new();
+        let mut acc = 0u64;
+        let mut slot = 0usize;
+        while acc < total_on_cycles {
+            let frac = (slot % day_slots) as f64 / day_slots as f64;
+            let irradiance = if frac < 0.5 {
+                (std::f64::consts::PI * frac / 0.5).sin()
+            } else {
+                0.0
+            };
+            let jitter = rng.uniform(0.85, 1.15);
+            let on = ((peak_on as f64 * irradiance * jitter) as u64)
+                .max(trickle);
+            intervals.push(PowerInterval { on_cycles: on, off_cycles });
+            acc += on;
+            slot += 1;
+        }
+        PowerTrace { intervals }
+    }
+
+    /// RF harvesting: short exponentially-distributed energy bursts
+    /// (mean `mean_on` cycles, at least 1 per interval) separated by
+    /// fixed outages; every `burst`-th interval the source moves out
+    /// of range and the outage quadruples. Repeats until at least
+    /// `total_on_cycles` of useful power have been emitted.
+    pub fn rf_harvest(
+        mean_on: f64,
+        off_cycles: u64,
+        burst: u64,
+        total_on_cycles: u64,
+        seed: u64,
+    ) -> Self {
+        let mean_on = mean_on.max(1.0);
+        let burst = burst.max(1);
+        let mut rng = Pcg32::seeded(seed);
+        let mut intervals = Vec::new();
+        let mut acc = 0u64;
+        let mut n = 0u64;
+        while acc < total_on_cycles {
+            let on = rng.exponential(1.0 / mean_on).ceil().max(1.0) as u64;
+            n += 1;
+            let off = if n % burst == 0 {
+                off_cycles * 4
+            } else {
+                off_cycles
+            };
+            intervals.push(PowerInterval { on_cycles: on, off_cycles: off });
+            acc += on;
+        }
+        PowerTrace { intervals }
+    }
+
     pub fn total_on_cycles(&self) -> u64 {
         self.intervals.iter().map(|i| i.on_cycles).sum()
     }
@@ -102,6 +172,8 @@ impl PowerTrace {
 /// * `poisson:<mean-on>:<off>[:<seed>]`
 /// * `periodic:<on>:<off>[:<count>]`
 /// * `bursty:<good-on>:<bad-on>:<off>[:<epochs>:<per-epoch>]`
+/// * `solar:<peak-on>:<off>[:<day-slots>[:<seed>]]`
+/// * `rf:<mean-on>:<off>[:<burst>[:<seed>]]`
 ///
 /// All quantities are cycles of the consuming workload (array cycles
 /// for intermittent inference, batch executions for chaos mode).
@@ -116,23 +188,31 @@ pub enum TraceSpec {
         epochs: usize,
         per_epoch: usize,
     },
+    Solar { peak_on: u64, off: u64, day_slots: usize, seed: u64 },
+    Rf { mean_on: f64, off: u64, burst: u64, seed: u64 },
 }
 
 impl TraceSpec {
     pub fn parse(s: &str) -> anyhow::Result<TraceSpec> {
         let parts: Vec<&str> = s.split(':').collect();
         let int = |i: usize, what: &str| -> anyhow::Result<u64> {
-            parts
+            let v = parts
                 .get(i)
-                .ok_or_else(|| anyhow::anyhow!("{s}: missing {what}"))?
-                .parse()
-                .map_err(|_| anyhow::anyhow!("{s}: bad {what}"))
+                .ok_or_else(|| anyhow::anyhow!("{s}: missing {what}"))?;
+            v.parse().map_err(|_| {
+                anyhow::anyhow!(
+                    "{s}: bad {what} '{v}' (want a non-negative integer)"
+                )
+            })
         };
         let opt_int = |i: usize, what: &str| -> anyhow::Result<Option<u64>> {
             match parts.get(i) {
                 None => Ok(None),
                 Some(v) => Ok(Some(v.parse().map_err(|_| {
-                    anyhow::anyhow!("{s}: bad {what}")
+                    anyhow::anyhow!(
+                        "{s}: bad {what} '{v}' \
+                         (want a non-negative integer)"
+                    )
                 })?)),
             }
         };
@@ -151,11 +231,13 @@ impl TraceSpec {
                 anyhow::ensure!(parts.len() <= 4, "{s}: too many fields");
                 let on = int(1, "on")?;
                 anyhow::ensure!(on >= 1, "{s}: on must be >= 1");
-                Ok(TraceSpec::Periodic {
-                    on,
-                    off: int(2, "off")?,
-                    count: opt_int(3, "count")?.map(|c| c as usize),
-                })
+                let count = opt_int(3, "count")?.map(|c| c as usize);
+                anyhow::ensure!(
+                    count != Some(0),
+                    "{s}: count must be >= 1 \
+                     (omit the field for an open horizon)"
+                );
+                Ok(TraceSpec::Periodic { on, off: int(2, "off")?, count })
             }
             "bursty" => {
                 anyhow::ensure!(parts.len() <= 6, "{s}: too many fields");
@@ -165,17 +247,56 @@ impl TraceSpec {
                     good_on >= 1 && bad_on >= 1,
                     "{s}: on-times must be >= 1"
                 );
+                let epochs = opt_int(4, "epochs")?.unwrap_or(4) as usize;
+                let per_epoch =
+                    opt_int(5, "per-epoch")?.unwrap_or(2) as usize;
+                anyhow::ensure!(
+                    epochs >= 1 && per_epoch >= 1,
+                    "{s}: empty burst window \
+                     (epochs and per-epoch must be >= 1)"
+                );
                 Ok(TraceSpec::Bursty {
                     good_on,
                     bad_on,
                     off: int(3, "off")?,
-                    epochs: opt_int(4, "epochs")?.unwrap_or(4) as usize,
-                    per_epoch: opt_int(5, "per-epoch")?.unwrap_or(2)
-                        as usize,
+                    epochs,
+                    per_epoch,
+                })
+            }
+            "solar" => {
+                anyhow::ensure!(parts.len() <= 5, "{s}: too many fields");
+                let peak_on = int(1, "peak-on")?;
+                anyhow::ensure!(peak_on >= 1, "{s}: peak-on must be >= 1");
+                let day_slots =
+                    opt_int(3, "day-slots")?.unwrap_or(16) as usize;
+                anyhow::ensure!(
+                    day_slots >= 2,
+                    "{s}: day-slots must be >= 2 \
+                     (a day needs both light and dark)"
+                );
+                Ok(TraceSpec::Solar {
+                    peak_on,
+                    off: int(2, "off")?,
+                    day_slots,
+                    seed: opt_int(4, "seed")?.unwrap_or(7),
+                })
+            }
+            "rf" => {
+                anyhow::ensure!(parts.len() <= 5, "{s}: too many fields");
+                let mean_on = int(1, "mean-on")? as f64;
+                anyhow::ensure!(mean_on >= 1.0, "{s}: mean-on must be >= 1");
+                let burst = opt_int(3, "burst")?.unwrap_or(8);
+                anyhow::ensure!(burst >= 1, "{s}: burst must be >= 1");
+                Ok(TraceSpec::Rf {
+                    mean_on,
+                    off: int(2, "off")?,
+                    burst,
+                    seed: opt_int(4, "seed")?.unwrap_or(7),
                 })
             }
             other => anyhow::bail!(
-                "unknown trace kind '{other}' (poisson|periodic|bursty)"
+                "unknown trace kind '{other}' \
+                 (poisson|periodic|bursty|solar|rf)"
             ),
         }
     }
@@ -203,6 +324,50 @@ impl TraceSpec {
                 epochs,
                 per_epoch,
             } => PowerTrace::bursty(good_on, bad_on, off, epochs, per_epoch),
+            TraceSpec::Solar { peak_on, off, day_slots, seed } => {
+                PowerTrace::solar(
+                    peak_on,
+                    off,
+                    day_slots,
+                    total_on_cycles,
+                    seed,
+                )
+            }
+            TraceSpec::Rf { mean_on, off, burst, seed } => {
+                PowerTrace::rf_harvest(
+                    mean_on,
+                    off,
+                    burst,
+                    total_on_cycles,
+                    seed,
+                )
+            }
+        }
+    }
+
+    /// Derive a copy with an independent jitter seed — how the fleet
+    /// gives every node its own weather while sharing one profile
+    /// spec. Fully deterministic specs (periodic, bursty) are
+    /// returned unchanged.
+    pub fn with_seed(&self, seed: u64) -> TraceSpec {
+        let mut spec = self.clone();
+        match &mut spec {
+            TraceSpec::Poisson { seed: s, .. }
+            | TraceSpec::Solar { seed: s, .. }
+            | TraceSpec::Rf { seed: s, .. } => *s = seed,
+            TraceSpec::Periodic { .. } | TraceSpec::Bursty { .. } => {}
+        }
+        spec
+    }
+
+    /// Short profile-kind label for reports.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            TraceSpec::Poisson { .. } => "poisson",
+            TraceSpec::Periodic { .. } => "periodic",
+            TraceSpec::Bursty { .. } => "bursty",
+            TraceSpec::Solar { .. } => "solar",
+            TraceSpec::Rf { .. } => "rf",
         }
     }
 }
@@ -545,6 +710,79 @@ mod tests {
         assert!(TraceSpec::parse("periodic:100").is_err());
         assert!(TraceSpec::parse("sawtooth:1:2").is_err());
         assert!(TraceSpec::parse("poisson:1:2:3:4").is_err());
+    }
+
+    #[test]
+    fn solar_and_rf_traces_build_and_are_deterministic() {
+        let s = TraceSpec::parse("solar:600:80").unwrap();
+        assert_eq!(
+            s,
+            TraceSpec::Solar {
+                peak_on: 600,
+                off: 80,
+                day_slots: 16,
+                seed: 7
+            }
+        );
+        let a = s.build(20_000);
+        let b = s.build(20_000);
+        assert_eq!(a.intervals, b.intervals);
+        assert!(a.total_on_cycles() >= 20_000);
+        // Night trickle keeps every interval alive (termination).
+        assert!(a.intervals.iter().all(|iv| iv.on_cycles >= 1));
+        // The day curve actually varies: peak dwarfs the night floor.
+        let max = a.intervals.iter().map(|iv| iv.on_cycles).max().unwrap();
+        let min = a.intervals.iter().map(|iv| iv.on_cycles).min().unwrap();
+        assert!(max > 16 * min, "no day/night contrast: {max} vs {min}");
+
+        let r = TraceSpec::parse("rf:300:50:4:11").unwrap();
+        assert_eq!(
+            r,
+            TraceSpec::Rf { mean_on: 300.0, off: 50, burst: 4, seed: 11 }
+        );
+        let t = r.build(10_000);
+        assert!(t.total_on_cycles() >= 10_000);
+        // Every 4th outage is the deep out-of-range (4x) gap.
+        assert_eq!(t.intervals[3].off_cycles, 200);
+        assert_eq!(t.intervals[0].off_cycles, 50);
+
+        // Reseeding decorrelates jitter without changing the spec.
+        let t2 = r.with_seed(99).build(10_000);
+        assert_ne!(
+            t.intervals, t2.intervals,
+            "independent seeds must decorrelate node traces"
+        );
+        assert_eq!(r.with_seed(99).kind(), "rf");
+        // Deterministic kinds ignore reseeding entirely.
+        let p = TraceSpec::parse("periodic:260:40:12").unwrap();
+        assert_eq!(p.with_seed(99), p);
+    }
+
+    #[test]
+    fn degenerate_trace_specs_rejected_with_context() {
+        // Zero / negative / junk rates carry the offending value.
+        let e =
+            TraceSpec::parse("poisson:-5:50").unwrap_err().to_string();
+        assert!(e.contains("-5"), "error must name the bad value: {e}");
+        let e =
+            TraceSpec::parse("periodic:x:40").unwrap_err().to_string();
+        assert!(e.contains("'x'"), "error must name the bad value: {e}");
+        // A periodic count of zero would build an empty trace.
+        let e = TraceSpec::parse("periodic:100:10:0")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("count"), "{e}");
+        // Empty burst windows (zero epochs or zero per-epoch).
+        assert!(TraceSpec::parse("bursty:100:10:5:0:2").is_err());
+        assert!(TraceSpec::parse("bursty:100:10:5:4:0").is_err());
+        // Solar needs light AND dark; rf needs a real burst period.
+        assert!(TraceSpec::parse("solar:0:80").is_err());
+        assert!(TraceSpec::parse("solar:600:80:1").is_err());
+        assert!(TraceSpec::parse("rf:0:50").is_err());
+        assert!(TraceSpec::parse("rf:300:50:0").is_err());
+        // Field-count caps apply to the new kinds too.
+        assert!(TraceSpec::parse("solar:1:2:3:4:5").is_err());
+        assert!(TraceSpec::parse("rf:1:2:3:4:5").is_err());
     }
 
     #[test]

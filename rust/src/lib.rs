@@ -47,6 +47,7 @@ pub mod dataset;
 pub mod device;
 pub mod energy;
 pub mod engine;
+pub mod fleet;
 pub mod intermittency;
 pub mod metrics;
 pub mod nvfa;

@@ -13,6 +13,9 @@
 //!   sweep          Fig. 9/10-style sweep over designs x W:I x batch
 //!   sense-mc       Fig. 4b Monte Carlo of the AND sense margin
 //!   intermittent   Fig. 7b power-failure resilience run
+//!   fleet          fleet-scale intermittent-edge simulation: N nodes
+//!                  under mixed harvest profiles, auto-tuned NV
+//!                  checkpoint cadence, byte-reproducible JSON report
 //!   info           artifact + config summary
 //!
 //! Both `serve` and `infer` construct through one declarative
@@ -119,6 +122,26 @@ fn cli() -> Cli {
                 flag("volatile", "CMOS-only baseline (no NV-FA)"),
             ],
         )
+        .command(
+            "fleet",
+            "simulate a fleet of intermittently-powered edge nodes (harvest profiles, NV checkpoint cadence tuning, deterministic report)",
+            vec![
+                opt_default("model", "micro|svhn|alexnet|lenet", "micro"),
+                opt_default("wbits", "weight bits", "1"),
+                opt_default("abits", "activation bits", "4"),
+                opt_default("seed", "weight/image/trace-jitter seed", "42"),
+                opt_default("nodes", "virtual edge nodes", "32"),
+                opt_default("jobs", "frames admitted to the coordinator", "96"),
+                opt_default("profiles", "comma-separated harvest traces, assigned round-robin: poisson:.. | periodic:.. | bursty:.. | solar:<peak-on>:<off>[:<day-slots>[:<seed>]] | rf:<mean-on>:<off>[:<burst>[:<seed>]]", pims::fleet::DEFAULT_PROFILES),
+                opt_default("cadence", "NV checkpoint cadence (tiles), or 'auto' to tune per node against its harvest profile", "auto"),
+                opt_default("requeue-after", "consecutive dark slots before a node's job is pulled back to the queue (0 = sticky)", "64"),
+                opt_default("tile-patches", "patch rows per resumable tile", "16"),
+                opt_default("cycles-per-tile", "harvested cycles one tile consumes (the slot width)", "10"),
+                opt("report", "write the fleet report JSON to this path"),
+                flag("per-node", "print the per-node stat rows"),
+                opt_default("config", "RunConfig file; explicit flags override it", ""),
+            ],
+        )
         .command("info", "artifact and configuration summary", vec![])
         .command(
             "probe",
@@ -158,6 +181,7 @@ fn run(p: pims::cli::Parsed) -> Result<()> {
         "sweep" => cmd_sweep(&p),
         "sense-mc" => cmd_sense_mc(&p),
         "intermittent" => cmd_intermittent(&p),
+        "fleet" => cmd_fleet(&p),
         "info" => cmd_info(),
         "probe" => cmd_probe(&p),
         other => anyhow::bail!("unhandled command {other}"),
@@ -620,6 +644,68 @@ fn cmd_intermittent(p: &pims::cli::Parsed) -> Result<()> {
     }
     if r.events.len() > 12 {
         println!("  ... {} more events", r.events.len() - 12);
+    }
+    Ok(())
+}
+
+/// `pims fleet`: the DESIGN.md §11 fleet simulation. Every knob rides
+/// the declarative RunConfig path (`--config` base, explicit flags
+/// override), the run itself is [`pims::fleet::run_fleet`], and the
+/// report dumps byte-reproducibly for the CI fleet-smoke `cmp` gate.
+fn cmd_fleet(p: &pims::cli::Parsed) -> Result<()> {
+    let cfg = RunConfig::from_parsed(p)?;
+    let cycles_per_tile =
+        p.get_u64("cycles-per-tile")?.unwrap_or(10).max(1);
+    let spec = cfg.fleet_spec(cycles_per_tile)?;
+    let mplan = cfg.compile_plan()?;
+    println!(
+        "fleet: model={} W{}:I{}, {} nodes x {} profiles, {} jobs, \
+         cadence {}, requeue after {} dark slots",
+        mplan.model_name(),
+        cfg.w_bits,
+        cfg.a_bits,
+        spec.nodes,
+        spec.profiles.len(),
+        spec.jobs,
+        match cfg.fleet_cadence {
+            pims::cli::CadenceArg::Auto => "auto".to_string(),
+            pims::cli::CadenceArg::Fixed(k) => k.to_string(),
+        },
+        spec.requeue_after
+    );
+    let report = pims::fleet::run_fleet(&mplan, &spec)?;
+    println!("{}", report.summary());
+    println!("{}", report.cost.table());
+    if p.has("per-node") {
+        println!(
+            "| node | profile | cadence | done | fails | requeues | \
+             tiles | re-exec | ckpts | restores | energy µJ |"
+        );
+        println!("|---|---|---|---|---|---|---|---|---|---|---|");
+        for n in &report.nodes {
+            println!(
+                "| {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | \
+                 {:.4} |",
+                n.id,
+                n.profile,
+                n.cadence,
+                n.completed,
+                n.failures,
+                n.requeues,
+                n.tiles_executed,
+                n.tiles_reexecuted,
+                n.checkpoints,
+                n.restores,
+                n.cost.energy_uj()
+            );
+        }
+    }
+    if let Some(path) = p.get("report") {
+        let mut text = report.dump();
+        text.push('\n');
+        std::fs::write(path, text)
+            .with_context(|| format!("writing fleet report '{path}'"))?;
+        println!("report written: {path}");
     }
     Ok(())
 }

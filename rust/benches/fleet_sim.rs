@@ -10,7 +10,7 @@
 use pims::benchlib::{black_box, Bench};
 use pims::cli::CadenceArg;
 use pims::cnn;
-use pims::engine::ModelPlan;
+use pims::engine::{GemmKernel, ModelPlan};
 use pims::fleet::{run_fleet, FleetSpec, DEFAULT_PROFILES};
 use pims::intermittency::TraceSpec;
 
@@ -33,6 +33,7 @@ fn main() {
         requeue_after: 16,
         tile_patches: 16,
         cycles_per_tile: 10,
+        kernel: GemmKernel::default(),
         seed: 42,
     };
     let r = run_fleet(&plan, &spec).unwrap();
@@ -64,6 +65,7 @@ fn main() {
             requeue_after: 32,
             tile_patches: 256,
             cycles_per_tile: 10,
+            kernel: GemmKernel::default(),
             seed: 7,
         };
         let r = run_fleet(&svhn, &spec).unwrap();

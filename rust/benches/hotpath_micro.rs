@@ -115,6 +115,25 @@ fn main() {
         "gemm_kernel_speedup",
         format!("{:.2}x", peroutput_ns / planepair_ns),
     );
+    // SIMD tier on the same tile, weight panel pre-interleaved like
+    // the plan's NV-resident `wt` (ISSUE 8). `simd_kernel_speedup` is
+    // the simd-vs-planepair figure bench-smoke gates (parity floor, so
+    // portable-only runners pass); `simd_backend` records which vector
+    // tier produced it.
+    let wt2 = pims::bitops::simd::InterleavedPlanes::from_planes(&wp2);
+    let simd_ns = b
+        .iter("gemm_simd_64x144x16", || {
+            bitops::gemm::bitwise_gemm_simd_interleaved(
+                &ip2, &wt2, &mut gemm_out,
+            );
+            black_box(&gemm_out);
+        })
+        .mean_ns;
+    b.note("simd_backend", format!("{}", pims::bitops::simd::backend()));
+    b.note(
+        "simd_kernel_speedup",
+        format!("{:.2}x", planepair_ns / simd_ns),
+    );
 
     // --- engine: compiled-plan batched forward (micro_net, batch 8) —
     // the serving hot path over the extracted engine subsystem. A
@@ -241,12 +260,21 @@ fn main() {
         .mean_ns;
     let wire_ns_per_bit_level =
         (copy_ns / (panel.len() * 64) as f64).max(1e-9);
+    // The SIMD row of the per-kernel table: the same tile's row ops
+    // through the measured `gemm_simd_64x144x16` case, so `--lanes
+    // auto --kernel simd` knees against this host's vector speed.
+    let simd_ns_per_row_op = (simd_ns / row_ops).max(1e-6);
     let cal = Calibration {
         kernel_ns_per_row_op,
+        simd_ns_per_row_op: Some(simd_ns_per_row_op),
         wire_ns_per_bit_level,
         hop_ns,
     };
     b.note("cal_kernel_ns_per_row_op", format!("{kernel_ns_per_row_op:.4}"));
+    b.note(
+        "cal_simd_ns_per_row_op",
+        format!("{simd_ns_per_row_op:.4}"),
+    );
     b.note("cal_hop_ns", format!("{hop_ns:.1}"));
     b.note(
         "cal_wire_ns_per_bit_level",

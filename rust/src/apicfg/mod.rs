@@ -30,7 +30,9 @@ use crate::arch::{ChipOrg, HTree};
 use crate::cli::{CadenceArg, LaneArg, Parsed};
 use crate::cnn::{self, Model};
 use crate::configsys::{Config, Value};
-use crate::engine::{Calibration, LaneSchedule, ModelPlan};
+use crate::engine::{
+    Calibration, GemmKernel, KernelDispatch, LaneSchedule, ModelPlan,
+};
 use crate::intermittency::TraceSpec;
 
 /// Which serving backend a [`RunConfig`] launches.
@@ -90,6 +92,7 @@ pub const KNOWN_KEYS: &[&str] = &[
     "serve.wait_ms",
     "serve.requests",
     "engine.lanes",
+    "engine.kernel",
     "engine.tile_patches",
     "engine.calibration",
     "nv.ckpt_period",
@@ -129,6 +132,10 @@ pub struct RunConfig {
     /// `engine.lanes` — engine lane schedule: a fixed per-layer count
     /// or `"auto"` (H-tree-tuned per layer).
     pub lanes: LaneArg,
+    /// `engine.kernel` — bitwise-GEMM kernel dispatch: `"auto"` (best
+    /// tier this host supports) or an explicit kernel name. All tiers
+    /// are bit-identical; this knob trades host speed only.
+    pub kernel: KernelDispatch,
     /// `engine.tile_patches` — patch rows per resumable tile.
     pub tile_patches: usize,
     /// `engine.calibration` — path to a measured [`Calibration`] JSON
@@ -177,6 +184,7 @@ impl Default for RunConfig {
             wait_ms: 2.0,
             requests: 512,
             lanes: LaneArg::Fixed(1),
+            kernel: KernelDispatch::Auto,
             tile_patches: 16,
             calibration: None,
             ckpt_period: 4,
@@ -238,6 +246,13 @@ impl RunConfig {
             Some(v) => anyhow::bail!(
                 "engine.lanes: expected int or \"auto\", got {v}"
             ),
+        };
+        let kernel = match cfg.get("engine.kernel") {
+            None => d.kernel,
+            Some(_) => cfg
+                .str("engine.kernel")?
+                .parse()
+                .map_err(|e| anyhow::anyhow!("engine.kernel: {e}"))?,
         };
         let calibration = match cfg.get("engine.calibration") {
             None => None,
@@ -303,6 +318,7 @@ impl RunConfig {
                 0,
             )? as usize,
             lanes,
+            kernel,
             tile_patches: int_key(
                 cfg,
                 "engine.tile_patches",
@@ -414,6 +430,9 @@ impl RunConfig {
         }
         if use_flag("lanes", "engine.lanes") {
             rc.lanes = p.get_lanes("lanes")?;
+        }
+        if use_flag("kernel", "engine.kernel") {
+            rc.kernel = p.get_kernel("kernel")?;
         }
         if use_flag("tile-patches", "engine.tile_patches") {
             rc.tile_patches = p.get_usize_at_least("tile-patches", 1)?;
@@ -556,6 +575,8 @@ impl RunConfig {
                 c.set("engine.lanes", &n.to_string()).expect(ok)
             }
         }
+        c.set("engine.kernel", &format!("\"{}\"", self.kernel))
+            .expect(ok);
         c.set("engine.tile_patches", &self.tile_patches.to_string())
             .expect(ok);
         if let Some(path) = &self.calibration {
@@ -610,12 +631,19 @@ impl RunConfig {
         )
     }
 
+    /// The concrete [`GemmKernel`] this run executes on THIS host —
+    /// `engine.kernel` resolved through runtime feature detection.
+    pub fn gemm_kernel(&self) -> GemmKernel {
+        self.kernel.resolve()
+    }
+
     /// Resolve the lane knob against a compiled plan: fixed counts
     /// become uniform schedules, `auto` tunes one count per layer —
     /// against the measured [`Calibration`] table when
-    /// `engine.calibration` names one, against the modeled chip +
-    /// H-tree constants otherwise. Errors only when a named
-    /// calibration file is missing or malformed.
+    /// `engine.calibration` names one (scored for the kernel this run
+    /// dispatches, so a measured SIMD row re-knees the schedule),
+    /// against the modeled chip + H-tree constants otherwise. Errors
+    /// only when a named calibration file is missing or malformed.
     pub fn lane_schedule(&self, plan: &ModelPlan) -> Result<LaneSchedule> {
         Ok(match self.lanes {
             LaneArg::Fixed(n) => LaneSchedule::uniform(n),
@@ -625,7 +653,12 @@ impl RunConfig {
                     Some(path) => Calibration::load(path)?,
                     None => Calibration::modeled(&org, &HTree::default()),
                 };
-                LaneSchedule::auto_with(plan, &org, &cal)
+                LaneSchedule::auto_with_kernel(
+                    plan,
+                    &org,
+                    &cal,
+                    self.gemm_kernel(),
+                )
             }
         })
     }
@@ -660,6 +693,7 @@ impl RunConfig {
             tile_patches: self.tile_patches,
             cycles_per_tile,
             seed: self.seed,
+            kernel: self.gemm_kernel(),
         };
         spec.validate()?;
         Ok(spec)
@@ -727,6 +761,12 @@ mod tests {
                 wait_ms: g.u32(0, 50) as f64,
                 requests: g.usize(0, 4096),
                 lanes,
+                kernel: *g.choose(&[
+                    KernelDispatch::Auto,
+                    KernelDispatch::Fixed(GemmKernel::PlanePair),
+                    KernelDispatch::Fixed(GemmKernel::Simd),
+                    KernelDispatch::Fixed(GemmKernel::PerOutput),
+                ]),
                 tile_patches: g.usize(1, 256),
                 calibration: if g.bool() {
                     None
@@ -788,6 +828,8 @@ mod tests {
             "[serve]\nworkers = 0",
             "[engine]\nlanes = 0",
             "[engine]\nlanes = true",
+            "[engine]\nkernel = \"fast\"",
+            "[engine]\nkernel = 3",
             "[chaos]\ntrace = \"nonsense\"",
             "[fleet]\nnodes = 0",
             "[fleet]\njobs = 0",
@@ -823,6 +865,25 @@ mod tests {
             LaneArg::Fixed(ChipOrg::default().parallel_subarrays()),
             "config lanes clamp to the chip like the CLI flag"
         );
+    }
+
+    #[test]
+    fn kernel_key_parses_and_resolves() {
+        let cfg = Config::parse("[engine]\nkernel = \"simd\"").unwrap();
+        let rc = RunConfig::from_config(&cfg).unwrap();
+        assert_eq!(rc.kernel, KernelDispatch::Fixed(GemmKernel::Simd));
+        assert_eq!(rc.gemm_kernel(), GemmKernel::Simd);
+        let cfg =
+            Config::parse("[engine]\nkernel = \"peroutput\"").unwrap();
+        assert_eq!(
+            RunConfig::from_config(&cfg).unwrap().gemm_kernel(),
+            GemmKernel::PerOutput
+        );
+        // The default dispatches the best tier this host supports —
+        // never the reference loop.
+        let auto = RunConfig::default();
+        assert_eq!(auto.kernel, KernelDispatch::Auto);
+        assert_ne!(auto.gemm_kernel(), GemmKernel::PerOutput);
     }
 
     #[test]

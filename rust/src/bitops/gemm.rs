@@ -32,6 +32,7 @@
 //! tests below pin all three against each other across word-straddling
 //! K, 1-bit and 8-bit planes, block-remainder P/F, and empty K.
 
+use super::simd::{self, InterleavedPlanes};
 use super::BitPlanes;
 
 /// Patch/filter rows per register block of the micro-kernel. 4x4 keeps
@@ -151,6 +152,52 @@ pub fn bitwise_gemm(ip: &BitPlanes, wp: &BitPlanes, out: &mut [u64]) {
     }
 }
 
+/// [`bitwise_gemm`] through the SIMD tier: identical contract and
+/// bit-identical output, but each plane pair's count panel runs
+/// through [`simd::accum_row`] against a word-major interleaved
+/// weight panel (AVX2/NEON when the host has them, the unrolled
+/// portable kernel otherwise). Interleaves the weight planes on every
+/// call — use [`bitwise_gemm_simd_interleaved`] with a prebuilt
+/// [`InterleavedPlanes`] on hot paths.
+pub fn bitwise_gemm_simd(ip: &BitPlanes, wp: &BitPlanes, out: &mut [u64]) {
+    let wt = InterleavedPlanes::from_planes(wp);
+    bitwise_gemm_simd_interleaved(ip, &wt, out);
+}
+
+/// [`bitwise_gemm_simd`] against a prebuilt interleaved weight panel
+/// (built once per layer at plan-compile time). `out` is overwritten.
+pub fn bitwise_gemm_simd_interleaved(
+    ip: &BitPlanes,
+    wt: &InterleavedPlanes,
+    out: &mut [u64],
+) {
+    assert_eq!(ip.cols, wt.cols, "reduction length mismatch");
+    let (p, f) = (ip.rows, wt.rows);
+    assert_eq!(out.len(), p * f, "output panel geometry");
+    out.fill(0);
+    let words = ip.words_per_row;
+    debug_assert_eq!(words, wt.words_per_row());
+    if words == 0 {
+        return;
+    }
+    for m in 0..ip.bits {
+        let ap = &ip.planes[m];
+        for n in 0..wt.bits {
+            let shift = (m + n) as u32;
+            let panel = wt.plane(n);
+            for i in 0..p {
+                simd::accum_row(
+                    &ap[i * words..(i + 1) * words],
+                    panel,
+                    f,
+                    shift,
+                    &mut out[i * f..(i + 1) * f],
+                );
+            }
+        }
+    }
+}
+
 /// One plane pair's count panel via the register-blocked micro-kernel:
 /// [`BLOCK`]`x`[`BLOCK`] outputs share each loaded word, so a word is
 /// read once and ANDed against the whole opposing block. Remainder
@@ -247,6 +294,13 @@ mod tests {
             let (ip, wp) = planes(&ia, p, k, m_bits, &iw_t, f, n_bits);
             let mut out = vec![u64::MAX; p * f];
             bitwise_gemm(&ip, &wp, &mut out);
+            let mut out_simd = vec![u64::MAX; p * f];
+            bitwise_gemm_simd(&ip, &wp, &mut out_simd);
+            assert_eq!(
+                out, out_simd,
+                "SIMD tier diverged from plane-pair \
+                 at p={p} f={f} k={k} m={m_bits} n={n_bits}"
+            );
             for i in 0..p {
                 for j in 0..f {
                     let want = and_accumulate(&ip, i, &wp, j);
@@ -301,6 +355,28 @@ mod tests {
         let mut out = vec![u64::MAX; 6];
         bitwise_gemm(&ip, &wp, &mut out);
         assert_eq!(out, vec![0u64; 6], "empty K must zero the panel");
+        let mut out = vec![u64::MAX; 6];
+        bitwise_gemm_simd(&ip, &wp, &mut out);
+        assert_eq!(out, vec![0u64; 6], "SIMD: empty K must zero too");
+    }
+
+    #[test]
+    fn simd_interleaved_matches_on_the_fly_interleave() {
+        // Prebuilt InterleavedPlanes (the plan-compile path) must be
+        // indistinguishable from interleaving per call.
+        let (p, k, f) = (7, 144, 16);
+        let ia: Vec<u32> = (0..p * k).map(|i| (i % 16) as u32).collect();
+        let iw_t: Vec<u32> = (0..f * k).map(|i| (i % 4) as u32).collect();
+        let (ip, wp) = planes(&ia, p, k, 4, &iw_t, f, 2);
+        let wt = InterleavedPlanes::from_planes(&wp);
+        let mut a = vec![0u64; p * f];
+        let mut b = vec![u64::MAX; p * f];
+        bitwise_gemm_simd(&ip, &wp, &mut a);
+        bitwise_gemm_simd_interleaved(&ip, &wt, &mut b);
+        assert_eq!(a, b);
+        let mut want = vec![0u64; p * f];
+        bitwise_gemm(&ip, &wp, &mut want);
+        assert_eq!(a, want);
     }
 
     #[test]

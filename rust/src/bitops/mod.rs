@@ -14,6 +14,7 @@
 //! here).
 
 pub mod gemm;
+pub mod simd;
 
 /// A bit-plane matrix: `planes[p]` holds plane p (LSB first) of a
 /// logical `rows x cols` matrix of k-bit unsigned codes, packed 64
@@ -29,9 +30,38 @@ pub struct BitPlanes {
 }
 
 impl BitPlanes {
+    /// An empty placeholder (no planes, zero geometry) — the identity
+    /// value for [`BitPlanes::repack_from_codes`] scratch reuse.
+    pub fn empty() -> Self {
+        BitPlanes {
+            bits: 0,
+            rows: 0,
+            cols: 0,
+            words_per_row: 0,
+            planes: Vec::new(),
+        }
+    }
+
     /// Decompose a row-major matrix of codes (`rows x cols`, each
     /// `< 2^bits`) into packed bit-planes.
     pub fn from_codes(codes: &[u32], rows: usize, cols: usize, bits: usize) -> Self {
+        let mut bp = BitPlanes::empty();
+        bp.repack_from_codes(codes, rows, cols, bits);
+        bp
+    }
+
+    /// Re-decompose in place, reusing the plane buffers' capacity.
+    /// Semantically identical to assigning `from_codes(..)`, but after
+    /// the first few calls at a stable geometry it allocates nothing —
+    /// this is what keeps the engine's per-frame hot path
+    /// allocation-free (see `engine::scratch`).
+    pub fn repack_from_codes(
+        &mut self,
+        codes: &[u32],
+        rows: usize,
+        cols: usize,
+        bits: usize,
+    ) {
         assert_eq!(codes.len(), rows * cols, "codes length mismatch");
         assert!((1..=32).contains(&bits));
         debug_assert!(
@@ -39,7 +69,22 @@ impl BitPlanes {
             "code out of range for {bits}-bit planes"
         );
         let wpr = cols.div_ceil(64);
-        let mut planes = vec![vec![0u64; rows * wpr]; bits];
+        let words = rows * wpr;
+        // Spare planes beyond `bits` keep their buffers (and stale
+        // contents — every reader is bounded by `bits`), so a scratch
+        // instance re-packed at alternating bit counts never
+        // re-allocates once it has seen the widest layer.
+        while self.planes.len() < bits {
+            self.planes.push(Vec::new());
+        }
+        for plane in &mut self.planes[..bits] {
+            plane.clear();
+            plane.resize(words, 0);
+        }
+        self.bits = bits;
+        self.rows = rows;
+        self.cols = cols;
+        self.words_per_row = wpr;
         // Out-of-range codes truncate to `bits` planes (same contract
         // as the plane-test loop this replaces); the debug_assert
         // above still flags them in debug builds.
@@ -59,12 +104,18 @@ impl BitPlanes {
                 let mask = 1u64 << (c % 64);
                 while rem != 0 {
                     let p = rem.trailing_zeros() as usize;
-                    planes[p][word] |= mask;
+                    self.planes[p][word] |= mask;
                     rem &= rem - 1;
                 }
             }
         }
-        BitPlanes { bits, rows, cols, words_per_row: wpr, planes }
+    }
+
+    /// Total capacity (in u64 words) held across all plane buffers —
+    /// the engine's debug allocation counter watches this to prove the
+    /// repack path stops growing once warm.
+    pub fn capacity_words(&self) -> usize {
+        self.planes.iter().map(|p| p.capacity()).sum()
     }
 
     /// Decompose the TRANSPOSE of a row-major `rows x cols` code matrix
@@ -211,11 +262,32 @@ pub fn im2col(
     stride: usize,
     pad: usize,
 ) -> (Vec<u32>, usize, usize) {
+    let mut out = Vec::new();
+    let (oh, ow) = im2col_into(img, h, w, c, kh, kw, stride, pad, &mut out);
+    (out, oh, ow)
+}
+
+/// [`im2col`] into a caller-owned buffer (cleared and resized, so its
+/// capacity is reused across frames on the allocation-free hot path).
+/// Returns `(oh, ow)`.
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_into(
+    img: &[u32],
+    h: usize,
+    w: usize,
+    c: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+    out: &mut Vec<u32>,
+) -> (usize, usize) {
     assert_eq!(img.len(), h * w * c);
     let oh = (h + 2 * pad - kh) / stride + 1;
     let ow = (w + 2 * pad - kw) / stride + 1;
     let k = kh * kw * c;
-    let mut out = vec![0u32; oh * ow * k];
+    out.clear();
+    out.resize(oh * ow * k, 0);
     for oy in 0..oh {
         for ox in 0..ow {
             let base = (oy * ow + ox) * k;
@@ -242,7 +314,7 @@ pub fn im2col(
             }
         }
     }
-    (out, oh, ow)
+    (oh, ow)
 }
 
 #[cfg(test)]
@@ -449,6 +521,56 @@ mod tests {
         assert_eq!((oh, ow), (2, 2));
         // first patch = rows 0..2 x cols 0..2
         assert_eq!(&patches[0..4], &[0, 1, 4, 5]);
+    }
+
+    #[test]
+    fn repack_reuses_capacity_and_matches_from_codes_property() {
+        // One scratch BitPlanes re-packed through random geometries
+        // must always equal a fresh from_codes, and once it has seen
+        // the largest geometry its word capacity must stop growing.
+        let mut r = Runner::new(0xB1C);
+        r.run("repack_from_codes == from_codes", |g| {
+            let mut scratch = BitPlanes::empty();
+            let mut high_water = 0usize;
+            for _ in 0..4 {
+                let rows = g.usize(1, 5);
+                let cols = g.usize(1, 130);
+                let bits = g.usize(1, 8);
+                let codes = g.codes(rows * cols, bits as u32);
+                scratch.repack_from_codes(&codes, rows, cols, bits);
+                let fresh = BitPlanes::from_codes(&codes, rows, cols, bits);
+                assert_eq!(scratch.to_codes(), fresh.to_codes());
+                for p in 0..bits {
+                    for row in 0..rows {
+                        assert_eq!(
+                            scratch.plane_row(p, row),
+                            fresh.plane_row(p, row)
+                        );
+                    }
+                }
+                high_water = high_water.max(scratch.capacity_words());
+            }
+            // Re-pack the SAME geometry again: steady state, no growth.
+            let codes = g.codes(3 * 70, 4);
+            scratch.repack_from_codes(&codes, 3, 70, 4);
+            let warm = scratch.capacity_words().max(high_water);
+            scratch.repack_from_codes(&codes, 3, 70, 4);
+            assert!(scratch.capacity_words() <= warm);
+        });
+    }
+
+    #[test]
+    fn im2col_into_matches_im2col_and_reuses_buffer() {
+        let img: Vec<u32> = (0..16).collect(); // 4x4x1
+        let (want, oh, ow) = im2col(&img, 4, 4, 1, 2, 2, 2, 0);
+        let mut buf = Vec::new();
+        assert_eq!(im2col_into(&img, 4, 4, 1, 2, 2, 2, 0, &mut buf), (oh, ow));
+        assert_eq!(buf, want);
+        // Second call at the same geometry must not grow the buffer.
+        let cap = buf.capacity();
+        im2col_into(&img, 4, 4, 1, 2, 2, 2, 0, &mut buf);
+        assert_eq!(buf.capacity(), cap);
+        assert_eq!(buf, want);
     }
 
     #[test]

@@ -1,0 +1,413 @@
+//! SIMD lanes for the Eq.-1 AND-popcount kernel.
+//!
+//! Conv shapes keep the packed reduction short (`k = 144` is just 3
+//! u64 words), so vectorizing along the reduction — the classic
+//! Harley–Seal direction — never reaches its break-even. Instead the
+//! SIMD tier vectorizes across FILTERS: one activation word is
+//! broadcast and ANDed against 4 (AVX2) or 2 (NEON) weight words that
+//! share the same reduction-word index, which requires the weight
+//! planes in a word-major interleave ([`InterleavedPlanes`], built
+//! once per layer at plan-compile time). Per-64-bit-lane popcounts
+//! come from the Mula nibble-LUT + `SAD` trick on AVX2 and
+//! `vcntq_u8` + pairwise widening on NEON.
+//!
+//! All `unsafe` in the crate's SIMD story lives in the two
+//! `#[target_feature]` functions below; they are only reachable after
+//! runtime feature detection ([`backend`]) and are pinned against the
+//! portable row kernel and a naive popcount dot by property tests.
+
+use super::BitPlanes;
+use std::sync::OnceLock;
+
+/// Which vector tier [`accum_row`] dispatches to on this host.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdBackend {
+    /// 256-bit AVX2: 4 filters per step, Mula LUT popcount.
+    Avx2,
+    /// 128-bit NEON: 2 filters per step, `vcntq_u8` popcount.
+    Neon,
+    /// Unrolled scalar `u64x4`-style fallback; always available.
+    Portable,
+}
+
+impl std::fmt::Display for SimdBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            SimdBackend::Avx2 => "avx2",
+            SimdBackend::Neon => "neon",
+            SimdBackend::Portable => "portable",
+        })
+    }
+}
+
+/// The best vector tier this host supports, detected once per process.
+pub fn backend() -> SimdBackend {
+    static BACKEND: OnceLock<SimdBackend> = OnceLock::new();
+    *BACKEND.get_or_init(detect_backend)
+}
+
+fn detect_backend() -> SimdBackend {
+    if cfg!(miri) {
+        // Miri interprets MIR and has no vector intrinsics; the
+        // portable tier is the one it can check.
+        return SimdBackend::Portable;
+    }
+    native_backend()
+}
+
+#[cfg(target_arch = "x86_64")]
+fn native_backend() -> SimdBackend {
+    if std::arch::is_x86_feature_detected!("avx2") {
+        SimdBackend::Avx2
+    } else {
+        SimdBackend::Portable
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn native_backend() -> SimdBackend {
+    if std::arch::is_aarch64_feature_detected!("neon") {
+        SimdBackend::Neon
+    } else {
+        SimdBackend::Portable
+    }
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn native_backend() -> SimdBackend {
+    SimdBackend::Portable
+}
+
+/// Word-major interleave of a weight [`BitPlanes`]: for plane n,
+/// `plane(n)[w * f + j]` holds reduction word w of filter j, so the f
+/// weight words sharing a reduction-word index are contiguous and one
+/// broadcast activation word can be ANDed against several filters per
+/// vector op. Built once per layer at plan-compile time; the packed
+/// bits are identical to the source planes, only the word order
+/// differs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct InterleavedPlanes {
+    /// Logical rows of the source plane set (filters f).
+    pub rows: usize,
+    /// Reduction length k (bit positions per row).
+    pub cols: usize,
+    /// Number of bit planes.
+    pub bits: usize,
+    words_per_row: usize,
+    /// `planes[n][w * rows + j] == source plane n, row j, word w`.
+    planes: Vec<Vec<u64>>,
+}
+
+impl InterleavedPlanes {
+    /// Interleave a (typically transposed-weight) plane set.
+    pub fn from_planes(wp: &BitPlanes) -> Self {
+        let f = wp.rows;
+        let words = wp.words_per_row;
+        let mut planes = Vec::with_capacity(wp.bits);
+        // Slice to `bits`: a repacked scratch source may hold spare
+        // plane buffers beyond its logical bit count.
+        for src in &wp.planes[..wp.bits] {
+            let mut panel = vec![0u64; words * f];
+            for j in 0..f {
+                for w in 0..words {
+                    panel[w * f + j] = src[j * words + w];
+                }
+            }
+            planes.push(panel);
+        }
+        InterleavedPlanes {
+            rows: f,
+            cols: wp.cols,
+            bits: wp.bits,
+            words_per_row: words,
+            planes,
+        }
+    }
+
+    /// The interleaved panel for plane n (`words_per_row * rows` u64s).
+    pub fn plane(&self, n: usize) -> &[u64] {
+        &self.planes[n]
+    }
+
+    /// Packed u64 words per logical source row.
+    pub fn words_per_row(&self) -> usize {
+        self.words_per_row
+    }
+}
+
+/// One output row of the plane-pair kernel:
+/// `orow[j] += (sum_w popcount(arow[w] & wpanel[w * f + j])) << shift`
+/// for `j in 0..f`, dispatched to the best tier [`backend`] detected.
+pub fn accum_row(
+    arow: &[u64],
+    wpanel: &[u64],
+    f: usize,
+    shift: u32,
+    orow: &mut [u64],
+) {
+    debug_assert_eq!(wpanel.len(), arow.len() * f);
+    debug_assert_eq!(orow.len(), f);
+    #[cfg(target_arch = "x86_64")]
+    if backend() == SimdBackend::Avx2 {
+        // SAFETY: `backend()` returns Avx2 only after runtime
+        // `is_x86_feature_detected!("avx2")` succeeded on this host.
+        unsafe { accum_row_avx2(arow, wpanel, f, shift, orow) };
+        return;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if backend() == SimdBackend::Neon {
+        // SAFETY: `backend()` returns Neon only after runtime
+        // `is_aarch64_feature_detected!("neon")` succeeded.
+        unsafe { accum_row_neon(arow, wpanel, f, shift, orow) };
+        return;
+    }
+    accum_row_portable(arow, wpanel, f, shift, orow);
+}
+
+/// Portable tier: 4 accumulators unrolled across filters, zero
+/// activation words skipped (sparse activations and padding are
+/// common). Also the oracle the vector tiers are property-tested
+/// against.
+fn accum_row_portable(
+    arow: &[u64],
+    wpanel: &[u64],
+    f: usize,
+    shift: u32,
+    orow: &mut [u64],
+) {
+    let mut j = 0usize;
+    while j + 4 <= f {
+        let (mut c0, mut c1, mut c2, mut c3) = (0u64, 0u64, 0u64, 0u64);
+        for (w, &av) in arow.iter().enumerate() {
+            if av == 0 {
+                continue;
+            }
+            let base = w * f + j;
+            c0 += (av & wpanel[base]).count_ones() as u64;
+            c1 += (av & wpanel[base + 1]).count_ones() as u64;
+            c2 += (av & wpanel[base + 2]).count_ones() as u64;
+            c3 += (av & wpanel[base + 3]).count_ones() as u64;
+        }
+        orow[j] += c0 << shift;
+        orow[j + 1] += c1 << shift;
+        orow[j + 2] += c2 << shift;
+        orow[j + 3] += c3 << shift;
+        j += 4;
+    }
+    accum_row_tail(arow, wpanel, f, shift, orow, j);
+}
+
+/// Scalar tail shared by every tier: filters `start..f` one at a time.
+fn accum_row_tail(
+    arow: &[u64],
+    wpanel: &[u64],
+    f: usize,
+    shift: u32,
+    orow: &mut [u64],
+    start: usize,
+) {
+    for j in start..f {
+        let mut cnt = 0u64;
+        for (w, &av) in arow.iter().enumerate() {
+            cnt += (av & wpanel[w * f + j]).count_ones() as u64;
+        }
+        orow[j] += cnt << shift;
+    }
+}
+
+/// AVX2 tier: broadcast one activation word, AND against 4 contiguous
+/// interleaved weight words, popcount each 64-bit lane via the Mula
+/// nibble-LUT + `_mm256_sad_epu8` horizontal sum, accumulate in a
+/// vector register across the reduction, one read-modify-write of the
+/// output per 4 filters.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn accum_row_avx2(
+    arow: &[u64],
+    wpanel: &[u64],
+    f: usize,
+    shift: u32,
+    orow: &mut [u64],
+) {
+    use std::arch::x86_64::*;
+    let lut = _mm256_setr_epi8(
+        0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4, //
+        0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+    );
+    let low_mask = _mm256_set1_epi8(0x0f);
+    let zero = _mm256_setzero_si256();
+    // Runtime shift count must come through a __m128i
+    // (`_mm256_slli_epi64` needs a const immediate).
+    let shift_v = _mm_cvtsi32_si128(shift as i32);
+    let mut j = 0usize;
+    while j + 4 <= f {
+        let mut acc = zero;
+        for (w, &av) in arow.iter().enumerate() {
+            if av == 0 {
+                continue;
+            }
+            let a = _mm256_set1_epi64x(av as i64);
+            let wv = _mm256_loadu_si256(
+                wpanel.as_ptr().add(w * f + j) as *const __m256i
+            );
+            let x = _mm256_and_si256(a, wv);
+            let lo = _mm256_and_si256(x, low_mask);
+            let hi = _mm256_and_si256(_mm256_srli_epi16(x, 4), low_mask);
+            let cnt8 = _mm256_add_epi8(
+                _mm256_shuffle_epi8(lut, lo),
+                _mm256_shuffle_epi8(lut, hi),
+            );
+            // SAD against zero sums each 8-byte group: per-64-bit-lane
+            // popcounts, ready to add into the u64 accumulators.
+            acc = _mm256_add_epi64(acc, _mm256_sad_epu8(cnt8, zero));
+        }
+        let out = orow.as_mut_ptr().add(j) as *mut __m256i;
+        let prev = _mm256_loadu_si256(out as *const __m256i);
+        _mm256_storeu_si256(
+            out,
+            _mm256_add_epi64(prev, _mm256_sll_epi64(acc, shift_v)),
+        );
+        j += 4;
+    }
+    accum_row_tail(arow, wpanel, f, shift, orow, j);
+}
+
+/// NEON tier: same shape as AVX2 at 128-bit width — 2 filters per
+/// step, byte popcount via `vcntq_u8`, widened to u64 lanes through
+/// the pairwise-add chain.
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn accum_row_neon(
+    arow: &[u64],
+    wpanel: &[u64],
+    f: usize,
+    shift: u32,
+    orow: &mut [u64],
+) {
+    use std::arch::aarch64::*;
+    let shift_v = vdupq_n_s64(shift as i64);
+    let mut j = 0usize;
+    while j + 2 <= f {
+        let mut acc = vdupq_n_u64(0);
+        for (w, &av) in arow.iter().enumerate() {
+            if av == 0 {
+                continue;
+            }
+            let a = vdupq_n_u64(av);
+            let wv = vld1q_u64(wpanel.as_ptr().add(w * f + j));
+            let x = vandq_u64(a, wv);
+            let cnt8 = vcntq_u8(vreinterpretq_u8_u64(x));
+            let cnt64 = vpaddlq_u32(vpaddlq_u16(vpaddlq_u8(cnt8)));
+            acc = vaddq_u64(acc, cnt64);
+        }
+        let out = orow.as_mut_ptr().add(j);
+        let prev = vld1q_u64(out);
+        vst1q_u64(out, vaddq_u64(prev, vshlq_u64(acc, shift_v)));
+        j += 2;
+    }
+    accum_row_tail(arow, wpanel, f, shift, orow, j);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest_lite::Runner;
+
+    /// Longhand oracle for one output row, no unrolling, no skipping.
+    fn accum_row_naive(
+        arow: &[u64],
+        wpanel: &[u64],
+        f: usize,
+        shift: u32,
+        orow: &mut [u64],
+    ) {
+        for j in 0..f {
+            let mut cnt = 0u64;
+            for (w, &av) in arow.iter().enumerate() {
+                cnt += (av & wpanel[w * f + j]).count_ones() as u64;
+            }
+            orow[j] += cnt << shift;
+        }
+    }
+
+    #[test]
+    fn backend_is_stable_and_portable_under_miri() {
+        let b = backend();
+        assert_eq!(backend(), b);
+        if cfg!(miri) {
+            assert_eq!(b, SimdBackend::Portable);
+        }
+        assert!(!format!("{b}").is_empty());
+    }
+
+    #[test]
+    fn interleave_layout_matches_source_planes_property() {
+        let mut r = Runner::new(0x51D1);
+        r.run("panel[w*f+j] == plane word (j, w)", |g| {
+            let k = g.usize(1, 200);
+            let f = g.usize(1, 9);
+            let bits = g.usize(1, 6);
+            let iw = g.codes(k * f, bits as u32);
+            let wp = BitPlanes::from_codes_transposed(&iw, k, f, bits);
+            let wt = InterleavedPlanes::from_planes(&wp);
+            assert_eq!(wt.rows, wp.rows);
+            assert_eq!(wt.cols, wp.cols);
+            assert_eq!(wt.bits, wp.bits);
+            let words = wt.words_per_row();
+            for n in 0..bits {
+                let panel = wt.plane(n);
+                assert_eq!(panel.len(), words * wt.rows);
+                for j in 0..wt.rows {
+                    let src = wp.plane_row(n, j);
+                    for w in 0..words {
+                        assert_eq!(
+                            panel[w * wt.rows + j],
+                            src[w],
+                            "plane {n} filter {j} word {w}"
+                        );
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn accum_row_every_tier_matches_naive_property() {
+        // The dispatched tier (whatever this host supports) and the
+        // portable tier must both equal the longhand oracle, on
+        // random geometries, shifts, zero-heavy activation words, and
+        // PREFILLED outputs (accum_row accumulates, never overwrites).
+        let mut r = Runner::new(0x51D0);
+        r.run("accum_row == naive popcount dot", |g| {
+            let words = g.usize(1, 6);
+            let f = g.usize(1, 19);
+            let shift = g.u32(0, 14);
+            let arow: Vec<u64> = (0..words)
+                .map(|_| if g.bool() { g.u64_any() } else { 0 })
+                .collect();
+            let wpanel: Vec<u64> =
+                (0..words * f).map(|_| g.u64_any()).collect();
+            let mut want: Vec<u64> =
+                (0..f).map(|_| g.u64_any() >> 20).collect();
+            let mut got = want.clone();
+            let mut port = want.clone();
+            accum_row_naive(&arow, &wpanel, f, shift, &mut want);
+            accum_row(&arow, &wpanel, f, shift, &mut got);
+            accum_row_portable(&arow, &wpanel, f, shift, &mut port);
+            assert_eq!(got, want, "dispatched tier diverged");
+            assert_eq!(port, want, "portable tier diverged");
+        });
+    }
+
+    #[test]
+    fn accum_row_small_and_saturated_cases() {
+        // f below any vector width: pure tail path.
+        let mut orow = [7u64];
+        accum_row(&[u64::MAX], &[u64::MAX], 1, 2, &mut orow);
+        assert_eq!(orow[0], 7 + (64 << 2));
+        // All-zero activations leave the output untouched.
+        let mut orow = [1u64, 2, 3, 4, 5];
+        accum_row(&[0, 0], &[u64::MAX; 10], 5, 3, &mut orow);
+        assert_eq!(orow, [1, 2, 3, 4, 5]);
+    }
+}

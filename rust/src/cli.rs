@@ -104,6 +104,23 @@ impl Parsed {
         }
     }
 
+    /// Shared parser for `--kernel` options: `auto` (best tier this
+    /// host supports, via runtime feature detection) or an explicit
+    /// [`crate::engine::GemmKernel`] name. Missing values default to
+    /// `auto` — all tiers are bit-identical, so the fastest is always
+    /// safe.
+    pub fn get_kernel(
+        &self,
+        name: &str,
+    ) -> anyhow::Result<crate::engine::KernelDispatch> {
+        match self.flags.get(name) {
+            None => Ok(crate::engine::KernelDispatch::Auto),
+            Some(v) => v.parse().map_err(|e| {
+                anyhow::anyhow!("--{name}: {e}")
+            }),
+        }
+    }
+
     /// Shared parser for `--cadence`-style options: the literal
     /// `auto` (per-node harvest-profile tuning) or a fixed tile count
     /// >= 1. Missing values default to `auto` — tuning is the fleet's
@@ -420,6 +437,36 @@ mod tests {
         assert!(p.get_lanes("lanes").is_err());
         // An undeclared option falls back to serial.
         assert_eq!(p.get_lanes("nope").unwrap(), LaneArg::Fixed(1));
+    }
+
+    #[test]
+    fn kernel_parses_auto_named_and_rejects_junk() {
+        use crate::engine::{GemmKernel, KernelDispatch};
+        let cli = Cli::new("pims", "test").command(
+            "infer",
+            "run",
+            vec![opt_default("kernel", "gemm kernel", "auto")],
+        );
+        let p = cli.parse(&argv(&["infer"])).unwrap();
+        assert_eq!(p.get_kernel("kernel").unwrap(), KernelDispatch::Auto);
+        let p = cli
+            .parse(&argv(&["infer", "--kernel", "planepair"]))
+            .unwrap();
+        assert_eq!(
+            p.get_kernel("kernel").unwrap(),
+            KernelDispatch::Fixed(GemmKernel::PlanePair)
+        );
+        let p =
+            cli.parse(&argv(&["infer", "--kernel", "simd"])).unwrap();
+        assert_eq!(
+            p.get_kernel("kernel").unwrap(),
+            KernelDispatch::Fixed(GemmKernel::Simd)
+        );
+        let p =
+            cli.parse(&argv(&["infer", "--kernel", "fast"])).unwrap();
+        assert!(p.get_kernel("kernel").is_err());
+        // An undeclared option auto-dispatches.
+        assert_eq!(p.get_kernel("nope").unwrap(), KernelDispatch::Auto);
     }
 
     #[test]

@@ -269,6 +269,9 @@ impl Coordinator {
                 let model = cfg.build_model()?;
                 let (w_bits, a_bits) = (cfg.w_bits, cfg.a_bits);
                 let (batch, seed, lanes) = (cfg.batch, cfg.seed, cfg.lanes);
+                // Resolve the kernel dispatch once so every replica
+                // executes the same tier (auto picks per this host).
+                let kernel = cfg.gemm_kernel();
                 // Resolve the auto-tuner's cost table once, up front:
                 // a bad `engine.calibration` path fails launch instead
                 // of every worker, and all replicas tune against the
@@ -288,7 +291,8 @@ impl Coordinator {
                         a_bits,
                         batch,
                         seed,
-                    )?;
+                    )?
+                    .with_kernel(kernel);
                     Ok(match (lanes, &calibration) {
                         (LaneArg::Auto, Some(cal)) => {
                             b.with_auto_lanes_calibrated(cal)

@@ -30,7 +30,8 @@ use crate::cnn::Model;
 use crate::device::SotCosts;
 use crate::energy::{components, CostBreakdown};
 use crate::engine::{
-    Calibration, LaneSchedule, ModelPlan, ResumableForward, TileScheduler,
+    Calibration, GemmKernel, LaneSchedule, ModelPlan, ResumableForward,
+    TileScheduler,
 };
 use crate::subarray::OpLedger;
 
@@ -40,6 +41,9 @@ use super::{Backend, EnergyAudit};
 pub struct PimSimBackend {
     plan: ModelPlan,
     sched: TileScheduler,
+    /// Bitwise-GEMM kernel the scheduler executes with (logits are
+    /// bit-identical across kernels; only host speed changes).
+    kernel: GemmKernel,
     batch: usize,
     energy_uj_per_frame: f64,
     /// H-tree energy of the lane schedule's image-to-lane funnel,
@@ -80,6 +84,7 @@ impl PimSimBackend {
         Ok(PimSimBackend {
             plan,
             sched: TileScheduler::default(),
+            kernel: GemmKernel::default(),
             batch,
             energy_uj_per_frame,
             merge_uj_per_frame: 0.0,
@@ -103,7 +108,8 @@ impl PimSimBackend {
     /// is charged into each request's energy.
     pub fn with_lane_schedule(mut self, sched: LaneSchedule) -> Self {
         self.sched =
-            TileScheduler::from_schedule(sched, &ChipOrg::default());
+            TileScheduler::from_schedule(sched, &ChipOrg::default())
+                .with_kernel(self.kernel);
         // The same traffic accounting forward_batch charges per call,
         // amortized per frame (batches are padded to full, so every
         // executed batch maps images identically). Cached once here;
@@ -131,12 +137,30 @@ impl PimSimBackend {
     /// [`Calibration::modeled`] otherwise. Only the schedule choice
     /// depends on the table; logits stay bit-identical regardless.
     pub fn with_auto_lanes_calibrated(self, cal: &Calibration) -> Self {
-        let sched = LaneSchedule::auto_with(
+        let sched = LaneSchedule::auto_with_kernel(
             self.plan(),
             &ChipOrg::default(),
             cal,
+            self.kernel,
         );
         self.with_lane_schedule(sched)
+    }
+
+    /// Execute tiles on `kernel` (resolved from
+    /// [`crate::engine::KernelDispatch`] upstream). Re-applies the
+    /// current lane schedule so the scheduler carries the kernel;
+    /// call before the `with_*lanes` knobs or after — order is
+    /// immaterial. Logits and ledgers are bit-identical across
+    /// kernels.
+    pub fn with_kernel(mut self, kernel: GemmKernel) -> Self {
+        self.kernel = kernel;
+        let sched = self.sched.schedule().clone();
+        self.with_lane_schedule(sched)
+    }
+
+    /// The bitwise-GEMM kernel this backend executes with.
+    pub fn kernel(&self) -> GemmKernel {
+        self.sched.kernel()
     }
 
     /// Widest engine lane count this backend executes with.
@@ -349,6 +373,50 @@ mod tests {
             serial.infer_batch(&flat).unwrap(),
             threaded.infer_batch(&flat).unwrap()
         );
+    }
+
+    #[test]
+    fn kernel_knob_serves_bit_identically() {
+        // The kernel knob changes host speed only: every kernel (set
+        // before or after the lane knob) answers the default backend's
+        // exact bytes and reports itself through the accessor.
+        let mut base = backend();
+        let flat: Vec<f32> = img(base.input_elems(), 3)
+            .into_iter()
+            .chain(img(base.input_elems(), 11))
+            .collect();
+        let want = base.infer_batch(&flat).unwrap();
+        for kernel in [
+            GemmKernel::Simd,
+            GemmKernel::PlanePair,
+            GemmKernel::PerOutput,
+        ] {
+            let mut before = PimSimBackend::new(
+                cnn::micro_net(),
+                1,
+                4,
+                2,
+                0xBEEF,
+            )
+            .unwrap()
+            .with_kernel(kernel)
+            .with_lanes(4);
+            let mut after = PimSimBackend::new(
+                cnn::micro_net(),
+                1,
+                4,
+                2,
+                0xBEEF,
+            )
+            .unwrap()
+            .with_lanes(4)
+            .with_kernel(kernel);
+            assert_eq!(before.kernel(), kernel);
+            assert_eq!(after.kernel(), kernel);
+            assert_eq!(before.lanes(), 4, "kernel knob dropped lanes");
+            assert_eq!(before.infer_batch(&flat).unwrap(), want);
+            assert_eq!(after.infer_batch(&flat).unwrap(), want);
+        }
     }
 
     #[test]

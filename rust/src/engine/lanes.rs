@@ -31,7 +31,7 @@ use super::plan::{
     and_tile_ledger, gemm_raw_slice, GemmEngine, GemmKernel, LayerPlan,
     ModelPlan,
 };
-use super::pool::{LaneBudget, LaneJob};
+use super::pool::{self, LaneBudget, LaneJob};
 use super::tuner::{
     batch_merge_traffic, charge_lane_split, LaneSchedule,
 };
@@ -41,6 +41,7 @@ use super::tuner::{
 pub struct TileScheduler {
     sched: LaneSchedule,
     org: ChipOrg,
+    kernel: GemmKernel,
 }
 
 impl Default for TileScheduler {
@@ -67,12 +68,29 @@ impl TileScheduler {
         TileScheduler {
             sched: LaneSchedule::uniform(org.engine_lanes(requested)),
             org: *org,
+            kernel: GemmKernel::default(),
         }
     }
 
     /// Execute a (possibly per-layer) schedule, clamped to `org`.
     pub fn from_schedule(sched: LaneSchedule, org: &ChipOrg) -> Self {
-        TileScheduler { sched: sched.clamped(org), org: *org }
+        TileScheduler {
+            sched: sched.clamped(org),
+            org: *org,
+            kernel: GemmKernel::default(),
+        }
+    }
+
+    /// Execute every GEMM tile with `kernel` (the default is the
+    /// scalar plane-pair kernel; all kernels are bit-identical).
+    pub fn with_kernel(mut self, kernel: GemmKernel) -> Self {
+        self.kernel = kernel;
+        self
+    }
+
+    /// The bitwise-GEMM kernel this scheduler dispatches.
+    pub fn kernel(&self) -> GemmKernel {
+        self.kernel
     }
 
     /// Widest lane count any layer uses.
@@ -136,14 +154,17 @@ impl TileScheduler {
         let n_tiles = tile_end - tile_start;
         let lanes = self.lanes_for_layer(li).min(n_tiles);
         if lanes <= 1 {
-            gemm_raw_slice(
-                ia,
-                row_start,
-                row_end,
-                lw,
-                GemmEngine::Bitwise(GemmKernel::default()),
-                &mut raw,
-            );
+            pool::with_arena(|a| {
+                gemm_raw_slice(
+                    ia,
+                    row_start,
+                    row_end,
+                    lw,
+                    GemmEngine::Bitwise(self.kernel),
+                    &mut a.ip,
+                    &mut raw,
+                );
+            });
             return (
                 raw,
                 and_tile_ledger(lw, total_rows),
@@ -176,15 +197,19 @@ impl TileScheduler {
                 (re - rs) as u64,
                 lw,
             );
+            let kernel = self.kernel;
             jobs.push(Box::new(move || {
-                gemm_raw_slice(
-                    ia,
-                    rs,
-                    re,
-                    lw,
-                    GemmEngine::Bitwise(GemmKernel::default()),
-                    head,
-                );
+                pool::with_arena(|a| {
+                    gemm_raw_slice(
+                        ia,
+                        rs,
+                        re,
+                        lw,
+                        GemmEngine::Bitwise(kernel),
+                        &mut a.ip,
+                        head,
+                    );
+                });
             }));
         }
         debug_assert!(rest.is_empty(), "output rows not fully assigned");
@@ -280,6 +305,22 @@ mod tests {
                         "a real split must charge the tree"
                     );
                 }
+            }
+            // Kernel choice never changes a bit either, fanned out or
+            // serial.
+            for kernel in [GemmKernel::Simd, GemmKernel::PerOutput] {
+                let (raw, ledger, _) = TileScheduler::new(2)
+                    .with_kernel(kernel)
+                    .run_tiles(
+                        0,
+                        lw,
+                        &ia,
+                        lw.p,
+                        tile_patches,
+                        tile_start..tile_end,
+                    );
+                assert_eq!(raw, want_raw, "{kernel} raw diverged");
+                assert_eq!(ledger, want_ledger, "{kernel} ledger");
             }
         });
     }

@@ -41,6 +41,7 @@ mod forward;
 mod lanes;
 mod plan;
 pub mod pool;
+mod scratch;
 mod tuner;
 
 pub use forward::{
@@ -48,7 +49,8 @@ pub use forward::{
 };
 pub use lanes::TileScheduler;
 pub use plan::{
-    BatchOutput, GemmKernel, LayerPlan, ModelPlan, DEFAULT_TILE_PATCHES,
+    BatchOutput, GemmKernel, KernelDispatch, LayerPlan, ModelPlan,
+    DEFAULT_TILE_PATCHES,
 };
 pub use pool::{LaneBudget, LaneRuntime};
 pub use tuner::{

@@ -14,6 +14,7 @@
 use anyhow::{Context, Result};
 
 use crate::arch::LaneTraffic;
+use crate::bitops::simd::InterleavedPlanes;
 use crate::bitops::{self, BitPlanes};
 use crate::cnn::{Layer, Model};
 use crate::prng::Pcg32;
@@ -22,7 +23,8 @@ use crate::subarray::{OpLedger, SubArrayGeom};
 
 use super::forward::ResumableForward;
 use super::lanes::TileScheduler;
-use super::pool::{LaneBudget, LaneJob};
+use super::pool::{self, LaneBudget, LaneJob};
+use super::scratch::{self, ScratchArena};
 
 /// Default patch rows per execution tile: the 64-patch resident tile
 /// of the area model's working-set convention.
@@ -30,20 +32,94 @@ pub const DEFAULT_TILE_PATCHES: usize = 64;
 
 /// Which bitwise kernel evaluates Eq. (1) over the packed planes.
 ///
-/// Both produce bit-identical raw outputs (pinned by property test in
-/// `bitops::gemm`); they differ only in loop order and therefore host
-/// speed. `OpLedger` accounting is identical for both — the ledger
-/// counts logical array row-ops, not host instructions.
+/// All tiers produce bit-identical raw outputs (pinned by property
+/// tests in `bitops::gemm` and below); they differ only in loop order
+/// and host instructions, and therefore host speed. `OpLedger`
+/// accounting is identical for all — the ledger counts logical array
+/// row-ops, not host instructions.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum GemmKernel {
     /// Plane-pair-major, register-blocked, Harley–Seal popcount
-    /// ([`bitops::gemm::bitwise_gemm`]) — the fast path.
+    /// ([`bitops::gemm::bitwise_gemm`]) — the scalar fast path.
     #[default]
     PlanePair,
+    /// Plane-pair order through the filter-major SIMD row kernel
+    /// ([`bitops::gemm::bitwise_gemm_simd_interleaved`]): AVX2/NEON
+    /// when the host has them, the unrolled portable kernel
+    /// otherwise (`bitops::simd::backend`).
+    Simd,
     /// The per-output [`bitops::and_accumulate`] loop — kept as the
     /// in-tree reference the determinism tests and benches compare
     /// against.
     PerOutput,
+}
+
+impl std::fmt::Display for GemmKernel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            GemmKernel::PlanePair => "planepair",
+            GemmKernel::Simd => "simd",
+            GemmKernel::PerOutput => "peroutput",
+        })
+    }
+}
+
+/// How the serving surface picks a [`GemmKernel`]: resolved once at
+/// plan-compile/launch time (`RunConfig.kernel` / `--kernel`), never
+/// per frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelDispatch {
+    /// Best tier this host supports: [`GemmKernel::Simd`] when
+    /// runtime feature detection finds a vector unit, else
+    /// [`GemmKernel::PlanePair`].
+    #[default]
+    Auto,
+    /// Explicit kernel override.
+    Fixed(GemmKernel),
+}
+
+impl KernelDispatch {
+    /// The concrete kernel this dispatch selects on this host.
+    pub fn resolve(self) -> GemmKernel {
+        match self {
+            KernelDispatch::Auto => {
+                if bitops::simd::backend()
+                    == bitops::simd::SimdBackend::Portable
+                {
+                    GemmKernel::PlanePair
+                } else {
+                    GemmKernel::Simd
+                }
+            }
+            KernelDispatch::Fixed(k) => k,
+        }
+    }
+}
+
+impl std::str::FromStr for KernelDispatch {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<KernelDispatch> {
+        Ok(match s {
+            "auto" => KernelDispatch::Auto,
+            "simd" => KernelDispatch::Fixed(GemmKernel::Simd),
+            "planepair" => KernelDispatch::Fixed(GemmKernel::PlanePair),
+            "peroutput" => KernelDispatch::Fixed(GemmKernel::PerOutput),
+            other => anyhow::bail!(
+                "unknown kernel '{other}' \
+                 (expected auto|simd|planepair|peroutput)"
+            ),
+        })
+    }
+}
+
+impl std::fmt::Display for KernelDispatch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            KernelDispatch::Auto => f.write_str("auto"),
+            KernelDispatch::Fixed(k) => write!(f, "{k}"),
+        }
+    }
 }
 
 /// Which integer GEMM engine computes Eq. (1).
@@ -65,6 +141,9 @@ pub struct LayerPlan {
     pub(crate) codes_t: Vec<u32>,
     /// Bit-plane decomposition of `codes_t` (NV-resident, immutable).
     pub(crate) wp: BitPlanes,
+    /// Word-major interleave of `wp` for the SIMD row kernel — same
+    /// packed bits, different word order; built once here at compile.
+    pub(crate) wt: InterleavedPlanes,
     /// Output patch rows (P of the GEMM view).
     pub p: usize,
     /// Reduction length.
@@ -164,7 +243,8 @@ impl ModelPlan {
                     (0..f * k).map(|_| rng.below(1u32 << n_bits)).collect();
                 let wp =
                     BitPlanes::from_codes(&codes_t, f, k, n_bits as usize);
-                LayerPlan { codes_t, wp, p, k, f, m_bits, n_bits }
+                let wt = InterleavedPlanes::from_planes(&wp);
+                LayerPlan { codes_t, wp, wt, p, k, f, m_bits, n_bits }
             }));
         }
         Ok(ModelPlan {
@@ -278,20 +358,22 @@ impl ModelPlan {
 
     /// A whole coordinator batch through the bitwise path: `flat` holds
     /// `batch * input_elems` values, image-major. Images are assigned
-    /// to engine lanes round-robin (deterministic), each lane reuses
-    /// one scratch allocation across its images, plan lookup is
-    /// amortized over the batch, and lane jobs run on the process-wide
+    /// to engine lanes round-robin (deterministic), each lane runs out
+    /// of its persistent thread-local [`ScratchArena`] (zero
+    /// steady-state allocations per frame), plan lookup is amortized
+    /// over the batch, and lane jobs run on the process-wide
     /// persistent [`crate::engine::LaneRuntime`] — no thread is
     /// spawned per batch, and coordinator workers share one thread
     /// budget. Logits are bit-identical to running [`Self::forward`]
-    /// per image, for any lane count.
+    /// per image, for any lane count. Executes the scheduler's
+    /// configured [`GemmKernel`] (`TileScheduler::with_kernel`).
     pub fn forward_batch(
         &self,
         flat: &[f32],
         batch: usize,
         sched: &TileScheduler,
     ) -> Result<BatchOutput> {
-        self.forward_batch_with(flat, batch, sched, GemmKernel::default())
+        self.forward_batch_with(flat, batch, sched, sched.kernel())
     }
 
     /// [`Self::forward_batch`] with an explicit bitwise kernel choice.
@@ -317,15 +399,20 @@ impl ModelPlan {
         let mut logits = vec![0f32; batch * self.num_classes];
         let mut ledger = OpLedger::default();
         if lanes <= 1 {
-            let mut scratch = Scratch::default();
-            for (img, out) in flat
-                .chunks(self.input_elems)
-                .zip(logits.chunks_mut(self.num_classes))
-            {
-                let y =
-                    self.forward_whole(img, &mut scratch, &mut ledger, kernel);
-                out.copy_from_slice(&y);
-            }
+            pool::with_arena(|arena| {
+                for (img, out) in flat
+                    .chunks(self.input_elems)
+                    .zip(logits.chunks_mut(self.num_classes))
+                {
+                    self.forward_whole(
+                        img,
+                        arena,
+                        &mut ledger,
+                        kernel,
+                        out,
+                    );
+                }
+            });
             return Ok(BatchOutput { logits, ledger, traffic });
         }
         // Round-robin image -> lane assignment; each lane owns disjoint
@@ -346,18 +433,19 @@ impl ModelPlan {
             .zip(lane_ledgers.iter_mut())
             .map(|(images, slot)| {
                 Box::new(move || {
-                    let mut scratch = Scratch::default();
-                    let mut lane_ledger = OpLedger::default();
-                    for (img, out) in images {
-                        let y = self.forward_whole(
-                            img,
-                            &mut scratch,
-                            &mut lane_ledger,
-                            kernel,
-                        );
-                        out.copy_from_slice(&y);
-                    }
-                    *slot = Some(lane_ledger);
+                    pool::with_arena(|arena| {
+                        let mut lane_ledger = OpLedger::default();
+                        for (img, out) in images {
+                            self.forward_whole(
+                                img,
+                                arena,
+                                &mut lane_ledger,
+                                kernel,
+                                out,
+                            );
+                        }
+                        *slot = Some(lane_ledger);
+                    });
                 }) as LaneJob<'_>
             })
             .collect();
@@ -373,28 +461,34 @@ impl ModelPlan {
     /// The oracle path: identical layer walk and f32 post-processing,
     /// but dense integer dots instead of bit-plane AND-accumulation.
     pub fn reference_logits(&self, image: &[f32]) -> Vec<f32> {
-        let mut scratch = Scratch::default();
-        self.walk_layers(image, GemmEngine::IntDot, &mut scratch, None)
+        let mut arena = ScratchArena::default();
+        self.walk_layers(image, GemmEngine::IntDot, &mut arena, None);
+        arena.x
     }
 
     /// Whole-layer bitwise execution with ledger accounting — the
-    /// serving hot path (one lane's work inside [`Self::forward_batch`]).
+    /// serving hot path (one lane's work inside
+    /// [`Self::forward_batch`]). Logits land in `out`.
     fn forward_whole(
         &self,
         image: &[f32],
-        scratch: &mut Scratch,
+        arena: &mut ScratchArena,
         ledger: &mut OpLedger,
         kernel: GemmKernel,
-    ) -> Vec<f32> {
+        out: &mut [f32],
+    ) {
         self.walk_layers(
             image,
             GemmEngine::Bitwise(kernel),
-            scratch,
+            arena,
             Some(ledger),
-        )
+        );
+        out.copy_from_slice(&arena.x);
     }
 
-    /// Shared layer walk of both whole-layer engines. Byte-for-byte the
+    /// Shared layer walk of both whole-layer engines, entirely out of
+    /// the caller's [`ScratchArena`] (the final activations — the
+    /// logits — are left in `arena.x`). Byte-for-byte the
     /// post-processing order of the tiled path, so all three execution
     /// modes (dense oracle, whole-layer bitwise, resumable tiles) are
     /// bit-identical.
@@ -402,11 +496,14 @@ impl ModelPlan {
         &self,
         image: &[f32],
         engine: GemmEngine,
-        scratch: &mut Scratch,
+        arena: &mut ScratchArena,
         mut ledger: Option<&mut OpLedger>,
-    ) -> Vec<f32> {
+    ) {
         debug_assert_eq!(image.len(), self.input_elems, "image geometry");
-        let mut x = image.to_vec();
+        let cap_before = arena.capacity_units();
+        let ScratchArena { x, y, codes, patches, ip, raw } = arena;
+        x.clear();
+        x.extend_from_slice(image);
         let (mut h, mut w, mut c) = (
             self.model.input_hw,
             self.model.input_hw,
@@ -416,41 +513,38 @@ impl ModelPlan {
         for (li, layer) in self.model.layers.iter().enumerate() {
             match layer {
                 Layer::Pool { window, .. } => {
-                    x = avg_pool(&x, h, w, c, *window);
+                    avg_pool_into(x, h, w, c, *window, y);
+                    std::mem::swap(x, y);
                     h /= *window;
                     w /= *window;
                 }
                 Layer::Conv { kernel, stride, pad, cout, .. } => {
                     let lw = self.layers[li].as_ref().expect("conv plan");
-                    let ia = quant::act_to_codes(&x, lw.m_bits);
-                    let (patches, oh, ow) = bitops::im2col(
-                        &ia, h, w, c, *kernel, *kernel, *stride, *pad,
+                    quant::act_to_codes_into(x, lw.m_bits, codes);
+                    let (oh, ow) = bitops::im2col_into(
+                        codes, h, w, c, *kernel, *kernel, *stride, *pad,
+                        patches,
                     );
                     let p = oh * ow;
-                    gemm_raw_into(
-                        &patches,
-                        0,
-                        p,
-                        lw,
-                        engine,
-                        &mut scratch.raw,
-                    );
+                    gemm_raw_into(patches, 0, p, lw, engine, ip, raw);
                     if let Some(l) = ledger.as_deref_mut() {
                         l.merge(&and_tile_ledger(lw, p));
                     }
-                    x = postprocess(&scratch.raw, &patches, p, lw, li == last);
+                    postprocess_into(raw, patches, p, lw, li == last, y);
+                    std::mem::swap(x, y);
                     h = oh;
                     w = ow;
                     c = *cout;
                 }
                 Layer::Fc { cout, .. } => {
                     let lw = self.layers[li].as_ref().expect("fc plan");
-                    let ia = quant::act_to_codes(&x, lw.m_bits);
-                    gemm_raw_into(&ia, 0, 1, lw, engine, &mut scratch.raw);
+                    quant::act_to_codes_into(x, lw.m_bits, codes);
+                    gemm_raw_into(codes, 0, 1, lw, engine, ip, raw);
                     if let Some(l) = ledger.as_deref_mut() {
                         l.merge(&and_tile_ledger(lw, 1));
                     }
-                    x = postprocess(&scratch.raw, &ia, 1, lw, li == last);
+                    postprocess_into(raw, codes, 1, lw, li == last, y);
+                    std::mem::swap(x, y);
                     h = 1;
                     w = 1;
                     c = *cout;
@@ -458,29 +552,23 @@ impl ModelPlan {
             }
         }
         debug_assert_eq!(x.len(), self.num_classes);
-        x
+        scratch::note_capacity_change(cap_before, arena.capacity_units());
     }
-}
-
-/// Per-lane scratch reused across the images of a batch: the raw
-/// Eq.-1 partial-sum buffer is the largest per-layer allocation
-/// (`P x F` u64 words), so one lane allocates it once per layer shape
-/// instead of once per image.
-#[derive(Debug, Default)]
-struct Scratch {
-    raw: Vec<u64>,
 }
 
 /// Raw Eq.-1 outputs for patch rows `[row_start, row_end)` of one
 /// layer into `out` (exactly `(row_end - row_start) * F` words), in
 /// (patch, filter) order — tile-chunked calls concatenate to exactly
-/// the whole-layer result.
+/// the whole-layer result. `ip` is the caller's activation plane
+/// scratch ([`ScratchArena::ip`] or the tiled path's per-call arena),
+/// taken explicitly so this leaf never re-enters `pool::with_arena`.
 pub(crate) fn gemm_raw_slice(
     ia: &[u32],
     row_start: usize,
     row_end: usize,
     lw: &LayerPlan,
     engine: GemmEngine,
+    ip: &mut BitPlanes,
     out: &mut [u64],
 ) {
     debug_assert!(row_end <= ia.len() / lw.k);
@@ -488,22 +576,29 @@ pub(crate) fn gemm_raw_slice(
     debug_assert_eq!(out.len(), rows * lw.f);
     match engine {
         GemmEngine::Bitwise(kernel) => {
-            let ip = BitPlanes::from_codes(
+            let cap_before = ip.capacity_words();
+            ip.repack_from_codes(
                 &ia[row_start * lw.k..row_end * lw.k],
                 rows,
                 lw.k,
                 lw.m_bits as usize,
             );
+            scratch::note_capacity_change(cap_before, ip.capacity_words());
             match kernel {
                 GemmKernel::PlanePair => {
-                    bitops::gemm::bitwise_gemm(&ip, &lw.wp, out);
+                    bitops::gemm::bitwise_gemm(ip, &lw.wp, out);
+                }
+                GemmKernel::Simd => {
+                    bitops::gemm::bitwise_gemm_simd_interleaved(
+                        ip, &lw.wt, out,
+                    );
                 }
                 GemmKernel::PerOutput => {
                     let mut idx = 0;
                     for i in 0..rows {
                         for j in 0..lw.f {
                             out[idx] =
-                                bitops::and_accumulate(&ip, i, &lw.wp, j);
+                                bitops::and_accumulate(ip, i, &lw.wp, j);
                             idx += 1;
                         }
                     }
@@ -531,11 +626,12 @@ pub(crate) fn gemm_raw_into(
     row_end: usize,
     lw: &LayerPlan,
     engine: GemmEngine,
+    ip: &mut BitPlanes,
     out: &mut Vec<u64>,
 ) {
     out.clear();
     out.resize((row_end - row_start) * lw.f, 0);
-    gemm_raw_slice(ia, row_start, row_end, lw, engine, out);
+    gemm_raw_slice(ia, row_start, row_end, lw, engine, ip, out);
 }
 
 /// Shared dequantize + activation over a whole layer's raw outputs —
@@ -548,9 +644,25 @@ pub(crate) fn postprocess(
     lw: &LayerPlan,
     is_last: bool,
 ) -> Vec<f32> {
+    let mut out = Vec::new();
+    postprocess_into(raw, ia, p, lw, is_last, &mut out);
+    out
+}
+
+/// [`postprocess`] into a reusable buffer (cleared + resized) — the
+/// arena hot path.
+pub(crate) fn postprocess_into(
+    raw: &[u64],
+    ia: &[u32],
+    p: usize,
+    lw: &LayerPlan,
+    is_last: bool,
+    out: &mut Vec<f32>,
+) {
     debug_assert_eq!(raw.len(), p * lw.f);
     debug_assert_eq!(ia.len(), p * lw.k);
-    let mut out = vec![0f32; p * lw.f];
+    out.clear();
+    out.resize(p * lw.f, 0f32);
     for i in 0..p {
         let psum: u64 = ia[i * lw.k..(i + 1) * lw.k]
             .iter()
@@ -568,7 +680,6 @@ pub(crate) fn postprocess(
                 if is_last { y } else { hidden_activation(y, lw.k) };
         }
     }
-    out
 }
 
 /// Hidden-layer activation: re-center the dequantized partial into
@@ -585,10 +696,25 @@ pub(crate) fn avg_pool(
     c: usize,
     win: usize,
 ) -> Vec<f32> {
+    let mut out = Vec::new();
+    avg_pool_into(x, h, w, c, win, &mut out);
+    out
+}
+
+/// [`avg_pool`] into a reusable buffer (cleared + resized).
+pub(crate) fn avg_pool_into(
+    x: &[f32],
+    h: usize,
+    w: usize,
+    c: usize,
+    win: usize,
+    out: &mut Vec<f32>,
+) {
     debug_assert_eq!(x.len(), h * w * c);
     let (oh, ow) = (h / win, w / win);
     let norm = (win * win) as f32;
-    let mut out = vec![0f32; oh * ow * c];
+    out.clear();
+    out.resize(oh * ow * c, 0f32);
     for oy in 0..oh {
         for ox in 0..ow {
             for ch in 0..c {
@@ -603,7 +729,6 @@ pub(crate) fn avg_pool(
             }
         }
     }
-    out
 }
 
 #[cfg(test)]
@@ -664,6 +789,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // full forwards are too slow interpreted
     fn forward_batch_matches_per_image_forward_property() {
         // Satellite acceptance (a): forward_batch == per-image forward,
         // elementwise, across random configs/batches/lane counts.
@@ -703,12 +829,13 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // full forwards are too slow interpreted
     fn kernels_bit_identical_logits_and_ledgers_property() {
-        // The plane-pair fast path and the per-output reference loop
-        // are the same computation: logits AND OpLedger totals match
-        // bit-for-bit, and both match the dense oracle.
+        // The plane-pair fast path, the SIMD tier, and the per-output
+        // reference loop are the same computation: logits AND OpLedger
+        // totals match bit-for-bit, and all match the dense oracle.
         let mut r = Runner::with_cases(0x6E78, 8);
-        r.run("PlanePair == PerOutput == oracle", |g| {
+        r.run("PlanePair == Simd == PerOutput == oracle", |g| {
             let plan = ModelPlan::compile(
                 cnn::micro_net(),
                 g.u32(1, 2),
@@ -730,17 +857,20 @@ mod tests {
                     GemmKernel::PlanePair,
                 )
                 .unwrap();
-            let refr = plan
-                .forward_batch_with(
-                    &flat,
-                    batch,
-                    &sched,
-                    GemmKernel::PerOutput,
-                )
-                .unwrap();
-            assert_eq!(fast.logits, refr.logits, "kernel logits diverged");
-            assert_eq!(fast.ledger, refr.ledger, "kernel ledger diverged");
-            assert_eq!(fast.traffic, refr.traffic);
+            for kernel in [GemmKernel::Simd, GemmKernel::PerOutput] {
+                let refr = plan
+                    .forward_batch_with(&flat, batch, &sched, kernel)
+                    .unwrap();
+                assert_eq!(
+                    fast.logits, refr.logits,
+                    "{kernel} logits diverged"
+                );
+                assert_eq!(
+                    fast.ledger, refr.ledger,
+                    "{kernel} ledger diverged"
+                );
+                assert_eq!(fast.traffic, refr.traffic);
+            }
             for b in 0..batch {
                 let image = &flat
                     [b * plan.input_elems()..(b + 1) * plan.input_elems()];
@@ -755,6 +885,79 @@ mod tests {
     }
 
     #[test]
+    fn kernel_dispatch_parses_resolves_and_displays() {
+        use crate::bitops::simd::{backend, SimdBackend};
+        assert_eq!(
+            "auto".parse::<KernelDispatch>().unwrap(),
+            KernelDispatch::Auto
+        );
+        assert_eq!(
+            "simd".parse::<KernelDispatch>().unwrap(),
+            KernelDispatch::Fixed(GemmKernel::Simd)
+        );
+        assert_eq!(
+            "planepair".parse::<KernelDispatch>().unwrap(),
+            KernelDispatch::Fixed(GemmKernel::PlanePair)
+        );
+        assert_eq!(
+            "peroutput".parse::<KernelDispatch>().unwrap(),
+            KernelDispatch::Fixed(GemmKernel::PerOutput)
+        );
+        let err = "fast".parse::<KernelDispatch>().unwrap_err();
+        assert!(err.to_string().contains("fast"), "{err}");
+        match backend() {
+            SimdBackend::Portable => assert_eq!(
+                KernelDispatch::Auto.resolve(),
+                GemmKernel::PlanePair
+            ),
+            _ => assert_eq!(
+                KernelDispatch::Auto.resolve(),
+                GemmKernel::Simd
+            ),
+        }
+        assert_eq!(
+            KernelDispatch::Fixed(GemmKernel::PerOutput).resolve(),
+            GemmKernel::PerOutput
+        );
+        assert_eq!(KernelDispatch::Auto.to_string(), "auto");
+        assert_eq!(
+            KernelDispatch::Fixed(GemmKernel::Simd).to_string(),
+            "simd"
+        );
+        assert_eq!(GemmKernel::PlanePair.to_string(), "planepair");
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[cfg_attr(miri, ignore)] // full forwards are too slow interpreted
+    fn forward_batch_steady_state_allocates_nothing() {
+        use super::super::scratch;
+        // Serial schedule: the whole batch runs inline on this thread,
+        // so this thread's arena and growth counter see all of it.
+        let p = plan();
+        let batch = 3;
+        let flat: Vec<f32> = (0..batch)
+            .flat_map(|b| img(p.input_elems(), b))
+            .collect();
+        for kernel in
+            [GemmKernel::Simd, GemmKernel::PlanePair, GemmKernel::PerOutput]
+        {
+            let sched = TileScheduler::new(1).with_kernel(kernel);
+            // Warm-up grows the arena to the model's high-water mark.
+            let warm = p.forward_batch(&flat, batch, &sched).unwrap();
+            let before = scratch::alloc_grows();
+            let out = p.forward_batch(&flat, batch, &sched).unwrap();
+            assert_eq!(
+                scratch::alloc_grows(),
+                before,
+                "steady-state {kernel} forward_batch grew the arena"
+            );
+            assert_eq!(out.logits, warm.logits);
+        }
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)] // full forwards are too slow interpreted
     fn lane_counts_bit_identical_logits_and_ledgers() {
         // Satellite acceptance (b): lanes {1, 2, 8} produce
         // bit-identical logits and identical merged ledger totals.

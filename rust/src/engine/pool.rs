@@ -32,13 +32,42 @@
 //! panicking job marks the latch and `run_jobs` re-raises
 //! `"engine lane panicked"` after the scope drains, matching the
 //! scoped-spawn behaviour.
+//!
+//! ## Per-lane scratch arenas
+//!
+//! Because the workers are persistent, each one can own a
+//! [`ScratchArena`] for the engine's allocation-free hot path:
+//! [`with_arena`] hands out the calling thread's arena (pool worker
+//! or caller — the help-drain path runs jobs on the caller thread
+//! too), and the buffers inside survive across jobs, batches, and
+//! frames. Ownership rule: the arena is strictly thread-local and
+//! handed out only for the duration of one `with_arena` closure;
+//! nesting `with_arena` panics via the `RefCell`, which is why the
+//! GEMM layer takes its plane scratch as an explicit argument instead
+//! of re-entering the arena (see `engine::scratch`).
 
+use std::cell::RefCell;
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 use crate::arch::ChipOrg;
+
+use super::scratch::ScratchArena;
+
+thread_local! {
+    /// This thread's engine scratch arena (see module docs).
+    static ARENA: RefCell<ScratchArena> =
+        RefCell::new(ScratchArena::default());
+}
+
+/// Run `f` with exclusive access to the calling thread's
+/// [`ScratchArena`]. Panics on nested use — hold the arena only
+/// across one leaf computation, never across another `with_arena`.
+pub(crate) fn with_arena<R>(f: impl FnOnce(&mut ScratchArena) -> R) -> R {
+    ARENA.with(|a| f(&mut a.borrow_mut()))
+}
 
 /// A borrowed engine job: runs once, writes only caller-owned state.
 pub type LaneJob<'env> = Box<dyn FnOnce() + Send + 'env>;
@@ -426,6 +455,25 @@ mod tests {
                 assert_eq!(*v, t * 100 + i);
             }
         }
+    }
+
+    #[test]
+    fn arena_persists_across_calls_and_rejects_nesting() {
+        let cap = with_arena(|a| {
+            a.raw.clear();
+            a.raw.resize(1024, 0);
+            a.raw.capacity()
+        });
+        assert!(cap >= 1024);
+        let cap_again = with_arena(|a| a.raw.capacity());
+        assert!(
+            cap_again >= cap,
+            "arena buffers must survive between calls"
+        );
+        let nested = catch_unwind(AssertUnwindSafe(|| {
+            with_arena(|_outer| with_arena(|inner| inner.raw.len()))
+        }));
+        assert!(nested.is_err(), "nested with_arena must panic loudly");
     }
 
     #[test]

@@ -1,0 +1,124 @@
+//! Per-lane scratch arena for the allocation-free engine hot path.
+//!
+//! Every buffer the whole-layer walk needs — activation maps,
+//! quantized codes, im2col patches, the activation bit-plane
+//! decomposition, and the raw Eq.-1 partial-sum panel — lives in one
+//! [`ScratchArena`] owned by the executing thread
+//! ([`super::pool::with_arena`] keeps one per lane worker in a
+//! thread-local). Buffers are cleared and resized per layer but never
+//! shrunk, so after a warm-up frame at a stable model geometry the
+//! per-frame hot path allocates nothing.
+//!
+//! Debug builds count every capacity growth the hot path causes in a
+//! thread-local ([`alloc_grows`]); the steady-state test in
+//! `engine::plan` pins the count unchanged across a warmed-up
+//! `forward_batch`.
+
+use crate::bitops::BitPlanes;
+
+/// One lane's reusable buffers (see module docs). Obtain through
+/// `engine::pool::with_arena`; the GEMM layer takes its activation
+/// plane scratch as an explicit argument precisely so nothing ever
+/// needs a nested `with_arena` (the `RefCell` would panic loudly).
+#[derive(Debug)]
+pub(crate) struct ScratchArena {
+    /// Current activation map, output of the previous layer.
+    pub(crate) x: Vec<f32>,
+    /// Next activation map; swapped with `x` after each layer.
+    pub(crate) y: Vec<f32>,
+    /// Quantized activation codes of the current layer's input.
+    pub(crate) codes: Vec<u32>,
+    /// im2col patch rows of the current conv layer.
+    pub(crate) patches: Vec<u32>,
+    /// Activation bit-plane decomposition, re-packed per GEMM call.
+    pub(crate) ip: BitPlanes,
+    /// Raw Eq.-1 partial-sum panel (`P x F` u64 words).
+    pub(crate) raw: Vec<u64>,
+}
+
+impl Default for ScratchArena {
+    fn default() -> Self {
+        ScratchArena {
+            x: Vec::new(),
+            y: Vec::new(),
+            codes: Vec::new(),
+            patches: Vec::new(),
+            ip: BitPlanes::empty(),
+            raw: Vec::new(),
+        }
+    }
+}
+
+impl ScratchArena {
+    /// Summed capacity (in elements) of the `Vec` buffers. `Vec`
+    /// capacity is monotone, so a before/after compare of this sum
+    /// catches any growth in one check per layer walk. The `ip` plane
+    /// set is tracked separately at its repack site
+    /// (`engine::plan::gemm_raw_slice`), which also covers the tiled
+    /// path that uses only `ip`.
+    pub(crate) fn capacity_units(&self) -> usize {
+        self.x.capacity()
+            + self.y.capacity()
+            + self.codes.capacity()
+            + self.patches.capacity()
+            + self.raw.capacity()
+    }
+}
+
+#[cfg(debug_assertions)]
+thread_local! {
+    /// Hot-path buffer growths observed on this thread (debug only).
+    static GROWS: std::cell::Cell<u64> = const { std::cell::Cell::new(0) };
+}
+
+/// Record a capacity change of a hot-path buffer: one growth event
+/// when `after > before`. Compiled to nothing in release builds.
+#[inline]
+pub(crate) fn note_capacity_change(before: usize, after: usize) {
+    #[cfg(debug_assertions)]
+    if after > before {
+        GROWS.with(|g| g.set(g.get() + 1));
+    }
+    #[cfg(not(debug_assertions))]
+    let _ = (before, after);
+}
+
+/// This thread's hot-path growth count (debug builds only) — snapshot
+/// before and after a steady-state call to prove it allocated nothing.
+#[cfg(debug_assertions)]
+pub(crate) fn alloc_grows() -> u64 {
+    GROWS.with(|g| g.get())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capacity_units_is_monotone_under_reuse() {
+        let mut a = ScratchArena::default();
+        assert_eq!(a.capacity_units(), 0);
+        a.x.resize(100, 0.0);
+        a.raw.resize(50, 0);
+        let warm = a.capacity_units();
+        assert!(warm >= 150);
+        // Clearing and refilling at or below the high-water mark must
+        // not change capacity.
+        a.x.clear();
+        a.x.resize(80, 0.0);
+        a.raw.clear();
+        a.raw.resize(50, 0);
+        assert_eq!(a.capacity_units(), warm);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    fn grow_counter_counts_growth_only() {
+        let base = alloc_grows();
+        note_capacity_change(10, 10);
+        note_capacity_change(10, 9);
+        assert_eq!(alloc_grows(), base, "non-growth must not count");
+        note_capacity_change(10, 11);
+        assert_eq!(alloc_grows(), base + 1);
+    }
+}

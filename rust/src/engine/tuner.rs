@@ -39,7 +39,7 @@ use crate::arch::{ChipOrg, HTree, LaneTraffic};
 use crate::jsonlite::Json;
 use crate::subarray::PARTIAL_SUM_BITS;
 
-use super::plan::{LayerPlan, ModelPlan};
+use super::plan::{GemmKernel, LayerPlan, ModelPlan};
 
 /// Widest per-layer lane count the tuner will consider. The chip
 /// clamp ([`ChipOrg::engine_lanes`]) still applies on top; this keeps
@@ -57,12 +57,19 @@ pub const MAX_AUTO_LANES: usize = 512;
 ///
 /// Keys of the JSON form (all finite and > 0):
 /// `{"kernel_ns_per_row_op": .., "wire_ns_per_bit_level": ..,
-///   "hop_ns": ..}`.
+///   "hop_ns": ..}`, plus an OPTIONAL per-kernel row
+/// `"simd_ns_per_row_op"` measured on hosts whose SIMD GEMM tier beats
+/// the scalar plane-pair kernel — `--lanes auto` then re-knees against
+/// the kernel actually dispatched (DESIGN.md §12).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Calibration {
     /// ns one logical array row-op costs on the executing substrate
     /// (modeled: AND sense + write-back = two array cycles).
     pub kernel_ns_per_row_op: f64,
+    /// Measured row-op cost of the SIMD GEMM tier, when `hotpath_micro`
+    /// ran on a host with a vector backend. `None` keeps every kernel
+    /// scored with [`Self::kernel_ns_per_row_op`].
+    pub simd_ns_per_row_op: Option<f64>,
     /// ns to move one bit across one H-tree level (modeled: one array
     /// cycle per `cols`-bit row width per level).
     pub wire_ns_per_bit_level: f64,
@@ -78,6 +85,7 @@ impl Calibration {
         let cycle_ns = Proposed::default().cycle_ns;
         Calibration {
             kernel_ns_per_row_op: 2.0 * cycle_ns,
+            simd_ns_per_row_op: None,
             wire_ns_per_bit_level: cycle_ns / org.subarray.cols as f64,
             hop_ns: htree.latency_ns_per_level,
         }
@@ -100,8 +108,13 @@ impl Calibration {
             );
             Ok(v)
         };
+        let simd_ns_per_row_op = match j.get("simd_ns_per_row_op") {
+            None => None,
+            Some(_) => Some(field("simd_ns_per_row_op")?),
+        };
         Ok(Calibration {
             kernel_ns_per_row_op: field("kernel_ns_per_row_op")?,
+            simd_ns_per_row_op,
             wire_ns_per_bit_level: field("wire_ns_per_bit_level")?,
             hop_ns: field("hop_ns")?,
         })
@@ -116,15 +129,44 @@ impl Calibration {
             .with_context(|| format!("parsing calibration {path}"))
     }
 
-    /// The JSON object form [`Self::load`] reads back.
+    /// The JSON object form [`Self::load`] reads back. The optional
+    /// SIMD row appears only when measured, so tables from
+    /// portable-only hosts stay byte-identical to the PR 6 format.
     pub fn dump(&self) -> String {
+        let simd = match self.simd_ns_per_row_op {
+            Some(v) => format!("\"simd_ns_per_row_op\": {v}, "),
+            None => String::new(),
+        };
         format!(
             "{{\"hop_ns\": {}, \"kernel_ns_per_row_op\": {}, \
-             \"wire_ns_per_bit_level\": {}}}",
+             {simd}\"wire_ns_per_bit_level\": {}}}",
             self.hop_ns,
             self.kernel_ns_per_row_op,
             self.wire_ns_per_bit_level
         )
+    }
+
+    /// The measured row-op cost of `kernel`: the SIMD tier uses its
+    /// own row when one was measured, every other kernel (and SIMD
+    /// without a measurement) uses the scalar row.
+    pub fn ns_per_row_op(&self, kernel: GemmKernel) -> f64 {
+        match kernel {
+            GemmKernel::Simd => self
+                .simd_ns_per_row_op
+                .unwrap_or(self.kernel_ns_per_row_op),
+            _ => self.kernel_ns_per_row_op,
+        }
+    }
+
+    /// The table collapsed onto `kernel`: what the lane scorer
+    /// optimizes against when that kernel executes the tiles.
+    pub fn for_kernel(&self, kernel: GemmKernel) -> Calibration {
+        Calibration {
+            kernel_ns_per_row_op: self.ns_per_row_op(kernel),
+            simd_ns_per_row_op: None,
+            wire_ns_per_bit_level: self.wire_ns_per_bit_level,
+            hop_ns: self.hop_ns,
+        }
     }
 }
 
@@ -189,6 +231,19 @@ impl LaneSchedule {
             })
             .collect();
         LaneSchedule { lanes: Lanes::PerLayer(lanes.into()) }
+    }
+
+    /// [`Self::auto_with`] scored for the kernel that will execute the
+    /// tiles: on hosts whose calibration carries a measured SIMD row,
+    /// the cheaper compute term moves the fan-out knee toward serial
+    /// (wire costs are kernel-independent).
+    pub fn auto_with_kernel(
+        plan: &ModelPlan,
+        org: &ChipOrg,
+        cal: &Calibration,
+        kernel: GemmKernel,
+    ) -> LaneSchedule {
+        Self::auto_with(plan, org, &cal.for_kernel(kernel))
     }
 
     /// Lane count of layer `li` (1 for layers past the schedule).
@@ -466,11 +521,73 @@ mod tests {
     fn calibration_json_round_trip() {
         let cal = Calibration {
             kernel_ns_per_row_op: 3.25,
+            simd_ns_per_row_op: None,
             wire_ns_per_bit_level: 0.004,
             hop_ns: 0.31,
         };
         let j = Json::parse(&cal.dump()).unwrap();
         assert_eq!(Calibration::from_json(&j).unwrap(), cal);
+        assert!(
+            !cal.dump().contains("simd_ns_per_row_op"),
+            "unmeasured tables keep the PR 6 format"
+        );
+        let with_simd = Calibration {
+            simd_ns_per_row_op: Some(1.75),
+            ..cal.clone()
+        };
+        let j = Json::parse(&with_simd.dump()).unwrap();
+        assert_eq!(Calibration::from_json(&j).unwrap(), with_simd);
+    }
+
+    #[test]
+    fn per_kernel_row_selects_and_shifts_the_knee() {
+        let base = Calibration {
+            kernel_ns_per_row_op: 4.0,
+            simd_ns_per_row_op: Some(1.0),
+            wire_ns_per_bit_level: 0.004,
+            hop_ns: 0.31,
+        };
+        assert_eq!(base.ns_per_row_op(GemmKernel::PlanePair), 4.0);
+        assert_eq!(base.ns_per_row_op(GemmKernel::PerOutput), 4.0);
+        assert_eq!(base.ns_per_row_op(GemmKernel::Simd), 1.0);
+        let no_row =
+            Calibration { simd_ns_per_row_op: None, ..base.clone() };
+        assert_eq!(
+            no_row.ns_per_row_op(GemmKernel::Simd),
+            4.0,
+            "no measured row falls back to the scalar cost"
+        );
+        let collapsed = base.for_kernel(GemmKernel::Simd);
+        assert_eq!(collapsed.kernel_ns_per_row_op, 1.0);
+        assert_eq!(collapsed.simd_ns_per_row_op, None);
+        // A 4x cheaper compute term can only narrow (or keep) every
+        // layer's fan-out: wire costs are unchanged, so the knee moves
+        // toward serial.
+        let p = plan();
+        let org = ChipOrg::default();
+        let scalar = LaneSchedule::auto_with(&p, &org, &no_row);
+        let simd = LaneSchedule::auto_with_kernel(
+            &p,
+            &org,
+            &base,
+            GemmKernel::Simd,
+        );
+        for li in 0..p.model().layers.len() {
+            assert!(
+                simd.layer_lanes(li) <= scalar.layer_lanes(li),
+                "cheaper compute widened layer {li}: {simd} vs {scalar}"
+            );
+        }
+        assert_eq!(
+            LaneSchedule::auto_with_kernel(
+                &p,
+                &org,
+                &base,
+                GemmKernel::PlanePair
+            ),
+            scalar,
+            "scalar kernels ignore the SIMD row"
+        );
     }
 
     #[test]
@@ -481,6 +598,9 @@ mod tests {
             "{\"hop_ns\": 0.0, \"kernel_ns_per_row_op\": 1.0, \
              \"wire_ns_per_bit_level\": 1.0}",
             "{\"hop_ns\": -1.0, \"kernel_ns_per_row_op\": 1.0, \
+             \"wire_ns_per_bit_level\": 1.0}",
+            "{\"hop_ns\": 1.0, \"kernel_ns_per_row_op\": 1.0, \
+             \"simd_ns_per_row_op\": 0.0, \
              \"wire_ns_per_bit_level\": 1.0}",
         ] {
             let j = Json::parse(text).unwrap();
@@ -502,6 +622,7 @@ mod tests {
         let org = ChipOrg::default();
         let wire_bound = Calibration {
             kernel_ns_per_row_op: 1e-6,
+            simd_ns_per_row_op: None,
             wire_ns_per_bit_level: 10.0,
             hop_ns: 1e6,
         };
@@ -509,6 +630,7 @@ mod tests {
         assert!(s.is_serial(), "hop-dominated costs must stay serial: {s}");
         let compute_bound = Calibration {
             kernel_ns_per_row_op: 1e6,
+            simd_ns_per_row_op: None,
             wire_ns_per_bit_level: 1e-9,
             hop_ns: 1e-9,
         };

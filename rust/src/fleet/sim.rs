@@ -33,7 +33,8 @@ use crate::dataset::{self, Dataset};
 use crate::device::SotCosts;
 use crate::energy::{components, CostBreakdown};
 use crate::engine::{
-    ModelPlan, ResumableForward, TileScheduler, SNAPSHOT_HEADER_WORDS,
+    GemmKernel, ModelPlan, ResumableForward, TileScheduler,
+    SNAPSHOT_HEADER_WORDS,
 };
 use crate::intermittency::{PowerInterval, PowerTrace, TraceSpec};
 use crate::nvfa::NvStateStore;
@@ -62,6 +63,10 @@ pub struct FleetSpec {
     pub tile_patches: usize,
     /// Harvested cycles one tile costs (the slot width).
     pub cycles_per_tile: u64,
+    /// Bitwise-GEMM kernel the nodes execute tiles on. Logits, the
+    /// report digest, and every ledger are bit-identical across
+    /// kernels — only host wall-clock changes.
+    pub kernel: GemmKernel,
     /// Master seed: images, per-node trace jitter.
     pub seed: u64,
 }
@@ -350,7 +355,7 @@ fn fnv1a(acc: u64, byte: u8) -> u64 {
 /// determinism gate.
 pub fn run_fleet(plan: &ModelPlan, spec: &FleetSpec) -> Result<FleetReport> {
     spec.validate()?;
-    let sched = TileScheduler::new(1);
+    let sched = TileScheduler::new(1).with_kernel(spec.kernel);
     let tiles_per_job = plan.total_tiles(spec.tile_patches).max(1);
     let job_cycles = tiles_per_job * spec.cycles_per_tile;
     // Generous per-node harvest horizon: ~8x the node's fair share of
@@ -614,7 +619,23 @@ mod tests {
             requeue_after: 16,
             tile_patches: 16,
             cycles_per_tile: 10,
+            kernel: GemmKernel::default(),
             seed: 42,
+        }
+    }
+
+    #[test]
+    fn kernels_keep_the_report_byte_identical() {
+        // The FleetSpec kernel knob must not move a single report
+        // byte: digests, ledgers, and the dump text are invariant.
+        let plan =
+            ModelPlan::compile(cnn::micro_net(), 1, 4, 0xF1EE7).unwrap();
+        let base = run_fleet(&plan, &small_spec()).unwrap();
+        for kernel in [GemmKernel::Simd, GemmKernel::PerOutput] {
+            let spec = FleetSpec { kernel, ..small_spec() };
+            let r = run_fleet(&plan, &spec).unwrap();
+            assert_eq!(r.logits_digest, base.logits_digest);
+            assert_eq!(r.dump(), base.dump(), "{kernel} moved the report");
         }
     }
 

@@ -29,8 +29,8 @@ use crate::arch::{ChipOrg, HTree, LaneTraffic};
 use crate::device::SotCosts;
 use crate::energy::{components, CostBreakdown};
 use crate::engine::{
-    LaneSchedule, ModelPlan, ResumableForward, TileScheduler,
-    SNAPSHOT_HEADER_WORDS,
+    GemmKernel, LaneSchedule, ModelPlan, ResumableForward,
+    TileScheduler, SNAPSHOT_HEADER_WORDS,
 };
 use crate::nvfa::NvStateStore;
 use crate::subarray::OpLedger;
@@ -52,6 +52,10 @@ pub struct InferencePlan {
     /// serial, [`LaneSchedule::auto`] = the H-tree-tuned per-layer
     /// schedule).
     pub lanes: LaneSchedule,
+    /// Bitwise-GEMM kernel tiles execute on. Snapshots and logits are
+    /// bit-identical across kernels, so a checkpoint written under one
+    /// kernel restores under another.
+    pub kernel: GemmKernel,
     /// CMOS-only baseline: no NV checkpoints, every failure restarts
     /// the inference from the input image.
     pub volatile_only: bool,
@@ -64,6 +68,7 @@ impl Default for InferencePlan {
             checkpoint_period: 4,
             cycles_per_tile: 10,
             lanes: LaneSchedule::uniform(1),
+            kernel: GemmKernel::default(),
             volatile_only: false,
         }
     }
@@ -166,7 +171,8 @@ pub fn run_intermittent_inference(
     let sched = TileScheduler::from_schedule(
         exec.lanes.clone(),
         &ChipOrg::default(),
-    );
+    )
+    .with_kernel(exec.kernel);
     let mut store = NvStateStore::new();
     let mut rf = plan.begin_forward(image, exec.tile_patches, &sched);
     let tiles_total = rf.total_tiles();
@@ -454,6 +460,29 @@ mod tests {
         assert!(
             rough.merge_traffic.bit_levels >= a1.merge_traffic.bit_levels
         );
+    }
+
+    #[test]
+    fn kernels_bit_identical_under_failures() {
+        // The InferencePlan kernel knob changes only speed: an
+        // interrupted SIMD (or per-output) run lands on exactly the
+        // clean plane-pair logits.
+        let p = plan();
+        let img = image(&p);
+        let base = InferencePlan {
+            tile_patches: 4,
+            checkpoint_period: 2,
+            ..InferencePlan::default()
+        };
+        let want = uninterrupted(&p, &img, &base);
+        let trace = PowerTrace::periodic(40, 5, 200);
+        for kernel in [GemmKernel::Simd, GemmKernel::PerOutput] {
+            let exec = InferencePlan { kernel, ..base.clone() };
+            let r = run_intermittent_inference(&p, &img, &trace, &exec);
+            assert!(r.finished, "{kernel}: trace too short");
+            assert!(r.failures > 0);
+            assert_eq!(r.logits, want.logits, "{kernel} diverged");
+        }
     }
 
     #[test]

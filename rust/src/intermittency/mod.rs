@@ -347,8 +347,15 @@ impl TraceSpec {
 
     /// Derive a copy with an independent jitter seed — how the fleet
     /// gives every node its own weather while sharing one profile
-    /// spec. Fully deterministic specs (periodic, bursty) are
-    /// returned unchanged.
+    /// spec.
+    ///
+    /// Only the stochastic kinds (`poisson`, `solar`, `rf`) carry a
+    /// seed; on the fully deterministic kinds (`periodic`, `bursty`)
+    /// this is a **documented no-op** — the spec is returned unchanged
+    /// and the seed argument is silently ignored, so a fleet mixing
+    /// deterministic and stochastic profiles can reseed uniformly
+    /// without special-casing. Pinned per kind by
+    /// `with_seed_pins_per_kind_contract`.
     pub fn with_seed(&self, seed: u64) -> TraceSpec {
         let mut spec = self.clone();
         match &mut spec {
@@ -756,6 +763,53 @@ mod tests {
         // Deterministic kinds ignore reseeding entirely.
         let p = TraceSpec::parse("periodic:260:40:12").unwrap();
         assert_eq!(p.with_seed(99), p);
+    }
+
+    #[test]
+    fn with_seed_pins_per_kind_contract() {
+        // The with_seed contract, pinned for every TraceSpec kind:
+        // stochastic kinds swap exactly the seed field; deterministic
+        // kinds (periodic, bursty) are a documented no-op that returns
+        // the spec unchanged.
+        let cases = [
+            ("poisson:300:50:7", true),
+            ("periodic:260:40:12", false),
+            ("periodic:260:40", false),
+            ("bursty:100:10:5:4:2", false),
+            ("solar:600:80:16:7", true),
+            ("rf:300:50:4:11", true),
+        ];
+        for (spec_text, stochastic) in cases {
+            let spec = TraceSpec::parse(spec_text).unwrap();
+            let reseeded = spec.with_seed(0xDEAD);
+            // Kind and non-seed fields never change.
+            assert_eq!(reseeded.kind(), spec.kind(), "{spec_text}");
+            if stochastic {
+                assert_ne!(
+                    reseeded, spec,
+                    "{spec_text}: reseed must take effect"
+                );
+                // Reseeding back restores the original exactly, so
+                // only the seed field moved.
+                assert_eq!(
+                    match spec {
+                        TraceSpec::Poisson { seed, .. }
+                        | TraceSpec::Solar { seed, .. }
+                        | TraceSpec::Rf { seed, .. } =>
+                            reseeded.with_seed(seed),
+                        _ => unreachable!(),
+                    },
+                    spec,
+                    "{spec_text}: a non-seed field changed"
+                );
+            } else {
+                assert_eq!(
+                    reseeded, spec,
+                    "{spec_text}: deterministic kinds must ignore \
+                     the seed"
+                );
+            }
+        }
     }
 
     #[test]

@@ -60,6 +60,7 @@ fn cli() -> Cli {
                 opt_default("abits", "pimsim activation bits", "4"),
                 opt_default("seed", "pimsim weight/dataset seed", "42"),
                 opt_default("lanes", "pimsim engine lanes per worker (virtual parallel sub-arrays), or 'auto' for per-layer H-tree tuning", "1"),
+                opt_default("kernel", "pimsim GEMM kernel: auto|simd|planepair|peroutput", "auto"),
                 opt("calibration", "measured tuner cost table (JSON from the hotpath_micro bench) for --lanes auto; default: modeled chip constants"),
                 opt("chaos", "kill workers mid-batch on a trace schedule: poisson:<mean-on>:<off>[:<seed>] | periodic:<on>:<off>[:<count>] | bursty:<good>:<bad>:<off>[:<epochs>:<per-epoch>] (pimsim only)"),
                 opt_default("chaos-cycles", "trace cycles one batch consumes (chaos mode)", "1"),
@@ -80,6 +81,7 @@ fn cli() -> Cli {
                 opt_default("ckpt", "checkpoint period (tiles)", "4"),
                 opt_default("cycles-per-tile", "trace cycles one tile consumes", "10"),
                 opt_default("lanes", "engine lanes (virtual parallel sub-arrays; one wave of lanes tiles shares the tile cycles), or 'auto' for per-layer H-tree tuning", "1"),
+                opt_default("kernel", "GEMM kernel: auto|simd|planepair|peroutput", "auto"),
                 opt("calibration", "measured tuner cost table (JSON from the hotpath_micro bench) for --lanes auto; default: modeled chip constants"),
                 opt_default("config", "RunConfig file; explicit flags override it", ""),
             ],
@@ -137,6 +139,7 @@ fn cli() -> Cli {
                 opt_default("requeue-after", "consecutive dark slots before a node's job is pulled back to the queue (0 = sticky)", "64"),
                 opt_default("tile-patches", "patch rows per resumable tile", "16"),
                 opt_default("cycles-per-tile", "harvested cycles one tile consumes (the slot width)", "10"),
+                opt_default("kernel", "GEMM kernel: auto|simd|planepair|peroutput", "auto"),
                 opt("report", "write the fleet report JSON to this path"),
                 flag("per-node", "print the per-node stat rows"),
                 opt_default("config", "RunConfig file; explicit flags override it", ""),
@@ -284,7 +287,7 @@ fn serve_pimsim(p: &pims::cli::Parsed, cfg: &RunConfig) -> Result<()> {
     println!(
         "serving PIM co-sim ({}), W{}:I{}, batch={}, \
          workers={}, lane schedule {} per worker (shared engine \
-         thread budget: {}), {} synthetic images",
+         thread budget: {}), {} kernel, {} synthetic images",
         probe.model_name(),
         cfg.w_bits,
         cfg.a_bits,
@@ -292,6 +295,7 @@ fn serve_pimsim(p: &pims::cli::Parsed, cfg: &RunConfig) -> Result<()> {
         cfg.workers,
         sched,
         pims::engine::LaneRuntime::budget(),
+        cfg.gemm_kernel(),
         ds.n
     );
     let batch = cfg.batch;
@@ -448,19 +452,22 @@ fn cmd_infer(p: &pims::cli::Parsed) -> Result<()> {
         checkpoint_period: cfg.ckpt_period,
         cycles_per_tile: p.get_u64("cycles-per-tile")?.unwrap_or(10).max(1),
         lanes: cfg.lane_schedule(&mplan)?,
+        kernel: cfg.gemm_kernel(),
         volatile_only: false,
     };
     let tiles = mplan.total_tiles(plan.tile_patches);
     let work = tiles * plan.cycles_per_tile;
     println!(
         "model={} W{}:I{}, {tiles} tiles x {} cycles \
-         ({} patch rows/tile), lane schedule {}, ckpt every {} tiles",
+         ({} patch rows/tile), lane schedule {}, {} kernel, \
+         ckpt every {} tiles",
         mplan.model_name(),
         cfg.w_bits,
         cfg.a_bits,
         plan.cycles_per_tile,
         plan.tile_patches,
         plan.lanes,
+        plan.kernel,
         plan.checkpoint_period
     );
 

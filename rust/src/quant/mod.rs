@@ -39,6 +39,13 @@ pub fn act_to_codes(a: &[f32], m_bits: u32) -> Vec<u32> {
     a.iter().map(|&x| act_to_code(x, m_bits)).collect()
 }
 
+/// [`act_to_codes`] into a reusable buffer (cleared, then filled) —
+/// the engine's allocation-free hot path.
+pub fn act_to_codes_into(a: &[f32], m_bits: u32, out: &mut Vec<u32>) {
+    out.clear();
+    out.extend(a.iter().map(|&x| act_to_code(x, m_bits)));
+}
+
 /// Fake-quantized activation value in [0,1].
 pub fn act_quant(a: f32, m_bits: u32) -> f32 {
     act_to_code(a, m_bits) as f32 / ((1u64 << m_bits) - 1) as f32
@@ -121,6 +128,18 @@ mod tests {
         assert_eq!(act_to_code(2.0, 4), 15);
         assert_eq!(act_to_code(0.5, 1), 0); // 0.5 ties to even -> 0
         assert_eq!(act_to_code(0.51, 1), 1);
+    }
+
+    #[test]
+    fn act_to_codes_into_matches_and_reuses_buffer() {
+        let a: Vec<f32> = (0..97).map(|i| i as f32 / 96.0).collect();
+        let mut out = Vec::new();
+        act_to_codes_into(&a, 4, &mut out);
+        assert_eq!(out, act_to_codes(&a, 4));
+        let cap = out.capacity();
+        act_to_codes_into(&a[..50], 4, &mut out);
+        assert_eq!(out, act_to_codes(&a[..50], 4));
+        assert_eq!(out.capacity(), cap, "refill must reuse the buffer");
     }
 
     #[test]

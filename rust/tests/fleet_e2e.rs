@@ -15,7 +15,7 @@
 
 use pims::cli::CadenceArg;
 use pims::cnn;
-use pims::engine::ModelPlan;
+use pims::engine::{GemmKernel, ModelPlan};
 use pims::fleet::{run_fleet, FleetSpec, DEFAULT_PROFILES};
 use pims::intermittency::TraceSpec;
 use pims::jsonlite::Json;
@@ -36,6 +36,7 @@ fn mixed_spec(nodes: usize, jobs: usize, seed: u64) -> FleetSpec {
         requeue_after: 16,
         tile_patches: 16,
         cycles_per_tile: 10,
+        kernel: GemmKernel::default(),
         seed,
     }
 }
@@ -130,6 +131,11 @@ fn tuned_cadence_never_loses_frames_and_never_touches_logits() {
             requeue_after: g.u32(0, 12) as u64,
             tile_patches: 16,
             cycles_per_tile: 10,
+            kernel: *g.choose(&[
+                GemmKernel::PlanePair,
+                GemmKernel::Simd,
+                GemmKernel::PerOutput,
+            ]),
             seed: g.u64_any() >> 1,
         };
         let auto = run_fleet(&plan, &base).unwrap();

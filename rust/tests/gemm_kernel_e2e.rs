@@ -1,8 +1,9 @@
-//! Plane-pair GEMM kernel acceptance (ISSUE 6): the word-parallel
-//! kernel is a pure speed change. Logits AND the OpLedger must be
-//! bit-identical to the per-output reference kernel under every lane
-//! schedule (serial, uniform fan-out, auto-tuned, measured-calibration
-//! auto-tuned), and across a mid-run power-failure snapshot/restore.
+//! GEMM kernel acceptance (ISSUE 6 plane-pair, ISSUE 8 SIMD): every
+//! kernel tier is a pure speed change. Logits AND the OpLedger must be
+//! bit-identical across all three kernels under every lane schedule
+//! (serial, uniform fan-out, auto-tuned, measured-calibration
+//! auto-tuned), and across a mid-run power-failure snapshot taken on
+//! one kernel and restored on another.
 
 use pims::arch::{ChipOrg, HTree};
 use pims::cnn;
@@ -46,26 +47,28 @@ fn kernels_bit_identical_across_lane_schedules() {
 
     let mut ledgers = Vec::new();
     for (name, sched) in schedules {
-        let fast = plan
-            .forward_batch_with(&flat, b, sched, GemmKernel::PlanePair)
-            .unwrap();
         let refr = plan
             .forward_batch_with(&flat, b, sched, GemmKernel::PerOutput)
             .unwrap();
         assert_eq!(
-            fast.logits, refr.logits,
-            "kernel logits diverged under {name}"
+            refr.logits, want,
+            "per-output logits diverged from reference under {name}"
         );
-        assert_eq!(
-            fast.ledger, refr.ledger,
-            "kernel ledgers diverged under {name}"
-        );
-        assert_eq!(fast.traffic, refr.traffic);
-        assert_eq!(
-            fast.logits, want,
-            "plane-pair logits diverged from reference under {name}"
-        );
-        ledgers.push((name, fast.ledger));
+        for kernel in [GemmKernel::PlanePair, GemmKernel::Simd] {
+            let fast = plan
+                .forward_batch_with(&flat, b, sched, kernel)
+                .unwrap();
+            assert_eq!(
+                fast.logits, refr.logits,
+                "{kernel} logits diverged under {name}"
+            );
+            assert_eq!(
+                fast.ledger, refr.ledger,
+                "{kernel} ledgers diverged under {name}"
+            );
+            assert_eq!(fast.traffic, refr.traffic);
+        }
+        ledgers.push((name, refr.ledger));
     }
     // Row-op accounting is schedule-independent (merged in
     // deterministic lane order), so one chip's energy story holds for
@@ -80,39 +83,52 @@ fn kernels_bit_identical_across_lane_schedules() {
 }
 
 #[test]
-fn snapshot_restore_is_bit_identical_on_the_fast_kernel() {
+fn snapshot_cross_restore_between_kernels_is_bit_identical() {
     let plan =
         ModelPlan::compile(cnn::micro_net(), 1, 4, 0x6E6F).unwrap();
     let img = image(plan.input_elems(), 3);
     let want = plan.reference_logits(&img);
     let org = ChipOrg::default();
-    let auto = TileScheduler::from_schedule(
-        LaneSchedule::auto(&plan, &org, &HTree::default()),
-        &org,
-    );
-    let serial = TileScheduler::new(1);
+    let kernels = [
+        GemmKernel::PlanePair,
+        GemmKernel::Simd,
+        GemmKernel::PerOutput,
+    ];
 
-    // Interrupt mid-run under the auto schedule, lose volatile state,
-    // and finish on a serial chip — the resumable path runs the
-    // plane-pair kernel everywhere, so the snapshot contract from
-    // ISSUE 2/4 must survive the kernel swap untouched.
-    let mut rf = plan.begin_forward(&img, 2, &auto);
-    rf.step_wave();
-    rf.step_wave();
-    assert!(!rf.is_done(), "snapshot point must be mid-run");
-    let words = rf.snapshot();
-    drop(rf); // power failure: volatile state gone
-    let mut resumed =
-        ResumableForward::resume(&plan, &serial, &words).unwrap();
-    while resumed.step_wave().is_some() {}
-    assert_eq!(
-        resumed.logits().unwrap(),
-        &want[..],
-        "mid-run restore diverged from uninterrupted reference"
-    );
-
-    // And the uninterrupted wave-driven run agrees too.
-    assert_eq!(plan.forward(&img, 2, &auto), want);
+    // Interrupt mid-run under the auto schedule on one kernel, lose
+    // volatile state, and finish on a serial chip running a DIFFERENT
+    // kernel — snapshots carry raw partial-sum words, so the contract
+    // from ISSUE 2/4 must survive both the schedule and the kernel
+    // swap untouched, in every direction.
+    for snap_kernel in kernels {
+        let auto = TileScheduler::from_schedule(
+            LaneSchedule::auto(&plan, &org, &HTree::default()),
+            &org,
+        )
+        .with_kernel(snap_kernel);
+        let mut rf = plan.begin_forward(&img, 2, &auto);
+        rf.step_wave();
+        rf.step_wave();
+        assert!(!rf.is_done(), "snapshot point must be mid-run");
+        let words = rf.snapshot();
+        drop(rf); // power failure: volatile state gone
+        for resume_kernel in kernels {
+            let serial =
+                TileScheduler::new(1).with_kernel(resume_kernel);
+            let mut resumed =
+                ResumableForward::resume(&plan, &serial, &words)
+                    .unwrap();
+            while resumed.step_wave().is_some() {}
+            assert_eq!(
+                resumed.logits().unwrap(),
+                &want[..],
+                "restore {snap_kernel} -> {resume_kernel} diverged \
+                 from the uninterrupted reference"
+            );
+        }
+        // And the uninterrupted wave-driven run agrees too.
+        assert_eq!(plan.forward(&img, 2, &auto), want);
+    }
 }
 
 #[test]
@@ -132,28 +148,37 @@ fn measured_calibration_schedules_stay_bit_identical() {
     let tables = [
         ("wire_bound", Calibration {
             kernel_ns_per_row_op: 1e-9,
+            simd_ns_per_row_op: None,
             wire_ns_per_bit_level: 1e3,
             hop_ns: 1e6,
         }),
         ("compute_bound", Calibration {
             kernel_ns_per_row_op: 1e3,
+            simd_ns_per_row_op: Some(2e2),
             wire_ns_per_bit_level: 1e-9,
             hop_ns: 1e-9,
         }),
     ];
     for (name, cal) in tables {
-        let sched = TileScheduler::from_schedule(
-            LaneSchedule::auto_with(&plan, &org, &cal),
-            &org,
-        );
-        let got = plan.forward_batch(&flat, b, &sched).unwrap();
-        assert_eq!(
-            got.logits, want.logits,
-            "calibrated schedule {name} changed the logits"
-        );
-        assert_eq!(
-            got.ledger, want.ledger,
-            "calibrated schedule {name} changed the ledger"
-        );
+        for kernel in [
+            GemmKernel::PlanePair,
+            GemmKernel::Simd,
+            GemmKernel::PerOutput,
+        ] {
+            let sched = TileScheduler::from_schedule(
+                LaneSchedule::auto_with_kernel(&plan, &org, &cal, kernel),
+                &org,
+            )
+            .with_kernel(kernel);
+            let got = plan.forward_batch(&flat, b, &sched).unwrap();
+            assert_eq!(
+                got.logits, want.logits,
+                "calibrated schedule {name}/{kernel} changed the logits"
+            );
+            assert_eq!(
+                got.ledger, want.ledger,
+                "calibrated schedule {name}/{kernel} changed the ledger"
+            );
+        }
     }
 }

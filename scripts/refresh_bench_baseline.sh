@@ -33,6 +33,28 @@ gated = base["meta"]["notes_gated"]
 missing = [k for k in gated if k not in run["notes"]]
 assert not missing, f"bench run lacks gated notes: {missing}"
 
+
+def cpu_features():
+    # The SIMD-relevant feature set of the machine that measured the
+    # baseline, so a regression report can tell an AVX2 re-anchor from
+    # a portable one. /proc/cpuinfo on Linux; sysctl on macOS; the
+    # baseline stays honest with ["unknown"] elsewhere.
+    watched = ("avx2", "avx512f", "popcnt", "bmi2", "neon", "asimd")
+    try:
+        if platform.system() == "Linux":
+            text = open("/proc/cpuinfo").read().lower()
+        elif platform.system() == "Darwin":
+            text = subprocess.run(
+                ["sysctl", "-a"], capture_output=True, text=True,
+            ).stdout.lower()
+        else:
+            return ["unknown"]
+    except OSError:
+        return ["unknown"]
+    found = [f for f in watched if f in text.split() or f in text]
+    return found or ["unknown"]
+
+
 base["notes"] = {k: run["notes"][k] for k in gated}
 rev = subprocess.run(
     ["git", "rev-parse", "--short", "HEAD"],
@@ -42,10 +64,12 @@ base["meta"]["provenance"] = (
     f"measured by scripts/refresh_bench_baseline.sh at {rev}"
 )
 base["meta"]["runner"] = f"{platform.system()}-{platform.machine()}"
+base["meta"]["cpu_features"] = cpu_features()
 
 json.dump(base, open(base_path, "w"), indent=2, sort_keys=False)
 open(base_path, "a").write("\n")
 print(f"refreshed {base_path}:")
+print(f"  cpu_features = {base['meta']['cpu_features']}")
 for k in gated:
     print(f"  {k} = {base['notes'][k]}")
 EOF

@@ -345,15 +345,59 @@ fn main() {
         Ok(MockBackend::new(1, 64, 10))
     })
     .unwrap();
-    b.iter("submit_wait_roundtrip", || {
-        black_box(
-            c.submit_job(Job::Classify(img.clone()))
-                .unwrap()
-                .wait()
-                .unwrap(),
-        );
-    });
+    let in_proc_ns = b
+        .iter("submit_wait_roundtrip", || {
+            black_box(
+                c.submit_job(Job::Classify(img.clone()))
+                    .unwrap()
+                    .wait()
+                    .unwrap(),
+            );
+        })
+        .mean_ns;
     drop(c);
+
+    // --- TCP front-end round-trip: the same single Classify job, but
+    // through `net::serve` on a loopback socket and a multiplexing
+    // NetClient — framing + jsonlite codec + two socket hops on top of
+    // the in-process path (ISSUE 9; bench-smoke gates the ratio).
+    let c = Coordinator::launch_pool(&pool_cfg(1, 64, 0.0), |_| {
+        Ok(MockBackend::new(1, 64, 10))
+    })
+    .unwrap();
+    let server = pims::net::serve(
+        c,
+        &pims::net::NetConfig {
+            listen: "127.0.0.1:0".to_string(),
+            ..pims::net::NetConfig::default()
+        },
+    )
+    .unwrap();
+    let client =
+        pims::net::NetClient::connect(&server.local_addr().to_string())
+            .unwrap();
+    let net_ns = b
+        .iter("net_submit_wait_roundtrip", || {
+            black_box(
+                client
+                    .submit(
+                        Job::Classify(img.clone()),
+                        pims::coordinator::Priority::Interactive,
+                        "bench",
+                        None,
+                    )
+                    .unwrap()
+                    .wait()
+                    .unwrap(),
+            );
+        })
+        .mean_ns;
+    b.note(
+        "net_roundtrip_overhead",
+        format!("{:.2}x", net_ns / in_proc_ns.max(1.0)),
+    );
+    drop(client);
+    server.shutdown();
 
     // --- worker-pool throughput scaling: the same offered load on 1
     // vs 4 executor workers whose backend sleeps per batch (so the

@@ -91,6 +91,12 @@ pub const KNOWN_KEYS: &[&str] = &[
     "serve.queue",
     "serve.wait_ms",
     "serve.requests",
+    "net.listen",
+    "net.max_conns",
+    "net.max_frame_kib",
+    "qos.weights",
+    "qos.shed_pct",
+    "qos.tenant_quota",
     "engine.lanes",
     "engine.kernel",
     "engine.tile_patches",
@@ -129,6 +135,22 @@ pub struct RunConfig {
     pub wait_ms: f64,
     /// `serve.requests` — how many requests the serve driver offers.
     pub requests: usize,
+    /// `net.listen` — TCP bind address for the `pims serve` front-end
+    /// (`None` = in-process serve driver only, no socket).
+    pub listen: Option<String>,
+    /// `net.max_conns` — connection cap for the TCP front-end; the
+    /// multiplexing client keeps this small (DESIGN.md §13).
+    pub max_conns: usize,
+    /// `net.max_frame_kib` — per-frame payload cap on the wire, KiB.
+    pub max_frame_kib: usize,
+    /// `qos.weights` — WDRR drain weights per priority class,
+    /// `[interactive, batch, background]`.
+    pub qos_weights: [u32; 3],
+    /// `qos.shed_pct` — per-class shed thresholds, percent of
+    /// `serve.queue`; an entry >= 100 disables shedding for it.
+    pub qos_shed_pct: [u32; 3],
+    /// `qos.tenant_quota` — max in-flight jobs per tenant (0 = off).
+    pub tenant_quota: u64,
     /// `engine.lanes` — engine lane schedule: a fixed per-layer count
     /// or `"auto"` (H-tree-tuned per layer).
     pub lanes: LaneArg,
@@ -183,6 +205,12 @@ impl Default for RunConfig {
             queue: 256,
             wait_ms: 2.0,
             requests: 512,
+            listen: None,
+            max_conns: 64,
+            max_frame_kib: 4096,
+            qos_weights: [8, 4, 1],
+            qos_shed_pct: [100, 75, 50],
+            tenant_quota: 0,
             lanes: LaneArg::Fixed(1),
             kernel: KernelDispatch::Auto,
             tile_patches: 16,
@@ -212,6 +240,58 @@ fn int_key(cfg: &Config, key: &str, default: i64, min: i64) -> Result<i64> {
             Ok(v)
         }
     }
+}
+
+/// Read a `[a, b, c]` int-list key (one entry per priority class)
+/// with a default and a per-entry floor.
+fn triple_key(
+    cfg: &Config,
+    key: &str,
+    default: [u32; 3],
+    min: i64,
+) -> Result<[u32; 3]> {
+    match cfg.get(key) {
+        None => Ok(default),
+        Some(_) => {
+            let xs = cfg.int_list(key)?;
+            anyhow::ensure!(
+                xs.len() == 3,
+                "config key '{key}': need [interactive, batch, \
+                 background], got {} entries",
+                xs.len()
+            );
+            let mut out = [0u32; 3];
+            for (o, v) in out.iter_mut().zip(&xs) {
+                anyhow::ensure!(
+                    *v >= min && *v <= u32::MAX as i64,
+                    "config key '{key}': entries must be >= {min}, \
+                     got {v}"
+                );
+                *o = *v as u32;
+            }
+            Ok(out)
+        }
+    }
+}
+
+/// Parse a CLI `"8:4:1"` colon-triple (interactive:batch:background).
+pub fn parse_triple(s: &str) -> Result<[u32; 3]> {
+    let parts: Vec<&str> = s.split(':').collect();
+    anyhow::ensure!(
+        parts.len() == 3,
+        "expected interactive:batch:background, got '{s}'"
+    );
+    let mut out = [0u32; 3];
+    for (o, p) in out.iter_mut().zip(&parts) {
+        *o = p.trim().parse().map_err(|_| {
+            anyhow::anyhow!("bad entry '{p}' in triple '{s}'")
+        })?;
+    }
+    Ok(out)
+}
+
+fn triple_text(xs: [u32; 3]) -> String {
+    format!("[{}, {}, {}]", xs[0], xs[1], xs[2])
 }
 
 impl RunConfig {
@@ -280,6 +360,17 @@ impl RunConfig {
             None => d.wait_ms,
             Some(_) => cfg.float("serve.wait_ms")?,
         };
+        let listen = match cfg.get("net.listen") {
+            None => None,
+            Some(_) => {
+                let s = cfg.str("net.listen")?;
+                if s.is_empty() {
+                    None
+                } else {
+                    Some(s)
+                }
+            }
+        };
         let fleet_profiles = match cfg.get("fleet.profiles") {
             None => d.fleet_profiles,
             Some(_) => cfg.str("fleet.profiles")?,
@@ -317,6 +408,37 @@ impl RunConfig {
                 d.requests as i64,
                 0,
             )? as usize,
+            listen,
+            max_conns: int_key(
+                cfg,
+                "net.max_conns",
+                d.max_conns as i64,
+                1,
+            )? as usize,
+            max_frame_kib: int_key(
+                cfg,
+                "net.max_frame_kib",
+                d.max_frame_kib as i64,
+                1,
+            )? as usize,
+            qos_weights: triple_key(
+                cfg,
+                "qos.weights",
+                d.qos_weights,
+                1,
+            )?,
+            qos_shed_pct: triple_key(
+                cfg,
+                "qos.shed_pct",
+                d.qos_shed_pct,
+                1,
+            )?,
+            tenant_quota: int_key(
+                cfg,
+                "qos.tenant_quota",
+                d.tenant_quota as i64,
+                0,
+            )? as u64,
             lanes,
             kernel,
             tile_patches: int_key(
@@ -428,6 +550,32 @@ impl RunConfig {
         if use_flag("requests", "serve.requests") {
             rc.requests = p.get_usize("requests")?.unwrap_or(512);
         }
+        if use_flag("listen", "net.listen") {
+            let s = p.get("listen").unwrap();
+            rc.listen = if s.is_empty() {
+                None
+            } else {
+                Some(s.to_string())
+            };
+        }
+        if use_flag("max-conns", "net.max_conns") {
+            rc.max_conns = p.get_usize_at_least("max-conns", 1)?;
+        }
+        if use_flag("max-frame-kib", "net.max_frame_kib") {
+            rc.max_frame_kib =
+                p.get_usize_at_least("max-frame-kib", 1)?;
+        }
+        if use_flag("qos-weights", "qos.weights") {
+            rc.qos_weights = parse_triple(p.get("qos-weights").unwrap())
+                .with_context(|| "--qos-weights".to_string())?;
+        }
+        if use_flag("shed", "qos.shed_pct") {
+            rc.qos_shed_pct = parse_triple(p.get("shed").unwrap())
+                .with_context(|| "--shed".to_string())?;
+        }
+        if use_flag("tenant-quota", "qos.tenant_quota") {
+            rc.tenant_quota = p.get_u64("tenant-quota")?.unwrap_or(0);
+        }
         if use_flag("lanes", "engine.lanes") {
             rc.lanes = p.get_lanes("lanes")?;
         }
@@ -500,6 +648,29 @@ impl RunConfig {
             "wait_ms must be finite and >= 0, got {}",
             self.wait_ms
         );
+        anyhow::ensure!(self.max_conns >= 1, "max_conns must be >= 1");
+        anyhow::ensure!(
+            self.max_frame_kib >= 1,
+            "max_frame_kib must be >= 1"
+        );
+        if let Some(l) = &self.listen {
+            anyhow::ensure!(
+                !l.is_empty(),
+                "listen address must be non-empty when set"
+            );
+        }
+        for (name, xs) in [
+            ("qos weights", self.qos_weights),
+            ("qos shed_pct", self.qos_shed_pct),
+        ] {
+            for v in xs {
+                anyhow::ensure!(v >= 1, "{name} entries must be >= 1");
+            }
+        }
+        anyhow::ensure!(
+            self.tenant_quota <= i64::MAX as u64,
+            "tenant_quota must fit the config format's integer range"
+        );
         anyhow::ensure!(
             self.tile_patches >= 1,
             "tile_patches must be >= 1"
@@ -569,6 +740,17 @@ impl RunConfig {
         c.set("serve.queue", &self.queue.to_string()).expect(ok);
         c.set("serve.wait_ms", &self.wait_ms.to_string()).expect(ok);
         c.set("serve.requests", &self.requests.to_string()).expect(ok);
+        if let Some(l) = &self.listen {
+            c.set("net.listen", &format!("\"{l}\"")).expect(ok);
+        }
+        c.set("net.max_conns", &self.max_conns.to_string()).expect(ok);
+        c.set("net.max_frame_kib", &self.max_frame_kib.to_string())
+            .expect(ok);
+        c.set("qos.weights", &triple_text(self.qos_weights)).expect(ok);
+        c.set("qos.shed_pct", &triple_text(self.qos_shed_pct))
+            .expect(ok);
+        c.set("qos.tenant_quota", &self.tenant_quota.to_string())
+            .expect(ok);
         match self.lanes {
             LaneArg::Auto => c.set("engine.lanes", "\"auto\"").expect(ok),
             LaneArg::Fixed(n) => {
@@ -668,6 +850,16 @@ impl RunConfig {
         Duration::from_secs_f64(self.wait_ms.max(0.0) / 1e3)
     }
 
+    /// The TCP front-end configuration, when `net.listen` is set
+    /// (`None` means serve stays in-process).
+    pub fn net_config(&self) -> Option<crate::net::NetConfig> {
+        self.listen.as_ref().map(|l| crate::net::NetConfig {
+            listen: l.clone(),
+            max_conns: self.max_conns,
+            max_frame_bytes: self.max_frame_kib * 1024,
+        })
+    }
+
     /// Resolve the `fleet.*` knobs into a validated
     /// [`crate::fleet::FleetSpec`] (profiles parsed, engine knobs —
     /// tile size, seed — shared with the serving paths).
@@ -760,6 +952,20 @@ mod tests {
                 queue: g.usize(1, 1024),
                 wait_ms: g.u32(0, 50) as f64,
                 requests: g.usize(0, 4096),
+                listen: if g.bool() {
+                    None
+                } else {
+                    Some(format!("127.0.0.1:{}", g.u32(1024, 65535)))
+                },
+                max_conns: g.usize(1, 256),
+                max_frame_kib: g.usize(1, 8192),
+                qos_weights: [g.u32(1, 16), g.u32(1, 16), g.u32(1, 16)],
+                qos_shed_pct: [
+                    g.u32(1, 120),
+                    g.u32(1, 120),
+                    g.u32(1, 120),
+                ],
+                tenant_quota: g.u32(0, 4096) as u64,
                 lanes,
                 kernel: *g.choose(&[
                     KernelDispatch::Auto,
@@ -837,6 +1043,13 @@ mod tests {
             "[fleet]\ncadence = true",
             "[fleet]\nprofiles = \"poisson:400:60,bogus:1\"",
             "[fleet]\nrequeue_after = -1",
+            "[net]\nmax_conns = 0",
+            "[net]\nmax_frame_kib = 0",
+            "[qos]\nweights = [8, 4]",
+            "[qos]\nweights = [8, 4, 0]",
+            "[qos]\nweights = [8, 4, 1, 1]",
+            "[qos]\nshed_pct = [0, 75, 50]",
+            "[qos]\ntenant_quota = -1",
         ] {
             let cfg = Config::parse(text).unwrap();
             assert!(
@@ -918,6 +1131,46 @@ mod tests {
             RunConfig::from_config(&auto).unwrap().fleet_cadence,
             CadenceArg::Auto
         );
+    }
+
+    #[test]
+    fn net_and_qos_keys_parse_and_round_trip() {
+        let cfg = Config::parse(
+            "[net]\nlisten = \"127.0.0.1:7799\"\nmax_conns = 16\n\
+             max_frame_kib = 64\n\
+             [qos]\nweights = [9, 3, 1]\nshed_pct = [100, 80, 40]\n\
+             tenant_quota = 32\n",
+        )
+        .unwrap();
+        let rc = RunConfig::from_config(&cfg).unwrap();
+        assert_eq!(rc.listen.as_deref(), Some("127.0.0.1:7799"));
+        assert_eq!(rc.max_conns, 16);
+        assert_eq!(rc.max_frame_kib, 64);
+        assert_eq!(rc.qos_weights, [9, 3, 1]);
+        assert_eq!(rc.qos_shed_pct, [100, 80, 40]);
+        assert_eq!(rc.tenant_quota, 32);
+
+        let net = rc.net_config().expect("listen set -> Some");
+        assert_eq!(net.listen, "127.0.0.1:7799");
+        assert_eq!(net.max_conns, 16);
+        assert_eq!(net.max_frame_bytes, 64 * 1024);
+        assert!(
+            RunConfig::default().net_config().is_none(),
+            "no listen address -> no TCP front-end"
+        );
+
+        let back =
+            RunConfig::from_config(&Config::parse(&rc.dump()).unwrap())
+                .unwrap();
+        assert_eq!(rc, back);
+
+        assert_eq!(parse_triple("8:4:1").unwrap(), [8, 4, 1]);
+        assert_eq!(
+            parse_triple(" 100 : 75 : 50 ").unwrap(),
+            [100, 75, 50]
+        );
+        assert!(parse_triple("8:4").is_err());
+        assert!(parse_triple("8:4:x").is_err());
     }
 
     fn serve_cli() -> Cli {

@@ -1,7 +1,8 @@
-//! The per-worker batcher/executor loop: collect typed jobs up to the
-//! backend's batch size with a size-or-deadline policy, pad to the
-//! compiled batch shape, execute through [`Backend::run_batch`], and
-//! reply with typed [`super::JobOutput`]s.
+//! The per-worker batcher/executor loop: collect typed jobs with a
+//! size-or-deadline policy, drain them across priority classes by
+//! weighted-deficit round-robin, pad to the compiled batch shape,
+//! execute through [`Backend::run_batch`], and reply with typed
+//! [`super::JobOutput`]s.
 //!
 //! One [`Batcher`] runs on each worker thread and owns that worker's
 //! backend for the life of the pool (PJRT handles never cross
@@ -10,21 +11,33 @@
 //! and the loop keeps serving, so one bad batch never poisons the
 //! worker or its siblings.
 //!
+//! QoS (DESIGN.md §13): jobs received off the worker queue are staged
+//! in a [`ClassBuffer`] — one FIFO lane per (priority class, tenant).
+//! Each batch is drawn by weighted-deficit round-robin across the
+//! classes (`qos.weights`, default 8:4:1), with plain round-robin
+//! across the tenants inside a class, so an interactive trickle keeps
+//! its latency under a background flood and no tenant can monopolize
+//! a class. Every class with queued work receives at least one batch
+//! slot per round (weights are clamped to >= 1), so nothing starves.
+//!
 //! Serving API v2 (DESIGN.md §9): a job whose client cancelled
 //! (dropped its `Pending`) or whose deadline expired while queued is
 //! skipped HERE, before it occupies a padded batch row — the batch
-//! slot is freed instead of executing for nobody — and counted in
-//! `dropped_replies`, as is any reply whose send fails because the
-//! client vanished mid-execution.
+//! slot is freed instead of executing for nobody — and counted in the
+//! split `cancelled` / `expired` counters; a reply whose send fails
+//! because the client vanished mid-execution counts as `send_failed`.
 
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::Receiver;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
 
 use super::chaos::ChaosClock;
-use super::metrics_agg::WorkerSlot;
+use super::job::NUM_PRIORITY_CLASSES;
+use super::metrics_agg::MetricsHub;
 use super::{
     Backend, BatchPolicy, JobBatch, JobKind, JobOutput, QueuedJob,
     Response,
@@ -36,6 +49,115 @@ use super::{
 /// sustained brown-out must eventually let one batch through for the
 /// drain guarantee to hold).
 const MAX_KILLS_PER_BATCH: u64 = 8;
+
+/// One priority class's staging area: FIFO per tenant, tenants served
+/// round-robin (deficit round-robin with unit quantum — every job
+/// costs one batch slot).
+#[derive(Default)]
+struct ClassQueue {
+    queues: HashMap<Arc<str>, VecDeque<QueuedJob>>,
+    /// Rotation of tenants that currently have queued jobs.
+    rr: VecDeque<Arc<str>>,
+}
+
+impl ClassQueue {
+    fn is_empty(&self) -> bool {
+        self.rr.is_empty()
+    }
+
+    fn push(&mut self, job: QueuedJob) {
+        let tenant = job.tenant.clone();
+        let q = self.queues.entry(tenant.clone()).or_default();
+        if q.is_empty() {
+            self.rr.push_back(tenant);
+        }
+        q.push_back(job);
+    }
+
+    fn pop(&mut self) -> Option<QueuedJob> {
+        let tenant = self.rr.pop_front()?;
+        let q = self
+            .queues
+            .get_mut(&tenant)
+            .expect("rr tenants always have a queue");
+        let job = q.pop_front().expect("rr queues are never empty");
+        if q.is_empty() {
+            self.queues.remove(&tenant);
+        } else {
+            self.rr.push_back(tenant);
+        }
+        Some(job)
+    }
+}
+
+/// Per-worker staging buffer: one [`ClassQueue`] per priority class,
+/// drained by weighted-deficit round-robin.
+struct ClassBuffer {
+    classes: [ClassQueue; NUM_PRIORITY_CLASSES],
+    deficit: [u64; NUM_PRIORITY_CLASSES],
+    weights: [u64; NUM_PRIORITY_CLASSES],
+    len: usize,
+}
+
+impl ClassBuffer {
+    fn new(weights: [u64; NUM_PRIORITY_CLASSES]) -> Self {
+        ClassBuffer {
+            classes: Default::default(),
+            deficit: [0; NUM_PRIORITY_CLASSES],
+            // A zero weight would starve its class forever; clamp so
+            // every class drains at least one slot per round.
+            weights: weights.map(|w| w.max(1)),
+            len: 0,
+        }
+    }
+
+    fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn push(&mut self, job: QueuedJob) {
+        self.classes[job.priority.index()].push(job);
+        self.len += 1;
+    }
+
+    /// Draw up to `batch` jobs by WDRR: per round, each class earns
+    /// its weight in deficit and drains jobs until the deficit (or the
+    /// class, or the batch) is exhausted. An idle class forfeits its
+    /// deficit (classic DRR), so credit never accumulates while empty.
+    fn pop_batch(&mut self, batch: usize) -> Vec<QueuedJob> {
+        let mut out = Vec::with_capacity(batch.min(self.len));
+        while out.len() < batch && self.len > 0 {
+            for c in 0..NUM_PRIORITY_CLASSES {
+                if out.len() >= batch {
+                    break;
+                }
+                if self.classes[c].is_empty() {
+                    self.deficit[c] = 0;
+                    continue;
+                }
+                self.deficit[c] += self.weights[c];
+                while self.deficit[c] > 0 && out.len() < batch {
+                    match self.classes[c].pop() {
+                        Some(job) => {
+                            out.push(job);
+                            self.len -= 1;
+                            self.deficit[c] -= 1;
+                        }
+                        None => {
+                            self.deficit[c] = 0;
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
 
 pub(super) struct Batcher {
     policy: BatchPolicy,
@@ -62,80 +184,94 @@ impl Batcher {
         Batcher { policy }
     }
 
-    /// Collect a batch: `first` plus peers until the batch fills or
-    /// the deadline passes. When draining (shutdown in progress) only
-    /// already-queued requests are taken, without waiting.
-    fn collect(
-        &self,
-        rx: &Receiver<QueuedJob>,
-        first: QueuedJob,
-        batch: usize,
-        draining: bool,
-    ) -> Vec<QueuedJob> {
-        let mut reqs = Vec::with_capacity(batch);
-        reqs.push(first);
-        if draining {
-            while reqs.len() < batch {
-                match rx.try_recv() {
-                    Ok(r) => reqs.push(r),
-                    Err(_) => break,
-                }
-            }
-            return reqs;
-        }
-        let deadline = Instant::now() + self.policy.max_wait;
-        while reqs.len() < batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(r) => reqs.push(r),
-                Err(_) => break,
-            }
-        }
-        reqs
-    }
-
     /// The executor loop. Exits when the ingress side of `rx` is
-    /// closed AND the queue is drained, so shutdown never drops an
-    /// admitted request.
+    /// closed AND both the queue and the staging buffer are drained,
+    /// so shutdown never drops an admitted request.
     pub(super) fn run<B: Backend>(
         &self,
         backend: &mut B,
         rx: Receiver<QueuedJob>,
-        slot: &WorkerSlot,
+        hub: &MetricsHub,
+        w: usize,
         stop: &AtomicBool,
         mut chaos: Option<ChaosClock>,
     ) {
+        let slot = hub.worker(w);
         let batch = backend.batch_size().max(1);
         let elems = backend.input_elems();
         let mut flat = vec![0f32; batch * elems];
+        let mut buf = ClassBuffer::new(self.policy.weights);
 
         loop {
-            // Block for the first request of the next batch; Err means
-            // the ingress closed and nothing is left to drain.
-            let first = match rx.recv() {
-                Ok(r) => r,
-                Err(_) => break,
-            };
+            // Block for the first request of the next batch; Err with
+            // an empty buffer means the ingress closed and nothing is
+            // left to drain.
+            if buf.is_empty() {
+                match rx.recv() {
+                    Ok(r) => buf.push(r),
+                    Err(_) => break,
+                }
+            }
+            // Pull everything already queued without blocking, so the
+            // WDRR draw sees the full backlog across classes.
+            while let Ok(r) = rx.try_recv() {
+                buf.push(r);
+            }
             let draining = stop.load(Ordering::SeqCst);
-            let mut reqs = self.collect(&rx, first, batch, draining);
-            // Everything popped counts against the outstanding gauge,
-            // whether it executes or not.
+            if !draining && buf.len() < batch {
+                // Size-or-deadline: wait for peers up to max_wait.
+                let deadline = Instant::now() + self.policy.max_wait;
+                while buf.len() < batch {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    match rx.recv_timeout(deadline - now) {
+                        Ok(r) => buf.push(r),
+                        Err(_) => break,
+                    }
+                }
+            }
+            let mut reqs = buf.pop_batch(batch);
+            // Everything drawn counts against the outstanding gauge
+            // when resolved, whether it executes or not. (Jobs still
+            // staged in `buf` remain outstanding.)
             let popped = reqs.len();
+            // Release per-tenant quota slots for every drawn job; only
+            // collected when a quota actually tracked something.
+            let tenants: Option<Vec<Arc<str>>> = if hub.tenant_tracking_active() {
+                Some(reqs.iter().map(|r| r.tenant.clone()).collect())
+            } else {
+                None
+            };
 
             // v2: cancelled / deadline-expired jobs free their batch
-            // slot here; their reply sender drops unsent.
+            // slot here; their reply sender drops unsent. The causes
+            // are counted apart (cancelled vs expired).
             let now = Instant::now();
-            reqs.retain(|r| !r.dead(now));
-            let dropped = (popped - reqs.len()) as u64;
-            if dropped > 0 {
-                slot.stats.lock().unwrap().counters.dropped_replies +=
-                    dropped;
+            let mut cancelled = 0u64;
+            let mut expired = 0u64;
+            reqs.retain(|r| {
+                if r.cancelled.load(Ordering::Relaxed) {
+                    cancelled += 1;
+                    false
+                } else if r.deadline.is_some_and(|d| now > d) {
+                    expired += 1;
+                    false
+                } else {
+                    true
+                }
+            });
+            if cancelled > 0 || expired > 0 {
+                let mut s = slot.stats.lock().unwrap();
+                s.counters.cancelled += cancelled;
+                s.counters.expired += expired;
             }
             if reqs.is_empty() {
                 slot.outstanding.fetch_sub(popped, Ordering::Relaxed);
+                if let Some(ts) = tenants {
+                    hub.tenant_release_batch(ts.iter().map(|t| &**t));
+                }
                 continue;
             }
             let n = reqs.len();
@@ -146,8 +282,7 @@ impl Batcher {
                 flat[i * elems..(i + 1) * elems]
                     .copy_from_slice(r.job.image());
             }
-            let kinds: Vec<JobKind> =
-                reqs.iter().map(|r| r.job.kind()).collect();
+            let kinds: Vec<JobKind> = reqs.iter().map(|r| r.job.kind()).collect();
             let jobs = JobBatch::new(&flat, &kinds);
             let t0 = Instant::now();
             // Chaos mode: the trace may kill this worker mid-batch —
@@ -166,8 +301,7 @@ impl Batcher {
                     result = exec_batch(backend, &jobs, n);
                 }
                 if kills > 0 {
-                    slot.stats.lock().unwrap().counters.chaos_kills +=
-                        kills;
+                    slot.stats.lock().unwrap().counters.chaos_kills += kills;
                 }
             }
             match result {
@@ -181,8 +315,7 @@ impl Batcher {
                     s.counters.batches += 1;
                     for (r, output) in reqs.drain(..).zip(outputs) {
                         let latency = r.enqueued_at.elapsed();
-                        s.latency.record(latency);
-                        s.counters.served += 1;
+                        s.record_served(latency, r.priority, r.job.kind());
                         let sent = r.reply.send(Response {
                             id: r.id,
                             output,
@@ -193,7 +326,7 @@ impl Batcher {
                             // The client dropped its Pending after we
                             // started executing: the reply has nowhere
                             // to go.
-                            s.counters.dropped_replies += 1;
+                            s.counters.send_failed += 1;
                         }
                     }
                     drop(s);
@@ -209,6 +342,101 @@ impl Batcher {
                 }
             }
             slot.outstanding.fetch_sub(popped, Ordering::Relaxed);
+            if let Some(ts) = tenants {
+                hub.tenant_release_batch(ts.iter().map(|t| &**t));
+            }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::Priority;
+    use std::sync::atomic::AtomicBool;
+    use std::sync::mpsc;
+    use std::sync::Arc;
+
+    fn queued(priority: Priority, tenant: &str, id: u64) -> QueuedJob {
+        let (reply, _rx) = mpsc::channel::<Response>();
+        // Leak the receiver side so sends in other tests never matter;
+        // these jobs are only pushed/popped, never executed.
+        std::mem::forget(_rx);
+        QueuedJob {
+            id,
+            job: super::super::Job::Classify(vec![0.0; 4]),
+            enqueued_at: Instant::now(),
+            deadline: None,
+            reply,
+            cancelled: Arc::new(AtomicBool::new(false)),
+            priority,
+            tenant: Arc::from(tenant),
+        }
+    }
+
+    #[test]
+    fn wdrr_prefers_interactive_but_never_starves() {
+        let mut buf = ClassBuffer::new([8, 4, 1]);
+        for i in 0..20 {
+            buf.push(queued(Priority::Interactive, "t", 100 + i));
+            buf.push(queued(Priority::Batch, "t", 200 + i));
+            buf.push(queued(Priority::Background, "t", 300 + i));
+        }
+        let drawn = buf.pop_batch(13);
+        assert_eq!(drawn.len(), 13);
+        let count = |p: Priority| drawn.iter().filter(|j| j.priority == p).count();
+        // One full WDRR round: 8 interactive, 4 batch, 1 background.
+        assert_eq!(count(Priority::Interactive), 8);
+        assert_eq!(count(Priority::Batch), 4);
+        assert_eq!(count(Priority::Background), 1);
+        assert_eq!(buf.len(), 60 - 13);
+    }
+
+    #[test]
+    fn wdrr_fills_from_remaining_classes_when_one_is_empty() {
+        let mut buf = ClassBuffer::new([8, 4, 1]);
+        for i in 0..2 {
+            buf.push(queued(Priority::Interactive, "t", i));
+        }
+        for i in 0..10 {
+            buf.push(queued(Priority::Background, "t", 10 + i));
+        }
+        let drawn = buf.pop_batch(8);
+        assert_eq!(drawn.len(), 8, "batch fills from non-empty classes");
+        assert_eq!(
+            drawn
+                .iter()
+                .filter(|j| j.priority == Priority::Interactive)
+                .count(),
+            2
+        );
+        assert_eq!(buf.pop_batch(100).len(), 4);
+        assert!(buf.is_empty());
+    }
+
+    #[test]
+    fn tenants_within_a_class_rotate_fairly() {
+        let mut buf = ClassBuffer::new([1, 1, 1]);
+        // Tenant "hog" queues 10 jobs before "mouse" queues 2.
+        for i in 0..10 {
+            buf.push(queued(Priority::Batch, "hog", i));
+        }
+        for i in 0..2 {
+            buf.push(queued(Priority::Batch, "mouse", 100 + i));
+        }
+        let drawn = buf.pop_batch(4);
+        let mice = drawn.iter().filter(|j| &*j.tenant == "mouse").count();
+        assert_eq!(
+            mice, 2,
+            "round-robin interleaves the late tenant: {:?}",
+            drawn.iter().map(|j| j.id).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn zero_weights_are_clamped() {
+        let mut buf = ClassBuffer::new([0, 0, 0]);
+        buf.push(queued(Priority::Background, "t", 1));
+        assert_eq!(buf.pop_batch(1).len(), 1, "clamped weight drains");
     }
 }

@@ -1,27 +1,85 @@
-//! Bounded admission: geometry/job validation, request-id allocation,
-//! least-outstanding-work dispatch across the worker queues, and
-//! backpressure when every queue is full.
+//! Bounded admission: geometry/job validation, QoS admission control
+//! (load shedding by priority class + per-tenant quotas), request-id
+//! allocation, least-outstanding-work dispatch across the worker
+//! queues, and backpressure when the coordinator is at capacity.
 //!
 //! The outstanding-work gauge is incremented BEFORE a request is
 //! offered to a queue and rolled back on refusal, so a worker's
 //! decrement (which always follows a successful enqueue) can never
-//! race the gauge below zero.
+//! race the gauge below zero. The admission bound is the SUM of the
+//! per-worker gauges measured against `pool.queue`: workers stage
+//! accepted jobs in their WDRR class buffers, so channel occupancy
+//! alone no longer reflects how much work is in flight.
+//!
+//! Load shedding (DESIGN.md §13): each priority class owns an
+//! occupancy threshold (`qos.shed_pct`, percent of `pool.queue`).
+//! When total outstanding work reaches a class's threshold, NEW
+//! submissions in that class are rejected immediately with
+//! [`AdmitError::Shed`] instead of queueing toward a timeout —
+//! lower classes have lower thresholds, so background load sheds
+//! first while interactive admission (default 100% = never shed,
+//! only hard backpressure) is preserved. Typed rejections let the
+//! TCP front-end answer with an `overload` frame the client can
+//! back off on.
 
+use std::fmt;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{SyncSender, TrySendError};
+use std::sync::mpsc::{Sender, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use super::job::{Priority, NUM_PRIORITY_CLASSES};
 use super::metrics_agg::MetricsHub;
-use super::{Job, Pending, QueuedJob, Response};
+use super::{Job, Pending, QosPolicy, QueuedJob, Response, SubmitOpts};
+
+/// Typed admission rejection — distinguishable by callers (the TCP
+/// server maps each variant to an `overload` wire frame) and all
+/// retryable: capacity frees as batches complete.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmitError {
+    /// Total outstanding work reached `pool.queue` (or every worker
+    /// queue refused the hand-off): hard backpressure.
+    QueueFull,
+    /// Overload shed: outstanding work crossed this class's
+    /// `qos.shed_pct` threshold.
+    Shed(Priority),
+    /// The tenant is at its `qos.tenant_quota` of in-flight jobs.
+    TenantQuota,
+}
+
+impl fmt::Display for AdmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AdmitError::QueueFull => {
+                write!(f, "queue full (backpressure)")
+            }
+            AdmitError::Shed(p) => {
+                write!(f, "overloaded: {} class is shedding", p.as_str())
+            }
+            AdmitError::TenantQuota => {
+                write!(f, "tenant quota exhausted")
+            }
+        }
+    }
+}
+
+impl std::error::Error for AdmitError {}
 
 pub(super) struct Ingress {
     senders: Vec<SyncSender<QueuedJob>>,
     hub: Arc<MetricsHub>,
     next_id: AtomicU64,
     input_elems: usize,
+    /// Total admission bound (`pool.queue`).
+    capacity: usize,
+    /// Per-class shed thresholds in absolute outstanding jobs;
+    /// `usize::MAX` disables shedding for a class (`qos.shed_pct` of
+    /// 100 or more).
+    shed_at: [usize; NUM_PRIORITY_CLASSES],
+    /// Max in-flight jobs per tenant; 0 disables the quota.
+    tenant_quota: u64,
 }
 
 impl Ingress {
@@ -29,8 +87,28 @@ impl Ingress {
         senders: Vec<SyncSender<QueuedJob>>,
         hub: Arc<MetricsHub>,
         input_elems: usize,
+        capacity: usize,
+        qos: &QosPolicy,
     ) -> Self {
-        Ingress { senders, hub, next_id: AtomicU64::new(0), input_elems }
+        let capacity = capacity.max(1);
+        let mut shed_at = [usize::MAX; NUM_PRIORITY_CLASSES];
+        for (i, s) in shed_at.iter_mut().enumerate() {
+            let pct = qos.shed_pct[i] as usize;
+            if pct < 100 {
+                // A threshold of zero would shed a class outright even
+                // on an idle server; always admit at least one job.
+                *s = (capacity * pct / 100).max(1);
+            }
+        }
+        Ingress {
+            senders,
+            hub,
+            next_id: AtomicU64::new(0),
+            input_elems,
+            capacity,
+            shed_at,
+            tenant_quota: qos.tenant_quota,
+        }
     }
 
     pub(super) fn input_elems(&self) -> usize {
@@ -47,14 +125,24 @@ impl Ingress {
         order
     }
 
-    /// Submit a typed job. Fails fast when every worker queue is full
-    /// (backpressure), the job's image has the wrong geometry, or the
-    /// job parameters are malformed (e.g. `TopK { k: 0 }`).
-    pub(super) fn submit(
+    fn total_outstanding(&self) -> usize {
+        (0..self.senders.len())
+            .map(|w| self.hub.worker(w).outstanding.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Validate, run QoS admission control, and dispatch one job whose
+    /// reply goes to `reply` under the caller-chosen `id`. Returns the
+    /// cancellation flag on success. Admission rejections carry a
+    /// downcastable [`AdmitError`]; validation failures are plain
+    /// errors.
+    pub(super) fn admit(
         &self,
         job: Job,
-        deadline: Option<Instant>,
-    ) -> Result<Pending> {
+        opts: &SubmitOpts,
+        id: u64,
+        reply: Sender<Response>,
+    ) -> Result<Arc<AtomicBool>> {
         anyhow::ensure!(
             job.image().len() == self.input_elems,
             "image has {} elems, model expects {}",
@@ -64,16 +152,36 @@ impl Ingress {
         if let Job::TopK { k, .. } = &job {
             anyhow::ensure!(*k >= 1, "top-k requires k >= 1");
         }
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let (reply, rx) = std::sync::mpsc::channel::<Response>();
+        // QoS gates, cheapest-consequence first. The occupancy reads
+        // are racy against concurrent admits by design: thresholds are
+        // soft watermarks, the per-worker gauge pre-increment below
+        // remains the hard bound on each queue.
+        let outstanding = self.total_outstanding();
+        if outstanding >= self.capacity {
+            self.hub.note_rejected();
+            return Err(AdmitError::QueueFull.into());
+        }
+        if outstanding >= self.shed_at[opts.priority.index()] {
+            self.hub.note_shed(opts.priority);
+            return Err(AdmitError::Shed(opts.priority).into());
+        }
+        let quota_held = self.tenant_quota > 0;
+        if quota_held
+            && !self.hub.tenant_try_admit(&opts.tenant, self.tenant_quota)
+        {
+            self.hub.note_rejected();
+            return Err(AdmitError::TenantQuota.into());
+        }
         let cancelled = Arc::new(AtomicBool::new(false));
         let mut req = QueuedJob {
             id,
             job,
             enqueued_at: Instant::now(),
-            deadline,
+            deadline: opts.deadline,
             reply,
             cancelled: cancelled.clone(),
+            priority: opts.priority,
+            tenant: Arc::from(opts.tenant.as_str()),
         };
         let mut disconnected = 0usize;
         for w in self.dispatch_order() {
@@ -82,7 +190,7 @@ impl Ingress {
             match self.senders[w].try_send(req) {
                 Ok(()) => {
                     self.hub.note_enqueued();
-                    return Ok(Pending { id, rx, cancel: cancelled });
+                    return Ok(cancelled);
                 }
                 Err(TrySendError::Full(r)) => {
                     gauge.fetch_sub(1, Ordering::Relaxed);
@@ -95,23 +203,42 @@ impl Ingress {
                 }
             }
         }
+        if quota_held {
+            self.hub.tenant_release(&opts.tenant);
+        }
         if disconnected == self.senders.len() {
             anyhow::bail!("coordinator stopped")
         }
         self.hub.note_rejected();
-        anyhow::bail!("queue full (backpressure)")
+        Err(AdmitError::QueueFull.into())
     }
 
-    /// Blocking submit: retries on backpressure until accepted.
+    /// Submit a typed job. Fails fast when the coordinator is at
+    /// capacity (backpressure), the class or tenant is over its QoS
+    /// limit, the job's image has the wrong geometry, or the job
+    /// parameters are malformed (e.g. `TopK { k: 0 }`).
+    pub(super) fn submit(
+        &self,
+        job: Job,
+        opts: &SubmitOpts,
+    ) -> Result<Pending> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (reply, rx) = std::sync::mpsc::channel::<Response>();
+        let cancel = self.admit(job, opts, id, reply)?;
+        Ok(Pending { id, rx, cancel })
+    }
+
+    /// Blocking submit: retries on any (retryable) admission
+    /// rejection until accepted.
     pub(super) fn submit_blocking(
         &self,
         job: Job,
-        deadline: Option<Instant>,
+        opts: &SubmitOpts,
     ) -> Result<Pending> {
         loop {
-            match self.submit(job.clone(), deadline) {
+            match self.submit(job.clone(), opts) {
                 Ok(p) => return Ok(p),
-                Err(e) if e.to_string().contains("backpressure") => {
+                Err(e) if e.downcast_ref::<AdmitError>().is_some() => {
                     std::thread::sleep(Duration::from_micros(200));
                 }
                 Err(e) => return Err(e),

@@ -26,6 +26,68 @@ use crate::arch::LaneTraffic;
 use crate::energy::CostBreakdown;
 use crate::subarray::OpLedger;
 
+/// Number of [`Priority`] classes (array dimension for per-class
+/// counters and histograms).
+pub const NUM_PRIORITY_CLASSES: usize = 3;
+
+/// QoS priority class of a submitted job (DESIGN.md §13). Classes are
+/// drained by weighted-deficit round-robin in the batcher and shed
+/// lowest-first under overload; the default is `Interactive` so
+/// existing single-class callers keep the old behaviour.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum Priority {
+    /// Latency-sensitive foreground traffic: highest drain weight,
+    /// shed last.
+    #[default]
+    Interactive,
+    /// Throughput traffic that tolerates queueing.
+    Batch,
+    /// Best-effort traffic: lowest drain weight, shed first.
+    Background,
+}
+
+impl Priority {
+    /// Every class, in drain-preference (and shed-last) order.
+    pub const ALL: [Priority; NUM_PRIORITY_CLASSES] =
+        [Priority::Interactive, Priority::Batch, Priority::Background];
+
+    /// Stable index for per-class arrays (counters, histograms,
+    /// WDRR deficits).
+    pub fn index(self) -> usize {
+        match self {
+            Priority::Interactive => 0,
+            Priority::Batch => 1,
+            Priority::Background => 2,
+        }
+    }
+
+    /// The wire / CLI spelling.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Batch => "batch",
+            Priority::Background => "background",
+        }
+    }
+
+    /// Parse the wire / CLI spelling.
+    pub fn parse(s: &str) -> anyhow::Result<Priority> {
+        match s {
+            "interactive" => Ok(Priority::Interactive),
+            "batch" => Ok(Priority::Batch),
+            "background" => Ok(Priority::Background),
+            other => anyhow::bail!(
+                "unknown priority '{other}' \
+                 (expected interactive | batch | background)"
+            ),
+        }
+    }
+}
+
+/// Number of [`JobKind`] variants (array dimension for per-kind
+/// histograms; `TopK` collapses to one slot regardless of `k`).
+pub const NUM_JOB_KINDS: usize = 4;
+
 /// One typed inference job (the v2 request).
 #[derive(Debug, Clone)]
 pub enum Job {
@@ -69,6 +131,28 @@ pub enum JobKind {
     Logits,
     TopK(usize),
     EnergyAudit,
+}
+
+impl JobKind {
+    /// Stable index for per-kind arrays (all `TopK` share one slot).
+    pub fn index(self) -> usize {
+        match self {
+            JobKind::Classify => 0,
+            JobKind::Logits => 1,
+            JobKind::TopK(_) => 2,
+            JobKind::EnergyAudit => 3,
+        }
+    }
+
+    /// The wire / report spelling of the kind tag.
+    pub fn name(self) -> &'static str {
+        match self {
+            JobKind::Classify => "classify",
+            JobKind::Logits => "logits",
+            JobKind::TopK(_) => "topk",
+            JobKind::EnergyAudit => "energy_audit",
+        }
+    }
 }
 
 /// One executed batch from the backend's point of view: operand rows
@@ -271,6 +355,27 @@ mod tests {
         let l = JobOutput::Logits(vec![0.5]);
         assert_eq!(l.prediction(), None);
         assert!(l.audit().is_none());
+    }
+
+    #[test]
+    fn priority_parse_roundtrip_and_order() {
+        for (i, p) in Priority::ALL.iter().enumerate() {
+            assert_eq!(p.index(), i);
+            assert_eq!(Priority::parse(p.as_str()).unwrap(), *p);
+        }
+        assert!(Priority::parse("urgent").is_err());
+        assert_eq!(Priority::default(), Priority::Interactive);
+    }
+
+    #[test]
+    fn job_kind_indices_are_stable() {
+        assert_eq!(JobKind::Classify.index(), 0);
+        assert_eq!(JobKind::Logits.index(), 1);
+        assert_eq!(JobKind::TopK(1).index(), 2);
+        assert_eq!(JobKind::TopK(9).index(), 2);
+        assert_eq!(JobKind::EnergyAudit.index(), 3);
+        assert_eq!(JobKind::EnergyAudit.name(), "energy_audit");
+        assert!(NUM_JOB_KINDS > JobKind::EnergyAudit.index());
     }
 
     #[test]

@@ -3,16 +3,29 @@
 //!
 //! Each executor worker owns a [`WorkerSlot`] and records into it
 //! without contending with its siblings (one mutex per worker, locked
-//! once per batch). Admission-side events (enqueued/rejected) live in
-//! a separate slot because they happen on caller threads before a
-//! worker is chosen. [`MetricsHub::snapshot`] merges everything —
-//! counters, latency histograms, and the live queue-depth gauge —
-//! the way the chip's H-tree funnels per-sub-array counts to the EPU.
+//! once per batch). Admission-side events (enqueued/rejected/shed)
+//! live in a separate slot because they happen on caller threads
+//! before a worker is chosen, as does the per-tenant in-flight table
+//! that enforces `qos.tenant_quota`. [`MetricsHub::snapshot`] merges
+//! everything — counters, latency histograms, and the live
+//! queue-depth gauge — the way the chip's H-tree funnels per-sub-array
+//! counts to the EPU.
+//!
+//! Tail latency (QoS, DESIGN.md §13): alongside the exact
+//! [`LatencyRecorder`], every worker maintains fixed-bucket
+//! [`LogHistogram`]s per priority class and per job kind. Their merge
+//! path is integer-only (`u64` adds + rank arithmetic), so the
+//! per-class p50/p95/p99 in a snapshot are deterministic regardless of
+//! worker interleaving.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-use crate::metrics::{Counters, LatencyRecorder};
+use crate::jsonlite::Json;
+use crate::metrics::{Counters, LatencyRecorder, LogHistogram};
+
+use super::job::{JobKind, Priority, NUM_JOB_KINDS, NUM_PRIORITY_CLASSES};
 
 /// Merged metrics snapshot over admission and every worker.
 #[derive(Debug, Default, Clone)]
@@ -20,6 +33,12 @@ pub struct ServeMetrics {
     pub counters: Counters,
     pub latency: LatencyRecorder,
     pub exec_latency: LatencyRecorder,
+    /// End-to-end latency histograms per priority class (indexed by
+    /// `Priority::index()`), deterministic integer merge.
+    pub by_class: [LogHistogram; NUM_PRIORITY_CLASSES],
+    /// End-to-end latency histograms per job kind (indexed by
+    /// `JobKind::index()`).
+    pub by_kind: [LogHistogram; NUM_JOB_KINDS],
     /// Gauge: requests admitted but not yet answered (queued or in a
     /// batch), summed over workers, at snapshot time.
     pub queue_depth: usize,
@@ -27,13 +46,105 @@ pub struct ServeMetrics {
     pub per_worker: Vec<WorkerSnapshot>,
 }
 
+/// Wire / report spellings of the job-kind histogram slots, in
+/// `JobKind::index()` order.
+pub const JOB_KIND_NAMES: [&str; NUM_JOB_KINDS] =
+    ["classify", "logits", "topk", "energy_audit"];
+
 impl ServeMetrics {
-    /// Gauge: admitted jobs whose reply was never delivered —
-    /// cancelled or deadline-expired before execution (freeing their
-    /// batch slot), or a reply send that failed because the client
-    /// dropped its `Pending` (serving API v2, DESIGN.md §9).
+    /// Admitted jobs whose reply was never delivered — cancelled or
+    /// deadline-expired before execution (freeing their batch slot),
+    /// or a reply send that failed because the client dropped its
+    /// `Pending` (serving API v2, DESIGN.md §9). The split lives in
+    /// [`Counters::cancelled`] / [`Counters::expired`] /
+    /// [`Counters::send_failed`].
     pub fn dropped_replies(&self) -> u64 {
-        self.counters.dropped_replies
+        self.counters.dropped_replies()
+    }
+
+    /// Machine-readable dump (the `--metrics-json` schema and the wire
+    /// `metrics` frame payload, DESIGN.md §13). Histogram percentiles
+    /// are reported in nanoseconds as bucket upper bounds; classes or
+    /// kinds with no samples report `"count": 0` and omit percentiles.
+    pub fn to_json(&self) -> Json {
+        fn num(v: u64) -> Json {
+            Json::Num(v as f64)
+        }
+        fn hist(h: &LogHistogram) -> Json {
+            let mut o = std::collections::BTreeMap::new();
+            o.insert("count".to_string(), num(h.count()));
+            if let (Some(p50), Some(p95), Some(p99)) =
+                (h.p50_ns(), h.p95_ns(), h.p99_ns())
+            {
+                o.insert("p50_ns".to_string(), num(p50));
+                o.insert("p95_ns".to_string(), num(p95));
+                o.insert("p99_ns".to_string(), num(p99));
+            }
+            Json::Obj(o)
+        }
+        let c = &self.counters;
+        let mut counters = std::collections::BTreeMap::new();
+        for (k, v) in [
+            ("enqueued", c.enqueued),
+            ("served", c.served),
+            ("batches", c.batches),
+            ("rejected", c.rejected),
+            ("errors", c.errors),
+            ("chaos_kills", c.chaos_kills),
+            ("cancelled", c.cancelled),
+            ("expired", c.expired),
+            ("send_failed", c.send_failed),
+        ] {
+            counters.insert(k.to_string(), num(v));
+        }
+        let mut shed = std::collections::BTreeMap::new();
+        for p in Priority::ALL {
+            shed.insert(p.as_str().to_string(), num(c.shed[p.index()]));
+        }
+        counters.insert("shed".to_string(), Json::Obj(shed));
+
+        let mut by_class = std::collections::BTreeMap::new();
+        for p in Priority::ALL {
+            by_class.insert(
+                p.as_str().to_string(),
+                hist(&self.by_class[p.index()]),
+            );
+        }
+        let mut by_kind = std::collections::BTreeMap::new();
+        for (i, name) in JOB_KIND_NAMES.iter().enumerate() {
+            by_kind.insert(name.to_string(), hist(&self.by_kind[i]));
+        }
+        let per_worker: Vec<Json> = self
+            .per_worker
+            .iter()
+            .map(|w| {
+                let mut o = std::collections::BTreeMap::new();
+                o.insert("served".to_string(), num(w.served));
+                o.insert("batches".to_string(), num(w.batches));
+                o.insert("errors".to_string(), num(w.errors));
+                o.insert("chaos_kills".to_string(), num(w.chaos_kills));
+                o.insert(
+                    "dropped_replies".to_string(),
+                    num(w.dropped_replies),
+                );
+                o.insert(
+                    "outstanding".to_string(),
+                    num(w.outstanding as u64),
+                );
+                Json::Obj(o)
+            })
+            .collect();
+
+        let mut root = std::collections::BTreeMap::new();
+        root.insert("counters".to_string(), Json::Obj(counters));
+        root.insert(
+            "queue_depth".to_string(),
+            num(self.queue_depth as u64),
+        );
+        root.insert("by_class".to_string(), Json::Obj(by_class));
+        root.insert("by_kind".to_string(), Json::Obj(by_kind));
+        root.insert("per_worker".to_string(), Json::Arr(per_worker));
+        Json::Obj(root)
     }
 }
 
@@ -46,7 +157,7 @@ pub struct WorkerSnapshot {
     /// Chaos-mode power failures that killed this worker mid-batch.
     pub chaos_kills: u64,
     /// Replies this worker could not deliver (cancelled, expired, or
-    /// client gone).
+    /// client gone), summed across the split counters.
     pub dropped_replies: u64,
     /// Gauge: this worker's outstanding requests at snapshot time.
     pub outstanding: usize,
@@ -58,6 +169,25 @@ pub(super) struct WorkerStats {
     pub counters: Counters,
     pub latency: LatencyRecorder,
     pub exec_latency: LatencyRecorder,
+    pub by_class: [LogHistogram; NUM_PRIORITY_CLASSES],
+    pub by_kind: [LogHistogram; NUM_JOB_KINDS],
+}
+
+impl WorkerStats {
+    /// Record one served reply's end-to-end latency into the exact
+    /// recorder and both QoS histograms.
+    pub(super) fn record_served(
+        &mut self,
+        latency: std::time::Duration,
+        priority: Priority,
+        kind: JobKind,
+    ) {
+        self.latency.record(latency);
+        let ns = latency.as_nanos() as u64;
+        self.by_class[priority.index()].record_ns(ns);
+        self.by_kind[kind.index()].record_ns(ns);
+        self.counters.served += 1;
+    }
 }
 
 /// One worker's metrics cell: stats behind a mutex (locked by the
@@ -69,11 +199,17 @@ pub(super) struct WorkerSlot {
     pub(super) outstanding: AtomicUsize,
 }
 
-/// Shared hub: admission counters + one slot per worker.
+/// Shared hub: admission counters + one slot per worker + the
+/// per-tenant in-flight table behind `qos.tenant_quota`.
 #[derive(Debug)]
 pub(super) struct MetricsHub {
     admission: Mutex<Counters>,
     workers: Vec<WorkerSlot>,
+    /// In-flight job count per tenant. Only populated when a quota is
+    /// configured (admission increments, the batcher releases);
+    /// `tenant_release` tolerates absent entries so quota-off runs pay
+    /// nothing.
+    tenants: Mutex<HashMap<String, u64>>,
 }
 
 impl MetricsHub {
@@ -81,6 +217,7 @@ impl MetricsHub {
         MetricsHub {
             admission: Mutex::new(Counters::default()),
             workers: (0..workers).map(|_| WorkerSlot::default()).collect(),
+            tenants: Mutex::new(HashMap::new()),
         }
     }
 
@@ -100,6 +237,65 @@ impl MetricsHub {
         self.admission.lock().unwrap().rejected += 1;
     }
 
+    /// Overload shed of one submission in `class`: counted both in
+    /// the per-class shed array and the total `rejected`.
+    pub(super) fn note_shed(&self, class: Priority) {
+        let mut c = self.admission.lock().unwrap();
+        c.rejected += 1;
+        c.shed[class.index()] += 1;
+    }
+
+    /// Try to admit one in-flight job for `tenant` under `quota`
+    /// (false = quota exhausted; nothing recorded).
+    pub(super) fn tenant_try_admit(
+        &self,
+        tenant: &str,
+        quota: u64,
+    ) -> bool {
+        let mut t = self.tenants.lock().unwrap();
+        let e = t.entry(tenant.to_string()).or_insert(0);
+        if *e >= quota {
+            false
+        } else {
+            *e += 1;
+            true
+        }
+    }
+
+    /// Release one in-flight job for `tenant` (no-op when the tenant
+    /// was never admitted under a quota).
+    pub(super) fn tenant_release(&self, tenant: &str) {
+        let mut t = self.tenants.lock().unwrap();
+        Self::release_locked(&mut t, tenant);
+    }
+
+    /// Whether any tenant currently holds quota slots. The batcher
+    /// checks this before collecting tenants to release, so quota-off
+    /// runs pay one lock per batch and no per-job work.
+    pub(super) fn tenant_tracking_active(&self) -> bool {
+        !self.tenants.lock().unwrap().is_empty()
+    }
+
+    /// Release a whole batch of quota slots under one lock.
+    pub(super) fn tenant_release_batch<'a>(
+        &self,
+        tenants: impl Iterator<Item = &'a str>,
+    ) {
+        let mut t = self.tenants.lock().unwrap();
+        for tenant in tenants {
+            Self::release_locked(&mut t, tenant);
+        }
+    }
+
+    fn release_locked(t: &mut HashMap<String, u64>, tenant: &str) {
+        if let Some(e) = t.get_mut(tenant) {
+            *e = e.saturating_sub(1);
+            if *e == 0 {
+                t.remove(tenant);
+            }
+        }
+    }
+
     /// Merge admission + all workers into one snapshot.
     pub(super) fn snapshot(&self) -> ServeMetrics {
         let mut m = ServeMetrics {
@@ -111,6 +307,12 @@ impl MetricsHub {
             m.counters.merge(&s.counters);
             m.latency.merge(&s.latency);
             m.exec_latency.merge(&s.exec_latency);
+            for (a, b) in m.by_class.iter_mut().zip(&s.by_class) {
+                a.merge(b);
+            }
+            for (a, b) in m.by_kind.iter_mut().zip(&s.by_kind) {
+                a.merge(b);
+            }
             let outstanding = slot.outstanding.load(Ordering::Relaxed);
             m.queue_depth += outstanding;
             m.per_worker.push(WorkerSnapshot {
@@ -118,7 +320,7 @@ impl MetricsHub {
                 batches: s.counters.batches,
                 errors: s.counters.errors,
                 chaos_kills: s.counters.chaos_kills,
-                dropped_replies: s.counters.dropped_replies,
+                dropped_replies: s.counters.dropped_replies(),
                 outstanding,
             });
         }
@@ -137,32 +339,54 @@ mod tests {
         hub.note_enqueued();
         hub.note_enqueued();
         hub.note_rejected();
+        hub.note_shed(Priority::Background);
         {
             let mut s = hub.worker(0).stats.lock().unwrap();
-            s.counters.served = 3;
             s.counters.batches = 2;
-            s.latency.record(Duration::from_micros(10));
+            s.record_served(
+                Duration::from_micros(10),
+                Priority::Interactive,
+                JobKind::Classify,
+            );
+            s.record_served(
+                Duration::from_micros(20),
+                Priority::Background,
+                JobKind::TopK(3),
+            );
+            s.counters.served += 1; // one more without a histogram row
         }
         {
             let mut s = hub.worker(1).stats.lock().unwrap();
             s.counters.served = 1;
             s.counters.errors = 1;
-            s.counters.dropped_replies = 2;
+            s.counters.cancelled = 1;
+            s.counters.send_failed = 1;
         }
         hub.worker(1).outstanding.store(4, Ordering::Relaxed);
 
         let m = hub.snapshot();
         assert_eq!(m.counters.enqueued, 2);
-        assert_eq!(m.counters.rejected, 1);
+        assert_eq!(m.counters.rejected, 2, "shed counts as rejected");
+        assert_eq!(m.counters.shed, [0, 0, 1]);
         assert_eq!(m.counters.served, 4);
         assert_eq!(m.counters.batches, 2);
         assert_eq!(m.counters.errors, 1);
-        assert_eq!(m.latency.count(), 1);
+        assert_eq!(m.latency.count(), 2);
+        assert_eq!(m.by_class[Priority::Interactive.index()].count(), 1);
+        assert_eq!(m.by_class[Priority::Background.index()].count(), 1);
+        assert_eq!(m.by_kind[JobKind::Classify.index()].count(), 1);
+        assert_eq!(m.by_kind[JobKind::TopK(3).index()].count(), 1);
         assert_eq!(m.queue_depth, 4);
         assert_eq!(m.per_worker.len(), 2);
         assert_eq!(m.per_worker[0].served, 3);
         assert_eq!(m.per_worker[1].errors, 1);
-        assert_eq!(m.per_worker[1].dropped_replies, 2);
+        assert_eq!(
+            m.per_worker[1].dropped_replies, 2,
+            "snapshot sums the split counters"
+        );
+        assert_eq!(m.counters.cancelled, 1);
+        assert_eq!(m.counters.send_failed, 1);
+        assert_eq!(m.counters.expired, 0);
         assert_eq!(m.dropped_replies(), 2);
         assert_eq!(m.per_worker[1].outstanding, 4);
     }
@@ -174,5 +398,64 @@ mod tests {
         assert_eq!(m.counters.served, 0);
         assert_eq!(m.queue_depth, 0);
         assert_eq!(m.per_worker.len(), 1);
+    }
+
+    #[test]
+    fn tenant_quota_admission_and_release() {
+        let hub = MetricsHub::new(1);
+        assert!(hub.tenant_try_admit("a", 2));
+        assert!(hub.tenant_try_admit("a", 2));
+        assert!(!hub.tenant_try_admit("a", 2), "quota of 2 exhausted");
+        assert!(hub.tenant_try_admit("b", 2), "tenants are isolated");
+        hub.tenant_release("a");
+        assert!(hub.tenant_try_admit("a", 2), "release frees a slot");
+        // Release of an untracked tenant must be a no-op.
+        hub.tenant_release("never-admitted");
+        assert!(hub.tenant_tracking_active());
+        hub.tenant_release_batch(["a", "a", "b"].into_iter());
+        assert!(
+            !hub.tenant_tracking_active(),
+            "batch release drains every tracked slot"
+        );
+    }
+
+    #[test]
+    fn metrics_json_schema() {
+        let hub = MetricsHub::new(1);
+        hub.note_enqueued();
+        {
+            let mut s = hub.worker(0).stats.lock().unwrap();
+            s.record_served(
+                Duration::from_micros(50),
+                Priority::Interactive,
+                JobKind::Classify,
+            );
+        }
+        let j = hub.snapshot().to_json();
+        let text = j.dump();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(
+            back.get("counters")
+                .and_then(|c| c.get("served"))
+                .and_then(Json::as_f64),
+            Some(1.0)
+        );
+        let cls = back
+            .get("by_class")
+            .and_then(|b| b.get("interactive"))
+            .expect("per-class block present");
+        assert_eq!(cls.get("count").and_then(Json::as_f64), Some(1.0));
+        assert!(
+            cls.get("p99_ns").and_then(Json::as_f64).unwrap() >= 50_000.0
+        );
+        let shed = back
+            .get("counters")
+            .and_then(|c| c.get("shed"))
+            .expect("shed block present");
+        assert_eq!(
+            shed.get("background").and_then(Json::as_f64),
+            Some(0.0)
+        );
+        assert!(back.get("per_worker").is_some());
     }
 }

@@ -25,11 +25,16 @@
 //! [`ServeMetrics::dropped_replies`]). The full thread-ownership map
 //! lives in DESIGN.md §3.
 //!
-//! Subsystem layout: `job` (the typed Job/JobOutput vocabulary),
-//! `ingress` (admission + dispatch), `batcher` (size-or-deadline
-//! batching over job batches), `pool` (worker threads + init
-//! handshake), `metrics_agg` (per-worker counters merged into one
-//! [`ServeMetrics`]), `pimsim` (the PIM co-simulation backend).
+//! Subsystem layout: `job` (the typed Job/JobOutput vocabulary plus
+//! [`Priority`] classes), `ingress` (admission + QoS gates + dispatch),
+//! `batcher` (size-or-deadline batching drained by weighted-deficit
+//! round-robin across classes and tenants), `pool` (worker threads +
+//! init handshake), `metrics_agg` (per-worker counters and per-class /
+//! per-kind latency histograms merged into one [`ServeMetrics`]),
+//! `pimsim` (the PIM co-simulation backend). QoS — priority classes,
+//! per-tenant quotas, load shedding — is documented in DESIGN.md §13;
+//! the TCP front-end that drives this ingress over the wire lives in
+//! [`crate::net`].
 //!
 //! Engine parallelism is NOT owned here: a PIM backend's lane jobs
 //! run on the process-wide persistent [`crate::engine::LaneRuntime`],
@@ -52,8 +57,12 @@ mod pool;
 
 pub use chaos::ChaosPolicy;
 pub use dispatch::WorkQueue;
-pub use job::{EnergyAudit, Job, JobBatch, JobKind, JobOutput};
-pub use metrics_agg::{ServeMetrics, WorkerSnapshot};
+pub use ingress::AdmitError;
+pub use job::{
+    EnergyAudit, Job, JobBatch, JobKind, JobOutput, Priority,
+    NUM_JOB_KINDS, NUM_PRIORITY_CLASSES,
+};
+pub use metrics_agg::{ServeMetrics, WorkerSnapshot, JOB_KIND_NAMES};
 pub use pimsim::PimSimBackend;
 // The resumable engine moved to `crate::engine` (DESIGN.md §7). The
 // names stay importable from here, but construction/resume now go
@@ -161,15 +170,11 @@ pub(crate) struct QueuedJob {
     /// Set when the client drops its [`Pending`]; the worker then
     /// frees the batch slot instead of executing for nobody.
     pub(crate) cancelled: Arc<AtomicBool>,
-}
-
-impl QueuedJob {
-    /// True when executing this job would be wasted work: the client
-    /// cancelled, or the deadline passed while it sat in the queue.
-    pub(crate) fn dead(&self, now: Instant) -> bool {
-        self.cancelled.load(Ordering::Relaxed)
-            || self.deadline.is_some_and(|d| now > d)
-    }
+    /// QoS class the WDRR batcher drains this job under.
+    pub(crate) priority: Priority,
+    /// Tenant for fair-share rotation and quota release (shared,
+    /// not cloned per hop — the hot path stays allocation-light).
+    pub(crate) tenant: Arc<str>,
 }
 
 /// Completed job (the v2 reply).
@@ -204,11 +209,63 @@ impl Response {
 pub(crate) struct BatchPolicy {
     /// Max time the first request of a batch may wait for peers.
     pub max_wait: Duration,
+    /// WDRR weights per priority class (`qos.weights`), indexed by
+    /// `Priority::index()`.
+    pub weights: [u64; NUM_PRIORITY_CLASSES],
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        BatchPolicy { max_wait: Duration::from_millis(2) }
+        BatchPolicy {
+            max_wait: Duration::from_millis(2),
+            weights: [8, 4, 1],
+        }
+    }
+}
+
+/// QoS admission/scheduling policy derived from the `qos.*` RunConfig
+/// keys (DESIGN.md §13).
+#[derive(Debug, Clone)]
+pub(crate) struct QosPolicy {
+    /// WDRR drain weights per class.
+    pub weights: [u64; NUM_PRIORITY_CLASSES],
+    /// Shed thresholds per class, percent of `pool.queue`; >= 100
+    /// disables shedding for that class.
+    pub shed_pct: [u32; NUM_PRIORITY_CLASSES],
+    /// Max in-flight jobs per tenant; 0 disables the quota.
+    pub tenant_quota: u64,
+}
+
+impl Default for QosPolicy {
+    fn default() -> Self {
+        QosPolicy {
+            weights: [8, 4, 1],
+            shed_pct: [100, 75, 50],
+            tenant_quota: 0,
+        }
+    }
+}
+
+/// Per-submission QoS options (serving API v2 + QoS, DESIGN.md §13).
+/// The default is an interactive-class job for the `"default"` tenant
+/// with no deadline — exactly the pre-QoS behavior.
+#[derive(Debug, Clone)]
+pub struct SubmitOpts {
+    /// Priority class for WDRR drain order and shed thresholds.
+    pub priority: Priority,
+    /// Tenant for fair-share rotation and `qos.tenant_quota`.
+    pub tenant: String,
+    /// Still queued past this instant → dropped, not executed.
+    pub deadline: Option<Instant>,
+}
+
+impl Default for SubmitOpts {
+    fn default() -> Self {
+        SubmitOpts {
+            priority: Priority::Interactive,
+            tenant: "default".to_string(),
+            deadline: None,
+        }
     }
 }
 
@@ -361,7 +418,15 @@ impl Coordinator {
             }
             _ => None,
         };
-        let policy = BatchPolicy { max_wait: cfg.max_wait() };
+        let qos = QosPolicy {
+            weights: cfg.qos_weights.map(u64::from),
+            shed_pct: cfg.qos_shed_pct,
+            tenant_quota: cfg.tenant_quota,
+        };
+        let policy = BatchPolicy {
+            max_wait: cfg.max_wait(),
+            weights: qos.weights,
+        };
         let factory = Arc::new(factory);
         let makers = (0..cfg.workers)
             .map(|w| {
@@ -369,13 +434,14 @@ impl Coordinator {
                 Box::new(move || f(w)) as pool::BackendMaker<B>
             })
             .collect();
-        Self::start_boxed_inner(makers, policy, cfg.queue, chaos)
+        Self::start_boxed_inner(makers, policy, cfg.queue, qos, chaos)
     }
 
     fn start_boxed_inner<B: Backend + 'static>(
         makers: Vec<pool::BackendMaker<B>>,
         policy: BatchPolicy,
         queue_depth: usize,
+        qos: QosPolicy,
         chaos: Option<ChaosPolicy>,
     ) -> Result<Coordinator> {
         let hub = Arc::new(MetricsHub::new(makers.len()));
@@ -392,6 +458,8 @@ impl Coordinator {
             pool.senders,
             hub.clone(),
             pool.geometry.input_elems,
+            queue_depth,
+            &qos,
         );
         Ok(Coordinator {
             ingress: Some(ingress),
@@ -421,15 +489,16 @@ impl Coordinator {
         self.submit_job_blocking(Job::Classify(image))
     }
 
-    /// Submit a typed job. Fails fast when every worker queue is full
-    /// (backpressure) or the job's image has the wrong geometry.
+    /// Submit a typed job. Fails fast when the coordinator is at
+    /// capacity (backpressure) or the job's image has the wrong
+    /// geometry.
     pub fn submit_job(&self, job: Job) -> Result<Pending> {
-        self.ingress().submit(job, None)
+        self.ingress().submit(job, &SubmitOpts::default())
     }
 
     /// Blocking typed submit: retries on backpressure until accepted.
     pub fn submit_job_blocking(&self, job: Job) -> Result<Pending> {
-        self.ingress().submit_blocking(job, None)
+        self.ingress().submit_blocking(job, &SubmitOpts::default())
     }
 
     /// Submit a typed job with a deadline: if it is still queued when
@@ -441,7 +510,37 @@ impl Coordinator {
         job: Job,
         deadline: Duration,
     ) -> Result<Pending> {
-        self.ingress().submit(job, Some(Instant::now() + deadline))
+        let opts = SubmitOpts {
+            deadline: Some(Instant::now() + deadline),
+            ..SubmitOpts::default()
+        };
+        self.ingress().submit(job, &opts)
+    }
+
+    /// Submit a typed job with full QoS options (priority class,
+    /// tenant, deadline). Admission rejections carry a downcastable
+    /// [`AdmitError`] so callers can distinguish hard backpressure
+    /// from load shedding and quota exhaustion.
+    pub fn submit_job_with_opts(
+        &self,
+        job: Job,
+        opts: &SubmitOpts,
+    ) -> Result<Pending> {
+        self.ingress().submit(job, opts)
+    }
+
+    /// Admission entry for callers that own the reply channel and the
+    /// request id (the TCP front-end: one shared reply channel per
+    /// connection, the client's wire id flows through unchanged).
+    /// Returns the cancellation flag on success.
+    pub(crate) fn submit_shared(
+        &self,
+        job: Job,
+        opts: &SubmitOpts,
+        id: u64,
+        reply: Sender<Response>,
+    ) -> Result<Arc<AtomicBool>> {
+        self.ingress().admit(job, opts, id, reply)
     }
 
     pub fn metrics(&self) -> ServeMetrics {
@@ -699,6 +798,66 @@ mod tests {
     }
 
     #[test]
+    fn qos_shed_and_tenant_quota_reject_typed() {
+        // Capacity 4 → background sheds at 4 * 50% = 2 outstanding;
+        // tenant quota of 1 rejects a second in-flight job per tenant.
+        let mut rc = cfg(1, 4, 0.0);
+        rc.tenant_quota = 1;
+        let c = Coordinator::launch_pool(&rc, move |_| {
+            let mut b = MockBackend::new(1, 4, 10);
+            b.delay = Duration::from_millis(100);
+            Ok(b)
+        })
+        .unwrap();
+        let t1 = SubmitOpts {
+            tenant: "t1".to_string(),
+            ..SubmitOpts::default()
+        };
+        let a = c.submit_job_with_opts(Job::Classify(img(1)), &t1).unwrap();
+        let e = c
+            .submit_job_with_opts(Job::Classify(img(1)), &t1)
+            .unwrap_err();
+        assert!(
+            matches!(
+                e.downcast_ref::<AdmitError>(),
+                Some(AdmitError::TenantQuota)
+            ),
+            "second in-flight t1 job trips the quota: {e}"
+        );
+        let t2 = SubmitOpts {
+            tenant: "t2".to_string(),
+            ..SubmitOpts::default()
+        };
+        let b = c.submit_job_with_opts(Job::Classify(img(2)), &t2).unwrap();
+        let bg = SubmitOpts {
+            priority: Priority::Background,
+            tenant: "t3".to_string(),
+            ..SubmitOpts::default()
+        };
+        let e = c
+            .submit_job_with_opts(Job::Classify(img(3)), &bg)
+            .unwrap_err();
+        assert!(
+            matches!(
+                e.downcast_ref::<AdmitError>(),
+                Some(AdmitError::Shed(Priority::Background))
+            ),
+            "2 outstanding >= background threshold: {e}"
+        );
+        assert_eq!(a.wait().unwrap().prediction(), Some(1));
+        assert_eq!(b.wait().unwrap().prediction(), Some(2));
+        // The quota slot frees shortly after the reply (the batcher
+        // releases tenants once the batch resolves).
+        std::thread::sleep(Duration::from_millis(50));
+        let again = c.submit_job_with_opts(Job::Classify(img(4)), &t1).unwrap();
+        assert_eq!(again.wait().unwrap().prediction(), Some(4));
+        let m = c.shutdown();
+        assert_eq!(m.counters.shed, [0, 0, 1]);
+        assert_eq!(m.counters.rejected, 2, "quota + shed both reject");
+        assert_eq!(m.counters.served, 3);
+    }
+
+    #[test]
     fn latency_recorded() {
         let c = coord(4, 16);
         for i in 0..8 {
@@ -775,6 +934,9 @@ mod tests {
         a.wait().unwrap();
         let m = c.shutdown();
         assert_eq!(m.counters.served, 1, "cancelled job must not run");
+        assert_eq!(m.counters.cancelled, 1, "counted as cancelled");
+        assert_eq!(m.counters.expired, 0);
+        assert_eq!(m.counters.send_failed, 0);
         assert_eq!(m.dropped_replies(), 1);
         assert_eq!(m.queue_depth, 0, "cancelled job freed its slot");
     }
@@ -800,23 +962,33 @@ mod tests {
         a.wait().unwrap();
         let m = c.shutdown();
         assert_eq!(m.counters.served, 1);
-        assert!(m.dropped_replies() >= 1);
+        assert_eq!(m.counters.expired, 1, "counted as expired");
+        assert_eq!(m.counters.cancelled, 0);
+        assert_eq!(m.counters.send_failed, 0);
         assert_eq!(m.queue_depth, 0);
     }
 
     #[test]
     fn timed_out_wait_counts_dropped_reply() {
         // The pre-v2 leak: wait_timeout gave up but the dead reply
-        // sender silently swallowed the send. Now it is counted.
+        // sender silently swallowed the send. Now it is counted — and
+        // since the worker had already started executing when the
+        // client gave up, specifically as a failed send.
         let c = Coordinator::launch_pool(&cfg(1, 4, 0.0), move |_| {
             let mut b = MockBackend::new(1, 4, 10);
-            b.delay = Duration::from_millis(20);
+            b.delay = Duration::from_millis(40);
             Ok(b)
         })
         .unwrap();
         let p = c.submit(img(3)).unwrap();
+        // Let the idle worker pull the job into execution before the
+        // client abandons it, so the drop cannot land pre-batch.
+        std::thread::sleep(Duration::from_millis(10));
         assert!(p.wait_timeout(Duration::from_millis(1)).is_err());
         let m = c.shutdown();
+        assert_eq!(m.counters.send_failed, 1, "client vanished mid-run");
+        assert_eq!(m.counters.cancelled, 0);
+        assert_eq!(m.counters.expired, 0);
         assert_eq!(m.dropped_replies(), 1);
         assert_eq!(m.queue_depth, 0);
     }

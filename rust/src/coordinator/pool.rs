@@ -88,7 +88,8 @@ pub(super) fn spawn_pool<B: Backend + 'static>(
                 Batcher::new(policy).run(
                     &mut backend,
                     rx,
-                    hub.worker(w),
+                    &hub,
+                    w,
                     &stop,
                     clock,
                 );

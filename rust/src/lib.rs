@@ -23,8 +23,11 @@
 //! * serving: [`apicfg`] (declarative `RunConfig`, the one artifact a
 //!   run launches from — DESIGN.md §9), [`runtime`] (PJRT, gated
 //!   behind the `pjrt` feature), [`coordinator`] (typed Job/JobOutput
-//!   API, ingress → per-worker batchers → executor pool, incl. the
-//!   PIM co-sim serving backend over `engine`), [`metrics`]
+//!   API with QoS priority classes, ingress → per-worker WDRR
+//!   batchers → executor pool, incl. the PIM co-sim serving backend
+//!   over `engine`), [`net`] (TCP front-end: length-delimited
+//!   `jsonlite` frames, multiplexing client, overload shedding —
+//!   DESIGN.md §13), [`metrics`]
 
 pub mod benchlib;
 pub mod bitops;
@@ -50,6 +53,7 @@ pub mod engine;
 pub mod fleet;
 pub mod intermittency;
 pub mod metrics;
+pub mod net;
 pub mod nvfa;
 pub mod runtime;
 pub mod subarray;

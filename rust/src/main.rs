@@ -65,7 +65,29 @@ fn cli() -> Cli {
                 opt("chaos", "kill workers mid-batch on a trace schedule: poisson:<mean-on>:<off>[:<seed>] | periodic:<on>:<off>[:<count>] | bursty:<good>:<bad>:<off>[:<epochs>:<per-epoch>] (pimsim only)"),
                 opt_default("chaos-cycles", "trace cycles one batch consumes (chaos mode)", "1"),
                 flag("audit", "print a per-request energy audit (component table + merge traffic) for a sampled request"),
+                opt("listen", "serve over TCP on this address (e.g. 127.0.0.1:7799) instead of driving synthetic traffic; runs until a client sends a shutdown frame (DESIGN.md §13)"),
+                opt_default("max-conns", "TCP connection cap (--listen mode)", "64"),
+                opt_default("max-frame-kib", "per-frame payload cap on the wire, KiB", "4096"),
+                opt_default("qos-weights", "WDRR drain weights, interactive:batch:background", "8:4:1"),
+                opt_default("shed", "per-class shed thresholds (% of --queue; >=100 disables), interactive:batch:background", "100:75:50"),
+                opt_default("tenant-quota", "max in-flight jobs per tenant (0 = off)", "0"),
+                opt("metrics-json", "write the final metrics snapshot JSON to this path"),
                 opt_default("config", "RunConfig file; explicit flags override it", ""),
+            ],
+        )
+        .command(
+            "load",
+            "drive a `pims serve --listen` front-end over TCP: multiplexed connections, mixed priority classes and tenants, zero-drop accounting",
+            vec![
+                opt_default("connect", "server address", "127.0.0.1:7799"),
+                opt_default("conns", "TCP connections to multiplex over", "8"),
+                opt_default("jobs", "jobs to submit, cycled over classes/tenants/kinds (all must be answered)", "256"),
+                opt_default("inflight", "max jobs in flight at once", "512"),
+                opt_default("tenants", "distinct tenant ids", "2"),
+                opt_default("burst", "extra background-only burst jobs submitted all at once (overload replies allowed)", "0"),
+                opt_default("seed", "image PRNG seed", "42"),
+                opt("metrics-json", "write the server metrics snapshot JSON to this path"),
+                flag("shutdown", "ask the server to shut down after the run"),
             ],
         )
         .command(
@@ -179,6 +201,7 @@ fn main() {
 fn run(p: pims::cli::Parsed) -> Result<()> {
     match p.command.as_str() {
         "serve" => cmd_serve(&p),
+        "load" => cmd_load(&p),
         "infer" => cmd_infer(&p),
         "simulate" => cmd_simulate(&p),
         "sweep" => cmd_sweep(&p),
@@ -205,10 +228,211 @@ fn cmd_serve(p: &pims::cli::Parsed) -> Result<()> {
     // One declarative config for both backends: `--config` file as
     // the base, explicit flags as overrides (RunConfig::from_parsed).
     let cfg = RunConfig::from_parsed(p)?;
+    if cfg.net_config().is_some() {
+        return serve_listen(p, &cfg);
+    }
     match cfg.backend {
         BackendKind::Pjrt => serve_pjrt(p, &cfg),
         BackendKind::PimSim => serve_pimsim(p, &cfg),
     }
+}
+
+/// `serve --listen`: put the TCP front-end (DESIGN.md §13) in front of
+/// the coordinator and run until a client sends a `shutdown` frame.
+/// The `--requests` synthetic driver is not used — traffic comes off
+/// the wire (`pims load` is the matching driver).
+fn serve_listen(p: &pims::cli::Parsed, cfg: &RunConfig) -> Result<()> {
+    let netcfg = cfg.net_config().expect("listen set");
+    let batch = cfg.batch;
+    let coordinator = Coordinator::launch(cfg)?;
+    let mut server = pims::net::serve(coordinator, &netcfg)?;
+    println!(
+        "serving {} over TCP on {} (max {} conns, {} KiB frames), \
+         W{}:I{}, batch={batch}, workers={}",
+        cfg.backend.as_str(),
+        server.local_addr(),
+        netcfg.max_conns,
+        netcfg.max_frame_bytes / 1024,
+        cfg.w_bits,
+        cfg.a_bits,
+        cfg.workers
+    );
+    println!(
+        "qos: weights {}:{}:{}, shed at {}:{}:{}% of queue {}, \
+         tenant quota {}",
+        cfg.qos_weights[0],
+        cfg.qos_weights[1],
+        cfg.qos_weights[2],
+        cfg.qos_shed_pct[0],
+        cfg.qos_shed_pct[1],
+        cfg.qos_shed_pct[2],
+        cfg.queue,
+        cfg.tenant_quota
+    );
+    println!("waiting for clients (shutdown frame stops the server) ...");
+    let t0 = Instant::now();
+    server.wait();
+    let wall = t0.elapsed();
+    let m = server.shutdown();
+    println!("\n== serve results (tcp) ==");
+    let done = m.counters.served as usize;
+    println!("requests        : {done}");
+    print_serve_tail(&m, batch, done, wall);
+    if let Some(path) = p.get("metrics-json") {
+        write_metrics_json(&m, path)?;
+    }
+    Ok(())
+}
+
+fn write_metrics_json(
+    m: &pims::coordinator::ServeMetrics,
+    path: &str,
+) -> Result<()> {
+    let mut text = m.to_json().dump();
+    text.push('\n');
+    std::fs::write(path, text)
+        .with_context(|| format!("writing metrics json '{path}'"))?;
+    println!("metrics json written: {path}");
+    Ok(())
+}
+
+/// `pims load`: TCP load driver for `serve --listen`. Submits `--jobs`
+/// jobs cycled across the three priority classes, `--tenants` tenant
+/// ids, and all four job kinds over `--conns` multiplexed connections;
+/// every one of them must come back as a `response` (zero admitted-job
+/// drops). An optional `--burst` then floods background-only jobs all
+/// at once, where typed `overload` replies are acceptable — that is
+/// the load-shedding path working as designed.
+fn cmd_load(p: &pims::cli::Parsed) -> Result<()> {
+    use pims::coordinator::Priority;
+    use pims::net::{NetClient, NetReply};
+
+    let addr = p.get("connect").unwrap();
+    let conns = p.get_usize_at_least("conns", 1)?;
+    let jobs = p.get_usize("jobs")?.unwrap_or(256);
+    let inflight = p.get_usize_at_least("inflight", 1)?;
+    let tenants = p.get_usize_at_least("tenants", 1)?;
+    let burst = p.get_usize("burst")?.unwrap_or(0);
+    let seed = p.get_u64("seed")?.unwrap_or(42);
+
+    let clients: Vec<NetClient> = (0..conns)
+        .map(|_| NetClient::connect(addr))
+        .collect::<Result<_>>()
+        .with_context(|| format!("connecting to {addr}"))?;
+    let info = clients[0].info()?;
+    println!(
+        "connected: {conns} conns to {addr}; server geometry: \
+         {} input elems, {} classes, batch {}, {} workers",
+        info.input_elems, info.num_classes, info.batch, info.workers
+    );
+
+    let mut rng = pims::prng::Pcg32::seeded(seed);
+    let mut gen_image = |rng: &mut pims::prng::Pcg32| -> Vec<f32> {
+        (0..info.input_elems)
+            .map(|_| rng.uniform(0.0, 1.0) as f32)
+            .collect()
+    };
+    let make_job = |i: usize, img: Vec<f32>| -> Job {
+        match i % 4 {
+            0 => Job::Classify(img),
+            1 => Job::Logits(img),
+            2 => Job::TopK { image: img, k: 3 },
+            _ => Job::EnergyAudit(img),
+        }
+    };
+
+    let t0 = Instant::now();
+    let mut answered = [0usize; 3];
+    let mut overloads: Vec<String> = Vec::new();
+    let mut pendings = Vec::new();
+    let mut harvest = |pendings: &mut Vec<(usize, pims::net::NetPending)>,
+                       answered: &mut [usize; 3],
+                       overloads: &mut Vec<String>|
+     -> Result<()> {
+        for (class, pend) in pendings.drain(..) {
+            match pend.wait()? {
+                NetReply::Response { .. } => answered[class] += 1,
+                NetReply::Overload { reason, .. } => {
+                    overloads.push(reason)
+                }
+            }
+        }
+        Ok(())
+    };
+    for i in 0..jobs {
+        let class = i % 3;
+        let tenant = format!("tenant-{}", i % tenants);
+        let img = gen_image(&mut rng);
+        let pend = clients[i % conns].submit(
+            make_job(i, img),
+            Priority::ALL[class],
+            &tenant,
+            None,
+        )?;
+        pendings.push((class, pend));
+        if pendings.len() >= inflight {
+            harvest(&mut pendings, &mut answered, &mut overloads)?;
+        }
+    }
+    harvest(&mut pendings, &mut answered, &mut overloads)?;
+    let wall = t0.elapsed();
+    let total: usize = answered.iter().sum();
+    println!(
+        "main phase: {total}/{jobs} answered in {wall:.2?} \
+         ({} interactive, {} batch, {} background), {} overloads",
+        answered[0],
+        answered[1],
+        answered[2],
+        overloads.len()
+    );
+
+    let mut burst_ok = 0usize;
+    let mut burst_shed = 0usize;
+    if burst > 0 {
+        let mut pendings = Vec::with_capacity(burst);
+        for i in 0..burst {
+            let img = gen_image(&mut rng);
+            pendings.push(clients[i % conns].submit(
+                Job::Classify(img),
+                Priority::Background,
+                "burst",
+                None,
+            )?);
+        }
+        for pend in pendings {
+            match pend.wait()? {
+                NetReply::Response { .. } => burst_ok += 1,
+                NetReply::Overload { .. } => burst_shed += 1,
+            }
+        }
+        println!(
+            "burst phase: {burst} background jobs -> {burst_ok} \
+             answered, {burst_shed} shed (typed overload replies)"
+        );
+    }
+
+    let metrics = clients[0].metrics()?;
+    if let Some(path) = p.get("metrics-json") {
+        let mut text = metrics.dump();
+        text.push('\n');
+        std::fs::write(path, text).with_context(|| {
+            format!("writing metrics json '{path}'")
+        })?;
+        println!("metrics json written: {path}");
+    }
+    if p.has("shutdown") {
+        clients[0].shutdown_server()?;
+        println!("shutdown frame sent");
+    }
+    anyhow::ensure!(
+        overloads.is_empty() && total == jobs,
+        "zero-drop violated: {}/{jobs} answered, {} overloads \
+         ({:?} ...)",
+        total,
+        overloads.len(),
+        overloads.first()
+    );
+    Ok(())
 }
 
 fn serve_pjrt(p: &pims::cli::Parsed, cfg: &RunConfig) -> Result<()> {
@@ -265,6 +489,9 @@ fn serve_pjrt(p: &pims::cli::Parsed, cfg: &RunConfig) -> Result<()> {
         100.0 * correct as f64 / done as f64
     );
     print_serve_tail(&m, batch, done, wall);
+    if let Some(path) = p.get("metrics-json") {
+        write_metrics_json(&m, path)?;
+    }
     Ok(())
 }
 
@@ -355,6 +582,9 @@ fn serve_pimsim(p: &pims::cli::Parsed, cfg: &RunConfig) -> Result<()> {
          (H-tree share of the lane schedule, included above)"
     );
     print_serve_tail(&m, batch, done, wall);
+    if let Some(path) = p.get("metrics-json") {
+        write_metrics_json(&m, path)?;
+    }
     Ok(())
 }
 
@@ -387,6 +617,23 @@ fn print_audit(c: &Coordinator, image: Vec<f32>) -> Result<()> {
     Ok(())
 }
 
+/// One `p50/p95/p99` line off a QoS [`LogHistogram`] slot (class or
+/// job kind); slots that saw no jobs print nothing.
+fn print_hist_line(name: &str, h: &pims::metrics::LogHistogram) {
+    if let (Some(p50), Some(p95), Some(p99)) =
+        (h.p50_ns(), h.p95_ns(), h.p99_ns())
+    {
+        println!(
+            "  {name:<13} : {} jobs, p50 {:.3} ms, p95 {:.3} ms, \
+             p99 {:.3} ms",
+            h.count(),
+            p50 as f64 / 1e6,
+            p95 as f64 / 1e6,
+            p99 as f64 / 1e6
+        );
+    }
+}
+
 fn print_serve_tail(
     m: &pims::coordinator::ServeMetrics,
     batch: usize,
@@ -413,10 +660,31 @@ fn print_serve_tail(
     }
     if m.dropped_replies() > 0 {
         println!(
-            "dropped replies : {} (cancelled/expired jobs freed their \
-             batch slots)",
-            m.dropped_replies()
+            "dropped replies : {} ({} cancelled, {} expired, {} send \
+             failed — each freed its batch slot)",
+            m.dropped_replies(),
+            m.counters.cancelled,
+            m.counters.expired,
+            m.counters.send_failed
         );
+    }
+    let shed_total: u64 = m.counters.shed.iter().sum();
+    if shed_total > 0 {
+        println!(
+            "shed            : {shed_total} ({} interactive, {} batch, \
+             {} background)",
+            m.counters.shed[0], m.counters.shed[1], m.counters.shed[2]
+        );
+    }
+    // Per-class / per-kind tails from the deterministic fixed-bucket
+    // histograms (QoS, DESIGN.md §13); silent when a slot saw no jobs.
+    for pr in pims::coordinator::Priority::ALL {
+        print_hist_line(pr.as_str(), &m.by_class[pr.index()]);
+    }
+    for (i, name) in
+        pims::coordinator::JOB_KIND_NAMES.iter().enumerate()
+    {
+        print_hist_line(name, &m.by_kind[i]);
     }
     for (w, s) in m.per_worker.iter().enumerate() {
         println!(

@@ -66,6 +66,127 @@ impl LatencyRecorder {
     }
 }
 
+/// Fixed-bucket log-scale latency histogram for per-class / per-kind
+/// tail percentiles (p50/p95/p99) in `ServeMetrics`.
+///
+/// Unlike [`LatencyRecorder`] (exact, but stores every sample), this
+/// is O(1) per record and O(buckets) per merge, with a deterministic
+/// integer-only merge path: counts are `u64` adds, percentiles are
+/// rank arithmetic — no floats anywhere, so merged snapshots are
+/// bit-stable regardless of worker interleaving.
+///
+/// Bucket scheme (DESIGN.md §13): values below 8 ns get exact buckets
+/// `0..8`; above that, bucket `8 + (e-3)*4 + m` where `e = floor(log2
+/// v)` and `m` is the next two mantissa bits — four sub-buckets per
+/// octave, ≤ 25 % relative error, 252 buckets total covering the full
+/// `u64` range. Percentiles report the bucket's inclusive upper bound
+/// (pessimistic: the true pXX is never above the reported one).
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    counts: Vec<u64>,
+    total: u64,
+}
+
+/// Bucket count of a [`LogHistogram`]: 8 exact + 61 octaves x 4.
+pub const LOG_HISTOGRAM_BUCKETS: usize = 252;
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram { counts: vec![0; LOG_HISTOGRAM_BUCKETS], total: 0 }
+    }
+}
+
+impl LogHistogram {
+    /// The bucket index a value lands in (monotone in `v`).
+    pub fn bucket(v: u64) -> usize {
+        if v < 8 {
+            return v as usize;
+        }
+        let e = 63 - v.leading_zeros() as usize; // floor(log2 v) >= 3
+        let m = ((v >> (e - 2)) & 0b11) as usize;
+        8 + (e - 3) * 4 + m
+    }
+
+    /// Inclusive upper bound of bucket `i` (the value percentiles
+    /// report).
+    pub fn bucket_upper(i: usize) -> u64 {
+        if i < 8 {
+            return i as u64;
+        }
+        let e = 3 + (i - 8) / 4;
+        let m = ((i - 8) % 4) as u128;
+        let hi = (1u128 << e) + ((m + 1) << (e - 2)) - 1;
+        u64::try_from(hi).unwrap_or(u64::MAX)
+    }
+
+    pub fn record_ns(&mut self, ns: u64) {
+        self.counts[Self::bucket(ns)] += 1;
+        self.total += 1;
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.record_ns(d.as_nanos() as u64);
+    }
+
+    /// Integer-only merge: element-wise `u64` adds.
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += *b;
+        }
+        self.total += other.total;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// The `num/den` quantile as a bucket upper bound [ns], by integer
+    /// rank arithmetic (rank = ceil(total * num / den), clamped to
+    /// `1..=total`). `None` when empty.
+    pub fn quantile_ns(&self, num: u64, den: u64) -> Option<u64> {
+        if self.total == 0 || den == 0 {
+            return None;
+        }
+        // u128 so total * num cannot overflow for any count.
+        let rank = (self.total as u128 * num as u128).div_ceil(den as u128);
+        let rank = rank.clamp(1, self.total as u128) as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= rank {
+                return Some(Self::bucket_upper(i));
+            }
+        }
+        None
+    }
+
+    pub fn p50_ns(&self) -> Option<u64> {
+        self.quantile_ns(50, 100)
+    }
+
+    pub fn p95_ns(&self) -> Option<u64> {
+        self.quantile_ns(95, 100)
+    }
+
+    pub fn p99_ns(&self) -> Option<u64> {
+        self.quantile_ns(99, 100)
+    }
+
+    /// "p50 / p95 / p99" one-liner (bucket upper bounds).
+    pub fn summary(&self) -> String {
+        match (self.p50_ns(), self.p95_ns(), self.p99_ns()) {
+            (Some(p50), Some(p95), Some(p99)) => format!(
+                "p50<={:.2?} p95<={:.2?} p99<={:.2?} n={}",
+                Duration::from_nanos(p50),
+                Duration::from_nanos(p95),
+                Duration::from_nanos(p99),
+                self.total
+            ),
+            _ => "no samples".to_string(),
+        }
+    }
+}
+
 /// Throughput meter over a wall-clock window.
 #[derive(Debug)]
 pub struct Throughput {
@@ -114,11 +235,20 @@ pub struct Counters {
     /// mid-execution (the batch re-ran after NV restore — no request
     /// was dropped).
     pub chaos_kills: u64,
-    /// Admitted jobs whose reply was never delivered: the client
-    /// cancelled (dropped its `Pending`) or the per-job deadline
-    /// expired before execution — freeing the batch slot — or the
-    /// reply send failed after execution.
-    pub dropped_replies: u64,
+    /// Admitted jobs skipped because the client cancelled (dropped its
+    /// `Pending`) while the job was still queued.
+    pub cancelled: u64,
+    /// Admitted jobs skipped because their per-job deadline expired
+    /// while queued.
+    pub expired: u64,
+    /// Executed jobs whose reply send failed because the client
+    /// vanished mid-execution.
+    pub send_failed: u64,
+    /// Overload rejections per priority class (indexed by
+    /// `Priority::index()`: interactive / batch / background). A shed
+    /// submission is also counted in `rejected`; hard queue-full
+    /// rejections increment `rejected` alone.
+    pub shed: [u64; 3],
 }
 
 impl Counters {
@@ -129,7 +259,23 @@ impl Counters {
         self.rejected += o.rejected;
         self.errors += o.errors;
         self.chaos_kills += o.chaos_kills;
-        self.dropped_replies += o.dropped_replies;
+        self.cancelled += o.cancelled;
+        self.expired += o.expired;
+        self.send_failed += o.send_failed;
+        for (a, b) in self.shed.iter_mut().zip(&o.shed) {
+            *a += *b;
+        }
+    }
+
+    /// Admitted jobs whose reply was never delivered, by any cause
+    /// (the pre-split `dropped_replies` aggregate).
+    pub fn dropped_replies(&self) -> u64 {
+        self.cancelled + self.expired + self.send_failed
+    }
+
+    /// Total overload rejections across priority classes.
+    pub fn shed_total(&self) -> u64 {
+        self.shed.iter().sum()
     }
 
     /// Mean occupancy of the dynamic batches.
@@ -198,10 +344,74 @@ mod tests {
         assert!((c.mean_batch_fill(8) - 0.75).abs() < 1e-9);
         let mut d = Counters::default();
         d.errors = 2;
-        d.dropped_replies = 3;
+        d.cancelled = 1;
+        d.expired = 2;
+        d.send_failed = 4;
+        d.shed = [0, 0, 5];
         c.merge(&d);
         assert_eq!(c.errors, 2);
-        assert_eq!(c.dropped_replies, 3);
+        assert_eq!(c.cancelled, 1);
+        assert_eq!(c.expired, 2);
+        assert_eq!(c.send_failed, 4);
+        assert_eq!(c.dropped_replies(), 7);
+        assert_eq!(c.shed, [0, 0, 5]);
+        assert_eq!(c.shed_total(), 5);
+    }
+
+    #[test]
+    fn log_histogram_buckets_are_monotone_and_bounding() {
+        // Exact region, octave boundaries, and the top of the range.
+        for v in [0u64, 1, 7, 8, 9, 10, 100, 1_000, u64::MAX / 2, u64::MAX]
+        {
+            let i = LogHistogram::bucket(v);
+            assert!(i < LOG_HISTOGRAM_BUCKETS);
+            assert!(
+                LogHistogram::bucket_upper(i) >= v,
+                "upper({i}) must bound {v}"
+            );
+            if i > 0 {
+                assert!(
+                    LogHistogram::bucket_upper(i - 1) < v,
+                    "bucket {i} must start above upper({})", i - 1
+                );
+            }
+        }
+        let mut r = crate::proptest_lite::Runner::new(0x1157);
+        r.run("histogram bucket bounds any u64", |g| {
+            let v = g.u64_any() >> g.usize(0, 63);
+            let i = LogHistogram::bucket(v);
+            assert!(LogHistogram::bucket_upper(i) >= v);
+            assert!(i == 0 || LogHistogram::bucket_upper(i - 1) < v);
+            // Monotone: the next value never maps to an earlier bucket.
+            assert!(LogHistogram::bucket(v.saturating_add(1)) >= i);
+        });
+    }
+
+    #[test]
+    fn log_histogram_percentiles_and_merge() {
+        let mut h = LogHistogram::default();
+        assert!(h.p50_ns().is_none());
+        assert_eq!(h.summary(), "no samples");
+        for ns in 1..=100u64 {
+            h.record_ns(ns * 1000);
+        }
+        assert_eq!(h.count(), 100);
+        // Pessimistic (upper-bound) percentiles: p50 covers 50_000 ns,
+        // p99 covers 99_000 ns, neither wildly above (≤ 25 % error).
+        let p50 = h.p50_ns().unwrap();
+        assert!((50_000..=62_500).contains(&p50), "p50={p50}");
+        let p99 = h.p99_ns().unwrap();
+        assert!((99_000..=126_000).contains(&p99), "p99={p99}");
+        assert!(h.summary().contains("n=100"));
+
+        // Merge = integer adds: merging two identical histograms
+        // doubles the counts and keeps every quantile bit-identical.
+        let mut m = h.clone();
+        m.merge(&h);
+        assert_eq!(m.count(), 200);
+        for (num, den) in [(50, 100), (95, 100), (99, 100), (1, 1)] {
+            assert_eq!(m.quantile_ns(num, den), h.quantile_ns(num, den));
+        }
     }
 
     #[test]

@@ -1,0 +1,273 @@
+//! Multiplexing TCP client (DESIGN.md §13): one socket carries any
+//! number of in-flight jobs, correlated by request id — thousands of
+//! concurrent submissions need only a handful of connections. One
+//! background reader thread routes incoming frames to per-request
+//! channels; [`NetPending`] mirrors the in-process
+//! [`crate::coordinator::Pending`] contract, including
+//! cancel-on-drop: abandoning a pending reply sends a best-effort
+//! `cancel` frame so the server frees the batch slot.
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::{Job, JobOutput, Priority};
+use crate::jsonlite::Json;
+
+use super::frame::{encode_frame, FrameReader, MAX_FRAME_BYTES_DEFAULT};
+use super::wire::{ClientFrame, ServerFrame};
+
+/// Server geometry from an `info` frame, so a client can build
+/// well-formed jobs without out-of-band configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServerInfo {
+    pub input_elems: usize,
+    pub num_classes: usize,
+    pub batch: usize,
+    pub workers: usize,
+}
+
+/// Terminal outcome of one submitted job.
+#[derive(Debug, Clone)]
+pub enum NetReply {
+    /// The job ran; the full v2 output surface survives the wire.
+    Response {
+        output: JobOutput,
+        /// Server-measured enqueue→response latency.
+        latency: Duration,
+        energy_uj: f64,
+    },
+    /// Admission rejected the job (it never queued); `reason` is
+    /// `"queue_full"`, `"shed:<class>"`, or `"tenant_quota"`.
+    Overload { reason: String, retry_after_ms: u64 },
+}
+
+impl NetReply {
+    /// The typed output, when the job was admitted and ran.
+    pub fn output(&self) -> Option<&JobOutput> {
+        match self {
+            NetReply::Response { output, .. } => Some(output),
+            NetReply::Overload { .. } => None,
+        }
+    }
+}
+
+type PendingMap = Arc<Mutex<HashMap<u64, Sender<ServerFrame>>>>;
+
+/// One TCP connection to a `pims serve` front-end.
+pub struct NetClient {
+    write: Arc<Mutex<TcpStream>>,
+    pending: PendingMap,
+    next_id: AtomicU64,
+    reader: Option<JoinHandle<()>>,
+    /// Raw handle to the shared socket, kept to force the reader
+    /// thread out of its blocking read on drop.
+    sock: TcpStream,
+}
+
+/// Client-side handle to one in-flight networked job.
+pub struct NetPending {
+    pub id: u64,
+    rx: Receiver<ServerFrame>,
+    pending: PendingMap,
+    write: Arc<Mutex<TcpStream>>,
+    done: bool,
+}
+
+impl NetClient {
+    /// Connect to `addr` (e.g. `"127.0.0.1:7799"`).
+    pub fn connect(addr: &str) -> Result<NetClient> {
+        let stream = TcpStream::connect(addr)?;
+        // Frames are small; waiting for Nagle coalescing would put
+        // milliseconds on every round-trip.
+        let _ = stream.set_nodelay(true);
+        let write = Arc::new(Mutex::new(stream.try_clone()?));
+        let sock = stream.try_clone()?;
+        let pending: PendingMap = Arc::new(Mutex::new(HashMap::new()));
+        let routes = pending.clone();
+        let reader = std::thread::spawn(move || {
+            let mut fr = FrameReader::new(stream, MAX_FRAME_BYTES_DEFAULT);
+            loop {
+                let payload = match fr.read_frame() {
+                    Ok(Some(p)) => p,
+                    Ok(None) | Err(_) => break,
+                };
+                let Ok(frame) = ServerFrame::decode(&payload) else {
+                    break;
+                };
+                let id = match &frame {
+                    ServerFrame::Response { id, .. } => Some(*id),
+                    ServerFrame::Overload { id, .. } => Some(*id),
+                    ServerFrame::Metrics { id, .. } => Some(*id),
+                    ServerFrame::Info { id, .. } => Some(*id),
+                    ServerFrame::Error { id, .. } => *id,
+                };
+                let Some(id) = id else { continue };
+                let tx = routes.lock().unwrap().remove(&id);
+                if let Some(tx) = tx {
+                    let _ = tx.send(frame);
+                }
+            }
+            // Connection gone: wake every waiter with a closed channel
+            // instead of letting them block forever.
+            routes.lock().unwrap().clear();
+        });
+        Ok(NetClient {
+            write,
+            pending,
+            next_id: AtomicU64::new(1),
+            reader: Some(reader),
+            sock,
+        })
+    }
+
+    fn send(&self, frame: &ClientFrame) -> Result<()> {
+        let bytes = encode_frame(&frame.to_json().dump());
+        self.write.lock().unwrap().write_all(&bytes)?;
+        Ok(())
+    }
+
+    /// Register a reply route, then send; on send failure the route is
+    /// unregistered so the map cannot leak.
+    fn request(&self, make: impl FnOnce(u64) -> ClientFrame) -> Result<NetPending> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        self.pending.lock().unwrap().insert(id, tx);
+        if let Err(e) = self.send(&make(id)) {
+            self.pending.lock().unwrap().remove(&id);
+            return Err(e);
+        }
+        Ok(NetPending {
+            id,
+            rx,
+            pending: self.pending.clone(),
+            write: self.write.clone(),
+            done: false,
+        })
+    }
+
+    /// Submit one job. Returns as soon as the frame is written: any
+    /// number of [`NetPending`]s may be in flight on this connection.
+    pub fn submit(
+        &self,
+        job: Job,
+        priority: Priority,
+        tenant: &str,
+        deadline_ms: Option<u64>,
+    ) -> Result<NetPending> {
+        let tenant = tenant.to_string();
+        self.request(move |id| ClientFrame::Submit {
+            id,
+            job,
+            priority,
+            tenant,
+            deadline_ms,
+        })
+    }
+
+    /// Fetch the server's metrics snapshot (`--metrics-json` schema).
+    pub fn metrics(&self) -> Result<Json> {
+        let p = self.request(|id| ClientFrame::Metrics { id })?;
+        match p.wait_raw()? {
+            ServerFrame::Metrics { data, .. } => Ok(data),
+            other => bail!("expected metrics frame, got {other:?}"),
+        }
+    }
+
+    /// Fetch the server's geometry.
+    pub fn info(&self) -> Result<ServerInfo> {
+        let p = self.request(|id| ClientFrame::Info { id })?;
+        match p.wait_raw()? {
+            ServerFrame::Info {
+                input_elems,
+                num_classes,
+                batch,
+                workers,
+                ..
+            } => Ok(ServerInfo { input_elems, num_classes, batch, workers }),
+            other => bail!("expected info frame, got {other:?}"),
+        }
+    }
+
+    /// Ask the server to stop accepting and drain (fire-and-forget;
+    /// in-flight jobs on live connections are still answered).
+    pub fn shutdown_server(&self) -> Result<()> {
+        self.send(&ClientFrame::Shutdown)
+    }
+}
+
+impl Drop for NetClient {
+    fn drop(&mut self) {
+        // Shutting down the shared socket unblocks the reader thread's
+        // read (it sees EOF/error and exits), making the join safe.
+        let _ = self.sock.shutdown(std::net::Shutdown::Both);
+        if let Some(h) = self.reader.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl NetPending {
+    fn classify(frame: ServerFrame) -> Result<NetReply> {
+        match frame {
+            ServerFrame::Response { latency_us, energy_uj, output, .. } => {
+                Ok(NetReply::Response {
+                    output,
+                    latency: Duration::from_micros(latency_us),
+                    energy_uj,
+                })
+            }
+            ServerFrame::Overload { reason, retry_after_ms, .. } => {
+                Ok(NetReply::Overload { reason, retry_after_ms })
+            }
+            ServerFrame::Error { msg, .. } => bail!("server error: {msg}"),
+            other => bail!("unexpected frame: {other:?}"),
+        }
+    }
+
+    fn wait_raw(mut self) -> Result<ServerFrame> {
+        let got = self.rx.recv();
+        self.done = true;
+        got.map_err(|_| anyhow!("connection closed before reply"))
+    }
+
+    /// Block until the reply arrives (or the connection dies).
+    pub fn wait(self) -> Result<NetReply> {
+        Self::classify(self.wait_raw()?)
+    }
+
+    /// Wait up to `t`. On timeout the handle is dropped, which sends a
+    /// best-effort `cancel` so the server frees the batch slot.
+    pub fn wait_timeout(mut self, t: Duration) -> Result<NetReply> {
+        match self.rx.recv_timeout(t) {
+            Ok(frame) => {
+                self.done = true;
+                Self::classify(frame)
+            }
+            Err(e) => Err(e.into()),
+        }
+    }
+}
+
+impl Drop for NetPending {
+    fn drop(&mut self) {
+        if self.done {
+            return;
+        }
+        // Only cancel requests still awaiting a route: if the reader
+        // already delivered (or the connection died), skip the frame.
+        if self.pending.lock().unwrap().remove(&self.id).is_none() {
+            return;
+        }
+        let bytes =
+            encode_frame(&ClientFrame::Cancel { id: self.id }.to_json().dump());
+        let _ = self.write.lock().unwrap().write_all(&bytes);
+    }
+}

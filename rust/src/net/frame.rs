@@ -1,0 +1,316 @@
+//! Length-delimited wire framing (DESIGN.md §13).
+//!
+//! Frame grammar — two newline-anchored fields, payload length first
+//! so a reader never scans an unbounded payload for a terminator:
+//!
+//! ```text
+//! frame   := length "\n" payload "\n"
+//! length  := 1*DIGIT          ; ASCII decimal byte count of payload
+//! payload := length bytes     ; UTF-8 jsonlite document, may contain
+//!                             ; any byte including "\n"
+//! ```
+//!
+//! The trailing `"\n"` is redundant with the length and exists purely
+//! as a cheap desynchronization check: a reader that lands mid-stream
+//! (or a writer that miscounts) fails loudly with a typed error
+//! instead of parsing garbage JSON from the middle of a payload.
+//!
+//! [`FrameReader`] is incremental: partial reads (short TCP segments,
+//! read timeouts used for stop-flag polling) preserve buffered bytes
+//! across calls, and every malformed input maps to a typed
+//! [`FrameError`] — the parser is network-facing, so it must never
+//! panic (pinned by the property tests below).
+
+use std::fmt;
+use std::io::Read;
+
+/// Default cap on a single frame payload (bytes). Large enough for an
+/// `EnergyAudit` reply over a wide logits row; small enough that one
+/// hostile frame cannot balloon a connection buffer.
+pub const MAX_FRAME_BYTES_DEFAULT: usize = 4 << 20;
+
+/// Longest acceptable length header: `usize::MAX` has 20 digits.
+const MAX_HEADER_DIGITS: usize = 20;
+
+/// Typed framing failure. `Io` wraps transport errors (the server's
+/// read-timeout polling checks its `ErrorKind`); everything else is a
+/// protocol violation that fails the connection, never a panic.
+#[derive(Debug)]
+pub enum FrameError {
+    /// Declared payload length exceeds the reader's cap.
+    Oversized { len: usize, max: usize },
+    /// The length header is not a parsable ASCII decimal.
+    BadHeader(String),
+    /// EOF in the middle of a frame.
+    Truncated,
+    /// Payload bytes are not UTF-8.
+    BadUtf8,
+    /// Payload is not parsable jsonlite.
+    BadJson(String),
+    /// Structurally valid JSON that is not a valid protocol frame
+    /// (unknown type, missing field, out-of-range value), or a missing
+    /// frame terminator.
+    BadFrame(String),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for FrameError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FrameError::Oversized { len, max } => {
+                write!(f, "frame payload of {len} bytes exceeds cap {max}")
+            }
+            FrameError::BadHeader(h) => {
+                write!(f, "bad frame length header: {h:?}")
+            }
+            FrameError::Truncated => write!(f, "connection closed mid-frame"),
+            FrameError::BadUtf8 => write!(f, "frame payload is not UTF-8"),
+            FrameError::BadJson(e) => write!(f, "frame payload is not JSON: {e}"),
+            FrameError::BadFrame(e) => write!(f, "invalid frame: {e}"),
+            FrameError::Io(e) => write!(f, "frame transport error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+impl From<std::io::Error> for FrameError {
+    fn from(e: std::io::Error) -> Self {
+        FrameError::Io(e)
+    }
+}
+
+/// Encode one payload as a wire frame (`len "\n" payload "\n"`).
+pub fn encode_frame(payload: &str) -> Vec<u8> {
+    let mut out = Vec::with_capacity(payload.len() + MAX_HEADER_DIGITS + 2);
+    out.extend_from_slice(payload.len().to_string().as_bytes());
+    out.push(b'\n');
+    out.extend_from_slice(payload.as_bytes());
+    out.push(b'\n');
+    out
+}
+
+/// Incremental frame decoder over any [`Read`]. Bytes buffered across
+/// short reads survive `WouldBlock` / `TimedOut` returns, so a socket
+/// with a read timeout can poll a stop flag between calls without
+/// losing stream position.
+pub struct FrameReader<R: Read> {
+    inner: R,
+    buf: Vec<u8>,
+    max_payload: usize,
+}
+
+impl<R: Read> FrameReader<R> {
+    pub fn new(inner: R, max_payload: usize) -> Self {
+        FrameReader { inner, buf: Vec::new(), max_payload }
+    }
+
+    /// Read the next complete frame payload. `Ok(None)` is a clean EOF
+    /// at a frame boundary; EOF mid-frame is [`FrameError::Truncated`].
+    /// An `Io` error with kind `WouldBlock` / `TimedOut` is retryable:
+    /// buffered bytes are preserved and the next call resumes.
+    pub fn read_frame(&mut self) -> Result<Option<String>, FrameError> {
+        loop {
+            if let Some(frame) = self.try_decode()? {
+                return Ok(Some(frame));
+            }
+            let mut chunk = [0u8; 4096];
+            match self.inner.read(&mut chunk) {
+                Ok(0) => {
+                    return if self.buf.is_empty() {
+                        Ok(None)
+                    } else {
+                        Err(FrameError::Truncated)
+                    };
+                }
+                Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
+                Err(e) => return Err(FrameError::Io(e)),
+            }
+        }
+    }
+
+    /// Decode one frame from the buffer, if a complete one is present.
+    fn try_decode(&mut self) -> Result<Option<String>, FrameError> {
+        let Some(nl) = self.buf.iter().position(|&b| b == b'\n') else {
+            if self.buf.len() > MAX_HEADER_DIGITS {
+                return Err(FrameError::BadHeader(
+                    String::from_utf8_lossy(&self.buf).into_owned(),
+                ));
+            }
+            return Ok(None);
+        };
+        let header = &self.buf[..nl];
+        if header.is_empty()
+            || header.len() > MAX_HEADER_DIGITS
+            || !header.iter().all(u8::is_ascii_digit)
+        {
+            return Err(FrameError::BadHeader(
+                String::from_utf8_lossy(header).into_owned(),
+            ));
+        }
+        // All-digit and bounded, so the only parse failure left is
+        // numeric overflow — report it as oversized.
+        let len: usize = std::str::from_utf8(header)
+            .expect("ascii digits")
+            .parse()
+            .map_err(|_| FrameError::Oversized {
+                len: usize::MAX,
+                max: self.max_payload,
+            })?;
+        if len > self.max_payload {
+            return Err(FrameError::Oversized { len, max: self.max_payload });
+        }
+        let total = nl + 1 + len + 1;
+        if self.buf.len() < total {
+            return Ok(None);
+        }
+        if self.buf[total - 1] != b'\n' {
+            return Err(FrameError::BadFrame(
+                "missing frame terminator (length desync?)".to_string(),
+            ));
+        }
+        let payload = self.buf[nl + 1..total - 1].to_vec();
+        self.buf.drain(..total);
+        match String::from_utf8(payload) {
+            Ok(s) => Ok(Some(s)),
+            Err(_) => Err(FrameError::BadUtf8),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest_lite::Runner;
+
+    /// A reader that yields the input in caller-chosen chunk sizes, to
+    /// exercise every partial-read path in the decoder.
+    struct Chunked {
+        data: Vec<u8>,
+        cuts: Vec<usize>,
+        pos: usize,
+        call: usize,
+    }
+
+    impl Chunked {
+        fn new(data: Vec<u8>, cuts: Vec<usize>) -> Self {
+            Chunked { data, cuts, pos: 0, call: 0 }
+        }
+    }
+
+    impl Read for Chunked {
+        fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+            let want = self.cuts.get(self.call).copied().unwrap_or(4096);
+            self.call += 1;
+            let n = want.clamp(1, out.len()).min(self.data.len() - self.pos);
+            out[..n].copy_from_slice(&self.data[self.pos..self.pos + n]);
+            self.pos += n;
+            Ok(n)
+        }
+    }
+
+    fn decode_all(
+        data: Vec<u8>,
+        cuts: Vec<usize>,
+        max: usize,
+    ) -> Result<Vec<String>, FrameError> {
+        let mut r = FrameReader::new(Chunked::new(data, cuts), max);
+        let mut out = Vec::new();
+        while let Some(p) = r.read_frame()? {
+            out.push(p);
+        }
+        Ok(out)
+    }
+
+    #[test]
+    fn frames_roundtrip_under_any_split() {
+        let mut r = Runner::new(0x0f_4a3e);
+        r.run("frames roundtrip under any split", |g| {
+            let n = g.usize(1, 5);
+            let payloads: Vec<String> = (0..n)
+                .map(|_| {
+                    let len = g.usize(0, 40);
+                    (0..len)
+                        .map(|_| {
+                            *g.choose(&[
+                                'a', 'Z', '0', '{', '}', '"', '\\', '\n',
+                                ' ', 'µ', '✓',
+                            ])
+                        })
+                        .collect()
+                })
+                .collect();
+            let mut data = Vec::new();
+            for p in &payloads {
+                data.extend_from_slice(&encode_frame(p));
+            }
+            let cuts: Vec<usize> =
+                (0..g.usize(1, 64)).map(|_| g.usize(1, 7)).collect();
+            let got = decode_all(data, cuts, 1 << 16).expect("valid frames");
+            assert_eq!(got, payloads);
+        });
+    }
+
+    #[test]
+    fn truncated_stream_is_a_typed_error() {
+        let mut r = Runner::new(0x0f_7c1d);
+        r.run("truncated stream errors", |g| {
+            let payload = "x".repeat(g.usize(1, 30));
+            let mut data = encode_frame(&payload);
+            // Also truncate mid-header sometimes (cut = full length is
+            // excluded; that case is the clean-EOF test).
+            let keep = g.usize(1, data.len() - 1);
+            data.truncate(keep);
+            let err = decode_all(data, vec![3, 1, 5], 1 << 16).unwrap_err();
+            assert!(
+                matches!(err, FrameError::Truncated),
+                "cut at {keep}: {err}"
+            );
+        });
+    }
+
+    #[test]
+    fn oversized_and_garbage_headers_are_typed_errors() {
+        let err = decode_all(encode_frame("abcdef"), vec![], 3).unwrap_err();
+        assert!(matches!(err, FrameError::Oversized { len: 6, max: 3 }));
+        // 21+ digits: overflows the header cap before any allocation.
+        let huge = b"999999999999999999999\nx\n".to_vec();
+        let err = decode_all(huge, vec![], 1 << 16).unwrap_err();
+        assert!(matches!(err, FrameError::BadHeader(_)));
+
+        let mut r = Runner::new(0x0f_99aa);
+        r.run("garbage headers error", |g| {
+            // Garbage that is not an ASCII-decimal header must fail
+            // typed (never panic), whatever bytes follow.
+            let mut data = b"not a number\n".to_vec();
+            for _ in 0..g.usize(0, 16) {
+                data.push(g.u32(0, 255) as u8);
+            }
+            let err = decode_all(data, vec![2, 3], 1 << 16).unwrap_err();
+            assert!(matches!(err, FrameError::BadHeader(_)), "{err}");
+        });
+    }
+
+    #[test]
+    fn desynced_terminator_is_rejected() {
+        // Header claims 2 bytes but the payload is 3: the byte where
+        // the terminator should be is not '\n'.
+        let data = b"2\nabc\n".to_vec();
+        let err = decode_all(data, vec![], 1 << 16).unwrap_err();
+        assert!(matches!(err, FrameError::BadFrame(_)), "{err}");
+    }
+
+    #[test]
+    fn non_utf8_payload_is_rejected() {
+        let data = vec![b'2', b'\n', 0xff, 0xfe, b'\n'];
+        let err = decode_all(data, vec![1, 1, 1], 1 << 16).unwrap_err();
+        assert!(matches!(err, FrameError::BadUtf8), "{err}");
+    }
+
+    #[test]
+    fn empty_payload_frame_roundtrips() {
+        assert_eq!(encode_frame(""), b"0\n\n".to_vec());
+        let got = decode_all(b"0\n\n".to_vec(), vec![1], 16).unwrap();
+        assert_eq!(got, vec![String::new()]);
+    }
+}

@@ -1,0 +1,33 @@
+//! TCP serving front-end: `pims serve --listen <addr>` (DESIGN.md
+//! §13).
+//!
+//! Layering, bottom-up:
+//! * [`frame`] — length-delimited wire framing (`len "\n" payload
+//!   "\n"`), incremental [`FrameReader`], typed [`FrameError`]s.
+//! * [`wire`] — the jsonlite payload schema: [`ClientFrame`] /
+//!   [`ServerFrame`] carrying the full v2 `Job` / `JobOutput` surface
+//!   (including `EnergyAudit` ledgers) plus QoS fields (priority
+//!   class, tenant, deadline).
+//! * [`server`] — acceptor + per-connection reader/writer threads in
+//!   front of a [`crate::coordinator::Coordinator`]; admission
+//!   rejections become typed `overload` frames.
+//! * [`client`] — multiplexing [`NetClient`]: thousands of in-flight
+//!   jobs ride a handful of sockets, correlated by request id, with
+//!   cancel-on-drop [`NetPending`] handles.
+//!
+//! Determinism: the wire codec is exact (`f32` logits and `u64`
+//! ledger counts round-trip bit-identically), so a seeded job stream
+//! served over TCP produces byte-identical outputs to the same
+//! stream submitted in-process — pinned by `tests/net_e2e.rs`.
+
+mod client;
+mod frame;
+mod server;
+mod wire;
+
+pub use client::{NetClient, NetPending, NetReply, ServerInfo};
+pub use frame::{
+    encode_frame, FrameError, FrameReader, MAX_FRAME_BYTES_DEFAULT,
+};
+pub use server::{serve, NetConfig, NetServer};
+pub use wire::{ClientFrame, ServerFrame};

@@ -1,0 +1,398 @@
+//! TCP serving front-end (DESIGN.md §13): an acceptor thread plus one
+//! reader thread and one detached writer thread per connection, all
+//! std-only (the offline image vendors no async runtime — DESIGN.md
+//! §2).
+//!
+//! Each connection multiplexes: any number of in-flight jobs ride one
+//! socket, correlated by the client-chosen request id. The reader
+//! decodes [`ClientFrame`]s and feeds admission through
+//! `Coordinator::submit_shared` with a per-connection shared reply
+//! channel; the writer drains that channel into `response` frames.
+//! Admission rejections ([`crate::coordinator::AdmitError`]) become
+//! typed `overload` frames — the client is told *why* (hard
+//! backpressure vs class shedding vs tenant quota) and when to retry,
+//! instead of a dead socket.
+//!
+//! Shutdown ordering (mirrors the in-process drain guarantee): the
+//! stop flag flips, the acceptor wakes via self-connect, readers
+//! notice within one 250 ms read-timeout tick and exit, disconnect
+//! cancellation flags any job whose client is gone, and only then is
+//! the coordinator drained — every admitted job with a live
+//! connection is answered before the pool exits. Writer threads are
+//! deliberately detached and hold no coordinator handle: they die
+//! when the last reply sender resolves, and can never deadlock the
+//! drain.
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{
+    AdmitError, Coordinator, Response, ServeMetrics, SubmitOpts,
+};
+
+use super::frame::{encode_frame, FrameError, FrameReader};
+use super::wire::{ClientFrame, ServerFrame};
+
+/// How often a blocked connection reader wakes to poll the stop flag.
+const READ_POLL: Duration = Duration::from_millis(250);
+
+/// Back-off hint carried by admission-rejection `overload` frames.
+const RETRY_AFTER_MS: u64 = 10;
+
+/// TCP front-end knobs (the `net.*` RunConfig keys).
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// Bind address, e.g. `"127.0.0.1:7799"` (port 0 picks a free one).
+    pub listen: String,
+    /// Connection cap; excess accepts get an `overload` frame and are
+    /// dropped. Client-side multiplexing keeps this small: thousands
+    /// of in-flight jobs need no more sockets than this.
+    pub max_conns: usize,
+    /// Per-frame payload cap in bytes.
+    pub max_frame_bytes: usize,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            listen: "127.0.0.1:0".to_string(),
+            max_conns: 64,
+            max_frame_bytes: super::frame::MAX_FRAME_BYTES_DEFAULT,
+        }
+    }
+}
+
+/// In-flight jobs on one connection: request id → cancellation flag.
+/// Disconnect flips every flag, so orphaned jobs free their batch
+/// slots instead of executing for nobody.
+type CancelMap = Arc<Mutex<HashMap<u64, Arc<AtomicBool>>>>;
+
+/// Everything a connection thread needs, shared behind one `Arc`.
+struct ConnCtx {
+    coordinator: Arc<Coordinator>,
+    stop: Arc<AtomicBool>,
+    active: Arc<AtomicUsize>,
+    addr: SocketAddr,
+    max_frame: usize,
+}
+
+/// Running TCP front-end. Dropping it stops accepting and joins the
+/// connection threads; [`NetServer::shutdown`] additionally drains the
+/// coordinator and returns the final metrics.
+pub struct NetServer {
+    coordinator: Option<Arc<Coordinator>>,
+    stop: Arc<AtomicBool>,
+    addr: SocketAddr,
+    acceptor: Option<JoinHandle<Vec<JoinHandle<()>>>>,
+}
+
+/// Bind `cfg.listen` and serve `coordinator` over TCP.
+pub fn serve(coordinator: Coordinator, cfg: &NetConfig) -> Result<NetServer> {
+    let listener = TcpListener::bind(&cfg.listen)
+        .with_context(|| format!("binding {}", cfg.listen))?;
+    let addr = listener.local_addr()?;
+    let coordinator = Arc::new(coordinator);
+    let stop = Arc::new(AtomicBool::new(false));
+    let ctx = Arc::new(ConnCtx {
+        coordinator: coordinator.clone(),
+        stop: stop.clone(),
+        active: Arc::new(AtomicUsize::new(0)),
+        addr,
+        max_frame: cfg.max_frame_bytes,
+    });
+    let max_conns = cfg.max_conns.max(1);
+    let acceptor = std::thread::spawn(move || {
+        let mut conns: Vec<JoinHandle<()>> = Vec::new();
+        loop {
+            if ctx.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            let stream = match listener.accept() {
+                Ok((s, _)) => s,
+                Err(_) => continue,
+            };
+            if ctx.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            // Opportunistically reap finished connection threads so a
+            // long-lived server does not accumulate dead handles.
+            conns.retain(|h| !h.is_finished());
+            if ctx.active.load(Ordering::SeqCst) >= max_conns {
+                let frame = ServerFrame::Overload {
+                    id: 0,
+                    reason: "max_conns".to_string(),
+                    retry_after_ms: 50,
+                };
+                let mut s = stream;
+                let _ = s.write_all(&encode_frame(&frame.to_json().dump()));
+                continue;
+            }
+            ctx.active.fetch_add(1, Ordering::SeqCst);
+            let ctx = ctx.clone();
+            conns.push(std::thread::spawn(move || {
+                handle_conn(stream, &ctx);
+                ctx.active.fetch_sub(1, Ordering::SeqCst);
+            }));
+        }
+        conns
+    });
+    Ok(NetServer {
+        coordinator: Some(coordinator),
+        stop,
+        addr,
+        acceptor: Some(acceptor),
+    })
+}
+
+impl NetServer {
+    /// The bound address (resolves port 0 to the real port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The served coordinator (for banners and server-side metrics).
+    pub fn coordinator(&self) -> &Coordinator {
+        self.coordinator.as_ref().expect("coordinator alive")
+    }
+
+    /// Flip the stop flag and wake the blocked acceptor.
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        wake_acceptor(self.addr);
+    }
+
+    /// Block until the acceptor and every connection thread exit.
+    /// Call [`NetServer::stop`] first (or send a `shutdown` frame).
+    pub fn wait(&mut self) {
+        if let Some(h) = self.acceptor.take() {
+            if let Ok(conns) = h.join() {
+                for c in conns {
+                    let _ = c.join();
+                }
+            }
+        }
+    }
+
+    /// Stop accepting, join the connection threads, drain the
+    /// coordinator, and return the final metrics.
+    pub fn shutdown(mut self) -> ServeMetrics {
+        self.stop();
+        self.wait();
+        let arc = self.coordinator.take().expect("coordinator present");
+        match Arc::try_unwrap(arc) {
+            Ok(c) => c.shutdown(),
+            // A caller still holds the coordinator; snapshot without
+            // consuming (their handle drains on drop).
+            Err(arc) => arc.metrics(),
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.stop();
+        self.wait();
+    }
+}
+
+/// Unblock `listener.accept()` after the stop flag flips: connect once
+/// to the bound address (loopback when bound to the unspecified
+/// address).
+fn wake_acceptor(addr: SocketAddr) {
+    let mut target = addr;
+    match target.ip() {
+        IpAddr::V4(ip) if ip.is_unspecified() => {
+            target.set_ip(IpAddr::V4(Ipv4Addr::LOCALHOST));
+        }
+        IpAddr::V6(ip) if ip.is_unspecified() => {
+            target.set_ip(IpAddr::V6(Ipv6Addr::LOCALHOST));
+        }
+        _ => {}
+    }
+    let _ = TcpStream::connect_timeout(&target, Duration::from_millis(200));
+}
+
+/// Write one frame under the connection's write lock, so reader-side
+/// replies (overload, metrics) never interleave bytes with the writer
+/// thread's response frames.
+fn send_frame(stream: &Mutex<TcpStream>, frame: &ServerFrame) -> bool {
+    let bytes = encode_frame(&frame.to_json().dump());
+    stream.lock().unwrap().write_all(&bytes).is_ok()
+}
+
+/// Read timeouts are how a blocked reader polls the stop flag; both
+/// kinds occur in the wild (platform-dependent).
+fn read_retryable(e: &std::io::Error) -> bool {
+    use std::io::ErrorKind;
+    matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut)
+}
+
+enum Flow {
+    Continue,
+    Close,
+}
+
+fn handle_conn(stream: TcpStream, ctx: &ConnCtx) {
+    let _ = stream.set_nodelay(true);
+    if stream.set_read_timeout(Some(READ_POLL)).is_err() {
+        return;
+    }
+    let Ok(write_half) = stream.try_clone() else { return };
+    let write = Arc::new(Mutex::new(write_half));
+    let cancels: CancelMap = Arc::new(Mutex::new(HashMap::new()));
+    let (reply_tx, reply_rx) = mpsc::channel::<Response>();
+    // Detached writer: drains the shared reply channel into response
+    // frames. Holds no coordinator handle (see module doc) and exits
+    // when every reply sender — this reader's clone plus any still
+    // inside queued jobs — has resolved.
+    {
+        let write = write.clone();
+        let cancels = cancels.clone();
+        std::thread::spawn(move || {
+            while let Ok(resp) = reply_rx.recv() {
+                cancels.lock().unwrap().remove(&resp.id);
+                let frame = ServerFrame::Response {
+                    id: resp.id,
+                    latency_us: resp.latency.as_micros() as u64,
+                    energy_uj: resp.energy_uj,
+                    output: resp.output,
+                };
+                // Best-effort: a vanished client only costs a counted
+                // failed send, never a wedged writer.
+                send_frame(&write, &frame);
+            }
+        });
+    }
+    let mut reader = FrameReader::new(stream, ctx.max_frame);
+    loop {
+        if ctx.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let payload = match reader.read_frame() {
+            Ok(Some(p)) => p,
+            Ok(None) => break,
+            Err(FrameError::Io(e)) if read_retryable(&e) => continue,
+            Err(e) => {
+                // Framing is broken (desync, oversize, transport):
+                // report once and fail the connection.
+                let frame = ServerFrame::Error { id: None, msg: e.to_string() };
+                send_frame(&write, &frame);
+                break;
+            }
+        };
+        match handle_payload(&payload, ctx, &write, &cancels, &reply_tx) {
+            Flow::Continue => {}
+            Flow::Close => break,
+        }
+    }
+    // Disconnect cancellation: jobs this client can no longer receive
+    // free their batch slots instead of executing for nobody.
+    for (_, flag) in cancels.lock().unwrap().drain() {
+        flag.store(true, Ordering::Relaxed);
+    }
+}
+
+fn handle_payload(
+    payload: &str,
+    ctx: &ConnCtx,
+    write: &Arc<Mutex<TcpStream>>,
+    cancels: &Mutex<HashMap<u64, Arc<AtomicBool>>>,
+    reply_tx: &Sender<Response>,
+) -> Flow {
+    let frame = match ClientFrame::decode(payload) {
+        Ok(f) => f,
+        Err(e) => {
+            // The frame layer already guaranteed stream sync; a bad
+            // payload is a client bug, not a desync — answer and keep
+            // the connection.
+            let f = ServerFrame::Error { id: None, msg: e.to_string() };
+            return if send_frame(write, &f) {
+                Flow::Continue
+            } else {
+                Flow::Close
+            };
+        }
+    };
+    match frame {
+        ClientFrame::Submit { id, job, priority, tenant, deadline_ms } => {
+            let deadline = deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms));
+            let opts = SubmitOpts { priority, tenant, deadline };
+            let c = &ctx.coordinator;
+            let admitted = c.submit_shared(job, &opts, id, reply_tx.clone());
+            let reply = match admitted {
+                Ok(flag) => {
+                    cancels.lock().unwrap().insert(id, flag);
+                    return Flow::Continue;
+                }
+                Err(e) => match e.downcast_ref::<AdmitError>() {
+                    Some(AdmitError::QueueFull) => ServerFrame::Overload {
+                        id,
+                        reason: "queue_full".to_string(),
+                        retry_after_ms: RETRY_AFTER_MS,
+                    },
+                    Some(AdmitError::Shed(p)) => ServerFrame::Overload {
+                        id,
+                        reason: format!("shed:{}", p.as_str()),
+                        retry_after_ms: RETRY_AFTER_MS,
+                    },
+                    Some(AdmitError::TenantQuota) => ServerFrame::Overload {
+                        id,
+                        reason: "tenant_quota".to_string(),
+                        retry_after_ms: RETRY_AFTER_MS,
+                    },
+                    None => ServerFrame::Error {
+                        id: Some(id),
+                        msg: e.to_string(),
+                    },
+                },
+            };
+            if send_frame(write, &reply) {
+                Flow::Continue
+            } else {
+                Flow::Close
+            }
+        }
+        ClientFrame::Cancel { id } => {
+            if let Some(flag) = cancels.lock().unwrap().remove(&id) {
+                flag.store(true, Ordering::Relaxed);
+            }
+            Flow::Continue
+        }
+        ClientFrame::Metrics { id } => {
+            let data = ctx.coordinator.metrics().to_json();
+            if send_frame(write, &ServerFrame::Metrics { id, data }) {
+                Flow::Continue
+            } else {
+                Flow::Close
+            }
+        }
+        ClientFrame::Info { id } => {
+            let c = &ctx.coordinator;
+            let f = ServerFrame::Info {
+                id,
+                input_elems: c.input_elems(),
+                num_classes: c.num_classes(),
+                batch: c.batch_size(),
+                workers: c.worker_count(),
+            };
+            if send_frame(write, &f) {
+                Flow::Continue
+            } else {
+                Flow::Close
+            }
+        }
+        ClientFrame::Shutdown => {
+            ctx.stop.store(true, Ordering::SeqCst);
+            wake_acceptor(ctx.addr);
+            Flow::Close
+        }
+    }
+}

@@ -1,0 +1,704 @@
+//! Frame payload codec: the jsonlite object schema carried inside
+//! each wire frame (DESIGN.md §13).
+//!
+//! Every payload is an object with a `"type"` discriminator. Client →
+//! server: `submit` (full v2 [`Job`] + QoS fields), `cancel`,
+//! `metrics`, `info`, `shutdown`. Server → client: `response` (full
+//! [`JobOutput`], including the complete `EnergyAudit` ledger),
+//! `overload` (typed admission rejection with a retry hint), `error`,
+//! `metrics`, `info`. Requests carry a client-chosen `id`; the server
+//! threads it through the coordinator unchanged, so responses route
+//! back to the right waiter however many jobs multiplex one
+//! connection.
+//!
+//! Numbers ride jsonlite's single `f64` number type. `f32` logits are
+//! exact (`f32 → f64` is lossless and the writer prints round-trip
+//! shortest forms); `u64` counters are exact up to 2^53 — far above
+//! any per-request ledger total. Every decode failure is a typed
+//! [`FrameError::BadFrame`], never a panic: the decoder faces the
+//! network (pinned by the property tests below).
+
+use std::collections::BTreeMap;
+
+use crate::arch::LaneTraffic;
+use crate::coordinator::{EnergyAudit, Job, JobOutput, Priority};
+use crate::energy::CostBreakdown;
+use crate::jsonlite::Json;
+use crate::subarray::OpLedger;
+
+use super::frame::FrameError;
+
+/// Client → server frame.
+#[derive(Debug, Clone)]
+pub enum ClientFrame {
+    /// Submit one job under a client-chosen request id.
+    Submit {
+        id: u64,
+        job: Job,
+        priority: Priority,
+        tenant: String,
+        /// Deadline relative to server receipt, in milliseconds.
+        deadline_ms: Option<u64>,
+    },
+    /// Cancel a previously submitted job (best-effort: a job already
+    /// executing still completes; its response is simply not sent).
+    Cancel { id: u64 },
+    /// Request a `metrics` frame (the `--metrics-json` schema).
+    Metrics { id: u64 },
+    /// Request an `info` frame (model geometry + pool shape).
+    Info { id: u64 },
+    /// Ask the server to stop accepting and drain.
+    Shutdown,
+}
+
+/// Server → client frame.
+#[derive(Debug, Clone)]
+pub enum ServerFrame {
+    /// A completed job (the v2 `Response` over the wire).
+    Response {
+        id: u64,
+        /// End-to-end latency measured by the server [µs].
+        latency_us: u64,
+        energy_uj: f64,
+        output: JobOutput,
+    },
+    /// Typed admission rejection: the submission was NOT queued.
+    Overload {
+        id: u64,
+        /// `"queue_full"`, `"shed:<class>"`, `"tenant_quota"`, or
+        /// `"max_conns"`.
+        reason: String,
+        /// Client back-off hint.
+        retry_after_ms: u64,
+    },
+    /// Request-level failure (bad geometry, malformed frame, ...).
+    /// `id` is absent when the request id itself was unreadable.
+    Error { id: Option<u64>, msg: String },
+    /// Metrics snapshot (`ServeMetrics::to_json` schema).
+    Metrics { id: u64, data: Json },
+    /// Server geometry, so clients can build well-formed jobs.
+    Info {
+        id: u64,
+        input_elems: usize,
+        num_classes: usize,
+        batch: usize,
+        workers: usize,
+    },
+}
+
+fn bad(msg: impl Into<String>) -> FrameError {
+    FrameError::BadFrame(msg.into())
+}
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn num_u(v: u64) -> Json {
+    Json::Num(v as f64)
+}
+
+fn str_j(s: &str) -> Json {
+    Json::Str(s.to_string())
+}
+
+fn arr_f32(v: &[f32]) -> Json {
+    Json::Arr(v.iter().map(|&x| Json::Num(f64::from(x))).collect())
+}
+
+fn get<'a>(j: &'a Json, key: &str) -> Result<&'a Json, FrameError> {
+    match j.get(key) {
+        Some(v) => Ok(v),
+        None => Err(bad(format!("missing field '{key}'"))),
+    }
+}
+
+fn get_f64(j: &Json, key: &str) -> Result<f64, FrameError> {
+    get(j, key)?
+        .as_f64()
+        .ok_or_else(|| bad(format!("field '{key}' is not a number")))
+}
+
+fn get_u64(j: &Json, key: &str) -> Result<u64, FrameError> {
+    let f = get_f64(j, key)?;
+    if !f.is_finite() || f < 0.0 || f.fract() != 0.0 || f > u64::MAX as f64 {
+        return Err(bad(format!("field '{key}' is not a u64: {f}")));
+    }
+    Ok(f as u64)
+}
+
+fn get_usize(j: &Json, key: &str) -> Result<usize, FrameError> {
+    let v = get_u64(j, key)?;
+    usize::try_from(v).map_err(|_| bad(format!("'{key}' overflows usize")))
+}
+
+fn get_str<'a>(j: &'a Json, key: &str) -> Result<&'a str, FrameError> {
+    get(j, key)?
+        .as_str()
+        .ok_or_else(|| bad(format!("field '{key}' is not a string")))
+}
+
+fn get_f32_vec(j: &Json, key: &str) -> Result<Vec<f32>, FrameError> {
+    let v = get(j, key)?
+        .as_f64_vec()
+        .ok_or_else(|| bad(format!("field '{key}' is not a number array")))?;
+    Ok(v.into_iter().map(|x| x as f32).collect())
+}
+
+// --- Job ---
+
+fn job_to_json(job: &Job) -> Json {
+    match job {
+        Job::Classify(img) => {
+            obj(vec![("kind", str_j("classify")), ("image", arr_f32(img))])
+        }
+        Job::Logits(img) => {
+            obj(vec![("kind", str_j("logits")), ("image", arr_f32(img))])
+        }
+        Job::TopK { image, k } => obj(vec![
+            ("kind", str_j("topk")),
+            ("image", arr_f32(image)),
+            ("k", num_u(*k as u64)),
+        ]),
+        Job::EnergyAudit(img) => {
+            obj(vec![("kind", str_j("energy_audit")), ("image", arr_f32(img))])
+        }
+    }
+}
+
+fn job_from_json(j: &Json) -> Result<Job, FrameError> {
+    let image = get_f32_vec(j, "image")?;
+    match get_str(j, "kind")? {
+        "classify" => Ok(Job::Classify(image)),
+        "logits" => Ok(Job::Logits(image)),
+        "topk" => Ok(Job::TopK { image, k: get_usize(j, "k")? }),
+        "energy_audit" => Ok(Job::EnergyAudit(image)),
+        other => Err(bad(format!("unknown job kind '{other}'"))),
+    }
+}
+
+// --- JobOutput (incl. the full EnergyAudit surface) ---
+
+fn ledger_to_json(l: &OpLedger) -> Json {
+    obj(vec![
+        ("row_reads", num_u(l.row_reads)),
+        ("row_writes", num_u(l.row_writes)),
+        ("logic_ops", num_u(l.logic_ops)),
+        ("xor_ops", num_u(l.xor_ops)),
+        ("read_bits", num_u(l.read_bits)),
+        ("write_bits", num_u(l.write_bits)),
+        ("logic_bits", num_u(l.logic_bits)),
+    ])
+}
+
+fn ledger_from_json(j: &Json) -> Result<OpLedger, FrameError> {
+    Ok(OpLedger {
+        row_reads: get_u64(j, "row_reads")?,
+        row_writes: get_u64(j, "row_writes")?,
+        logic_ops: get_u64(j, "logic_ops")?,
+        xor_ops: get_u64(j, "xor_ops")?,
+        read_bits: get_u64(j, "read_bits")?,
+        write_bits: get_u64(j, "write_bits")?,
+        logic_bits: get_u64(j, "logic_bits")?,
+    })
+}
+
+fn traffic_to_json(t: &LaneTraffic) -> Json {
+    obj(vec![
+        ("bits", num_u(t.bits)),
+        ("bit_levels", num_u(t.bit_levels)),
+        ("hops", num_u(t.hops)),
+    ])
+}
+
+fn traffic_from_json(j: &Json) -> Result<LaneTraffic, FrameError> {
+    Ok(LaneTraffic {
+        bits: get_u64(j, "bits")?,
+        bit_levels: get_u64(j, "bit_levels")?,
+        hops: get_u64(j, "hops")?,
+    })
+}
+
+fn cost_to_json(c: &CostBreakdown) -> Json {
+    let comps: BTreeMap<String, Json> = c
+        .components()
+        .map(|(name, e, l)| {
+            (name.to_string(), Json::Arr(vec![Json::Num(e), Json::Num(l)]))
+        })
+        .collect();
+    obj(vec![
+        ("energy_pj", Json::Num(c.energy_pj)),
+        ("latency_ns", Json::Num(c.latency_ns)),
+        ("components", Json::Obj(comps)),
+    ])
+}
+
+fn cost_from_json(j: &Json) -> Result<CostBreakdown, FrameError> {
+    let mut cost = CostBreakdown::new();
+    let comps = get(j, "components")?;
+    let Json::Obj(map) = comps else {
+        return Err(bad("field 'components' is not an object"));
+    };
+    for (name, pair) in map {
+        let arr = pair
+            .as_f64_vec()
+            .ok_or_else(|| bad(format!("component '{name}' malformed")))?;
+        if arr.len() != 2 {
+            return Err(bad(format!("component '{name}' needs [e, l]")));
+        }
+        cost.add(name, arr[0], arr[1]);
+    }
+    // `add` re-sums the totals in BTreeMap order; restore the sender's
+    // exact totals (summation order differs, so bits could too).
+    cost.energy_pj = get_f64(j, "energy_pj")?;
+    cost.latency_ns = get_f64(j, "latency_ns")?;
+    Ok(cost)
+}
+
+fn output_to_json(out: &JobOutput) -> Json {
+    match out {
+        JobOutput::Classify { prediction, logits } => obj(vec![
+            ("kind", str_j("classify")),
+            ("prediction", num_u(*prediction as u64)),
+            ("logits", arr_f32(logits)),
+        ]),
+        JobOutput::Logits(logits) => {
+            obj(vec![("kind", str_j("logits")), ("logits", arr_f32(logits))])
+        }
+        JobOutput::TopK(ranked) => {
+            let rows = ranked
+                .iter()
+                .map(|&(c, l)| {
+                    Json::Arr(vec![num_u(c as u64), Json::Num(f64::from(l))])
+                })
+                .collect();
+            obj(vec![("kind", str_j("topk")), ("ranked", Json::Arr(rows))])
+        }
+        JobOutput::EnergyAudit(a) => obj(vec![
+            ("kind", str_j("energy_audit")),
+            ("prediction", num_u(a.prediction as u64)),
+            ("logits", arr_f32(&a.logits)),
+            ("energy_uj", Json::Num(a.energy_uj)),
+            ("ledger", ledger_to_json(&a.ledger)),
+            ("merge_traffic", traffic_to_json(&a.merge_traffic)),
+            ("cost", cost_to_json(&a.cost)),
+        ]),
+    }
+}
+
+fn output_from_json(j: &Json) -> Result<JobOutput, FrameError> {
+    match get_str(j, "kind")? {
+        "classify" => Ok(JobOutput::Classify {
+            prediction: get_usize(j, "prediction")?,
+            logits: get_f32_vec(j, "logits")?,
+        }),
+        "logits" => Ok(JobOutput::Logits(get_f32_vec(j, "logits")?)),
+        "topk" => {
+            let rows = get(j, "ranked")?
+                .as_arr()
+                .ok_or_else(|| bad("field 'ranked' is not an array"))?;
+            let mut ranked = Vec::with_capacity(rows.len());
+            for row in rows {
+                let pair = row.as_f64_vec().ok_or_else(|| bad("ranked row malformed"))?;
+                if pair.len() != 2 || pair[0] < 0.0 || pair[0].fract() != 0.0 {
+                    return Err(bad("ranked row needs [class, logit]"));
+                }
+                ranked.push((pair[0] as usize, pair[1] as f32));
+            }
+            Ok(JobOutput::TopK(ranked))
+        }
+        "energy_audit" => Ok(JobOutput::EnergyAudit(Box::new(EnergyAudit {
+            cost: cost_from_json(get(j, "cost")?)?,
+            ledger: ledger_from_json(get(j, "ledger")?)?,
+            merge_traffic: traffic_from_json(get(j, "merge_traffic")?)?,
+            energy_uj: get_f64(j, "energy_uj")?,
+            logits: get_f32_vec(j, "logits")?,
+            prediction: get_usize(j, "prediction")?,
+        }))),
+        other => Err(bad(format!("unknown output kind '{other}'"))),
+    }
+}
+
+impl ClientFrame {
+    pub fn to_json(&self) -> Json {
+        match self {
+            ClientFrame::Submit { id, job, priority, tenant, deadline_ms } => {
+                let mut pairs = vec![
+                    ("type", str_j("submit")),
+                    ("id", num_u(*id)),
+                    ("job", job_to_json(job)),
+                    ("priority", str_j(priority.as_str())),
+                    ("tenant", str_j(tenant)),
+                ];
+                if let Some(ms) = deadline_ms {
+                    pairs.push(("deadline_ms", num_u(*ms)));
+                }
+                obj(pairs)
+            }
+            ClientFrame::Cancel { id } => {
+                obj(vec![("type", str_j("cancel")), ("id", num_u(*id))])
+            }
+            ClientFrame::Metrics { id } => {
+                obj(vec![("type", str_j("metrics")), ("id", num_u(*id))])
+            }
+            ClientFrame::Info { id } => {
+                obj(vec![("type", str_j("info")), ("id", num_u(*id))])
+            }
+            ClientFrame::Shutdown => obj(vec![("type", str_j("shutdown"))]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<ClientFrame, FrameError> {
+        match get_str(j, "type")? {
+            "submit" => {
+                let pr = Priority::parse(get_str(j, "priority")?);
+                Ok(ClientFrame::Submit {
+                    id: get_u64(j, "id")?,
+                    job: job_from_json(get(j, "job")?)?,
+                    priority: pr.map_err(|e| bad(e.to_string()))?,
+                    tenant: get_str(j, "tenant")?.to_string(),
+                    deadline_ms: match j.get("deadline_ms") {
+                        Some(_) => Some(get_u64(j, "deadline_ms")?),
+                        None => None,
+                    },
+                })
+            }
+            "cancel" => Ok(ClientFrame::Cancel { id: get_u64(j, "id")? }),
+            "metrics" => Ok(ClientFrame::Metrics { id: get_u64(j, "id")? }),
+            "info" => Ok(ClientFrame::Info { id: get_u64(j, "id")? }),
+            "shutdown" => Ok(ClientFrame::Shutdown),
+            other => Err(bad(format!("unknown client frame '{other}'"))),
+        }
+    }
+
+    /// Parse a raw frame payload (jsonlite text) into a client frame.
+    pub fn decode(payload: &str) -> Result<ClientFrame, FrameError> {
+        let j = Json::parse(payload).map_err(|e| FrameError::BadJson(e.to_string()))?;
+        Self::from_json(&j)
+    }
+}
+
+impl ServerFrame {
+    pub fn to_json(&self) -> Json {
+        match self {
+            ServerFrame::Response { id, latency_us, energy_uj, output } => {
+                obj(vec![
+                    ("type", str_j("response")),
+                    ("id", num_u(*id)),
+                    ("latency_us", num_u(*latency_us)),
+                    ("energy_uj", Json::Num(*energy_uj)),
+                    ("output", output_to_json(output)),
+                ])
+            }
+            ServerFrame::Overload { id, reason, retry_after_ms } => {
+                obj(vec![
+                    ("type", str_j("overload")),
+                    ("id", num_u(*id)),
+                    ("reason", str_j(reason)),
+                    ("retry_after_ms", num_u(*retry_after_ms)),
+                ])
+            }
+            ServerFrame::Error { id, msg } => {
+                let mut pairs = vec![("type", str_j("error")), ("msg", str_j(msg))];
+                if let Some(id) = id {
+                    pairs.push(("id", num_u(*id)));
+                }
+                obj(pairs)
+            }
+            ServerFrame::Metrics { id, data } => obj(vec![
+                ("type", str_j("metrics")),
+                ("id", num_u(*id)),
+                ("data", data.clone()),
+            ]),
+            ServerFrame::Info { id, input_elems, num_classes, batch, workers } => {
+                obj(vec![
+                    ("type", str_j("info")),
+                    ("id", num_u(*id)),
+                    ("input_elems", num_u(*input_elems as u64)),
+                    ("num_classes", num_u(*num_classes as u64)),
+                    ("batch", num_u(*batch as u64)),
+                    ("workers", num_u(*workers as u64)),
+                ])
+            }
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<ServerFrame, FrameError> {
+        match get_str(j, "type")? {
+            "response" => Ok(ServerFrame::Response {
+                id: get_u64(j, "id")?,
+                latency_us: get_u64(j, "latency_us")?,
+                energy_uj: get_f64(j, "energy_uj")?,
+                output: output_from_json(get(j, "output")?)?,
+            }),
+            "overload" => Ok(ServerFrame::Overload {
+                id: get_u64(j, "id")?,
+                reason: get_str(j, "reason")?.to_string(),
+                retry_after_ms: get_u64(j, "retry_after_ms")?,
+            }),
+            "error" => Ok(ServerFrame::Error {
+                id: match j.get("id") {
+                    Some(_) => Some(get_u64(j, "id")?),
+                    None => None,
+                },
+                msg: get_str(j, "msg")?.to_string(),
+            }),
+            "metrics" => Ok(ServerFrame::Metrics {
+                id: get_u64(j, "id")?,
+                data: get(j, "data")?.clone(),
+            }),
+            "info" => Ok(ServerFrame::Info {
+                id: get_u64(j, "id")?,
+                input_elems: get_usize(j, "input_elems")?,
+                num_classes: get_usize(j, "num_classes")?,
+                batch: get_usize(j, "batch")?,
+                workers: get_usize(j, "workers")?,
+            }),
+            other => Err(bad(format!("unknown server frame '{other}'"))),
+        }
+    }
+
+    /// Parse a raw frame payload (jsonlite text) into a server frame.
+    pub fn decode(payload: &str) -> Result<ServerFrame, FrameError> {
+        let j = Json::parse(payload).map_err(|e| FrameError::BadJson(e.to_string()))?;
+        Self::from_json(&j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::frame::{encode_frame, FrameReader};
+    use super::*;
+    use crate::proptest_lite::{Gen, Runner};
+
+    fn roundtrip_client(f: &ClientFrame) -> ClientFrame {
+        let text = f.to_json().dump();
+        let back = ClientFrame::decode(&text).expect("decodes");
+        assert_eq!(back.to_json().dump(), text, "codec is stable");
+        back
+    }
+
+    fn roundtrip_server(f: &ServerFrame) -> ServerFrame {
+        let text = f.to_json().dump();
+        let back = ServerFrame::decode(&text).expect("decodes");
+        assert_eq!(back.to_json().dump(), text, "codec is stable");
+        back
+    }
+
+    fn gen_image(g: &mut Gen) -> Vec<f32> {
+        (0..g.usize(1, 8)).map(|_| g.f64(-2.0, 2.0) as f32).collect()
+    }
+
+    fn gen_job(g: &mut Gen) -> Job {
+        match g.usize(0, 3) {
+            0 => Job::Classify(gen_image(g)),
+            1 => Job::Logits(gen_image(g)),
+            2 => Job::TopK { image: gen_image(g), k: g.usize(1, 9) },
+            _ => Job::EnergyAudit(gen_image(g)),
+        }
+    }
+
+    fn gen_output(g: &mut Gen) -> JobOutput {
+        match g.usize(0, 3) {
+            0 => JobOutput::Classify {
+                prediction: g.usize(0, 9),
+                logits: gen_image(g),
+            },
+            1 => JobOutput::Logits(gen_image(g)),
+            2 => {
+                let mut rows = Vec::new();
+                for _ in 0..g.usize(1, 4) {
+                    rows.push((g.usize(0, 9), g.f64(-1.0, 1.0) as f32));
+                }
+                JobOutput::TopK(rows)
+            }
+            _ => {
+                let mut cost = CostBreakdown::new();
+                for name in ["read", "merge", "write"] {
+                    cost.add(name, g.f64(0.0, 1e6), g.f64(0.0, 1e4));
+                }
+                JobOutput::EnergyAudit(Box::new(EnergyAudit {
+                    cost,
+                    ledger: OpLedger {
+                        row_reads: g.u64_any() >> 12,
+                        row_writes: g.u64_any() >> 12,
+                        logic_ops: g.u64_any() >> 12,
+                        xor_ops: g.u64_any() >> 12,
+                        read_bits: g.u64_any() >> 12,
+                        write_bits: g.u64_any() >> 12,
+                        logic_bits: g.u64_any() >> 12,
+                    },
+                    merge_traffic: LaneTraffic {
+                        bits: g.u64_any() >> 12,
+                        bit_levels: g.u64_any() >> 12,
+                        hops: g.u64_any() >> 12,
+                    },
+                    energy_uj: g.f64(0.0, 100.0),
+                    logits: gen_image(g),
+                    prediction: g.usize(0, 9),
+                }))
+            }
+        }
+    }
+
+    fn gen_server_frame(g: &mut Gen) -> ServerFrame {
+        match g.usize(0, 2) {
+            0 => ServerFrame::Response {
+                id: g.u64_any() >> 12,
+                latency_us: g.u64_any() >> 20,
+                energy_uj: g.f64(0.0, 50.0),
+                output: gen_output(g),
+            },
+            1 => ServerFrame::Overload {
+                id: g.u64_any() >> 12,
+                reason: format!("shed:{}", g.choose(Priority::ALL.as_slice()).as_str()),
+                retry_after_ms: g.u64_any() >> 50,
+            },
+            _ => ServerFrame::Error {
+                id: g.bool().then(|| g.u64_any() >> 12),
+                msg: "queue full (backpressure)".to_string(),
+            },
+        }
+    }
+
+    // Satellite: every Job / JobOutput / overload frame survives
+    // encode → arbitrary TCP segmentation → decode bit-exactly, and
+    // the network-facing parser never panics on malformed input.
+    #[test]
+    fn wire_frames_roundtrip_through_framing_and_codec() {
+        let mut r = Runner::new(0x11e7_0001);
+        r.run("wire frames roundtrip", |g| {
+            let client = ClientFrame::Submit {
+                id: g.u64_any() >> 12,
+                job: gen_job(g),
+                priority: *g.choose(Priority::ALL.as_slice()),
+                tenant: format!("tenant-{}", g.usize(0, 5)),
+                deadline_ms: g.bool().then(|| g.u64_any() >> 40),
+            };
+            let server = gen_server_frame(g);
+            // Frame both payloads onto one stream, split arbitrarily.
+            let mut data = Vec::new();
+            data.extend_from_slice(&encode_frame(&client.to_json().dump()));
+            data.extend_from_slice(&encode_frame(&server.to_json().dump()));
+            let cursor = std::io::Cursor::new(data);
+            let mut fr = FrameReader::new(cursor, 1 << 20);
+            let p1 = fr.read_frame().unwrap().expect("client frame");
+            let p2 = fr.read_frame().unwrap().expect("server frame");
+            assert!(fr.read_frame().unwrap().is_none(), "clean EOF");
+            let c2 = ClientFrame::decode(&p1).expect("client decodes");
+            assert_eq!(c2.to_json().dump(), client.to_json().dump());
+            let s2 = ServerFrame::decode(&p2).expect("server decodes");
+            assert_eq!(s2.to_json().dump(), server.to_json().dump());
+        });
+    }
+
+    #[test]
+    fn energy_audit_payload_is_bit_exact() {
+        let mut cost = CostBreakdown::new();
+        cost.add("subarray_read", 123.456, 7.25);
+        cost.add("inter_lane_merge", 0.125, 0.5);
+        // Totals set directly to differ from component-sum order.
+        cost.energy_pj = 123.456 + 0.125;
+        cost.latency_ns = 7.75;
+        let audit = EnergyAudit {
+            cost,
+            ledger: OpLedger {
+                row_reads: 10,
+                row_writes: 20,
+                logic_ops: 30,
+                xor_ops: 40,
+                read_bits: 50,
+                write_bits: 60,
+                logic_bits: 70,
+            },
+            merge_traffic: LaneTraffic { bits: 1, bit_levels: 2, hops: 3 },
+            energy_uj: 0.375,
+            logits: vec![0.1, -0.9, 0.3],
+            prediction: 2,
+        };
+        let f = ServerFrame::Response {
+            id: 7,
+            latency_us: 1234,
+            energy_uj: 0.375,
+            output: JobOutput::EnergyAudit(Box::new(audit)),
+        };
+        let back = roundtrip_server(&f);
+        let ServerFrame::Response { output, .. } = back else {
+            panic!("wrong frame kind");
+        };
+        let a = output.audit().expect("audit survives");
+        assert_eq!(a.ledger.row_reads, 10);
+        assert_eq!(a.ledger.logic_bits, 70);
+        assert_eq!(a.merge_traffic.hops, 3);
+        assert_eq!(a.logits, vec![0.1f32, -0.9, 0.3]);
+        assert_eq!(a.prediction, 2);
+        assert_eq!(a.energy_uj, 0.375);
+        assert_eq!(a.cost.energy_pj, 123.456 + 0.125);
+        assert_eq!(a.cost.component("subarray_read"), Some((123.456, 7.25)));
+        assert_eq!(a.cost.component("inter_lane_merge"), Some((0.125, 0.5)));
+    }
+
+    #[test]
+    fn control_frames_roundtrip() {
+        roundtrip_client(&ClientFrame::Cancel { id: 9 });
+        roundtrip_client(&ClientFrame::Metrics { id: 1 });
+        roundtrip_client(&ClientFrame::Info { id: 2 });
+        roundtrip_client(&ClientFrame::Shutdown);
+        roundtrip_server(&ServerFrame::Error {
+            id: None,
+            msg: "bad".to_string(),
+        });
+        roundtrip_server(&ServerFrame::Metrics {
+            id: 3,
+            data: Json::parse(r#"{"counters": {"served": 4}}"#).unwrap(),
+        });
+        roundtrip_server(&ServerFrame::Info {
+            id: 4,
+            input_elems: 784,
+            num_classes: 10,
+            batch: 8,
+            workers: 2,
+        });
+    }
+
+    #[test]
+    fn malformed_payloads_yield_typed_errors() {
+        for text in [
+            "not json at all",
+            "{}",
+            r#"{"type": "warp"}"#,
+            r#"{"type": "submit"}"#,
+            r#"{"type": "submit", "id": -1}"#,
+            r#"{"type": "submit", "id": 1.5}"#,
+            r#"{"type": "cancel", "id": "seven"}"#,
+            r#"{"type": "submit", "id": 1, "priority": "urgent",
+               "tenant": "t", "job": {"kind": "classify", "image": [0]}}"#,
+            r#"{"type": "submit", "id": 1, "priority": "batch",
+               "tenant": "t", "job": {"kind": "classify", "image": "x"}}"#,
+            r#"{"type": "submit", "id": 1, "priority": "batch",
+               "tenant": "t", "job": {"kind": "topk", "image": [0]}}"#,
+        ] {
+            let err = ClientFrame::decode(text).unwrap_err();
+            assert!(
+                matches!(
+                    err,
+                    FrameError::BadJson(_) | FrameError::BadFrame(_)
+                ),
+                "{text} -> {err}"
+            );
+        }
+        for text in [
+            r#"{"type": "response", "id": 1}"#,
+            r#"{"type": "response", "id": 1, "latency_us": 2,
+               "energy_uj": 0, "output": {"kind": "mystery"}}"#,
+            r#"{"type": "response", "id": 1, "latency_us": 2,
+               "energy_uj": 0, "output": {"kind": "topk", "ranked": [[1]]}}"#,
+            r#"{"type": "overload", "id": 1}"#,
+            r#"{"type": "info", "id": 1, "input_elems": -4,
+               "num_classes": 10, "batch": 1, "workers": 1}"#,
+        ] {
+            let err = ServerFrame::decode(text).unwrap_err();
+            assert!(matches!(err, FrameError::BadFrame(_)), "{text} -> {err}");
+        }
+    }
+}

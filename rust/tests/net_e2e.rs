@@ -1,0 +1,435 @@
+//! TCP front-end end-to-end tests (DESIGN.md §13): a real
+//! `net::serve` listener on a loopback port, driven by multiplexing
+//! [`NetClient`]s.
+//!
+//! ISSUE 9 acceptance lives here:
+//! * a seeded job stream served over TCP is bit-identical (logits,
+//!   ledgers, energy) to the same stream submitted in-process;
+//! * ≥1000 concurrent jobs ride 64 connections with zero admitted-job
+//!   drops and no misrouted replies;
+//! * under overload only the background class sheds (typed `overload`
+//!   replies), while every admitted interactive job is answered;
+//! * per-class/per-kind p50/p95/p99 surface both in [`ServeMetrics`]
+//!   and in the wire `metrics` frame (`--metrics-json` schema).
+
+use std::time::Duration;
+
+use pims::apicfg::RunConfig;
+use pims::coordinator::{
+    Coordinator, Job, JobOutput, MockBackend, Priority, SubmitOpts,
+};
+use pims::jsonlite::Json;
+use pims::net::{serve, NetClient, NetConfig, NetReply};
+
+fn img(elems: usize, class: usize) -> Vec<f32> {
+    let mut v = vec![0.0; elems];
+    v[0] = (class as f32 + 0.5) / 10.0;
+    v
+}
+
+fn cfg(workers: usize, queue: usize, wait_ms: f64) -> RunConfig {
+    RunConfig { workers, queue, wait_ms, ..RunConfig::default() }
+}
+
+fn loopback() -> NetConfig {
+    NetConfig { listen: "127.0.0.1:0".to_string(), ..NetConfig::default() }
+}
+
+/// Canonical fingerprint of a reply payload. `Debug` for `f32`/`f64`
+/// prints the shortest representation that parses back to the same
+/// bits, so equal fingerprints mean bit-identical logits, ledgers,
+/// merge traffic, and cost components.
+fn fingerprint(output: &JobOutput, energy_uj: f64) -> String {
+    format!("{output:?}|{energy_uj:?}")
+}
+
+/// The same seeded job stream, once in-process and once over TCP,
+/// must produce byte-identical outputs — the wire codec embeds `f32`
+/// in `f64` exactly and `u64` ledger counts survive below 2^53.
+#[test]
+fn tcp_replay_is_bit_identical_to_in_process() {
+    let cfg = RunConfig {
+        model: "micro".to_string(),
+        workers: 2,
+        queue: 64,
+        wait_ms: 1.0,
+        ..RunConfig::default()
+    };
+    let model = cfg.build_model().unwrap();
+    let ds = pims::dataset::generate(
+        8,
+        model.input_hw,
+        model.input_c,
+        cfg.seed,
+    );
+    let jobs: Vec<Job> = (0..16)
+        .map(|i| {
+            let image = ds.image(i % ds.n).to_vec();
+            match i % 4 {
+                0 => Job::Classify(image),
+                1 => Job::Logits(image),
+                2 => Job::TopK { image, k: 3 },
+                _ => Job::EnergyAudit(image),
+            }
+        })
+        .collect();
+
+    // In-process reference run.
+    let c = Coordinator::launch(&cfg).unwrap();
+    let mut reference = Vec::new();
+    for job in &jobs {
+        let r = c.submit_job_blocking(job.clone()).unwrap().wait().unwrap();
+        reference.push(fingerprint(&r.output, r.energy_uj));
+    }
+    c.shutdown();
+
+    // The identical stream over a live TCP listener.
+    let server = serve(Coordinator::launch(&cfg).unwrap(), &loopback())
+        .unwrap();
+    let client =
+        NetClient::connect(&server.local_addr().to_string()).unwrap();
+    for (i, job) in jobs.iter().enumerate() {
+        let reply = client
+            .submit(job.clone(), Priority::Interactive, "replay", None)
+            .unwrap()
+            .wait()
+            .unwrap();
+        let NetReply::Response { output, energy_uj, .. } = reply else {
+            panic!("job {i} was not answered: {reply:?}");
+        };
+        assert_eq!(
+            fingerprint(&output, energy_uj),
+            reference[i],
+            "job {i} diverged over the wire"
+        );
+    }
+    drop(client);
+    let m = server.shutdown();
+    assert_eq!(m.counters.served, 16);
+    assert_eq!(m.dropped_replies(), 0);
+}
+
+/// 1000 jobs in flight over 64 multiplexed connections: every one
+/// answered (zero admitted-job drops), every reply routed to the
+/// request that made it, and the QoS histograms account for all of
+/// them.
+#[test]
+fn thousand_jobs_over_64_conns_zero_drops() {
+    let server = serve(
+        Coordinator::launch_pool(&cfg(4, 2048, 1.0), |_| {
+            Ok(MockBackend::new(8, 16, 10))
+        })
+        .unwrap(),
+        &loopback(),
+    )
+    .unwrap();
+    let addr = server.local_addr().to_string();
+    let clients: Vec<NetClient> =
+        (0..64).map(|_| NetClient::connect(&addr).unwrap()).collect();
+
+    let info = clients[0].info().unwrap();
+    assert_eq!(info.input_elems, 16);
+    assert_eq!(info.num_classes, 10);
+    assert_eq!(info.batch, 8);
+    assert_eq!(info.workers, 4);
+
+    const JOBS: usize = 1000;
+    let mut pendings = Vec::with_capacity(JOBS);
+    for i in 0..JOBS {
+        let class = i % 10;
+        let tenant = format!("tenant-{}", i % 5);
+        let pend = clients[i % clients.len()]
+            .submit(
+                Job::Classify(img(16, class)),
+                Priority::ALL[i % 3],
+                &tenant,
+                None,
+            )
+            .unwrap();
+        pendings.push((class, pend));
+    }
+    for (class, pend) in pendings {
+        let reply = pend.wait().unwrap();
+        let NetReply::Response { output, .. } = reply else {
+            panic!("admitted job dropped: {reply:?}");
+        };
+        assert_eq!(
+            output.prediction(),
+            Some(class),
+            "reply misrouted between multiplexed requests"
+        );
+    }
+
+    // Wire metrics frame: per-class tails present while still live.
+    let j = clients[0].metrics().unwrap();
+    let by_class = j.get("by_class").expect("by_class block");
+    let mut hist_total = 0.0;
+    for p in Priority::ALL {
+        let h = by_class.get(p.as_str()).expect("class slot");
+        hist_total += h.get("count").and_then(Json::as_f64).unwrap();
+        assert!(
+            h.get("p99_ns").and_then(Json::as_f64).unwrap() > 0.0,
+            "{} p99 missing",
+            p.as_str()
+        );
+    }
+    assert_eq!(hist_total as u64, JOBS as u64);
+
+    drop(clients);
+    let m = server.shutdown();
+    assert_eq!(m.counters.enqueued, JOBS as u64);
+    assert_eq!(m.counters.served, JOBS as u64);
+    assert_eq!(m.counters.rejected, 0);
+    assert_eq!(m.counters.shed, [0, 0, 0], "nothing may shed");
+    assert_eq!(m.dropped_replies(), 0);
+    let class_counts: u64 =
+        m.by_class.iter().map(|h| h.count()).sum();
+    assert_eq!(class_counts, JOBS as u64);
+    assert!(
+        m.by_kind[0].count() == JOBS as u64,
+        "all jobs were classifies"
+    );
+}
+
+/// Overload floods shed ONLY the background class (typed `overload`
+/// frames name it), and every admitted interactive job still gets its
+/// answer — no priority inversion on the wire path.
+#[test]
+fn overload_sheds_background_only() {
+    let mut rc = cfg(1, 32, 0.5);
+    rc.qos_shed_pct = [100, 100, 25]; // background sheds at 8 outstanding
+    let server = serve(
+        Coordinator::launch_pool(&rc, |_| {
+            let mut b = MockBackend::new(4, 16, 10);
+            b.delay = Duration::from_millis(5);
+            Ok(b)
+        })
+        .unwrap(),
+        &loopback(),
+    )
+    .unwrap();
+    let addr = server.local_addr().to_string();
+    let clients: Vec<NetClient> =
+        (0..4).map(|_| NetClient::connect(&addr).unwrap()).collect();
+
+    // Background flood, all in flight at once.
+    let mut flood = Vec::new();
+    for i in 0..64 {
+        flood.push(
+            clients[i % clients.len()]
+                .submit(
+                    Job::Classify(img(16, i % 10)),
+                    Priority::Background,
+                    "flood",
+                    None,
+                )
+                .unwrap(),
+        );
+    }
+    // Interactive traffic submitted while the flood is in flight.
+    let interactive: Vec<_> = (0..8)
+        .map(|i| {
+            clients[i % clients.len()]
+                .submit(
+                    Job::Classify(img(16, i)),
+                    Priority::Interactive,
+                    "vip",
+                    None,
+                )
+                .unwrap()
+        })
+        .collect();
+
+    for (i, pend) in interactive.into_iter().enumerate() {
+        let reply = pend.wait().unwrap();
+        assert!(
+            matches!(reply, NetReply::Response { .. }),
+            "interactive job {i} must never shed: {reply:?}"
+        );
+    }
+    let mut shed_frames = 0;
+    for pend in flood {
+        match pend.wait().unwrap() {
+            NetReply::Response { .. } => {}
+            NetReply::Overload { reason, retry_after_ms } => {
+                assert_eq!(reason, "shed:background");
+                assert!(retry_after_ms > 0);
+                shed_frames += 1;
+            }
+        }
+    }
+    assert!(shed_frames > 0, "the flood must trip the shed threshold");
+
+    drop(clients);
+    let m = server.shutdown();
+    assert_eq!(m.counters.shed[Priority::Interactive.index()], 0);
+    assert_eq!(m.counters.shed[Priority::Batch.index()], 0);
+    assert_eq!(
+        m.counters.shed[Priority::Background.index()],
+        shed_frames,
+        "every shed produced exactly one typed overload frame"
+    );
+    assert_eq!(m.dropped_replies(), 0);
+}
+
+/// Cancel frames free server-side slots: a dropped [`NetPending`]
+/// cancels its job, and the server's split drop counters record it.
+#[test]
+fn dropped_pending_cancels_over_the_wire() {
+    let mut rc = cfg(1, 64, 0.5);
+    rc.tenant_quota = 0;
+    let server = serve(
+        Coordinator::launch_pool(&rc, |_| {
+            let mut b = MockBackend::new(4, 16, 10);
+            b.delay = Duration::from_millis(10);
+            Ok(b)
+        })
+        .unwrap(),
+        &loopback(),
+    )
+    .unwrap();
+    let client =
+        NetClient::connect(&server.local_addr().to_string()).unwrap();
+
+    // Park a slow job so the queue holds the next submissions, then
+    // abandon handles — each drop sends a best-effort cancel frame.
+    let keep = client
+        .submit(Job::Classify(img(16, 1)), Priority::Interactive, "t", None)
+        .unwrap();
+    for i in 0..16 {
+        let p = client
+            .submit(
+                Job::Classify(img(16, i % 10)),
+                Priority::Background,
+                "t",
+                None,
+            )
+            .unwrap();
+        drop(p);
+    }
+    assert!(matches!(
+        keep.wait().unwrap(),
+        NetReply::Response { .. }
+    ));
+
+    drop(client);
+    let m = server.shutdown();
+    // Cancels raced the worker: whatever was still queued when its
+    // worker reached it was skipped and counted.
+    assert_eq!(
+        m.counters.served + m.counters.cancelled,
+        17,
+        "every admitted job either answered or cancelled: {:?}",
+        m.counters
+    );
+    assert_eq!(m.counters.expired, 0);
+}
+
+/// The in-process QoS surface and the wire metrics agree: per-kind
+/// histograms fill from typed jobs submitted over TCP.
+#[test]
+fn per_kind_histograms_fill_over_tcp() {
+    let server = serve(
+        Coordinator::launch_pool(&cfg(2, 256, 1.0), |_| {
+            Ok(MockBackend::new(4, 16, 10))
+        })
+        .unwrap(),
+        &loopback(),
+    )
+    .unwrap();
+    let client =
+        NetClient::connect(&server.local_addr().to_string()).unwrap();
+    for i in 0..24 {
+        let image = img(16, i % 10);
+        let job = match i % 3 {
+            0 => Job::Classify(image),
+            1 => Job::Logits(image),
+            _ => Job::TopK { image, k: 3 },
+        };
+        let reply = client
+            .submit(job, Priority::Batch, "kinds", None)
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert!(matches!(reply, NetReply::Response { .. }));
+    }
+    let j = client.metrics().unwrap();
+    for kind in ["classify", "logits", "topk"] {
+        let h = j
+            .get("by_kind")
+            .and_then(|b| b.get(kind))
+            .unwrap_or_else(|| panic!("missing by_kind.{kind}"));
+        assert_eq!(h.get("count").and_then(Json::as_f64), Some(8.0));
+        assert!(h.get("p50_ns").and_then(Json::as_f64).is_some());
+    }
+    drop(client);
+    let m = server.shutdown();
+    for i in 0..3 {
+        assert_eq!(m.by_kind[i].count(), 8);
+    }
+    assert_eq!(m.by_kind[3].count(), 0, "no energy audits submitted");
+    assert_eq!(
+        m.by_class[Priority::Batch.index()].count(),
+        24,
+        "all rode the batch class"
+    );
+}
+
+/// Tenant quotas reject over the wire with the typed reason while
+/// in-quota tenants keep being served.
+#[test]
+fn tenant_quota_rejects_typed_over_tcp() {
+    let mut rc = cfg(1, 64, 0.5);
+    rc.tenant_quota = 2;
+    let server = serve(
+        Coordinator::launch_pool(&rc, |_| {
+            let mut b = MockBackend::new(2, 16, 10);
+            b.delay = Duration::from_millis(10);
+            Ok(b)
+        })
+        .unwrap(),
+        &loopback(),
+    )
+    .unwrap();
+    let client =
+        NetClient::connect(&server.local_addr().to_string()).unwrap();
+    let mut pendings = Vec::new();
+    for i in 0..8 {
+        pendings.push(
+            client
+                .submit(
+                    Job::Classify(img(16, i)),
+                    Priority::Interactive,
+                    "greedy",
+                    None,
+                )
+                .unwrap(),
+        );
+    }
+    let mut served = 0;
+    let mut quota = 0;
+    for pend in pendings {
+        match pend.wait().unwrap() {
+            NetReply::Response { .. } => served += 1,
+            NetReply::Overload { reason, .. } => {
+                assert_eq!(reason, "tenant_quota");
+                quota += 1;
+            }
+        }
+    }
+    assert!(served >= 2, "the quota admits up to 2 in flight");
+    assert!(quota > 0, "the burst must exhaust the quota of 2");
+    assert_eq!(served + quota, 8);
+    drop(client);
+    server.shutdown();
+}
+
+/// `SubmitOpts` defaults line up with the wire defaults, so in-process
+/// and TCP submissions land in the same class/tenant accounting.
+#[test]
+fn default_submit_opts_match_wire_defaults() {
+    let opts = SubmitOpts::default();
+    assert_eq!(opts.priority, Priority::Interactive);
+    assert_eq!(opts.tenant, "default");
+    assert!(opts.deadline.is_none());
+}

@@ -4,17 +4,30 @@
 # Run this ON THE CI RUNNER CLASS (or the machine the perf history
 # should track), from the repo root:
 #
-#   scripts/refresh_bench_baseline.sh [target_ms]
+#   scripts/refresh_bench_baseline.sh [target_ms] [--force]
 #
 # It runs the hotpath_micro bench with the JSON artifact enabled,
 # copies the gated notes into BENCH_baseline.json, and stamps the
 # provenance so the regression gate (ci.yml bench-smoke) knows the
 # numbers are measured, not seeded estimates. Commit the refreshed
 # file with the change that motivated the re-anchor.
+#
+# Safety: when this machine's SIMD-relevant CPU features differ from
+# the committed baseline's provenance (say, re-anchoring AVX2 numbers
+# from a portable laptop), the refresh refuses — numbers from a
+# different machine class would make the regression gate meaningless.
+# Pass --force to override deliberately.
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
-target_ms="${1:-250}"
+target_ms="250"
+force="0"
+for arg in "$@"; do
+    case "$arg" in
+        --force) force="1" ;;
+        *) target_ms="$arg" ;;
+    esac
+done
 
 tmp="$(mktemp -d)"
 trap 'rm -rf "$tmp"' EXIT
@@ -22,8 +35,9 @@ trap 'rm -rf "$tmp"' EXIT
 PIMS_BENCH_JSON_DIR="$tmp" PIMS_BENCH_TARGET_MS="$target_ms" \
     cargo bench --bench hotpath_micro
 
+PIMS_BASELINE_FORCE="$force" \
 python3 - "$tmp/BENCH_hotpath_micro.json" BENCH_baseline.json <<'EOF'
-import json, platform, subprocess, sys
+import json, os, platform, subprocess, sys
 
 run_path, base_path = sys.argv[1], sys.argv[2]
 run = json.load(open(run_path))
@@ -54,6 +68,24 @@ def cpu_features():
     found = [f for f in watched if f in text.split() or f in text]
     return found or ["unknown"]
 
+
+old_features = base["meta"].get("cpu_features")
+new_features = cpu_features()
+if old_features is not None and set(old_features) != set(new_features):
+    msg = (
+        f"cpu_features changed: baseline was measured with "
+        f"{sorted(old_features)}, this machine has "
+        f"{sorted(new_features)}"
+    )
+    if os.environ.get("PIMS_BASELINE_FORCE") == "1":
+        print(f"WARNING: {msg} — overridden with --force")
+    else:
+        sys.exit(
+            f"REFUSING to re-anchor: {msg}.\n"
+            "Numbers from a different machine class would make the "
+            "bench-smoke regression gate meaningless. Re-run on the "
+            "baseline's runner class, or pass --force to override."
+        )
 
 base["notes"] = {k: run["notes"][k] for k in gated}
 rev = subprocess.run(

@@ -300,6 +300,40 @@ fn main() {
         }
     }
 
+    // --- registry plan cache: a warm hit vs a cold compile of the
+    // same (model, W:I, seed, kernel) key — the per-request cost a
+    // multi-model pool saves once a plan is resident (ISSUE 10;
+    // bench-smoke asserts the `plan_cache_speedup` note).
+    let cache = pims::registry::PlanCache::new(
+        u64::MAX,
+        pims::registry::EvictionPolicy::Lru,
+    );
+    let pkey = pims::registry::PlanKey {
+        model: "micro".to_string(),
+        w_bits: 1,
+        a_bits: 4,
+        seed: 0xE17,
+        kernel: GemmKernel::default(),
+    };
+    cache.get_or_compile(&pkey).unwrap();
+    let hit_ns = b
+        .iter("plan_cache_hit_vs_cold_compile", || {
+            black_box(cache.get_or_compile(&pkey).unwrap());
+        })
+        .mean_ns;
+    let cold_ns = b
+        .iter("plan_cold_compile_micro", || {
+            black_box(
+                ModelPlan::compile(cnn::micro_net(), 1, 4, 0xE17)
+                    .unwrap(),
+            );
+        })
+        .mean_ns;
+    b.note(
+        "plan_cache_speedup",
+        format!("{:.0}x", cold_ns / hit_ns.max(1.0)),
+    );
+
     // --- compressor tree popcount of one 512-bit row
     let bits: Vec<bool> = (0..512).map(|_| rng.chance(0.5)).collect();
     b.iter("tree_popcount_512", || {

@@ -74,6 +74,18 @@ pub fn charge_nv_checkpoint(cost: &mut CostBreakdown, bits: u64) {
     );
 }
 
+/// Charge `bits` of MTJ weight-plane writes into the ledger — the
+/// registry's model swap-in path: admitting a compiled plan writes its
+/// whole NV-resident weight bit-plane footprint into the sub-arrays.
+/// Energy-only, like the checkpoint writes it shares the SOT write
+/// port with.
+pub fn charge_model_swap_in(cost: &mut CostBreakdown, bits: u64) {
+    cost.add_energy_only(
+        components::MODEL_SWAP_IN,
+        bits as f64 * tech45::NV_WRITE_PJ,
+    );
+}
+
 /// Charge the engine lane schedule's H-tree traffic into the ledger —
 /// the interconnect cost of sub-array-parallel execution (operand
 /// broadcast out to the lanes, partial-sum merge back to the anchor).

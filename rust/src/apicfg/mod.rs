@@ -28,12 +28,13 @@ use anyhow::{Context, Result};
 
 use crate::arch::{ChipOrg, HTree};
 use crate::cli::{CadenceArg, LaneArg, Parsed};
-use crate::cnn::{self, Model};
+use crate::cnn::Model;
 use crate::configsys::{Config, Value};
 use crate::engine::{
     Calibration, GemmKernel, KernelDispatch, LaneSchedule, ModelPlan,
 };
 use crate::intermittency::TraceSpec;
+use crate::registry::{EvictionPolicy, ModelRegistry};
 
 /// Which serving backend a [`RunConfig`] launches.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -65,16 +66,11 @@ impl BackendKind {
 
 /// A model constructor by name — shared by `RunConfig`, `infer`, and
 /// `simulate` so every entry point speaks the same model vocabulary.
+/// Delegates to [`crate::registry`], the single source of truth for
+/// registered models ([`crate::registry::MODEL_NAMES`]); the error
+/// string and CLI help text both derive their vocabulary from it.
 pub fn model_by_name(name: &str) -> Result<Model> {
-    Ok(match name {
-        "micro" => cnn::micro_net(),
-        "svhn" => cnn::svhn_net(),
-        "alexnet" => cnn::alexnet(),
-        "lenet" => cnn::lenet(),
-        other => anyhow::bail!(
-            "unknown model '{other}' (micro|svhn|alexnet|lenet)"
-        ),
-    })
+    crate::registry::model_by_name(name)
 }
 
 /// Every config key [`RunConfig`] reads or writes; anything else in a
@@ -101,6 +97,8 @@ pub const KNOWN_KEYS: &[&str] = &[
     "engine.kernel",
     "engine.tile_patches",
     "engine.calibration",
+    "registry.capacity_bits",
+    "registry.policy",
     "nv.ckpt_period",
     "chaos.trace",
     "chaos.cycles_per_batch",
@@ -167,6 +165,15 @@ pub struct RunConfig {
     /// read when the schedule is resolved, not at validation (paths
     /// are machine-specific).
     pub calibration: Option<String>,
+    /// `registry.capacity_bits` — residency budget for cached weight
+    /// bit-planes across all models (DESIGN.md §14); 0 means "the
+    /// chip's NV sub-array capacity" ([`ChipOrg::capacity_bits`]).
+    pub registry_capacity_bits: u64,
+    /// `registry.policy` — what happens when an admission would
+    /// overflow the residency budget: `"lru"` evicts the
+    /// least-recently-used plan, `"pinned"` fails with a typed error.
+    /// Kept as the string so the config dumps/loads losslessly.
+    pub registry_policy: String,
     /// `nv.ckpt_period` — NV checkpoint cadence (tiles).
     pub ckpt_period: u64,
     /// `chaos.trace` — power-failure trace spec for chaos serving
@@ -215,6 +222,8 @@ impl Default for RunConfig {
             kernel: KernelDispatch::Auto,
             tile_patches: 16,
             calibration: None,
+            registry_capacity_bits: 0,
+            registry_policy: "lru".to_string(),
             ckpt_period: 4,
             chaos: None,
             chaos_cycles: 1,
@@ -345,6 +354,10 @@ impl RunConfig {
                 }
             }
         };
+        let registry_policy = match cfg.get("registry.policy") {
+            None => d.registry_policy.clone(),
+            Some(_) => cfg.str("registry.policy")?,
+        };
         let chaos = match cfg.get("chaos.trace") {
             None => None,
             Some(_) => {
@@ -448,6 +461,13 @@ impl RunConfig {
                 1,
             )? as usize,
             calibration,
+            registry_capacity_bits: int_key(
+                cfg,
+                "registry.capacity_bits",
+                d.registry_capacity_bits as i64,
+                0,
+            )? as u64,
+            registry_policy,
             ckpt_period: int_key(
                 cfg,
                 "nv.ckpt_period",
@@ -593,6 +613,14 @@ impl RunConfig {
                 Some(s.to_string())
             };
         }
+        if use_flag("registry-capacity-bits", "registry.capacity_bits") {
+            rc.registry_capacity_bits =
+                p.get_u64("registry-capacity-bits")?.unwrap_or(0);
+        }
+        if use_flag("registry-policy", "registry.policy") {
+            rc.registry_policy =
+                p.get("registry-policy").unwrap().to_string();
+        }
         if use_flag("ckpt", "nv.ckpt_period") {
             rc.ckpt_period = p.get_u64("ckpt")?.unwrap_or(4).max(1);
         }
@@ -674,6 +702,14 @@ impl RunConfig {
         anyhow::ensure!(
             self.tile_patches >= 1,
             "tile_patches must be >= 1"
+        );
+        self.registry_policy
+            .parse::<EvictionPolicy>()
+            .with_context(|| "registry.policy".to_string())?;
+        anyhow::ensure!(
+            self.registry_capacity_bits <= i64::MAX as u64,
+            "registry capacity_bits must fit the config format's \
+             integer range"
         );
         anyhow::ensure!(self.ckpt_period >= 1, "ckpt_period must be >= 1");
         anyhow::ensure!(
@@ -765,6 +801,13 @@ impl RunConfig {
             c.set("engine.calibration", &format!("\"{path}\""))
                 .expect(ok);
         }
+        c.set(
+            "registry.capacity_bits",
+            &self.registry_capacity_bits.to_string(),
+        )
+        .expect(ok);
+        c.set("registry.policy", &format!("\"{}\"", self.registry_policy))
+            .expect(ok);
         c.set("nv.ckpt_period", &self.ckpt_period.to_string())
             .expect(ok);
         if let Some(spec) = &self.chaos {
@@ -817,6 +860,38 @@ impl RunConfig {
     /// `engine.kernel` resolved through runtime feature detection.
     pub fn gemm_kernel(&self) -> GemmKernel {
         self.kernel.resolve()
+    }
+
+    /// Build the process-wide model registry this run serves from
+    /// (DESIGN.md §14): the shared plan cache keyed by `(model, W:I,
+    /// seed, kernel)` plus the residency accountant charging cached
+    /// weight bit-planes against the NV budget. `kernel` is the
+    /// RESOLVED kernel (see [`Self::gemm_kernel`]) so plans are keyed
+    /// by what actually executes on this host. A
+    /// `registry.capacity_bits` of 0 means the chip's own NV
+    /// sub-array capacity.
+    pub fn build_registry(
+        &self,
+        kernel: GemmKernel,
+    ) -> Result<ModelRegistry> {
+        let capacity = if self.registry_capacity_bits == 0 {
+            ChipOrg::default().capacity_bits()
+        } else {
+            self.registry_capacity_bits
+        };
+        let policy: EvictionPolicy = self
+            .registry_policy
+            .parse()
+            .map_err(|e| anyhow::anyhow!("registry.policy: {e}"))?;
+        ModelRegistry::new(
+            &self.model,
+            self.w_bits,
+            self.a_bits,
+            self.seed,
+            kernel,
+            capacity,
+            policy,
+        )
     }
 
     /// Resolve the lane knob against a compiled plan: fixed counts
@@ -942,7 +1017,7 @@ mod tests {
                     BackendKind::Pjrt
                 },
                 model: g
-                    .choose(&["micro", "svhn", "alexnet", "lenet"])
+                    .choose(&crate::registry::MODEL_NAMES)
                     .to_string(),
                 w_bits: g.u32(1, 8),
                 a_bits: g.u32(1, 8),
@@ -979,6 +1054,8 @@ mod tests {
                 } else {
                     Some(format!("/tmp/cal_{}.json", g.u32(0, 999)))
                 },
+                registry_capacity_bits: g.u32(0, 1_000_000) as u64,
+                registry_policy: g.choose(&["lru", "pinned"]).to_string(),
                 ckpt_period: g.u32(1, 64) as u64,
                 chaos,
                 chaos_cycles: g.u32(1, 16) as u64,
@@ -1037,6 +1114,8 @@ mod tests {
             "[engine]\nkernel = \"fast\"",
             "[engine]\nkernel = 3",
             "[chaos]\ntrace = \"nonsense\"",
+            "[registry]\npolicy = \"fifo\"",
+            "[registry]\ncapacity_bits = -1",
             "[fleet]\nnodes = 0",
             "[fleet]\njobs = 0",
             "[fleet]\ncadence = 0",
@@ -1078,6 +1157,34 @@ mod tests {
             LaneArg::Fixed(ChipOrg::default().parallel_subarrays()),
             "config lanes clamp to the chip like the CLI flag"
         );
+    }
+
+    #[test]
+    fn registry_keys_parse_and_build() {
+        let cfg = Config::parse(
+            "[run]\nmodel = \"micro\"\n\
+             [registry]\ncapacity_bits = 4096\npolicy = \"pinned\"\n",
+        )
+        .unwrap();
+        let rc = RunConfig::from_config(&cfg).unwrap();
+        assert_eq!(rc.registry_capacity_bits, 4096);
+        assert_eq!(rc.registry_policy, "pinned");
+        let reg = rc.build_registry(rc.gemm_kernel()).unwrap();
+        assert_eq!(reg.default_model(), "micro");
+        assert_eq!(reg.stats().capacity_bits, 4096);
+
+        // Default (0) resolves to the chip's NV sub-array capacity.
+        let d = RunConfig::default();
+        let reg = d.build_registry(d.gemm_kernel()).unwrap();
+        assert_eq!(
+            reg.stats().capacity_bits,
+            ChipOrg::default().capacity_bits()
+        );
+
+        let back =
+            RunConfig::from_config(&Config::parse(&rc.dump()).unwrap())
+                .unwrap();
+        assert_eq!(rc, back);
     }
 
     #[test]

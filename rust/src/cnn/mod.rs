@@ -26,6 +26,21 @@ pub enum Layer {
         /// Quantized (bit-wise) execution; first/last layers are not.
         quant: bool,
     },
+    /// Temporal (1-D) convolution over a `len x cin` sequence — the
+    /// keyword-spotting front end. Maps onto the same bitwise GEMM as
+    /// [`Layer::Conv`] with a 1-row feature map (h = 1, kh = 1), so no
+    /// dedicated engine path exists: im2col with `pad = 0` along the
+    /// time axis is exact.
+    Conv1d {
+        name: &'static str,
+        /// Input sequence length (time steps).
+        len: usize,
+        cin: usize,
+        cout: usize,
+        kernel: usize,
+        stride: usize,
+        quant: bool,
+    },
     /// Average pooling (window == stride).
     Pool { name: &'static str, in_hw: usize, c: usize, window: usize },
     /// Fully connected, "equivalently implemented by convolutional
@@ -37,16 +52,21 @@ impl Layer {
     pub fn name(&self) -> &'static str {
         match self {
             Layer::Conv { name, .. }
+            | Layer::Conv1d { name, .. }
             | Layer::Pool { name, .. }
             | Layer::Fc { name, .. } => name,
         }
     }
 
-    /// Output spatial size (square maps).
+    /// Output spatial size: square-map edge for 2-D layers, output
+    /// sequence length for [`Layer::Conv1d`].
     pub fn out_hw(&self) -> usize {
         match self {
             Layer::Conv { in_hw, kernel, stride, pad, .. } => {
                 (in_hw + 2 * pad - kernel) / stride + 1
+            }
+            Layer::Conv1d { len, kernel, stride, .. } => {
+                (len - kernel) / stride + 1
             }
             Layer::Pool { in_hw, window, .. } => in_hw / window,
             Layer::Fc { .. } => 1,
@@ -56,6 +76,7 @@ impl Layer {
     pub fn out_channels(&self) -> usize {
         match self {
             Layer::Conv { cout, .. } => *cout,
+            Layer::Conv1d { cout, .. } => *cout,
             Layer::Pool { c, .. } => *c,
             Layer::Fc { cout, .. } => *cout,
         }
@@ -68,6 +89,9 @@ impl Layer {
                 let o = self.out_hw() as u64;
                 o * o * (kernel * kernel * cin * cout) as u64
             }
+            Layer::Conv1d { cin, cout, kernel, .. } => {
+                self.out_hw() as u64 * (kernel * cin * cout) as u64
+            }
             Layer::Pool { .. } => 0,
             Layer::Fc { cin, cout, .. } => (cin * cout) as u64,
         }
@@ -79,6 +103,9 @@ impl Layer {
             Layer::Conv { cin, cout, kernel, .. } => {
                 (kernel * kernel * cin * cout) as u64
             }
+            Layer::Conv1d { cin, cout, kernel, .. } => {
+                (kernel * cin * cout) as u64
+            }
             Layer::Pool { .. } => 0,
             Layer::Fc { cin, cout, .. } => (cin * cout) as u64,
         }
@@ -87,7 +114,11 @@ impl Layer {
     /// Output activation element count.
     pub fn activations(&self) -> u64 {
         let o = self.out_hw() as u64;
-        o * o * self.out_channels() as u64
+        match self {
+            // 1-D outputs are o x c, not o^2 x c.
+            Layer::Conv1d { .. } => o * self.out_channels(),
+            _ => o * o * self.out_channels(),
+        }
     }
 
     /// GEMM view of the bitwise execution: (P, K, F) with P output
@@ -98,6 +129,9 @@ impl Layer {
                 let o = self.out_hw();
                 Some((o * o, kernel * kernel * cin, *cout))
             }
+            Layer::Conv1d { cin, cout, kernel, .. } => {
+                Some((self.out_hw(), kernel * cin, *cout))
+            }
             Layer::Fc { cin, cout, .. } => Some((1, *cin, *cout)),
             Layer::Pool { .. } => None,
         }
@@ -105,7 +139,9 @@ impl Layer {
 
     pub fn is_quant(&self) -> bool {
         match self {
-            Layer::Conv { quant, .. } | Layer::Fc { quant, .. } => *quant,
+            Layer::Conv { quant, .. }
+            | Layer::Conv1d { quant, .. }
+            | Layer::Fc { quant, .. } => *quant,
             Layer::Pool { .. } => false,
         }
     }
@@ -115,12 +151,32 @@ impl Layer {
 #[derive(Debug, Clone)]
 pub struct Model {
     pub name: &'static str,
+    /// Square-map input edge (2-D models). Ignored when
+    /// [`Model::input_len`] is set.
     pub input_hw: usize,
     pub input_c: usize,
+    /// Input sequence length for 1-D (temporal) models; `None` for the
+    /// square 2-D feature-map models.
+    pub input_len: Option<usize>,
     pub layers: Vec<Layer>,
 }
 
 impl Model {
+    /// Input geometry as the engine's (h, w, c) feature map: 1-D
+    /// models are a 1-row map of `len` time steps.
+    pub fn input_dims(&self) -> (usize, usize, usize) {
+        match self.input_len {
+            Some(len) => (1, len, self.input_c),
+            None => (self.input_hw, self.input_hw, self.input_c),
+        }
+    }
+
+    /// Flat f32 elements per input image/sequence.
+    pub fn input_elems(&self) -> usize {
+        let (h, w, c) = self.input_dims();
+        h * w * c
+    }
+
     pub fn total_macs(&self) -> u64 {
         self.layers.iter().map(Layer::macs).sum()
     }
@@ -195,6 +251,7 @@ pub fn svhn_net() -> Model {
         name: "svhn-bitwise",
         input_hw: 40,
         input_c: 3,
+        input_len: None,
         layers: vec![
             Layer::Conv { name: "conv1", in_hw: 40, cin: 3, cout: 16, kernel: 3, stride: 1, pad: 1, quant: false },
             Layer::Conv { name: "conv2", in_hw: 40, cin: 16, cout: 16, kernel: 3, stride: 1, pad: 1, quant: true },
@@ -218,6 +275,7 @@ pub fn alexnet() -> Model {
         name: "alexnet",
         input_hw: 227,
         input_c: 3,
+        input_len: None,
         layers: vec![
             Layer::Conv { name: "conv1", in_hw: 227, cin: 3, cout: 96, kernel: 11, stride: 4, pad: 0, quant: false },
             Layer::Pool { name: "pool1", in_hw: 55, c: 96, window: 2 },
@@ -240,6 +298,7 @@ pub fn lenet() -> Model {
         name: "lenet",
         input_hw: 28,
         input_c: 1,
+        input_len: None,
         layers: vec![
             Layer::Conv { name: "conv1", in_hw: 28, cin: 1, cout: 6, kernel: 5, stride: 1, pad: 2, quant: false },
             Layer::Pool { name: "pool1", in_hw: 28, c: 6, window: 2 },
@@ -260,10 +319,58 @@ pub fn micro_net() -> Model {
         name: "micro",
         input_hw: 8,
         input_c: 1,
+        input_len: None,
         layers: vec![
             Layer::Conv { name: "conv1", in_hw: 8, cin: 1, cout: 4, kernel: 3, stride: 1, pad: 1, quant: true },
             Layer::Pool { name: "pool1", in_hw: 8, c: 4, window: 2 },
             Layer::Fc { name: "fc1", cin: 4 * 4 * 4, cout: 10, quant: true },
+        ],
+    }
+}
+
+/// Deeper 5-conv-block CNN (32x32x3): five Conv3x3(pad 1) + avg-pool
+/// blocks widening 16→32→64→128→128, then a 128→10 classifier — the
+/// layer-config shape of the deeper-workload exemplar. First conv and
+/// classifier stay full precision (XNOR-net convention).
+pub fn deep5() -> Model {
+    Model {
+        name: "deep5",
+        input_hw: 32,
+        input_c: 3,
+        input_len: None,
+        layers: vec![
+            Layer::Conv { name: "conv1", in_hw: 32, cin: 3, cout: 16, kernel: 3, stride: 1, pad: 1, quant: false },
+            Layer::Pool { name: "pool1", in_hw: 32, c: 16, window: 2 },
+            Layer::Conv { name: "conv2", in_hw: 16, cin: 16, cout: 32, kernel: 3, stride: 1, pad: 1, quant: true },
+            Layer::Pool { name: "pool2", in_hw: 16, c: 32, window: 2 },
+            Layer::Conv { name: "conv3", in_hw: 8, cin: 32, cout: 64, kernel: 3, stride: 1, pad: 1, quant: true },
+            Layer::Pool { name: "pool3", in_hw: 8, c: 64, window: 2 },
+            Layer::Conv { name: "conv4", in_hw: 4, cin: 64, cout: 128, kernel: 3, stride: 1, pad: 1, quant: true },
+            Layer::Pool { name: "pool4", in_hw: 4, c: 128, window: 2 },
+            Layer::Conv { name: "conv5", in_hw: 2, cin: 128, cout: 128, kernel: 3, stride: 1, pad: 1, quant: true },
+            Layer::Pool { name: "pool5", in_hw: 2, c: 128, window: 2 },
+            Layer::Fc { name: "fc1", cin: 128, cout: 10, quant: false },
+        ],
+    }
+}
+
+/// 1-D-conv keyword-spotting model: a 49-step x 10-channel MFCC-style
+/// sequence through three temporal convolutions and a 12-way keyword
+/// classifier (10 keywords + silence + unknown). This is a `cnn` model
+/// served through the ordinary bitwise GEMM path — NOT related to the
+/// `asr/` module, which models the paper's approximate shift register.
+pub fn kws() -> Model {
+    Model {
+        name: "kws",
+        input_hw: 0,
+        input_c: 10,
+        input_len: Some(49),
+        layers: vec![
+            Layer::Conv1d { name: "tconv1", len: 49, cin: 10, cout: 16, kernel: 9, stride: 2, quant: false },
+            Layer::Conv1d { name: "tconv2", len: 21, cin: 16, cout: 32, kernel: 5, stride: 2, quant: true },
+            Layer::Conv1d { name: "tconv3", len: 9, cin: 32, cout: 32, kernel: 3, stride: 1, quant: true },
+            Layer::Fc { name: "fc1", cin: 7 * 32, cout: 64, quant: true },
+            Layer::Fc { name: "fc2", cin: 64, cout: 12, quant: false },
         ],
     }
 }
@@ -366,6 +473,34 @@ mod tests {
         // FC input must equal the flattened pool output.
         assert_eq!(m.layers[2].gemm_shape(), Some((1, 64, 10)));
         assert_eq!(m.layers.last().unwrap().out_channels(), 10);
+    }
+
+    #[test]
+    fn deep5_shapes_chain() {
+        let m = deep5();
+        assert_eq!(m.input_dims(), (32, 32, 3));
+        assert_eq!(m.input_elems(), 32 * 32 * 3);
+        // Each block halves the map: 32 -> 16 -> 8 -> 4 -> 2 -> 1.
+        assert_eq!(m.layers[9].out_hw(), 1);
+        // Classifier input is the flattened 1x1x128 map.
+        assert_eq!(m.layers[10].gemm_shape(), Some((1, 128, 10)));
+        assert_eq!(m.layers.last().unwrap().out_channels(), 10);
+    }
+
+    #[test]
+    fn kws_shapes_chain() {
+        let m = kws();
+        assert_eq!(m.input_dims(), (1, 49, 10));
+        assert_eq!(m.input_elems(), 490);
+        // Temporal chain: 49 -k9s2-> 21 -k5s2-> 9 -k3s1-> 7.
+        assert_eq!(m.layers[0].out_hw(), 21);
+        assert_eq!(m.layers[0].gemm_shape(), Some((21, 90, 16)));
+        assert_eq!(m.layers[1].out_hw(), 9);
+        assert_eq!(m.layers[2].out_hw(), 7);
+        // 1-D activations are len x c, not len^2 x c.
+        assert_eq!(m.layers[2].activations(), 7 * 32);
+        assert_eq!(m.layers[3].gemm_shape(), Some((1, 224, 64)));
+        assert_eq!(m.layers.last().unwrap().out_channels(), 12);
     }
 
     #[test]

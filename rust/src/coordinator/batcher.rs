@@ -74,19 +74,38 @@ impl ClassQueue {
         q.push_back(job);
     }
 
-    fn pop(&mut self) -> Option<QueuedJob> {
-        let tenant = self.rr.pop_front()?;
-        let q = self
-            .queues
-            .get_mut(&tenant)
-            .expect("rr tenants always have a queue");
-        let job = q.pop_front().expect("rr queues are never empty");
-        if q.is_empty() {
-            self.queues.remove(&tenant);
-        } else {
+    /// Pop the next job in tenant rotation whose model matches `want`
+    /// (`None` = the batch is still unfixed, any model starts it).
+    /// Tenants whose FRONT job targets another model are rotated past
+    /// — never popped around — so per-tenant FIFO order is preserved
+    /// while batches stay per-model (DESIGN.md §14).
+    fn pop_matching(
+        &mut self,
+        want: Option<&Option<Arc<str>>>,
+    ) -> Option<QueuedJob> {
+        for _ in 0..self.rr.len() {
+            let tenant = self.rr.pop_front()?;
+            let q = self
+                .queues
+                .get_mut(&tenant)
+                .expect("rr tenants always have a queue");
+            let front = q.front().expect("rr queues are never empty");
+            let matches = match want {
+                None => true,
+                Some(w) => &front.model == w,
+            };
+            if matches {
+                let job = q.pop_front().expect("front just observed");
+                if q.is_empty() {
+                    self.queues.remove(&tenant);
+                } else {
+                    self.rr.push_back(tenant);
+                }
+                return Some(job);
+            }
             self.rr.push_back(tenant);
         }
-        Some(job)
+        None
     }
 }
 
@@ -128,9 +147,15 @@ impl ClassBuffer {
     /// its weight in deficit and drains jobs until the deficit (or the
     /// class, or the batch) is exhausted. An idle class forfeits its
     /// deficit (classic DRR), so credit never accumulates while empty.
+    ///
+    /// Batches are per-model (DESIGN.md §14): the first job drawn
+    /// fixes the batch's model, and only jobs targeting it join this
+    /// batch — jobs for other models stay staged for a later batch.
     fn pop_batch(&mut self, batch: usize) -> Vec<QueuedJob> {
         let mut out = Vec::with_capacity(batch.min(self.len));
+        let mut want: Option<Option<Arc<str>>> = None;
         while out.len() < batch && self.len > 0 {
+            let before = out.len();
             for c in 0..NUM_PRIORITY_CLASSES {
                 if out.len() >= batch {
                     break;
@@ -141,8 +166,11 @@ impl ClassBuffer {
                 }
                 self.deficit[c] += self.weights[c];
                 while self.deficit[c] > 0 && out.len() < batch {
-                    match self.classes[c].pop() {
+                    match self.classes[c].pop_matching(want.as_ref()) {
                         Some(job) => {
+                            if want.is_none() {
+                                want = Some(job.model.clone());
+                            }
                             out.push(job);
                             self.len -= 1;
                             self.deficit[c] -= 1;
@@ -153,6 +181,11 @@ impl ClassBuffer {
                         }
                     }
                 }
+            }
+            // Everything still staged targets a different model than
+            // this batch: stop instead of spinning.
+            if out.len() == before {
+                break;
             }
         }
         out
@@ -251,12 +284,17 @@ impl Batcher {
             let now = Instant::now();
             let mut cancelled = 0u64;
             let mut expired = 0u64;
+            // (model, was_expired) of every dropped job, for the
+            // per-model accounting (submitted = served + dropped).
+            let mut dropped: Vec<(Option<Arc<str>>, bool)> = Vec::new();
             reqs.retain(|r| {
                 if r.cancelled.load(Ordering::Relaxed) {
                     cancelled += 1;
+                    dropped.push((r.model.clone(), false));
                     false
                 } else if r.deadline.is_some_and(|d| now > d) {
                     expired += 1;
+                    dropped.push((r.model.clone(), true));
                     false
                 } else {
                     true
@@ -266,6 +304,9 @@ impl Batcher {
                 let mut s = slot.stats.lock().unwrap();
                 s.counters.cancelled += cancelled;
                 s.counters.expired += expired;
+                for (model, was_expired) in &dropped {
+                    s.record_dropped(model.as_deref(), *was_expired);
+                }
             }
             if reqs.is_empty() {
                 slot.outstanding.fetch_sub(popped, Ordering::Relaxed);
@@ -276,14 +317,27 @@ impl Batcher {
             }
             let n = reqs.len();
 
+            // Per-model batches (DESIGN.md §14): pop_batch fixed one
+            // model for every row; size the operand rows to ITS
+            // geometry (multi-model backends report it, single-model
+            // backends use their own).
+            let model = reqs[0].model.clone();
+            let row_elems = model
+                .as_deref()
+                .and_then(|m| backend.model_geometry(m))
+                .map(|(e, _)| e)
+                .unwrap_or(elems);
+
             // Pad (zero rows) and execute the typed batch.
-            flat.iter_mut().for_each(|v| *v = 0.0);
+            flat.clear();
+            flat.resize(batch * row_elems, 0.0);
             for (i, r) in reqs.iter().enumerate() {
-                flat[i * elems..(i + 1) * elems]
+                flat[i * row_elems..(i + 1) * row_elems]
                     .copy_from_slice(r.job.image());
             }
             let kinds: Vec<JobKind> = reqs.iter().map(|r| r.job.kind()).collect();
-            let jobs = JobBatch::new(&flat, &kinds);
+            let jobs = JobBatch::new(&flat, &kinds)
+                .with_model(model.as_deref());
             let t0 = Instant::now();
             // Chaos mode: the trace may kill this worker mid-batch —
             // the execution's volatile results are lost before any
@@ -315,7 +369,12 @@ impl Batcher {
                     s.counters.batches += 1;
                     for (r, output) in reqs.drain(..).zip(outputs) {
                         let latency = r.enqueued_at.elapsed();
-                        s.record_served(latency, r.priority, r.job.kind());
+                        s.record_served(
+                            latency,
+                            r.priority,
+                            r.job.kind(),
+                            r.model.as_deref(),
+                        );
                         let sent = r.reply.send(Response {
                             id: r.id,
                             output,
@@ -358,6 +417,15 @@ mod tests {
     use std::sync::Arc;
 
     fn queued(priority: Priority, tenant: &str, id: u64) -> QueuedJob {
+        queued_for(priority, tenant, id, None)
+    }
+
+    fn queued_for(
+        priority: Priority,
+        tenant: &str,
+        id: u64,
+        model: Option<&str>,
+    ) -> QueuedJob {
         let (reply, _rx) = mpsc::channel::<Response>();
         // Leak the receiver side so sends in other tests never matter;
         // these jobs are only pushed/popped, never executed.
@@ -371,6 +439,7 @@ mod tests {
             cancelled: Arc::new(AtomicBool::new(false)),
             priority,
             tenant: Arc::from(tenant),
+            model: model.map(Arc::from),
         }
     }
 
@@ -438,5 +507,85 @@ mod tests {
         let mut buf = ClassBuffer::new([0, 0, 0]);
         buf.push(queued(Priority::Background, "t", 1));
         assert_eq!(buf.pop_batch(1).len(), 1, "clamped weight drains");
+    }
+
+    #[test]
+    fn batches_are_per_model() {
+        let mut buf = ClassBuffer::new([8, 4, 1]);
+        // Interleave two models in one tenant's FIFO plus a second
+        // tenant on one model.
+        for i in 0..3 {
+            buf.push(queued_for(Priority::Batch, "t", i, Some("micro")));
+            buf.push(queued_for(
+                Priority::Batch,
+                "t",
+                10 + i,
+                Some("lenet"),
+            ));
+        }
+        buf.push(queued_for(Priority::Batch, "u", 20, Some("micro")));
+        let first = buf.pop_batch(8);
+        let model0 = first[0].model.clone().unwrap();
+        assert!(
+            first.iter().all(|j| j.model.as_deref()
+                == Some(&*model0)),
+            "mixed models in one batch: {:?}",
+            first
+                .iter()
+                .map(|j| (j.id, j.model.clone()))
+                .collect::<Vec<_>>()
+        );
+        // Tenant t's FIFO only exposes its front, so the first batch
+        // holds t's leading run of model0 plus u's job if it matches.
+        let second = buf.pop_batch(8);
+        let model1 = second[0].model.clone().unwrap();
+        assert!(second
+            .iter()
+            .all(|j| j.model.as_deref() == Some(&*model1)));
+        // Everything drains across successive batches.
+        let mut total = first.len() + second.len();
+        while total < 7 {
+            let next = buf.pop_batch(8);
+            assert!(!next.is_empty(), "buffer stalled before draining");
+            let m = next[0].model.clone();
+            assert!(next.iter().all(|j| j.model == m));
+            total += next.len();
+        }
+        assert!(buf.is_empty());
+    }
+
+    #[test]
+    fn model_less_jobs_all_share_one_batch() {
+        let mut buf = ClassBuffer::new([8, 4, 1]);
+        for i in 0..5 {
+            buf.push(queued(Priority::Interactive, "t", i));
+        }
+        assert_eq!(buf.pop_batch(8).len(), 5);
+        assert!(buf.is_empty());
+    }
+
+    #[test]
+    fn per_tenant_fifo_survives_model_skips() {
+        let mut buf = ClassBuffer::new([1, 1, 1]);
+        // Tenant t: A, A, B, A — batches must never reorder within t.
+        for (i, m) in ["a", "a", "b", "a"].iter().enumerate() {
+            buf.push(queued_for(
+                Priority::Batch,
+                "t",
+                i as u64,
+                Some(m),
+            ));
+        }
+        let b1 = buf.pop_batch(8);
+        assert_eq!(
+            b1.iter().map(|j| j.id).collect::<Vec<_>>(),
+            vec![0, 1],
+            "first batch takes t's leading model-a run only"
+        );
+        let b2 = buf.pop_batch(8);
+        assert_eq!(b2.iter().map(|j| j.id).collect::<Vec<_>>(), vec![2]);
+        let b3 = buf.pop_batch(8);
+        assert_eq!(b3.iter().map(|j| j.id).collect::<Vec<_>>(), vec![3]);
+        assert!(buf.is_empty());
     }
 }

@@ -33,6 +33,7 @@ use anyhow::Result;
 use super::job::{Priority, NUM_PRIORITY_CLASSES};
 use super::metrics_agg::MetricsHub;
 use super::{Job, Pending, QosPolicy, QueuedJob, Response, SubmitOpts};
+use crate::registry::ModelRegistry;
 
 /// Typed admission rejection — distinguishable by callers (the TCP
 /// server maps each variant to an `overload` wire frame) and all
@@ -80,6 +81,10 @@ pub(super) struct Ingress {
     shed_at: [usize; NUM_PRIORITY_CLASSES],
     /// Max in-flight jobs per tenant; 0 disables the quota.
     tenant_quota: u64,
+    /// Registry of a multi-model pool: per-job model selection is
+    /// resolved and geometry-validated against it. `None` = the pool
+    /// serves a single model and rejects model-routed jobs.
+    registry: Option<Arc<ModelRegistry>>,
 }
 
 impl Ingress {
@@ -89,6 +94,7 @@ impl Ingress {
         input_elems: usize,
         capacity: usize,
         qos: &QosPolicy,
+        registry: Option<Arc<ModelRegistry>>,
     ) -> Self {
         let capacity = capacity.max(1);
         let mut shed_at = [usize::MAX; NUM_PRIORITY_CLASSES];
@@ -108,6 +114,7 @@ impl Ingress {
             capacity,
             shed_at,
             tenant_quota: qos.tenant_quota,
+            registry,
         }
     }
 
@@ -143,11 +150,30 @@ impl Ingress {
         id: u64,
         reply: Sender<Response>,
     ) -> Result<Arc<AtomicBool>> {
+        // Resolve the job's model (DESIGN.md §14): with a registry,
+        // every job targets a registered model (the default when none
+        // is named) and is geometry-checked against THAT model;
+        // without one, model-routed jobs are rejected up front.
+        let (model, expect_elems) = match &self.registry {
+            Some(reg) => {
+                let name = reg.resolve(job.model())?;
+                let (elems, _) = reg.geometry(&name)?;
+                (Some(name), elems)
+            }
+            None => {
+                anyhow::ensure!(
+                    job.model().is_none(),
+                    "this pool serves a single model (no registry); \
+                     cannot route to '{}'",
+                    job.model().unwrap_or_default()
+                );
+                (None, self.input_elems)
+            }
+        };
         anyhow::ensure!(
-            job.image().len() == self.input_elems,
-            "image has {} elems, model expects {}",
+            job.image().len() == expect_elems,
+            "image has {} elems, model expects {expect_elems}",
             job.image().len(),
-            self.input_elems
         );
         if let Job::TopK { k, .. } = &job {
             anyhow::ensure!(*k >= 1, "top-k requires k >= 1");
@@ -182,6 +208,7 @@ impl Ingress {
             cancelled: cancelled.clone(),
             priority: opts.priority,
             tenant: Arc::from(opts.tenant.as_str()),
+            model,
         };
         let mut disconnected = 0usize;
         for w in self.dispatch_order() {

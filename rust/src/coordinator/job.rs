@@ -99,6 +99,10 @@ pub enum Job {
     TopK { image: Vec<f32>, k: usize },
     /// Classify one image and attach a per-request energy audit.
     EnergyAudit(Vec<f32>),
+    /// Route the inner job to a named registered model instead of the
+    /// config's default (DESIGN.md §14). Absent wrapper = default
+    /// model, so every pre-registry caller is untouched.
+    ForModel { model: String, job: Box<Job> },
 }
 
 impl Job {
@@ -109,17 +113,39 @@ impl Job {
             | Job::Logits(img)
             | Job::EnergyAudit(img) => img,
             Job::TopK { image, .. } => image,
+            Job::ForModel { job, .. } => job.image(),
         }
     }
 
-    /// The payload-free kind tag a backend batches over.
+    /// The payload-free kind tag a backend batches over (the model
+    /// wrapper is routing, not a kind — it delegates to the inner
+    /// job).
     pub fn kind(&self) -> JobKind {
         match self {
             Job::Classify(_) => JobKind::Classify,
             Job::Logits(_) => JobKind::Logits,
             Job::TopK { k, .. } => JobKind::TopK(*k),
             Job::EnergyAudit(_) => JobKind::EnergyAudit,
+            Job::ForModel { job, .. } => job.kind(),
         }
+    }
+
+    /// The model this job selects, if any (`None` = config default).
+    pub fn model(&self) -> Option<&str> {
+        match self {
+            Job::ForModel { model, .. } => Some(model),
+            _ => None,
+        }
+    }
+
+    /// Wrap this job for a named model (an existing wrapper is
+    /// re-targeted, not nested).
+    pub fn for_model(self, model: impl Into<String>) -> Job {
+        let inner = match self {
+            Job::ForModel { job, .. } => job,
+            other => Box::new(other),
+        };
+        Job::ForModel { model: model.into(), job: inner }
     }
 }
 
@@ -161,13 +187,26 @@ impl JobKind {
 pub struct JobBatch<'a> {
     flat: &'a [f32],
     kinds: &'a [JobKind],
+    model: Option<&'a str>,
 }
 
 impl<'a> JobBatch<'a> {
     /// `flat` holds `batch_size * input_elems` values (zero-padded);
     /// `kinds` has one entry per occupied row, in row order.
     pub fn new(flat: &'a [f32], kinds: &'a [JobKind]) -> JobBatch<'a> {
-        JobBatch { flat, kinds }
+        JobBatch { flat, kinds, model: None }
+    }
+
+    /// Tag the batch with the model every row targets (batches are
+    /// per-model; `None` = the backend's default model).
+    pub fn with_model(mut self, model: Option<&'a str>) -> JobBatch<'a> {
+        self.model = model;
+        self
+    }
+
+    /// The model every row of this batch targets (`None` = default).
+    pub fn model(&self) -> Option<&'a str> {
+        self.model
     }
 
     /// The padded operand rows (`batch_size * input_elems` values).
@@ -338,6 +377,29 @@ mod tests {
         ] {
             assert_eq!(j.image(), &img[..]);
         }
+    }
+
+    #[test]
+    fn model_wrapper_delegates_and_retargets() {
+        let img = vec![0.5f32; 4];
+        let plain = Job::TopK { image: img.clone(), k: 2 };
+        assert_eq!(plain.model(), None);
+        let routed = plain.for_model("lenet");
+        assert_eq!(routed.model(), Some("lenet"));
+        assert_eq!(routed.kind(), JobKind::TopK(2));
+        assert_eq!(routed.image(), &img[..]);
+        // re-targeting replaces the wrapper instead of nesting
+        let retargeted = routed.for_model("kws");
+        assert_eq!(retargeted.model(), Some("kws"));
+        match &retargeted {
+            Job::ForModel { job, .. } => {
+                assert!(job.model().is_none(), "wrapper nested")
+            }
+            _ => panic!("expected wrapper"),
+        }
+        let b = JobBatch::new(&[], &[]).with_model(Some("kws"));
+        assert_eq!(b.model(), Some("kws"));
+        assert_eq!(JobBatch::new(&[], &[]).model(), None);
     }
 
     #[test]

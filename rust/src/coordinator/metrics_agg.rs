@@ -18,7 +18,7 @@
 //! per-class p50/p95/p99 in a snapshot are deterministic regardless of
 //! worker interleaving.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
@@ -42,8 +42,34 @@ pub struct ServeMetrics {
     /// Gauge: requests admitted but not yet answered (queued or in a
     /// batch), summed over workers, at snapshot time.
     pub queue_depth: usize,
+    /// Per-model serving stats (DESIGN.md §14): job counters and
+    /// latency histograms keyed by resolved model name. Empty on
+    /// single-model pools (no registry — jobs carry no model).
+    pub by_model: BTreeMap<String, ModelStats>,
     /// Per-worker view, indexed by worker id.
     pub per_worker: Vec<WorkerSnapshot>,
+}
+
+/// One model's share of the serving stats: every job the ingress
+/// resolved to this model is accounted here exactly once — served,
+/// cancelled-before-execution, or deadline-expired.
+#[derive(Debug, Default, Clone)]
+pub struct ModelStats {
+    pub served: u64,
+    pub cancelled: u64,
+    pub expired: u64,
+    /// End-to-end latency histogram of the served jobs (p50/p95/p99
+    /// via the deterministic integer merge).
+    pub latency: LogHistogram,
+}
+
+impl ModelStats {
+    fn merge(&mut self, other: &ModelStats) {
+        self.served += other.served;
+        self.cancelled += other.cancelled;
+        self.expired += other.expired;
+        self.latency.merge(&other.latency);
+    }
 }
 
 /// Wire / report spellings of the job-kind histogram slots, in
@@ -114,6 +140,17 @@ impl ServeMetrics {
         for (i, name) in JOB_KIND_NAMES.iter().enumerate() {
             by_kind.insert(name.to_string(), hist(&self.by_kind[i]));
         }
+        let mut by_model = std::collections::BTreeMap::new();
+        for (name, s) in &self.by_model {
+            let mut o = match hist(&s.latency) {
+                Json::Obj(o) => o,
+                _ => unreachable!("hist always returns an object"),
+            };
+            o.insert("served".to_string(), num(s.served));
+            o.insert("cancelled".to_string(), num(s.cancelled));
+            o.insert("expired".to_string(), num(s.expired));
+            by_model.insert(name.clone(), Json::Obj(o));
+        }
         let per_worker: Vec<Json> = self
             .per_worker
             .iter()
@@ -143,6 +180,7 @@ impl ServeMetrics {
         );
         root.insert("by_class".to_string(), Json::Obj(by_class));
         root.insert("by_kind".to_string(), Json::Obj(by_kind));
+        root.insert("by_model".to_string(), Json::Obj(by_model));
         root.insert("per_worker".to_string(), Json::Arr(per_worker));
         Json::Obj(root)
     }
@@ -171,22 +209,51 @@ pub(super) struct WorkerStats {
     pub exec_latency: LatencyRecorder,
     pub by_class: [LogHistogram; NUM_PRIORITY_CLASSES],
     pub by_kind: [LogHistogram; NUM_JOB_KINDS],
+    /// Per-model stats keyed by resolved model name; only populated on
+    /// multi-model pools (registry-resolved jobs carry `Some(model)`).
+    pub by_model: BTreeMap<String, ModelStats>,
 }
 
 impl WorkerStats {
     /// Record one served reply's end-to-end latency into the exact
-    /// recorder and both QoS histograms.
+    /// recorder, both QoS histograms, and (on multi-model pools) the
+    /// model's own counter + histogram.
     pub(super) fn record_served(
         &mut self,
         latency: std::time::Duration,
         priority: Priority,
         kind: JobKind,
+        model: Option<&str>,
     ) {
         self.latency.record(latency);
         let ns = latency.as_nanos() as u64;
         self.by_class[priority.index()].record_ns(ns);
         self.by_kind[kind.index()].record_ns(ns);
         self.counters.served += 1;
+        if let Some(m) = model {
+            let e = self.by_model.entry(m.to_string()).or_default();
+            e.served += 1;
+            e.latency.record_ns(ns);
+        }
+    }
+
+    /// Record one admitted-but-never-served job against its model, so
+    /// `submitted = served + cancelled + expired` balances per model.
+    /// The pool-wide cancelled/expired counters are bumped by the
+    /// batcher; this only maintains the per-model split.
+    pub(super) fn record_dropped(
+        &mut self,
+        model: Option<&str>,
+        expired: bool,
+    ) {
+        if let Some(m) = model {
+            let e = self.by_model.entry(m.to_string()).or_default();
+            if expired {
+                e.expired += 1;
+            } else {
+                e.cancelled += 1;
+            }
+        }
     }
 }
 
@@ -313,6 +380,12 @@ impl MetricsHub {
             for (a, b) in m.by_kind.iter_mut().zip(&s.by_kind) {
                 a.merge(b);
             }
+            for (name, stats) in &s.by_model {
+                m.by_model
+                    .entry(name.clone())
+                    .or_default()
+                    .merge(stats);
+            }
             let outstanding = slot.outstanding.load(Ordering::Relaxed);
             m.queue_depth += outstanding;
             m.per_worker.push(WorkerSnapshot {
@@ -347,12 +420,15 @@ mod tests {
                 Duration::from_micros(10),
                 Priority::Interactive,
                 JobKind::Classify,
+                Some("micro"),
             );
             s.record_served(
                 Duration::from_micros(20),
                 Priority::Background,
                 JobKind::TopK(3),
+                Some("lenet"),
             );
+            s.record_dropped(Some("micro"), true);
             s.counters.served += 1; // one more without a histogram row
         }
         {
@@ -389,6 +465,11 @@ mod tests {
         assert_eq!(m.counters.expired, 0);
         assert_eq!(m.dropped_replies(), 2);
         assert_eq!(m.per_worker[1].outstanding, 4);
+        assert_eq!(m.by_model.len(), 2);
+        let micro = &m.by_model["micro"];
+        assert_eq!((micro.served, micro.expired), (1, 1));
+        assert_eq!(micro.latency.count(), 1);
+        assert_eq!(m.by_model["lenet"].served, 1);
     }
 
     #[test]
@@ -429,7 +510,10 @@ mod tests {
                 Duration::from_micros(50),
                 Priority::Interactive,
                 JobKind::Classify,
+                Some("micro"),
             );
+            s.record_dropped(Some("micro"), false);
+            s.record_dropped(None, false); // single-model pool: no-op
         }
         let j = hub.snapshot().to_json();
         let text = j.dump();
@@ -457,5 +541,20 @@ mod tests {
             Some(0.0)
         );
         assert!(back.get("per_worker").is_some());
+        let micro = back
+            .get("by_model")
+            .and_then(|b| b.get("micro"))
+            .expect("per-model block present");
+        assert_eq!(micro.get("served").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(
+            micro.get("cancelled").and_then(Json::as_f64),
+            Some(1.0)
+        );
+        assert_eq!(micro.get("expired").and_then(Json::as_f64), Some(0.0));
+        assert_eq!(micro.get("count").and_then(Json::as_f64), Some(1.0));
+        assert!(
+            micro.get("p99_ns").and_then(Json::as_f64).unwrap()
+                >= 50_000.0
+        );
     }
 }

@@ -52,6 +52,7 @@ mod dispatch;
 mod ingress;
 mod job;
 mod metrics_agg;
+mod multimodel;
 mod pimsim;
 mod pool;
 
@@ -62,7 +63,10 @@ pub use job::{
     EnergyAudit, Job, JobBatch, JobKind, JobOutput, Priority,
     NUM_JOB_KINDS, NUM_PRIORITY_CLASSES,
 };
-pub use metrics_agg::{ServeMetrics, WorkerSnapshot, JOB_KIND_NAMES};
+pub use metrics_agg::{
+    ModelStats, ServeMetrics, WorkerSnapshot, JOB_KIND_NAMES,
+};
+pub use multimodel::{LaneSetup, MultiModelBackend};
 pub use pimsim::PimSimBackend;
 // The resumable engine moved to `crate::engine` (DESIGN.md §7). The
 // names stay importable from here, but construction/resume now go
@@ -82,6 +86,7 @@ use anyhow::Result;
 
 use crate::apicfg::{BackendKind, RunConfig};
 use crate::cli::LaneArg;
+use crate::registry::ModelRegistry;
 
 use ingress::Ingress;
 use metrics_agg::MetricsHub;
@@ -139,6 +144,15 @@ pub trait Backend {
         Ok(out)
     }
 
+    /// Per-model geometry of a multi-model backend: the
+    /// `(input_elems, num_classes)` a batch targeting `model` uses
+    /// (DESIGN.md §14). Single-model backends — the default — serve
+    /// only their own geometry and return `None` for every name; the
+    /// batcher then sizes batches off [`Backend::input_elems`].
+    fn model_geometry(&self, _model: &str) -> Option<(usize, usize)> {
+        None
+    }
+
     /// Per-frame energy attribution for [`Job::EnergyAudit`] replies.
     /// The default reports the scalar per-request energy as one
     /// component; backends with real accounting (the PIM co-sim)
@@ -175,6 +189,10 @@ pub(crate) struct QueuedJob {
     /// Tenant for fair-share rotation and quota release (shared,
     /// not cloned per hop — the hot path stays allocation-light).
     pub(crate) tenant: Arc<str>,
+    /// Resolved model this job targets. Always `Some` when the pool
+    /// serves a model registry (the ingress resolves the default),
+    /// `None` on single-model pools. Batches are per-model.
+    pub(crate) model: Option<Arc<str>>,
 }
 
 /// Completed job (the v2 reply).
@@ -278,6 +296,9 @@ pub struct Coordinator {
     workers: Vec<JoinHandle<()>>,
     batch: usize,
     num_classes: usize,
+    /// The model registry behind a multi-model pool (`None` for
+    /// single-model backends). Exposes plan-cache/residency stats.
+    registry: Option<Arc<ModelRegistry>>,
 }
 
 /// Client-side handle to one in-flight job. Dropping it cancels the
@@ -323,9 +344,7 @@ impl Coordinator {
         cfg.validate()?;
         match cfg.backend {
             BackendKind::PimSim => {
-                let model = cfg.build_model()?;
-                let (w_bits, a_bits) = (cfg.w_bits, cfg.a_bits);
-                let (batch, seed, lanes) = (cfg.batch, cfg.seed, cfg.lanes);
+                let batch = cfg.batch;
                 // Resolve the kernel dispatch once so every replica
                 // executes the same tier (auto picks per this host).
                 let kernel = cfg.gemm_kernel();
@@ -333,31 +352,33 @@ impl Coordinator {
                 // a bad `engine.calibration` path fails launch instead
                 // of every worker, and all replicas tune against the
                 // same table.
-                let calibration = match (&cfg.lanes, &cfg.calibration) {
+                let lanes = match (&cfg.lanes, &cfg.calibration) {
                     (LaneArg::Auto, Some(path)) => {
-                        Some(crate::engine::Calibration::load(path)?)
+                        LaneSetup::AutoCalibrated(Arc::new(
+                            crate::engine::Calibration::load(path)?,
+                        ))
                     }
-                    _ => None,
+                    (LaneArg::Auto, None) => LaneSetup::Auto,
+                    (LaneArg::Fixed(n), _) => LaneSetup::Fixed(*n),
                 };
-                Self::launch_pool(cfg, move |_worker| {
-                    // Same seed on every worker: bit-identical
-                    // replicas for any lane schedule.
-                    let b = PimSimBackend::new(
-                        model.clone(),
-                        w_bits,
-                        a_bits,
-                        batch,
-                        seed,
-                    )?
-                    .with_kernel(kernel);
-                    Ok(match (lanes, &calibration) {
-                        (LaneArg::Auto, Some(cal)) => {
-                            b.with_auto_lanes_calibrated(cal)
-                        }
-                        (LaneArg::Auto, None) => b.with_auto_lanes(),
-                        (LaneArg::Fixed(n), _) => b.with_lanes(n),
-                    })
-                })
+                // One process-wide registry (DESIGN.md §14): workers
+                // share compiled plans through its cache — same seed
+                // everywhere, so replicas stay bit-identical — and its
+                // residency accountant charges every cached plan
+                // against sub-array capacity.
+                let registry = Arc::new(cfg.build_registry(kernel)?);
+                let reg = registry.clone();
+                Self::launch_pool_registry(
+                    cfg,
+                    Some(registry),
+                    move |_worker| {
+                        MultiModelBackend::new(
+                            reg.clone(),
+                            batch,
+                            lanes.clone(),
+                        )
+                    },
+                )
             }
             BackendKind::Pjrt => {
                 let chaos_requested =
@@ -407,6 +428,21 @@ impl Coordinator {
         F: Fn(usize) -> Result<B> + Send + Sync + 'static,
         B: Backend + 'static,
     {
+        Self::launch_pool_registry(cfg, None, factory)
+    }
+
+    /// [`Coordinator::launch_pool`] with an attached model registry:
+    /// the ingress validates per-job model selection against it and
+    /// the handle exposes its plan-cache stats ([`Coordinator::registry`]).
+    fn launch_pool_registry<F, B>(
+        cfg: &RunConfig,
+        registry: Option<Arc<ModelRegistry>>,
+        factory: F,
+    ) -> Result<Coordinator>
+    where
+        F: Fn(usize) -> Result<B> + Send + Sync + 'static,
+        B: Backend + 'static,
+    {
         anyhow::ensure!(cfg.workers >= 1, "pool needs at least one worker");
         let chaos = match &cfg.chaos {
             Some(spec) if !spec.is_empty() => {
@@ -434,7 +470,7 @@ impl Coordinator {
                 Box::new(move || f(w)) as pool::BackendMaker<B>
             })
             .collect();
-        Self::start_boxed_inner(makers, policy, cfg.queue, qos, chaos)
+        Self::start_boxed_inner(makers, policy, cfg.queue, qos, chaos, registry)
     }
 
     fn start_boxed_inner<B: Backend + 'static>(
@@ -443,6 +479,7 @@ impl Coordinator {
         queue_depth: usize,
         qos: QosPolicy,
         chaos: Option<ChaosPolicy>,
+        registry: Option<Arc<ModelRegistry>>,
     ) -> Result<Coordinator> {
         let hub = Arc::new(MetricsHub::new(makers.len()));
         let stop = Arc::new(AtomicBool::new(false));
@@ -460,6 +497,7 @@ impl Coordinator {
             pool.geometry.input_elems,
             queue_depth,
             &qos,
+            registry.clone(),
         );
         Ok(Coordinator {
             ingress: Some(ingress),
@@ -468,6 +506,7 @@ impl Coordinator {
             workers: pool.handles,
             batch: pool.geometry.batch,
             num_classes: pool.geometry.num_classes,
+            registry,
         })
     }
 
@@ -561,6 +600,12 @@ impl Coordinator {
 
     pub fn worker_count(&self) -> usize {
         self.workers.len()
+    }
+
+    /// The model registry behind a multi-model pool (plan-cache and
+    /// residency stats; `None` for single-model backends).
+    pub fn registry(&self) -> Option<&Arc<ModelRegistry>> {
+        self.registry.as_ref()
     }
 
     /// Drain and stop: closes admission, waits for every worker to

@@ -1,0 +1,343 @@
+//! Multi-model PIM serving backend (DESIGN.md §14): one worker-owned
+//! façade over per-model [`PimSimBackend`]s, all compiling through the
+//! process-wide [`ModelRegistry`] plan cache.
+//!
+//! The batcher hands this backend per-model batches
+//! ([`JobBatch::model`]); the backend resolves the batch's model
+//! through the registry — a cache hit shares the compiled
+//! [`crate::engine::ModelPlan`] across every worker, a miss compiles
+//! once and charges MTJ swap-in energy, and an admission past the
+//! residency budget evicts (LRU) or fails (pinned). The registry's
+//! admission *stamp* is checked per batch: a plan that was evicted and
+//! re-admitted since this worker last ran its model gets a rebuilt
+//! worker backend, so eviction churn can never serve stale state —
+//! and bit-identity holds because a recompiled plan is byte-identical
+//! to the cached one (seeded procedural weights).
+//!
+//! Pool geometry handshake: every worker reports the DEFAULT model's
+//! `(batch, input_elems, num_classes)` uniformly; per-model geometry
+//! flows through [`Backend::model_geometry`] instead.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::engine::Calibration;
+use crate::registry::ModelRegistry;
+
+use super::{Backend, EnergyAudit, JobBatch, JobOutput, PimSimBackend};
+
+/// How each per-model worker backend picks its engine lane schedule —
+/// the launch-time `(lanes, calibration)` resolution, made cloneable
+/// so every worker (and every model within a worker) applies the same
+/// policy.
+#[derive(Clone)]
+pub enum LaneSetup {
+    Fixed(usize),
+    Auto,
+    AutoCalibrated(Arc<Calibration>),
+}
+
+impl LaneSetup {
+    fn apply(&self, b: PimSimBackend) -> PimSimBackend {
+        match self {
+            LaneSetup::Fixed(n) => b.with_lanes(*n),
+            LaneSetup::Auto => b.with_auto_lanes(),
+            LaneSetup::AutoCalibrated(cal) => {
+                b.with_auto_lanes_calibrated(cal)
+            }
+        }
+    }
+}
+
+/// One worker's multi-model executor: per-model [`PimSimBackend`]s
+/// built lazily from registry-cached plans, keyed by model name and
+/// invalidated by admission stamp.
+pub struct MultiModelBackend {
+    registry: Arc<ModelRegistry>,
+    batch: usize,
+    lanes: LaneSetup,
+    /// model name -> (worker backend, registry admission stamp it was
+    /// built from).
+    inner: HashMap<String, (PimSimBackend, u64)>,
+    /// Default-model geometry, reported uniformly at the pool
+    /// handshake.
+    default_elems: usize,
+    default_classes: usize,
+    /// Per-request energy of the last executed batch's model (the
+    /// batcher reads it right after `run_batch`).
+    last_energy_uj: f64,
+}
+
+impl MultiModelBackend {
+    /// Build a worker backend over `registry`. The default model is
+    /// compiled (or cache-hit) eagerly so a broken configuration
+    /// fails the pool handshake instead of the first request.
+    pub fn new(
+        registry: Arc<ModelRegistry>,
+        batch: usize,
+        lanes: LaneSetup,
+    ) -> Result<MultiModelBackend> {
+        let default = registry.default_model().to_string();
+        let (default_elems, default_classes) =
+            registry.geometry(&default)?;
+        let mut b = MultiModelBackend {
+            registry,
+            batch,
+            lanes,
+            inner: HashMap::new(),
+            default_elems,
+            default_classes,
+            last_energy_uj: 0.0,
+        };
+        let eager = b.backend_for(&default)?.energy_uj_per_request();
+        b.last_energy_uj = eager;
+        Ok(b)
+    }
+
+    /// The worker backend for `model`, rebuilt when the registry's
+    /// admission stamp moved (evicted + re-admitted plan).
+    fn backend_for(&mut self, model: &str) -> Result<&mut PimSimBackend> {
+        let (plan, stamp) = self.registry.plan_for(model)?;
+        let fresh = match self.inner.get(model) {
+            Some((_, s)) => *s != stamp,
+            None => true,
+        };
+        if fresh {
+            let backend =
+                PimSimBackend::from_plan(plan, self.batch)?
+                    .with_kernel(self.registry.kernel());
+            self.inner
+                .insert(model.to_string(), (self.lanes.apply(backend), stamp));
+        }
+        Ok(&mut self
+            .inner
+            .get_mut(model)
+            .expect("entry inserted above")
+            .0)
+    }
+
+    /// Registered models this worker has built backends for.
+    pub fn resident_models(&self) -> usize {
+        self.inner.len()
+    }
+}
+
+impl Backend for MultiModelBackend {
+    fn infer_batch(&mut self, flat: &[f32]) -> Result<Vec<f32>> {
+        let default = self.registry.default_model().to_string();
+        self.backend_for(&default)?.infer_batch(flat)
+    }
+
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    fn input_elems(&self) -> usize {
+        self.default_elems
+    }
+
+    fn num_classes(&self) -> usize {
+        self.default_classes
+    }
+
+    fn energy_uj_per_request(&self) -> f64 {
+        self.last_energy_uj
+    }
+
+    fn model_geometry(&self, model: &str) -> Option<(usize, usize)> {
+        self.registry.geometry(model).ok()
+    }
+
+    fn run_batch(&mut self, jobs: &JobBatch) -> Result<Vec<JobOutput>> {
+        let model = jobs
+            .model()
+            .unwrap_or(self.registry.default_model())
+            .to_string();
+        let backend = self.backend_for(&model)?;
+        let out = backend.run_batch(jobs)?;
+        self.last_energy_uj = backend.energy_uj_per_request();
+        Ok(out)
+    }
+
+    fn frame_audit(&self) -> EnergyAudit {
+        // Only reachable through a per-model backend's own run_batch
+        // (which audits itself); fall back to the scalar default.
+        EnergyAudit::from_scalar(self.last_energy_uj)
+    }
+
+    fn power_fail_restore(&mut self) {
+        for (b, _) in self.inner.values_mut() {
+            b.power_fail_restore();
+        }
+    }
+
+    fn nv_commit(&mut self) {
+        for (b, _) in self.inner.values_mut() {
+            b.nv_commit();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::JobKind;
+    use crate::engine::{GemmKernel, TileScheduler};
+    use crate::registry::{model_by_name, EvictionPolicy};
+
+    fn registry(default: &str, capacity: u64) -> Arc<ModelRegistry> {
+        Arc::new(
+            ModelRegistry::new(
+                default,
+                1,
+                4,
+                0xD0,
+                GemmKernel::default(),
+                capacity,
+                EvictionPolicy::Lru,
+            )
+            .unwrap(),
+        )
+    }
+
+    fn img(elems: usize, phase: usize) -> Vec<f32> {
+        (0..elems).map(|i| ((i + phase) % 13) as f32 / 12.0).collect()
+    }
+
+    #[test]
+    fn reports_default_geometry_and_per_model_geometry() {
+        let b = MultiModelBackend::new(
+            registry("micro", u64::MAX),
+            2,
+            LaneSetup::Fixed(1),
+        )
+        .unwrap();
+        assert_eq!(b.batch_size(), 2);
+        assert_eq!(b.input_elems(), 64);
+        assert_eq!(b.num_classes(), 10);
+        assert_eq!(b.model_geometry("kws"), Some((490, 12)));
+        assert_eq!(b.model_geometry("lenet"), Some((784, 10)));
+        assert_eq!(b.model_geometry("resnet"), None);
+        assert_eq!(b.resident_models(), 1, "default compiled eagerly");
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)] // full forwards are too slow interpreted
+    fn routes_batches_per_model_bit_identically() {
+        let reg = registry("micro", u64::MAX);
+        let mut b =
+            MultiModelBackend::new(reg.clone(), 1, LaneSetup::Fixed(1))
+                .unwrap();
+        let sched = TileScheduler::new(1);
+        for (model, elems) in [("micro", 64usize), ("lenet", 784)] {
+            let image = img(elems, 1);
+            let kinds = [JobKind::Logits];
+            let jobs = JobBatch::new(&image, &kinds)
+                .with_model(Some(model));
+            let out = b.run_batch(&jobs).unwrap();
+            let want = crate::engine::ModelPlan::compile(
+                model_by_name(model).unwrap(),
+                1,
+                4,
+                0xD0,
+            )
+            .unwrap()
+            .forward_batch(&image, 1, &sched)
+            .unwrap()
+            .logits;
+            match &out[0] {
+                JobOutput::Logits(l) => assert_eq!(l, &want, "{model}"),
+                other => panic!("wrong output: {other:?}"),
+            }
+        }
+        assert_eq!(b.resident_models(), 2);
+        let s = reg.stats();
+        assert_eq!(s.misses, 2, "micro + lenet each compiled once");
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)] // full forwards are too slow interpreted
+    fn workers_share_one_compile_per_model() {
+        let reg = registry("micro", u64::MAX);
+        let a =
+            MultiModelBackend::new(reg.clone(), 1, LaneSetup::Fixed(1))
+                .unwrap();
+        let b =
+            MultiModelBackend::new(reg.clone(), 1, LaneSetup::Fixed(1))
+                .unwrap();
+        let s = reg.stats();
+        assert_eq!(s.misses, 1, "second worker must cache-hit");
+        assert_eq!(s.hits, 1);
+        drop((a, b));
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)] // full forwards are too slow interpreted
+    fn stamp_change_rebuilds_after_eviction() {
+        // Capacity for one plan: alternating models thrash the cache;
+        // each re-admission re-stamps, forcing a worker rebuild — and
+        // the logits stay bit-identical throughout.
+        let fp = |m: &str| {
+            crate::engine::ModelPlan::compile(
+                model_by_name(m).unwrap(),
+                1,
+                4,
+                0xD0,
+            )
+            .unwrap()
+            .weight_plane_bits()
+        };
+        let cap = fp("micro").max(fp("lenet"));
+        let reg = registry("micro", cap);
+        let mut b =
+            MultiModelBackend::new(reg.clone(), 1, LaneSetup::Fixed(1))
+                .unwrap();
+        let sched = TileScheduler::new(1);
+        let mut want = HashMap::new();
+        for model in ["micro", "lenet", "micro", "lenet"] {
+            let elems = reg.geometry(model).unwrap().0;
+            let image = img(elems, 2);
+            let kinds = [JobKind::Logits];
+            let jobs = JobBatch::new(&image, &kinds)
+                .with_model(Some(model));
+            let out = b.run_batch(&jobs).unwrap();
+            let logits = match out.into_iter().next().unwrap() {
+                JobOutput::Logits(l) => l,
+                other => panic!("wrong output: {other:?}"),
+            };
+            let expect = want.entry(model).or_insert_with(|| {
+                crate::engine::ModelPlan::compile(
+                    model_by_name(model).unwrap(),
+                    1,
+                    4,
+                    0xD0,
+                )
+                .unwrap()
+                .forward_batch(&image, 1, &sched)
+                .unwrap()
+                .logits
+            });
+            assert_eq!(&logits, expect, "{model} diverged post-evict");
+        }
+        let s = reg.stats();
+        assert!(s.evictions >= 3, "thrash must evict: {s:?}");
+        assert!(s.swap_ins >= 4);
+        assert!(s.swap_energy.energy_pj > 0.0);
+    }
+
+    #[test]
+    fn unknown_default_fails_construction() {
+        let r = ModelRegistry::new(
+            "nope",
+            1,
+            4,
+            0,
+            GemmKernel::default(),
+            u64::MAX,
+            EvictionPolicy::Lru,
+        );
+        assert!(r.is_err());
+    }
+}

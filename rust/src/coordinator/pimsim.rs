@@ -22,6 +22,8 @@
 //! procedurally generated (seeded) integer codes: the backend models
 //! the accelerator's datapath and energy, not a trained model.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::accel::{Accelerator, Proposed};
@@ -37,9 +39,12 @@ use crate::subarray::OpLedger;
 
 use super::{Backend, EnergyAudit};
 
-/// Serving backend over the bit-accurate PIM engine.
+/// Serving backend over the bit-accurate PIM engine. The compiled
+/// plan is shared ([`Arc`]) so the registry's plan cache can hand the
+/// same NV-resident weight planes to every worker without re-compiling
+/// ([`PimSimBackend::from_plan`]).
 pub struct PimSimBackend {
-    plan: ModelPlan,
+    plan: Arc<ModelPlan>,
     sched: TileScheduler,
     /// Bitwise-GEMM kernel the scheduler executes with (logits are
     /// bit-identical across kernels; only host speed changes).
@@ -75,11 +80,23 @@ impl PimSimBackend {
         batch: usize,
         seed: u64,
     ) -> Result<PimSimBackend> {
-        anyhow::ensure!(batch >= 1, "batch must be >= 1");
-        let energy_uj_per_frame = Proposed::default()
-            .estimate(&model, w_bits, a_bits, batch)
-            .uj_per_frame();
         let plan = ModelPlan::compile(model, w_bits, a_bits, seed)?;
+        Self::from_plan(Arc::new(plan), batch)
+    }
+
+    /// Build a backend over an already-compiled (possibly cache-shared)
+    /// plan — the registry path: the plan's NV-resident weight planes
+    /// are shared, never copied, and serving from a cache-hit plan is
+    /// bit-identical to serving from a fresh compile.
+    pub fn from_plan(
+        plan: Arc<ModelPlan>,
+        batch: usize,
+    ) -> Result<PimSimBackend> {
+        anyhow::ensure!(batch >= 1, "batch must be >= 1");
+        let (w_bits, a_bits) = plan.bit_widths();
+        let energy_uj_per_frame = Proposed::default()
+            .estimate(plan.model(), w_bits, a_bits, batch)
+            .uj_per_frame();
         let frame_ledger = plan.frame_ledger();
         Ok(PimSimBackend {
             plan,

@@ -105,6 +105,59 @@ pub fn generate(n: usize, size: usize, channels: usize, seed: u64) -> Dataset {
     Dataset { n, h: size, w: size, c: channels, images, labels }
 }
 
+/// Procedurally generate a split matched to `model`'s input geometry:
+/// 2-D feature-map models get glyph images ([`generate`]), 1-D
+/// temporal models get waveform sequences ([`generate_seq`]). The one
+/// entry point `serve`, `infer`, and `fleet` share, so every model in
+/// the registry vocabulary has a synthetic workload.
+pub fn generate_for(
+    model: &crate::cnn::Model,
+    n: usize,
+    seed: u64,
+) -> Dataset {
+    match model.input_len {
+        Some(len) => generate_seq(n, len, model.input_c, seed),
+        None => generate(n, model.input_hw, model.input_c, seed),
+    }
+}
+
+/// Procedurally generate a labelled split of 1-D sequences (h=1,
+/// w=`len`) for temporal-conv models ([`crate::cnn::Model::input_len`]
+/// set, e.g. the `kws` keyword-spotting net). Each class is a seeded
+/// sinusoid bank over the channel axis plus noise — enough structure
+/// for deterministic serving workloads, not a trained-accuracy split.
+pub fn generate_seq(
+    n: usize,
+    len: usize,
+    channels: usize,
+    seed: u64,
+) -> Dataset {
+    assert!(len >= 2, "sequence too short");
+    let mut rng = Pcg32::seeded(seed);
+    let mut images = Vec::with_capacity(n * len * channels);
+    let mut labels = Vec::with_capacity(n);
+    for _ in 0..n {
+        let class = rng.below(10) as usize;
+        labels.push(class as u8);
+        let phase = rng.uniform(0.0, std::f64::consts::TAU);
+        let rate = 0.5 + class as f64 * 0.35;
+        for t in 0..len {
+            for ch in 0..channels {
+                let carrier = (t as f64 / len as f64
+                    * std::f64::consts::TAU
+                    * rate
+                    + phase
+                    + ch as f64 * 0.7)
+                    .sin();
+                let noise = rng.normal_with(0.0, 0.06);
+                let v = 0.5 + 0.45 * carrier + noise;
+                images.push(v.clamp(0.0, 1.0) as f32);
+            }
+        }
+    }
+    Dataset { n, h: 1, w: len, c: channels, images, labels }
+}
+
 fn render(
     rng: &mut Pcg32,
     digit: usize,
@@ -167,6 +220,23 @@ mod tests {
         let b = generate(4, 28, 1, 3);
         assert_eq!(a.images, b.images);
         assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn generate_seq_shapes_and_determinism() {
+        let ds = generate_seq(12, 49, 10, 0x515);
+        assert_eq!((ds.n, ds.h, ds.w, ds.c), (12, 1, 49, 10));
+        assert_eq!(ds.images.len(), 12 * 49 * 10);
+        assert_eq!(ds.image_elems(), 490);
+        assert!(ds.images.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        assert!(ds.labels.iter().all(|&l| l < 10));
+        let again = generate_seq(12, 49, 10, 0x515);
+        assert_eq!(ds.images, again.images);
+        assert_eq!(ds.labels, again.labels);
+        // sequences carry signal, not a constant fill
+        let spread = ds.images.iter().cloned().fold(0.0f32, f32::max)
+            - ds.images.iter().cloned().fold(1.0f32, f32::min);
+        assert!(spread > 0.3);
     }
 
     #[test]

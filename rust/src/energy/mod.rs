@@ -57,6 +57,10 @@ pub mod components {
     /// accounting (the default `EnergyAudit` adapter of the serving
     /// API v2, DESIGN.md §9).
     pub const BACKEND_ENERGY: &str = "backend_energy";
+    /// MTJ writes of loading a model's weight bit-planes into the
+    /// sub-arrays — charged by the registry on every plan swap-in, so
+    /// model churn shows up in the ledger (DESIGN.md §14).
+    pub const MODEL_SWAP_IN: &str = "model_swap_in";
 }
 
 /// A cost sum with per-component attribution.

@@ -107,9 +107,9 @@ impl<'a> ResumableForward<'a> {
             layer: 0,
             tile: 0,
             x: image.to_vec(),
-            h: plan.model().input_hw,
-            w: plan.model().input_hw,
-            c: plan.model().input_c,
+            h: plan.model().input_dims().0,
+            w: plan.model().input_dims().1,
+            c: plan.model().input_dims().2,
             ia: Vec::new(),
             p: 0,
             oh: 0,
@@ -213,6 +213,20 @@ impl<'a> ResumableForward<'a> {
                 self.ow = ow;
                 self.p = oh * ow;
             }
+            Layer::Conv1d { kernel, stride, .. } => {
+                // Temporal im2col: the 1-row special case (kh = 1,
+                // pad = 0) of the 2-D patch extraction.
+                let lw = plan.layer_plan(self.layer).expect("conv1d plan");
+                let codes = quant::act_to_codes(&self.x, lw.m_bits);
+                let (patches, oh, ow) = bitops::im2col(
+                    &codes, self.h, self.w, self.c, 1, *kernel, *stride,
+                    0,
+                );
+                self.ia = patches;
+                self.oh = oh;
+                self.ow = ow;
+                self.p = oh * ow;
+            }
             Layer::Fc { .. } => {
                 let lw = plan.layer_plan(self.layer).expect("fc plan");
                 self.ia = quant::act_to_codes(&self.x, lw.m_bits);
@@ -245,7 +259,9 @@ impl<'a> ResumableForward<'a> {
                 self.advance_layer();
                 1
             }
-            layer @ (Layer::Conv { .. } | Layer::Fc { .. }) => {
+            layer @ (Layer::Conv { .. }
+            | Layer::Conv1d { .. }
+            | Layer::Fc { .. }) => {
                 let lw = plan.layer_plan(self.layer).expect("gemm plan");
                 let tiles_in = self.p.div_ceil(self.tile_patches);
                 debug_assert!(self.tile < tiles_in, "tile past layer end");

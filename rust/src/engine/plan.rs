@@ -37,7 +37,7 @@ pub const DEFAULT_TILE_PATCHES: usize = 64;
 /// and host instructions, and therefore host speed. `OpLedger`
 /// accounting is identical for all — the ledger counts logical array
 /// row-ops, not host instructions.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
 pub enum GemmKernel {
     /// Plane-pair-major, register-blocked, Harley–Seal popcount
     /// ([`bitops::gemm::bitwise_gemm`]) — the scalar fast path.
@@ -223,7 +223,7 @@ impl ModelPlan {
             (1..=8).contains(&w_bits) && (1..=8).contains(&a_bits),
             "W:I bit-widths must be in 1..=8 (got {w_bits}:{a_bits})"
         );
-        let input_elems = model.input_hw * model.input_hw * model.input_c;
+        let input_elems = model.input_elems();
         let num_classes = model
             .layers
             .last()
@@ -316,6 +316,25 @@ impl ModelPlan {
             ledger.merge(&and_tile_ledger(lw, lw.p));
         }
         ledger
+    }
+
+    /// NV-resident weight bit-plane footprint of this plan in MRAM
+    /// bits: per GEMM layer, `n_bits` planes of `F` filter rows, each
+    /// row padded to whole 64-bit words (the packed [`BitPlanes`]
+    /// layout). This is what the registry's residency accountant
+    /// charges against `ChipOrg` sub-array capacity, and the bit count
+    /// a swap-in must write through the MTJ ledger.
+    pub fn weight_plane_bits(&self) -> u64 {
+        self.layers
+            .iter()
+            .flatten()
+            .map(|lw| {
+                lw.n_bits as u64
+                    * lw.f as u64
+                    * (lw.k as u64).div_ceil(64)
+                    * 64
+            })
+            .sum()
     }
 
     /// Raw Eq.-1 partial-sum words (`P x F` u64 per GEMM layer) one
@@ -504,11 +523,7 @@ impl ModelPlan {
         let ScratchArena { x, y, codes, patches, ip, raw } = arena;
         x.clear();
         x.extend_from_slice(image);
-        let (mut h, mut w, mut c) = (
-            self.model.input_hw,
-            self.model.input_hw,
-            self.model.input_c,
-        );
+        let (mut h, mut w, mut c) = self.model.input_dims();
         let last = self.model.layers.len() - 1;
         for (li, layer) in self.model.layers.iter().enumerate() {
             match layer {
@@ -524,6 +539,25 @@ impl ModelPlan {
                     let (oh, ow) = bitops::im2col_into(
                         codes, h, w, c, *kernel, *kernel, *stride, *pad,
                         patches,
+                    );
+                    let p = oh * ow;
+                    gemm_raw_into(patches, 0, p, lw, engine, ip, raw);
+                    if let Some(l) = ledger.as_deref_mut() {
+                        l.merge(&and_tile_ledger(lw, p));
+                    }
+                    postprocess_into(raw, patches, p, lw, li == last, y);
+                    std::mem::swap(x, y);
+                    h = oh;
+                    w = ow;
+                    c = *cout;
+                }
+                Layer::Conv1d { kernel, stride, cout, .. } => {
+                    // A 1-row feature map: im2col with kh = 1, pad = 0
+                    // is exactly the temporal patch extraction.
+                    let lw = self.layers[li].as_ref().expect("conv1d plan");
+                    quant::act_to_codes_into(x, lw.m_bits, codes);
+                    let (oh, ow) = bitops::im2col_into(
+                        codes, h, w, c, 1, *kernel, *stride, 0, patches,
                     );
                     let p = oh * ow;
                     gemm_raw_into(patches, 0, p, lw, engine, ip, raw);
@@ -1003,6 +1037,34 @@ mod tests {
         assert!(p
             .forward_batch(&[], 0, &TileScheduler::new(1))
             .is_err());
+    }
+
+    #[test]
+    fn weight_plane_bits_counts_word_padded_planes() {
+        // micro at W=1: conv1 is 1 plane x 4 filters x ceil(9/64) words
+        // = 256 bits; fc1 is 1 plane x 10 filters x ceil(64/64) words
+        // = 640 bits.
+        assert_eq!(plan().weight_plane_bits(), 256 + 640);
+        // More weight bits -> more planes, linearly.
+        let w2 = ModelPlan::compile(cnn::micro_net(), 2, 4, 0xBEEF)
+            .unwrap();
+        assert_eq!(w2.weight_plane_bits(), 2 * (256 + 640));
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)] // full forwards are too slow interpreted
+    fn kws_conv1d_forward_matches_oracle() {
+        // The 1-D temporal path maps onto im2col(h=1, kh=1, pad=0):
+        // batched, tiled, and dense-oracle execution all agree.
+        let plan = ModelPlan::compile(cnn::kws(), 2, 2, 0x515).unwrap();
+        assert_eq!(plan.input_elems(), 490);
+        assert_eq!(plan.num_classes(), 12);
+        let image = img(plan.input_elems(), 3);
+        let sched = TileScheduler::new(2);
+        let out = plan.forward_batch(&image, 1, &sched).unwrap();
+        assert_eq!(out.logits, plan.reference_logits(&image));
+        let tiled = plan.forward(&image, 16, &sched);
+        assert_eq!(tiled, out.logits);
     }
 
     #[test]

@@ -363,12 +363,8 @@ pub fn run_fleet(plan: &ModelPlan, spec: &FleetSpec) -> Result<FleetReport> {
     // when finite (bursty) nodes exhaust early and shed their work.
     let share = (spec.jobs as u64).div_ceil(spec.nodes as u64) + 2;
     let budget = share * job_cycles * 8;
-    let images = dataset::generate(
-        spec.jobs,
-        plan.model().input_hw,
-        plan.model().input_c,
-        spec.seed,
-    );
+    let images =
+        dataset::generate_for(plan.model(), spec.jobs, spec.seed);
 
     let mut nodes: Vec<Node<'_>> = Vec::with_capacity(spec.nodes);
     for i in 0..spec.nodes {

@@ -21,13 +21,15 @@
 //!   execution on the persistent lane runtime, H-tree-aware lane
 //!   auto-tuning, resumable forward passes — DESIGN.md §7–§8)
 //! * serving: [`apicfg`] (declarative `RunConfig`, the one artifact a
-//!   run launches from — DESIGN.md §9), [`runtime`] (PJRT, gated
-//!   behind the `pjrt` feature), [`coordinator`] (typed Job/JobOutput
-//!   API with QoS priority classes, ingress → per-worker WDRR
-//!   batchers → executor pool, incl. the PIM co-sim serving backend
-//!   over `engine`), [`net`] (TCP front-end: length-delimited
-//!   `jsonlite` frames, multiplexing client, overload shedding —
-//!   DESIGN.md §13), [`metrics`]
+//!   run launches from — DESIGN.md §9), [`registry`] (named model
+//!   vocabulary + shared `ModelPlan` cache with sub-array residency
+//!   accounting and swap energy — DESIGN.md §14), [`runtime`] (PJRT,
+//!   gated behind the `pjrt` feature), [`coordinator`] (typed
+//!   Job/JobOutput API with QoS priority classes and per-job model
+//!   selection, ingress → per-worker WDRR batchers → executor pool,
+//!   incl. the PIM co-sim serving backend over `engine`), [`net`]
+//!   (TCP front-end: length-delimited `jsonlite` frames, multiplexing
+//!   client, overload shedding — DESIGN.md §13), [`metrics`]
 
 pub mod benchlib;
 pub mod bitops;
@@ -55,5 +57,6 @@ pub mod intermittency;
 pub mod metrics;
 pub mod net;
 pub mod nvfa;
+pub mod registry;
 pub mod runtime;
 pub mod subarray;

@@ -44,6 +44,35 @@ use pims::intermittency::{
 use pims::nvfa::NvPolicy;
 use pims::runtime::{artifacts_dir, Manifest};
 
+/// Help strings whose model vocabulary derives from the registry's
+/// single source of truth ([`pims::registry::MODEL_NAMES`]) — adding a
+/// model updates every help text and error message at once. The
+/// `OnceLock` promotes the runtime-built strings to the `&'static str`
+/// the CLI spec stores.
+fn serve_model_help() -> &'static str {
+    static H: std::sync::OnceLock<String> = std::sync::OnceLock::new();
+    H.get_or_init(|| {
+        format!(
+            "default model ({}); jobs may route to any registered \
+             model per request",
+            pims::registry::model_vocab()
+        )
+    })
+    .as_str()
+}
+
+fn load_models_help() -> &'static str {
+    static H: std::sync::OnceLock<String> = std::sync::OnceLock::new();
+    H.get_or_init(|| {
+        format!(
+            "colon-separated models ({}) routed round-robin from a \
+             seeded offset; default: the server's default model",
+            pims::registry::model_vocab()
+        )
+    })
+    .as_str()
+}
+
 fn cli() -> Cli {
     Cli::new("pims", "SOT-MRAM PIM CNN accelerator (paper reproduction)")
         .command(
@@ -51,6 +80,7 @@ fn cli() -> Cli {
             "serve the model (PJRT artifacts or the PIM co-sim) and report accuracy/latency/throughput",
             vec![
                 opt_default("backend", "pjrt|pimsim", "pjrt"),
+                opt_default("model", serve_model_help(), "svhn"),
                 opt_default("batch", "compiled batch size (1 or 8)", "8"),
                 opt_default("workers", "executor workers (one backend per worker)", "1"),
                 opt_default("requests", "number of requests", "512"),
@@ -71,6 +101,8 @@ fn cli() -> Cli {
                 opt_default("qos-weights", "WDRR drain weights, interactive:batch:background", "8:4:1"),
                 opt_default("shed", "per-class shed thresholds (% of --queue; >=100 disables), interactive:batch:background", "100:75:50"),
                 opt_default("tenant-quota", "max in-flight jobs per tenant (0 = off)", "0"),
+                opt_default("registry-capacity-bits", "residency budget for cached weight bit-planes, in bits (0 = the chip's NV sub-array capacity)", "0"),
+                opt_default("registry-policy", "when an admitted plan overflows the residency budget: lru (evict) | pinned (typed error)", "lru"),
                 opt("metrics-json", "write the final metrics snapshot JSON to this path"),
                 opt_default("config", "RunConfig file; explicit flags override it", ""),
             ],
@@ -86,6 +118,7 @@ fn cli() -> Cli {
                 opt_default("tenants", "distinct tenant ids", "2"),
                 opt_default("burst", "extra background-only burst jobs submitted all at once (overload replies allowed)", "0"),
                 opt_default("seed", "image PRNG seed", "42"),
+                opt("models", load_models_help()),
                 opt("metrics-json", "write the server metrics snapshot JSON to this path"),
                 flag("shutdown", "ask the server to shut down after the run"),
             ],
@@ -94,7 +127,7 @@ fn cli() -> Cli {
             "infer",
             "single-image inference on the bit-accurate PIM co-sim, optionally under a power-failure trace (resumable NV tiles)",
             vec![
-                opt_default("model", "micro|svhn|alexnet|lenet", "micro"),
+                opt_default("model", pims::registry::model_vocab(), "micro"),
                 opt_default("wbits", "weight bits", "1"),
                 opt_default("abits", "activation bits", "4"),
                 opt_default("seed", "weight/image seed", "42"),
@@ -113,7 +146,7 @@ fn cli() -> Cli {
             "PIM co-simulation energy/latency breakdown for one design point",
             vec![
                 opt_default("design", "proposed|imce|reram|asic", "proposed"),
-                opt_default("model", "micro|svhn|alexnet|lenet", "svhn"),
+                opt_default("model", pims::registry::model_vocab(), "svhn"),
                 opt_default("wbits", "weight bits", "1"),
                 opt_default("abits", "activation bits", "4"),
                 opt_default("batch", "batch size", "8"),
@@ -123,7 +156,7 @@ fn cli() -> Cli {
             "sweep",
             "sweep all designs x W:I configs (Fig. 9/10 data)",
             vec![
-                opt_default("model", "micro|svhn|alexnet|lenet", "svhn"),
+                opt_default("model", pims::registry::model_vocab(), "svhn"),
                 opt_default("batch", "batch size", "8"),
             ],
         )
@@ -150,7 +183,7 @@ fn cli() -> Cli {
             "fleet",
             "simulate a fleet of intermittently-powered edge nodes (harvest profiles, NV checkpoint cadence tuning, deterministic report)",
             vec![
-                opt_default("model", "micro|svhn|alexnet|lenet", "micro"),
+                opt_default("model", pims::registry::model_vocab(), "micro"),
                 opt_default("wbits", "weight bits", "1"),
                 opt_default("abits", "activation bits", "4"),
                 opt_default("seed", "weight/image/trace-jitter seed", "42"),
@@ -326,12 +359,51 @@ fn cmd_load(p: &pims::cli::Parsed) -> Result<()> {
         info.input_elems, info.num_classes, info.batch, info.workers
     );
 
-    let mut rng = pims::prng::Pcg32::seeded(seed);
-    let mut gen_image = |rng: &mut pims::prng::Pcg32| -> Vec<f32> {
-        (0..info.input_elems)
-            .map(|_| rng.uniform(0.0, 1.0) as f32)
-            .collect()
+    // --models: per-job model routing (DESIGN.md §14). Each name is
+    // validated against the same registry vocabulary the server uses,
+    // and every job's image is sized to ITS model's geometry — not
+    // the server default's.
+    let models: Vec<(String, usize)> = match p.get("models") {
+        Some(list) if !list.is_empty() => list
+            .split(':')
+            .map(|name| {
+                let name = name.trim();
+                Ok((
+                    name.to_string(),
+                    model_by_name(name)?.input_elems(),
+                ))
+            })
+            .collect::<Result<_>>()?,
+        _ => Vec::new(),
     };
+    // Seeded round-robin start, so different seeds exercise different
+    // model x kind x class alignments against the per-model batcher.
+    let start = if models.is_empty() {
+        0
+    } else {
+        (seed as usize) % models.len()
+    };
+    if !models.is_empty() {
+        let names: Vec<&str> =
+            models.iter().map(|(m, _)| m.as_str()).collect();
+        println!(
+            "routing models: {} (round-robin from offset {start})",
+            names.join(":")
+        );
+    }
+    let model_for = |i: usize| -> Option<&(String, usize)> {
+        if models.is_empty() {
+            None
+        } else {
+            Some(&models[(i + start) % models.len()])
+        }
+    };
+
+    let mut rng = pims::prng::Pcg32::seeded(seed);
+    let mut gen_image =
+        |rng: &mut pims::prng::Pcg32, elems: usize| -> Vec<f32> {
+            (0..elems).map(|_| rng.uniform(0.0, 1.0) as f32).collect()
+        };
     let make_job = |i: usize, img: Vec<f32>| -> Job {
         match i % 4 {
             0 => Job::Classify(img),
@@ -362,9 +434,18 @@ fn cmd_load(p: &pims::cli::Parsed) -> Result<()> {
     for i in 0..jobs {
         let class = i % 3;
         let tenant = format!("tenant-{}", i % tenants);
-        let img = gen_image(&mut rng);
+        let (img, route) = match model_for(i) {
+            Some((name, elems)) => {
+                (gen_image(&mut rng, *elems), Some(name.as_str()))
+            }
+            None => (gen_image(&mut rng, info.input_elems), None),
+        };
+        let mut job = make_job(i, img);
+        if let Some(name) = route {
+            job = job.for_model(name);
+        }
         let pend = clients[i % conns].submit(
-            make_job(i, img),
+            job,
             Priority::ALL[class],
             &tenant,
             None,
@@ -391,7 +472,7 @@ fn cmd_load(p: &pims::cli::Parsed) -> Result<()> {
     if burst > 0 {
         let mut pendings = Vec::with_capacity(burst);
         for i in 0..burst {
-            let img = gen_image(&mut rng);
+            let img = gen_image(&mut rng, info.input_elems);
             pendings.push(clients[i % conns].submit(
                 Job::Classify(img),
                 Priority::Background,
@@ -505,12 +586,7 @@ fn serve_pimsim(p: &pims::cli::Parsed, cfg: &RunConfig) -> Result<()> {
     let probe = cfg.compile_plan()?;
     let sched = cfg.lane_schedule(&probe)?;
     let model = cfg.build_model()?;
-    let ds = pims::dataset::generate(
-        256,
-        model.input_hw,
-        model.input_c,
-        cfg.seed,
-    );
+    let ds = pims::dataset::generate_for(&model, 256, cfg.seed);
     println!(
         "serving PIM co-sim ({}), W{}:I{}, batch={}, \
          workers={}, lane schedule {} per worker (shared engine \
@@ -686,6 +762,15 @@ fn print_serve_tail(
     {
         print_hist_line(name, &m.by_kind[i]);
     }
+    // Per-model accounting (multi-model pools, DESIGN.md §14):
+    // submitted = served + cancelled + expired, per model.
+    for (name, s) in &m.by_model {
+        println!(
+            "  model {name:<8}: {} served, {} cancelled, {} expired",
+            s.served, s.cancelled, s.expired
+        );
+        print_hist_line(name, &s.latency);
+    }
     for (w, s) in m.per_worker.iter().enumerate() {
         println!(
             "  worker {w:<2}     : served {} in {} batches, {} errors, \
@@ -707,12 +792,7 @@ fn cmd_infer(p: &pims::cli::Parsed) -> Result<()> {
     // satellite: no duplicated flag plumbing).
     let cfg = RunConfig::from_parsed(p)?;
     let model = cfg.build_model()?;
-    let ds = pims::dataset::generate(
-        1,
-        model.input_hw,
-        model.input_c,
-        cfg.seed,
-    );
+    let ds = pims::dataset::generate_for(&model, 1, cfg.seed);
     let image = ds.image(0).to_vec();
     let mplan = cfg.compile_plan()?;
     let plan = InferencePlan {

@@ -149,6 +149,17 @@ fn get_f32_vec(j: &Json, key: &str) -> Result<Vec<f32>, FrameError> {
 
 fn job_to_json(job: &Job) -> Json {
     match job {
+        // Model routing rides as an optional "model" key on the inner
+        // job object (like "deadline_ms" on the submit frame): absent
+        // = the server's default model, so old clients and old
+        // payloads are untouched.
+        Job::ForModel { model, job } => {
+            let Json::Obj(mut inner) = job_to_json(job) else {
+                unreachable!("job_to_json always returns an object")
+            };
+            inner.insert("model".to_string(), str_j(model));
+            Json::Obj(inner)
+        }
         Job::Classify(img) => {
             obj(vec![("kind", str_j("classify")), ("image", arr_f32(img))])
         }
@@ -168,12 +179,16 @@ fn job_to_json(job: &Job) -> Json {
 
 fn job_from_json(j: &Json) -> Result<Job, FrameError> {
     let image = get_f32_vec(j, "image")?;
-    match get_str(j, "kind")? {
-        "classify" => Ok(Job::Classify(image)),
-        "logits" => Ok(Job::Logits(image)),
-        "topk" => Ok(Job::TopK { image, k: get_usize(j, "k")? }),
-        "energy_audit" => Ok(Job::EnergyAudit(image)),
-        other => Err(bad(format!("unknown job kind '{other}'"))),
+    let base = match get_str(j, "kind")? {
+        "classify" => Job::Classify(image),
+        "logits" => Job::Logits(image),
+        "topk" => Job::TopK { image, k: get_usize(j, "k")? },
+        "energy_audit" => Job::EnergyAudit(image),
+        other => return Err(bad(format!("unknown job kind '{other}'"))),
+    };
+    match j.get("model") {
+        None => Ok(base),
+        Some(_) => Ok(base.for_model(get_str(j, "model")?)),
     }
 }
 
@@ -490,11 +505,16 @@ mod tests {
     }
 
     fn gen_job(g: &mut Gen) -> Job {
-        match g.usize(0, 3) {
+        let base = match g.usize(0, 3) {
             0 => Job::Classify(gen_image(g)),
             1 => Job::Logits(gen_image(g)),
             2 => Job::TopK { image: gen_image(g), k: g.usize(1, 9) },
             _ => Job::EnergyAudit(gen_image(g)),
+        };
+        if g.bool() {
+            base.for_model(format!("model-{}", g.usize(0, 3)))
+        } else {
+            base
         }
     }
 
@@ -636,6 +656,26 @@ mod tests {
         assert_eq!(a.cost.energy_pj, 123.456 + 0.125);
         assert_eq!(a.cost.component("subarray_read"), Some((123.456, 7.25)));
         assert_eq!(a.cost.component("inter_lane_merge"), Some((0.125, 0.5)));
+    }
+
+    #[test]
+    fn model_routed_job_roundtrips() {
+        let f = ClientFrame::Submit {
+            id: 5,
+            job: Job::Logits(vec![0.5; 4]).for_model("kws"),
+            priority: Priority::Interactive,
+            tenant: "t".to_string(),
+            deadline_ms: None,
+        };
+        let back = roundtrip_client(&f);
+        let ClientFrame::Submit { job, .. } = back else {
+            panic!("wrong frame kind");
+        };
+        assert_eq!(job.model(), Some("kws"));
+        assert_eq!(job.image(), &[0.5f32; 4]);
+        // A model-less job must encode without the key at all.
+        let plain = job_to_json(&Job::Logits(vec![0.0])).dump();
+        assert!(!plain.contains("model"), "{plain}");
     }
 
     #[test]

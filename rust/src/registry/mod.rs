@@ -1,0 +1,87 @@
+//! Process-wide model registry: the single source of truth for the
+//! named model vocabulary, plus a shared, thread-safe [`ModelPlan`]
+//! cache with sub-array residency accounting (DESIGN.md §14).
+//!
+//! The paper's accelerator keeps weight bit-planes resident in the
+//! SOT-MRAM sub-arrays, so *which* networks fit on-chip — and what a
+//! swap costs — is an architectural question: every cached plan's
+//! packed weight-plane footprint ([`ModelPlan::weight_plane_bits`])
+//! is charged against [`crate::arch::ChipOrg`] capacity, admission
+//! beyond capacity evicts (LRU) or fails (pinned) with a typed
+//! [`RegistryError`], and every swap-in writes its footprint through
+//! the MTJ ledger ([`crate::accel::charge_model_swap_in`]) so model
+//! churn shows up in the energy accounting.
+//!
+//! [`ModelPlan`]: crate::engine::ModelPlan
+//! [`ModelPlan::weight_plane_bits`]: crate::engine::ModelPlan::weight_plane_bits
+
+mod cache;
+
+pub use cache::{
+    CacheStats, EvictionPolicy, ModelRegistry, PlanCache, PlanKey,
+    RegistryError,
+};
+
+use std::sync::OnceLock;
+
+use anyhow::Result;
+
+use crate::cnn::{self, Model};
+
+/// Every registered model name, in the order the vocabulary string
+/// lists them. THE single source of truth: CLI help text, error
+/// messages, and the registry's geometry table all derive from this
+/// list, so a new model cannot drift out of any of them.
+pub const MODEL_NAMES: [&str; 6] =
+    ["micro", "svhn", "alexnet", "lenet", "deep5", "kws"];
+
+/// Build the named model, or fail with the full vocabulary.
+pub fn model_by_name(name: &str) -> Result<Model> {
+    Ok(match name {
+        "micro" => cnn::micro_net(),
+        "svhn" => cnn::svhn_net(),
+        "alexnet" => cnn::alexnet(),
+        "lenet" => cnn::lenet(),
+        "deep5" => cnn::deep5(),
+        "kws" => cnn::kws(),
+        other => {
+            anyhow::bail!("unknown model '{other}' ({})", model_vocab())
+        }
+    })
+}
+
+/// The `a|b|c` vocabulary string derived from [`MODEL_NAMES`] (built
+/// once per process; `&'static` so CLI option tables can embed it).
+pub fn model_vocab() -> &'static str {
+    static VOCAB: OnceLock<String> = OnceLock::new();
+    VOCAB.get_or_init(|| MODEL_NAMES.join("|"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_registered_name_builds() {
+        for name in MODEL_NAMES {
+            let m = model_by_name(name).unwrap();
+            assert!(!m.layers.is_empty(), "{name} has no layers");
+            assert!(m.input_elems() > 0, "{name} has no input");
+        }
+    }
+
+    #[test]
+    fn unknown_model_error_lists_the_whole_vocabulary() {
+        let err = model_by_name("resnet").unwrap_err().to_string();
+        assert!(err.contains("resnet"), "{err}");
+        for name in MODEL_NAMES {
+            assert!(err.contains(name), "vocab drifted: {name} not in {err}");
+        }
+    }
+
+    #[test]
+    fn vocab_derives_from_model_names() {
+        assert_eq!(model_vocab(), MODEL_NAMES.join("|"));
+        assert_eq!(model_vocab(), "micro|svhn|alexnet|lenet|deep5|kws");
+    }
+}

@@ -1,0 +1,305 @@
+//! Multi-model registry end-to-end tests (DESIGN.md §14): live TCP
+//! traffic routed across ≥2 registered models against the
+//! process-wide plan cache.
+//!
+//! ISSUE 10 acceptance lives here:
+//! * a seeded mixed-model job stream served over TCP is bit-identical
+//!   (logits, ledgers, energy) to the same stream submitted
+//!   in-process;
+//! * the same holds under an eviction-inducing
+//!   `registry.capacity_bits` limit, with the plan cache's eviction /
+//!   swap-in / MTJ-swap-energy counters moving on both sides;
+//! * per-model [`ServeMetrics`] account exactly for every submitted
+//!   job: submitted = served + cancelled (+ expired), per model and
+//!   in the wire `metrics` frame.
+
+use std::collections::HashMap;
+
+use pims::apicfg::RunConfig;
+use pims::coordinator::{Coordinator, Job, JobOutput, Priority};
+use pims::engine::ModelPlan;
+use pims::jsonlite::Json;
+use pims::net::{serve, NetClient, NetConfig, NetReply};
+use pims::registry::model_by_name;
+
+fn loopback() -> NetConfig {
+    NetConfig { listen: "127.0.0.1:0".to_string(), ..NetConfig::default() }
+}
+
+fn mkcfg(capacity_bits: u64, workers: usize) -> RunConfig {
+    RunConfig {
+        model: "micro".to_string(),
+        workers,
+        queue: 64,
+        wait_ms: 0.5,
+        seed: 42,
+        qos_shed_pct: [100, 100, 100], // accounting tests admit everything
+        registry_capacity_bits: capacity_bits,
+        ..RunConfig::default()
+    }
+}
+
+/// Canonical fingerprint of a reply payload (see `net_e2e.rs`):
+/// `Debug` for floats prints the shortest representation that parses
+/// back to the same bits, so equal fingerprints mean bit-identical
+/// logits, ledgers, and energy.
+fn fingerprint(output: &JobOutput, energy_uj: f64) -> String {
+    format!("{output:?}|{energy_uj:?}")
+}
+
+/// Weight bit-plane footprint of one compiled plan at the test
+/// config's (W1:I4, seed 42).
+fn footprint(name: &str) -> u64 {
+    ModelPlan::compile(model_by_name(name).unwrap(), 1, 4, 42)
+        .unwrap()
+        .weight_plane_bits()
+}
+
+/// A seeded job stream cycling over three registered models plus the
+/// unrouted default, with mixed job kinds. Images match each routed
+/// model's input geometry.
+fn routed_jobs(n: usize, seed: u64) -> Vec<Job> {
+    let mut splits = HashMap::new();
+    for name in ["micro", "lenet", "kws"] {
+        let m = model_by_name(name).unwrap();
+        splits.insert(name, pims::dataset::generate_for(&m, 4, seed));
+    }
+    let routes = [Some("micro"), Some("lenet"), Some("kws"), None];
+    (0..n)
+        .map(|i| {
+            let route = routes[i % routes.len()];
+            let ds = &splits[route.unwrap_or("micro")];
+            let image = ds.image(i % ds.n).to_vec();
+            let base = match i % 3 {
+                0 => Job::Classify(image),
+                1 => Job::Logits(image),
+                _ => Job::TopK { image, k: 3 },
+            };
+            match route {
+                Some(m) => base.for_model(m),
+                None => base,
+            }
+        })
+        .collect()
+}
+
+/// The same seeded mixed-model stream, once in-process and once over
+/// TCP, must produce byte-identical outputs per job — the registry
+/// cache, per-model batching, and the wire codec's `model` field all
+/// preserve bit-identity.
+#[test]
+fn mixed_model_tcp_replay_is_bit_identical_to_in_process() {
+    let cfg = mkcfg(0, 2); // 0 = the chip's full sub-array capacity
+    let jobs = routed_jobs(16, cfg.seed);
+
+    // In-process reference run.
+    let c = Coordinator::launch(&cfg).unwrap();
+    assert!(c.registry().is_some(), "PimSim pools carry a registry");
+    let mut reference = Vec::new();
+    for job in &jobs {
+        let r = c.submit_job_blocking(job.clone()).unwrap().wait().unwrap();
+        reference.push(fingerprint(&r.output, r.energy_uj));
+    }
+    let m_in = c.shutdown();
+
+    // The identical stream over a live TCP listener.
+    let server = serve(Coordinator::launch(&cfg).unwrap(), &loopback())
+        .unwrap();
+    let client =
+        NetClient::connect(&server.local_addr().to_string()).unwrap();
+    for (i, job) in jobs.iter().enumerate() {
+        let reply = client
+            .submit(job.clone(), Priority::Interactive, "replay", None)
+            .unwrap()
+            .wait()
+            .unwrap();
+        let NetReply::Response { output, energy_uj, .. } = reply else {
+            panic!("job {i} was not answered: {reply:?}");
+        };
+        assert_eq!(
+            fingerprint(&output, energy_uj),
+            reference[i],
+            "job {i} ({:?}) diverged over the wire",
+            jobs[i].model()
+        );
+    }
+    drop(client);
+    let m = server.shutdown();
+
+    // Per-model accounting, identically on both sides: 16 jobs cycle
+    // micro/lenet/kws/unrouted, and unrouted resolves to the default
+    // (micro), so micro serves 8.
+    for metrics in [&m_in, &m] {
+        assert_eq!(metrics.counters.served, 16);
+        assert_eq!(metrics.by_model.len(), 3, "{:?}", metrics.by_model);
+        for (name, want) in [("micro", 8), ("lenet", 4), ("kws", 4)] {
+            let s = &metrics.by_model[name];
+            assert_eq!(s.served, want, "{name}");
+            assert_eq!((s.cancelled, s.expired), (0, 0), "{name}");
+            assert_eq!(s.latency.count(), want, "{name} histogram");
+        }
+    }
+}
+
+/// A capacity budget sized for ONE plan forces an eviction on every
+/// model alternation — and the stream still replays bit-identically
+/// over TCP, with swap-ins charging MTJ write energy on both sides.
+#[test]
+fn eviction_thrash_over_tcp_stays_bit_identical() {
+    let cap = footprint("micro").max(footprint("lenet"));
+    let cfg = mkcfg(cap, 1);
+    let mut splits = HashMap::new();
+    for name in ["micro", "lenet"] {
+        let m = model_by_name(name).unwrap();
+        splits.insert(name, pims::dataset::generate_for(&m, 2, cfg.seed));
+    }
+    let rounds = ["micro", "lenet", "micro", "lenet", "micro", "lenet"];
+    let job = |i: usize| {
+        let ds = &splits[rounds[i]];
+        Job::Logits(ds.image(i % ds.n).to_vec()).for_model(rounds[i])
+    };
+
+    // In-process reference: serial submits so every job is its own
+    // per-model batch and the alternation thrashes the cache.
+    let c = Coordinator::launch(&cfg).unwrap();
+    let reg_in = c.registry().unwrap().clone();
+    let mut reference = Vec::new();
+    for i in 0..rounds.len() {
+        let r = c.submit_job_blocking(job(i)).unwrap().wait().unwrap();
+        reference.push(fingerprint(&r.output, r.energy_uj));
+    }
+    let s = reg_in.stats();
+    assert_eq!(s.capacity_bits, cap);
+    assert!(s.evictions >= 4, "alternation must thrash: {s:?}");
+    assert!(s.swap_ins > s.evictions);
+    assert_eq!(s.resident_plans, 1, "budget fits exactly one plan");
+    assert!(s.swap_energy.energy_pj > 0.0, "swap-ins charge MTJ writes");
+    c.shutdown();
+
+    // The identical stream over TCP against a fresh registry.
+    let c = Coordinator::launch(&cfg).unwrap();
+    let reg = c.registry().unwrap().clone();
+    let server = serve(c, &loopback()).unwrap();
+    let client =
+        NetClient::connect(&server.local_addr().to_string()).unwrap();
+    for i in 0..rounds.len() {
+        let reply = client
+            .submit(job(i), Priority::Interactive, "thrash", None)
+            .unwrap()
+            .wait()
+            .unwrap();
+        let NetReply::Response { output, energy_uj, .. } = reply else {
+            panic!("round {i} was not answered: {reply:?}");
+        };
+        assert_eq!(
+            fingerprint(&output, energy_uj),
+            reference[i],
+            "round {i} ({}) diverged under eviction over the wire",
+            rounds[i]
+        );
+    }
+    drop(client);
+    let m = server.shutdown();
+    let s = reg.stats();
+    assert!(s.evictions >= 4, "TCP side must thrash too: {s:?}");
+    assert!(s.swap_energy.energy_pj > 0.0);
+    assert_eq!(m.by_model["micro"].served, 3);
+    assert_eq!(m.by_model["lenet"].served, 3);
+}
+
+/// Every job submitted over the wire lands in exactly one per-model
+/// bucket: submitted = served + cancelled (+ expired), per model, and
+/// the wire `metrics` frame carries the same by_model block.
+#[test]
+fn per_model_metrics_account_every_submitted_job() {
+    let cfg = mkcfg(0, 1);
+    let micro = model_by_name("micro").unwrap();
+    let micro_ds = pims::dataset::generate_for(&micro, 4, cfg.seed);
+    let lenet = model_by_name("lenet").unwrap();
+    let lenet_ds = pims::dataset::generate_for(&lenet, 2, cfg.seed);
+
+    let server = serve(Coordinator::launch(&cfg).unwrap(), &loopback())
+        .unwrap();
+    let client =
+        NetClient::connect(&server.local_addr().to_string()).unwrap();
+
+    // Park a lenet job at the queue head (its first-touch compile
+    // holds the single worker), then abandon a burst of micro
+    // pendings — each drop sends a best-effort cancel frame that
+    // races the worker.
+    let keep = client
+        .submit(
+            Job::Logits(lenet_ds.image(0).to_vec()).for_model("lenet"),
+            Priority::Interactive,
+            "acct",
+            None,
+        )
+        .unwrap();
+    for i in 0..8 {
+        let p = client
+            .submit(
+                Job::Classify(micro_ds.image(i % micro_ds.n).to_vec())
+                    .for_model("micro"),
+                Priority::Background,
+                "acct",
+                None,
+            )
+            .unwrap();
+        drop(p);
+    }
+    assert!(matches!(keep.wait().unwrap(), NetReply::Response { .. }));
+
+    // A second wave that is fully served.
+    for i in 0..4 {
+        let reply = client
+            .submit(
+                Job::Classify(micro_ds.image(i).to_vec()).for_model("micro"),
+                Priority::Interactive,
+                "acct",
+                None,
+            )
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert!(matches!(reply, NetReply::Response { .. }));
+    }
+
+    // The wire metrics frame exposes the same per-model block
+    // `--metrics-json` writes.
+    let j = client.metrics().unwrap();
+    let by_model = j.get("by_model").expect("by_model block on the wire");
+    for name in ["micro", "lenet"] {
+        let b = by_model
+            .get(name)
+            .unwrap_or_else(|| panic!("missing by_model.{name}"));
+        assert!(b.get("served").and_then(Json::as_f64).is_some());
+        assert!(b.get("cancelled").and_then(Json::as_f64).is_some());
+        assert!(b.get("p99_ns").and_then(Json::as_f64).is_some());
+    }
+    assert_eq!(
+        by_model
+            .get("lenet")
+            .and_then(|b| b.get("served"))
+            .and_then(Json::as_f64),
+        Some(1.0)
+    );
+
+    drop(client);
+    let m = server.shutdown();
+    // Exact accounting: 13 micro + 1 lenet submitted; cancels raced
+    // the worker, but every admitted job is either served or counted
+    // cancelled — nothing vanishes and nothing double-counts.
+    let mi = &m.by_model["micro"];
+    assert_eq!(mi.served + mi.cancelled, 12, "{mi:?}");
+    assert!(mi.served >= 4, "the waited wave is always served");
+    assert_eq!(mi.expired, 0, "no deadlines were set");
+    assert_eq!(mi.latency.count(), mi.served);
+    let le = &m.by_model["lenet"];
+    assert_eq!((le.served, le.cancelled, le.expired), (1, 0, 0));
+    // The per-model buckets sum exactly to the pool counters.
+    let served: u64 = m.by_model.values().map(|s| s.served).sum();
+    let cancelled: u64 = m.by_model.values().map(|s| s.cancelled).sum();
+    assert_eq!(served, m.counters.served);
+    assert_eq!(cancelled, m.counters.cancelled);
+    assert_eq!(served + cancelled, 13);
+}
